@@ -1,0 +1,64 @@
+//! Capacity planner — the paper's §1 motivation turned into a tool.
+//!
+//! "researchers can model larger systems, simulate bigger workloads …
+//!  and obtain results sooner" — given a simulation campaign (workloads ×
+//!  configs) and a cluster node shape, how should you set
+//!  threads-per-simulation to maximize campaign throughput? Cores given
+//!  to one job are taken from another, so the answer depends on each
+//!  workload's parallel efficiency (myocyte wants 1 thread; lavaMD wants
+//!  many).
+//!
+//! Uses the same measured-work cost model as Figure 5.
+//!
+//! ```sh
+//! cargo run --release --example capacity_planner -- [cores_per_node]
+//! ```
+
+use parsim::config::GpuConfig;
+use parsim::harness::{self, FIG5_SCHEDULE};
+use parsim::trace::workloads::{self, Scale};
+
+fn main() {
+    let cores: usize = std::env::args().nth(1).and_then(|v| v.parse().ok()).unwrap_or(24);
+    let gpu = GpuConfig::tiny(); // planner demo at CI scale: fast
+    let candidates = [1usize, 2, 4, 8, 16, 24];
+
+    println!("capacity planning for a {cores}-core node (cost model, CI-scale measurement)\n");
+    println!(
+        "{:<12} {:>8} {:>10} {:>12} {:>16}",
+        "workload", "best T", "speedup", "efficiency", "jobs/node·speedup"
+    );
+
+    let mut total_default = 0.0;
+    let mut total_planned = 0.0;
+    for &name in workloads::names() {
+        let m = harness::measure_workload(name, Scale::Ci, &gpu);
+        // throughput score: (node_cores / T) parallel jobs × speedup(T)
+        let mut best = (1usize, 1.0f64);
+        for &t in candidates.iter().filter(|&&t| t <= cores) {
+            let sp = if t == 1 { 1.0 } else { m.speedup(t, FIG5_SCHEDULE) };
+            let score = (cores as f64 / t as f64) * sp;
+            let best_score = (cores as f64 / best.0 as f64) * best.1;
+            if score > best_score {
+                best = (t, sp);
+            }
+        }
+        let (t, sp) = best;
+        println!(
+            "{:<12} {:>8} {:>9.2}x {:>11.2} {:>16.1}",
+            workloads::alias_of(name),
+            t,
+            sp,
+            sp / t as f64,
+            (cores as f64 / t as f64) * sp
+        );
+        // campaign totals: serial time 1 unit each
+        total_default += 1.0 / ((cores as f64 / 16.0) * m.speedup(16, FIG5_SCHEDULE).max(0.01));
+        total_planned += 1.0 / ((cores as f64 / t as f64) * sp);
+    }
+    println!(
+        "\ncampaign time (arbitrary units): blanket-16-threads {total_default:.2} vs planned {total_planned:.2} ({:.0}% saved)",
+        100.0 * (1.0 - total_planned / total_default.max(1e-9))
+    );
+    println!("(the paper's SLURM-efficiency argument, §1: don't hold cores a workload can't use)");
+}

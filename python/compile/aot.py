@@ -1,0 +1,80 @@
+"""AOT export: lower every registry model to HLO **text** artifacts.
+
+Interchange format: HLO text, NOT a serialized ``HloModuleProto`` —
+jax ≥ 0.5 emits protos with 64-bit instruction ids which the published
+``xla`` crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``);
+the text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md and gen_hlo.py there).
+
+Usage (from ``make artifacts``)::
+
+    cd python && python -m compile.aot --outdir ../artifacts
+
+Python runs only here, at build time. Re-runs are incremental: an
+artifact is rewritten only when missing (``--force`` overrides).
+"""
+
+from __future__ import annotations
+
+import argparse
+import pathlib
+import sys
+
+import jax
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (ids reassigned by parser)."""
+    from jax._src.lib import xla_client as xc
+
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_entry(fn, shapes) -> str:
+    args = model.example_args(shapes)
+    lowered = jax.jit(fn).lower(*args)
+    return to_hlo_text(lowered)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--outdir", default="../artifacts",
+                    help="artifact output directory")
+    ap.add_argument("--force", action="store_true",
+                    help="rewrite artifacts even if present")
+    ap.add_argument("--only", default=None,
+                    help="only build artifacts whose stem contains this")
+    args = ap.parse_args(argv)
+
+    outdir = pathlib.Path(args.outdir)
+    outdir.mkdir(parents=True, exist_ok=True)
+
+    built, skipped = 0, 0
+    for stem, fn, shapes in model.ARTIFACT_SHAPES:
+        if args.only and args.only not in stem:
+            continue
+        path = outdir / f"{stem}.hlo.txt"
+        if path.exists() and not args.force:
+            skipped += 1
+            continue
+        text = lower_entry(fn, shapes)
+        path.write_text(text)
+        print(f"wrote {path} ({len(text)} chars, shapes={shapes})")
+        built += 1
+
+    # stamp file lets `make` treat the whole set as one target
+    (outdir / ".stamp").write_text(
+        f"built={built} skipped={skipped}\n"
+    )
+    print(f"aot: {built} built, {skipped} up-to-date")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

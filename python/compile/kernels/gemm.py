@@ -1,0 +1,119 @@
+"""Layer-1 Pallas kernel: tiled GEMM with K-grid accumulation.
+
+This is the compute hot-spot of the GEMM-family workloads (CUTLASS
+``cut_1``/``cut_2``, DeepBench ``gemm``/``conv``/``rnn``). The CUDA
+originals tile C across threadblocks, stage A/B fragments through shared
+memory and accumulate in registers; the TPU re-expression (see DESIGN.md
+§Hardware-Adaptation) does the same thing with Pallas machinery:
+
+* the **grid** ``(M/bm, N/bn, K/bk)`` plays the role of the threadblock
+  tiling — one (i, j) program instance owns the C tile, and the K axis is
+  the revisiting dimension;
+* ``BlockSpec`` index maps express the HBM→VMEM schedule that CUDA did
+  with cooperative shared-memory loads (Pallas double-buffers these
+  automatically);
+* the accumulator lives in the output VMEM block across K steps — the
+  register-file accumulation of the CUDA kernel, MXU-shaped
+  (``preferred_element_type=f32``).
+
+``interpret=True`` everywhere: the CPU PJRT client cannot execute Mosaic
+custom-calls, and correctness (vs ``ref.py``) is the build-time contract.
+Real-TPU VMEM/MXU estimates are recorded in DESIGN.md §Perf.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default blocks: MXU-aligned on the M/N axes, deep K step. VMEM footprint
+# per program instance = bm·bk + bk·bn + bm·bn floats; the default
+# (128, 128, 128) is 3 × 64 KB = 192 KB ≪ 16 MB VMEM, leaving room for
+# Pallas's double buffering.
+DEFAULT_BM = 128
+DEFAULT_BN = 128
+DEFAULT_BK = 128
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref):
+    """One (i, j, l) grid step: accumulate A[i,l] · B[l,j] into C[i,j]."""
+    l = pl.program_id(2)
+
+    @pl.when(l == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def pick_blocks(m: int, n: int, k: int,
+                bm: int = DEFAULT_BM,
+                bn: int = DEFAULT_BN,
+                bk: int = DEFAULT_BK) -> tuple[int, int, int]:
+    """Shrink default blocks to divide the problem evenly.
+
+    Pallas requires the grid to tile the array exactly; rather than pad,
+    we halve each block until it divides its dimension (all our workload
+    shapes are powers-of-two multiples of small tiles).
+    """
+    def fit(block: int, dim: int) -> int:
+        b = min(block, dim)
+        while dim % b != 0:
+            b //= 2
+            if b == 0:
+                raise ValueError(f"cannot tile dim {dim}")
+        return b
+
+    return fit(bm, m), fit(bn, n), fit(bk, k)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def matmul(a: jax.Array, b: jax.Array,
+           bm: int = DEFAULT_BM, bn: int = DEFAULT_BN,
+           bk: int = DEFAULT_BK) -> jax.Array:
+    """C = A·B via the Pallas kernel. A: (M, K) f32, B: (K, N) f32."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"inner dims mismatch: {k} vs {k2}"
+    bm, bn, bk = pick_blocks(m, n, k, bm, bn, bk)
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, l: (i, l)),
+            pl.BlockSpec((bk, bn), lambda i, j, l: (l, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, l: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,  # CPU-PJRT executable; see module docstring
+    )(a, b)
+
+
+def vmem_bytes(bm: int, bn: int, bk: int, dtype_bytes: int = 4) -> int:
+    """Estimated VMEM working set per program instance (single-buffered).
+
+    Pallas double-buffers the input blocks, so the real footprint is
+    roughly ``2·(bm·bk + bk·bn) + bm·bn`` elements; reported in DESIGN.md
+    §Perf for the chosen block sizes.
+    """
+    return dtype_bytes * (2 * (bm * bk + bk * bn) + bm * bn)
+
+
+def mxu_utilization_estimate(bm: int, bn: int, bk: int) -> float:
+    """Fraction of MXU-issue slots doing useful MACs for one grid step.
+
+    The 128×128 MXU retires a 128×128×128 MAC block at full rate when all
+    three block dims are ≥128 and aligned; smaller blocks waste the
+    difference. This is the *structural* estimate used for the roofline
+    discussion (interpret-mode wallclock is NOT a TPU proxy).
+    """
+    eff_m = min(bm, 128) / 128.0
+    eff_n = min(bn, 128) / 128.0
+    eff_k = min(bk, 128) / 128.0
+    return eff_m * eff_n * eff_k

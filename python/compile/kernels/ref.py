@@ -1,0 +1,44 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+The build-time contract: every Pallas kernel must match its oracle to
+float32 tolerance across the shape/dtype sweep in ``python/tests``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Plain jnp GEMM in f32 accumulation."""
+    return jnp.dot(a, b, preferred_element_type=jnp.float32)
+
+
+def matmul_blocked_ref(a: jax.Array, b: jax.Array, bk: int) -> jax.Array:
+    """K-blocked reference with the same accumulation order as the Pallas
+    kernel (sum over K chunks of size ``bk``) — tighter comparison for
+    float-associativity-sensitive checks."""
+    m, k = a.shape
+    _, n = b.shape
+    assert k % bk == 0
+    acc = jnp.zeros((m, n), jnp.float32)
+    for l in range(k // bk):
+        acc = acc + jnp.dot(
+            a[:, l * bk:(l + 1) * bk],
+            b[l * bk:(l + 1) * bk, :],
+            preferred_element_type=jnp.float32,
+        )
+    return acc
+
+
+def im2col_conv_ref(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Conv-as-GEMM reference: x is the already-im2col'd patch matrix
+    (M, K); w is (K, N) filters. DeepBench `conv` reduces to this."""
+    return matmul_ref(x, w)
+
+
+def rnn_step_ref(h: jax.Array, w: jax.Array) -> jax.Array:
+    """One vanilla-RNN step h' = tanh(W·h) — the GEMM is the hot spot;
+    DeepBench `rnn` timing counts the matmul."""
+    return jnp.tanh(matmul_ref(w, h))

@@ -1,0 +1,73 @@
+"""Layer-2 JAX models: the functional computations carried by the
+GEMM-family workloads, built on the Layer-1 Pallas kernel.
+
+Each entry in :data:`ARTIFACT_SHAPES` corresponds to a
+``GemmSemantics``-carrying kernel in the Rust workload generators
+(``rust/src/trace/workloads/{cutlass,deepbench}.rs``); the shapes MUST
+stay in sync — ``python/tests/test_model.py`` and the Rust side's
+``examples/gemm_validate.rs`` both check the correspondence by artifact
+file name (``gemm_{m}x{n}x{k}``).
+
+This module runs at **build time only** (``make artifacts``); the Rust
+coordinator loads the lowered HLO through PJRT and never imports Python.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import gemm as gemm_kernel
+
+
+def gemm_model(a: jax.Array, b: jax.Array):
+    """C = A·B through the Pallas kernel. Returns a 1-tuple (the AOT
+    interchange lowers with ``return_tuple=True``; the Rust side unwraps
+    with ``to_tuple1``)."""
+    return (gemm_kernel.matmul(a, b),)
+
+
+def conv_im2col_model(x: jax.Array, w: jax.Array):
+    """DeepBench conv, im2col-lowered: the GEMM *is* the computation the
+    simulator times; patch extraction happens on the host at trace
+    construction."""
+    return (gemm_kernel.matmul(x, w),)
+
+
+def rnn_step_model(w: jax.Array, h: jax.Array):
+    """One RNN timestep: tanh(W·h). The GEMM dominates; the tanh rides
+    along in the same HLO module (fused by XLA)."""
+    return (jnp.tanh(gemm_kernel.matmul(w, h)),)
+
+
+# --------------------------------------------------------------------------
+# Artifact registry: (stem, model fn, [(rows, cols) per input])
+#
+# Shapes mirror the Rust workload generators at the scales used for
+# functional validation (Ci for everything; Small additionally for cut_1,
+# whose full-K shape is cheap).
+# --------------------------------------------------------------------------
+
+def _gemm_entry(m: int, n: int, k: int):
+    return (f"gemm_{m}x{n}x{k}", gemm_model, [(m, k), (k, n)])
+
+
+ARTIFACT_SHAPES = [
+    # CUTLASS cut_1 (2560×16×K): Ci K=64 and Small K=1280
+    _gemm_entry(2560, 16, 64),
+    _gemm_entry(2560, 16, 1280),
+    # CUTLASS cut_2 Ci
+    _gemm_entry(512, 256, 32),
+    # DeepBench gemm Ci
+    _gemm_entry(256, 128, 32),
+    # DeepBench conv Ci (im2col GEMM — same lowering, kept as gemm_ stem
+    # because the simulator's GemmSemantics identify it by shape)
+    _gemm_entry(256, 64, 32),
+    # DeepBench rnn Ci
+    _gemm_entry(128, 32, 64),
+]
+
+
+def example_args(shapes):
+    """ShapeDtypeStructs for lowering (values never materialize)."""
+    return [jax.ShapeDtypeStruct(s, jnp.float32) for s in shapes]

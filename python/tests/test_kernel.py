@@ -1,0 +1,112 @@
+"""L1 correctness: the Pallas GEMM kernel vs the pure-jnp oracle.
+
+The CORE build-time signal — hypothesis sweeps shapes and block sizes,
+explicit cases pin the workload shapes the artifacts ship with.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import gemm, ref
+
+
+def _rand(shape, seed, dtype=jnp.float32):
+    return jax.random.normal(jax.random.PRNGKey(seed), shape, dtype)
+
+
+def assert_matches_ref(m, n, k, bm=128, bn=128, bk=128, seed=0):
+    a = _rand((m, k), seed)
+    b = _rand((k, n), seed + 1)
+    got = gemm.matmul(a, b, bm=bm, bn=bn, bk=bk)
+    want = ref.matmul_ref(a, b)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5 * k
+    )
+
+
+# ---- pinned workload shapes (must stay green for the artifacts) ----
+
+@pytest.mark.parametrize(
+    "m,n,k",
+    [
+        (2560, 16, 64),   # cut_1 Ci
+        (512, 256, 32),   # cut_2 Ci
+        (256, 128, 32),   # deepbench gemm Ci
+        (256, 64, 32),    # deepbench conv Ci
+        (128, 32, 64),    # deepbench rnn Ci
+    ],
+)
+def test_workload_shapes(m, n, k):
+    assert_matches_ref(m, n, k)
+
+
+def test_cut1_small_shape():
+    # the Small-scale cut_1 artifact (deep K) — heavier, run once
+    assert_matches_ref(2560, 16, 1280)
+
+
+# ---- hypothesis sweep: power-of-two-ish shapes × block sizes ----
+
+pow2 = st.sampled_from([8, 16, 32, 64, 128])
+blocks = st.sampled_from([8, 16, 32, 64, 128])
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=pow2, n=pow2, k=pow2, bm=blocks, bn=blocks, bk=blocks, seed=st.integers(0, 2**16))
+def test_hypothesis_shapes_blocks(m, n, k, bm, bn, bk, seed):
+    assert_matches_ref(m, n, k, bm=bm, bn=bn, bk=bk, seed=seed)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    m=st.sampled_from([24, 40, 56, 72]),  # non-power-of-two multiples of 8
+    n=st.sampled_from([24, 40, 56]),
+    k=st.sampled_from([24, 40]),
+)
+def test_hypothesis_ragged_multiples(m, n, k):
+    # pick_blocks must shrink to a divisor (all dims are multiples of 8)
+    assert_matches_ref(m, n, k)
+
+
+# ---- block-picking + structural estimates ----
+
+def test_pick_blocks_divides():
+    for (m, n, k) in [(2560, 16, 64), (24, 40, 8), (128, 128, 128)]:
+        bm, bn, bk = gemm.pick_blocks(m, n, k)
+        assert m % bm == 0 and n % bn == 0 and k % bk == 0
+
+
+def test_pick_blocks_prime_dim_falls_back_to_full_dim():
+    # a prime dim has no power-of-two divisor; the fallback is the dim
+    # itself (b = min(block, dim) = 7 divides 7)
+    bm, bn, bk = gemm.pick_blocks(7, 8, 8)
+    assert (bm, bn, bk) == (7, 8, 8)
+    assert_matches_ref(7, 8, 8)
+
+
+def test_vmem_fits_budget():
+    # default blocks must fit comfortably in 16 MB VMEM with double buffering
+    assert gemm.vmem_bytes(128, 128, 128) < 16 * 1024 * 1024 // 4
+
+
+def test_mxu_estimate_monotone():
+    full = gemm.mxu_utilization_estimate(128, 128, 128)
+    thin = gemm.mxu_utilization_estimate(128, 16, 128)
+    assert full == 1.0
+    assert thin == pytest.approx(16 / 128)
+    assert thin < full
+
+
+# ---- numerical-order check vs the blocked reference ----
+
+def test_matches_blocked_reference_tightly():
+    m, n, k, bk = 64, 64, 256, 32
+    a = _rand((m, k), 7)
+    b = _rand((k, n), 8)
+    got = gemm.matmul(a, b, bm=64, bn=64, bk=bk)
+    want = ref.matmul_blocked_ref(a, b, bk)
+    # identical accumulation order ⇒ near-bitwise agreement
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6, atol=1e-6)

@@ -1,0 +1,66 @@
+"""L2 model checks: registry consistency, model semantics, shapes."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels import ref
+
+
+def _rand(shape, seed):
+    return jax.random.normal(jax.random.PRNGKey(seed), shape, jnp.float32)
+
+
+def test_registry_stems_encode_shapes():
+    for stem, _fn, shapes in model.ARTIFACT_SHAPES:
+        (m, k), (k2, n) = shapes
+        assert k == k2, stem
+        assert stem == f"gemm_{m}x{n}x{k}"
+
+
+def test_registry_matches_rust_ci_shapes():
+    # the Rust generators' Ci GemmSemantics (see workloads/{cutlass,deepbench}.rs)
+    expected = {
+        "gemm_2560x16x64",    # cut_1 Ci
+        "gemm_512x256x32",    # cut_2 Ci
+        "gemm_256x128x32",    # gemm Ci
+        "gemm_256x64x32",     # conv Ci
+        "gemm_128x32x64",     # rnn Ci
+    }
+    stems = {stem for stem, _, _ in model.ARTIFACT_SHAPES}
+    assert expected <= stems, f"missing: {expected - stems}"
+
+
+def test_gemm_model_returns_tuple():
+    a, b = _rand((16, 8), 0), _rand((8, 16), 1)
+    out = model.gemm_model(a, b)
+    assert isinstance(out, tuple) and len(out) == 1
+    np.testing.assert_allclose(
+        np.asarray(out[0]), np.asarray(ref.matmul_ref(a, b)), rtol=1e-5, atol=1e-5
+    )
+
+
+def test_conv_model_is_gemm():
+    x, w = _rand((32, 16), 2), _rand((16, 8), 3)
+    out = model.conv_im2col_model(x, w)[0]
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(ref.im2col_conv_ref(x, w)), rtol=1e-5, atol=1e-5
+    )
+
+
+def test_rnn_model_applies_tanh():
+    w, h = _rand((32, 32), 4), _rand((32, 8), 5)
+    out = model.rnn_step_model(w, h)[0]
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(ref.rnn_step_ref(h, w)), rtol=1e-5, atol=1e-5
+    )
+    assert np.all(np.abs(np.asarray(out)) <= 1.0)
+
+
+@pytest.mark.parametrize("stem,fn,shapes", model.ARTIFACT_SHAPES[:4])
+def test_models_trace_without_execution(stem, fn, shapes):
+    # jit-lowering with ShapeDtypeStructs must succeed for every entry
+    lowered = jax.jit(fn).lower(*model.example_args(shapes))
+    assert lowered is not None

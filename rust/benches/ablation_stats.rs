@@ -1,0 +1,61 @@
+//! Ablation A1 — the paper's §3 statistics-strategy choice, priced.
+//!
+//! Compares wall-clock of the three race-avoidance strategies under the
+//! real multi-threaded engine:
+//!   per-sm        — the paper's choice (isolate, merge at kernel end)
+//!   shared-locked — mutex-guarded global stats (the rejected pattern:
+//!                   "this kind of construct would damage performance due
+//!                   to frequent code serialization and lock management")
+//!   seq-point     — defer non-counter updates to a sequential phase
+//!
+//! All three produce identical statistics (tests/stats_strategies.rs);
+//! this bench shows why the paper picked per-SM.
+
+mod common;
+
+use parsim::config::{GpuConfig, Schedule, SimConfig, StatsStrategy};
+use parsim::engine::GpuSim;
+use parsim::trace::workloads::{self, Scale};
+
+fn run(name: &str, threads: usize, strategy: StatsStrategy, scale: Scale) -> f64 {
+    let wl = workloads::build(name, scale).unwrap();
+    let sim = SimConfig {
+        threads,
+        schedule: Schedule::Static { chunk: 1 },
+        stats_strategy: strategy,
+        ..SimConfig::default()
+    };
+    let mut gs = GpuSim::new(GpuConfig::rtx3080ti(), sim);
+    gs.run_workload(&wl).sim_wallclock_s
+}
+
+fn main() {
+    let scale = match std::env::var("BENCH_SCALE").ok().as_deref() {
+        Some(s) => Scale::parse(s).expect("BENCH_SCALE"),
+        None => Scale::Ci, // full-GPU runs; keep the default quick
+    };
+    let threads: usize =
+        std::env::var("BENCH_THREADS").ok().and_then(|v| v.parse().ok()).unwrap_or(4);
+    println!("stats-strategy ablation (scale={}, {threads} threads)\n", scale.name());
+    println!("{:<12} {:>12} {:>14} {:>12} {:>18}", "workload", "per-sm", "shared-locked", "seq-point", "locked/per-sm");
+    for name in ["hotspot", "gemm", "mst"] {
+        let mut t = [0.0f64; 3];
+        for (i, strategy) in
+            [StatsStrategy::PerSm, StatsStrategy::SharedLocked, StatsStrategy::SeqPoint]
+                .into_iter()
+                .enumerate()
+        {
+            // best of 3
+            t[i] = (0..3).map(|_| run(name, threads, strategy, scale)).fold(f64::MAX, f64::min);
+        }
+        println!(
+            "{:<12} {:>11.4}s {:>13.4}s {:>11.4}s {:>17.2}x",
+            name,
+            t[0],
+            t[1],
+            t[2],
+            t[1] / t[0]
+        );
+    }
+    println!("\n(per-SM isolation avoids the lock entirely inside the parallel section)");
+}

@@ -1,0 +1,37 @@
+//! Shared bench utilities (criterion is unavailable offline; each bench
+//! is a `harness = false` binary using this tiny measurement kit).
+
+use std::time::Instant;
+
+/// Measure a closure `iters` times, reporting min/mean in a stable format.
+pub fn bench<F: FnMut()>(label: &str, iters: usize, mut f: F) -> f64 {
+    // one warmup
+    f();
+    let mut times = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    let min = times.iter().cloned().fold(f64::MAX, f64::min);
+    let mean = times.iter().sum::<f64>() / times.len() as f64;
+    println!("bench {label:<40} min {min:>10.6}s  mean {mean:>10.6}s  (n={iters})");
+    mean
+}
+
+/// Scale selection from BENCH_SCALE env (ci|small|paper).
+/// Default is `ci` so the full `cargo bench` sweep completes in minutes
+/// on a single core; use `BENCH_SCALE=small` (tens of minutes) or
+/// `=paper` (hours — preserves the paper's relative Fig-1 magnitudes)
+/// for the full-size reproduction runs.
+pub fn env_scale() -> parsim::Scale {
+    match std::env::var("BENCH_SCALE").ok().as_deref() {
+        Some(s) => parsim::Scale::parse(s).expect("BENCH_SCALE=ci|small|paper"),
+        None => parsim::Scale::Ci,
+    }
+}
+
+/// Optional single-workload filter from BENCH_WORKLOAD env.
+pub fn env_workload_filter() -> Option<String> {
+    std::env::var("BENCH_WORKLOAD").ok()
+}

@@ -1,0 +1,16 @@
+//! Figure 1 — time to simulate each Table-2 workload single-threaded.
+//!
+//! `BENCH_SCALE=paper cargo bench --bench fig1_sim_time` for the full
+//! relative-magnitude run (minutes); default is `small`.
+
+mod common;
+
+use parsim::config::GpuConfig;
+use parsim::harness;
+
+fn main() {
+    let scale = common::env_scale();
+    let gpu = GpuConfig::rtx3080ti();
+    let rows = harness::fig1(scale, &gpu, true);
+    println!("\n{}", harness::fig1_report(&rows, scale));
+}

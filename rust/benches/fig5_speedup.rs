@@ -1,0 +1,21 @@
+//! Figure 5 — speed-up at 2/4/8/16/24 threads for every workload
+//! (paper averages: 1.72 / 2.64 / 3.95 / 5.83 / 7.08; lavaMD up to 14×,
+//! myocyte ≈ 1×, corr(speedup@16t, t_seq) ≈ 0.78).
+//!
+//! Modelled from measured per-SM work (see engine::costmodel — this host
+//! has one core; the model is the documented testbed substitution).
+
+mod common;
+
+use parsim::config::GpuConfig;
+use parsim::harness;
+
+fn main() {
+    let scale = common::env_scale();
+    let gpu = GpuConfig::rtx3080ti();
+    let measured = match common::env_workload_filter() {
+        Some(w) => vec![harness::measure_workload(&w, scale, &gpu)],
+        None => harness::measure_all(scale, &gpu, true),
+    };
+    println!("\n{}", harness::fig5_report(&measured));
+}

@@ -1,0 +1,18 @@
+//! Figure 6 — OpenMP static vs dynamic schedule at 2 and 16 threads
+//! (paper anchors: cut_1 0.97×→1.61× at 2 threads with dynamic;
+//! cut_2/lavaMD prefer static; myocyte indifferent; sssp flips).
+
+mod common;
+
+use parsim::config::GpuConfig;
+use parsim::harness;
+
+fn main() {
+    let scale = common::env_scale();
+    let gpu = GpuConfig::rtx3080ti();
+    let measured = match common::env_workload_filter() {
+        Some(w) => vec![harness::measure_workload(&w, scale, &gpu)],
+        None => harness::measure_all(scale, &gpu, true),
+    };
+    println!("\n{}", harness::fig6_report(&measured));
+}

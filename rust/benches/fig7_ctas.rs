@@ -1,0 +1,11 @@
+//! Figure 7 — CTAs per kernel for every workload (myocyte = 2 is the
+//! no-speed-up outlier; most workloads exceed the GPU's 80 SMs).
+
+mod common;
+
+use parsim::harness;
+
+fn main() {
+    let scale = common::env_scale();
+    println!("{}", harness::fig7_report(scale));
+}

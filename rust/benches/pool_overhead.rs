@@ -1,0 +1,52 @@
+//! Micro-bench: fork/join cost of the worker pool per parallel region and
+//! per dynamic chunk fetch — the two calibration constants of the Fig-5/6
+//! cost model (engine::costmodel::CostParams).
+//!
+//! On the authors' 24-core EPYC an OpenMP region costs a few µs; on this
+//! container the numbers quantify our pool's overhead so the model's
+//! barrier terms can be grounded in measurement.
+
+mod common;
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use parsim::config::Schedule;
+use parsim::engine::pool::ThreadPool;
+
+fn region_cost(threads: usize, schedule: Schedule, regions: usize) -> f64 {
+    let pool = ThreadPool::new(threads);
+    let sink = AtomicU64::new(0);
+    // warm
+    pool.parallel_for(80, schedule, |i| {
+        sink.fetch_add(i as u64, Ordering::Relaxed);
+    });
+    let t0 = std::time::Instant::now();
+    for _ in 0..regions {
+        pool.parallel_for(80, schedule, |i| {
+            sink.fetch_add(i as u64, Ordering::Relaxed);
+        });
+    }
+    t0.elapsed().as_secs_f64() / regions as f64
+}
+
+fn main() {
+    let regions: usize = std::env::var("BENCH_REGIONS").ok().and_then(|v| v.parse().ok()).unwrap_or(300);
+    println!("empty-body parallel region cost (80 iterations, {regions} regions)\n");
+    println!("{:>8} {:>14} {:>14} {:>14}", "threads", "static(def)", "static,1", "dynamic,1");
+    for threads in [1usize, 2, 4, 8] {
+        let s0 = region_cost(threads, Schedule::Static { chunk: 0 }, regions);
+        let s1 = region_cost(threads, Schedule::Static { chunk: 1 }, regions);
+        let d1 = region_cost(threads, Schedule::Dynamic { chunk: 1 }, regions);
+        println!(
+            "{threads:>8} {:>12.2}µs {:>12.2}µs {:>12.2}µs",
+            s0 * 1e6,
+            s1 * 1e6,
+            d1 * 1e6
+        );
+    }
+    println!(
+        "\nnote: threads=1 bypasses the pool entirely (the paper's 'disabled' mode);\n\
+         multi-thread numbers on a 1-core container include preemption — treat as\n\
+         upper bounds when recalibrating CostParams."
+    );
+}

@@ -1,0 +1,147 @@
+//! Hand-rolled command-line parsing (the fixed offline crate set has no
+//! `clap`). Small, strict, and unit-tested.
+
+use std::collections::BTreeMap;
+
+/// Parsed arguments: positionals + `--key value` / `--flag` options.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    options: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+/// Parsing errors.
+#[derive(Debug, PartialEq)]
+pub enum CliError {
+    MissingValue(String),
+    UnknownOption(String),
+    BadValue { key: String, value: String, expected: &'static str },
+}
+
+impl std::fmt::Display for CliError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CliError::MissingValue(k) => write!(f, "option --{k} requires a value"),
+            CliError::UnknownOption(k) => write!(f, "unknown option --{k}"),
+            CliError::BadValue { key, value, expected } => {
+                write!(f, "bad value for --{key}: {value:?} (expected {expected})")
+            }
+        }
+    }
+}
+
+impl std::error::Error for CliError {}
+
+impl Args {
+    /// Parse a raw argv slice. `value_opts` lists options that take a
+    /// value; `flag_opts` lists boolean flags. Anything else starting
+    /// with `--` is an error.
+    pub fn parse(
+        argv: &[String],
+        value_opts: &[&str],
+        flag_opts: &[&str],
+    ) -> Result<Args, CliError> {
+        let mut out = Args::default();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(key) = a.strip_prefix("--") {
+                // --key=value form
+                if let Some((k, v)) = key.split_once('=') {
+                    if value_opts.contains(&k) {
+                        out.options.insert(k.to_string(), v.to_string());
+                    } else {
+                        return Err(CliError::UnknownOption(k.to_string()));
+                    }
+                } else if value_opts.contains(&key) {
+                    i += 1;
+                    let v = argv.get(i).ok_or_else(|| CliError::MissingValue(key.into()))?;
+                    out.options.insert(key.to_string(), v.clone());
+                } else if flag_opts.contains(&key) {
+                    out.flags.push(key.to_string());
+                } else {
+                    return Err(CliError::UnknownOption(key.to_string()));
+                }
+            } else {
+                out.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(out)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize, CliError> {
+        match self.options.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| CliError::BadValue {
+                key: key.into(),
+                value: v.clone(),
+                expected: "unsigned integer",
+            }),
+        }
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> Result<u64, CliError> {
+        match self.options.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| CliError::BadValue {
+                key: key.into(),
+                value: v.clone(),
+                expected: "unsigned integer",
+            }),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn positionals_options_flags() {
+        let a = Args::parse(
+            &argv(&["run", "hotspot", "--threads", "16", "--profile", "--scale=small"]),
+            &["threads", "scale"],
+            &["profile"],
+        )
+        .unwrap();
+        assert_eq!(a.positional, vec!["run", "hotspot"]);
+        assert_eq!(a.get("threads"), Some("16"));
+        assert_eq!(a.get("scale"), Some("small"));
+        assert!(a.flag("profile"));
+        assert!(!a.flag("verbose"));
+        assert_eq!(a.get_usize("threads", 1).unwrap(), 16);
+        assert_eq!(a.get_usize("missing", 7).unwrap(), 7);
+    }
+
+    #[test]
+    fn missing_value_error() {
+        let e = Args::parse(&argv(&["--threads"]), &["threads"], &[]).unwrap_err();
+        assert_eq!(e, CliError::MissingValue("threads".into()));
+    }
+
+    #[test]
+    fn unknown_option_error() {
+        let e = Args::parse(&argv(&["--tyop", "3"]), &["threads"], &[]).unwrap_err();
+        assert_eq!(e, CliError::UnknownOption("tyop".into()));
+    }
+
+    #[test]
+    fn bad_value_error() {
+        let a = Args::parse(&argv(&["--threads", "many"]), &["threads"], &[]).unwrap();
+        assert!(matches!(a.get_usize("threads", 1), Err(CliError::BadValue { .. })));
+    }
+}

@@ -1,0 +1,510 @@
+//! Simulator configuration.
+//!
+//! Two configuration surfaces, mirroring Accel-sim:
+//!
+//! * [`GpuConfig`] — the *modelled* GPU (Table 1 of the paper: an NVIDIA
+//!   RTX 3080 Ti, Ampere). Loadable from an Accel-sim-style `-key value`
+//!   config file ([`parser`]).
+//! * [`SimConfig`] — the *simulator* itself: thread count, OpenMP-style
+//!   schedule, statistics strategy, functional mode. These are the knobs
+//!   the paper's evaluation sweeps.
+
+pub mod parser;
+pub mod presets;
+
+pub use parser::ConfigFile;
+
+/// Issue-stage warp scheduler policy (per sub-core).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum IssueSched {
+    /// Greedy-then-oldest: keep issuing the same warp until it stalls,
+    /// then fall back to the oldest ready warp (Accel-sim default).
+    Gto,
+    /// Loose round-robin across the sub-core's warps.
+    Lrr,
+}
+
+/// Cache write policy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WritePolicy {
+    /// Writes go straight through to the next level (Ampere L1 for global).
+    WriteThrough,
+    /// Dirty lines written back on eviction (L2).
+    WriteBack,
+}
+
+/// Cache allocate-on-write-miss policy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AllocPolicy {
+    OnMiss,
+    NoWriteAllocate,
+}
+
+/// Geometry + policy of one cache level.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CacheConfig {
+    /// Total capacity in bytes.
+    pub size_bytes: u64,
+    /// Line size in bytes (power of two).
+    pub line_bytes: u64,
+    /// Associativity (ways).
+    pub assoc: usize,
+    /// Number of MSHR entries (outstanding distinct misses).
+    pub mshr_entries: usize,
+    /// Max merged requests per MSHR entry.
+    pub mshr_merge: usize,
+    /// Hit latency in core cycles.
+    pub hit_latency: u32,
+    /// Miss-queue depth (requests waiting to be injected downstream).
+    pub miss_queue: usize,
+    pub write_policy: WritePolicy,
+    pub alloc_policy: AllocPolicy,
+}
+
+impl CacheConfig {
+    /// Number of sets implied by the geometry.
+    pub fn num_sets(&self) -> usize {
+        let sets = self.size_bytes / self.line_bytes / self.assoc as u64;
+        sets.max(1) as usize
+    }
+}
+
+/// DRAM timing parameters (GDDR6X-ish), in *memory* clock cycles.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DramConfig {
+    /// Banks per memory partition channel.
+    pub num_banks: usize,
+    /// Row-buffer (page) size in bytes.
+    pub row_bytes: u64,
+    /// Activate-to-read/write delay.
+    pub t_rcd: u32,
+    /// Precharge delay.
+    pub t_rp: u32,
+    /// Column access (CAS) latency.
+    pub t_cas: u32,
+    /// Minimum row-active time.
+    pub t_ras: u32,
+    /// Data-bus cycles per 32-byte burst.
+    pub burst_cycles: u32,
+    /// Per-partition request-queue depth.
+    pub queue_depth: usize,
+    /// FR-FCFS scan window (how deep the scheduler looks for row hits).
+    pub frfcfs_window: usize,
+}
+
+/// Interconnect (crossbar) parameters.
+#[derive(Debug, Clone, PartialEq)]
+pub struct IcntConfig {
+    /// Zero-load latency (core cycles) from injection to ejection.
+    pub latency: u32,
+    /// Flit (transfer granularity) size in bytes.
+    pub flit_bytes: u32,
+    /// Flits accepted per node per cycle (input speedup).
+    pub input_rate: u32,
+    /// Flits delivered per node per cycle (output speedup).
+    pub output_rate: u32,
+    /// Per-node ejection-queue capacity in packets (backpressure bound).
+    pub eject_queue: usize,
+    /// Per-node injection-buffer capacity in packets.
+    pub inject_queue: usize,
+}
+
+/// The modelled GPU (paper Table 1 defaults — see [`GpuConfig::rtx3080ti`]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct GpuConfig {
+    pub name: String,
+    /// Streaming multiprocessors. Table 1: 80.
+    pub num_sms: usize,
+    /// Warp contexts per SM. Table 1: 48.
+    pub warps_per_sm: usize,
+    /// Threads per warp.
+    pub warp_size: usize,
+    /// Sub-cores (warp schedulers) per SM. Ampere: 4.
+    pub subcores_per_sm: usize,
+    /// Hardware CTA slots per SM.
+    pub max_ctas_per_sm: usize,
+    /// 32-bit registers per SM.
+    pub regs_per_sm: u64,
+    /// Unified L1D/shared capacity per SM in bytes. Table 1: 128 KB.
+    pub smem_l1d_per_sm: u64,
+    /// Core clock in MHz. Table 1: 1365.
+    pub core_clock_mhz: u32,
+    /// Memory (data-rate) clock in MHz. Table 1: 9500.
+    pub mem_clock_mhz: u32,
+    /// Memory partitions. Table 1: 24.
+    pub num_mem_partitions: usize,
+    /// Sub-partitions (L2 slices) per partition. Ampere: 2.
+    pub subpartitions_per_partition: usize,
+    /// Total L2 in bytes. Table 1: 6 MB.
+    pub l2_total_bytes: u64,
+    /// Issue width per sub-core (instructions issued per cycle).
+    pub issue_width: usize,
+    /// Operand-collector units per sub-core.
+    pub collector_units: usize,
+    /// Register-file read ports per sub-core.
+    pub rf_read_ports: usize,
+    /// Execution-unit latencies/widths.
+    pub exec: ExecConfig,
+    /// Shared-memory banks.
+    pub smem_banks: usize,
+    /// Shared-memory access latency (conflict-free).
+    pub smem_latency: u32,
+    pub issue_sched: IssueSched,
+    pub l0i: CacheConfig,
+    pub l1i: CacheConfig,
+    pub l1d: CacheConfig,
+    /// One L2 slice (per sub-partition); capacity = l2_total / slices.
+    pub l2_slice: CacheConfig,
+    pub dram: DramConfig,
+    pub icnt: IcntConfig,
+}
+
+/// Per-unit-class pipeline parameters.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ExecConfig {
+    /// (latency, initiation interval) per unit class, in core cycles.
+    pub int_lat: u32,
+    pub int_init: u32,
+    pub fp32_lat: u32,
+    pub fp32_init: u32,
+    pub fp64_lat: u32,
+    pub fp64_init: u32,
+    pub sfu_lat: u32,
+    pub sfu_init: u32,
+    pub tensor_lat: u32,
+    pub tensor_init: u32,
+    /// Depth of each result pipeline (max in-flight per unit).
+    pub pipe_depth: usize,
+}
+
+impl GpuConfig {
+    /// Total L2 slices (= icnt memory nodes).
+    pub fn num_subpartitions(&self) -> usize {
+        self.num_mem_partitions * self.subpartitions_per_partition
+    }
+
+    /// Total interconnect nodes: SMs + L2 slices.
+    pub fn icnt_nodes(&self) -> usize {
+        self.num_sms + self.num_subpartitions()
+    }
+
+    /// Memory-to-core clock ratio (DRAM cycles advanced per core cycle).
+    /// GDDR data-rate clock divided by command-rate factor 8 ≈ effective
+    /// command clock; we keep the simple ratio used by GPGPU-Sim configs.
+    pub fn dram_clock_ratio(&self) -> f64 {
+        self.mem_clock_mhz as f64 / 8.0 / self.core_clock_mhz as f64
+    }
+
+    /// Warps per CTA for a given block size (threads).
+    pub fn warps_per_cta(&self, block_threads: u32) -> usize {
+        crate::util::ceil_div(block_threads as u64, self.warp_size as u64) as usize
+    }
+
+    /// The NVIDIA RTX 3080 Ti model of the paper's Table 1.
+    pub fn rtx3080ti() -> Self {
+        GpuConfig {
+            name: "RTX3080Ti".to_string(),
+            num_sms: 80,
+            warps_per_sm: 48,
+            warp_size: 32,
+            subcores_per_sm: 4,
+            max_ctas_per_sm: 16,
+            regs_per_sm: 65536,
+            smem_l1d_per_sm: 128 * 1024,
+            core_clock_mhz: 1365,
+            mem_clock_mhz: 9500,
+            num_mem_partitions: 24,
+            subpartitions_per_partition: 2,
+            l2_total_bytes: 6 * 1024 * 1024,
+            issue_width: 1,
+            collector_units: 4,
+            rf_read_ports: 2,
+            exec: ExecConfig {
+                int_lat: 4,
+                int_init: 1,
+                fp32_lat: 4,
+                fp32_init: 1,
+                fp64_lat: 32,
+                fp64_init: 16,
+                sfu_lat: 21,
+                sfu_init: 8,
+                tensor_lat: 16,
+                tensor_init: 4,
+                pipe_depth: 8,
+            },
+            smem_banks: 32,
+            smem_latency: 24,
+            issue_sched: IssueSched::Gto,
+            l0i: CacheConfig {
+                size_bytes: 4 * 1024,
+                line_bytes: 128,
+                assoc: 4,
+                mshr_entries: 8,
+                mshr_merge: 8,
+                hit_latency: 1,
+                miss_queue: 8,
+                write_policy: WritePolicy::WriteThrough,
+                alloc_policy: AllocPolicy::OnMiss,
+            },
+            l1i: CacheConfig {
+                size_bytes: 32 * 1024,
+                line_bytes: 128,
+                assoc: 8,
+                mshr_entries: 16,
+                mshr_merge: 8,
+                hit_latency: 4,
+                miss_queue: 16,
+                write_policy: WritePolicy::WriteThrough,
+                alloc_policy: AllocPolicy::OnMiss,
+            },
+            l1d: CacheConfig {
+                // Unified 128 KB; default carve-out: 64 KB L1D + 64 KB shmem
+                size_bytes: 64 * 1024,
+                line_bytes: 128,
+                assoc: 4,
+                mshr_entries: 48,
+                mshr_merge: 8,
+                hit_latency: 28,
+                miss_queue: 32,
+                write_policy: WritePolicy::WriteThrough,
+                alloc_policy: AllocPolicy::NoWriteAllocate,
+            },
+            l2_slice: CacheConfig {
+                // 6 MB / 48 slices = 128 KB per slice
+                size_bytes: 128 * 1024,
+                line_bytes: 128,
+                assoc: 16,
+                mshr_entries: 64,
+                mshr_merge: 8,
+                hit_latency: 96,
+                miss_queue: 32,
+                write_policy: WritePolicy::WriteBack,
+                alloc_policy: AllocPolicy::OnMiss,
+            },
+            dram: DramConfig {
+                num_banks: 16,
+                row_bytes: 2048,
+                t_rcd: 24,
+                t_rp: 24,
+                t_cas: 24,
+                t_ras: 55,
+                burst_cycles: 2,
+                queue_depth: 64,
+                frfcfs_window: 16,
+            },
+            icnt: IcntConfig {
+                latency: 8,
+                flit_bytes: 40,
+                input_rate: 1,
+                output_rate: 1,
+                eject_queue: 8,
+                inject_queue: 8,
+            },
+        }
+    }
+
+    /// A deliberately small GPU for unit tests (4 SMs, 2 partitions) so
+    /// individual tests run in milliseconds while exercising every path.
+    pub fn tiny() -> Self {
+        let mut c = Self::rtx3080ti();
+        c.name = "TinyTestGpu".into();
+        c.num_sms = 4;
+        c.num_mem_partitions = 2;
+        c.l2_total_bytes = 256 * 1024;
+        c.l2_slice.size_bytes = c.l2_total_bytes / c.num_subpartitions() as u64;
+        c
+    }
+
+    /// Validate internal consistency; returns a human-readable error list.
+    pub fn validate(&self) -> Result<(), Vec<String>> {
+        let mut errs = Vec::new();
+        if self.num_sms == 0 {
+            errs.push("num_sms must be > 0".into());
+        }
+        if self.warps_per_sm % self.subcores_per_sm != 0 {
+            errs.push(format!(
+                "warps_per_sm ({}) must divide evenly across {} sub-cores",
+                self.warps_per_sm, self.subcores_per_sm
+            ));
+        }
+        if !crate::util::is_pow2(self.l1d.line_bytes) {
+            errs.push("l1d line size must be a power of two".into());
+        }
+        if !crate::util::is_pow2(self.l2_slice.line_bytes) {
+            errs.push("l2 line size must be a power of two".into());
+        }
+        if self.warp_size != 32 {
+            errs.push("warp_size other than 32 is untested".into());
+        }
+        let slice_total = self.l2_slice.size_bytes * self.num_subpartitions() as u64;
+        if slice_total != self.l2_total_bytes {
+            errs.push(format!(
+                "l2 slice size × slices ({}) != l2_total_bytes ({})",
+                slice_total, self.l2_total_bytes
+            ));
+        }
+        if errs.is_empty() {
+            Ok(())
+        } else {
+            Err(errs)
+        }
+    }
+}
+
+/// OpenMP-style for-loop schedule (paper §4.3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Schedule {
+    /// `schedule(static, chunk)`: iterations pre-assigned round-robin in
+    /// chunks. Near-zero runtime overhead; best for balanced loops.
+    Static { chunk: usize },
+    /// `schedule(dynamic, chunk)`: idle threads grab the next chunk from a
+    /// shared counter. Handles imbalance; pays a per-chunk fetch cost.
+    Dynamic { chunk: usize },
+}
+
+impl Schedule {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Schedule::Static { .. } => "static",
+            Schedule::Dynamic { .. } => "dynamic",
+        }
+    }
+    pub fn chunk(&self) -> usize {
+        match *self {
+            Schedule::Static { chunk } | Schedule::Dynamic { chunk } => chunk,
+        }
+    }
+}
+
+/// Statistics-isolation strategy (paper §3). All three produce identical
+/// final statistics; they differ only in performance, which
+/// `benches/ablation_stats.rs` measures.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StatsStrategy {
+    /// Per-SM statistics, merged once at kernel completion (the paper's
+    /// choice and the default).
+    PerSm,
+    /// One global structure guarded by a mutex — the anti-pattern the
+    /// paper rejects; kept for the ablation.
+    SharedLocked,
+    /// Defer non-counter stat updates (the unique-address set) to the
+    /// sequential interconnect-drain phase.
+    SeqPoint,
+}
+
+impl StatsStrategy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            StatsStrategy::PerSm => "per-sm",
+            StatsStrategy::SharedLocked => "shared-locked",
+            StatsStrategy::SeqPoint => "seq-point",
+        }
+    }
+}
+
+/// Functional-execution mode for workloads that carry real semantics
+/// (the GEMM family).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FunctionalMode {
+    /// Timing only (default): instructions advance state machines, values
+    /// are not computed.
+    TimingOnly,
+    /// Timing + functional: the workload's tile-ordered computation is
+    /// replayed so the result can be checked against the XLA artifact.
+    Full,
+}
+
+/// Simulator-run configuration — the knobs the paper sweeps.
+#[derive(Debug, Clone)]
+pub struct SimConfig {
+    /// Worker threads for the parallel SM section. 1 = the vanilla
+    /// sequential simulator (the parallel machinery is bypassed entirely,
+    /// exactly like compiling Accel-sim without `-fopenmp`).
+    pub threads: usize,
+    pub schedule: Schedule,
+    pub stats_strategy: StatsStrategy,
+    pub functional: FunctionalMode,
+    /// Hard cycle limit per kernel (deadlock guard). 0 = unlimited.
+    pub max_cycles: u64,
+    /// Enable the per-phase profiler (Fig 4).
+    pub profile: bool,
+    /// Sample the profiler every N cycles (1 = every cycle).
+    pub profile_sample: u64,
+    /// Record per-SM per-cycle work for the speed-up cost model (Fig 5/6).
+    pub measure_work: bool,
+    /// Deterministic seed for anything stochastic in workload synthesis.
+    pub seed: u64,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        SimConfig {
+            threads: 1,
+            schedule: Schedule::Static { chunk: 1 },
+            stats_strategy: StatsStrategy::PerSm,
+            functional: FunctionalMode::TimingOnly,
+            max_cycles: 0,
+            profile: false,
+            profile_sample: 8,
+            measure_work: false,
+            seed: 0xC0FFEE,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_parameters() {
+        // The headline Table-1 numbers must match the paper exactly.
+        let c = GpuConfig::rtx3080ti();
+        assert_eq!(c.num_sms, 80);
+        assert_eq!(c.warps_per_sm, 48);
+        assert_eq!(c.core_clock_mhz, 1365);
+        assert_eq!(c.mem_clock_mhz, 9500);
+        assert_eq!(c.num_mem_partitions, 24);
+        assert_eq!(c.l2_total_bytes, 6 * 1024 * 1024);
+        assert_eq!(c.smem_l1d_per_sm, 128 * 1024);
+        c.validate().expect("rtx3080ti config must validate");
+    }
+
+    #[test]
+    fn derived_geometry() {
+        let c = GpuConfig::rtx3080ti();
+        assert_eq!(c.num_subpartitions(), 48);
+        assert_eq!(c.icnt_nodes(), 128);
+        assert_eq!(c.l2_slice.num_sets(), 128 * 1024 / 128 / 16);
+        assert_eq!(c.warps_per_cta(256), 8);
+        assert_eq!(c.warps_per_cta(33), 2);
+    }
+
+    #[test]
+    fn tiny_validates() {
+        GpuConfig::tiny().validate().expect("tiny config");
+    }
+
+    #[test]
+    fn validate_catches_errors() {
+        let mut c = GpuConfig::rtx3080ti();
+        c.num_sms = 0;
+        c.l1d.line_bytes = 100;
+        let errs = c.validate().unwrap_err();
+        assert!(errs.len() >= 2);
+    }
+
+    #[test]
+    fn schedule_accessors() {
+        assert_eq!(Schedule::Static { chunk: 2 }.name(), "static");
+        assert_eq!(Schedule::Dynamic { chunk: 4 }.chunk(), 4);
+    }
+
+    #[test]
+    fn simconfig_default_is_sequential_vanilla() {
+        let s = SimConfig::default();
+        assert_eq!(s.threads, 1);
+        assert_eq!(s.stats_strategy, StatsStrategy::PerSm);
+        assert_eq!(s.functional, FunctionalMode::TimingOnly);
+    }
+}

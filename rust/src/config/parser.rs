@@ -1,0 +1,237 @@
+//! Accel-sim-style configuration file parser.
+//!
+//! Accel-sim configures the modelled GPU with flag files such as
+//! `gpgpusim.config`, containing lines like:
+//!
+//! ```text
+//! # comment
+//! -gpgpu_n_clusters 80
+//! -gpgpu_clock_domains 1365.0:1365.0:1365.0:9500.0
+//! ```
+//!
+//! We keep the same surface so existing Accel-sim users feel at home:
+//! `parsim run --gpu-config my.config …` overrides [`GpuConfig`] fields.
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::path::Path;
+
+use super::{GpuConfig, IssueSched};
+
+/// A parsed `-key value` config file.
+#[derive(Debug, Clone, Default)]
+pub struct ConfigFile {
+    /// Key → raw value string (keys stored without the leading dash).
+    entries: BTreeMap<String, String>,
+}
+
+/// Parse / apply errors.
+#[derive(Debug)]
+pub enum ConfigError {
+    Io(std::io::Error),
+    Syntax { line: usize, text: String },
+    BadValue { key: String, value: String, expected: &'static str },
+    UnknownKey(String),
+}
+
+impl fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ConfigError::Io(e) => write!(f, "io error: {e}"),
+            ConfigError::Syntax { line, text } => {
+                write!(f, "syntax error at line {line}: {text:?} (expected '-key value')")
+            }
+            ConfigError::BadValue { key, value, expected } => {
+                write!(f, "bad value for -{key}: {value:?} (expected {expected})")
+            }
+            ConfigError::UnknownKey(k) => write!(f, "unknown config key -{k}"),
+        }
+    }
+}
+
+impl std::error::Error for ConfigError {}
+
+impl ConfigFile {
+    /// Parse from a string.
+    pub fn parse(text: &str) -> Result<Self, ConfigError> {
+        let mut entries = BTreeMap::new();
+        for (ln, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            let mut parts = line.split_whitespace();
+            let key = parts.next().unwrap_or("");
+            if !key.starts_with('-') || key.len() < 2 {
+                return Err(ConfigError::Syntax { line: ln + 1, text: raw.to_string() });
+            }
+            let value: String = parts.collect::<Vec<_>>().join(" ");
+            if value.is_empty() {
+                return Err(ConfigError::Syntax { line: ln + 1, text: raw.to_string() });
+            }
+            entries.insert(key[1..].to_string(), value);
+        }
+        Ok(ConfigFile { entries })
+    }
+
+    /// Parse from a file on disk.
+    pub fn load(path: &Path) -> Result<Self, ConfigError> {
+        let text = std::fs::read_to_string(path).map_err(ConfigError::Io)?;
+        Self::parse(&text)
+    }
+
+    /// Raw lookup.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.entries.get(key).map(|s| s.as_str())
+    }
+
+    /// Number of entries.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    fn get_u64(&self, key: &str) -> Result<Option<u64>, ConfigError> {
+        match self.entries.get(key) {
+            None => Ok(None),
+            Some(v) => v.trim().parse::<u64>().map(Some).map_err(|_| ConfigError::BadValue {
+                key: key.into(),
+                value: v.clone(),
+                expected: "unsigned integer",
+            }),
+        }
+    }
+
+    /// Apply recognized keys onto a [`GpuConfig`], returning the list of
+    /// keys that were applied. Unknown keys are an error (catches typos —
+    /// simulation campaigns have been lost to silently-ignored flags).
+    pub fn apply(&self, cfg: &mut GpuConfig) -> Result<Vec<String>, ConfigError> {
+        let known = [
+            "gpgpu_n_sms",
+            "gpgpu_max_warps_per_sm",
+            "gpgpu_n_mem_partitions",
+            "gpgpu_l2_total_kb",
+            "gpgpu_core_clock_mhz",
+            "gpgpu_mem_clock_mhz",
+            "gpgpu_max_ctas_per_sm",
+            "gpgpu_registers_per_sm",
+            "gpgpu_shmem_l1d_per_sm_kb",
+            "gpgpu_subcores_per_sm",
+            "gpgpu_issue_sched",
+            "gpgpu_icnt_latency",
+            "gpgpu_dram_banks",
+        ];
+        for k in self.entries.keys() {
+            if !known.contains(&k.as_str()) {
+                return Err(ConfigError::UnknownKey(k.clone()));
+            }
+        }
+        let mut applied = Vec::new();
+        macro_rules! num {
+            ($key:literal, $field:expr, $ty:ty) => {
+                if let Some(v) = self.get_u64($key)? {
+                    $field = v as $ty;
+                    applied.push($key.to_string());
+                }
+            };
+        }
+        num!("gpgpu_n_sms", cfg.num_sms, usize);
+        num!("gpgpu_max_warps_per_sm", cfg.warps_per_sm, usize);
+        num!("gpgpu_n_mem_partitions", cfg.num_mem_partitions, usize);
+        num!("gpgpu_core_clock_mhz", cfg.core_clock_mhz, u32);
+        num!("gpgpu_mem_clock_mhz", cfg.mem_clock_mhz, u32);
+        num!("gpgpu_max_ctas_per_sm", cfg.max_ctas_per_sm, usize);
+        num!("gpgpu_registers_per_sm", cfg.regs_per_sm, u64);
+        num!("gpgpu_subcores_per_sm", cfg.subcores_per_sm, usize);
+        num!("gpgpu_icnt_latency", cfg.icnt.latency, u32);
+        num!("gpgpu_dram_banks", cfg.dram.num_banks, usize);
+        if let Some(v) = self.get_u64("gpgpu_l2_total_kb")? {
+            cfg.l2_total_bytes = v * 1024;
+            // keep slice geometry consistent
+            cfg.l2_slice.size_bytes = cfg.l2_total_bytes / cfg.num_subpartitions() as u64;
+            applied.push("gpgpu_l2_total_kb".into());
+        }
+        if let Some(v) = self.get_u64("gpgpu_shmem_l1d_per_sm_kb")? {
+            cfg.smem_l1d_per_sm = v * 1024;
+            applied.push("gpgpu_shmem_l1d_per_sm_kb".into());
+        }
+        if let Some(v) = self.get("gpgpu_issue_sched") {
+            cfg.issue_sched = match v.trim().to_ascii_lowercase().as_str() {
+                "gto" => IssueSched::Gto,
+                "lrr" => IssueSched::Lrr,
+                _ => {
+                    return Err(ConfigError::BadValue {
+                        key: "gpgpu_issue_sched".into(),
+                        value: v.to_string(),
+                        expected: "gto | lrr",
+                    })
+                }
+            };
+            applied.push("gpgpu_issue_sched".into());
+        }
+        Ok(applied)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_comments_and_blanks() {
+        let f = ConfigFile::parse(
+            "# header\n\n-gpgpu_n_sms 40   # trailing comment\n-gpgpu_issue_sched lrr\n",
+        )
+        .unwrap();
+        assert_eq!(f.len(), 2);
+        assert_eq!(f.get("gpgpu_n_sms"), Some("40"));
+    }
+
+    #[test]
+    fn rejects_bad_syntax() {
+        assert!(matches!(
+            ConfigFile::parse("gpgpu_n_sms 40").unwrap_err(),
+            ConfigError::Syntax { line: 1, .. }
+        ));
+        assert!(matches!(
+            ConfigFile::parse("-gpgpu_n_sms").unwrap_err(),
+            ConfigError::Syntax { .. }
+        ));
+    }
+
+    #[test]
+    fn applies_overrides() {
+        let mut cfg = GpuConfig::rtx3080ti();
+        let f = ConfigFile::parse(
+            "-gpgpu_n_sms 40\n-gpgpu_l2_total_kb 3072\n-gpgpu_issue_sched lrr\n",
+        )
+        .unwrap();
+        let applied = f.apply(&mut cfg).unwrap();
+        assert_eq!(applied.len(), 3);
+        assert_eq!(cfg.num_sms, 40);
+        assert_eq!(cfg.l2_total_bytes, 3 * 1024 * 1024);
+        assert_eq!(cfg.issue_sched, IssueSched::Lrr);
+        // slice geometry kept consistent
+        assert_eq!(
+            cfg.l2_slice.size_bytes * cfg.num_subpartitions() as u64,
+            cfg.l2_total_bytes
+        );
+    }
+
+    #[test]
+    fn unknown_key_is_an_error() {
+        let mut cfg = GpuConfig::rtx3080ti();
+        let f = ConfigFile::parse("-gpgpu_tyop 3\n").unwrap();
+        assert!(matches!(f.apply(&mut cfg).unwrap_err(), ConfigError::UnknownKey(_)));
+    }
+
+    #[test]
+    fn bad_value_is_an_error() {
+        let mut cfg = GpuConfig::rtx3080ti();
+        let f = ConfigFile::parse("-gpgpu_n_sms eighty\n").unwrap();
+        assert!(matches!(f.apply(&mut cfg).unwrap_err(), ConfigError::BadValue { .. }));
+    }
+}

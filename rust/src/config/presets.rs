@@ -1,0 +1,108 @@
+//! Named GPU presets and the testbed descriptor.
+//!
+//! `rtx3080ti` is the paper's Table-1 machine; the others demonstrate the
+//! "model bigger systems" motivation of the paper (§1, §5): once simulation
+//! is parallel, larger SM counts become tractable.
+
+use super::GpuConfig;
+
+/// Look up a preset by name.
+pub fn by_name(name: &str) -> Option<GpuConfig> {
+    match name.to_ascii_lowercase().as_str() {
+        "rtx3080ti" | "3080ti" | "ampere" => Some(GpuConfig::rtx3080ti()),
+        "tiny" | "test" => Some(GpuConfig::tiny()),
+        "rtx3090" => Some(rtx3090()),
+        "a100-like" | "a100" => Some(a100_like()),
+        _ => None,
+    }
+}
+
+/// Names of all presets (for `parsim config --list`).
+pub fn names() -> &'static [&'static str] {
+    &["rtx3080ti", "tiny", "rtx3090", "a100-like"]
+}
+
+/// RTX 3090: 82 SMs, 24 partitions, 6 MB L2 (GA102 full die).
+pub fn rtx3090() -> GpuConfig {
+    let mut c = GpuConfig::rtx3080ti();
+    c.name = "RTX3090".into();
+    c.num_sms = 82;
+    c.core_clock_mhz = 1395;
+    c
+}
+
+/// A100-like: 108 SMs, 40 MB L2, HBM-ish memory clock. Demonstrates the
+/// "simulate bigger GPUs" use case; not a validated A100 model.
+pub fn a100_like() -> GpuConfig {
+    let mut c = GpuConfig::rtx3080ti();
+    c.name = "A100-like".into();
+    c.num_sms = 108;
+    c.core_clock_mhz = 1410;
+    c.mem_clock_mhz = 1215 * 2; // HBM2e data rate is lower; bus far wider
+    c.num_mem_partitions = 40;
+    c.l2_total_bytes = 40 * 1024 * 1024;
+    c.l2_slice.size_bytes = c.l2_total_bytes / c.num_subpartitions() as u64;
+    c
+}
+
+/// The paper's Table-3 node (what the authors ran on) and this host —
+/// printed in figure-5/6 harness headers so modelled-vs-measured context is
+/// always visible.
+#[derive(Debug, Clone)]
+pub struct Testbed {
+    pub label: String,
+    pub cores: usize,
+    pub threads: usize,
+    pub description: String,
+}
+
+impl Testbed {
+    /// Paper Table 3: AMD EPYC 7401P, 24 cores / 48 threads, 128 GB DDR4.
+    pub fn paper() -> Self {
+        Testbed {
+            label: "paper".into(),
+            cores: 24,
+            threads: 48,
+            description: "AMD EPYC 7401P @2GHz, 24c/48t, 128GB DDR4 (paper Table 3)".into(),
+        }
+    }
+
+    /// The host we are actually running on.
+    pub fn host() -> Self {
+        let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        Testbed {
+            label: "host".into(),
+            cores,
+            threads: cores,
+            description: format!("this container ({cores} hardware thread(s) visible)"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_resolve_and_validate() {
+        for name in names() {
+            let c = by_name(name).expect(name);
+            c.validate().unwrap_or_else(|e| panic!("{name}: {e:?}"));
+        }
+        assert!(by_name("nonexistent").is_none());
+    }
+
+    #[test]
+    fn a100_is_bigger() {
+        let a = a100_like();
+        let b = GpuConfig::rtx3080ti();
+        assert!(a.num_sms > b.num_sms);
+        assert!(a.l2_total_bytes > b.l2_total_bytes);
+    }
+
+    #[test]
+    fn testbeds() {
+        assert_eq!(Testbed::paper().cores, 24);
+        assert!(Testbed::host().cores >= 1);
+    }
+}

@@ -1,0 +1,892 @@
+//! The SM (streaming multiprocessor) model — Figure 3 of the paper.
+//!
+//! Four sub-cores share an L0/L1 instruction cache, a unified L1D/shared
+//! memory and the LD/ST unit. Each sub-core fetches/decodes into per-warp
+//! i-buffers, issues one instruction per cycle through a GTO or LRR
+//! scheduler past a scoreboard, and executes on per-class pipelines.
+//!
+//! **Parallelization contract (paper §3):** [`Sm::cycle`] mutates *only*
+//! this SM's state: its warps, caches, pipelines, its private statistics
+//! ([`crate::stats::SmStats`]) and its private interconnect ports
+//! (`out_port` / `in_port`). The engine moves packets between ports and
+//! the interconnect exclusively in sequential phases. This is the
+//! invariant that makes `parallel for` over SMs deterministic.
+
+pub mod exec;
+pub mod ldst;
+pub mod warp;
+
+use std::collections::VecDeque;
+use std::sync::Arc;
+
+use crate::config::{GpuConfig, IssueSched, StatsStrategy};
+use crate::icnt::Packet;
+use crate::mem::cache::{AccessOutcome, Cache};
+use crate::mem::{MemRequest, WarpRef};
+use crate::stats::{SharedLockedStats, SmStats};
+use crate::trace::{AccessCtx, KernelDesc, OpClass, Unit};
+
+use exec::ExecUnits;
+use ldst::{LdstEvent, LdstUnit, MemInst};
+use warp::{WarpState, IBUFFER_CAP};
+
+/// L1i miss penalty in core cycles (fetch from L2/memory; modelled as a
+/// fixed fill latency instead of icnt traffic — instruction misses are
+/// rare and read-only, see DESIGN.md §Simplifications).
+const L1I_MISS_PENALTY: u64 = 200;
+
+/// A hardware CTA slot.
+#[derive(Debug, Clone, Copy, Default)]
+struct CtaSlot {
+    active: bool,
+    cta_id: u32,
+    warps_remaining: u16,
+    barrier_expected: u16,
+    barrier_arrived: u16,
+}
+
+/// Per-sub-core scheduler + pipeline state.
+#[derive(Debug)]
+struct SubCore {
+    fetch_rr: usize,
+    /// GTO: the warp that issued last (greedy candidate).
+    last_issued: Option<u16>,
+    /// LRR rotation pointer.
+    lrr_next: usize,
+    exec: ExecUnits,
+}
+
+/// One streaming multiprocessor.
+#[derive(Debug)]
+pub struct Sm {
+    pub id: u32,
+    // --- config snapshot (hot-path friendly) ---
+    warp_size: usize,
+    n_subcores: usize,
+    issue_sched: IssueSched,
+    max_ctas: usize,
+    out_cap: usize,
+    regs_total: u64,
+    smem_total: u64,
+
+    // --- kernel context ---
+    kernel: Option<Arc<KernelDesc>>,
+    warps: Vec<WarpState>,
+    ctas: Vec<CtaSlot>,
+    subcores: Vec<SubCore>,
+
+    // --- memory-side ---
+    l0i: Cache,
+    l1i: Cache,
+    l1d: Cache,
+    ldst: LdstUnit,
+    /// Pending instruction-cache fills: (ready_cycle, line_addr).
+    ifetch_fill: Vec<(u64, u64)>,
+
+    /// Packets this SM wants to send (drained by the engine, in SM order).
+    pub out_port: VecDeque<Packet>,
+    /// Replies delivered to this SM (filled by the engine before the
+    /// parallel section).
+    pub in_port: VecDeque<Packet>,
+
+    // --- statistics (paper §3) ---
+    pub stats: SmStats,
+    strategy: StatsStrategy,
+    shared: Option<Arc<SharedLockedStats>>,
+
+    // --- occupancy accounting ---
+    free_regs: u64,
+    free_smem: u64,
+    resident_ctas: usize,
+    resident_warps: usize,
+
+    // --- scratch (allocation-free hot path) ---
+    scratch_lines: Vec<u64>,
+    events: Vec<LdstEvent>,
+    /// Warp slots owned by each sub-core (fixed at construction).
+    subcore_slots: Vec<Vec<u16>>,
+    /// Reusable issue-order buffer (no per-cycle allocation).
+    order_scratch: Vec<u16>,
+}
+
+impl Sm {
+    pub fn new(id: u32, cfg: &GpuConfig) -> Self {
+        let subcores = (0..cfg.subcores_per_sm)
+            .map(|_| SubCore {
+                fetch_rr: 0,
+                last_issued: None,
+                lrr_next: 0,
+                exec: ExecUnits::new(&cfg.exec),
+            })
+            .collect();
+        Sm {
+            id,
+            warp_size: cfg.warp_size,
+            n_subcores: cfg.subcores_per_sm,
+            issue_sched: cfg.issue_sched,
+            max_ctas: cfg.max_ctas_per_sm,
+            out_cap: cfg.icnt.inject_queue,
+            regs_total: cfg.regs_per_sm,
+            smem_total: cfg.smem_l1d_per_sm,
+            kernel: None,
+            warps: (0..cfg.warps_per_sm).map(|_| WarpState::empty()).collect(),
+            ctas: vec![CtaSlot::default(); cfg.max_ctas_per_sm],
+            subcores,
+            l0i: Cache::new(cfg.l0i.clone()),
+            l1i: Cache::new(cfg.l1i.clone()),
+            l1d: Cache::new(cfg.l1d.clone()),
+            ldst: LdstUnit::new(cfg.l1d.hit_latency, cfg.smem_latency),
+            ifetch_fill: Vec::new(),
+            out_port: VecDeque::new(),
+            in_port: VecDeque::new(),
+            stats: SmStats::default(),
+            strategy: StatsStrategy::PerSm,
+            shared: None,
+            free_regs: cfg.regs_per_sm,
+            free_smem: cfg.smem_l1d_per_sm,
+            resident_ctas: 0,
+            resident_warps: 0,
+            scratch_lines: Vec::with_capacity(64),
+            events: Vec::with_capacity(32),
+            subcore_slots: (0..cfg.subcores_per_sm)
+                .map(|sc| {
+                    (0..cfg.warps_per_sm)
+                        .filter(|w| w % cfg.subcores_per_sm == sc)
+                        .map(|w| w as u16)
+                        .collect()
+                })
+                .collect(),
+            order_scratch: Vec::with_capacity(cfg.warps_per_sm),
+        }
+    }
+
+    /// Configure the statistics strategy (paper §3 ablation).
+    pub fn set_stats_strategy(
+        &mut self,
+        strategy: StatsStrategy,
+        shared: Option<Arc<SharedLockedStats>>,
+    ) {
+        self.strategy = strategy;
+        self.shared = shared;
+    }
+
+    /// Prepare for a new kernel: bind it, flush caches (Accel-sim
+    /// semantics), assert the previous kernel drained.
+    pub fn begin_kernel(&mut self, kernel: Arc<KernelDesc>) {
+        debug_assert!(self.is_idle(), "SM {} not drained before new kernel", self.id);
+        self.kernel = Some(kernel);
+        self.l0i.flush();
+        self.l1i.flush();
+        self.l1d.flush();
+        self.ifetch_fill.clear();
+        for sc in &mut self.subcores {
+            sc.fetch_rr = 0;
+            sc.last_issued = None;
+            sc.lrr_next = 0;
+        }
+    }
+
+    pub fn end_kernel(&mut self) {
+        self.kernel = None;
+    }
+
+    /// Occupancy check for one more CTA of the bound kernel.
+    pub fn can_accept_cta(&self) -> bool {
+        let Some(k) = &self.kernel else { return false };
+        if self.resident_ctas >= self.max_ctas {
+            return false;
+        }
+        let wpc = k.warps_per_cta(self.warp_size);
+        if self.resident_warps + wpc > self.warps.len() {
+            return false;
+        }
+        let regs = k.regs_per_thread as u64 * k.block_threads as u64;
+        if regs > self.free_regs {
+            return false;
+        }
+        if k.smem_per_cta as u64 > self.free_smem {
+            return false;
+        }
+        self.ctas.iter().any(|c| !c.active)
+    }
+
+    /// Launch CTA `cta_id` (engine calls only after `can_accept_cta`).
+    pub fn launch_cta(&mut self, cta_id: u32) {
+        let k = self.kernel.as_ref().expect("kernel bound").clone();
+        let wpc = k.warps_per_cta(self.warp_size);
+        let slot = self.ctas.iter().position(|c| !c.active).expect("free CTA slot");
+        self.ctas[slot] = CtaSlot {
+            active: true,
+            cta_id,
+            warps_remaining: wpc as u16,
+            barrier_expected: wpc as u16,
+            barrier_arrived: 0,
+        };
+        let mut assigned = 0u16;
+        for w in 0..self.warps.len() {
+            if assigned as usize == wpc {
+                break;
+            }
+            if !self.warps[w].active && !self.is_slot_reserved(w) {
+                let lanes = k.active_lanes(assigned as u32, self.warp_size);
+                self.warps[w].launch(&k, slot as u8, cta_id, assigned, lanes);
+                assigned += 1;
+            }
+        }
+        debug_assert_eq!(assigned as usize, wpc);
+        self.free_regs -= k.regs_per_thread as u64 * k.block_threads as u64;
+        self.free_smem -= k.smem_per_cta as u64;
+        self.resident_ctas += 1;
+        self.resident_warps += wpc;
+        self.stats.ctas_launched += 1;
+    }
+
+    /// A warp slot is "reserved" if a finished warp still holds state the
+    /// pipeline may reference this cycle. We recycle eagerly; finished
+    /// warps are fully quiesced by construction (EXIT waits for pending
+    /// writes), so no reservation is needed.
+    fn is_slot_reserved(&self, _w: usize) -> bool {
+        false
+    }
+
+    /// Number of resident CTAs (engine's wave accounting / tests).
+    pub fn resident_ctas(&self) -> usize {
+        self.resident_ctas
+    }
+
+    pub fn resident_warps(&self) -> usize {
+        self.resident_warps
+    }
+
+    /// Fully drained? (kernel-completion check)
+    pub fn is_idle(&self) -> bool {
+        self.resident_ctas == 0
+            && self.out_port.is_empty()
+            && self.in_port.is_empty()
+            && self.ldst.is_idle()
+            && self.ifetch_fill.is_empty()
+            && self.subcores.iter().all(|s| s.exec.is_idle())
+    }
+
+    /// **The parallel hot path** — Algorithm 1 line 22, `SM.cycle()`.
+    /// Returns a work-unit estimate consumed by the speed-up cost model.
+    pub fn cycle(&mut self, now: u64) -> u32 {
+        // Hold the kernel by raw pointer for this cycle: `self.kernel` is
+        // never mutated between begin_kernel/end_kernel, and the Arc in
+        // `self` keeps the referent alive. (An Arc clone per SM-cycle —
+        // 2 atomics × 80 SMs × millions of cycles — measured ~5% of
+        // Sm::cycle in the perf profile.)
+        let kernel_ptr: *const KernelDesc = match &self.kernel {
+            Some(k) => std::sync::Arc::as_ptr(k),
+            None => return 0,
+        };
+        // SAFETY: see above; no method called below touches self.kernel.
+        let kernel: &KernelDesc = unsafe { &*kernel_ptr };
+        let mut work = 1u32;
+        self.stats.cycles += 1;
+        if self.resident_warps > 0 {
+            self.stats.active_cycles += 1;
+        } else if self.in_port.is_empty() && self.ldst.is_idle() {
+            return work; // nothing resident, nothing in flight
+        }
+
+        // ---- 1. responses from the interconnect (filled sequentially) ----
+        while let Some(pkt) = self.in_port.pop_front() {
+            debug_assert!(pkt.is_reply);
+            self.ldst.on_reply(pkt.req.line_addr, &mut self.l1d, &mut self.stats, &mut self.events);
+            work += 2;
+        }
+
+        // ---- 2. instruction-cache fills due this cycle ----
+        if !self.ifetch_fill.is_empty() {
+            let mut i = 0;
+            while i < self.ifetch_fill.len() {
+                if self.ifetch_fill[i].0 <= now {
+                    let (_, line) = self.ifetch_fill.swap_remove(i);
+                    self.l0i.fill(line);
+                    // release warps waiting on this line
+                    for w in &mut self.warps {
+                        if w.active && w.ifetch_pending {
+                            let pc_line =
+                                (kernel.code_base + w.pc_offset(kernel)) & !(crate::mem::LINE_BYTES - 1);
+                            if pc_line == line {
+                                w.ifetch_pending = false;
+                            }
+                        }
+                    }
+                    work += 1;
+                } else {
+                    i += 1;
+                }
+            }
+        }
+
+        // ---- 3. execution-pipeline retires (release scoreboard) ----
+        {
+            let (subcores, warps) = (&mut self.subcores, &mut self.warps);
+            for sc in subcores.iter_mut() {
+                work += sc.exec.retire_all(now, |w, d| {
+                    if let Some(d) = d {
+                        warps[w as usize].pending_writes.clear(d);
+                    }
+                });
+            }
+        }
+
+        // ---- 4. LD/ST unit ----
+        work += self.ldst.cycle(
+            now,
+            self.id,
+            &mut self.l1d,
+            &mut self.stats,
+            &mut self.out_port,
+            self.out_cap,
+            self.strategy,
+            self.shared.as_deref(),
+            &mut self.events,
+        );
+
+        // ---- 5. apply LD/ST completion events ----
+        for e in self.events.drain(..) {
+            match e {
+                LdstEvent::LoadDone { warp_slot, dst } | LdstEvent::SmemDone { warp_slot, dst } => {
+                    self.warps[warp_slot as usize].pending_writes.clear(dst);
+                }
+            }
+        }
+
+        // ---- 6. issue (one per sub-core) ----
+        let mut issued_total = 0u32;
+        for sc in 0..self.n_subcores {
+            issued_total += self.issue_subcore(sc, now, kernel);
+        }
+        if issued_total > 0 {
+            self.stats.busy_cycles += 1;
+        }
+        work += issued_total * 3;
+
+        // ---- 7. fetch/decode (one warp per sub-core) ----
+        for sc in 0..self.n_subcores {
+            work += self.fetch_subcore(sc, now, kernel);
+        }
+
+        work
+    }
+
+    /// Issue stage of one sub-core. Returns instructions issued (0/1).
+    fn issue_subcore(&mut self, sc: usize, now: u64, kernel: &KernelDesc) -> u32 {
+        // candidate warp slots of this sub-core, in scheduler order —
+        // built into the reusable scratch buffer (no allocation)
+        {
+            let slots = &self.subcore_slots[sc];
+            self.order_scratch.clear();
+            match self.issue_sched {
+                IssueSched::Gto => {
+                    if let Some(last) = self.subcores[sc].last_issued {
+                        self.order_scratch.push(last);
+                    }
+                    for &i in slots {
+                        if Some(i) != self.subcores[sc].last_issued {
+                            self.order_scratch.push(i);
+                        }
+                    }
+                }
+                IssueSched::Lrr => {
+                    let start = self.subcores[sc].lrr_next;
+                    let k = slots.len();
+                    for j in 0..k {
+                        self.order_scratch.push(slots[(start + j) % k]);
+                    }
+                }
+            }
+        }
+
+        let mut any_considered = false;
+        for idx in 0..self.order_scratch.len() {
+            let wslot = self.order_scratch[idx];
+            let w = wslot as usize;
+            if !self.warps[w].active || self.warps[w].finished {
+                continue;
+            }
+            any_considered = true;
+            if self.warps[w].at_barrier {
+                self.stats.stall_barrier += 1;
+                continue;
+            }
+            let Some(&head) = self.warps[w].ibuffer.front() else {
+                self.stats.stall_ibuffer_empty += 1;
+                continue;
+            };
+            // scoreboard (incl. EXIT's wait-for-quiesce)
+            if self.warps[w].exit_blocked(&head.tpl) {
+                self.stats.stall_scoreboard += 1;
+                continue;
+            }
+            let mask = WarpState::hazard_mask(&head.tpl);
+            if self.warps[w].pending_writes.intersects(&mask) {
+                self.stats.stall_scoreboard += 1;
+                continue;
+            }
+            // structural checks + dispatch
+            match head.tpl.op {
+                OpClass::LdGlobal | OpClass::StGlobal | OpClass::LdShared | OpClass::StShared => {
+                    if !self.ldst.can_enqueue()
+                        || (head.tpl.op == OpClass::LdGlobal && !self.ldst.has_free_load_slot())
+                    {
+                        self.stats.stall_ldst_structural += 1;
+                        continue;
+                    }
+                    self.dispatch_mem(wslot, head, kernel);
+                }
+                OpClass::Bar => {
+                    self.warps[w].ibuffer.pop_front();
+                    self.warps[w].at_barrier = true;
+                    self.stats.insts_bar += 1;
+                    let slot = self.warps[w].cta_slot as usize;
+                    self.ctas[slot].barrier_arrived += 1;
+                    if self.ctas[slot].barrier_arrived
+                        >= self.ctas[slot].warps_remaining.min(self.ctas[slot].barrier_expected)
+                    {
+                        // release: all live warps of the CTA arrived
+                        self.ctas[slot].barrier_arrived = 0;
+                        self.stats.barriers_completed += 1;
+                        for ow in &mut self.warps {
+                            if ow.active && ow.cta_slot as usize == slot {
+                                ow.at_barrier = false;
+                            }
+                        }
+                    }
+                }
+                OpClass::Exit => {
+                    self.warps[w].ibuffer.pop_front();
+                    self.retire_warp(wslot, kernel);
+                    self.stats.insts_ctrl += 1;
+                }
+                OpClass::Branch => {
+                    self.warps[w].ibuffer.pop_front();
+                    self.stats.insts_ctrl += 1;
+                }
+                op => {
+                    // ALU-class: needs a pipe slot
+                    let unit = op.unit();
+                    let pipe = self.subcores[sc].exec.pipe_mut(unit);
+                    if !pipe.can_issue(now) {
+                        self.stats.stall_exec_structural += 1;
+                        continue;
+                    }
+                    self.warps[w].ibuffer.pop_front();
+                    pipe.issue(now, wslot, head.tpl.dst);
+                    if let Some(d) = head.tpl.dst {
+                        self.warps[w].pending_writes.set(d);
+                    }
+                    match unit {
+                        Unit::Int => self.stats.insts_int += 1,
+                        Unit::Fp32 => self.stats.insts_fp32 += 1,
+                        Unit::Fp64 => self.stats.insts_fp64 += 1,
+                        Unit::Sfu => self.stats.insts_sfu += 1,
+                        Unit::Tensor => self.stats.insts_tensor += 1,
+                        _ => unreachable!(),
+                    }
+                }
+            }
+            // successful issue
+            self.stats.warp_insts_issued += 1;
+            self.stats.thread_insts += self.warps[w].lanes as u64;
+            if self.strategy == StatsStrategy::SharedLocked {
+                if let Some(s) = &self.shared {
+                    s.record_issue(1);
+                }
+            }
+            self.subcores[sc].last_issued = Some(wslot);
+            if self.issue_sched == IssueSched::Lrr {
+                // advance rotation past the issued warp
+                let slots = &self.subcore_slots[sc];
+                if let Some(pos) = slots.iter().position(|&s| s == wslot) {
+                    self.subcores[sc].lrr_next = (pos + 1) % slots.len();
+                }
+            }
+            return 1;
+        }
+        if any_considered {
+            self.stats.stall_no_ready_warp += 1;
+        }
+        0
+    }
+
+    /// Dispatch a memory instruction into the LD/ST unit.
+    fn dispatch_mem(&mut self, wslot: u16, head: warp::DecodedInst, kernel: &KernelDesc) {
+        let w = wslot as usize;
+        self.warps[w].ibuffer.pop_front();
+        let mem = head.tpl.mem.expect("mem op carries a template");
+        let is_shared = matches!(head.tpl.op, OpClass::LdShared | OpClass::StShared);
+        let mut lines: Vec<u64> = self.ldst.take_line_vec();
+        lines.clear();
+        if !is_shared {
+            let warp = &self.warps[w];
+            let tile_coord = match kernel.gemm {
+                Some(sem) => crate::trace::functional::tile_coord(&sem, warp.cta_id),
+                None => (warp.cta_id, 0),
+            };
+            let ctx = AccessCtx {
+                seed: kernel.seed,
+                cta: warp.cta_id,
+                warp_in_cta: warp.warp_in_cta as u32,
+                trip: head.trip,
+                stream: (head.code_off / 16) as u32,
+                active_lanes: warp.lanes,
+                tile_coord,
+            };
+            crate::trace::gen_line_addrs(&mem, &kernel.regions, &ctx, &mut lines);
+            if lines.is_empty() {
+                lines.push(kernel.regions[mem.region as usize].base);
+            }
+            self.stats.coalesced_from += self.warps[w].lanes as u64;
+            self.stats.coalesced_to += lines.len() as u64;
+        }
+        let load_slot = if head.tpl.op == OpClass::LdGlobal {
+            let dst = head.tpl.dst.expect("loads have a destination");
+            let slot = self.ldst.alloc_load_slot().expect("checked at issue");
+            self.ldst.register_load(slot, wslot, dst, lines.len() as u32);
+            self.warps[w].pending_writes.set(dst);
+            slot
+        } else {
+            if head.tpl.op == OpClass::LdShared {
+                if let Some(d) = head.tpl.dst {
+                    self.warps[w].pending_writes.set(d);
+                }
+            }
+            u16::MAX
+        };
+        match head.tpl.op {
+            OpClass::LdGlobal => self.stats.insts_ld += 1,
+            OpClass::StGlobal => self.stats.insts_st += 1,
+            _ => {} // shared counted at LD/ST processing time
+        }
+        self.ldst.enqueue(MemInst { warp_slot: wslot, inst: head, lines, next_line: 0, load_slot });
+    }
+
+    /// EXIT issued: free the warp, maybe the CTA.
+    fn retire_warp(&mut self, wslot: u16, kernel: &KernelDesc) {
+        let w = wslot as usize;
+        let slot = self.warps[w].cta_slot as usize;
+        self.warps[w].clear();
+        self.resident_warps -= 1;
+        self.stats.warps_completed += 1;
+        let cta = &mut self.ctas[slot];
+        cta.warps_remaining -= 1;
+        if cta.warps_remaining == 0 {
+            cta.active = false;
+            self.resident_ctas -= 1;
+            self.free_regs += kernel.regs_per_thread as u64 * kernel.block_threads as u64;
+            self.free_smem += kernel.smem_per_cta as u64;
+            self.stats.ctas_completed += 1;
+        } else if cta.barrier_arrived > 0 && cta.barrier_arrived >= cta.warps_remaining {
+            // a warp exited while siblings were parked at a barrier:
+            // re-evaluate the release condition to avoid deadlock
+            cta.barrier_arrived = 0;
+            self.stats.barriers_completed += 1;
+            for ow in &mut self.warps {
+                if ow.active && ow.cta_slot as usize == slot {
+                    ow.at_barrier = false;
+                }
+            }
+        }
+    }
+
+    /// Fetch/decode stage of one sub-core. Returns work units.
+    fn fetch_subcore(&mut self, sc: usize, now: u64, kernel: &KernelDesc) -> u32 {
+        let n = self.warps.len();
+        let per = n / self.n_subcores;
+        let start = self.subcores[sc].fetch_rr;
+        for j in 0..per {
+            let local = (start + j) % per;
+            let w = local * self.n_subcores + sc;
+            let warp = &self.warps[w];
+            if !warp.active || warp.fetch_done || warp.ifetch_pending || !warp.ibuffer_space() {
+                continue;
+            }
+            self.subcores[sc].fetch_rr = (local + 1) % per;
+            self.stats.fetch_requests += 1;
+            let pc = kernel.code_base + self.warps[w].pc_offset(kernel);
+            let line = pc & !(crate::mem::LINE_BYTES - 1);
+            let req = MemRequest {
+                line_addr: line,
+                is_write: false,
+                sm_id: self.id,
+                warp: WarpRef { warp_slot: w as u16, load_slot: u16::MAX },
+            };
+            match self.l0i.access_read(req) {
+                AccessOutcome::Hit => {
+                    self.stats.l0i_hits += 1;
+                    // decode up to IBUFFER_CAP instructions from this line
+                    for _ in 0..IBUFFER_CAP {
+                        if !self.warps[w].ibuffer_space() {
+                            break;
+                        }
+                        // stay within the fetched line
+                        let off = kernel.code_base + self.warps[w].pc_offset(kernel);
+                        if off & !(crate::mem::LINE_BYTES - 1) != line {
+                            break;
+                        }
+                        match self.warps[w].decode_next(kernel) {
+                            Some(d) => self.warps[w].ibuffer.push_back(d),
+                            None => break,
+                        }
+                    }
+                    return 2;
+                }
+                AccessOutcome::MissQueued => {
+                    self.stats.l0i_misses += 1;
+                    // L0 misses hit the SM-level L1i
+                    let penalty = if self.l1i.probe(line) {
+                        self.stats.l1i_hits += 1;
+                        4u64
+                    } else {
+                        self.stats.l1i_misses += 1;
+                        // install in L1i (timing carried by the penalty)
+                        if self.l1i.access_read(req) != AccessOutcome::ReservationFail {
+                            while self.l1i.pop_miss().is_some() {}
+                            self.l1i.fill(line);
+                        }
+                        L1I_MISS_PENALTY
+                    };
+                    while self.l0i.pop_miss().is_some() {}
+                    self.ifetch_fill.push((now + penalty, line));
+                    self.warps[w].ifetch_pending = true;
+                    return 1;
+                }
+                AccessOutcome::MissMerged => {
+                    self.stats.l0i_misses += 1;
+                    self.warps[w].ifetch_pending = true;
+                    return 1;
+                }
+                AccessOutcome::ReservationFail => {
+                    return 1; // retry next cycle
+                }
+            }
+        }
+        0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::{BBlock, InstTemplate, Program, Region, Trips};
+
+    fn tiny_cfg() -> GpuConfig {
+        GpuConfig::tiny()
+    }
+
+    fn alu_kernel(grid: u32, trips: u32, n_alu: u32) -> Arc<KernelDesc> {
+        let mut insts = Vec::new();
+        for i in 0..n_alu {
+            insts.push(InstTemplate::alu(OpClass::Ffma32, 8 + (i % 8) as u8, &[1, 2]));
+        }
+        insts.push(InstTemplate::branch());
+        Arc::new(KernelDesc {
+            name: "alu".into(),
+            grid_ctas: grid,
+            block_threads: 128,
+            regs_per_thread: 32,
+            smem_per_cta: 0,
+            regions: vec![Region { base: 0x1_0000_0000, bytes: 1 << 20 }],
+            program: Program::new(vec![BBlock { trips: Trips::Fixed(trips), insts }]),
+            code_base: 0x7000_0000,
+            seed: 3,
+            gemm: None,
+        })
+    }
+
+    fn run_to_completion(sm: &mut Sm, max_cycles: u64) -> u64 {
+        let mut now = 0;
+        while !(sm.is_idle()) {
+            sm.cycle(now);
+            now += 1;
+            assert!(now < max_cycles, "SM did not drain in {max_cycles} cycles");
+        }
+        now
+    }
+
+    #[test]
+    fn alu_kernel_completes() {
+        let cfg = tiny_cfg();
+        let mut sm = Sm::new(0, &cfg);
+        let k = alu_kernel(1, 4, 6);
+        sm.begin_kernel(k.clone());
+        assert!(sm.can_accept_cta());
+        sm.launch_cta(0);
+        assert_eq!(sm.resident_ctas(), 1);
+        assert_eq!(sm.resident_warps(), 4);
+        run_to_completion(&mut sm, 20_000);
+        assert_eq!(sm.stats.ctas_completed, 1);
+        assert_eq!(sm.stats.warps_completed, 4);
+        // 4 warps × (4 trips × 7 insts + exit)
+        assert_eq!(sm.stats.warp_insts_issued, 4 * (4 * 7 + 1));
+        assert_eq!(sm.stats.insts_fp32, 4 * 4 * 6);
+    }
+
+    #[test]
+    fn occupancy_limits_by_registers() {
+        let cfg = tiny_cfg();
+        let mut sm = Sm::new(0, &cfg);
+        let mut k = (*alu_kernel(8, 1, 2)).clone();
+        k.regs_per_thread = 255; // 255×128 = 32640 regs per CTA → 2 fit in 65536
+        let k = Arc::new(k);
+        sm.begin_kernel(k);
+        let mut launched = 0;
+        while sm.can_accept_cta() {
+            sm.launch_cta(launched);
+            launched += 1;
+        }
+        assert_eq!(launched, 2, "register file must limit occupancy");
+    }
+
+    #[test]
+    fn occupancy_limits_by_smem() {
+        let cfg = tiny_cfg();
+        let mut sm = Sm::new(0, &cfg);
+        let mut k = (*alu_kernel(8, 1, 2)).clone();
+        k.smem_per_cta = 48 * 1024; // 128KB / 48KB → 2 CTAs
+        let k = Arc::new(k);
+        sm.begin_kernel(k);
+        let mut launched = 0;
+        while sm.can_accept_cta() {
+            sm.launch_cta(launched);
+            launched += 1;
+        }
+        assert_eq!(launched, 2);
+    }
+
+    #[test]
+    fn barrier_synchronizes_whole_cta() {
+        let cfg = tiny_cfg();
+        let mut sm = Sm::new(0, &cfg);
+        let k = Arc::new(KernelDesc {
+            name: "bar".into(),
+            grid_ctas: 1,
+            block_threads: 128,
+            regs_per_thread: 16,
+            smem_per_cta: 0,
+            regions: vec![Region { base: 0x1_0000_0000, bytes: 1 << 20 }],
+            program: Program::new(vec![BBlock {
+                trips: Trips::Fixed(3),
+                insts: vec![
+                    InstTemplate::alu(OpClass::IAlu, 4, &[1]),
+                    InstTemplate::bar(),
+                ],
+            }]),
+            code_base: 0x7000_0000,
+            seed: 0,
+            gemm: None,
+        });
+        sm.begin_kernel(k);
+        sm.launch_cta(0);
+        run_to_completion(&mut sm, 20_000);
+        assert_eq!(sm.stats.barriers_completed, 3);
+        assert_eq!(sm.stats.insts_bar, 3 * 4);
+        assert_eq!(sm.stats.ctas_completed, 1);
+    }
+
+    #[test]
+    fn global_load_round_trip_via_ports() {
+        let cfg = tiny_cfg();
+        let mut sm = Sm::new(0, &cfg);
+        let mem = crate::trace::MemTemplate {
+            region: 0,
+            pattern: crate::trace::AddrPattern::Coalesced,
+            bytes_per_lane: 4,
+        };
+        let k = Arc::new(KernelDesc {
+            name: "ld".into(),
+            grid_ctas: 1,
+            block_threads: 32,
+            regs_per_thread: 16,
+            smem_per_cta: 0,
+            regions: vec![Region { base: 0x1_0000_0000, bytes: 1 << 20 }],
+            program: Program::new(vec![BBlock {
+                trips: Trips::Fixed(1),
+                insts: vec![
+                    InstTemplate::load(OpClass::LdGlobal, 9, 2, mem),
+                    InstTemplate::alu(OpClass::Ffma32, 10, &[9, 9]), // depends on load
+                ],
+            }]),
+            code_base: 0x7000_0000,
+            seed: 0,
+            gemm: None,
+        });
+        sm.begin_kernel(k);
+        sm.launch_cta(0);
+        // run until the SM emits the miss packet
+        let mut now = 0u64;
+        while sm.out_port.is_empty() {
+            sm.cycle(now);
+            now += 1;
+            assert!(now < 1000);
+        }
+        let pkt = sm.out_port.pop_front().unwrap();
+        assert!(!pkt.req.is_write);
+        assert_eq!(sm.stats.l1d_misses, 1);
+        // the dependent FMA must NOT have issued yet (scoreboard holds it)
+        assert_eq!(sm.stats.insts_fp32, 0);
+        // deliver the reply
+        let mut reply = pkt;
+        reply.is_reply = true;
+        sm.in_port.push_back(reply);
+        run_to_completion(&mut sm, 5_000);
+        assert_eq!(sm.stats.insts_fp32, 1, "dependent FMA issues after fill");
+        assert_eq!(sm.stats.warps_completed, 1);
+        assert_eq!(sm.stats.unique_lines.len(), 1);
+    }
+
+    #[test]
+    fn icache_miss_then_locality() {
+        let cfg = tiny_cfg();
+        let mut sm = Sm::new(0, &cfg);
+        let k = alu_kernel(1, 50, 4);
+        sm.begin_kernel(k);
+        sm.launch_cta(0);
+        run_to_completion(&mut sm, 50_000);
+        assert!(sm.stats.l0i_misses >= 1, "cold i-fetch must miss");
+        assert!(
+            sm.stats.l0i_hits > sm.stats.l0i_misses * 5,
+            "loop body must hit L0i: hits={} misses={}",
+            sm.stats.l0i_hits,
+            sm.stats.l0i_misses
+        );
+    }
+
+    #[test]
+    fn cycle_is_deterministic() {
+        let cfg = tiny_cfg();
+        let run = || {
+            let mut sm = Sm::new(0, &cfg);
+            sm.begin_kernel(alu_kernel(2, 8, 5));
+            sm.launch_cta(0);
+            sm.launch_cta(1);
+            let mut now = 0;
+            while !sm.is_idle() {
+                sm.cycle(now);
+                now += 1;
+            }
+            (now, sm.stats.clone())
+        };
+        let (c1, s1) = run();
+        let (c2, s2) = run();
+        assert_eq!(c1, c2);
+        assert_eq!(s1, s2);
+    }
+
+    #[test]
+    fn gto_vs_lrr_both_complete() {
+        let mut cfg = tiny_cfg();
+        for sched in [IssueSched::Gto, IssueSched::Lrr] {
+            cfg.issue_sched = sched;
+            let mut sm = Sm::new(0, &cfg);
+            sm.begin_kernel(alu_kernel(1, 4, 4));
+            sm.launch_cta(0);
+            run_to_completion(&mut sm, 20_000);
+            assert_eq!(sm.stats.ctas_completed, 1, "{sched:?}");
+        }
+    }
+}

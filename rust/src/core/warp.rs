@@ -1,0 +1,302 @@
+//! Per-warp execution state: program counter over the loop-program IR,
+//! instruction buffer, scoreboard.
+
+use std::collections::VecDeque;
+
+use crate::trace::{InstTemplate, KernelDesc, OpClass};
+use crate::util::RegBitset;
+
+/// A decoded, concrete warp instruction sitting in the i-buffer.
+#[derive(Debug, Clone, Copy)]
+pub struct DecodedInst {
+    pub tpl: InstTemplate,
+    /// Trip index of the enclosing block at decode time (drives address
+    /// generation for memory ops).
+    pub trip: u32,
+    /// Static code offset (distinguishes the access streams of different
+    /// static instructions).
+    pub code_off: u64,
+}
+
+/// Warp context (one of `warps_per_sm` hardware slots).
+#[derive(Debug)]
+pub struct WarpState {
+    /// Slot is populated with a live warp.
+    pub active: bool,
+    /// Index of the CTA slot this warp belongs to.
+    pub cta_slot: u8,
+    /// Global CTA id (for trip resolution / address generation).
+    pub cta_id: u32,
+    /// Warp index within its CTA.
+    pub warp_in_cta: u16,
+    /// Active lanes (last warp of a CTA may be partial).
+    pub lanes: u32,
+
+    // --- program counter over Program { blocks × trips × insts } ---
+    pub block: u16,
+    pub inst: u16,
+    pub trip: u32,
+    /// Resolved trip count of the current block.
+    pub trips_this_block: u32,
+    /// All blocks consumed; EXIT has been decoded.
+    pub fetch_done: bool,
+    /// EXIT has issued; warp is finished.
+    pub finished: bool,
+
+    /// Decoded instructions awaiting issue (capacity 2, like Accel-sim's
+    /// per-warp i-buffer).
+    pub ibuffer: VecDeque<DecodedInst>,
+    /// Scoreboard: registers with writes in flight.
+    pub pending_writes: RegBitset,
+    /// Warp is parked at a CTA barrier.
+    pub at_barrier: bool,
+    /// i-cache line requested, fill pending (avoid duplicate probes).
+    pub ifetch_pending: bool,
+}
+
+pub const IBUFFER_CAP: usize = 2;
+
+impl WarpState {
+    pub fn empty() -> Self {
+        WarpState {
+            active: false,
+            cta_slot: 0,
+            cta_id: 0,
+            warp_in_cta: 0,
+            lanes: 0,
+            block: 0,
+            inst: 0,
+            trip: 0,
+            trips_this_block: 0,
+            fetch_done: false,
+            finished: false,
+            ibuffer: VecDeque::with_capacity(IBUFFER_CAP),
+            pending_writes: RegBitset::new(),
+            at_barrier: false,
+            ifetch_pending: false,
+        }
+    }
+
+    /// Initialize the slot for a newly launched warp.
+    pub fn launch(&mut self, kernel: &KernelDesc, cta_slot: u8, cta_id: u32, warp_in_cta: u16, lanes: u32) {
+        self.active = true;
+        self.cta_slot = cta_slot;
+        self.cta_id = cta_id;
+        self.warp_in_cta = warp_in_cta;
+        self.lanes = lanes;
+        self.block = 0;
+        self.inst = 0;
+        self.trip = 0;
+        self.fetch_done = false;
+        self.finished = false;
+        self.ibuffer.clear();
+        self.pending_writes = RegBitset::new();
+        self.at_barrier = false;
+        self.ifetch_pending = false;
+        self.enter_block(kernel);
+    }
+
+    /// Resolve the trip count on block entry, skipping zero-trip blocks.
+    fn enter_block(&mut self, kernel: &KernelDesc) {
+        loop {
+            let blocks = &kernel.program.blocks;
+            if self.block as usize >= blocks.len() {
+                self.fetch_done = false; // EXIT still to decode
+                self.trips_this_block = 0;
+                return;
+            }
+            let b = &blocks[self.block as usize];
+            let trips =
+                b.trips.resolve(kernel.seed, self.cta_id, self.warp_in_cta as u32);
+            if trips == 0 || b.insts.is_empty() {
+                self.block += 1;
+                continue;
+            }
+            self.trips_this_block = trips;
+            self.trip = 0;
+            self.inst = 0;
+            return;
+        }
+    }
+
+    /// Virtual PC (code-segment offset) of the next instruction to decode.
+    pub fn pc_offset(&self, kernel: &KernelDesc) -> u64 {
+        if self.block as usize >= kernel.program.blocks.len() {
+            // implicit EXIT lives right after the last real instruction
+            (kernel.program.static_len() as u64) * 16
+        } else {
+            kernel.program.code_offset(self.block as usize, self.inst as usize)
+        }
+    }
+
+    /// Decode the next instruction (advancing the PC). Returns `None`
+    /// when the program (including EXIT) has been fully decoded.
+    pub fn decode_next(&mut self, kernel: &KernelDesc) -> Option<DecodedInst> {
+        if self.fetch_done {
+            return None;
+        }
+        let blocks = &kernel.program.blocks;
+        if self.block as usize >= blocks.len() {
+            self.fetch_done = true;
+            return Some(DecodedInst {
+                tpl: InstTemplate::exit(),
+                trip: 0,
+                code_off: (kernel.program.static_len() as u64) * 16,
+            });
+        }
+        let b = &blocks[self.block as usize];
+        let d = DecodedInst {
+            tpl: b.insts[self.inst as usize],
+            trip: self.trip,
+            code_off: kernel.program.code_offset(self.block as usize, self.inst as usize),
+        };
+        // advance
+        self.inst += 1;
+        if self.inst as usize == b.insts.len() {
+            self.inst = 0;
+            self.trip += 1;
+            if self.trip == self.trips_this_block {
+                self.block += 1;
+                self.enter_block(kernel);
+            }
+        }
+        Some(d)
+    }
+
+    /// Can this warp accept another decoded instruction?
+    pub fn ibuffer_space(&self) -> bool {
+        self.ibuffer.len() < IBUFFER_CAP
+    }
+
+    /// Registers read+written by an instruction, as a hazard mask.
+    pub fn hazard_mask(tpl: &InstTemplate) -> RegBitset {
+        let mut m = RegBitset::new();
+        for i in 0..tpl.n_srcs as usize {
+            m.set(tpl.srcs[i]);
+        }
+        if let Some(d) = tpl.dst {
+            m.set(d); // WAW
+        }
+        m
+    }
+
+    /// True when the head instruction only waits on EXIT semantics:
+    /// EXIT must not issue while any write is outstanding.
+    pub fn exit_blocked(&self, tpl: &InstTemplate) -> bool {
+        tpl.op == OpClass::Exit && self.pending_writes.any()
+    }
+
+    /// Release the slot.
+    pub fn clear(&mut self) {
+        self.active = false;
+        self.finished = true;
+        self.ibuffer.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::{BBlock, Program, Region, Trips};
+
+    fn kernel2blocks() -> KernelDesc {
+        KernelDesc {
+            name: "k".into(),
+            grid_ctas: 4,
+            block_threads: 64,
+            regs_per_thread: 16,
+            smem_per_cta: 0,
+            regions: vec![Region { base: 0, bytes: 1 << 20 }],
+            program: Program::new(vec![
+                BBlock {
+                    trips: Trips::Fixed(2),
+                    insts: vec![
+                        InstTemplate::alu(OpClass::IAlu, 1, &[2]),
+                        InstTemplate::alu(OpClass::Ffma32, 3, &[1, 1]),
+                    ],
+                },
+                BBlock { trips: Trips::Fixed(1), insts: vec![InstTemplate::bar()] },
+            ]),
+            code_base: 0x1000,
+            seed: 7,
+            gemm: None,
+        }
+    }
+
+    #[test]
+    fn decode_walks_blocks_trips_and_exit() {
+        let k = kernel2blocks();
+        let mut w = WarpState::empty();
+        w.launch(&k, 0, 1, 0, 32);
+        let mut ops = Vec::new();
+        while let Some(d) = w.decode_next(&k) {
+            ops.push(d.tpl.op);
+        }
+        assert_eq!(
+            ops,
+            vec![
+                OpClass::IAlu,
+                OpClass::Ffma32,
+                OpClass::IAlu,
+                OpClass::Ffma32,
+                OpClass::Bar,
+                OpClass::Exit
+            ]
+        );
+        assert!(w.fetch_done);
+        // dyn_len matches the decode walk
+        assert_eq!(ops.len() as u64, k.program.dyn_len(k.seed, 1, 0));
+    }
+
+    #[test]
+    fn trip_index_carried_into_decode() {
+        let k = kernel2blocks();
+        let mut w = WarpState::empty();
+        w.launch(&k, 0, 0, 0, 32);
+        let trips: Vec<u32> = std::iter::from_fn(|| w.decode_next(&k)).map(|d| d.trip).collect();
+        assert_eq!(trips, vec![0, 0, 1, 1, 0, 0]);
+    }
+
+    #[test]
+    fn pc_offsets_advance_and_repeat_on_loops() {
+        let k = kernel2blocks();
+        let mut w = WarpState::empty();
+        w.launch(&k, 0, 0, 0, 32);
+        assert_eq!(w.pc_offset(&k), 0);
+        w.decode_next(&k);
+        assert_eq!(w.pc_offset(&k), 16);
+        w.decode_next(&k);
+        // loop back to block start on trip 2
+        assert_eq!(w.pc_offset(&k), 0);
+    }
+
+    #[test]
+    fn zero_trip_blocks_skipped() {
+        let mut k = kernel2blocks();
+        k.program.blocks[0].trips = Trips::Fixed(0);
+        let mut w = WarpState::empty();
+        w.launch(&k, 0, 0, 0, 32);
+        let ops: Vec<OpClass> =
+            std::iter::from_fn(|| w.decode_next(&k)).map(|d| d.tpl.op).collect();
+        assert_eq!(ops, vec![OpClass::Bar, OpClass::Exit]);
+    }
+
+    #[test]
+    fn hazard_mask_includes_srcs_and_dst() {
+        let t = InstTemplate::alu(OpClass::Ffma32, 5, &[6, 7]);
+        let m = WarpState::hazard_mask(&t);
+        assert!(m.get(5) && m.get(6) && m.get(7));
+        assert!(!m.get(8));
+    }
+
+    #[test]
+    fn exit_blocks_on_pending_writes() {
+        let k = kernel2blocks();
+        let mut w = WarpState::empty();
+        w.launch(&k, 0, 0, 0, 32);
+        let exit = InstTemplate::exit();
+        assert!(!w.exit_blocked(&exit));
+        w.pending_writes.set(3);
+        assert!(w.exit_blocked(&exit));
+    }
+}

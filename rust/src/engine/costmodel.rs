@@ -1,0 +1,451 @@
+//! Parallel-speed-up cost model — how Fig 5 and Fig 6 are reproduced on a
+//! host with fewer cores than the paper's 24-core EPYC nodes.
+//!
+//! The paper measures wall-clock speed-up of the OpenMP-parallelized SM
+//! loop on real hardware. This container exposes a single core, so a
+//! direct measurement cannot show parallel speed-up; instead we *model*
+//! it from first principles, driven by **measured per-SM work**:
+//!
+//! 1. A sequential simulation records, for every cycle, the work units
+//!    each SM's `cycle()` performed (instructions issued, memory
+//!    transactions, pipeline activity — see [`crate::core::Sm::cycle`]).
+//! 2. Work units are calibrated against the measured wall-clock of the SM
+//!    section (`ns_per_work = sm_section_ns / total_work`).
+//! 3. For each (threads, schedule) configuration the model computes the
+//!    per-cycle **makespan**: OpenMP-static partitions are summed per
+//!    thread; OpenMP-dynamic is simulated as greedy chunk self-scheduling
+//!    with a per-chunk fetch cost. A per-region fork/join barrier cost is
+//!    added (both costs measurable on the host via
+//!    `benches/pool_overhead.rs`).
+//! 4. speed-up(T) = T_seq / T_par with
+//!    `T_seq = Σ_cycles Σ_sm work·ns_per_work + serial_ns` and
+//!    `T_par = Σ_cycles (makespan(T, sched) + barrier) + serial_ns`.
+//!
+//! This reproduces exactly the mechanics the paper attributes its results
+//! to: lavaMD's balanced thousands of CTAs parallelize nearly linearly,
+//! myocyte's 2 busy SMs gain nothing (and pay the barrier), cut_1's 20
+//! *contiguous* busy SMs starve a static contiguous partition but share
+//! fine dynamically (Fig 6), and the static/dynamic winner flips with
+//! thread count for irregular workloads like sssp.
+
+use crate::config::Schedule;
+
+/// Ratio of this substrate's per-simulated-cycle wall-clock to
+/// Accel-sim's (~20× leaner after the §Perf pass: Accel-sim simulates
+/// O(10³–10⁴) cycles/s single-threaded on hotspot-class workloads vs our
+/// ~4×10⁴–10⁵). Fixed pool overheads and the sequential memory phases
+/// weigh this much *less* in the paper's measurements.
+pub const ACCELSIM_REGIME_DISCOUNT: f64 = 0.05;
+
+/// Relative cost of an *idle* SM's `cycle()` vs one unit of busy-SM
+/// activity in the Accel-sim regime: Accel-sim's detailed busy-SM cycle
+/// (operand collectors, register banks, …) dwarfs the idle-SM early-out
+/// by ~20×, whereas this lean substrate's ratio is smaller. Used to
+/// build the paper-regime work vector `v[i] = activity[i] + IDLE_EPS`.
+pub const ACCELSIM_IDLE_WEIGHT: f64 = 0.05;
+
+/// Calibration constants (overridable from measurement).
+#[derive(Debug, Clone, Copy)]
+pub struct CostParams {
+    /// Nanoseconds per work unit (calibrated per run when measured data
+    /// is available; this is the fallback).
+    pub ns_per_work: f64,
+    /// Fork/join barrier cost per parallel region, as a function base +
+    /// slope·threads (OpenMP barriers scale roughly linearly on small
+    /// machines).
+    pub barrier_base_ns: f64,
+    pub barrier_per_thread_ns: f64,
+    /// Cost of one dynamic-schedule chunk fetch (contended atomic).
+    pub dynamic_fetch_ns: f64,
+    /// Per-iteration static bookkeeping (loop partition arithmetic).
+    pub static_iter_ns: f64,
+}
+
+impl Default for CostParams {
+    fn default() -> Self {
+        CostParams {
+            ns_per_work: 25.0,
+            barrier_base_ns: 400.0,
+            barrier_per_thread_ns: 120.0,
+            dynamic_fetch_ns: 45.0,
+            static_iter_ns: 2.0,
+        }
+    }
+}
+
+impl CostParams {
+    pub fn barrier_ns(&self, threads: usize) -> f64 {
+        self.barrier_base_ns + self.barrier_per_thread_ns * threads as f64
+    }
+}
+
+/// One (threads, schedule) configuration being modelled.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ModelConfig {
+    pub threads: usize,
+    pub schedule: Schedule,
+}
+
+/// Online accumulator: feed per-cycle work vectors, read speed-ups.
+///
+/// Work makespans and overhead terms are accumulated *separately*, so
+/// speed-ups can be evaluated in two regimes at read time:
+///
+/// * **this substrate** (`overhead_weight = 1.0`): overheads priced
+///   against this simulator's measured per-cycle cost;
+/// * **Accel-sim regime** (`overhead_weight ≈ 0.05`): the paper's
+///   substrate spends ~20× more wall-clock per simulated cycle
+///   (Accel-sim's detailed C++ SM model vs this lean Rust one), so a
+///   fixed fork/join barrier weighs ~20× *less* relative to a cycle.
+///   This is the regime Fig 5/6 of the paper were measured in.
+#[derive(Debug, Clone)]
+pub struct CostModel {
+    pub params: CostParams,
+    configs: Vec<ModelConfig>,
+    /// Accumulated pure work-makespan units per configuration.
+    par_units: Vec<f64>,
+    /// Same, under the Accel-sim-regime weight vector (activity + ε·idle).
+    par_units_paper: Vec<f64>,
+    /// Total paper-regime work units (sequential reference).
+    total_paper: f64,
+    /// Accumulated schedule bookkeeping events per configuration
+    /// (dynamic: chunks fetched; static: iterations partitioned).
+    sched_events: Vec<f64>,
+    /// Accumulated sequential SM-section work units.
+    total_work: u64,
+    cycles: u64,
+    /// Scratch: per-thread accumulation (max threads).
+    scratch: Vec<f64>,
+}
+
+impl CostModel {
+    pub fn new(configs: Vec<ModelConfig>, params: CostParams) -> Self {
+        let max_t = configs.iter().map(|c| c.threads).max().unwrap_or(1);
+        CostModel {
+            params,
+            par_units: vec![0.0; configs.len()],
+            par_units_paper: vec![0.0; configs.len()],
+            total_paper: 0.0,
+            sched_events: vec![0.0; configs.len()],
+            configs,
+            total_work: 0,
+            cycles: 0,
+            scratch: vec![0.0; max_t],
+        }
+    }
+
+    /// The paper's sweep: {2,4,8,16,24} threads × {static(def), dynamic,1}
+    /// plus static chunk-1 for the ablation.
+    pub fn paper_sweep(params: CostParams) -> Self {
+        let mut configs = Vec::new();
+        for &t in &[2usize, 4, 8, 16, 24] {
+            configs.push(ModelConfig { threads: t, schedule: Schedule::Static { chunk: 0 } });
+            configs.push(ModelConfig { threads: t, schedule: Schedule::Static { chunk: 1 } });
+            configs.push(ModelConfig { threads: t, schedule: Schedule::Dynamic { chunk: 1 } });
+        }
+        Self::new(configs, params)
+    }
+
+    pub fn configs(&self) -> &[ModelConfig] {
+        &self.configs
+    }
+
+    /// Makespan of one cycle under a schedule, for an arbitrary per-SM
+    /// weight accessor. Returns (makespan, per-thread schedule events).
+    fn makespan(
+        scratch: &mut [f64],
+        n: usize,
+        schedule: Schedule,
+        threads: usize,
+        weight: impl Fn(usize) -> f64,
+    ) -> (f64, f64) {
+        let s = &mut scratch[..threads];
+        s.iter_mut().for_each(|x| *x = 0.0);
+        match schedule {
+            Schedule::Static { chunk } => {
+                if chunk == 0 {
+                    // contiguous blocks (OpenMP schedule(static) default)
+                    let per = (n + threads - 1) / threads;
+                    for i in 0..n {
+                        s[(i / per).min(threads - 1)] += weight(i);
+                    }
+                } else {
+                    for i in 0..n {
+                        s[(i / chunk) % threads] += weight(i);
+                    }
+                }
+                (s.iter().cloned().fold(0.0f64, f64::max), n as f64 / threads as f64)
+            }
+            Schedule::Dynamic { chunk } => {
+                let c = chunk.max(1);
+                let mut chunks = 0f64;
+                let mut i = 0;
+                while i < n {
+                    // greedy: next chunk goes to the least-loaded thread
+                    let (tmin, _) =
+                        s.iter().enumerate().fold((0usize, f64::MAX), |acc, (ti, &v)| {
+                            if v < acc.1 {
+                                (ti, v)
+                            } else {
+                                acc
+                            }
+                        });
+                    let hi = (i + c).min(n);
+                    let mut w = 0.0;
+                    for j in i..hi {
+                        w += weight(j);
+                    }
+                    s[tmin] += w;
+                    chunks += 1.0;
+                    i = hi;
+                }
+                (s.iter().cloned().fold(0.0f64, f64::max), chunks / threads as f64)
+            }
+        }
+    }
+
+    /// Feed the measured per-SM work of one simulated cycle.
+    pub fn record_cycle(&mut self, work: &[u32]) {
+        self.cycles += 1;
+        let cycle_work: u64 = work.iter().map(|&w| w as u64).sum();
+        self.total_work += cycle_work;
+        // paper-regime weights: busy activity (work − idle base of 1)
+        // plus a small idle weight — see ACCELSIM_IDLE_WEIGHT.
+        let paper_w = |i: usize, w: &[u32]| {
+            (w[i].saturating_sub(1)) as f64 + ACCELSIM_IDLE_WEIGHT
+        };
+        self.total_paper += (0..work.len()).map(|i| paper_w(i, work)).sum::<f64>();
+        for (ci, cfg) in self.configs.iter().enumerate() {
+            let t = cfg.threads;
+            let (m1, events) = Self::makespan(
+                &mut self.scratch,
+                work.len(),
+                cfg.schedule,
+                t,
+                |i| work[i] as f64,
+            );
+            let (m2, _) = Self::makespan(
+                &mut self.scratch,
+                work.len(),
+                cfg.schedule,
+                t,
+                |i| paper_w(i, work),
+            );
+            self.par_units[ci] += m1;
+            self.par_units_paper[ci] += m2;
+            self.sched_events[ci] += events;
+        }
+    }
+
+    /// Total modelled sequential SM-section time (ns).
+    pub fn seq_sm_ns(&self) -> f64 {
+        self.total_work as f64 * self.params.ns_per_work
+    }
+
+    /// Recalibrate `ns_per_work` against a *measured* sequential SM
+    /// section. Work makespans are stored in units, so this is a simple
+    /// parameter update; call once at end of run.
+    pub fn calibrate(&mut self, measured_sm_section_ns: f64) {
+        if self.total_work == 0 || measured_sm_section_ns <= 0.0 {
+            return;
+        }
+        self.params.ns_per_work = measured_sm_section_ns / self.total_work as f64;
+    }
+
+    /// Modelled speed-up of configuration `ci` with overheads weighted by
+    /// `overhead_weight` (1.0 = this substrate; see struct docs).
+    /// `serial_ns` is the measured sequential (non-SM) section.
+    pub fn speedup_regime(&self, ci: usize, serial_ns: f64, overhead_weight: f64) -> f64 {
+        let npw = self.params.ns_per_work;
+        let t = self.configs[ci].threads;
+        let per_event_ns = match self.configs[ci].schedule {
+            Schedule::Static { .. } => self.params.static_iter_ns,
+            Schedule::Dynamic { .. } => self.params.dynamic_fetch_ns,
+        };
+        let overhead_ns = (self.cycles as f64 * self.params.barrier_ns(t)
+            + self.sched_events[ci] * per_event_ns)
+            * overhead_weight;
+        let t_seq = self.seq_sm_ns() + serial_ns;
+        let t_par = self.par_units[ci] * npw + overhead_ns + serial_ns;
+        if t_par <= 0.0 {
+            return 1.0;
+        }
+        t_seq / t_par
+    }
+
+    /// Speed-up priced against this substrate's measured costs.
+    pub fn speedup(&self, ci: usize, serial_ns: f64) -> f64 {
+        self.speedup_regime(ci, serial_ns, 1.0)
+    }
+
+    /// The Accel-sim regime (the Fig-5/6 comparison): busy-SM work priced
+    /// ~20× heavier (`1/ACCELSIM_REGIME_DISCOUNT`), idle SMs at
+    /// `ACCELSIM_IDLE_WEIGHT` of one activity unit, pool overheads and
+    /// the serial section at their measured absolute cost.
+    pub fn speedup_paper_regime(&self, ci: usize, serial_ns: f64) -> f64 {
+        let npw_paper = self.params.ns_per_work / ACCELSIM_REGIME_DISCOUNT;
+        let t = self.configs[ci].threads;
+        let per_event_ns = match self.configs[ci].schedule {
+            Schedule::Static { .. } => self.params.static_iter_ns,
+            Schedule::Dynamic { .. } => self.params.dynamic_fetch_ns,
+        };
+        let overhead_ns = self.cycles as f64 * self.params.barrier_ns(t)
+            + self.sched_events[ci] * per_event_ns;
+        let t_seq = self.total_paper * npw_paper + serial_ns;
+        let t_par = self.par_units_paper[ci] * npw_paper + overhead_ns + serial_ns;
+        if t_par <= 0.0 {
+            return 1.0;
+        }
+        t_seq / t_par
+    }
+
+    /// Find a configuration's index.
+    pub fn find(&self, threads: usize, schedule: Schedule) -> Option<usize> {
+        self.configs.iter().position(|c| c.threads == threads && c.schedule == schedule)
+    }
+
+    pub fn cycles(&self) -> u64 {
+        self.cycles
+    }
+
+    pub fn total_work(&self) -> u64 {
+        self.total_work
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model(configs: Vec<ModelConfig>) -> CostModel {
+        CostModel::new(configs, CostParams::default())
+    }
+
+    fn cfgs(t: usize) -> Vec<ModelConfig> {
+        vec![
+            ModelConfig { threads: t, schedule: Schedule::Static { chunk: 0 } },
+            ModelConfig { threads: t, schedule: Schedule::Static { chunk: 1 } },
+            ModelConfig { threads: t, schedule: Schedule::Dynamic { chunk: 1 } },
+        ]
+    }
+
+    #[test]
+    fn balanced_work_speeds_up_nearly_linearly() {
+        let mut m = model(cfgs(8));
+        // 80 SMs, all equally busy, heavy work (barrier amortized)
+        for _ in 0..1000 {
+            m.record_cycle(&[1000u32; 80]);
+        }
+        let s = m.speedup(m.find(8, Schedule::Static { chunk: 0 }).unwrap(), 0.0);
+        assert!(s > 6.5 && s <= 8.0, "balanced static speedup {s}");
+    }
+
+    #[test]
+    fn two_busy_sms_gain_nothing_like_myocyte() {
+        // myocyte: 2 busy SMs with realistic per-cycle work (~150 units
+        // ≈ 4µs/cycle) — the per-cycle fork/join barrier eats the 2×
+        // that two busy SMs could theoretically give.
+        let mut m = model(cfgs(16));
+        let mut work = [1u32; 80];
+        work[0] = 150;
+        work[1] = 150;
+        for _ in 0..1000 {
+            m.record_cycle(&work);
+        }
+        for ci in 0..3 {
+            let s = m.speedup(ci, 0.0);
+            assert!(s < 1.6, "myocyte-like config {ci} speedup {s}");
+        }
+    }
+
+    #[test]
+    fn contiguous_busy_block_starves_static_contiguous_like_cut1() {
+        // 20 busy SMs at indices 0..20 on 80 SMs, 2 threads:
+        // static contiguous → thread 0 gets all busy SMs → ≈1×
+        // dynamic chunk-1 → shared → ≈2×
+        let mut m = model(cfgs(2));
+        let mut work = [1u32; 80];
+        for w in work.iter_mut().take(20) {
+            *w = 3000;
+        }
+        for _ in 0..1000 {
+            m.record_cycle(&work);
+        }
+        let s_static = m.speedup(m.find(2, Schedule::Static { chunk: 0 }).unwrap(), 0.0);
+        let s_dyn = m.speedup(m.find(2, Schedule::Dynamic { chunk: 1 }).unwrap(), 0.0);
+        assert!(s_static < 1.15, "static contiguous {s_static}");
+        assert!(s_dyn > 1.5, "dynamic {s_dyn}");
+        assert!(s_dyn > s_static * 1.3);
+    }
+
+    #[test]
+    fn dynamic_overhead_hurts_balanced_loops_like_cut2() {
+        let mut m = model(cfgs(2));
+        for _ in 0..2000 {
+            m.record_cycle(&[60u32; 80]); // light, balanced
+        }
+        let s_static = m.speedup(m.find(2, Schedule::Static { chunk: 0 }).unwrap(), 0.0);
+        let s_dyn = m.speedup(m.find(2, Schedule::Dynamic { chunk: 1 }).unwrap(), 0.0);
+        assert!(s_static > s_dyn, "static {s_static} must beat dynamic {s_dyn} when balanced");
+    }
+
+    #[test]
+    fn serial_section_caps_speedup_amdahl() {
+        let mut m = model(cfgs(16));
+        for _ in 0..100 {
+            m.record_cycle(&[100u32; 80]);
+        }
+        let no_serial = m.speedup(0, 0.0);
+        let with_serial = m.speedup(0, m.seq_sm_ns()); // serial == SM work
+        assert!(with_serial < no_serial);
+        assert!(with_serial < 2.0, "Amdahl bound: {with_serial}");
+    }
+
+    #[test]
+    fn calibration_rescales_consistently() {
+        let mut a = model(cfgs(4));
+        let mut b = model(cfgs(4));
+        for _ in 0..500 {
+            a.record_cycle(&[100u32; 80]);
+            b.record_cycle(&[100u32; 80]);
+        }
+        // calibrating to the default implied time must be a no-op
+        let implied = a.seq_sm_ns();
+        a.calibrate(implied);
+        for ci in 0..3 {
+            let sa = a.speedup(ci, 0.0);
+            let sb = b.speedup(ci, 0.0);
+            assert!((sa - sb).abs() < 1e-9, "{sa} vs {sb}");
+        }
+        // calibrating to 10× slower work → barrier matters 10× less →
+        // speedup must not decrease
+        let mut c = model(cfgs(4));
+        for _ in 0..500 {
+            c.record_cycle(&[100u32; 80]);
+        }
+        c.calibrate(implied * 10.0);
+        assert!(c.speedup(0, 0.0) >= b.speedup(0, 0.0) - 1e-9);
+    }
+
+    #[test]
+    fn paper_regime_discounts_overheads() {
+        // light balanced work where the barrier hurts this substrate:
+        // the Accel-sim regime must recover most of the ideal speed-up
+        let mut m = model(cfgs(16));
+        for _ in 0..500 {
+            m.record_cycle(&[60u32; 80]);
+        }
+        let this_sub = m.speedup(0, 0.0);
+        let paper = m.speedup_paper_regime(0, 0.0);
+        assert!(paper > this_sub, "discounted overheads ⇒ higher speed-up");
+        assert!(paper > 8.0, "balanced 80-SM work @16t in paper regime: {paper}");
+    }
+
+    #[test]
+    fn paper_sweep_has_all_configs() {
+        let m = CostModel::paper_sweep(CostParams::default());
+        assert_eq!(m.configs().len(), 15);
+        assert!(m.find(16, Schedule::Dynamic { chunk: 1 }).is_some());
+        assert!(m.find(24, Schedule::Static { chunk: 0 }).is_some());
+    }
+}

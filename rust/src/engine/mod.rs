@@ -1,0 +1,550 @@
+//! The simulation engine — Algorithm 1 of the paper, with the SM loop
+//! parallelized exactly as §3 describes.
+//!
+//! Per GPU cycle:
+//!
+//! ```text
+//! doIcntToSm()                      sequential   (replies → SM in-ports)
+//! doMemSubpartitionToIcnt()         sequential
+//! memPartition.DramCycle()          sequential
+//! doIcntToMemSubpartition()+L2      sequential
+//! doIcntScheduling()                sequential   (incl. SM out-port drain)
+//! #pragma omp parallel for          ← the paper's contribution
+//! for SM in SMs: SM.cycle()
+//! gpuCycle++
+//! issueBlocksToSMs()                sequential
+//! ```
+//!
+//! During the parallel section each SM touches only its own state and its
+//! own ports ([`crate::core::Sm`]'s contract), so the simulation is
+//! **bit-deterministic for any thread count and schedule** — the paper's
+//! headline property, asserted by `tests/determinism.rs`.
+
+pub mod costmodel;
+pub mod pool;
+
+use std::marker::PhantomData;
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::config::{FunctionalMode, GpuConfig, SimConfig, StatsStrategy};
+use crate::core::Sm;
+use crate::icnt::{Icnt, Packet};
+use crate::mem::{subpartition_of, MemPartition};
+use crate::profiler::{Phase, PhaseProfiler};
+use crate::stats::{AddrSet, GpuStats, KernelStats, MemStats, SharedLockedStats, SmStats};
+use crate::trace::{functional, GemmSemantics, KernelDesc, WorkloadSpec};
+
+use costmodel::CostModel;
+use pool::ThreadPool;
+
+/// Hands out disjoint `&mut T` by index across threads.
+///
+/// # Safety contract
+/// The scheduler ([`ThreadPool::parallel_for`]) delivers every index
+/// exactly once per region, so no two threads ever hold `&mut` to the
+/// same element, and the region's join synchronizes all writes before the
+/// owner touches the slice again.
+pub struct DisjointSlice<'a, T> {
+    ptr: *mut T,
+    len: usize,
+    _marker: PhantomData<&'a mut [T]>,
+}
+
+unsafe impl<T: Send> Sync for DisjointSlice<'_, T> {}
+
+impl<'a, T> DisjointSlice<'a, T> {
+    pub fn new(slice: &'a mut [T]) -> Self {
+        DisjointSlice { ptr: slice.as_mut_ptr(), len: slice.len(), _marker: PhantomData }
+    }
+
+    /// # Safety
+    /// Caller must guarantee `i` is handed to at most one thread per
+    /// region (the pool's schedule does).
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn get_mut(&self, i: usize) -> &mut T {
+        debug_assert!(i < self.len);
+        &mut *self.ptr.add(i)
+    }
+}
+
+/// Functional output of a GEMM-family kernel (for XLA cross-validation).
+#[derive(Debug, Clone)]
+pub struct FunctionalResult {
+    pub kernel_name: String,
+    pub sem: GemmSemantics,
+    /// C = A·B computed by replaying the trace's CTA tiles in dispatch
+    /// order.
+    pub c: Vec<f32>,
+}
+
+/// The GPU simulator.
+pub struct GpuSim {
+    pub gpu: GpuConfig,
+    pub sim: SimConfig,
+    sms: Vec<Sm>,
+    partitions: Vec<MemPartition>,
+    icnt: Icnt,
+    pool: Option<ThreadPool>,
+    shared_stats: Arc<SharedLockedStats>,
+    /// §3 SeqPoint strategy: the global unique-address set, updated only
+    /// at the sequential out-port drain.
+    seqpoint_lines: AddrSet,
+    pub profiler: PhaseProfiler,
+    /// Per-SM work of the last cycle (cost-model feed).
+    work_buf: Vec<u32>,
+    pub cost_model: Option<CostModel>,
+    gpu_cycle: u64,
+    // per-kernel dispatch state
+    next_cta: u32,
+    total_ctas: u32,
+    last_issue_sm: usize,
+    /// CTA dispatch order of the current kernel (functional replay).
+    cta_order: Vec<u32>,
+    /// Functional results of GEMM-family kernels (FunctionalMode::Full).
+    pub functional_results: Vec<FunctionalResult>,
+}
+
+impl GpuSim {
+    pub fn new(gpu: GpuConfig, sim: SimConfig) -> Self {
+        gpu.validate().expect("invalid GPU config");
+        let shared = Arc::new(SharedLockedStats::new());
+        let mut sms: Vec<Sm> = (0..gpu.num_sms).map(|i| Sm::new(i as u32, &gpu)).collect();
+        for sm in &mut sms {
+            let sh = if sim.stats_strategy == StatsStrategy::SharedLocked {
+                Some(shared.clone())
+            } else {
+                None
+            };
+            sm.set_stats_strategy(sim.stats_strategy, sh);
+        }
+        let partitions =
+            (0..gpu.num_mem_partitions).map(|i| MemPartition::new(i, &gpu)).collect();
+        let icnt = Icnt::new(gpu.icnt.clone(), gpu.icnt_nodes());
+        let pool = if sim.threads > 1 { Some(ThreadPool::new(sim.threads)) } else { None };
+        let profile = sim.profile || sim.measure_work;
+        let profiler = PhaseProfiler::new(profile, sim.profile_sample);
+        let cost_model = if sim.measure_work {
+            Some(CostModel::paper_sweep(costmodel::CostParams::default()))
+        } else {
+            None
+        };
+        let n = gpu.num_sms;
+        GpuSim {
+            gpu,
+            sim,
+            sms,
+            partitions,
+            icnt,
+            pool,
+            shared_stats: shared,
+            seqpoint_lines: AddrSet::default(),
+            profiler,
+            work_buf: vec![0; n],
+            cost_model,
+            gpu_cycle: 0,
+            next_cta: 0,
+            total_ctas: 0,
+            last_issue_sm: 0,
+            cta_order: Vec::new(),
+            functional_results: Vec::new(),
+        }
+    }
+
+    pub fn gpu_cycle(&self) -> u64 {
+        self.gpu_cycle
+    }
+
+    /// One GPU cycle — Algorithm 1's `cycle()`.
+    pub fn cycle(&mut self) {
+        let now = self.gpu_cycle;
+        let n_sms = self.sms.len();
+        self.profiler.begin_cycle();
+
+        // ---- doIcntToSm: deliver arrived replies to SM in-ports ----
+        let m = self.profiler.mark();
+        for i in 0..n_sms {
+            while let Some(pkt) = self.icnt.eject(i) {
+                debug_assert!(pkt.is_reply);
+                self.sms[i].in_port.push_back(pkt);
+            }
+        }
+        self.profiler.record(Phase::IcntToSm, m);
+
+        // ---- doMemSubpartitionToIcnt: inject L2 replies ----
+        let m = self.profiler.mark();
+        for p in &mut self.partitions {
+            for s in &mut p.subs {
+                let src = (n_sms + s.id) as u32;
+                while let Some(req) = s.pop_reply(now) {
+                    let pkt = Packet {
+                        req,
+                        is_reply: true,
+                        src,
+                        dst: req.sm_id,
+                        size_bytes: req.reply_bytes(),
+                        ready_cycle: 0,
+                        seq: 0,
+                    };
+                    self.icnt.inject(pkt, now);
+                }
+            }
+        }
+        self.profiler.record(Phase::MemToIcnt, m);
+
+        // ---- DramCycle per partition ----
+        let m = self.profiler.mark();
+        for p in &mut self.partitions {
+            p.dram_cycle();
+        }
+        self.profiler.record(Phase::Dram, m);
+
+        // ---- doIcntToMemSubpartition + cacheCycle ----
+        let m = self.profiler.mark();
+        for p in &mut self.partitions {
+            for s in &mut p.subs {
+                let node = n_sms + s.id;
+                while s.can_accept() {
+                    match self.icnt.eject(node) {
+                        Some(pkt) => s.push_request(pkt.req),
+                        None => break,
+                    }
+                }
+            }
+            p.cache_cycle(now);
+        }
+        self.profiler.record(Phase::L2Cache, m);
+
+        // ---- doIcntScheduling: crossbar transfer + SM out-port drain ----
+        let m = self.profiler.mark();
+        let n_total_subs = self.gpu.num_subpartitions();
+        for i in 0..n_sms {
+            let sm = &mut self.sms[i];
+            while let Some(mut pkt) = sm.out_port.pop_front() {
+                pkt.dst = (n_sms as u32) + subpartition_of(pkt.req.line_addr, n_total_subs);
+                self.icnt.inject(pkt, now);
+            }
+            // §3 SeqPoint: fold per-SM address buffers into the global set
+            // at this guaranteed-sequential point.
+            if self.sim.stats_strategy == StatsStrategy::SeqPoint {
+                for addr in sm.stats.addr_buffer.drain(..) {
+                    self.seqpoint_lines.insert(addr);
+                }
+            }
+        }
+        self.icnt.transfer(now);
+        self.profiler.record(Phase::IcntSched, m);
+
+        // ---- the parallel SM section (paper §3) ----
+        let m = self.profiler.mark();
+        {
+            let Self { pool, sms, work_buf, sim, .. } = self;
+            match pool {
+                Some(pool) => {
+                    let sms_ds = DisjointSlice::new(sms.as_mut_slice());
+                    let work_ds = DisjointSlice::new(work_buf.as_mut_slice());
+                    pool.parallel_for(n_sms, sim.schedule, |i| {
+                        // SAFETY: each index visited exactly once per region.
+                        let w = unsafe { sms_ds.get_mut(i) }.cycle(now);
+                        unsafe { *work_ds.get_mut(i) = w };
+                    });
+                }
+                None => {
+                    for i in 0..n_sms {
+                        work_buf[i] = sms[i].cycle(now);
+                    }
+                }
+            }
+        }
+        self.profiler.record(Phase::SmCycle, m);
+        if let Some(cm) = &mut self.cost_model {
+            cm.record_cycle(&self.work_buf);
+        }
+
+        self.gpu_cycle += 1;
+
+        // ---- issueBlocksToSMs ----
+        let m = self.profiler.mark();
+        self.issue_blocks();
+        self.profiler.record(Phase::Issue, m);
+    }
+
+    /// Round-robin CTA dispatch, at most one new CTA per SM per cycle.
+    fn issue_blocks(&mut self) {
+        if self.next_cta >= self.total_ctas {
+            return;
+        }
+        let n = self.sms.len();
+        let start = self.last_issue_sm; // rotation base for this phase
+        for k in 0..n {
+            if self.next_cta >= self.total_ctas {
+                break;
+            }
+            let i = (start + 1 + k) % n;
+            if self.sms[i].can_accept_cta() {
+                self.sms[i].launch_cta(self.next_cta);
+                self.cta_order.push(self.next_cta);
+                self.next_cta += 1;
+                self.last_issue_sm = i;
+            }
+        }
+    }
+
+    fn all_idle(&self) -> bool {
+        self.icnt.is_idle()
+            && self.sms.iter().all(|s| s.is_idle())
+            && self.partitions.iter().all(|p| p.is_idle())
+    }
+
+    /// Simulate one kernel launch to completion.
+    pub fn run_kernel(&mut self, kd: &KernelDesc, kernel_id: usize) -> KernelStats {
+        let arc = Arc::new(kd.clone());
+        for sm in &mut self.sms {
+            sm.stats.reset();
+            sm.begin_kernel(arc.clone());
+        }
+        for p in &mut self.partitions {
+            p.reset_stats();
+            p.flush();
+        }
+        self.icnt.flush();
+        self.seqpoint_lines.clear();
+        if self.sim.stats_strategy == StatsStrategy::SharedLocked {
+            self.shared_stats.reset();
+        }
+        self.next_cta = 0;
+        self.total_ctas = kd.grid_ctas;
+        self.last_issue_sm = self.sms.len() - 1;
+        self.cta_order.clear();
+        let start_cycle = self.gpu_cycle;
+        let guard = if self.sim.max_cycles == 0 { 500_000_000 } else { self.sim.max_cycles };
+
+        self.issue_blocks();
+        loop {
+            self.cycle();
+            if self.next_cta >= self.total_ctas && self.all_idle() {
+                break;
+            }
+            assert!(
+                self.gpu_cycle - start_cycle < guard,
+                "kernel {} exceeded {guard} cycles (deadlock?)",
+                kd.name
+            );
+        }
+        // final SeqPoint drain (buffers filled in the last parallel phase)
+        if self.sim.stats_strategy == StatsStrategy::SeqPoint {
+            for i in 0..self.sms.len() {
+                let sm = &mut self.sms[i];
+                for addr in sm.stats.addr_buffer.drain(..) {
+                    self.seqpoint_lines.insert(addr);
+                }
+            }
+        }
+
+        let cycles = self.gpu_cycle - start_cycle;
+        let per_sm: Vec<SmStats> = self.sms.iter().map(|s| s.stats.clone()).collect();
+        let mem: Vec<MemStats> =
+            self.partitions.iter().flat_map(|p| p.collect_stats()).collect();
+        let global_lines = match self.sim.stats_strategy {
+            StatsStrategy::PerSm => None,
+            StatsStrategy::SeqPoint => {
+                Some((self.seqpoint_lines.len() as u64, self.seqpoint_lines.fingerprint()))
+            }
+            StatsStrategy::SharedLocked => {
+                let (_, _, uniq) = self.shared_stats.snapshot();
+                Some((uniq, self.shared_stats.unique_lines_fingerprint()))
+            }
+        };
+        for sm in &mut self.sms {
+            sm.end_kernel();
+        }
+
+        // functional replay for GEMM-family kernels
+        if self.sim.functional == FunctionalMode::Full {
+            if let Some(sem) = kd.gemm {
+                let a = functional::gen_matrix(kd.seed ^ 0xA, sem.m as usize, sem.k as usize);
+                let b = functional::gen_matrix(kd.seed ^ 0xB, sem.k as usize, sem.n as usize);
+                let c = functional::gemm_replay(&a, &b, &sem, &self.cta_order);
+                self.functional_results.push(FunctionalResult {
+                    kernel_name: kd.name.clone(),
+                    sem,
+                    c,
+                });
+            }
+        }
+
+        KernelStats::aggregate(
+            &kd.name,
+            kernel_id,
+            cycles,
+            kd.grid_ctas as u64,
+            per_sm,
+            &mem,
+            global_lines,
+        )
+    }
+
+    /// Simulate a full workload (all kernel launches, in order).
+    pub fn run_workload(&mut self, wl: &WorkloadSpec) -> GpuStats {
+        let t0 = Instant::now();
+        self.profiler.reset();
+        self.functional_results.clear();
+        let mut kernels = Vec::with_capacity(wl.kernels.len());
+        for (i, kd) in wl.kernels.iter().enumerate() {
+            kernels.push(self.run_kernel(kd, i));
+        }
+        let total_gpu_cycles = kernels.iter().map(|k| k.cycles).sum();
+        let mut stats = GpuStats {
+            workload: wl.name.clone(),
+            kernels,
+            sim_wallclock_s: t0.elapsed().as_secs_f64(),
+            sm_section_s: self.profiler.sm_section_s(),
+            total_gpu_cycles,
+        };
+        // calibrate the cost model against measured time
+        if let Some(cm) = &mut self.cost_model {
+            if stats.sm_section_s > 0.0 {
+                cm.calibrate(stats.sm_section_s * 1e9);
+            }
+        }
+        if stats.sm_section_s == 0.0 {
+            stats.sm_section_s = stats.sim_wallclock_s; // profiler off: bound
+        }
+        stats
+    }
+
+    /// The CTA dispatch order of the last simulated kernel.
+    pub fn last_cta_order(&self) -> &[u32] {
+        &self.cta_order
+    }
+
+    /// Shared-locked stats handle (ablation checks).
+    pub fn shared_stats(&self) -> &SharedLockedStats {
+        &self.shared_stats
+    }
+}
+
+pub use costmodel::{CostParams, ModelConfig};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Schedule;
+    use crate::trace::workloads::{build, Scale};
+
+    fn sim_cfg(threads: usize) -> SimConfig {
+        SimConfig { threads, ..SimConfig::default() }
+    }
+
+    #[test]
+    fn nn_ci_completes_on_tiny_gpu() {
+        let wl = build("nn", Scale::Ci).unwrap();
+        let mut gs = GpuSim::new(GpuConfig::tiny(), sim_cfg(1));
+        let stats = gs.run_workload(&wl);
+        assert_eq!(stats.kernels.len(), wl.kernels.len());
+        assert!(stats.total_cycles() > 0);
+        assert!(stats.total_warp_insts() > 0);
+        // every CTA launched and completed
+        let k = &stats.kernels[0];
+        assert_eq!(k.sm.ctas_launched, wl.kernels[0].grid_ctas as u64);
+        assert_eq!(k.sm.ctas_completed, k.sm.ctas_launched);
+        assert_eq!(
+            k.sm.warps_completed,
+            k.sm.ctas_completed * wl.kernels[0].warps_per_cta(32) as u64
+        );
+    }
+
+    #[test]
+    fn issued_insts_match_program_dyn_len() {
+        let wl = build("nn", Scale::Ci).unwrap();
+        let mut gs = GpuSim::new(GpuConfig::tiny(), sim_cfg(1));
+        let stats = gs.run_workload(&wl);
+        let expect: u64 = wl.kernels.iter().map(|k| k.total_warp_insts(32)).collect::<Vec<_>>().iter().sum();
+        assert_eq!(stats.total_warp_insts(), expect, "every instruction issued exactly once");
+    }
+
+    #[test]
+    fn memory_traffic_flows_end_to_end() {
+        let wl = build("nn", Scale::Ci).unwrap();
+        let mut gs = GpuSim::new(GpuConfig::tiny(), sim_cfg(1));
+        let stats = gs.run_workload(&wl);
+        let k = &stats.kernels[0];
+        assert!(k.sm.l1d_accesses > 0);
+        assert!(k.mem.l2_accesses > 0, "misses must reach L2");
+        assert!(k.mem.dram_reads > 0, "cold misses must reach DRAM");
+        assert!(k.sm.icnt_packets_out > 0 && k.sm.icnt_packets_in > 0);
+        assert!(k.unique_lines_global > 0);
+    }
+
+    #[test]
+    fn two_threads_same_fingerprint_as_one() {
+        // the paper's determinism claim, at engine level, on a CI workload
+        let wl = build("nn", Scale::Ci).unwrap();
+        let mut a = GpuSim::new(GpuConfig::tiny(), sim_cfg(1));
+        let sa = a.run_workload(&wl);
+        let mut b = GpuSim::new(GpuConfig::tiny(), sim_cfg(4));
+        let sb = b.run_workload(&wl);
+        let diff = crate::stats::diff::diff_runs(&sa, &sb);
+        assert!(diff.identical(), "{}", diff.report());
+        assert_eq!(sa.fingerprint(), sb.fingerprint());
+    }
+
+    #[test]
+    fn dynamic_schedule_same_results() {
+        let wl = build("nn", Scale::Ci).unwrap();
+        let mut a = GpuSim::new(GpuConfig::tiny(), sim_cfg(1));
+        let sa = a.run_workload(&wl);
+        let mut sim = sim_cfg(3);
+        sim.schedule = Schedule::Dynamic { chunk: 1 };
+        let mut b = GpuSim::new(GpuConfig::tiny(), sim);
+        let sb = b.run_workload(&wl);
+        assert_eq!(sa.fingerprint(), sb.fingerprint());
+    }
+
+    #[test]
+    fn myocyte_uses_two_sms_only() {
+        let wl = build("myocyte", Scale::Ci).unwrap();
+        let mut gs = GpuSim::new(GpuConfig::rtx3080ti(), sim_cfg(1));
+        let stats = gs.run_workload(&wl);
+        let k = &stats.kernels[0];
+        let busy = k.per_sm.iter().filter(|s| s.ctas_launched > 0).count();
+        assert_eq!(busy, 2, "myocyte's 2 CTAs occupy exactly 2 SMs");
+    }
+
+    #[test]
+    fn cta_round_robin_covers_sms() {
+        let wl = build("hotspot", Scale::Ci).unwrap();
+        let mut gs = GpuSim::new(GpuConfig::tiny(), sim_cfg(1));
+        let stats = gs.run_workload(&wl);
+        let k = &stats.kernels[0];
+        // 64 CTAs over 4 SMs → every SM must have been used
+        assert!(k.per_sm.iter().all(|s| s.ctas_launched > 0));
+    }
+
+    #[test]
+    fn functional_gemm_replay_matches_naive() {
+        let wl = build("cut_2", Scale::Ci).unwrap();
+        let mut sim = sim_cfg(1);
+        sim.functional = FunctionalMode::Full;
+        let mut gs = GpuSim::new(GpuConfig::tiny(), sim);
+        let _ = gs.run_workload(&wl);
+        assert_eq!(gs.functional_results.len(), 1);
+        let fr = &gs.functional_results[0];
+        let a = functional::gen_matrix(wl.kernels[0].seed ^ 0xA, fr.sem.m as usize, fr.sem.k as usize);
+        let b = functional::gen_matrix(wl.kernels[0].seed ^ 0xB, fr.sem.k as usize, fr.sem.n as usize);
+        let c_ref = functional::gemm_naive(&a, &b, fr.sem.m as usize, fr.sem.n as usize, fr.sem.k as usize);
+        assert!(functional::max_abs_diff(&fr.c, &c_ref) < 1e-3);
+    }
+
+    #[test]
+    fn cost_model_records_when_enabled() {
+        let wl = build("nn", Scale::Ci).unwrap();
+        let mut sim = sim_cfg(1);
+        sim.measure_work = true;
+        let mut gs = GpuSim::new(GpuConfig::tiny(), sim);
+        let _ = gs.run_workload(&wl);
+        let cm = gs.cost_model.as_ref().unwrap();
+        assert!(cm.cycles() > 0);
+        assert!(cm.total_work() > 0);
+    }
+}

@@ -1,0 +1,434 @@
+//! Figure/table regeneration harness — one entry point per artefact of
+//! the paper's evaluation (§4): Fig 1 (single-thread sim times), Fig 4
+//! (profiler breakdown), Fig 5 (speed-up vs threads), Fig 6 (OpenMP
+//! scheduler comparison), Fig 7 (CTAs per kernel), plus Table 1/2/3
+//! echoes. Used by `parsim figure …` and by `rust/benches/*`.
+
+use std::time::Instant;
+
+use crate::config::{presets::Testbed, GpuConfig, Schedule, SimConfig, StatsStrategy};
+use crate::engine::costmodel::CostModel;
+use crate::engine::GpuSim;
+use crate::stats::GpuStats;
+use crate::trace::workloads::{self, Scale};
+use crate::util::{geomean, pearson};
+
+/// Measured data for one workload (one sequential instrumented run).
+#[derive(Debug)]
+pub struct Measured {
+    pub name: String,
+    pub stats: GpuStats,
+    pub cost: CostModel,
+    /// Serial (non-SM-loop) section, ns.
+    pub serial_ns: f64,
+}
+
+impl Measured {
+    /// Modelled speed-up for (threads, schedule) in the Accel-sim regime
+    /// (the paper's substrate weight — the Fig-5/6 headline; see
+    /// `engine::costmodel` docs).
+    pub fn speedup(&self, threads: usize, schedule: Schedule) -> f64 {
+        let ci = self
+            .cost
+            .find(threads, schedule)
+            .unwrap_or_else(|| panic!("config {threads}/{schedule:?} not modelled"));
+        self.cost.speedup_paper_regime(ci, self.serial_ns)
+    }
+
+    /// Speed-up priced against *this* substrate's measured per-cycle
+    /// costs (the secondary column).
+    pub fn speedup_this_substrate(&self, threads: usize, schedule: Schedule) -> f64 {
+        let ci = self.cost.find(threads, schedule).expect("modelled config");
+        self.cost.speedup(ci, self.serial_ns)
+    }
+}
+
+/// Run one workload sequentially with work measurement enabled.
+pub fn measure_workload(name: &str, scale: Scale, gpu: &GpuConfig) -> Measured {
+    let wl = workloads::build(name, scale)
+        .unwrap_or_else(|| panic!("unknown workload {name}"));
+    let sim = SimConfig { threads: 1, measure_work: true, ..SimConfig::default() };
+    let mut gs = GpuSim::new(gpu.clone(), sim);
+    let stats = gs.run_workload(&wl);
+    // Serial section from the *profiler's phase sum* — NOT wallclock minus
+    // SM section: wallclock includes the cost model's own per-cycle
+    // recording overhead, which exists only in measurement runs and must
+    // not be attributed to the simulator's serial phases.
+    let serial_ns = (gs.profiler.total_s() - gs.profiler.sm_section_s()).max(0.0) * 1e9;
+    let cost = gs.cost_model.take().expect("measure_work enabled");
+    Measured { name: name.to_string(), stats, cost, serial_ns }
+}
+
+/// Measure every Table-2 workload (the shared substrate of Fig 1/5/6).
+pub fn measure_all(scale: Scale, gpu: &GpuConfig, progress: bool) -> Vec<Measured> {
+    workloads::names()
+        .iter()
+        .map(|&n| {
+            if progress {
+                eprintln!("[measure] {n} …");
+            }
+            let t0 = Instant::now();
+            let m = measure_workload(n, scale, gpu);
+            if progress {
+                eprintln!(
+                    "[measure] {n}: {:.2}s wall, {} cycles, {} warp-insts",
+                    t0.elapsed().as_secs_f64(),
+                    m.stats.total_cycles(),
+                    m.stats.total_warp_insts()
+                );
+            }
+            m
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// Figure 1 — time to simulate each workload, single-threaded
+// ---------------------------------------------------------------------------
+
+pub struct Fig1Row {
+    pub name: String,
+    pub seconds: f64,
+    pub cycles: u64,
+    pub warp_insts: u64,
+    pub rate: f64,
+}
+
+pub fn fig1(scale: Scale, gpu: &GpuConfig, progress: bool) -> Vec<Fig1Row> {
+    workloads::names()
+        .iter()
+        .map(|&n| {
+            if progress {
+                eprintln!("[fig1] {n} …");
+            }
+            let wl = workloads::build(n, scale).unwrap();
+            let mut gs = GpuSim::new(gpu.clone(), SimConfig::default());
+            let stats = gs.run_workload(&wl);
+            Fig1Row {
+                name: n.to_string(),
+                seconds: stats.sim_wallclock_s,
+                cycles: stats.total_cycles(),
+                warp_insts: stats.total_warp_insts(),
+                rate: stats.sim_rate(),
+            }
+        })
+        .collect()
+}
+
+pub fn fig1_report(rows: &[Fig1Row], scale: Scale) -> String {
+    let mut s = format!(
+        "Figure 1 — single-thread simulation time per workload (scale={})\n\
+         (paper shape: lavaMD ≫ mst ≈ sssp > rest; absolute times are this\n\
+         substrate's, not Accel-sim's)\n\n\
+         {:<12} {:>10} {:>14} {:>14} {:>12}\n",
+        scale.name(),
+        "workload",
+        "seconds",
+        "cycles",
+        "warp insts",
+        "winst/s"
+    );
+    for r in rows {
+        s.push_str(&format!(
+            "{:<12} {:>10.3} {:>14} {:>14} {:>12.0}\n",
+            workloads::alias_of(&r.name),
+            r.seconds,
+            r.cycles,
+            r.warp_insts,
+            r.rate
+        ));
+    }
+    let max = rows.iter().fold(("", 0.0f64), |acc, r| {
+        if r.seconds > acc.1 {
+            (workloads::alias_of(&r.name), r.seconds)
+        } else {
+            acc
+        }
+    });
+    s.push_str(&format!("\nheaviest: {} at {:.2}s\n", max.0, max.1));
+    s
+}
+
+// ---------------------------------------------------------------------------
+// Figure 4 — per-phase profile (hotspot)
+// ---------------------------------------------------------------------------
+
+pub fn fig4(workload: &str, scale: Scale, gpu: &GpuConfig) -> (String, f64) {
+    let wl = workloads::build(workload, scale).unwrap();
+    let sim = SimConfig { threads: 1, profile: true, profile_sample: 4, ..SimConfig::default() };
+    let mut gs = GpuSim::new(gpu.clone(), sim);
+    let _ = gs.run_workload(&wl);
+    let sm_pct = gs
+        .profiler
+        .percentages()
+        .map(|p| p[crate::profiler::Phase::SmCycle as usize])
+        .unwrap_or(0.0);
+    let mut report = format!(
+        "Figure 4 — cycle-loop profile of `{workload}` (paper: SM cycles ≳ 93%)\n\n"
+    );
+    report.push_str(&gs.profiler.report());
+    (report, sm_pct)
+}
+
+// ---------------------------------------------------------------------------
+// Figure 5 — speed-up vs thread count
+// ---------------------------------------------------------------------------
+
+pub const FIG5_THREADS: [usize; 5] = [2, 4, 8, 16, 24];
+/// Paper-reported averages for the same thread counts.
+pub const FIG5_PAPER_AVG: [f64; 5] = [1.72, 2.64, 3.95, 5.83, 7.08];
+
+/// Fig-5 schedule: the paper's plain `#pragma omp parallel for`
+/// (OpenMP default = static, contiguous blocks).
+pub const FIG5_SCHEDULE: Schedule = Schedule::Static { chunk: 0 };
+
+pub fn fig5_report(measured: &[Measured]) -> String {
+    let host = Testbed::host();
+    let paper = Testbed::paper();
+    let mut s = format!(
+        "Figure 5 — modelled speed-up vs threads (cost model driven by\n\
+         measured per-SM work, priced at Accel-sim substrate weight;\n\
+         testbed substitution: paper ran on {},\n\
+         this host is {} — see DESIGN.md §Substitutions)\n\n",
+        paper.description, host.description
+    );
+    s.push_str(&format!("{:<12}", "workload"));
+    for t in FIG5_THREADS {
+        s.push_str(&format!(" {:>7}", format!("{t}t")));
+    }
+    s.push('\n');
+    let mut per_thread: Vec<Vec<f64>> = vec![Vec::new(); FIG5_THREADS.len()];
+    for m in measured {
+        s.push_str(&format!("{:<12}", workloads::alias_of(&m.name)));
+        for (i, &t) in FIG5_THREADS.iter().enumerate() {
+            let sp = m.speedup(t, FIG5_SCHEDULE);
+            per_thread[i].push(sp);
+            s.push_str(&format!(" {sp:>7.2}"));
+        }
+        s.push('\n');
+    }
+    s.push_str(&format!("{:<12}", "average"));
+    for col in &per_thread {
+        let avg = col.iter().sum::<f64>() / col.len() as f64;
+        s.push_str(&format!(" {avg:>7.2}"));
+    }
+    s.push('\n');
+    s.push_str(&format!("{:<12}", "geomean"));
+    for col in &per_thread {
+        s.push_str(&format!(" {:>7.2}", geomean(col)));
+    }
+    s.push('\n');
+    s.push_str(&format!("{:<12}", "paper avg"));
+    for v in FIG5_PAPER_AVG {
+        s.push_str(&format!(" {v:>7.2}"));
+    }
+    s.push('\n');
+
+    // the paper's correlation claim: corr(speedup@16t, t_seq) ≈ 0.78
+    let t16: Vec<f64> = measured.iter().map(|m| m.speedup(16, FIG5_SCHEDULE)).collect();
+    let tseq: Vec<f64> = measured.iter().map(|m| m.stats.sim_wallclock_s).collect();
+    if let Some(r) = pearson(&t16, &tseq) {
+        s.push_str(&format!(
+            "\ncorr(speed-up@16t, single-thread time) = {r:.2}  (paper: 0.78)\n"
+        ));
+    }
+    // efficiency note (paper: 0.36 @16t, 0.30 @24t)
+    let avg16 = per_thread[3].iter().sum::<f64>() / per_thread[3].len() as f64;
+    let avg24 = per_thread[4].iter().sum::<f64>() / per_thread[4].len() as f64;
+    s.push_str(&format!(
+        "efficiency: {:.2} @16t (paper 0.36), {:.2} @24t (paper 0.30)\n",
+        avg16 / 16.0,
+        avg24 / 24.0
+    ));
+    // secondary: this substrate's own (lighter-cycle) regime
+    s.push_str("\nthis-substrate regime (lean Rust SM model; overheads at full weight):\n");
+    s.push_str(&format!("{:<12}", "workload"));
+    for t in FIG5_THREADS {
+        s.push_str(&format!(" {:>7}", format!("{t}t")));
+    }
+    s.push('\n');
+    for m in measured {
+        s.push_str(&format!("{:<12}", workloads::alias_of(&m.name)));
+        for &t in FIG5_THREADS.iter() {
+            s.push_str(&format!(" {:>7.2}", m.speedup_this_substrate(t, FIG5_SCHEDULE)));
+        }
+        s.push('\n');
+    }
+    s
+}
+
+// ---------------------------------------------------------------------------
+// Figure 6 — static vs dynamic schedule at 2 and 16 threads
+// ---------------------------------------------------------------------------
+
+pub fn fig6_report(measured: &[Measured]) -> String {
+    let mut s = String::from(
+        "Figure 6 — OpenMP schedule comparison (static = OpenMP default\n\
+         contiguous partition; dynamic = chunk 1). Paper anchors: cut_1\n\
+         0.97×→1.61× at 2t; cut_2/lavaMD prefer static; myocyte ≈ 1.0.\n\n",
+    );
+    s.push_str(&format!(
+        "{:<12} {:>9} {:>9} {:>9} {:>9}\n",
+        "workload", "st@2t", "dyn@2t", "st@16t", "dyn@16t"
+    ));
+    for m in measured {
+        let st2 = m.speedup(2, Schedule::Static { chunk: 0 });
+        let dy2 = m.speedup(2, Schedule::Dynamic { chunk: 1 });
+        let st16 = m.speedup(16, Schedule::Static { chunk: 0 });
+        let dy16 = m.speedup(16, Schedule::Dynamic { chunk: 1 });
+        s.push_str(&format!(
+            "{:<12} {st2:>9.2} {dy2:>9.2} {st16:>9.2} {dy16:>9.2}\n",
+            workloads::alias_of(&m.name)
+        ));
+    }
+    s
+}
+
+// ---------------------------------------------------------------------------
+// Figure 7 — CTAs per kernel
+// ---------------------------------------------------------------------------
+
+pub fn fig7_report(scale: Scale) -> String {
+    let mut s = format!(
+        "Figure 7 — CTAs per kernel (scale={}, modelled GPU has 80 SMs)\n\n\
+         {:<12} {:>9} {:>9} {:>9} {:>8}\n",
+        scale.name(),
+        "workload",
+        "kernels",
+        "mean",
+        "max",
+        "≥#SM?"
+    );
+    for &n in workloads::names() {
+        let wl = workloads::build(n, scale).unwrap();
+        let mean = wl.mean_ctas_per_kernel();
+        let max = wl.kernels.iter().map(|k| k.grid_ctas).max().unwrap_or(0);
+        s.push_str(&format!(
+            "{:<12} {:>9} {:>9.1} {:>9} {:>8}\n",
+            workloads::alias_of(n),
+            wl.kernels.len(),
+            mean,
+            max,
+            if mean >= 80.0 { "yes" } else { "no" }
+        ));
+    }
+    s
+}
+
+// ---------------------------------------------------------------------------
+// Real-execution speed-up (meaningful on multi-core hosts)
+// ---------------------------------------------------------------------------
+
+/// Wall-clock of a real run at `threads`/`schedule` — on a multi-core
+/// host this measures actual parallel speed-up; on this 1-core container
+/// it demonstrates correctness (and is used by the determinism tests).
+pub fn real_run(
+    name: &str,
+    scale: Scale,
+    gpu: &GpuConfig,
+    threads: usize,
+    schedule: Schedule,
+    strategy: StatsStrategy,
+) -> GpuStats {
+    let wl = workloads::build(name, scale).unwrap();
+    let sim = SimConfig { threads, schedule, stats_strategy: strategy, ..SimConfig::default() };
+    let mut gs = GpuSim::new(gpu.clone(), sim);
+    gs.run_workload(&wl)
+}
+
+// ---------------------------------------------------------------------------
+// Table echoes
+// ---------------------------------------------------------------------------
+
+pub fn table1_report(gpu: &GpuConfig) -> String {
+    format!(
+        "Table 1 — {} simulator parameters\n\
+         Core Clock                     {} MHz\n\
+         Mem. Clock                     {} MHz\n\
+         # SM                           {}\n\
+         # Warps per SM                 {}\n\
+         Total Shared memory/L1D per SM {} KB\n\
+         # Mem. part.                   {}\n\
+         Total L2 cache                 {} MB\n",
+        gpu.name,
+        gpu.core_clock_mhz,
+        gpu.mem_clock_mhz,
+        gpu.num_sms,
+        gpu.warps_per_sm,
+        gpu.smem_l1d_per_sm / 1024,
+        gpu.num_mem_partitions,
+        gpu.l2_total_bytes / (1024 * 1024),
+    )
+}
+
+pub fn table2_report() -> String {
+    let mut s = String::from("Table 2 — benchmarks\n");
+    let mut last_suite = "";
+    for &n in workloads::names() {
+        let suite = workloads::suite_of(n);
+        if suite != last_suite {
+            s.push_str(&format!("\n  {suite}\n"));
+            last_suite = suite;
+        }
+        s.push_str(&format!("    {n} ({})\n", workloads::alias_of(n)));
+    }
+    s
+}
+
+pub fn table3_report() -> String {
+    let paper = Testbed::paper();
+    let host = Testbed::host();
+    format!(
+        "Table 3 — node specification\n  paper: {}\n  host:  {}\n",
+        paper.description, host.description
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measure_and_figures_smoke_on_tiny() {
+        // Use the tiny GPU + CI scale for a fast end-to-end harness check.
+        let gpu = GpuConfig::tiny();
+        let m = measure_workload("nn", Scale::Ci, &gpu);
+        assert!(m.cost.cycles() > 0);
+        let sp = m.speedup(16, FIG5_SCHEDULE);
+        assert!(sp > 0.0 && sp < 32.0, "speedup sane: {sp}");
+        let report = fig5_report(&[m]);
+        assert!(report.contains("nn"));
+        assert!(report.contains("paper avg"));
+    }
+
+    #[test]
+    fn fig7_covers_all_and_flags_myocyte() {
+        let r = fig7_report(Scale::Paper);
+        assert!(r.contains("myo"));
+        for &n in workloads::names() {
+            assert!(r.contains(workloads::alias_of(n)), "{n} in fig7");
+        }
+        // myocyte row must say "no" (2 CTAs < 80 SMs)
+        let myo_line = r.lines().find(|l| l.starts_with("myo")).unwrap();
+        assert!(myo_line.ends_with("no"));
+    }
+
+    #[test]
+    fn tables_echo_paper_values() {
+        let t1 = table1_report(&GpuConfig::rtx3080ti());
+        assert!(t1.contains("1365"));
+        assert!(t1.contains("9500"));
+        assert!(t1.contains("80"));
+        let t2 = table2_report();
+        assert!(t2.contains("Rodinia 3.1") && t2.contains("Cutlass"));
+        let t3 = table3_report();
+        assert!(t3.contains("EPYC"));
+    }
+
+    #[test]
+    fn fig4_sm_dominates_even_on_tiny() {
+        let (report, sm_pct) = fig4("nn", Scale::Ci, &GpuConfig::tiny());
+        assert!(report.contains("SM cycles"));
+        assert!(sm_pct > 30.0, "SM phase should dominate: {sm_pct}%");
+    }
+}

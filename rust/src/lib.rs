@@ -1,0 +1,61 @@
+//! # parsim — a deterministic, parallel GPU timing simulator
+//!
+//! Reproduction of **"Parallelizing a modern GPU simulator"**
+//! (Huerta & González, CS.DC 2025).
+//!
+//! The paper parallelizes the per-cycle SM loop of the Accel-sim GPGPU
+//! simulator with OpenMP, *deterministically*: the multi-threaded simulator
+//! produces bit-identical statistics to the single-threaded one. This crate
+//! rebuilds the whole substrate — a trace-driven, cycle-level GPU timing
+//! simulator in the style of Accel-sim/GPGPU-Sim — and implements the
+//! paper's contribution as a first-class feature:
+//!
+//! * [`engine::GpuSim`] — the Algorithm-1 cycle loop: sequential
+//!   interconnect / L2 / DRAM phases, a **parallel SM phase**, and a
+//!   sequential block-issue phase.
+//! * [`engine::pool`] — a persistent worker pool with OpenMP-equivalent
+//!   `schedule(static, chunk)` / `schedule(dynamic, chunk)` semantics.
+//! * [`stats`] — the paper's §3 statistics isolation: per-SM stats merged
+//!   once at kernel end (plus the locked-shared and sequential-point
+//!   alternatives, for the ablation).
+//! * [`engine::costmodel`] — a calibrated makespan model that reproduces
+//!   the paper's Figure 5/6 speed-up studies on hosts with fewer cores
+//!   than the authors' 24-core EPYC nodes.
+//! * [`trace::workloads`] — procedural generators for the 19 Table-2
+//!   benchmarks (Rodinia, Polybench, Lonestar, DeepBench, CUTLASS).
+//! * [`runtime`] — PJRT/XLA bridge: loads the AOT-compiled JAX/Pallas GEMM
+//!   artifacts (`artifacts/*.hlo.txt`) used to functionally validate the
+//!   GEMM-family workloads. Python never runs at simulation time.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use parsim::config::{GpuConfig, SimConfig};
+//! use parsim::trace::workloads;
+//! use parsim::engine::GpuSim;
+//!
+//! let gpu = GpuConfig::rtx3080ti();
+//! let sim = SimConfig::default();                 // single-threaded
+//! let wl = workloads::build("hotspot", workloads::Scale::Ci).unwrap();
+//! let mut gpusim = GpuSim::new(gpu, sim);
+//! let stats = gpusim.run_workload(&wl);
+//! println!("cycles = {}", stats.total_cycles());
+//! ```
+
+pub mod cli;
+pub mod config;
+pub mod core;
+pub mod engine;
+pub mod harness;
+pub mod icnt;
+pub mod mem;
+pub mod profiler;
+pub mod runtime;
+pub mod stats;
+pub mod trace;
+pub mod util;
+
+pub use config::{GpuConfig, SimConfig};
+pub use engine::GpuSim;
+pub use stats::GpuStats;
+pub use trace::workloads::{Scale, Workload};

@@ -1,0 +1,456 @@
+//! Set-associative cache with MSHRs and a miss queue — used for L0i, L1i,
+//! L1D and the L2 slices (policies differ by [`CacheConfig`]).
+
+use std::collections::VecDeque;
+
+use crate::config::{AllocPolicy, CacheConfig, WritePolicy};
+use crate::mem::{MemRequest, WarpRef, LINE_BYTES};
+
+/// Result of a cache probe.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AccessOutcome {
+    /// Line present and valid.
+    Hit,
+    /// Line is being fetched by an earlier miss; this request was merged
+    /// into its MSHR.
+    MissMerged,
+    /// New miss: MSHR allocated, request queued downstream.
+    MissQueued,
+    /// Structural stall: no MSHR / merge capacity / miss-queue slot.
+    /// Caller must retry next cycle.
+    ReservationFail,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum LineState {
+    Invalid,
+    /// Allocated, fill still in flight.
+    Reserved,
+    Valid,
+}
+
+#[derive(Debug, Clone)]
+struct Line {
+    tag: u64,
+    state: LineState,
+    dirty: bool,
+    last_use: u64,
+}
+
+#[derive(Debug, Clone)]
+struct MshrEntry {
+    line_addr: u64,
+    /// (sm_id, warp) of each merged requester — sm_id matters at the L2,
+    /// where waiters from different SMs share one fill.
+    waiters: Vec<(u32, WarpRef)>,
+    /// Number of merged requests (incl. the first).
+    merged: usize,
+}
+
+/// A single cache instance.
+#[derive(Debug)]
+pub struct Cache {
+    cfg: CacheConfig,
+    num_sets: usize,
+    lines: Vec<Line>,
+    mshrs: Vec<MshrEntry>,
+    miss_queue: VecDeque<MemRequest>,
+    /// Dirty lines evicted and awaiting write-back downstream.
+    writeback_queue: VecDeque<u64>,
+    use_counter: u64,
+}
+
+impl Cache {
+    pub fn new(cfg: CacheConfig) -> Self {
+        let num_sets = cfg.num_sets();
+        let lines = vec![
+            Line { tag: 0, state: LineState::Invalid, dirty: false, last_use: 0 };
+            num_sets * cfg.assoc
+        ];
+        Cache {
+            cfg,
+            num_sets,
+            lines,
+            mshrs: Vec::new(),
+            miss_queue: VecDeque::new(),
+            writeback_queue: VecDeque::new(),
+            use_counter: 0,
+        }
+    }
+
+    #[inline]
+    fn set_of(&self, line_addr: u64) -> usize {
+        // mix the line index so power-of-two strides don't camp on one set
+        (crate::util::mix64(line_addr / self.cfg.line_bytes) % self.num_sets as u64) as usize
+    }
+
+    #[inline]
+    fn set_slice(&mut self, set: usize) -> &mut [Line] {
+        let a = set * self.cfg.assoc;
+        &mut self.lines[a..a + self.cfg.assoc]
+    }
+
+    /// Probe without side effects (testing / introspection).
+    pub fn probe(&self, line_addr: u64) -> bool {
+        let set = self.set_of(line_addr);
+        let a = set * self.cfg.assoc;
+        self.lines[a..a + self.cfg.assoc]
+            .iter()
+            .any(|l| l.state == LineState::Valid && l.tag == line_addr)
+    }
+
+    /// Read access. On a miss, attempts to allocate an MSHR + miss-queue
+    /// slot and reserves a victim line.
+    pub fn access_read(&mut self, req: MemRequest) -> AccessOutcome {
+        debug_assert!(!req.is_write);
+        self.use_counter += 1;
+        let tick = self.use_counter;
+        let set = self.set_of(req.line_addr);
+        let base = set * self.cfg.assoc;
+
+        // probe: find a matching non-invalid line
+        let mut found: Option<(usize, LineState)> = None;
+        for i in 0..self.cfg.assoc {
+            let l = &self.lines[base + i];
+            if l.tag == req.line_addr && l.state != LineState::Invalid {
+                found = Some((i, l.state));
+                break;
+            }
+        }
+        match found {
+            Some((i, LineState::Valid)) => {
+                self.lines[base + i].last_use = tick;
+                return AccessOutcome::Hit;
+            }
+            Some((i, LineState::Reserved)) => {
+                // merge into the in-flight MSHR
+                self.lines[base + i].last_use = tick;
+                let merge_cap = self.cfg.mshr_merge;
+                if let Some(e) = self.mshrs.iter_mut().find(|e| e.line_addr == req.line_addr) {
+                    if e.merged >= merge_cap {
+                        return AccessOutcome::ReservationFail;
+                    }
+                    e.merged += 1;
+                    e.waiters.push((req.sm_id, req.warp));
+                    return AccessOutcome::MissMerged;
+                }
+                debug_assert!(false, "reserved line without MSHR");
+                return AccessOutcome::ReservationFail;
+            }
+            _ => {}
+        }
+
+        // miss: need MSHR + miss-queue capacity
+        if self.mshrs.len() >= self.cfg.mshr_entries
+            || self.miss_queue.len() >= self.cfg.miss_queue
+        {
+            return AccessOutcome::ReservationFail;
+        }
+
+        // victim: prefer invalid, else LRU among non-reserved
+        let mut victim: Option<usize> = None;
+        let mut best = u64::MAX;
+        for i in 0..self.cfg.assoc {
+            let l = &self.lines[base + i];
+            match l.state {
+                LineState::Invalid => {
+                    victim = Some(i);
+                    break;
+                }
+                LineState::Valid => {
+                    if l.last_use < best {
+                        best = l.last_use;
+                        victim = Some(i);
+                    }
+                }
+                LineState::Reserved => {}
+            }
+        }
+        let Some(v) = victim else {
+            // whole set reserved — stall
+            return AccessOutcome::ReservationFail;
+        };
+        let old = &self.lines[base + v];
+        let (old_tag, was_dirty, was_valid) =
+            (old.tag, old.dirty, old.state == LineState::Valid);
+        self.lines[base + v] =
+            Line { tag: req.line_addr, state: LineState::Reserved, dirty: false, last_use: tick };
+        if was_valid && was_dirty && self.cfg.write_policy == WritePolicy::WriteBack {
+            self.writeback_queue.push_back(old_tag);
+        }
+        self.mshrs.push(MshrEntry {
+            line_addr: req.line_addr,
+            waiters: vec![(req.sm_id, req.warp)],
+            merged: 1,
+        });
+        self.miss_queue.push_back(req);
+        AccessOutcome::MissQueued
+    }
+
+    /// Write access. Behaviour depends on the configured policy:
+    /// * write-through / no-write-allocate (L1D): hit updates the line;
+    ///   either way the caller forwards the write downstream.
+    /// * write-back / write-allocate (L2): hit dirties the line; miss
+    ///   allocates via a read-for-ownership through the MSHR.
+    pub fn access_write(&mut self, req: MemRequest) -> AccessOutcome {
+        debug_assert!(req.is_write);
+        self.use_counter += 1;
+        let tick = self.use_counter;
+        let set = self.set_of(req.line_addr);
+        let base = set * self.cfg.assoc;
+        let write_back = self.cfg.write_policy == WritePolicy::WriteBack;
+        let mut found: Option<(usize, LineState)> = None;
+        for i in 0..self.cfg.assoc {
+            let l = &self.lines[base + i];
+            if l.tag == req.line_addr && l.state != LineState::Invalid {
+                found = Some((i, l.state));
+                break;
+            }
+        }
+        match found {
+            Some((i, LineState::Valid)) => {
+                self.lines[base + i].last_use = tick;
+                if write_back {
+                    self.lines[base + i].dirty = true;
+                }
+                return AccessOutcome::Hit;
+            }
+            Some((_, LineState::Reserved)) => {
+                // write under a pending fill: merge (data ordering is not
+                // modelled; timing-wise it shares the fill)
+                let merge_cap = self.cfg.mshr_merge;
+                if let Some(e) = self.mshrs.iter_mut().find(|e| e.line_addr == req.line_addr) {
+                    if e.merged >= merge_cap {
+                        return AccessOutcome::ReservationFail;
+                    }
+                    e.merged += 1;
+                    return AccessOutcome::MissMerged;
+                }
+            }
+            _ => {}
+        }
+        if self.cfg.alloc_policy == AllocPolicy::NoWriteAllocate {
+            // miss, not allocated: caller forwards downstream
+            return AccessOutcome::MissQueued;
+        }
+        // write-allocate path (L2): fetch the line, then dirty it.
+        // sm_id = MAX marks "no reply needed" — stores are fire-and-forget,
+        // the requesting SM must NOT be woken by the allocation fill.
+        let mut rd = req;
+        rd.is_write = false;
+        rd.sm_id = u32::MAX;
+        match self.access_read(rd) {
+            AccessOutcome::Hit => unreachable!("probed above"),
+            outcome @ (AccessOutcome::MissQueued | AccessOutcome::MissMerged) => {
+                // mark dirty on fill
+                let set = self.set_of(req.line_addr);
+                for l in self.set_slice(set) {
+                    if l.tag == req.line_addr {
+                        l.dirty = true;
+                    }
+                }
+                outcome
+            }
+            AccessOutcome::ReservationFail => AccessOutcome::ReservationFail,
+        }
+    }
+
+    /// A fill returned from downstream: validate the line, release the
+    /// MSHR, return the `(sm_id, warp)` waiters to wake.
+    pub fn fill(&mut self, line_addr: u64) -> Vec<(u32, WarpRef)> {
+        let set = self.set_of(line_addr);
+        for l in self.set_slice(set) {
+            if l.tag == line_addr && l.state == LineState::Reserved {
+                l.state = LineState::Valid;
+                break;
+            }
+        }
+        if let Some(pos) = self.mshrs.iter().position(|e| e.line_addr == line_addr) {
+            self.mshrs.swap_remove(pos).waiters
+        } else {
+            Vec::new()
+        }
+    }
+
+    /// Drain one queued miss toward the next level.
+    pub fn pop_miss(&mut self) -> Option<MemRequest> {
+        self.miss_queue.pop_front()
+    }
+
+    /// Drain one pending write-back (dirty eviction), as a line address.
+    pub fn pop_writeback(&mut self) -> Option<u64> {
+        self.writeback_queue.pop_front()
+    }
+
+    /// Outstanding state? (kernel-drain check)
+    pub fn is_idle(&self) -> bool {
+        self.mshrs.is_empty() && self.miss_queue.is_empty() && self.writeback_queue.is_empty()
+    }
+
+    /// Invalidate everything (between kernels, like Accel-sim's flush).
+    pub fn flush(&mut self) {
+        for l in &mut self.lines {
+            l.state = LineState::Invalid;
+            l.dirty = false;
+            l.tag = 0;
+        }
+        self.mshrs.clear();
+        self.miss_queue.clear();
+        self.writeback_queue.clear();
+    }
+
+    pub fn mshr_in_use(&self) -> usize {
+        self.mshrs.len()
+    }
+}
+
+/// Convenience constructor for tests.
+pub fn test_request(line_addr: u64, is_write: bool) -> MemRequest {
+    MemRequest {
+        line_addr: line_addr / LINE_BYTES * LINE_BYTES,
+        is_write,
+        sm_id: 0,
+        warp: WarpRef { warp_slot: 0, load_slot: 0 },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::GpuConfig;
+
+    fn l1() -> Cache {
+        Cache::new(GpuConfig::rtx3080ti().l1d)
+    }
+    fn l2() -> Cache {
+        Cache::new(GpuConfig::rtx3080ti().l2_slice)
+    }
+
+    #[test]
+    fn miss_then_fill_then_hit() {
+        let mut c = l1();
+        let r = test_request(0x1000, false);
+        assert_eq!(c.access_read(r), AccessOutcome::MissQueued);
+        assert_eq!(c.pop_miss().unwrap().line_addr, r.line_addr);
+        let waiters = c.fill(r.line_addr);
+        assert_eq!(waiters.len(), 1);
+        assert_eq!(c.access_read(r), AccessOutcome::Hit);
+        assert!(c.probe(r.line_addr));
+    }
+
+    #[test]
+    fn secondary_miss_merges() {
+        let mut c = l1();
+        let r = test_request(0x2000, false);
+        assert_eq!(c.access_read(r), AccessOutcome::MissQueued);
+        let mut r2 = r;
+        r2.warp = WarpRef { warp_slot: 5, load_slot: 1 };
+        assert_eq!(c.access_read(r2), AccessOutcome::MissMerged);
+        // only ONE downstream request
+        assert!(c.pop_miss().is_some());
+        assert!(c.pop_miss().is_none());
+        // both waiters woken by the single fill
+        assert_eq!(c.fill(r.line_addr).len(), 2);
+    }
+
+    #[test]
+    fn mshr_merge_capacity_bounds() {
+        let mut cfg = GpuConfig::rtx3080ti().l1d;
+        cfg.mshr_merge = 2;
+        let mut c = Cache::new(cfg);
+        let r = test_request(0x3000, false);
+        assert_eq!(c.access_read(r), AccessOutcome::MissQueued);
+        assert_eq!(c.access_read(r), AccessOutcome::MissMerged);
+        assert_eq!(c.access_read(r), AccessOutcome::ReservationFail);
+    }
+
+    #[test]
+    fn mshr_entry_exhaustion_stalls() {
+        let mut cfg = GpuConfig::rtx3080ti().l1d;
+        cfg.mshr_entries = 2;
+        let mut c = Cache::new(cfg);
+        assert_eq!(c.access_read(test_request(0x1000, false)), AccessOutcome::MissQueued);
+        assert_eq!(c.access_read(test_request(0x2000, false)), AccessOutcome::MissQueued);
+        assert_eq!(c.access_read(test_request(0x4000, false)), AccessOutcome::ReservationFail);
+    }
+
+    #[test]
+    fn lru_evicts_oldest() {
+        let mut cfg = GpuConfig::rtx3080ti().l1d;
+        // single set, 2 ways → easy conflict construction
+        cfg.size_bytes = 2 * cfg.line_bytes;
+        cfg.assoc = 2;
+        let mut c = Cache::new(cfg);
+        // find three addresses mapping to set 0 (the only set)
+        let a = test_request(0, false);
+        let b = test_request(128, false);
+        let d = test_request(256, false);
+        c.access_read(a);
+        c.fill(a.line_addr);
+        c.access_read(b);
+        c.fill(b.line_addr);
+        // touch a so b is LRU
+        assert_eq!(c.access_read(a), AccessOutcome::Hit);
+        c.access_read(d);
+        c.fill(d.line_addr);
+        assert_eq!(c.access_read(a), AccessOutcome::Hit, "a must survive");
+        assert!(!c.probe(b.line_addr), "b was LRU and must be evicted");
+    }
+
+    #[test]
+    fn l1_write_through_no_allocate() {
+        let mut c = l1();
+        // write miss does not allocate
+        assert_eq!(c.access_write(test_request(0x5000, true)), AccessOutcome::MissQueued);
+        assert!(!c.probe(0x5000));
+        assert!(c.pop_miss().is_none(), "no-write-allocate: nothing queued internally");
+    }
+
+    #[test]
+    fn l2_write_back_allocates_and_writes_back() {
+        let mut cfg = GpuConfig::rtx3080ti().l2_slice;
+        cfg.size_bytes = 2 * cfg.line_bytes;
+        cfg.assoc = 2;
+        let mut c = Cache::new(cfg);
+        // write-allocate: miss → fetch
+        assert_eq!(c.access_write(test_request(0, true)), AccessOutcome::MissQueued);
+        assert!(c.pop_miss().is_some());
+        c.fill(0);
+        assert_eq!(c.access_write(test_request(0, true)), AccessOutcome::Hit);
+        // fill the other way, then evict the dirty line
+        c.access_read(test_request(128, false));
+        c.fill(128);
+        c.access_read(test_request(256, false));
+        // the dirty line at 0 must be in the writeback queue (it was LRU)
+        assert_eq!(c.pop_writeback(), Some(0));
+    }
+
+    #[test]
+    fn flush_resets() {
+        let mut c = l2();
+        c.access_read(test_request(0x1000, false));
+        c.flush();
+        assert!(c.is_idle());
+        assert!(!c.probe(0x1000));
+    }
+
+    #[test]
+    fn deterministic_behaviour() {
+        // same access sequence twice ⇒ identical outcomes
+        let run = || {
+            let mut c = l1();
+            let mut outcomes = Vec::new();
+            for i in 0..200u64 {
+                let addr = (crate::util::mix64(i) % 64) * 128;
+                outcomes.push(c.access_read(test_request(addr, false)) as u8 as u64 + addr);
+                if i % 3 == 0 {
+                    if let Some(m) = c.pop_miss() {
+                        c.fill(m.line_addr);
+                    }
+                }
+            }
+            outcomes
+        };
+        assert_eq!(run(), run());
+    }
+}

@@ -1,0 +1,111 @@
+//! GPU memory system: address interleaving, caches, L2 slices, memory
+//! partitions and the DRAM timing model.
+//!
+//! Everything in this module runs in the **sequential** phases of the
+//! cycle loop (Algorithm 1 lines 8–19): the paper's profiling (Fig 4)
+//! shows the memory side is < 7 % of simulation time, so parallelizing it
+//! is not worth the determinism risk — exactly the paper's design choice.
+
+pub mod cache;
+pub mod dram;
+pub mod partition;
+
+pub use cache::{AccessOutcome, Cache};
+pub use dram::Dram;
+pub use partition::{MemPartition, SubPartition};
+
+use crate::util::mix64;
+
+/// 128-byte line size used throughout (Ampere sector-4 line).
+pub const LINE_BYTES: u64 = 128;
+
+/// Identifies the warp waiting on a memory request so the SM can release
+/// its scoreboard entry when the reply arrives.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct WarpRef {
+    /// Warp slot within the SM.
+    pub warp_slot: u16,
+    /// In-flight-load table index within the SM's LD/ST unit.
+    pub load_slot: u16,
+}
+
+/// A memory request as it travels SM → L2 → DRAM and back.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MemRequest {
+    /// 128-byte-aligned line address.
+    pub line_addr: u64,
+    pub is_write: bool,
+    /// Originating SM id (reply routing).
+    pub sm_id: u32,
+    /// Who to wake up on reply (reads only; writes are fire-and-forget).
+    pub warp: WarpRef,
+}
+
+impl MemRequest {
+    /// Packet size on the interconnect: writes carry data (header+line),
+    /// read requests are header-only; read replies carry the line.
+    pub fn request_bytes(&self) -> u32 {
+        if self.is_write {
+            8 + LINE_BYTES as u32
+        } else {
+            8
+        }
+    }
+    pub fn reply_bytes(&self) -> u32 {
+        8 + LINE_BYTES as u32
+    }
+}
+
+/// Map a line address to its memory sub-partition (L2 slice).
+///
+/// Accel-sim hashes line addresses across partitions to avoid camping;
+/// we use a SplitMix64-based interleave which is deterministic,
+/// platform-independent and balances any stride pattern.
+#[inline]
+pub fn subpartition_of(line_addr: u64, num_subpartitions: usize) -> u32 {
+    debug_assert_eq!(line_addr % LINE_BYTES, 0);
+    (mix64(line_addr >> 7) % num_subpartitions as u64) as u32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn interleave_is_deterministic_and_in_range() {
+        for i in 0..1000u64 {
+            let a = subpartition_of(i * LINE_BYTES, 48);
+            let b = subpartition_of(i * LINE_BYTES, 48);
+            assert_eq!(a, b);
+            assert!(a < 48);
+        }
+    }
+
+    #[test]
+    fn interleave_balances_strides() {
+        // A pathological power-of-two stride must still spread evenly.
+        let n = 48usize;
+        let mut counts = vec![0u32; n];
+        for i in 0..48_000u64 {
+            counts[subpartition_of(i * 4096, n) as usize] += 1;
+        }
+        let (min, max) = (counts.iter().min().unwrap(), counts.iter().max().unwrap());
+        assert!(
+            (*max as f64) < 1.3 * (*min as f64).max(1.0),
+            "imbalance: min={min} max={max}"
+        );
+    }
+
+    #[test]
+    fn packet_sizes() {
+        let rd = MemRequest {
+            line_addr: 0,
+            is_write: false,
+            sm_id: 0,
+            warp: WarpRef { warp_slot: 0, load_slot: 0 },
+        };
+        let wr = MemRequest { is_write: true, ..rd };
+        assert!(wr.request_bytes() > rd.request_bytes());
+        assert_eq!(rd.reply_bytes(), 136);
+    }
+}

@@ -1,0 +1,357 @@
+//! Memory partitions: each partition owns one DRAM channel and two
+//! sub-partitions (L2 slices). Mirrors Figure 2 of the paper and
+//! Algorithm 1 lines 9–18.
+
+use std::collections::VecDeque;
+
+use crate::config::GpuConfig;
+use crate::icnt::Packet;
+use crate::mem::cache::{AccessOutcome, Cache};
+use crate::mem::dram::{Dram, DramReq};
+use crate::mem::MemRequest;
+use crate::stats::MemStats;
+
+/// An L2 slice with its queues (one per sub-partition).
+#[derive(Debug)]
+pub struct SubPartition {
+    /// Global sub-partition id (= icnt node offset).
+    pub id: usize,
+    l2: Cache,
+    /// Requests arriving from the interconnect.
+    input: VecDeque<MemRequest>,
+    /// Replies waiting to be injected back into the interconnect,
+    /// available at (cycle, request).
+    reply: VecDeque<(u64, MemRequest)>,
+    /// Per-slice statistics.
+    pub stats: MemStats,
+    input_cap: usize,
+    hit_latency: u64,
+}
+
+impl SubPartition {
+    fn new(id: usize, cfg: &GpuConfig) -> Self {
+        SubPartition {
+            id,
+            l2: Cache::new(cfg.l2_slice.clone()),
+            input: VecDeque::new(),
+            reply: VecDeque::new(),
+            stats: MemStats::default(),
+            input_cap: 16,
+            hit_latency: cfg.l2_slice.hit_latency as u64,
+        }
+    }
+
+    /// Can the interconnect deliver a packet this cycle? (credit check)
+    pub fn can_accept(&self) -> bool {
+        self.input.len() < self.input_cap
+    }
+
+    /// Deliver a request packet from the interconnect
+    /// (`doIcntToMemSubpartition`).
+    pub fn push_request(&mut self, req: MemRequest) {
+        debug_assert!(self.can_accept());
+        self.input.push_back(req);
+    }
+
+    /// `memSubpartition.cacheCycle()`: process one input request through
+    /// the L2 slice. Misses flow to the partition's DRAM queue.
+    fn cache_cycle(&mut self, now: u64, dram: &mut Dram) {
+        if self.input.is_empty() && self.reply.is_empty() && self.l2.is_idle() {
+            return; // slice fully idle this cycle
+        }
+        // first: push L2 dirty write-backs toward DRAM
+        while dram.can_accept() {
+            match self.l2.pop_writeback() {
+                Some(line) => {
+                    self.stats.l2_writebacks += 1;
+                    dram.push(DramReq {
+                        req: MemRequest {
+                            line_addr: line,
+                            is_write: true,
+                            sm_id: u32::MAX,
+                            warp: crate::mem::WarpRef { warp_slot: 0, load_slot: 0 },
+                        },
+                        subpart: self.id,
+                    });
+                }
+                None => break,
+            }
+        }
+        // drain queued misses to DRAM
+        while dram.can_accept() {
+            match self.l2.pop_miss() {
+                Some(req) => dram.push(DramReq { req, subpart: self.id }),
+                None => break,
+            }
+        }
+        // process the head input request
+        let Some(&req) = self.input.front() else { return };
+        self.stats.l2_accesses += 1;
+        let outcome =
+            if req.is_write { self.l2.access_write(req) } else { self.l2.access_read(req) };
+        match outcome {
+            AccessOutcome::Hit => {
+                self.stats.l2_hits += 1;
+                self.input.pop_front();
+                if !req.is_write {
+                    self.reply.push_back((now + self.hit_latency, req));
+                }
+            }
+            AccessOutcome::MissMerged => {
+                self.stats.l2_misses += 1;
+                self.stats.l2_mshr_merges += 1;
+                self.input.pop_front();
+                // reply generated when the primary fill returns
+            }
+            AccessOutcome::MissQueued => {
+                self.stats.l2_misses += 1;
+                self.input.pop_front();
+            }
+            AccessOutcome::ReservationFail => {
+                // structural stall: retry next cycle, count once
+                self.stats.l2_accesses -= 1; // not an architectural access yet
+                self.stats.l2_reservation_fails += 1;
+            }
+        }
+    }
+
+    /// A DRAM read completed: fill the slice, emit replies for waiters.
+    fn dram_fill(&mut self, now: u64, req: MemRequest) {
+        let waiters = self.l2.fill(req.line_addr);
+        // one reply per waiting (sm, warp) — merged requests each get one
+        for (sm, w) in waiters {
+            // sm_id u32::MAX marks internal write-back fetches: no reply
+            if sm != u32::MAX {
+                let mut r = req;
+                r.sm_id = sm;
+                r.warp = w;
+                self.reply.push_back((now + self.hit_latency, r));
+            }
+        }
+    }
+
+    /// Pop a reply ready for injection into the interconnect
+    /// (`doMemSubpartitionToIcnt`).
+    pub fn pop_reply(&mut self, now: u64) -> Option<MemRequest> {
+        match self.reply.front() {
+            Some(&(ready, _)) if ready <= now => self.reply.pop_front().map(|(_, r)| r),
+            _ => None,
+        }
+    }
+
+    pub fn is_idle(&self) -> bool {
+        self.input.is_empty() && self.reply.is_empty() && self.l2.is_idle()
+    }
+
+    pub fn flush(&mut self) {
+        self.l2.flush();
+        self.input.clear();
+        self.reply.clear();
+    }
+}
+
+/// A memory partition: one DRAM channel + `subpartitions_per_partition`
+/// L2 slices.
+#[derive(Debug)]
+pub struct MemPartition {
+    pub id: usize,
+    pub subs: Vec<SubPartition>,
+    dram: Dram,
+    /// Scratch stats for DRAM counters (merged into sub 0's stats).
+    dram_stats: MemStats,
+}
+
+impl MemPartition {
+    pub fn new(id: usize, cfg: &GpuConfig) -> Self {
+        let spp = cfg.subpartitions_per_partition;
+        let subs = (0..spp).map(|s| SubPartition::new(id * spp + s, cfg)).collect();
+        MemPartition {
+            id,
+            subs,
+            dram: Dram::new(cfg.dram.clone(), cfg.dram_clock_ratio()),
+            dram_stats: MemStats::default(),
+        }
+    }
+
+    /// Algorithm 1 line 13: `memPartition.DramCycle()`.
+    pub fn dram_cycle(&mut self) {
+        self.dram.core_cycle(&mut self.dram_stats);
+    }
+
+    /// Algorithm 1 line 16-17: per-slice `cacheCycle` + fills from DRAM.
+    pub fn cache_cycle(&mut self, now: u64) {
+        // route DRAM completions to their slice
+        while let Some(done) = self.dram.pop_done() {
+            let local = done.subpart % self.subs.len();
+            self.subs[local].dram_fill(now, done.req);
+        }
+        for s in &mut self.subs {
+            s.cache_cycle(now, &mut self.dram);
+        }
+    }
+
+    /// Gather per-partition statistics (slices + DRAM counters).
+    pub fn collect_stats(&self) -> Vec<MemStats> {
+        let mut out: Vec<MemStats> = self.subs.iter().map(|s| s.stats.clone()).collect();
+        // attach DRAM channel counters to slice 0's report
+        out[0].merge(&self.dram_stats);
+        out
+    }
+
+    pub fn reset_stats(&mut self) {
+        for s in &mut self.subs {
+            s.stats = MemStats::default();
+        }
+        self.dram_stats = MemStats::default();
+    }
+
+    pub fn is_idle(&self) -> bool {
+        self.dram.is_idle() && self.subs.iter().all(|s| s.is_idle())
+    }
+
+    pub fn flush(&mut self) {
+        self.dram.flush();
+        for s in &mut self.subs {
+            s.flush();
+        }
+    }
+
+    /// Record an icnt-delivery failure (queue full) for diagnostics.
+    pub fn note_queue_full(&mut self) {
+        self.dram_stats.dram_queue_full_stalls += 1;
+    }
+}
+
+/// Helper for the engine: make a reply packet from a memory reply.
+pub fn reply_packet(req: MemRequest, src_node: usize, now: u64, latency: u32) -> Packet {
+    Packet {
+        req,
+        is_reply: true,
+        src: src_node as u32,
+        dst: req.sm_id,
+        size_bytes: req.reply_bytes(),
+        ready_cycle: now + latency as u64,
+        seq: 0, // assigned by the icnt on injection
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mem::{WarpRef, LINE_BYTES};
+
+    fn cfg() -> GpuConfig {
+        GpuConfig::tiny()
+    }
+
+    fn rd(line: u64, sm: u32) -> MemRequest {
+        MemRequest {
+            line_addr: line * LINE_BYTES,
+            is_write: false,
+            sm_id: sm,
+            warp: WarpRef { warp_slot: 3, load_slot: 1 },
+        }
+    }
+
+    #[test]
+    fn read_miss_goes_to_dram_and_returns() {
+        let mut p = MemPartition::new(0, &cfg());
+        p.subs[0].push_request(rd(5, 2));
+        let mut reply = None;
+        for now in 0..5000u64 {
+            p.dram_cycle();
+            p.cache_cycle(now);
+            if let Some(r) = p.subs[0].pop_reply(now) {
+                reply = Some(r);
+                break;
+            }
+        }
+        let r = reply.expect("reply must come back");
+        assert_eq!(r.line_addr, 5 * LINE_BYTES);
+        assert_eq!(r.sm_id, 2);
+        assert_eq!(r.warp.warp_slot, 3);
+        let st = p.collect_stats();
+        assert_eq!(st[0].l2_misses + st[1].l2_misses, 1);
+        assert_eq!(st[0].dram_reads, 1);
+    }
+
+    #[test]
+    fn second_read_hits_in_l2() {
+        let mut p = MemPartition::new(0, &cfg());
+        p.subs[0].push_request(rd(5, 0));
+        let mut now = 0;
+        loop {
+            p.dram_cycle();
+            p.cache_cycle(now);
+            if p.subs[0].pop_reply(now).is_some() {
+                break;
+            }
+            now += 1;
+            assert!(now < 5000);
+        }
+        p.subs[0].push_request(rd(5, 0));
+        let mut hit_reply = false;
+        for t in now..now + 400 {
+            p.dram_cycle();
+            p.cache_cycle(t);
+            if p.subs[0].pop_reply(t).is_some() {
+                hit_reply = true;
+                break;
+            }
+        }
+        assert!(hit_reply);
+        assert_eq!(p.subs[0].stats.l2_hits, 1);
+    }
+
+    #[test]
+    fn write_miss_allocates_no_reply() {
+        let mut p = MemPartition::new(0, &cfg());
+        let mut w = rd(9, 0);
+        w.is_write = true;
+        p.subs[0].push_request(w);
+        for now in 0..5000u64 {
+            p.dram_cycle();
+            p.cache_cycle(now);
+            assert!(p.subs[0].pop_reply(now).is_none(), "writes are fire-and-forget");
+        }
+        assert!(p.is_idle(), "write must drain");
+    }
+
+    #[test]
+    fn idle_after_drain() {
+        let mut p = MemPartition::new(0, &cfg());
+        assert!(p.is_idle());
+        p.subs[1].push_request(rd(77, 1));
+        assert!(!p.is_idle());
+        for now in 0..5000u64 {
+            p.dram_cycle();
+            p.cache_cycle(now);
+            p.subs[1].pop_reply(now);
+        }
+        assert!(p.is_idle());
+    }
+
+    #[test]
+    fn merged_misses_two_replies() {
+        let mut p = MemPartition::new(0, &cfg());
+        let a = rd(5, 0);
+        let mut b = rd(5, 1);
+        b.warp = WarpRef { warp_slot: 9, load_slot: 0 };
+        p.subs[0].push_request(a);
+        p.subs[0].push_request(b);
+        let mut replies = Vec::new();
+        for now in 0..5000u64 {
+            p.dram_cycle();
+            p.cache_cycle(now);
+            while let Some(r) = p.subs[0].pop_reply(now) {
+                replies.push(r);
+            }
+        }
+        assert_eq!(replies.len(), 2);
+        assert_eq!(p.subs[0].stats.l2_mshr_merges, 1);
+        // merged replies routed to each requester's own SM and warp
+        let ids: Vec<(u32, u16)> =
+            replies.iter().map(|r| (r.sm_id, r.warp.warp_slot)).collect();
+        assert!(ids.contains(&(0, 3)) && ids.contains(&(1, 9)));
+    }
+}

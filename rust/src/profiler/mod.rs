@@ -1,0 +1,219 @@
+//! Per-phase cycle-loop profiler — the in-simulator equivalent of the
+//! paper's gperftools run (Fig 4): how much of the wall-clock goes to the
+//! SM loop vs the interconnect / L2 / DRAM phases?
+//!
+//! To keep the observer effect small the profiler samples one cycle in
+//! `sample_every` and scales; with the default 8 the overhead is a few
+//! `Instant::now()` calls per sampled cycle.
+
+use std::time::Instant;
+
+/// Phases of Algorithm 1 (plus block issue).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    /// Line 8: `doIcntToSm` — deliver replies to SM response ports.
+    IcntToSm = 0,
+    /// Lines 9–11: `doMemSubpartitionToIcnt`.
+    MemToIcnt = 1,
+    /// Lines 12–14: DRAM channel cycles.
+    Dram = 2,
+    /// Lines 15–18: `doIcntToMemSubpartition` + L2 `cacheCycle`.
+    L2Cache = 3,
+    /// Line 19: `doIcntScheduling` (incl. draining SM injection ports).
+    IcntSched = 4,
+    /// Lines 21–23: the SM loop — the paper's parallelization target.
+    SmCycle = 5,
+    /// Line 25: `issueBlocksToSMs`.
+    Issue = 6,
+}
+
+pub const NUM_PHASES: usize = 7;
+
+pub const PHASE_NAMES: [&str; NUM_PHASES] = [
+    "icnt→SM",
+    "memsub→icnt",
+    "DRAM cycle",
+    "L2 cache cycle",
+    "icnt scheduling",
+    "SM cycles",
+    "issue blocks",
+];
+
+/// Sampling phase profiler.
+#[derive(Debug, Clone)]
+pub struct PhaseProfiler {
+    enabled: bool,
+    sample_every: u64,
+    cycle_counter: u64,
+    sampling: bool,
+    /// Accumulated nanoseconds per phase (sampled cycles only).
+    ns: [u64; NUM_PHASES],
+    /// Sampled-cycle count.
+    samples: u64,
+}
+
+impl PhaseProfiler {
+    pub fn new(enabled: bool, sample_every: u64) -> Self {
+        PhaseProfiler {
+            enabled,
+            sample_every: sample_every.max(1),
+            cycle_counter: 0,
+            sampling: false,
+            ns: [0; NUM_PHASES],
+            samples: 0,
+        }
+    }
+
+    pub fn disabled() -> Self {
+        Self::new(false, 8)
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Call at the top of each simulated cycle.
+    #[inline]
+    pub fn begin_cycle(&mut self) {
+        if !self.enabled {
+            return;
+        }
+        self.sampling = self.cycle_counter % self.sample_every == 0;
+        self.cycle_counter += 1;
+        if self.sampling {
+            self.samples += 1;
+        }
+    }
+
+    /// Start timing a phase; returns a token for [`Self::record`].
+    #[inline]
+    pub fn mark(&self) -> Option<Instant> {
+        if self.enabled && self.sampling {
+            Some(Instant::now())
+        } else {
+            None
+        }
+    }
+
+    /// Stop timing: accumulate elapsed ns into `phase`.
+    #[inline]
+    pub fn record(&mut self, phase: Phase, mark: Option<Instant>) {
+        if let Some(t0) = mark {
+            self.ns[phase as usize] += t0.elapsed().as_nanos() as u64;
+        }
+    }
+
+    /// Estimated *total* nanoseconds per phase (scaled by the sampling
+    /// ratio).
+    pub fn phase_ns(&self) -> [u64; NUM_PHASES] {
+        let mut out = self.ns;
+        for v in &mut out {
+            *v *= self.sample_every;
+        }
+        out
+    }
+
+    /// Phase shares in percent (Fig 4's quantity). Empty if nothing
+    /// was sampled.
+    pub fn percentages(&self) -> Option<[f64; NUM_PHASES]> {
+        let total: u64 = self.ns.iter().sum();
+        if total == 0 {
+            return None;
+        }
+        let mut out = [0.0; NUM_PHASES];
+        for (i, &v) in self.ns.iter().enumerate() {
+            out[i] = 100.0 * v as f64 / total as f64;
+        }
+        Some(out)
+    }
+
+    /// Estimated seconds spent in the SM-cycle phase.
+    pub fn sm_section_s(&self) -> f64 {
+        self.phase_ns()[Phase::SmCycle as usize] as f64 / 1e9
+    }
+
+    /// Estimated seconds across all phases.
+    pub fn total_s(&self) -> f64 {
+        self.phase_ns().iter().sum::<u64>() as f64 / 1e9
+    }
+
+    pub fn reset(&mut self) {
+        self.ns = [0; NUM_PHASES];
+        self.samples = 0;
+        self.cycle_counter = 0;
+    }
+
+    /// Render the Fig-4-style table.
+    pub fn report(&self) -> String {
+        let Some(pct) = self.percentages() else {
+            return "profiler: no samples".into();
+        };
+        let ns = self.phase_ns();
+        let mut s = String::from("phase                  time        share\n");
+        for i in 0..NUM_PHASES {
+            s.push_str(&format!(
+                "{:<20} {:>10.3} ms {:>7.2} %\n",
+                PHASE_NAMES[i],
+                ns[i] as f64 / 1e6,
+                pct[i]
+            ));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_profiler_is_free_and_silent() {
+        let mut p = PhaseProfiler::disabled();
+        p.begin_cycle();
+        let m = p.mark();
+        assert!(m.is_none());
+        p.record(Phase::SmCycle, m);
+        assert!(p.percentages().is_none());
+        assert_eq!(p.sm_section_s(), 0.0);
+    }
+
+    #[test]
+    fn accumulates_and_scales() {
+        let mut p = PhaseProfiler::new(true, 2);
+        for _ in 0..10 {
+            p.begin_cycle();
+            let m = p.mark();
+            std::thread::sleep(std::time::Duration::from_micros(200));
+            p.record(Phase::SmCycle, m);
+            let m2 = p.mark();
+            p.record(Phase::Dram, m2);
+        }
+        let pct = p.percentages().expect("sampled");
+        assert!(pct[Phase::SmCycle as usize] > 90.0, "{pct:?}");
+        // 5 sampled cycles × 200µs × scale 2 ≈ 2ms
+        assert!(p.sm_section_s() > 0.0015);
+        let r = p.report();
+        assert!(r.contains("SM cycles"));
+    }
+
+    #[test]
+    fn sampling_every_cycle_when_requested() {
+        let mut p = PhaseProfiler::new(true, 1);
+        for _ in 0..5 {
+            p.begin_cycle();
+            let m = p.mark();
+            assert!(m.is_some());
+            p.record(Phase::Issue, m);
+        }
+    }
+
+    #[test]
+    fn reset_clears() {
+        let mut p = PhaseProfiler::new(true, 1);
+        p.begin_cycle();
+        let m = p.mark();
+        p.record(Phase::SmCycle, m);
+        p.reset();
+        assert!(p.percentages().is_none());
+    }
+}

@@ -1,0 +1,109 @@
+//! XLA/PJRT runtime bridge — loads the AOT artifacts produced by
+//! `python/compile/aot.py` and executes them on the PJRT CPU client.
+//!
+//! Role in the reproduction: the GEMM-family workloads (CUTLASS,
+//! DeepBench) carry real semantics; the simulator's functional model
+//! replays their tile computation ([`crate::trace::functional`]), and this
+//! module provides the *independent* reference — the same GEMM lowered
+//! from JAX (calling the Pallas L1 kernel) to HLO text at build time and
+//! executed through XLA. `examples/gemm_validate.rs` asserts the two
+//! agree, proving the simulated workload computes the real thing.
+//!
+//! Python never runs here: artifacts are plain HLO text files, loaded
+//! with `HloModuleProto::from_text_file` (the interchange that survives
+//! the jax≥0.5 ↔ xla_extension 0.5.1 proto-id mismatch — see
+//! /opt/xla-example/README.md).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+/// Default artifacts directory (relative to the repo root).
+pub const ARTIFACTS_DIR: &str = "artifacts";
+
+/// A compiled HLO executable bound to a PJRT client.
+pub struct CompiledHlo {
+    client: xla::PjRtClient,
+    exe: xla::PjRtLoadedExecutable,
+    path: PathBuf,
+}
+
+impl std::fmt::Debug for CompiledHlo {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("CompiledHlo").field("path", &self.path).finish()
+    }
+}
+
+impl CompiledHlo {
+    /// Load HLO text from `path`, compile on the PJRT CPU client.
+    pub fn load(path: &Path) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("artifact path not UTF-8")?,
+        )
+        .with_context(|| format!("parse HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp).context("XLA compile")?;
+        Ok(CompiledHlo { client, exe, path: path.to_path_buf() })
+    }
+
+    /// PJRT platform name (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Execute with f32 matrix inputs (each given as (data, rows, cols),
+    /// row-major). The artifact was lowered with `return_tuple=True`, so
+    /// the single output is unwrapped from a 1-tuple.
+    pub fn run_f32(&self, inputs: &[(&[f32], usize, usize)]) -> Result<Vec<f32>> {
+        let mut literals = Vec::with_capacity(inputs.len());
+        for &(data, rows, cols) in inputs {
+            if data.len() != rows * cols {
+                bail!("input shape mismatch: {} != {rows}×{cols}", data.len());
+            }
+            let lit = xla::Literal::vec1(data)
+                .reshape(&[rows as i64, cols as i64])
+                .context("reshape input literal")?;
+            literals.push(lit);
+        }
+        let result = self.exe.execute::<xla::Literal>(&literals).context("execute")?[0][0]
+            .to_literal_sync()
+            .context("device→host")?;
+        let out = result.to_tuple1().context("unwrap 1-tuple output")?;
+        Ok(out.to_vec::<f32>().context("literal→vec")?)
+    }
+}
+
+/// Resolve an artifact by stem name, checking the conventional locations.
+pub fn artifact_path(stem: &str) -> PathBuf {
+    let candidates = [
+        PathBuf::from(ARTIFACTS_DIR).join(format!("{stem}.hlo.txt")),
+        PathBuf::from("..").join(ARTIFACTS_DIR).join(format!("{stem}.hlo.txt")),
+    ];
+    for c in &candidates {
+        if c.exists() {
+            return c.clone();
+        }
+    }
+    candidates[0].clone()
+}
+
+/// Check whether artifacts exist (tests skip gracefully when
+/// `make artifacts` has not run).
+pub fn artifacts_available(stem: &str) -> bool {
+    artifact_path(stem).exists()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn artifact_path_convention() {
+        let p = artifact_path("gemm_val");
+        assert!(p.to_string_lossy().contains("gemm_val.hlo.txt"));
+    }
+
+    // Full load/execute round-trips are covered by tests/runtime_xla.rs
+    // (integration), which skip when artifacts are absent.
+}

@@ -1,0 +1,211 @@
+//! Statistics diffing — the tool behind the determinism claim.
+//!
+//! The paper's central property is that the N-thread simulator reports
+//! *exactly* the same statistics as the single-threaded one. Fingerprints
+//! ([`crate::stats::KernelStats::fingerprint`]) give a fast yes/no; this
+//! module produces the human-readable counter-by-counter report used by
+//! `examples/determinism_check.rs` and the integration tests, so that any
+//! regression names the first diverging counter instead of just failing.
+
+use super::{GpuStats, KernelStats};
+
+/// One diverging value between two runs.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DiffEntry {
+    /// Where the divergence is, e.g. `kernel[3].sm.l1d_hits`.
+    pub path: String,
+    pub lhs: u64,
+    pub rhs: u64,
+}
+
+/// Result of comparing two runs.
+#[derive(Debug, Clone, Default)]
+pub struct StatsDiff {
+    pub entries: Vec<DiffEntry>,
+    /// Structural mismatches (different kernel counts etc.).
+    pub structural: Vec<String>,
+}
+
+impl StatsDiff {
+    pub fn identical(&self) -> bool {
+        self.entries.is_empty() && self.structural.is_empty()
+    }
+
+    /// Render as an aligned report (empty string when identical).
+    pub fn report(&self) -> String {
+        if self.identical() {
+            return String::new();
+        }
+        let mut out = String::new();
+        for s in &self.structural {
+            out.push_str(&format!("STRUCTURAL: {s}\n"));
+        }
+        for e in &self.entries {
+            out.push_str(&format!(
+                "{:<48} lhs={:<14} rhs={:<14} Δ={}\n",
+                e.path,
+                e.lhs,
+                e.rhs,
+                e.rhs as i128 - e.lhs as i128
+            ));
+        }
+        out
+    }
+}
+
+/// Compare two kernels counter-by-counter.
+pub fn diff_kernel_stats(prefix: &str, a: &KernelStats, b: &KernelStats) -> Vec<DiffEntry> {
+    let mut out = Vec::new();
+    if a.cycles != b.cycles {
+        out.push(DiffEntry { path: format!("{prefix}.cycles"), lhs: a.cycles, rhs: b.cycles });
+    }
+    if a.grid_ctas != b.grid_ctas {
+        out.push(DiffEntry {
+            path: format!("{prefix}.grid_ctas"),
+            lhs: a.grid_ctas,
+            rhs: b.grid_ctas,
+        });
+    }
+    // Aggregate SM counters
+    let mut bvals = Vec::new();
+    b.sm.visit_counters(|_, v| bvals.push(v));
+    let mut i = 0;
+    a.sm.visit_counters(|name, v| {
+        if v != bvals[i] {
+            out.push(DiffEntry { path: format!("{prefix}.sm.{name}"), lhs: v, rhs: bvals[i] });
+        }
+        i += 1;
+    });
+    // Memory counters
+    let mut bmem = Vec::new();
+    b.mem.visit_counters(|_, v| bmem.push(v));
+    let mut j = 0;
+    a.mem.visit_counters(|name, v| {
+        if v != bmem[j] {
+            out.push(DiffEntry { path: format!("{prefix}.mem.{name}"), lhs: v, rhs: bmem[j] });
+        }
+        j += 1;
+    });
+    if a.unique_lines_global != b.unique_lines_global {
+        out.push(DiffEntry {
+            path: format!("{prefix}.unique_lines_global"),
+            lhs: a.unique_lines_global,
+            rhs: b.unique_lines_global,
+        });
+    }
+    if a.unique_lines_fp != b.unique_lines_fp {
+        out.push(DiffEntry {
+            path: format!("{prefix}.unique_lines_fp"),
+            lhs: a.unique_lines_fp,
+            rhs: b.unique_lines_fp,
+        });
+    }
+    out
+}
+
+/// Compare two full runs. Per-SM breakdowns are compared too (not just the
+/// aggregate), because a pair of compensating errors across SMs must not
+/// masquerade as determinism.
+pub fn diff_runs(a: &GpuStats, b: &GpuStats) -> StatsDiff {
+    let mut d = StatsDiff::default();
+    if a.kernels.len() != b.kernels.len() {
+        d.structural.push(format!(
+            "kernel count differs: {} vs {}",
+            a.kernels.len(),
+            b.kernels.len()
+        ));
+        return d;
+    }
+    for (i, (ka, kb)) in a.kernels.iter().zip(&b.kernels).enumerate() {
+        if ka.name != kb.name {
+            d.structural.push(format!("kernel[{i}] name differs: {} vs {}", ka.name, kb.name));
+            continue;
+        }
+        d.entries.extend(diff_kernel_stats(&format!("kernel[{i}]"), ka, kb));
+        if ka.per_sm.len() != kb.per_sm.len() {
+            d.structural.push(format!(
+                "kernel[{i}] per-SM count differs: {} vs {}",
+                ka.per_sm.len(),
+                kb.per_sm.len()
+            ));
+            continue;
+        }
+        for (s, (sa, sb)) in ka.per_sm.iter().zip(&kb.per_sm).enumerate() {
+            if sa != sb {
+                // report the first differing counter for this SM
+                let mut bvals = Vec::new();
+                sb.visit_counters(|_, v| bvals.push(v));
+                let mut idx = 0;
+                sa.visit_counters(|name, v| {
+                    if v != bvals[idx] {
+                        d.entries.push(DiffEntry {
+                            path: format!("kernel[{i}].sm[{s}].{name}"),
+                            lhs: v,
+                            rhs: bvals[idx],
+                        });
+                    }
+                    idx += 1;
+                });
+                if sa.unique_lines != sb.unique_lines {
+                    d.entries.push(DiffEntry {
+                        path: format!("kernel[{i}].sm[{s}].unique_lines(fp)"),
+                        lhs: sa.unique_lines.fingerprint(),
+                        rhs: sb.unique_lines.fingerprint(),
+                    });
+                }
+            }
+        }
+    }
+    d
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stats::SmStats;
+
+    fn run_with(cycles: u64, issued: u64) -> GpuStats {
+        let mut sm = SmStats::default();
+        sm.warp_insts_issued = issued;
+        let k = KernelStats::aggregate("k", 0, cycles, 4, vec![sm], &[], None);
+        GpuStats { workload: "w".into(), kernels: vec![k], ..Default::default() }
+    }
+
+    #[test]
+    fn identical_runs_diff_empty() {
+        let a = run_with(100, 50);
+        let b = run_with(100, 50);
+        let d = diff_runs(&a, &b);
+        assert!(d.identical(), "{}", d.report());
+        assert_eq!(d.report(), "");
+    }
+
+    #[test]
+    fn cycle_divergence_reported() {
+        let a = run_with(100, 50);
+        let b = run_with(101, 50);
+        let d = diff_runs(&a, &b);
+        assert!(!d.identical());
+        assert!(d.report().contains("kernel[0].cycles"));
+    }
+
+    #[test]
+    fn counter_divergence_names_the_counter() {
+        let a = run_with(100, 50);
+        let b = run_with(100, 51);
+        let d = diff_runs(&a, &b);
+        assert!(d.entries.iter().any(|e| e.path.contains("warp_insts_issued")));
+        // per-SM divergence reported too, not only the aggregate
+        assert!(d.entries.iter().any(|e| e.path.contains("sm[0]")));
+    }
+
+    #[test]
+    fn structural_mismatch_reported() {
+        let a = run_with(100, 50);
+        let mut b = run_with(100, 50);
+        b.kernels.clear();
+        let d = diff_runs(&a, &b);
+        assert!(!d.identical());
+        assert!(!d.structural.is_empty());
+    }
+}

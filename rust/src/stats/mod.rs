@@ -1,0 +1,622 @@
+//! Statistics — the paper's §3 data-race surface, made safe.
+//!
+//! In vanilla Accel-sim most statistics are *GPU-global*: every SM bumps the
+//! same counters, and some stats are sets/maps (e.g. "how many distinct
+//! memory addresses were touched?"). Parallelizing the SM loop makes every
+//! one of those updates a data race. The paper's fix — and this module's
+//! default — is **per-SM statistics**: each SM owns an [`SmStats`], updated
+//! race-free inside the parallel section, and a single reduction
+//! ([`KernelStats::aggregate`]) merges them when the kernel completes, so
+//! reported output is identical to the single-threaded simulator.
+//!
+//! The two alternatives the paper discusses for non-counter stats are also
+//! implemented, selected by [`crate::config::StatsStrategy`]:
+//!
+//! * `SharedLocked` — one global structure behind a mutex (the rejected
+//!   anti-pattern; `benches/ablation_stats.rs` quantifies the serialization
+//!   cost the paper cites).
+//! * `SeqPoint` — per-SM append-only buffers drained into the global
+//!   structure at a *sequential* point of the cycle (the paper's "find a
+//!   place where the simulator is executed sequentially").
+//!
+//! All three strategies must produce identical final statistics; an
+//! integration test asserts this for every workload.
+
+pub mod diff;
+pub mod export;
+
+use std::collections::HashSet;
+use std::hash::{BuildHasherDefault, Hasher};
+use std::sync::Mutex;
+
+pub use diff::{diff_kernel_stats, StatsDiff};
+
+/// Macro listing every u64 counter in `SmStats` exactly once, so merge /
+/// fingerprint / diff / csv never go out of sync with the struct.
+macro_rules! for_each_sm_counter {
+    ($m:ident) => {
+        $m!(cycles, "SM cycles this kernel (max over SMs = kernel cycles)");
+        $m!(active_cycles, "cycles with ≥1 resident warp");
+        $m!(busy_cycles, "cycles with ≥1 issued instruction");
+        $m!(warp_insts_issued, "warp instructions issued");
+        $m!(thread_insts, "thread instructions (warp insts × active lanes)");
+        $m!(insts_fp32, "FP32 warp instructions");
+        $m!(insts_fp64, "FP64 warp instructions");
+        $m!(insts_int, "INT warp instructions");
+        $m!(insts_sfu, "SFU warp instructions");
+        $m!(insts_tensor, "tensor-core warp instructions");
+        $m!(insts_ld, "global/local load warp instructions");
+        $m!(insts_st, "global/local store warp instructions");
+        $m!(insts_smem, "shared-memory warp instructions");
+        $m!(insts_bar, "barrier instructions");
+        $m!(insts_ctrl, "control instructions");
+        $m!(stall_no_ready_warp, "issue cycles with no ready warp");
+        $m!(stall_scoreboard, "warps skipped: scoreboard hazard");
+        $m!(stall_ibuffer_empty, "warps skipped: empty ibuffer");
+        $m!(stall_exec_structural, "issue fail: execution pipe full");
+        $m!(stall_ldst_structural, "issue fail: LD/ST queue full");
+        $m!(stall_barrier, "warps skipped: waiting at barrier");
+        $m!(fetch_requests, "instruction fetch requests");
+        $m!(l0i_hits, "L0 i-cache hits");
+        $m!(l0i_misses, "L0 i-cache misses");
+        $m!(l1i_hits, "L1 i-cache hits");
+        $m!(l1i_misses, "L1 i-cache misses");
+        $m!(l1d_accesses, "L1D accesses (coalesced transactions)");
+        $m!(l1d_hits, "L1D hits");
+        $m!(l1d_misses, "L1D misses");
+        $m!(l1d_mshr_merges, "L1D misses merged into an in-flight MSHR");
+        $m!(l1d_reservation_fails, "L1D stalls: no MSHR/miss-queue slot");
+        $m!(smem_accesses, "shared-memory transactions");
+        $m!(smem_bank_conflicts, "extra cycles from shared-memory bank conflicts");
+        $m!(coalesced_from, "lane accesses before coalescing");
+        $m!(coalesced_to, "memory transactions after coalescing");
+        $m!(icnt_packets_out, "packets injected toward memory");
+        $m!(icnt_packets_in, "reply packets received");
+        $m!(icnt_inject_stalls, "cycles LD/ST blocked on full injection port");
+        $m!(ctas_launched, "CTAs launched on this SM");
+        $m!(ctas_completed, "CTAs completed on this SM");
+        $m!(warps_completed, "warps that ran to EXIT");
+        $m!(barriers_completed, "CTA-wide barrier releases");
+    };
+}
+
+/// Per-SM statistics. One instance per SM; updated only by that SM inside
+/// the parallel section (the paper's race-free isolation).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct SmStats {
+    // counters — generated from the macro list above
+    pub cycles: u64,
+    pub active_cycles: u64,
+    pub busy_cycles: u64,
+    pub warp_insts_issued: u64,
+    pub thread_insts: u64,
+    pub insts_fp32: u64,
+    pub insts_fp64: u64,
+    pub insts_int: u64,
+    pub insts_sfu: u64,
+    pub insts_tensor: u64,
+    pub insts_ld: u64,
+    pub insts_st: u64,
+    pub insts_smem: u64,
+    pub insts_bar: u64,
+    pub insts_ctrl: u64,
+    pub stall_no_ready_warp: u64,
+    pub stall_scoreboard: u64,
+    pub stall_ibuffer_empty: u64,
+    pub stall_exec_structural: u64,
+    pub stall_ldst_structural: u64,
+    pub stall_barrier: u64,
+    pub fetch_requests: u64,
+    pub l0i_hits: u64,
+    pub l0i_misses: u64,
+    pub l1i_hits: u64,
+    pub l1i_misses: u64,
+    pub l1d_accesses: u64,
+    pub l1d_hits: u64,
+    pub l1d_misses: u64,
+    pub l1d_mshr_merges: u64,
+    pub l1d_reservation_fails: u64,
+    pub smem_accesses: u64,
+    pub smem_bank_conflicts: u64,
+    pub coalesced_from: u64,
+    pub coalesced_to: u64,
+    pub icnt_packets_out: u64,
+    pub icnt_packets_in: u64,
+    pub icnt_inject_stalls: u64,
+    pub ctas_launched: u64,
+    pub ctas_completed: u64,
+    pub warps_completed: u64,
+    pub barriers_completed: u64,
+
+    /// §3 non-counter stat: distinct global-memory *line* addresses touched
+    /// by this SM (strategy `PerSm`: merged by union at kernel end).
+    pub unique_lines: AddrSet,
+
+    /// §3 `SeqPoint` strategy: addresses appended here (race-free: per-SM)
+    /// and drained into the global set at the sequential phase.
+    pub addr_buffer: Vec<u64>,
+}
+
+impl SmStats {
+    /// Merge `other` into `self` (the kernel-end reduction).
+    pub fn merge(&mut self, other: &SmStats) {
+        macro_rules! add {
+            ($f:ident, $doc:literal) => {
+                self.$f += other.$f;
+            };
+        }
+        for_each_sm_counter!(add);
+        self.unique_lines.union_with(&other.unique_lines);
+    }
+
+    /// Visit every counter as `(name, value)` in a fixed, documented order
+    /// (used by fingerprinting, diffing and CSV output).
+    pub fn visit_counters(&self, mut f: impl FnMut(&'static str, u64)) {
+        macro_rules! visit {
+            ($field:ident, $doc:literal) => {
+                f(stringify!($field), self.$field);
+            };
+        }
+        for_each_sm_counter!(visit);
+    }
+
+    /// Counter descriptions, for `parsim stats --describe`.
+    pub fn describe() -> Vec<(&'static str, &'static str)> {
+        let mut out = Vec::new();
+        macro_rules! desc {
+            ($field:ident, $doc:literal) => {
+                out.push((stringify!($field), $doc));
+            };
+        }
+        for_each_sm_counter!(desc);
+        out
+    }
+
+    /// Reset for kernel start, keeping allocation.
+    pub fn reset(&mut self) {
+        *self = SmStats { addr_buffer: std::mem::take(&mut self.addr_buffer), ..Default::default() };
+        self.addr_buffer.clear();
+    }
+}
+
+/// Per-memory-sub-partition statistics (updated only in sequential phases;
+/// no isolation needed, but kept per-slice for symmetric reporting).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct MemStats {
+    pub l2_accesses: u64,
+    pub l2_hits: u64,
+    pub l2_misses: u64,
+    pub l2_mshr_merges: u64,
+    pub l2_writebacks: u64,
+    pub l2_reservation_fails: u64,
+    pub dram_reads: u64,
+    pub dram_writes: u64,
+    pub dram_row_hits: u64,
+    pub dram_row_misses: u64,
+    pub dram_bank_busy_cycles: u64,
+    pub dram_queue_full_stalls: u64,
+}
+
+impl MemStats {
+    pub fn merge(&mut self, o: &MemStats) {
+        self.l2_accesses += o.l2_accesses;
+        self.l2_hits += o.l2_hits;
+        self.l2_misses += o.l2_misses;
+        self.l2_mshr_merges += o.l2_mshr_merges;
+        self.l2_writebacks += o.l2_writebacks;
+        self.l2_reservation_fails += o.l2_reservation_fails;
+        self.dram_reads += o.dram_reads;
+        self.dram_writes += o.dram_writes;
+        self.dram_row_hits += o.dram_row_hits;
+        self.dram_row_misses += o.dram_row_misses;
+        self.dram_bank_busy_cycles += o.dram_bank_busy_cycles;
+        self.dram_queue_full_stalls += o.dram_queue_full_stalls;
+    }
+
+    pub fn visit_counters(&self, mut f: impl FnMut(&'static str, u64)) {
+        f("l2_accesses", self.l2_accesses);
+        f("l2_hits", self.l2_hits);
+        f("l2_misses", self.l2_misses);
+        f("l2_mshr_merges", self.l2_mshr_merges);
+        f("l2_writebacks", self.l2_writebacks);
+        f("l2_reservation_fails", self.l2_reservation_fails);
+        f("dram_reads", self.dram_reads);
+        f("dram_writes", self.dram_writes);
+        f("dram_row_hits", self.dram_row_hits);
+        f("dram_row_misses", self.dram_row_misses);
+        f("dram_bank_busy_cycles", self.dram_bank_busy_cycles);
+        f("dram_queue_full_stalls", self.dram_queue_full_stalls);
+    }
+}
+
+/// u64 hasher based on the SplitMix64 finalizer: deterministic across
+/// runs/platforms (unlike `RandomState`) and ~4× cheaper than SipHash for
+/// the 8-byte keys the hot path inserts.
+#[derive(Default)]
+pub struct Mix64Hasher(u64);
+
+impl Hasher for Mix64Hasher {
+    #[inline]
+    fn finish(&self) -> u64 {
+        self.0
+    }
+    #[inline]
+    fn write(&mut self, bytes: &[u8]) {
+        // only used with u64 keys; fold arbitrary input just in case
+        for chunk in bytes.chunks(8) {
+            let mut buf = [0u8; 8];
+            buf[..chunk.len()].copy_from_slice(chunk);
+            self.0 = crate::util::mix64(self.0 ^ u64::from_le_bytes(buf));
+        }
+    }
+    #[inline]
+    fn write_u64(&mut self, v: u64) {
+        self.0 = crate::util::mix64(self.0 ^ v);
+    }
+}
+
+type MixBuild = BuildHasherDefault<Mix64Hasher>;
+
+/// Set of distinct line addresses — the paper's example of a non-counter,
+/// non-thread-safe stat (§3). Union-mergeable; deterministic count.
+#[derive(Debug, Clone, Default)]
+pub struct AddrSet {
+    set: HashSet<u64, MixBuild>,
+}
+
+impl PartialEq for AddrSet {
+    fn eq(&self, other: &Self) -> bool {
+        self.set == other.set
+    }
+}
+
+impl AddrSet {
+    pub fn insert(&mut self, addr: u64) {
+        self.set.insert(addr);
+    }
+    pub fn len(&self) -> usize {
+        self.set.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.set.is_empty()
+    }
+    pub fn union_with(&mut self, other: &AddrSet) {
+        for &a in &other.set {
+            self.set.insert(a);
+        }
+    }
+    /// Deterministic content fingerprint (order-independent: XOR of mixes).
+    pub fn fingerprint(&self) -> u64 {
+        let mut h = 0u64;
+        for &a in &self.set {
+            h ^= crate::util::mix64(a);
+        }
+        h ^ (self.set.len() as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15)
+    }
+    pub fn clear(&mut self) {
+        self.set.clear();
+    }
+}
+
+/// §3 `SharedLocked` strategy: the global, mutex-guarded structure that
+/// vanilla shared stats would need under parallel SMs. Deliberately the
+/// slow path — see `benches/ablation_stats.rs`.
+#[derive(Debug, Default)]
+pub struct SharedLockedStats {
+    inner: Mutex<SharedLockedInner>,
+}
+
+#[derive(Debug, Default)]
+struct SharedLockedInner {
+    pub warp_insts_issued: u64,
+    pub l1d_accesses: u64,
+    pub unique_lines: AddrSet,
+}
+
+impl SharedLockedStats {
+    pub fn new() -> Self {
+        Self::default()
+    }
+    /// Called from inside the parallel SM section (contended on purpose).
+    pub fn record_issue(&self, n: u64) {
+        self.inner.lock().unwrap().warp_insts_issued += n;
+    }
+    pub fn record_l1d_access(&self, line_addr: u64) {
+        let mut g = self.inner.lock().unwrap();
+        g.l1d_accesses += 1;
+        g.unique_lines.insert(line_addr);
+    }
+    pub fn snapshot(&self) -> (u64, u64, u64) {
+        let g = self.inner.lock().unwrap();
+        (g.warp_insts_issued, g.l1d_accesses, g.unique_lines.len() as u64)
+    }
+    pub fn unique_lines_fingerprint(&self) -> u64 {
+        self.inner.lock().unwrap().unique_lines.fingerprint()
+    }
+    pub fn reset(&self) {
+        let mut g = self.inner.lock().unwrap();
+        *g = SharedLockedInner::default();
+    }
+}
+
+/// Aggregated statistics for one simulated kernel launch.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct KernelStats {
+    pub name: String,
+    pub kernel_id: usize,
+    /// GPU cycles the kernel was resident.
+    pub cycles: u64,
+    /// Grid size (CTAs) — Fig 7's quantity.
+    pub grid_ctas: u64,
+    /// Aggregate over SMs (reduction of per-SM stats).
+    pub sm: SmStats,
+    /// Per-SM copies, preserved for balance analysis / the cost model.
+    pub per_sm: Vec<SmStats>,
+    /// Aggregate over memory sub-partitions.
+    pub mem: MemStats,
+    /// Distinct global lines across the whole GPU (union of per-SM sets,
+    /// or the seq-point/locked global set — identical by construction).
+    pub unique_lines_global: u64,
+    /// Fingerprint of the global unique-line *contents* (not just count).
+    pub unique_lines_fp: u64,
+}
+
+impl KernelStats {
+    /// The kernel-end reduction: fold per-SM stats into one, mirroring how
+    /// the paper "gathers each of the stats reported by SM into a single
+    /// GPU stat to report stats in the same way as the single-threaded
+    /// simulator".
+    pub fn aggregate(
+        name: &str,
+        kernel_id: usize,
+        cycles: u64,
+        grid_ctas: u64,
+        per_sm: Vec<SmStats>,
+        mem_parts: &[MemStats],
+        global_lines: Option<(u64, u64)>, // (count, fingerprint) for SeqPoint/Locked
+    ) -> KernelStats {
+        let mut agg = SmStats::default();
+        for s in &per_sm {
+            agg.merge(s);
+        }
+        let mut mem = MemStats::default();
+        for m in mem_parts {
+            mem.merge(m);
+        }
+        let (unique_lines_global, unique_lines_fp) = match global_lines {
+            Some((n, fp)) => (n, fp),
+            None => (agg.unique_lines.len() as u64, agg.unique_lines.fingerprint()),
+        };
+        KernelStats {
+            name: name.to_string(),
+            kernel_id,
+            cycles,
+            grid_ctas,
+            sm: agg,
+            per_sm,
+            mem,
+            unique_lines_global,
+            unique_lines_fp,
+        }
+    }
+
+    /// Instructions per cycle (warp instructions).
+    pub fn ipc(&self) -> f64 {
+        if self.cycles == 0 {
+            0.0
+        } else {
+            self.sm.warp_insts_issued as f64 / self.cycles as f64
+        }
+    }
+
+    /// L1D hit rate.
+    pub fn l1d_hit_rate(&self) -> f64 {
+        let acc = self.sm.l1d_hits + self.sm.l1d_misses;
+        if acc == 0 {
+            0.0
+        } else {
+            self.sm.l1d_hits as f64 / acc as f64
+        }
+    }
+
+    /// L2 hit rate.
+    pub fn l2_hit_rate(&self) -> f64 {
+        if self.mem.l2_accesses == 0 {
+            0.0
+        } else {
+            self.mem.l2_hits as f64 / self.mem.l2_accesses as f64
+        }
+    }
+
+    /// Deterministic fingerprint over *all* aggregate counters + the
+    /// unique-line set contents + cycles. Bit-identical across thread
+    /// counts/schedules ⇔ the paper's determinism claim holds.
+    pub fn fingerprint(&self) -> u64 {
+        let mut h: u64 = crate::util::mix2(self.cycles, self.grid_ctas);
+        self.sm.visit_counters(|name, v| {
+            let mut nh = 0xcbf2_9ce4_8422_2325u64; // FNV offset
+            for b in name.bytes() {
+                nh = (nh ^ b as u64).wrapping_mul(0x1000_0000_01b3);
+            }
+            h = crate::util::mix2(h, nh ^ v);
+        });
+        self.mem.visit_counters(|name, v| {
+            let mut nh = 0xcbf2_9ce4_8422_2325u64;
+            for b in name.bytes() {
+                nh = (nh ^ b as u64).wrapping_mul(0x1000_0000_01b3);
+            }
+            h = crate::util::mix2(h, nh ^ v);
+        });
+        h = crate::util::mix2(h, self.unique_lines_global);
+        h = crate::util::mix2(h, self.unique_lines_fp);
+        h
+    }
+}
+
+/// Whole-run statistics: one entry per kernel launch plus wall-clock info.
+#[derive(Debug, Clone, Default)]
+pub struct GpuStats {
+    pub workload: String,
+    pub kernels: Vec<KernelStats>,
+    /// Host wall-clock seconds spent simulating (the Fig-1 quantity).
+    pub sim_wallclock_s: f64,
+    /// Host seconds spent inside the parallel SM section.
+    pub sm_section_s: f64,
+    /// Total simulated cycles across kernels.
+    pub total_gpu_cycles: u64,
+}
+
+impl GpuStats {
+    pub fn total_cycles(&self) -> u64 {
+        self.total_gpu_cycles
+    }
+
+    pub fn total_warp_insts(&self) -> u64 {
+        self.kernels.iter().map(|k| k.sm.warp_insts_issued).sum()
+    }
+
+    pub fn total_thread_insts(&self) -> u64 {
+        self.kernels.iter().map(|k| k.sm.thread_insts).sum()
+    }
+
+    /// Simulation rate in warp-instructions per host second.
+    pub fn sim_rate(&self) -> f64 {
+        if self.sim_wallclock_s == 0.0 {
+            0.0
+        } else {
+            self.total_warp_insts() as f64 / self.sim_wallclock_s
+        }
+    }
+
+    /// Run-level fingerprint: mix of all kernel fingerprints, in order.
+    /// Wall-clock is deliberately excluded (it is host noise, not model
+    /// state).
+    pub fn fingerprint(&self) -> u64 {
+        let mut h = 0x5151_5151_5151_5151u64;
+        for k in &self.kernels {
+            h = crate::util::mix2(h, k.fingerprint());
+        }
+        h
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_sm(seed: u64) -> SmStats {
+        let mut s = SmStats::default();
+        s.cycles = 100 + seed;
+        s.warp_insts_issued = 10 * seed;
+        s.l1d_hits = seed;
+        s.unique_lines.insert(seed * 128);
+        s.unique_lines.insert(4096);
+        s
+    }
+
+    #[test]
+    fn merge_adds_counters_and_unions_sets() {
+        let mut a = sample_sm(1);
+        let b = sample_sm(2);
+        a.merge(&b);
+        assert_eq!(a.cycles, 101 + 102);
+        assert_eq!(a.warp_insts_issued, 30);
+        // {128, 4096} ∪ {256, 4096} = 3 distinct
+        assert_eq!(a.unique_lines.len(), 3);
+    }
+
+    #[test]
+    fn merge_is_commutative_on_fingerprint() {
+        let per_sm_ab = vec![sample_sm(1), sample_sm(2), sample_sm(3)];
+        let per_sm_ba = vec![sample_sm(3), sample_sm(1), sample_sm(2)];
+        let ka = KernelStats::aggregate("k", 0, 500, 10, per_sm_ab, &[], None);
+        let kb = KernelStats::aggregate("k", 0, 500, 10, per_sm_ba, &[], None);
+        // aggregation must not depend on SM visit order (≈ thread schedule)
+        assert_eq!(ka.sm.warp_insts_issued, kb.sm.warp_insts_issued);
+        assert_eq!(ka.unique_lines_global, kb.unique_lines_global);
+        assert_eq!(ka.unique_lines_fp, kb.unique_lines_fp);
+        assert_eq!(ka.fingerprint(), kb.fingerprint());
+    }
+
+    #[test]
+    fn fingerprint_detects_single_counter_change() {
+        let ka = KernelStats::aggregate("k", 0, 500, 10, vec![sample_sm(1)], &[], None);
+        let mut sm2 = sample_sm(1);
+        sm2.l1d_misses += 1;
+        let kb = KernelStats::aggregate("k", 0, 500, 10, vec![sm2], &[], None);
+        assert_ne!(ka.fingerprint(), kb.fingerprint());
+    }
+
+    #[test]
+    fn fingerprint_detects_set_content_change_with_same_count() {
+        let mut a = SmStats::default();
+        a.unique_lines.insert(128);
+        let mut b = SmStats::default();
+        b.unique_lines.insert(256);
+        let ka = KernelStats::aggregate("k", 0, 1, 1, vec![a], &[], None);
+        let kb = KernelStats::aggregate("k", 0, 1, 1, vec![b], &[], None);
+        assert_eq!(ka.unique_lines_global, kb.unique_lines_global);
+        assert_ne!(ka.fingerprint(), kb.fingerprint());
+    }
+
+    #[test]
+    fn addrset_fingerprint_order_independent() {
+        let mut a = AddrSet::default();
+        let mut b = AddrSet::default();
+        for x in [5u64, 9, 1, 77] {
+            a.insert(x);
+        }
+        for x in [77u64, 1, 9, 5] {
+            b.insert(x);
+        }
+        assert_eq!(a.fingerprint(), b.fingerprint());
+    }
+
+    #[test]
+    fn shared_locked_matches_per_sm_semantics() {
+        let shared = SharedLockedStats::new();
+        shared.record_issue(5);
+        shared.record_l1d_access(128);
+        shared.record_l1d_access(128);
+        shared.record_l1d_access(256);
+        let (issued, acc, uniq) = shared.snapshot();
+        assert_eq!((issued, acc, uniq), (5, 3, 2));
+        shared.reset();
+        assert_eq!(shared.snapshot(), (0, 0, 0));
+    }
+
+    #[test]
+    fn counter_visitor_covers_all_fields() {
+        // guards against someone adding a field without the macro entry:
+        // the macro IS the field list, so count must match describe().
+        let s = SmStats::default();
+        let mut n = 0;
+        s.visit_counters(|_, _| n += 1);
+        assert_eq!(n, SmStats::describe().len());
+        assert!(n >= 40, "expected a rich counter set, got {n}");
+    }
+
+    #[test]
+    fn kernel_rates() {
+        let mut sm = SmStats::default();
+        sm.warp_insts_issued = 500;
+        sm.l1d_hits = 75;
+        sm.l1d_misses = 25;
+        let mut mem = MemStats::default();
+        mem.l2_accesses = 10;
+        mem.l2_hits = 9;
+        let k = KernelStats::aggregate("k", 0, 1000, 1, vec![sm], &[mem], None);
+        assert!((k.ipc() - 0.5).abs() < 1e-12);
+        assert!((k.l1d_hit_rate() - 0.75).abs() < 1e-12);
+        assert!((k.l2_hit_rate() - 0.9).abs() < 1e-12);
+    }
+
+    #[test]
+    fn gpu_stats_fingerprint_sensitive_to_kernel_order() {
+        let k1 = KernelStats::aggregate("a", 0, 10, 1, vec![sample_sm(1)], &[], None);
+        let k2 = KernelStats::aggregate("b", 1, 20, 1, vec![sample_sm(2)], &[], None);
+        let g12 = GpuStats { kernels: vec![k1.clone(), k2.clone()], ..Default::default() };
+        let g21 = GpuStats { kernels: vec![k2, k1], ..Default::default() };
+        assert_ne!(g12.fingerprint(), g21.fingerprint());
+    }
+}

@@ -1,0 +1,194 @@
+//! CUTLASS GEMM workloads (Table 2 rows `cut_1`, `cut_2`) and the shared
+//! tiled-GEMM kernel builder used by the DeepBench module.
+//!
+//! `cut_1` (2560×16×2560) tiles to a **20-CTA** grid on an 80-SM GPU —
+//! the paper's showcase for the dynamic OpenMP schedule (Fig 6:
+//! 0.97× static → 1.61× dynamic at 2 threads): only a quarter of the SMs
+//! are busy, and they are *contiguous* in SM index, so a static contiguous
+//! partition puts all the work on one thread. `cut_2` (2560×1024×·) fills
+//! the machine with 160 balanced CTAs and prefers static.
+//!
+//! These kernels carry [`GemmSemantics`], so the functional model can
+//! replay the exact tile computation and `examples/gemm_validate.rs` can
+//! cross-check it against the AOT-compiled JAX/Pallas artifact.
+//!
+//! K dimensions are scaled down from the nominal shapes at `Ci`/`Small`
+//! (and for `cut_2` also at `Paper`) to keep simulated instruction counts
+//! tractable; M/N tiling — what determines CTA counts and balance — is
+//! preserved exactly. See DESIGN.md §Substitutions.
+
+use super::*;
+use crate::trace::{GemmSemantics, WorkloadSpec};
+
+/// Build a CUTLASS-style tiled GEMM kernel:
+/// per K-step: load A/B tiles (global→shared), barrier, a register-blocked
+/// FMA burst sized so total FMA work equals `tile_m·tile_n·k_step` MACs;
+/// epilogue stores the C tile.
+#[allow(clippy::too_many_arguments)]
+pub(super) fn gemm_tiled_kernel(
+    name: impl Into<String>,
+    m: u32,
+    n: u32,
+    k: u32,
+    tile_m: u32,
+    tile_n: u32,
+    k_step: u32,
+    block_threads: u32,
+    seed: u64,
+) -> crate::trace::KernelDesc {
+    let sem = GemmSemantics { m, n, k, tile_m, tile_n };
+    let warps = (block_threads / 32).max(1);
+    let fma_per_trip = ((tile_m as u64 * tile_n as u64 * k_step as u64)
+        / (32 * warps as u64))
+        .clamp(1, 1024) as u32;
+    let trips = crate::util::ceil_div(k as u64, k_step as u64) as u32;
+
+    let regions = vec![
+        crate::trace::Region { base: 0x1_0000_0000, bytes: (m as u64 * k as u64 * 4).max(128) },
+        crate::trace::Region { base: 0x2_0000_0000, bytes: (k as u64 * n as u64 * 4).max(128) },
+        crate::trace::Region { base: 0x3_0000_0000, bytes: (m as u64 * n as u64 * 4).max(128) },
+    ];
+
+    // main K loop
+    let mut main = Vec::new();
+    main.push(InstTemplate::load(
+        OpClass::LdGlobal,
+        40,
+        2,
+        MemTemplate {
+            region: 0,
+            pattern: AddrPattern::Tile {
+                rows: tile_m.min(128) as u16,
+                row_bytes: k_step * 4,
+                ld_bytes: k * 4,
+            },
+            bytes_per_lane: 16, // vectorized LDG.128
+        },
+    ));
+    main.push(InstTemplate::load(
+        OpClass::LdGlobal,
+        41,
+        2,
+        MemTemplate {
+            region: 1,
+            pattern: AddrPattern::Tile {
+                rows: k_step.min(128) as u16,
+                row_bytes: tile_n * 4,
+                ld_bytes: n * 4,
+            },
+            bytes_per_lane: 16,
+        },
+    ));
+    // stage through shared memory
+    main.push(InstTemplate::store(
+        OpClass::StShared,
+        2,
+        40,
+        MemTemplate { region: 0, pattern: AddrPattern::SharedFree, bytes_per_lane: 16 },
+    ));
+    main.push(InstTemplate::bar());
+    main.push(InstTemplate::load(
+        OpClass::LdShared,
+        42,
+        2,
+        MemTemplate { region: 0, pattern: AddrPattern::SharedFree, bytes_per_lane: 16 },
+    ));
+    for i in 0..fma_per_trip {
+        let dst = 8 + (i % 24) as u8;
+        main.push(InstTemplate::alu(OpClass::Ffma32, dst, &[dst, 40, 41]));
+    }
+    main.push(InstTemplate::bar());
+    main.push(InstTemplate::branch());
+
+    // epilogue: write C tile
+    let epilogue = vec![
+        InstTemplate::alu(OpClass::IAlu, 2, &[2, 3]),
+        InstTemplate::store(
+            OpClass::StGlobal,
+            2,
+            8,
+            MemTemplate {
+                region: 2,
+                pattern: AddrPattern::Tile {
+                    rows: 8,
+                    row_bytes: tile_n * 4,
+                    ld_bytes: n * 4,
+                },
+                bytes_per_lane: 16,
+            },
+        ),
+    ];
+
+    let mut kd = kernel(
+        name,
+        sem.grid_ctas(),
+        block_threads,
+        96, // CUTLASS kernels are register-hungry
+        (tile_m * k_step + k_step * tile_n).min(48 * 1024 / 4) * 4,
+        regions,
+        vec![
+            BBlock { trips: Trips::Fixed(trips), insts: main },
+            BBlock { trips: Trips::Fixed(1), insts: epilogue },
+        ],
+        seed,
+    );
+    kd.gemm = Some(sem);
+    kd
+}
+
+/// `cut_1`: 2560×16×2560 — 20 long-running CTAs on an 80-SM GPU.
+pub fn cut_1(scale: Scale) -> WorkloadSpec {
+    let k = sc(scale, 64, 1280, 2560);
+    let kern = gemm_tiled_kernel("cutlass_gemm_2560x16", 2560, 16, k, 128, 16, 8, 128, 0xC071);
+    WorkloadSpec { name: "cut_1".into(), suite: "Cutlass".into(), kernels: vec![kern] }
+}
+
+/// `cut_2`: 2560×1024×· — 160 balanced CTAs (two full waves).
+pub fn cut_2(scale: Scale) -> WorkloadSpec {
+    let (m, n, k) = match scale {
+        Scale::Ci => (512, 256, 32),
+        Scale::Small => (1280, 512, 320),
+        Scale::Paper => (2560, 1024, 320),
+    };
+    let kern = gemm_tiled_kernel("cutlass_gemm_2560x1024", m, n, k, 128, 128, 8, 256, 0xC072);
+    WorkloadSpec { name: "cut_2".into(), suite: "Cutlass".into(), kernels: vec![kern] }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cut1_grid_is_20_ctas() {
+        for s in [Scale::Ci, Scale::Small, Scale::Paper] {
+            let w = cut_1(s);
+            assert_eq!(w.kernels[0].grid_ctas, 20, "scale {s:?}");
+        }
+    }
+
+    #[test]
+    fn cut2_paper_grid_is_160() {
+        assert_eq!(cut_2(Scale::Paper).kernels[0].grid_ctas, 160);
+    }
+
+    #[test]
+    fn fma_work_matches_tile_math() {
+        // tile 128×16, k_step 8, 4 warps → 128·16·8/(32·4) = 128 FMA/trip
+        let k = gemm_tiled_kernel("t", 2560, 16, 64, 128, 16, 8, 128, 1);
+        let fma = k.program.blocks[0]
+            .insts
+            .iter()
+            .filter(|i| i.op == OpClass::Ffma32)
+            .count();
+        assert_eq!(fma, 128);
+        // trips cover K
+        assert_eq!(k.program.blocks[0].trips, Trips::Fixed(8));
+    }
+
+    #[test]
+    fn semantics_consistent_with_grid() {
+        let w = cut_2(Scale::Ci);
+        let k = &w.kernels[0];
+        assert_eq!(k.gemm.unwrap().grid_ctas(), k.grid_ctas);
+    }
+}

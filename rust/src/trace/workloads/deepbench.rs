@@ -1,0 +1,86 @@
+//! DeepBench workloads (Baidu Research) — Table 2 rows `conv`, `gemm`,
+//! `rnn`. All three reduce to tiled GEMM shapes (conv via im2col; rnn as a
+//! sequence of per-timestep GEMMs), built with the CUTLASS kernel builder
+//! so they carry [`crate::trace::GemmSemantics`] for functional
+//! validation.
+
+use super::cutlass::gemm_tiled_kernel;
+use super::*;
+use crate::trace::WorkloadSpec;
+
+/// DeepBench convolution, im2col-lowered: M = N·OH·OW output pixels,
+/// N = output channels, K = C·R·S patch size. Large balanced grid.
+pub fn conv(scale: Scale) -> WorkloadSpec {
+    let (m, n, k) = match scale {
+        Scale::Ci => (256, 64, 32),
+        Scale::Small => (6272, 64, 576),   // 7×7×128-ish patch, 56² output
+        Scale::Paper => (12544, 64, 1152),
+    };
+    let kern = gemm_tiled_kernel("conv_im2col_gemm", m, n, k, 128, 64, 8, 256, 0xD0C1);
+    WorkloadSpec { name: "conv".into(), suite: "Deepbench".into(), kernels: vec![kern] }
+}
+
+/// DeepBench GEMM (1760×704-class shape): one deep, well-balanced kernel.
+pub fn gemm(scale: Scale) -> WorkloadSpec {
+    let (m, n, k) = match scale {
+        Scale::Ci => (256, 128, 32),
+        Scale::Small => (1792, 704, 448),
+        Scale::Paper => (1792, 704, 1280),
+    };
+    let kern = gemm_tiled_kernel("deepbench_gemm", m, n, k, 128, 64, 8, 256, 0xD0E2);
+    WorkloadSpec { name: "gemm".into(), suite: "Deepbench".into(), kernels: vec![kern] }
+}
+
+/// DeepBench vanilla RNN: T timesteps, each `h_t = W·h_{t−1}` — a *small*
+/// GEMM per step (grid of only a few CTAs), many dependent launches.
+/// Under-occupies the GPU like `cut_1`, but with launch-cadence overhead.
+pub fn rnn(scale: Scale) -> WorkloadSpec {
+    let (t_steps, h, b, k) = match scale {
+        Scale::Ci => (3usize, 128, 32, 64),
+        Scale::Small => (24, 512, 32, 512),
+        Scale::Paper => (48, 512, 32, 512),
+    };
+    let kernels = (0..t_steps)
+        .map(|t| {
+            gemm_tiled_kernel(
+                format!("rnn_step_{t}"),
+                h,
+                b,
+                k,
+                128,
+                32,
+                8,
+                256,
+                0xD0F3 + t as u64,
+            )
+        })
+        .collect();
+    WorkloadSpec { name: "rnn".into(), suite: "Deepbench".into(), kernels }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv_grid_scales() {
+        assert!(conv(Scale::Small).kernels[0].grid_ctas >= 49);
+        assert!(conv(Scale::Paper).kernels[0].grid_ctas >= 98);
+    }
+
+    #[test]
+    fn rnn_is_many_small_launches() {
+        let w = rnn(Scale::Small);
+        assert_eq!(w.kernels.len(), 24);
+        for kd in &w.kernels {
+            assert!(kd.grid_ctas <= 8, "rnn steps are small grids: {}", kd.grid_ctas);
+        }
+    }
+
+    #[test]
+    fn gemm_is_balanced() {
+        let w = gemm(Scale::Small);
+        // 1792/128 × 704/64 = 14 × 11 = 154 CTAs — close to 2×80
+        assert_eq!(w.kernels[0].grid_ctas, 154);
+    }
+}

@@ -1,0 +1,159 @@
+//! LonestarGPU workloads (Burtscher et al., IISWC'12) — Table 2 rows
+//! `mst` and `sssp`.
+//!
+//! Irregular graph algorithms: **many** kernel launches (one per frontier
+//! sweep), pseudo-random memory access, and heavy per-warp load imbalance
+//! (vertex degrees vary). These are the paper's second-heaviest
+//! simulations (Fig 1: ≈3 days single-threaded) and the workloads whose
+//! best OpenMP schedule flips between static and dynamic with thread
+//! count (Fig 6).
+
+use super::*;
+use crate::trace::WorkloadSpec;
+use crate::util::mix2;
+
+/// Per-launch grid size: frontier size oscillates across sweeps —
+/// deterministic per (seed, launch index).
+fn frontier_grid(seed: u64, launch: usize, lo: u32, hi: u32) -> u32 {
+    lo + (mix2(seed, launch as u64) % (hi - lo).max(1) as u64) as u32
+}
+
+/// Boruvka MST: alternating `find_min_edge` / `merge_components` /
+/// `compact` sweeps over a shrinking component graph.
+pub fn mst(scale: Scale) -> WorkloadSpec {
+    let launches = sc(scale, 6, 28, 80) as usize;
+    let (lo, hi) = match scale {
+        Scale::Ci => (8, 32),
+        Scale::Small => (160, 512),
+        Scale::Paper => (512, 1536),
+    };
+    let trips = match scale {
+        Scale::Ci => Trips::PerWarp { base: 2, spread: 6 },
+        Scale::Small => Trips::PerWarp { base: 3, spread: 14 },
+        Scale::Paper => Trips::PerWarp { base: 4, spread: 24 },
+    };
+    let regions = regions3(64 << 20);
+    let mut kernels = Vec::new();
+    for i in 0..launches {
+        let phase = i % 3;
+        let (name, grid, body) = match phase {
+            0 => (
+                format!("find_min_edge_{i}"),
+                frontier_grid(0x3357, i, lo, hi),
+                graph_loop(trips, 3, 6),
+            ),
+            1 => (
+                format!("merge_components_{i}"),
+                frontier_grid(0x3358, i, lo, hi),
+                graph_loop(trips, 2, 8),
+            ),
+            _ => (
+                format!("compact_{i}"),
+                (lo / 4).max(1),
+                fma_loop(
+                    Trips::Fixed(6),
+                    &[(0, AddrPattern::Coalesced)],
+                    0,
+                    0,
+                    6,
+                    Some((2, AddrPattern::Coalesced)),
+                    false,
+                ),
+            ),
+        };
+        kernels.push(kernel(name, grid, 256, 32, 0, regions.clone(), vec![body], 0x357A + i as u64));
+    }
+    WorkloadSpec { name: "mst".into(), suite: "Lonestar".into(), kernels }
+}
+
+/// Bellman-Ford-style SSSP: more sweeps than MST, similar irregularity.
+pub fn sssp(scale: Scale) -> WorkloadSpec {
+    let launches = sc(scale, 8, 36, 140) as usize;
+    let (lo, hi) = match scale {
+        Scale::Ci => (8, 32),
+        Scale::Small => (128, 448),
+        Scale::Paper => (384, 1280),
+    };
+    let trips = match scale {
+        Scale::Ci => Trips::PerWarp { base: 2, spread: 5 },
+        Scale::Small => Trips::PerWarp { base: 3, spread: 12 },
+        Scale::Paper => Trips::PerWarp { base: 3, spread: 20 },
+    };
+    let regions = regions3(64 << 20);
+    let mut kernels = Vec::new();
+    for i in 0..launches {
+        if i % 4 == 3 {
+            // frontier compaction: small, regular
+            kernels.push(kernel(
+                format!("compact_frontier_{i}"),
+                (lo / 4).max(1),
+                256,
+                24,
+                0,
+                regions.clone(),
+                vec![fma_loop(
+                    Trips::Fixed(4),
+                    &[(0, AddrPattern::Coalesced)],
+                    0,
+                    0,
+                    5,
+                    Some((2, AddrPattern::Coalesced)),
+                    false,
+                )],
+                0x5550 + i as u64,
+            ));
+        } else {
+            kernels.push(kernel(
+                format!("relax_edges_{i}"),
+                frontier_grid(0x5551, i, lo, hi),
+                256,
+                30,
+                0,
+                regions.clone(),
+                vec![graph_loop(trips, 3, 5)],
+                0x5552 + i as u64,
+            ));
+        }
+    }
+    WorkloadSpec { name: "sssp".into(), suite: "Lonestar".into(), kernels }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn many_launches() {
+        assert_eq!(mst(Scale::Small).kernels.len(), 28);
+        assert_eq!(sssp(Scale::Small).kernels.len(), 36);
+        assert_eq!(mst(Scale::Paper).kernels.len(), 80);
+    }
+
+    #[test]
+    fn grids_vary_across_launches() {
+        let w = mst(Scale::Small);
+        let grids: std::collections::BTreeSet<u32> =
+            w.kernels.iter().map(|k| k.grid_ctas).collect();
+        assert!(grids.len() > 5, "frontier sizes should vary: {grids:?}");
+    }
+
+    #[test]
+    fn deterministic_construction() {
+        assert_eq!(mst(Scale::Small), mst(Scale::Small));
+        assert_eq!(sssp(Scale::Ci), sssp(Scale::Ci));
+    }
+
+    #[test]
+    fn irregular_trip_counts() {
+        let w = sssp(Scale::Small);
+        let k = w.kernels.iter().find(|k| k.name.starts_with("relax")).unwrap();
+        let a = k.program.dyn_len(k.seed, 0, 0);
+        let mut differs = false;
+        for warp in 1..8 {
+            if k.program.dyn_len(k.seed, 0, warp) != a {
+                differs = true;
+            }
+        }
+        assert!(differs, "per-warp imbalance expected");
+    }
+}

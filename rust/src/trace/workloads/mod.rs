@@ -1,0 +1,419 @@
+//! The paper's Table-2 benchmark suites, as procedural workload generators.
+//!
+//! Each generator reproduces the characteristics that drive the paper's
+//! parallelization results, with the real benchmark's structure documented
+//! per module:
+//!
+//! * **CTAs per kernel** (Fig 7) — e.g. `myocyte` launches 2-CTA kernels
+//!   and gains nothing from parallelization; `lavaMD` launches thousands.
+//! * **kernel-launch pattern** — Lonestar graph codes launch dozens of
+//!   small irregular kernels; CUTLASS launches few, deep ones.
+//! * **instruction mix & memory behaviour** — compute-bound FMA loops
+//!   (lavaMD, CUTLASS) vs random-access graph traversal (mst, sssp) vs
+//!   stencils (hotspot, fdtd2d).
+//! * **relative single-thread simulation weight** (Fig 1) — lavaMD ≫
+//!   mst ≈ sssp > the rest.
+//!
+//! Sizes are parameterized by [`Scale`]: `Ci` for tests (sub-second),
+//! `Small` for quick figure runs, `Paper` for the full-relative-magnitude
+//! reproduction.
+
+mod cutlass;
+mod deepbench;
+mod lonestar;
+mod polybench;
+mod rodinia;
+
+pub use crate::trace::WorkloadSpec as Workload;
+
+use crate::trace::{
+    AddrPattern, BBlock, InstTemplate, KernelDesc, MemTemplate, OpClass, Program, Region, Trips,
+};
+
+/// Workload size class.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Scale {
+    /// Tiny: unit/integration tests, < a second each.
+    Ci,
+    /// Small: full figure sweeps in minutes.
+    Small,
+    /// Paper: preserves the paper's relative Fig-1 magnitudes.
+    Paper,
+}
+
+impl Scale {
+    pub fn parse(s: &str) -> Option<Scale> {
+        match s.to_ascii_lowercase().as_str() {
+            "ci" => Some(Scale::Ci),
+            "small" => Some(Scale::Small),
+            "paper" => Some(Scale::Paper),
+            _ => None,
+        }
+    }
+    pub fn name(&self) -> &'static str {
+        match self {
+            Scale::Ci => "ci",
+            Scale::Small => "small",
+            Scale::Paper => "paper",
+        }
+    }
+}
+
+/// Pick a magnitude by scale.
+#[inline]
+pub(crate) fn sc(scale: Scale, ci: u32, small: u32, paper: u32) -> u32 {
+    match scale {
+        Scale::Ci => ci,
+        Scale::Small => small,
+        Scale::Paper => paper,
+    }
+}
+
+/// All 19 Table-2 workload names, in the paper's listing order.
+pub fn names() -> &'static [&'static str] {
+    &[
+        "gaussian",
+        "hotspot",
+        "hybridsort",
+        "lavaMD",
+        "lud",
+        "myocyte",
+        "nn",
+        "nw",
+        "pathfinder",
+        "srad_v1",
+        "fdtd2d",
+        "syrk",
+        "mst",
+        "sssp",
+        "conv",
+        "gemm",
+        "rnn",
+        "cut_1",
+        "cut_2",
+    ]
+}
+
+/// Suite of a workload (Table 2 grouping).
+pub fn suite_of(name: &str) -> &'static str {
+    match name {
+        "gaussian" | "hotspot" | "hybridsort" | "lavaMD" | "lud" | "myocyte" | "nn" | "nw"
+        | "pathfinder" | "srad_v1" => "Rodinia 3.1",
+        "fdtd2d" | "syrk" => "Polybench",
+        "mst" | "sssp" => "Lonestar",
+        "conv" | "gemm" | "rnn" => "Deepbench",
+        "cut_1" | "cut_2" => "Cutlass",
+        _ => "unknown",
+    }
+}
+
+/// Short alias used in the paper's figures (e.g. `hotspot` → `hot`).
+pub fn alias_of(name: &str) -> &'static str {
+    match name {
+        "gaussian" => "gau",
+        "hotspot" => "hot",
+        "hybridsort" => "hyb",
+        "myocyte" => "myo",
+        "pathfinder" => "path",
+        "srad_v1" => "srad",
+        "lavaMD" => "lavaMD",
+        "lud" => "lud",
+        "nn" => "nn",
+        "nw" => "nw",
+        "fdtd2d" => "fdtd2d",
+        "syrk" => "syrk",
+        "mst" => "mst",
+        "sssp" => "sssp",
+        "conv" => "conv",
+        "gemm" => "gemm",
+        "rnn" => "rnn",
+        "cut_1" => "cut_1",
+        "cut_2" => "cut_2",
+        _ => "?",
+    }
+}
+
+/// Build one workload by name.
+pub fn build(name: &str, scale: Scale) -> Option<Workload> {
+    let w = match name {
+        "gaussian" => rodinia::gaussian(scale),
+        "hotspot" => rodinia::hotspot(scale),
+        "hybridsort" => rodinia::hybridsort(scale),
+        "lavaMD" => rodinia::lavamd(scale),
+        "lud" => rodinia::lud(scale),
+        "myocyte" => rodinia::myocyte(scale),
+        "nn" => rodinia::nn(scale),
+        "nw" => rodinia::nw(scale),
+        "pathfinder" => rodinia::pathfinder(scale),
+        "srad_v1" => rodinia::srad_v1(scale),
+        "fdtd2d" => polybench::fdtd2d(scale),
+        "syrk" => polybench::syrk(scale),
+        "mst" => lonestar::mst(scale),
+        "sssp" => lonestar::sssp(scale),
+        "conv" => deepbench::conv(scale),
+        "gemm" => deepbench::gemm(scale),
+        "rnn" => deepbench::rnn(scale),
+        "cut_1" => cutlass::cut_1(scale),
+        "cut_2" => cutlass::cut_2(scale),
+        _ => return None,
+    };
+    Some(w)
+}
+
+/// Build the full Table-2 suite.
+pub fn build_all(scale: Scale) -> Vec<Workload> {
+    names().iter().map(|n| build(n, scale).expect("registered workload")).collect()
+}
+
+// ---------------------------------------------------------------------------
+// shared program-construction helpers used by the suite modules
+// ---------------------------------------------------------------------------
+
+/// Global-memory template shorthand.
+pub(crate) fn g(region: u8, pattern: AddrPattern) -> MemTemplate {
+    MemTemplate { region, pattern, bytes_per_lane: 4 }
+}
+
+/// Default region set: two input buffers and one output buffer.
+pub(crate) fn regions3(bytes: u64) -> Vec<Region> {
+    vec![
+        Region { base: 0x1_0000_0000, bytes },
+        Region { base: 0x2_0000_0000, bytes },
+        Region { base: 0x3_0000_0000, bytes },
+    ]
+}
+
+/// A compute loop body: `loads` global loads, `n_fma` FP32 FMAs with
+/// rotating destinations (ILP-friendly), `n_sfu` SFU ops, one store every
+/// `store` trips (0 = none), plus the loop branch.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn fma_loop(
+    trips: Trips,
+    loads: &[(u8, AddrPattern)],
+    n_fma: u32,
+    n_sfu: u32,
+    n_int: u32,
+    store: Option<(u8, AddrPattern)>,
+    barrier: bool,
+) -> BBlock {
+    let mut insts = Vec::new();
+    for (i, &(region, pat)) in loads.iter().enumerate() {
+        insts.push(InstTemplate::load(OpClass::LdGlobal, 40 + i as u8, 2, g(region, pat)));
+    }
+    for i in 0..n_int {
+        insts.push(InstTemplate::alu(OpClass::IAlu, 2 + (i % 4) as u8, &[2, 3]));
+    }
+    for i in 0..n_fma {
+        let dst = 8 + (i % 16) as u8;
+        insts.push(InstTemplate::alu(OpClass::Ffma32, dst, &[dst, 40, 41]));
+    }
+    for i in 0..n_sfu {
+        insts.push(InstTemplate::alu(OpClass::Sfu, 30 + (i % 2) as u8, &[8]));
+    }
+    if let Some((region, pat)) = store {
+        insts.push(InstTemplate::store(OpClass::StGlobal, 2, 8, g(region, pat)));
+    }
+    if barrier {
+        insts.push(InstTemplate::bar());
+    }
+    insts.push(InstTemplate::branch());
+    BBlock { trips, insts }
+}
+
+/// A shared-memory stencil body: loads through shared memory with optional
+/// bank conflicts, a few FMAs, then a barrier (classic tiled stencil).
+pub(crate) fn smem_loop(trips: Trips, n_fma: u32, conflict_degree: u8) -> BBlock {
+    let mut insts = Vec::new();
+    let shared_pat = if conflict_degree <= 1 {
+        AddrPattern::SharedFree
+    } else {
+        AddrPattern::SharedConflict { degree: conflict_degree }
+    };
+    insts.push(InstTemplate::load(
+        OpClass::LdShared,
+        40,
+        2,
+        MemTemplate { region: 0, pattern: shared_pat, bytes_per_lane: 4 },
+    ));
+    insts.push(InstTemplate::load(
+        OpClass::LdShared,
+        41,
+        2,
+        MemTemplate { region: 0, pattern: AddrPattern::SharedFree, bytes_per_lane: 4 },
+    ));
+    for i in 0..n_fma {
+        let dst = 8 + (i % 8) as u8;
+        insts.push(InstTemplate::alu(OpClass::Ffma32, dst, &[dst, 40, 41]));
+    }
+    insts.push(InstTemplate::store(
+        OpClass::StShared,
+        2,
+        8,
+        MemTemplate { region: 0, pattern: AddrPattern::SharedFree, bytes_per_lane: 4 },
+    ));
+    insts.push(InstTemplate::bar());
+    insts.push(InstTemplate::branch());
+    BBlock { trips, insts }
+}
+
+/// An irregular graph-traversal body: `loads` random-pattern loads, integer
+/// work, a conditional random store, per-warp trip variance.
+pub(crate) fn graph_loop(trips: Trips, loads: u32, n_int: u32) -> BBlock {
+    let mut insts = Vec::new();
+    for i in 0..loads {
+        insts.push(InstTemplate::load(
+            OpClass::LdGlobal,
+            40 + (i % 3) as u8,
+            2,
+            g((i % 2) as u8, AddrPattern::Random),
+        ));
+    }
+    for i in 0..n_int {
+        insts.push(InstTemplate::alu(OpClass::IAlu, 2 + (i % 6) as u8, &[40, 41]));
+    }
+    insts.push(InstTemplate::store(OpClass::StGlobal, 2, 3, g(2, AddrPattern::Random)));
+    insts.push(InstTemplate::branch());
+    BBlock { trips, insts }
+}
+
+/// Assemble a kernel.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn kernel(
+    name: impl Into<String>,
+    grid_ctas: u32,
+    block_threads: u32,
+    regs: u32,
+    smem: u32,
+    regions: Vec<Region>,
+    blocks: Vec<BBlock>,
+    seed: u64,
+) -> KernelDesc {
+    let name = name.into();
+    let code_base = 0x7000_0000 + (crate::util::mix64(seed) & 0xFFFF) * 0x1_0000;
+    KernelDesc {
+        name,
+        grid_ctas,
+        block_threads,
+        regs_per_thread: regs,
+        smem_per_cta: smem,
+        regions,
+        program: Program::new(blocks),
+        code_base,
+        seed,
+        gemm: None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_19_workloads_build_at_every_scale() {
+        for &scale in &[Scale::Ci, Scale::Small, Scale::Paper] {
+            let all = build_all(scale);
+            assert_eq!(all.len(), 19);
+            for w in &all {
+                assert!(!w.kernels.is_empty(), "{} has no kernels", w.name);
+                for k in &w.kernels {
+                    assert!(k.grid_ctas > 0, "{}:{} empty grid", w.name, k.name);
+                    assert!(k.block_threads > 0 && k.block_threads <= 1024);
+                    assert!(!k.program.blocks.is_empty());
+                    assert!(
+                        k.program.static_len() < 4096,
+                        "{}:{} program too large",
+                        w.name,
+                        k.name
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fig7_cta_characteristics() {
+        // The paper's Fig-7 anchors: myocyte has 2 CTAs/kernel; cut_1 a few
+        // tens; most workloads exceed the 80 SMs of the modelled GPU.
+        let myo = build("myocyte", Scale::Paper).unwrap();
+        assert!(myo.kernels.iter().all(|k| k.grid_ctas == 2), "myocyte must have 2 CTAs");
+        let cut1 = build("cut_1", Scale::Paper).unwrap();
+        assert!(cut1.kernels.iter().all(|k| k.grid_ctas == 20), "cut_1 ≈ 20 CTAs");
+        let lava = build("lavaMD", Scale::Paper).unwrap();
+        assert!(lava.mean_ctas_per_kernel() > 80.0 * 10.0, "lavaMD ≫ #SMs");
+        for name in ["hotspot", "gemm", "conv", "nn", "pathfinder"] {
+            let w = build(name, Scale::Paper).unwrap();
+            assert!(w.mean_ctas_per_kernel() > 80.0, "{name} should exceed 80 SMs");
+        }
+    }
+
+    #[test]
+    fn fig1_relative_weight_ordering() {
+        // lavaMD must be the heaviest; mst/sssp next tier (paper Fig 1).
+        let insts: std::collections::BTreeMap<&str, u64> = names()
+            .iter()
+            .map(|&n| (n, build(n, Scale::Paper).unwrap().total_warp_insts(32)))
+            .collect();
+        let lava = insts["lavaMD"];
+        for (&n, &v) in &insts {
+            if n != "lavaMD" {
+                assert!(lava > v, "lavaMD ({lava}) must outweigh {n} ({v})");
+            }
+        }
+        let third_tier_max = insts
+            .iter()
+            .filter(|(n, _)| !matches!(**n, "lavaMD" | "mst" | "sssp"))
+            .map(|(_, &v)| v)
+            .max()
+            .unwrap();
+        assert!(insts["mst"] > third_tier_max, "mst is second tier");
+        assert!(insts["sssp"] > third_tier_max, "sssp is second tier");
+    }
+
+    #[test]
+    fn ci_scale_is_small_enough_for_tests() {
+        for w in build_all(Scale::Ci) {
+            let insts = w.total_warp_insts(32);
+            assert!(insts < 2_000_000, "{} too big for CI: {insts}", w.name);
+        }
+    }
+
+    #[test]
+    fn scales_are_monotone() {
+        for &n in names() {
+            let ci = build(n, Scale::Ci).unwrap().total_warp_insts(32);
+            let small = build(n, Scale::Small).unwrap().total_warp_insts(32);
+            let paper = build(n, Scale::Paper).unwrap().total_warp_insts(32);
+            assert!(ci <= small && small <= paper, "{n}: {ci} {small} {paper}");
+        }
+    }
+
+    #[test]
+    fn suites_and_aliases_cover_all() {
+        for &n in names() {
+            assert_ne!(suite_of(n), "unknown", "{n}");
+            assert_ne!(alias_of(n), "?", "{n}");
+        }
+        assert_eq!(suite_of("mst"), "Lonestar");
+        assert_eq!(alias_of("hotspot"), "hot");
+    }
+
+    #[test]
+    fn gemm_family_has_semantics() {
+        for n in ["cut_1", "cut_2", "gemm", "conv", "rnn"] {
+            let w = build(n, Scale::Ci).unwrap();
+            assert!(
+                w.kernels.iter().any(|k| k.gemm.is_some()),
+                "{n} must carry GemmSemantics"
+            );
+            for k in w.kernels.iter().filter(|k| k.gemm.is_some()) {
+                let s = k.gemm.unwrap();
+                assert_eq!(s.grid_ctas(), k.grid_ctas, "{n}:{} grid/tiling mismatch", k.name);
+            }
+        }
+    }
+
+    #[test]
+    fn unknown_workload_is_none() {
+        assert!(build("nonexistent", Scale::Ci).is_none());
+    }
+}

@@ -1,0 +1,91 @@
+//! Polybench GPU workloads (Grauer-Gray et al., InPar'12) — Table 2 rows
+//! `fdtd2d` and `syrk`.
+
+use super::*;
+use crate::trace::WorkloadSpec;
+
+/// FDTD-2D: three stencil kernels (update Ex, Ey, Hz) per time step,
+/// launched for many steps. Strided neighbour access, balanced grids.
+pub fn fdtd2d(scale: Scale) -> WorkloadSpec {
+    let tsteps = sc(scale, 3, 20, 60) as usize;
+    let grid = sc(scale, 16, 450, 900);
+    let regions = regions3(8 << 20);
+    let mut kernels = Vec::new();
+    for t in 0..tsteps {
+        for (kname, salt) in [("fdtd_step1", 1u64), ("fdtd_step2", 2), ("fdtd_step3", 3)] {
+            kernels.push(kernel(
+                format!("{kname}_{t}"),
+                grid,
+                256,
+                24,
+                0,
+                regions.clone(),
+                vec![fma_loop(
+                    Trips::Fixed(2),
+                    &[
+                        (0, AddrPattern::Coalesced),
+                        (1, AddrPattern::Strided { stride_bytes: 2048 }),
+                        (1, AddrPattern::Coalesced),
+                    ],
+                    4,
+                    0,
+                    2,
+                    Some((2, AddrPattern::Coalesced)),
+                    false,
+                )],
+                0xFD7D + salt + (t as u64) * 7,
+            ));
+        }
+    }
+    WorkloadSpec { name: "fdtd2d".into(), suite: "Polybench".into(), kernels }
+}
+
+/// SYRK rank-k update: a single large kernel; every thread loops over k
+/// reading a row (coalesced) and a column (strided) of A.
+pub fn syrk(scale: Scale) -> WorkloadSpec {
+    let grid = sc(scale, 16, 256, 512);
+    let k_trips = sc(scale, 32, 256, 512);
+    let regions = regions3(8 << 20);
+    let kernels = vec![kernel(
+        "syrk_kernel",
+        grid,
+        256,
+        30,
+        0,
+        regions,
+        vec![
+            fma_loop(
+                Trips::Fixed(k_trips),
+                &[(0, AddrPattern::Coalesced), (0, AddrPattern::Strided { stride_bytes: 512 })],
+                2,
+                0,
+                1,
+                None,
+                false,
+            ),
+            // epilogue: C = alpha·acc + beta·C
+            fma_loop(Trips::Fixed(1), &[(2, AddrPattern::Coalesced)], 2, 0, 0, Some((2, AddrPattern::Coalesced)), false),
+        ],
+        0x5981,
+    )];
+    WorkloadSpec { name: "syrk".into(), suite: "Polybench".into(), kernels }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fdtd2d_three_kernels_per_step() {
+        let w = fdtd2d(Scale::Small);
+        assert_eq!(w.kernels.len(), 3 * 20);
+    }
+
+    #[test]
+    fn syrk_is_one_deep_kernel() {
+        let w = syrk(Scale::Small);
+        assert_eq!(w.kernels.len(), 1);
+        let dyn_len = w.kernels[0].program.dyn_len(0, 0, 0);
+        assert!(dyn_len > 256, "k-loop should dominate: {dyn_len}");
+    }
+}

@@ -1,0 +1,460 @@
+//! Rodinia 3.1 workloads (Che et al., IISWC'09) — the paper's Table 2 rows
+//! `gaussian, hotspot, hybridsort, lavaMD, lud, myocyte, nn, nw,
+//! pathfinder, srad_v1`.
+//!
+//! Each generator mirrors the real benchmark's launch structure and the
+//! characteristics that matter to the parallelization study (CTA counts,
+//! kernel-launch cadence, instruction mix, memory behaviour); magnitudes
+//! are scaled per [`Scale`].
+
+use super::*;
+use crate::trace::WorkloadSpec;
+
+/// Gaussian elimination: per-row iteration launches a thin `fan1` kernel
+/// and a 2-D `fan2` kernel whose grid shrinks as elimination proceeds.
+/// Many short launches, coalesced row access. (Fig 7: mid CTA counts.)
+pub fn gaussian(scale: Scale) -> WorkloadSpec {
+    let iters = sc(scale, 4, 24, 48) as usize;
+    let regions = regions3(16 << 20);
+    let mut kernels = Vec::new();
+    for i in 0..iters {
+        let shrink = 1.0 - i as f64 / iters as f64;
+        let fan2_grid = ((256.0 * shrink * shrink) as u32).max(4);
+        kernels.push(kernel(
+            format!("fan1_{i}"),
+            ((16.0 * shrink) as u32).max(1),
+            256,
+            24,
+            0,
+            regions.clone(),
+            vec![fma_loop(
+                Trips::Fixed(4),
+                &[(0, AddrPattern::Coalesced)],
+                2,
+                1, // one RCP on the SFU (pivot division)
+                2,
+                Some((2, AddrPattern::Coalesced)),
+                false,
+            )],
+            0x6A05 + i as u64,
+        ));
+        kernels.push(kernel(
+            format!("fan2_{i}"),
+            fan2_grid,
+            256,
+            28,
+            0,
+            regions.clone(),
+            vec![fma_loop(
+                Trips::Fixed(12),
+                &[(0, AddrPattern::Coalesced), (1, AddrPattern::Strided { stride_bytes: 16 })],
+                4,
+                0,
+                2,
+                Some((2, AddrPattern::Coalesced)),
+                false,
+            )],
+            0x6A06 + i as u64,
+        ));
+    }
+    WorkloadSpec { name: "gaussian".into(), suite: "Rodinia 3.1".into(), kernels }
+}
+
+/// HotSpot thermal stencil: pyramidal tiled 2-D stencil, one kernel per
+/// time-step chunk, large balanced grids, shared-memory staging. This is
+/// the benchmark the paper profiles for Fig 4.
+pub fn hotspot(scale: Scale) -> WorkloadSpec {
+    let launches = sc(scale, 2, 6, 12) as usize;
+    let grid = sc(scale, 64, 1849, 1849); // 43×43 tiles of a 1024² grid
+    let regions = regions3(8 << 20);
+    let kernels = (0..launches)
+        .map(|i| {
+            kernel(
+                format!("calculate_temp_{i}"),
+                grid,
+                256,
+                36,
+                12 * 1024,
+                regions.clone(),
+                vec![
+                    // stage tile into shared memory
+                    fma_loop(
+                        Trips::Fixed(2),
+                        &[(0, AddrPattern::Coalesced), (1, AddrPattern::Coalesced)],
+                        0,
+                        0,
+                        2,
+                        None,
+                        true,
+                    ),
+                    // pyramid iterations in shared memory
+                    smem_loop(Trips::Fixed(sc(scale, 4, 6, 6)), 8, 1),
+                    // write result row
+                    fma_loop(
+                        Trips::Fixed(1),
+                        &[],
+                        2,
+                        0,
+                        1,
+                        Some((2, AddrPattern::Coalesced)),
+                        false,
+                    ),
+                ],
+                0x401 + i as u64,
+            )
+        })
+        .collect();
+    WorkloadSpec { name: "hotspot".into(), suite: "Rodinia 3.1".into(), kernels }
+}
+
+/// Hybridsort: histogram bucket phase (scattered atomics-like random
+/// stores) followed by a cascade of shrinking merge-sort kernels.
+pub fn hybridsort(scale: Scale) -> WorkloadSpec {
+    let regions = regions3(8 << 20);
+    let mut kernels = Vec::new();
+    let grid = sc(scale, 32, 512, 1024);
+    kernels.push(kernel(
+        "bucketcount",
+        grid,
+        256,
+        20,
+        4096,
+        regions.clone(),
+        vec![graph_loop(Trips::Fixed(sc(scale, 4, 10, 12)), 1, 6)],
+        0x4B01,
+    ));
+    kernels.push(kernel(
+        "bucketsort",
+        grid,
+        256,
+        24,
+        8192,
+        regions.clone(),
+        vec![fma_loop(
+            Trips::Fixed(sc(scale, 4, 10, 12)),
+            &[(0, AddrPattern::Random)],
+            0,
+            0,
+            8,
+            Some((2, AddrPattern::Random)),
+            false,
+        )],
+        0x4B02,
+    ));
+    let merge_levels = sc(scale, 4, 10, 12);
+    for lvl in 0..merge_levels {
+        let g = (grid >> lvl).max(2);
+        kernels.push(kernel(
+            format!("mergeSortPass_{lvl}"),
+            g,
+            128,
+            24,
+            4096,
+            regions.clone(),
+            vec![fma_loop(
+                Trips::Fixed(8),
+                &[(0, AddrPattern::Coalesced), (1, AddrPattern::Coalesced)],
+                0,
+                0,
+                10,
+                Some((2, AddrPattern::Coalesced)),
+                false,
+            )],
+            0x4B10 + lvl as u64,
+        ));
+    }
+    WorkloadSpec { name: "hybridsort".into(), suite: "Rodinia 3.1".into(), kernels }
+}
+
+/// lavaMD molecular dynamics — **the paper's heavyweight** (Fig 1: > 5
+/// days single-threaded; Fig 5: 14× at 16 threads, super-linear at 2–8).
+/// One kernel, thousands of CTAs (one per box), every CTA runs the same
+/// deep FP32/SFU inner loop over 27 neighbour boxes ⇒ large and almost
+/// perfectly balanced SM work: the ideal parallelization target.
+pub fn lavamd(scale: Scale) -> WorkloadSpec {
+    let boxes = sc(scale, 64, 1000, 3375); // 10³ / 15³ box grid
+    let trips = sc(scale, 48, 400, 810); // 27 neighbours × particles/warp
+    let regions = regions3(32 << 20);
+    let body = fma_loop(
+        Trips::Fixed(trips),
+        &[(0, AddrPattern::Coalesced), (1, AddrPattern::Coalesced)],
+        12,
+        2, // exp() in the potential → SFU
+        2,
+        Some((2, AddrPattern::Coalesced)),
+        false,
+    );
+    let kernels = vec![kernel(
+        "kernel_gpu_cuda",
+        boxes,
+        128,
+        56,
+        7200,
+        regions,
+        vec![body],
+        0x1A9A_17AD,
+    )];
+    WorkloadSpec { name: "lavaMD".into(), suite: "Rodinia 3.1".into(), kernels }
+}
+
+/// LU decomposition: per-iteration triple of kernels — 1-CTA `diagonal`,
+/// thin `perimeter`, shrinking 2-D `internal`. Highly variable grid sizes
+/// across launches.
+pub fn lud(scale: Scale) -> WorkloadSpec {
+    let iters = sc(scale, 4, 15, 24) as usize;
+    let regions = regions3(8 << 20);
+    let mut kernels = Vec::new();
+    for i in 0..iters {
+        let rem = (iters - i) as u32;
+        kernels.push(kernel(
+            format!("lud_diagonal_{i}"),
+            1,
+            256,
+            40,
+            8192,
+            regions.clone(),
+            vec![smem_loop(Trips::Fixed(16), 6, 2)],
+            0x1D01 + i as u64,
+        ));
+        kernels.push(kernel(
+            format!("lud_perimeter_{i}"),
+            rem.max(1),
+            256,
+            40,
+            8192,
+            regions.clone(),
+            vec![smem_loop(Trips::Fixed(12), 6, 1)],
+            0x1D02 + i as u64,
+        ));
+        kernels.push(kernel(
+            format!("lud_internal_{i}"),
+            (rem * rem).max(1),
+            256,
+            36,
+            4096,
+            regions.clone(),
+            vec![
+                fma_loop(
+                    Trips::Fixed(2),
+                    &[(0, AddrPattern::Coalesced), (1, AddrPattern::Strided { stride_bytes: 32 })],
+                    0,
+                    0,
+                    2,
+                    None,
+                    true,
+                ),
+                smem_loop(Trips::Fixed(24), 8, 1),
+                fma_loop(Trips::Fixed(1), &[], 2, 0, 0, Some((2, AddrPattern::Coalesced)), false),
+            ],
+            0x1D03 + i as u64,
+        ));
+    }
+    WorkloadSpec { name: "lud".into(), suite: "Rodinia 3.1".into(), kernels }
+}
+
+/// Myocyte ODE solver — **the paper's anti-example**: every kernel has a
+/// grid of **2 CTAs**, so at most two SMs are ever busy and parallelizing
+/// the SM loop yields nothing (Fig 5/6 ≈ 1.0×, slight slowdown from the
+/// OpenMP machinery). Deep sequential SFU-heavy solver loops.
+pub fn myocyte(scale: Scale) -> WorkloadSpec {
+    let launches = sc(scale, 2, 8, 16) as usize;
+    let trips = sc(scale, 300, 3000, 6000);
+    let regions = regions3(1 << 20);
+    let kernels = (0..launches)
+        .map(|i| {
+            kernel(
+                format!("solver_2_{i}"),
+                2, // ← the whole point
+                128,
+                63,
+                0,
+                regions.clone(),
+                vec![fma_loop(
+                    Trips::Fixed(trips),
+                    &[(0, AddrPattern::Coalesced)],
+                    12,
+                    4, // exp/log/pow chains in the ODE right-hand side
+                    2,
+                    Some((2, AddrPattern::Coalesced)),
+                    false,
+                )],
+                0x3102 + i as u64,
+            )
+        })
+        .collect();
+    WorkloadSpec { name: "myocyte".into(), suite: "Rodinia 3.1".into(), kernels }
+}
+
+/// Nearest neighbour: one short, massively parallel, bandwidth-bound
+/// kernel — the quickest Table-2 simulation (small Fig-1 bar).
+pub fn nn(scale: Scale) -> WorkloadSpec {
+    let grid = sc(scale, 32, 1024, 2048);
+    let regions = regions3(16 << 20);
+    let kernels = vec![kernel(
+        "euclid",
+        grid,
+        256,
+        20,
+        0,
+        regions,
+        vec![fma_loop(
+            Trips::Fixed(3),
+            &[(0, AddrPattern::Coalesced)],
+            4,
+            1, // sqrt
+            1,
+            Some((2, AddrPattern::Coalesced)),
+            false,
+        )],
+        0x2201,
+    )];
+    WorkloadSpec { name: "nn".into(), suite: "Rodinia 3.1".into(), kernels }
+}
+
+/// Needleman–Wunsch: anti-diagonal wavefront — grid ramps 1…N…1 across
+/// 2·N−1 launches; tiny grids with shared-memory dependence chains.
+pub fn nw(scale: Scale) -> WorkloadSpec {
+    let n = sc(scale, 6, 16, 24);
+    let regions = regions3(4 << 20);
+    let mut kernels = Vec::new();
+    for (dir, tag) in [(0u32, "nw1"), (1u32, "nw2")] {
+        for d in 1..=n {
+            let gridsize = if dir == 0 { d } else { n + 1 - d };
+            kernels.push(kernel(
+                format!("needle_{tag}_{d}"),
+                gridsize.max(1),
+                64,
+                28,
+                8448,
+                regions.clone(),
+                vec![
+                    fma_loop(Trips::Fixed(2), &[(0, AddrPattern::Strided { stride_bytes: 64 })], 0, 0, 2, None, true),
+                    smem_loop(Trips::Fixed(8), 2, 2),
+                    fma_loop(Trips::Fixed(1), &[], 0, 0, 2, Some((2, AddrPattern::Strided { stride_bytes: 64 })), false),
+                ],
+                0x4E57 + (dir * 1000 + d) as u64,
+            ));
+        }
+    }
+    WorkloadSpec { name: "nw".into(), suite: "Rodinia 3.1".into(), kernels }
+}
+
+/// PathFinder: dynamic-programming grid sweep, a few launches of a wide
+/// shared-memory kernel with deep pyramid iterations.
+pub fn pathfinder(scale: Scale) -> WorkloadSpec {
+    let launches = sc(scale, 2, 5, 10) as usize;
+    let grid = sc(scale, 32, 463, 926);
+    let regions = regions3(8 << 20);
+    let kernels = (0..launches)
+        .map(|i| {
+            kernel(
+                format!("dynproc_kernel_{i}"),
+                grid,
+                256,
+                24,
+                2048,
+                regions.clone(),
+                vec![
+                    fma_loop(Trips::Fixed(1), &[(0, AddrPattern::Coalesced)], 0, 0, 2, None, true),
+                    smem_loop(Trips::Fixed(sc(scale, 8, 20, 20)), 4, 1),
+                    fma_loop(Trips::Fixed(1), &[], 0, 0, 1, Some((2, AddrPattern::Coalesced)), false),
+                ],
+                0x9A7F + i as u64,
+            )
+        })
+        .collect();
+    WorkloadSpec { name: "pathfinder".into(), suite: "Rodinia 3.1".into(), kernels }
+}
+
+/// SRAD v1 (speckle-reducing anisotropic diffusion): two alternating
+/// stencil kernels per iteration over a large image; strided
+/// neighbour loads.
+pub fn srad_v1(scale: Scale) -> WorkloadSpec {
+    let iters = sc(scale, 1, 4, 12) as usize;
+    let grid = sc(scale, 36, 900, 900);
+    let regions = regions3(8 << 20);
+    let mut kernels = Vec::new();
+    for i in 0..iters {
+        for (kname, fp) in [("srad_cuda_1", 10u32), ("srad_cuda_2", 8u32)] {
+            kernels.push(kernel(
+                format!("{kname}_{i}"),
+                grid,
+                256,
+                32,
+                6144,
+                regions.clone(),
+                vec![fma_loop(
+                    Trips::Fixed(4),
+                    &[
+                        (0, AddrPattern::Coalesced),
+                        (0, AddrPattern::Strided { stride_bytes: 2048 }), // north/south rows
+                    ],
+                    fp,
+                    1,
+                    2,
+                    Some((2, AddrPattern::Coalesced)),
+                    false,
+                )],
+                0x5AD0 + (i * 2) as u64 + (fp == 8) as u64,
+            ));
+        }
+    }
+    WorkloadSpec { name: "srad_v1".into(), suite: "Rodinia 3.1".into(), kernels }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lavamd_is_single_kernel_many_ctas() {
+        let w = lavamd(Scale::Small);
+        assert_eq!(w.kernels.len(), 1);
+        assert_eq!(w.kernels[0].grid_ctas, 1000);
+        // compute-bound: FP32 instructions dominate the body
+        let body = &w.kernels[0].program.blocks[0];
+        let fp = body.insts.iter().filter(|i| i.op == OpClass::Ffma32).count();
+        assert!(fp >= 12);
+    }
+
+    #[test]
+    fn myocyte_two_ctas_always() {
+        for s in [Scale::Ci, Scale::Small, Scale::Paper] {
+            for k in myocyte(s).kernels {
+                assert_eq!(k.grid_ctas, 2);
+            }
+        }
+    }
+
+    #[test]
+    fn nw_wavefront_ramps() {
+        let w = nw(Scale::Small);
+        let grids: Vec<u32> = w.kernels.iter().map(|k| k.grid_ctas).collect();
+        // first half ramps up 1..=16, second half ramps down 16..=1
+        assert_eq!(grids[0], 1);
+        assert_eq!(grids[15], 16);
+        assert_eq!(grids[16], 16);
+        assert_eq!(*grids.last().unwrap(), 1);
+    }
+
+    #[test]
+    fn gaussian_grids_shrink() {
+        let w = gaussian(Scale::Small);
+        let fan2: Vec<u32> =
+            w.kernels.iter().filter(|k| k.name.starts_with("fan2")).map(|k| k.grid_ctas).collect();
+        assert!(fan2.first().unwrap() > fan2.last().unwrap());
+    }
+
+    #[test]
+    fn hotspot_uses_shared_memory() {
+        let w = hotspot(Scale::Ci);
+        assert!(w.kernels[0].smem_per_cta > 0);
+        let has_smem_op = w.kernels[0]
+            .program
+            .blocks
+            .iter()
+            .flat_map(|b| &b.insts)
+            .any(|i| matches!(i.op, OpClass::LdShared | OpClass::StShared));
+        assert!(has_smem_op);
+    }
+}

@@ -1,0 +1,124 @@
+//! Fixed-size register bitset used by the per-warp scoreboard.
+//!
+//! SASS kernels address up to 256 architectural registers (R0–R254 + RZ);
+//! the scoreboard tracks pending writes per warp with a 4×u64 bitset so
+//! dependence checks are a handful of AND/OR instructions on the hot path.
+
+/// 256-bit set keyed by register index.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct RegBitset {
+    words: [u64; 4],
+}
+
+impl RegBitset {
+    /// Empty set.
+    pub const fn new() -> Self {
+        Self { words: [0; 4] }
+    }
+
+    /// Insert register `r`.
+    #[inline(always)]
+    pub fn set(&mut self, r: u8) {
+        self.words[(r >> 6) as usize] |= 1u64 << (r & 63);
+    }
+
+    /// Remove register `r`.
+    #[inline(always)]
+    pub fn clear(&mut self, r: u8) {
+        self.words[(r >> 6) as usize] &= !(1u64 << (r & 63));
+    }
+
+    /// Is register `r` present?
+    #[inline(always)]
+    pub fn get(&self, r: u8) -> bool {
+        self.words[(r >> 6) as usize] & (1u64 << (r & 63)) != 0
+    }
+
+    /// Does `self` intersect `other`? (RAW/WAW hazard check.)
+    #[inline(always)]
+    pub fn intersects(&self, other: &RegBitset) -> bool {
+        (self.words[0] & other.words[0])
+            | (self.words[1] & other.words[1])
+            | (self.words[2] & other.words[2])
+            | (self.words[3] & other.words[3])
+            != 0
+    }
+
+    /// Union in place.
+    #[inline(always)]
+    pub fn union_with(&mut self, other: &RegBitset) {
+        for i in 0..4 {
+            self.words[i] |= other.words[i];
+        }
+    }
+
+    /// Remove all of `other`'s registers.
+    #[inline(always)]
+    pub fn subtract(&mut self, other: &RegBitset) {
+        for i in 0..4 {
+            self.words[i] &= !other.words[i];
+        }
+    }
+
+    /// Any register pending?
+    #[inline(always)]
+    pub fn any(&self) -> bool {
+        (self.words[0] | self.words[1] | self.words[2] | self.words[3]) != 0
+    }
+
+    /// Number of registers present.
+    #[inline(always)]
+    pub fn count(&self) -> u32 {
+        self.words.iter().map(|w| w.count_ones()).sum()
+    }
+
+    /// Build from a slice of register indices.
+    pub fn from_regs(regs: &[u8]) -> Self {
+        let mut s = Self::new();
+        for &r in regs {
+            s.set(r);
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn set_get_clear() {
+        let mut s = RegBitset::new();
+        assert!(!s.get(0));
+        s.set(0);
+        s.set(63);
+        s.set(64);
+        s.set(255);
+        assert!(s.get(0) && s.get(63) && s.get(64) && s.get(255));
+        assert_eq!(s.count(), 4);
+        s.clear(64);
+        assert!(!s.get(64));
+        assert_eq!(s.count(), 3);
+    }
+
+    #[test]
+    fn intersects_and_subtract() {
+        let a = RegBitset::from_regs(&[1, 2, 3]);
+        let b = RegBitset::from_regs(&[3, 4]);
+        let c = RegBitset::from_regs(&[4, 5]);
+        assert!(a.intersects(&b));
+        assert!(!a.intersects(&c));
+        let mut d = a;
+        d.subtract(&b);
+        assert!(d.get(1) && d.get(2) && !d.get(3));
+    }
+
+    #[test]
+    fn union() {
+        let mut a = RegBitset::from_regs(&[1]);
+        a.union_with(&RegBitset::from_regs(&[200]));
+        assert!(a.get(1) && a.get(200));
+        assert!(a.any());
+        assert!(!RegBitset::new().any());
+    }
+}

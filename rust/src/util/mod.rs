@@ -1,0 +1,153 @@
+//! Small self-contained utilities shared across the simulator.
+//!
+//! The build environment is fully offline with a fixed crate set, so the
+//! usual ecosystem crates (`rand`, `serde`, `fnv`, …) are replaced by the
+//! tiny deterministic implementations in this module.
+
+pub mod bitset;
+pub mod prng;
+
+pub use bitset::RegBitset;
+pub use prng::SplitMix64;
+
+/// Deterministic 64-bit mix hash (SplitMix64 finalizer). Used everywhere a
+/// stable, platform-independent hash is needed (address interleaving,
+/// synthetic irregular workloads, property-test input generation).
+#[inline(always)]
+pub fn mix64(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+/// Combine two u64 values into one deterministic hash.
+#[inline(always)]
+pub fn mix2(a: u64, b: u64) -> u64 {
+    mix64(a ^ mix64(b))
+}
+
+/// Integer ceiling division.
+#[inline(always)]
+pub fn ceil_div(a: u64, b: u64) -> u64 {
+    debug_assert!(b > 0);
+    (a + b - 1) / b
+}
+
+/// Round `a` up to the next multiple of `b`.
+#[inline(always)]
+pub fn round_up(a: u64, b: u64) -> u64 {
+    ceil_div(a, b) * b
+}
+
+/// `true` if `x` is a power of two (and non-zero).
+#[inline(always)]
+pub fn is_pow2(x: u64) -> bool {
+    x != 0 && (x & (x - 1)) == 0
+}
+
+/// log2 of a power-of-two value.
+#[inline(always)]
+pub fn ilog2(x: u64) -> u32 {
+    debug_assert!(is_pow2(x));
+    x.trailing_zeros()
+}
+
+/// Format a float with engineering-style compaction (for table output).
+pub fn fmt_eng(v: f64) -> String {
+    if v == 0.0 {
+        return "0".to_string();
+    }
+    let a = v.abs();
+    if a >= 1e9 {
+        format!("{:.2}G", v / 1e9)
+    } else if a >= 1e6 {
+        format!("{:.2}M", v / 1e6)
+    } else if a >= 1e3 {
+        format!("{:.2}k", v / 1e3)
+    } else if a >= 1.0 {
+        format!("{:.2}", v)
+    } else {
+        format!("{:.4}", v)
+    }
+}
+
+/// Pearson correlation coefficient between two equal-length series.
+/// Returns `None` when either series has zero variance or lengths differ.
+pub fn pearson(xs: &[f64], ys: &[f64]) -> Option<f64> {
+    if xs.len() != ys.len() || xs.len() < 2 {
+        return None;
+    }
+    let n = xs.len() as f64;
+    let mx = xs.iter().sum::<f64>() / n;
+    let my = ys.iter().sum::<f64>() / n;
+    let mut sxy = 0.0;
+    let mut sxx = 0.0;
+    let mut syy = 0.0;
+    for (&x, &y) in xs.iter().zip(ys) {
+        sxy += (x - mx) * (y - my);
+        sxx += (x - mx) * (x - mx);
+        syy += (y - my) * (y - my);
+    }
+    if sxx == 0.0 || syy == 0.0 {
+        return None;
+    }
+    Some(sxy / (sxx * syy).sqrt())
+}
+
+/// Geometric mean of a positive series.
+pub fn geomean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let s: f64 = xs.iter().map(|&x| x.max(1e-12).ln()).sum();
+    (s / xs.len() as f64).exp()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mix64_is_deterministic_and_diffuse() {
+        assert_eq!(mix64(1), mix64(1));
+        assert_ne!(mix64(1), mix64(2));
+        // avalanche sanity: flipping one input bit flips ~half the output bits
+        let a = mix64(0x1234_5678);
+        let b = mix64(0x1234_5679);
+        let flipped = (a ^ b).count_ones();
+        assert!(flipped > 16 && flipped < 48, "flipped={flipped}");
+    }
+
+    #[test]
+    fn ceil_div_and_round_up() {
+        assert_eq!(ceil_div(10, 3), 4);
+        assert_eq!(ceil_div(9, 3), 3);
+        assert_eq!(round_up(10, 8), 16);
+        assert_eq!(round_up(16, 8), 16);
+    }
+
+    #[test]
+    fn pow2_helpers() {
+        assert!(is_pow2(64));
+        assert!(!is_pow2(0));
+        assert!(!is_pow2(48));
+        assert_eq!(ilog2(128), 7);
+    }
+
+    #[test]
+    fn pearson_basic() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        let ys = [2.0, 4.0, 6.0, 8.0];
+        assert!((pearson(&xs, &ys).unwrap() - 1.0).abs() < 1e-12);
+        let yneg = [8.0, 6.0, 4.0, 2.0];
+        assert!((pearson(&xs, &yneg).unwrap() + 1.0).abs() < 1e-12);
+        assert!(pearson(&xs, &[1.0, 1.0, 1.0, 1.0]).is_none());
+    }
+
+    #[test]
+    fn geomean_basic() {
+        let g = geomean(&[1.0, 4.0]);
+        assert!((g - 2.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,123 @@
+//! **The paper's headline claim, as a test suite**: the multi-threaded
+//! simulator produces *bit-identical* statistics to the single-threaded
+//! one, for every workload, thread count, and OpenMP-style schedule.
+//!
+//! "our parallelization technique is deterministic, so the simulator
+//!  provides the same results for single-threaded and multi-threaded
+//!  simulations" — §Abstract.
+//!
+//! Even on a 1-core host this is a strong test: the worker threads are
+//! real OS threads, preemption interleaves them arbitrarily inside the
+//! parallel region, and any cross-SM write would corrupt per-SM state or
+//! stats nondeterministically (debug assertions + the full per-SM stat
+//! diff would catch it).
+
+use parsim::config::{GpuConfig, Schedule, SimConfig, StatsStrategy};
+use parsim::engine::GpuSim;
+use parsim::stats::diff::diff_runs;
+use parsim::stats::GpuStats;
+use parsim::trace::workloads::{self, Scale};
+
+fn run(
+    name: &str,
+    gpu: &GpuConfig,
+    threads: usize,
+    schedule: Schedule,
+    strategy: StatsStrategy,
+) -> GpuStats {
+    let wl = workloads::build(name, Scale::Ci).unwrap();
+    let sim = SimConfig { threads, schedule, stats_strategy: strategy, ..SimConfig::default() };
+    let mut gs = GpuSim::new(gpu.clone(), sim);
+    gs.run_workload(&wl)
+}
+
+fn assert_identical(name: &str, a: &GpuStats, b: &GpuStats, what: &str) {
+    let d = diff_runs(a, b);
+    assert!(d.identical(), "{name} [{what}] diverged:\n{}", d.report());
+    assert_eq!(a.fingerprint(), b.fingerprint(), "{name} [{what}] fingerprint");
+}
+
+/// Every Table-2 workload, 1 thread vs 4 threads, on the tiny GPU
+/// (fast enough to cover all 19 in CI).
+#[test]
+fn all_19_workloads_parallel_equals_sequential_tiny_gpu() {
+    let gpu = GpuConfig::tiny();
+    for &name in workloads::names() {
+        let seq = run(name, &gpu, 1, Schedule::Static { chunk: 1 }, StatsStrategy::PerSm);
+        let par = run(name, &gpu, 4, Schedule::Static { chunk: 1 }, StatsStrategy::PerSm);
+        assert_identical(name, &seq, &par, "1t vs 4t");
+    }
+}
+
+/// Representative workloads on the full 80-SM RTX 3080 Ti model, across
+/// thread counts (the paper's sweep, capped for CI time).
+#[test]
+fn full_gpu_thread_count_sweep() {
+    let gpu = GpuConfig::rtx3080ti();
+    for name in ["nn", "myocyte", "cut_1"] {
+        let seq = run(name, &gpu, 1, Schedule::Static { chunk: 1 }, StatsStrategy::PerSm);
+        for threads in [2, 16] {
+            let par =
+                run(name, &gpu, threads, Schedule::Static { chunk: 1 }, StatsStrategy::PerSm);
+            assert_identical(name, &seq, &par, &format!("{threads} threads"));
+        }
+    }
+}
+
+/// §4.3: the schedule must not change results either — static default,
+/// static chunk-1, static chunk-3, dynamic chunk-1, dynamic chunk-4.
+#[test]
+fn schedules_do_not_change_results() {
+    let gpu = GpuConfig::tiny();
+    for name in ["hotspot", "sssp", "cut_2"] {
+        let base = run(name, &gpu, 1, Schedule::Static { chunk: 1 }, StatsStrategy::PerSm);
+        for schedule in [
+            Schedule::Static { chunk: 0 },
+            Schedule::Static { chunk: 3 },
+            Schedule::Dynamic { chunk: 1 },
+            Schedule::Dynamic { chunk: 4 },
+        ] {
+            let par = run(name, &gpu, 3, schedule, StatsStrategy::PerSm);
+            assert_identical(name, &base, &par, &format!("{schedule:?}"));
+        }
+    }
+}
+
+/// Repeated runs of the *same* parallel configuration must agree with
+/// themselves (no hidden host-timing dependence).
+#[test]
+fn parallel_runs_are_self_reproducible() {
+    let gpu = GpuConfig::tiny();
+    let a = run("lud", &gpu, 4, Schedule::Dynamic { chunk: 1 }, StatsStrategy::PerSm);
+    let b = run("lud", &gpu, 4, Schedule::Dynamic { chunk: 1 }, StatsStrategy::PerSm);
+    assert_identical("lud", &a, &b, "rerun");
+}
+
+/// Per-SM breakdowns must match, not just aggregates (compensating
+/// errors across SMs must not masquerade as determinism).
+#[test]
+fn per_sm_breakdowns_identical() {
+    let gpu = GpuConfig::rtx3080ti();
+    let seq = run("hotspot", &gpu, 1, Schedule::Static { chunk: 1 }, StatsStrategy::PerSm);
+    let par = run("hotspot", &gpu, 8, Schedule::Dynamic { chunk: 1 }, StatsStrategy::PerSm);
+    for (k, (ka, kb)) in seq.kernels.iter().zip(&par.kernels).enumerate() {
+        assert_eq!(ka.per_sm.len(), kb.per_sm.len());
+        for (i, (sa, sb)) in ka.per_sm.iter().zip(&kb.per_sm).enumerate() {
+            assert_eq!(sa, sb, "kernel {k} SM {i} differs");
+        }
+    }
+}
+
+/// The simulated cycle count — the *timing model's* output — must be
+/// exactly equal too, not only the event counts.
+#[test]
+fn simulated_cycles_identical() {
+    let gpu = GpuConfig::tiny();
+    for name in ["gaussian", "fdtd2d", "rnn"] {
+        let seq = run(name, &gpu, 1, Schedule::Static { chunk: 1 }, StatsStrategy::PerSm);
+        let par = run(name, &gpu, 4, Schedule::Dynamic { chunk: 2 }, StatsStrategy::PerSm);
+        let a: Vec<u64> = seq.kernels.iter().map(|k| k.cycles).collect();
+        let b: Vec<u64> = par.kernels.iter().map(|k| k.cycles).collect();
+        assert_eq!(a, b, "{name} kernel cycle counts");
+    }
+}

@@ -1,0 +1,176 @@
+//! Property-style tests over randomized inputs (the offline crate set has
+//! no `proptest`, so generation uses the crate's own deterministic
+//! SplitMix64 — failures print the seed for replay).
+//!
+//! Invariants exercised:
+//! * coordinator determinism under random (threads, schedule, chunk)
+//! * cache conservation laws under random access streams
+//! * pool index-coverage under random region shapes
+//! * cost-model bounds (1 ≤ speedup ≤ threads on balanced work, etc.)
+
+use parsim::config::{GpuConfig, Schedule, SimConfig, StatsStrategy};
+use parsim::engine::pool::ThreadPool;
+use parsim::engine::GpuSim;
+use parsim::mem::cache::{test_request, AccessOutcome, Cache};
+use parsim::trace::workloads::{self, Scale};
+use parsim::util::SplitMix64;
+
+const PROPERTY_ITERS: usize = 12;
+
+fn random_schedule(g: &mut SplitMix64) -> Schedule {
+    let chunk = g.range(1, 6);
+    match g.next_below(3) {
+        0 => Schedule::Static { chunk: 0 },
+        1 => Schedule::Static { chunk },
+        _ => Schedule::Dynamic { chunk },
+    }
+}
+
+/// Random (workload, threads, schedule, strategy) configurations all
+/// reproduce the sequential fingerprint.
+#[test]
+fn prop_random_configs_are_deterministic() {
+    let gpu = GpuConfig::tiny();
+    let names = workloads::names();
+    let mut g = SplitMix64::new(0xD57E_2026);
+    // cache the sequential baselines lazily
+    let mut baselines: std::collections::BTreeMap<&str, u64> = Default::default();
+    for iter in 0..PROPERTY_ITERS {
+        let name = names[g.range(0, names.len())];
+        let threads = g.range(2, 7);
+        let schedule = random_schedule(&mut g);
+        let strategy = match g.next_below(3) {
+            0 => StatsStrategy::PerSm,
+            1 => StatsStrategy::SeqPoint,
+            _ => StatsStrategy::SharedLocked,
+        };
+        let base = *baselines.entry(name).or_insert_with(|| {
+            let wl = workloads::build(name, Scale::Ci).unwrap();
+            let mut gs = GpuSim::new(gpu.clone(), SimConfig::default());
+            gs.run_workload(&wl).fingerprint()
+        });
+        let wl = workloads::build(name, Scale::Ci).unwrap();
+        let sim = SimConfig { threads, schedule, stats_strategy: strategy, ..SimConfig::default() };
+        let mut gs = GpuSim::new(gpu.clone(), sim);
+        let fp = gs.run_workload(&wl).fingerprint();
+        assert_eq!(
+            fp, base,
+            "iter {iter}: {name} threads={threads} {schedule:?} {strategy:?} diverged"
+        );
+    }
+}
+
+/// Cache invariant: fills release exactly the waiters that were merged;
+/// every queued miss corresponds to one downstream request; hits never
+/// exceed accesses.
+#[test]
+fn prop_cache_conservation_under_random_streams() {
+    for seed in 0..8u64 {
+        let mut g = SplitMix64::new(0xCAC4E ^ seed);
+        let mut cache = Cache::new(GpuConfig::rtx3080ti().l1d);
+        let mut queued = 0u64;
+        let mut merged = 0u64;
+        let mut filled_waiters = 0u64;
+        let mut downstream = Vec::new();
+        for _ in 0..3000 {
+            let addr = (g.next_below(256)) * 128;
+            match cache.access_read(test_request(addr, false)) {
+                AccessOutcome::MissQueued => queued += 1,
+                AccessOutcome::MissMerged => merged += 1,
+                _ => {}
+            }
+            while let Some(m) = cache.pop_miss() {
+                downstream.push(m.line_addr);
+            }
+            if g.chance(0.3) {
+                if let Some(line) = downstream.pop() {
+                    filled_waiters += cache.fill(line).len() as u64;
+                }
+            }
+        }
+        // drain
+        while let Some(m) = cache.pop_miss() {
+            downstream.push(m.line_addr);
+        }
+        for line in downstream.drain(..) {
+            filled_waiters += cache.fill(line).len() as u64;
+        }
+        assert!(cache.is_idle(), "seed {seed}: cache drained");
+        assert_eq!(
+            filled_waiters,
+            queued + merged,
+            "seed {seed}: every requester woken exactly once"
+        );
+    }
+}
+
+/// Pool property: for random (threads, n, schedule), every index runs
+/// exactly once and the aggregate matches the sequential sum.
+#[test]
+fn prop_pool_covers_indices() {
+    use std::sync::atomic::{AtomicU64, Ordering};
+    let mut g = SplitMix64::new(0x9001);
+    for iter in 0..PROPERTY_ITERS {
+        let threads = g.range(1, 9);
+        let n = g.range(1, 200);
+        let schedule = random_schedule(&mut g);
+        let pool = ThreadPool::new(threads);
+        let sum = AtomicU64::new(0);
+        pool.parallel_for(n, schedule, |i| {
+            // wrapping: the sum is a coverage checksum, overflow is fine
+            sum.fetch_add((parsim::util::mix64(i as u64) | 1) >> 8, Ordering::Relaxed);
+        });
+        let expect: u64 = (0..n)
+            .map(|i| (parsim::util::mix64(i as u64) | 1) >> 8)
+            .fold(0u64, u64::wrapping_add);
+        assert_eq!(
+            sum.load(Ordering::Relaxed),
+            expect,
+            "iter {iter}: threads={threads} n={n} {schedule:?}"
+        );
+    }
+}
+
+/// Cost-model bounds: on any random work vector, 0 < speedup ≤ threads
+/// (+ε for rounding), and adding serial time can only reduce it.
+#[test]
+fn prop_cost_model_bounds() {
+    use parsim::engine::costmodel::{CostModel, CostParams, ModelConfig};
+    let mut g = SplitMix64::new(0xC057);
+    for iter in 0..PROPERTY_ITERS {
+        let threads = g.range(2, 25);
+        let schedule = random_schedule(&mut g);
+        let cfg = ModelConfig { threads, schedule };
+        let mut m = CostModel::new(vec![cfg], CostParams::default());
+        let n_sms = g.range(4, 96);
+        for _ in 0..50 {
+            let work: Vec<u32> =
+                (0..n_sms).map(|_| g.next_below(500) as u32 + 1).collect();
+            m.record_cycle(&work);
+        }
+        let s0 = m.speedup(0, 0.0);
+        assert!(s0 > 0.0, "iter {iter}: positive speedup");
+        assert!(
+            s0 <= threads as f64 + 1e-9,
+            "iter {iter}: speedup {s0} exceeds {threads} threads"
+        );
+        // Amdahl: serial time pulls the speed-up toward 1 from either
+        // side (a <1 "speed-up" from overhead also shrinks toward 1)
+        let s_serial = m.speedup(0, 1e9);
+        assert!(
+            (s_serial - 1.0).abs() <= (s0 - 1.0).abs() + 1e-9,
+            "iter {iter}: Amdahl violated: s0={s0} s_serial={s_serial}"
+        );
+    }
+}
+
+/// Workload construction is a pure function of (name, scale).
+#[test]
+fn prop_workload_construction_pure() {
+    let mut g = SplitMix64::new(0x90F);
+    for _ in 0..PROPERTY_ITERS {
+        let name = workloads::names()[g.range(0, 19)];
+        let scale = [Scale::Ci, Scale::Small, Scale::Paper][g.range(0, 3)];
+        assert_eq!(workloads::build(name, scale), workloads::build(name, scale));
+    }
+}

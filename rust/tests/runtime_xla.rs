@@ -1,0 +1,73 @@
+//! PJRT runtime round-trips: load the AOT HLO artifacts, execute, and
+//! cross-validate against the simulator's functional model.
+//!
+//! These tests **skip** (with a notice) when `make artifacts` has not
+//! run — the Rust test suite must not require Python.
+
+use parsim::config::{FunctionalMode, GpuConfig, SimConfig};
+use parsim::engine::GpuSim;
+use parsim::runtime::{artifact_path, artifacts_available, CompiledHlo};
+use parsim::trace::functional;
+use parsim::trace::workloads::{self, Scale};
+
+fn artifact_or_skip(stem: &str) -> Option<CompiledHlo> {
+    if !artifacts_available(stem) {
+        eprintln!("SKIP: artifact {stem} missing (run `make artifacts`)");
+        return None;
+    }
+    Some(CompiledHlo::load(&artifact_path(stem)).expect("load artifact"))
+}
+
+#[test]
+fn artifact_executes_and_matches_naive_gemm() {
+    let Some(exe) = artifact_or_skip("gemm_256x128x32") else { return };
+    let a = functional::gen_matrix(11, 256, 32);
+    let b = functional::gen_matrix(22, 32, 128);
+    let c = exe.run_f32(&[(&a, 256, 32), (&b, 32, 128)]).expect("execute");
+    let c_ref = functional::gemm_naive(&a, &b, 256, 128, 32);
+    assert_eq!(c.len(), c_ref.len());
+    assert!(functional::max_abs_diff(&c, &c_ref) < 1e-3);
+}
+
+#[test]
+fn artifact_rejects_bad_shapes() {
+    let Some(exe) = artifact_or_skip("gemm_256x128x32") else { return };
+    let a = functional::gen_matrix(1, 16, 16);
+    assert!(exe.run_f32(&[(&a, 4, 4)]).is_err(), "shape mismatch must error");
+}
+
+/// The full three-layer loop: trace-driven simulation with functional
+/// replay vs the Pallas-kernel-bearing XLA artifact — for every
+/// GEMM-family workload with a Ci artifact.
+#[test]
+fn simulator_functional_replay_matches_xla_for_all_gemm_workloads() {
+    for name in ["cut_1", "cut_2", "gemm", "conv", "rnn"] {
+        let wl = workloads::build(name, Scale::Ci).unwrap();
+        let kd = wl.kernels.iter().find(|k| k.gemm.is_some()).unwrap();
+        let sem = kd.gemm.unwrap();
+        let stem = format!("gemm_{}x{}x{}", sem.m, sem.n, sem.k);
+        let Some(exe) = artifact_or_skip(&stem) else { continue };
+
+        let sim = SimConfig { functional: FunctionalMode::Full, ..SimConfig::default() };
+        let mut gs = GpuSim::new(GpuConfig::tiny(), sim);
+        let _ = gs.run_workload(&wl);
+        let fr = gs
+            .functional_results
+            .iter()
+            .find(|f| f.sem == sem)
+            .unwrap_or_else(|| panic!("{name}: no functional result"));
+
+        let a = functional::gen_matrix(kd.seed ^ 0xA, sem.m as usize, sem.k as usize);
+        let b = functional::gen_matrix(kd.seed ^ 0xB, sem.k as usize, sem.n as usize);
+        let c_xla = exe
+            .run_f32(&[(&a, sem.m as usize, sem.k as usize), (&b, sem.k as usize, sem.n as usize)])
+            .expect("execute");
+        let diff = functional::max_abs_diff(&fr.c, &c_xla);
+        assert!(
+            diff < 1e-3 * sem.k as f32,
+            "{name}: sim-vs-xla diff {diff} (K={})",
+            sem.k
+        );
+        eprintln!("{name}: sim vs xla max diff {diff:e} ✓");
+    }
+}

@@ -1,0 +1,98 @@
+//! §3 statistics strategies: all three (per-SM isolation, shared-locked,
+//! sequential-point) must report identical final statistics — they only
+//! differ in *how* the data races are avoided, which
+//! `benches/ablation_stats.rs` prices.
+
+use parsim::config::{GpuConfig, Schedule, SimConfig, StatsStrategy};
+use parsim::engine::GpuSim;
+use parsim::trace::workloads::{self, Scale};
+
+fn run(
+    name: &str,
+    threads: usize,
+    strategy: StatsStrategy,
+) -> (parsim::GpuStats, Option<(u64, u64, u64)>) {
+    let wl = workloads::build(name, Scale::Ci).unwrap();
+    let sim = SimConfig {
+        threads,
+        schedule: Schedule::Static { chunk: 1 },
+        stats_strategy: strategy,
+        ..SimConfig::default()
+    };
+    let mut gs = GpuSim::new(GpuConfig::tiny(), sim);
+    let stats = gs.run_workload(&wl);
+    let shared = if strategy == StatsStrategy::SharedLocked {
+        Some(gs.shared_stats().snapshot())
+    } else {
+        None
+    };
+    (stats, shared)
+}
+
+/// The unique-address count — the paper's worked example of a
+/// non-counter stat — must agree across all three strategies.
+#[test]
+fn unique_line_counts_agree_across_strategies() {
+    for name in ["nn", "hotspot", "mst"] {
+        let (per_sm, _) = run(name, 1, StatsStrategy::PerSm);
+        let (seq_point, _) = run(name, 2, StatsStrategy::SeqPoint);
+        let (locked, _) = run(name, 2, StatsStrategy::SharedLocked);
+        for k in 0..per_sm.kernels.len() {
+            let a = per_sm.kernels[k].unique_lines_global;
+            let b = seq_point.kernels[k].unique_lines_global;
+            let c = locked.kernels[k].unique_lines_global;
+            assert_eq!(a, b, "{name} kernel {k}: per-sm vs seq-point");
+            assert_eq!(a, c, "{name} kernel {k}: per-sm vs locked");
+            // contents, not just counts
+            assert_eq!(
+                per_sm.kernels[k].unique_lines_fp, seq_point.kernels[k].unique_lines_fp,
+                "{name} kernel {k}: set contents differ (per-sm vs seq-point)"
+            );
+            assert_eq!(
+                per_sm.kernels[k].unique_lines_fp, locked.kernels[k].unique_lines_fp,
+                "{name} kernel {k}: set contents differ (per-sm vs locked)"
+            );
+        }
+    }
+}
+
+/// Counter statistics must be identical across strategies too.
+#[test]
+fn counters_identical_across_strategies() {
+    let (a, _) = run("lud", 1, StatsStrategy::PerSm);
+    let (b, _) = run("lud", 3, StatsStrategy::SeqPoint);
+    for (ka, kb) in a.kernels.iter().zip(&b.kernels) {
+        assert_eq!(ka.cycles, kb.cycles);
+        assert_eq!(ka.sm.warp_insts_issued, kb.sm.warp_insts_issued);
+        assert_eq!(ka.sm.l1d_accesses, kb.sm.l1d_accesses);
+        assert_eq!(ka.mem.dram_reads, kb.mem.dram_reads);
+    }
+}
+
+/// In locked mode, the shared structure's issue counter must equal the
+/// per-SM aggregate — the lock serializes but must not lose updates
+/// (this is exactly the test a *racy* shared counter would fail).
+#[test]
+fn locked_shared_counter_matches_per_sm_aggregate() {
+    let (stats, shared) = run("hotspot", 4, StatsStrategy::SharedLocked);
+    let (issued_shared, l1d_shared, _uniq) = shared.unwrap();
+    // shared stats are reset at each kernel start, so they reflect the
+    // LAST kernel of the workload.
+    let last = stats.kernels.last().unwrap();
+    assert_eq!(issued_shared, last.sm.warp_insts_issued);
+    assert_eq!(l1d_shared, last.sm.l1d_accesses);
+}
+
+/// SeqPoint leaves per-SM sets empty (addresses flow through the
+/// sequential global set instead) and drains all buffers.
+#[test]
+fn seq_point_does_not_populate_per_sm_sets() {
+    let (stats, _) = run("nn", 2, StatsStrategy::SeqPoint);
+    for k in &stats.kernels {
+        for sm in &k.per_sm {
+            assert!(sm.unique_lines.is_empty());
+            assert!(sm.addr_buffer.is_empty(), "buffers drained at seq points");
+        }
+        assert!(k.unique_lines_global > 0);
+    }
+}

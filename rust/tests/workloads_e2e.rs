@@ -1,0 +1,136 @@
+//! End-to-end invariants: every Table-2 workload simulates to completion
+//! on the tiny GPU with self-consistent statistics.
+
+use parsim::config::{GpuConfig, SimConfig};
+use parsim::engine::GpuSim;
+use parsim::trace::workloads::{self, Scale};
+
+fn run_ci(name: &str) -> parsim::GpuStats {
+    let wl = workloads::build(name, Scale::Ci).unwrap();
+    let mut gs = GpuSim::new(GpuConfig::tiny(), SimConfig::default());
+    gs.run_workload(&wl)
+}
+
+/// All 19 workloads complete, with conservation laws intact.
+#[test]
+fn all_workloads_complete_with_consistent_stats() {
+    for &name in workloads::names() {
+        let wl = workloads::build(name, Scale::Ci).unwrap();
+        let stats = run_ci(name);
+        assert_eq!(stats.kernels.len(), wl.kernels.len(), "{name}: kernel count");
+        for (k, kd) in stats.kernels.iter().zip(&wl.kernels) {
+            // CTA conservation
+            assert_eq!(k.sm.ctas_launched, kd.grid_ctas as u64, "{name}/{}", kd.name);
+            assert_eq!(k.sm.ctas_completed, k.sm.ctas_launched, "{name}/{}", kd.name);
+            // warp conservation
+            let wpc = kd.warps_per_cta(32) as u64;
+            assert_eq!(k.sm.warps_completed, kd.grid_ctas as u64 * wpc, "{name}/{}", kd.name);
+            // instruction conservation: issued == program dynamic length
+            assert_eq!(
+                k.sm.warp_insts_issued,
+                kd.total_warp_insts(32),
+                "{name}/{}: every instruction issues exactly once",
+                kd.name
+            );
+            // cache arithmetic
+            assert_eq!(
+                k.sm.l1d_accesses,
+                k.sm.l1d_hits + k.sm.l1d_misses,
+                "{name}/{}: L1D hits+misses",
+                kd.name
+            );
+            assert_eq!(
+                k.mem.l2_accesses,
+                k.mem.l2_hits + k.mem.l2_misses,
+                "{name}/{}: L2 hits+misses",
+                kd.name
+            );
+            // coalescing can only reduce transactions
+            assert!(k.sm.coalesced_to <= k.sm.coalesced_from, "{name}/{}", kd.name);
+            // timing sanity
+            assert!(k.cycles > 0, "{name}/{}", kd.name);
+            assert!(k.ipc() < 4.0 * 4.0, "{name}/{}: IPC beyond issue bound", kd.name);
+        }
+    }
+}
+
+/// Memory-bound workloads must produce DRAM traffic; compute-bound ones
+/// must be FP32-dominated. (Spot checks on workload character.)
+#[test]
+fn workload_characters_are_right() {
+    let mst = run_ci("mst");
+    let total_mst: u64 = mst.kernels.iter().map(|k| k.mem.dram_reads).sum();
+    assert!(total_mst > 100, "mst is memory-bound: {total_mst} DRAM reads");
+
+    let lava = run_ci("lavaMD");
+    let k = &lava.kernels[0];
+    assert!(
+        k.sm.insts_fp32 > k.sm.insts_ld * 4,
+        "lavaMD is compute-bound: fp32={} ld={}",
+        k.sm.insts_fp32,
+        k.sm.insts_ld
+    );
+    assert!(k.sm.insts_sfu > 0, "lavaMD uses the SFU (exp)");
+
+    let hot = run_ci("hotspot");
+    let k = &hot.kernels[0];
+    assert!(k.sm.insts_smem > 0, "hotspot stages through shared memory");
+    assert!(k.sm.insts_bar > 0, "hotspot synchronizes");
+}
+
+/// Irregular workloads must show per-SM load imbalance; balanced ones
+/// must not (this is the mechanism behind Fig 6).
+#[test]
+fn imbalance_signature() {
+    let gpu = GpuConfig::rtx3080ti();
+    let sim = SimConfig::default();
+    // cut_1: 20 CTAs on 80 SMs → exactly 20 SMs see work
+    let wl = workloads::build("cut_1", Scale::Ci).unwrap();
+    let mut gs = GpuSim::new(gpu.clone(), sim.clone());
+    let stats = gs.run_workload(&wl);
+    let busy = stats.kernels[0].per_sm.iter().filter(|s| s.ctas_launched > 0).count();
+    assert_eq!(busy, 20, "cut_1 busy SMs");
+    // and they are the *first* 20 (contiguous — the static-schedule trap)
+    for (i, sm) in stats.kernels[0].per_sm.iter().enumerate() {
+        assert_eq!(sm.ctas_launched > 0, i < 20, "SM {i}");
+    }
+
+    // sssp: per-warp trip spread ⇒ uneven issued counts across busy SMs
+    let wl = workloads::build("sssp", Scale::Ci).unwrap();
+    let mut gs = GpuSim::new(gpu, sim);
+    let stats = gs.run_workload(&wl);
+    let k = stats
+        .kernels
+        .iter()
+        .find(|k| k.name.starts_with("relax"))
+        .expect("relax kernel");
+    let issued: Vec<u64> =
+        k.per_sm.iter().filter(|s| s.ctas_launched > 0).map(|s| s.warp_insts_issued).collect();
+    let min = issued.iter().min().unwrap();
+    let max = issued.iter().max().unwrap();
+    assert!(max > min, "sssp busy SMs must be imbalanced: {issued:?}");
+}
+
+/// L1D locality: streaming workloads re-touch lines; hit rates must be
+/// nonzero but below 100 %.
+#[test]
+fn cache_behaviour_plausible() {
+    for name in ["syrk", "srad_v1"] {
+        let stats = run_ci(name);
+        let k = &stats.kernels[0];
+        let hr = k.l1d_hit_rate();
+        assert!(hr > 0.0 && hr < 1.0, "{name} L1D hit rate {hr}");
+    }
+}
+
+/// Workloads scale: Small strictly slower (more cycles) than Ci.
+#[test]
+fn scale_increases_simulated_work() {
+    for name in ["nn", "pathfinder"] {
+        let ci = run_ci(name);
+        let wl = workloads::build(name, Scale::Small).unwrap();
+        let mut gs = GpuSim::new(GpuConfig::tiny(), SimConfig::default());
+        let small = gs.run_workload(&wl);
+        assert!(small.total_warp_insts() > ci.total_warp_insts(), "{name}");
+    }
+}
