@@ -1,0 +1,48 @@
+//! Campaign engine demo: run a 12-job matrix (3 workloads × {1, 4}
+//! SM-phase threads × {static, dynamic} schedules on the tiny GPU)
+//! concurrently, then rerun it to show the content-hash cache at work —
+//! the second pass simulates nothing and the result store's bytes are
+//! unchanged.
+//!
+//! ```sh
+//! cargo run --release --example campaign_sweep
+//! ```
+
+use parsim::campaign::{self, CampaignConfig, RESULTS_JSONL};
+
+fn main() {
+    let spec = campaign::default_matrix("sweep_demo");
+    let out = std::env::temp_dir().join(format!("parsim_sweep_demo_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&out);
+
+    println!("campaign of {} jobs → {}", spec.len(), out.display());
+    for j in spec.jobs().iter().take(3) {
+        println!("  {}", j.key());
+    }
+    println!("  … ({} more)\n", spec.len() - 3);
+
+    let cfg = CampaignConfig::default();
+    println!(
+        "pass 1: cold store, {} job worker(s), core budget {}",
+        cfg.workers, cfg.core_budget
+    );
+    let r1 = campaign::run_campaign(&spec, &out, &cfg).expect("campaign run");
+    println!("{}\n", r1.summary());
+    let bytes1 = std::fs::read(r1.out_dir.join(RESULTS_JSONL)).expect("read store");
+
+    println!("pass 2: identical campaign, warm store");
+    let r2 = campaign::run_campaign(&spec, &out, &cfg).expect("campaign rerun");
+    println!("{}\n", r2.summary());
+    let bytes2 = std::fs::read(r2.out_dir.join(RESULTS_JSONL)).expect("read store");
+
+    assert_eq!(r2.simulated, 0, "warm rerun must simulate nothing");
+    assert_eq!(r2.cache_hits, r2.total_jobs, "warm rerun must be 100% cache hits");
+    assert_eq!(bytes1, bytes2, "store must be byte-identical across reruns");
+    println!(
+        "OK: rerun was {}/{} cache hits with 0 simulations, and {} is byte-identical —\n\
+         incremental sweeps only ever pay for the delta.",
+        r2.cache_hits, r2.total_jobs, RESULTS_JSONL
+    );
+
+    std::fs::remove_dir_all(&out).ok();
+}

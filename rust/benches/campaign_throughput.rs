@@ -1,0 +1,56 @@
+//! Campaign throughput: jobs/second of the multi-simulation scheduler
+//! vs serial execution, across job-level worker counts.
+//!
+//! Uses `--force`-style fresh runs (cache disabled) so every pass
+//! simulates all jobs; the 1-worker row is the serial baseline the
+//! speed-up column is normalized to. On a single-core container the
+//! speed-up hovers near 1× (jobs time-slice one core) — the bench then
+//! quantifies the scheduler's overhead rather than its scaling.
+//!
+//! `BENCH_CAMPAIGN_WORKERS=1,2,4,8 cargo bench --bench campaign_throughput`
+
+use std::time::Instant;
+
+use parsim::campaign::{self, CampaignConfig};
+
+fn main() {
+    let worker_counts: Vec<usize> = std::env::var("BENCH_CAMPAIGN_WORKERS")
+        .ok()
+        .map(|v| v.split(',').filter_map(|t| t.trim().parse().ok()).collect())
+        .unwrap_or_else(|| vec![1, 2, 4]);
+    let spec = campaign::default_matrix("throughput_bench");
+    let host = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    println!(
+        "campaign throughput: {} jobs (tiny GPU, CI scale), host parallelism {host}\n",
+        spec.len()
+    );
+    println!("{:>8} {:>12} {:>12} {:>10}", "workers", "wall (s)", "jobs/s", "speedup");
+
+    let mut serial_wall = None;
+    for &workers in &worker_counts {
+        let out = std::env::temp_dir()
+            .join(format!("parsim_campaign_bench_{}_{workers}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&out);
+        let cfg = CampaignConfig {
+            workers,
+            core_budget: host,
+            force: true, // never let the cache short-circuit the measurement
+            quiet: true,
+        };
+        let t0 = Instant::now();
+        let report = campaign::run_campaign(&spec, &out, &cfg).expect("campaign run");
+        let wall = t0.elapsed().as_secs_f64();
+        assert_eq!(report.simulated, spec.len(), "cache must not interfere");
+        let serial = *serial_wall.get_or_insert(wall);
+        println!(
+            "{workers:>8} {wall:>12.3} {:>12.2} {:>9.2}x",
+            spec.len() as f64 / wall,
+            serial / wall
+        );
+        std::fs::remove_dir_all(&out).ok();
+    }
+    println!(
+        "\nnote: job-level speed-up multiplies with the paper's SM-phase speed-up\n\
+         (two-level parallelism under one core budget) on multi-core hosts."
+    );
+}

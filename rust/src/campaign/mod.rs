@@ -1,0 +1,73 @@
+//! Campaign engine — batched multi-simulation orchestration with a
+//! persistent, cache-aware result store.
+//!
+//! The paper parallelizes *one* simulation's per-cycle SM loop; real
+//! research campaigns (its own Figures 5–7 sweep 19 workloads ×
+//! schedules × thread counts) are embarrassingly parallel *across*
+//! simulations. This subsystem layers that simulation-level parallelism
+//! on top of the paper's cycle-level parallelism:
+//!
+//! * [`spec`] — [`JobSpec`]/[`CampaignSpec`]: the
+//!   `workload × GpuConfig × SimConfig` matrix, canonical job keys, and
+//!   content hashes.
+//! * [`scheduler`] — a work-stealing multi-simulation scheduler (jobs
+//!   dispatched through the paper's own [`crate::engine::pool`] with
+//!   `schedule(dynamic, 1)`), two-level parallelism under a global core
+//!   budget, and deterministic index-ordered aggregation.
+//! * [`store`] — the persistent JSONL + CSV result store under
+//!   `campaign_out/<name>/`, keyed by content hash: re-running a
+//!   campaign skips already-simulated jobs, and incremental sweeps only
+//!   simulate the delta.
+//!
+//! Because every job is bit-deterministic (the paper's guarantee) and
+//! the store is ordered by job key rather than completion order, two
+//! runs of the same campaign produce **byte-identical** result files —
+//! the determinism property lifted to campaign granularity.
+//!
+//! ```no_run
+//! use std::path::Path;
+//! use parsim::campaign::{self, CampaignConfig};
+//!
+//! let spec = campaign::default_matrix("sweep");     // 12 jobs
+//! let report =
+//!     campaign::run_campaign(&spec, Path::new("campaign_out"), &CampaignConfig::default())
+//!         .unwrap();
+//! println!("{}", report.summary());                 // rerun → 100% cache hits
+//! ```
+
+pub mod scheduler;
+pub mod spec;
+pub mod store;
+
+pub use scheduler::{run_campaign, run_ordered, CampaignConfig, CampaignReport};
+pub use spec::{
+    default_matrix, parse_schedule_token, parse_strategy_token, schedule_token, CampaignSpec,
+    JobSpec, STORE_SCHEMA_VERSION,
+};
+pub use store::{JobRecord, ResultStore, RESULTS_CSV, RESULTS_JSONL};
+
+/// Worker count for harness-level fan-out ([`run_ordered`] call sites in
+/// `crate::harness`): the `PARSIM_CAMPAIGN_WORKERS` environment variable
+/// when set, otherwise the host's available parallelism.
+pub fn harness_workers() -> usize {
+    match env_workers() {
+        Some(v) => v,
+        None => std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+    }
+}
+
+/// Worker count for harness sweeps that **measure wall-clock**
+/// (`measure_all`, `fig1`): concurrent jobs share cores and would
+/// contaminate the very timings Figures 1/5/6 report, so these default
+/// to serial. Opt in to concurrency with `PARSIM_CAMPAIGN_WORKERS=N`
+/// when throughput matters more than timing fidelity.
+pub fn harness_measure_workers() -> usize {
+    env_workers().unwrap_or(1)
+}
+
+fn env_workers() -> Option<usize> {
+    std::env::var("PARSIM_CAMPAIGN_WORKERS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .map(|v: usize| v.max(1))
+}

@@ -1,0 +1,264 @@
+//! The multi-simulation scheduler: run a campaign's jobs concurrently on
+//! a bounded worker pool, with **two-level parallelism** — across jobs
+//! (this module) and, inside each job, the paper's parallel SM phase —
+//! under one global core budget so campaigns never oversubscribe the
+//! host.
+//!
+//! Job-level scheduling reuses the paper's own machinery: jobs are
+//! dispatched through [`ThreadPool::parallel_for`] with
+//! `schedule(dynamic, 1)` — a shared ticket counter, i.e. idle workers
+//! steal the next job the moment they finish, exactly the OpenMP
+//! dynamic-schedule semantics §4.3 evaluates. Results land in per-job
+//! slots indexed by job id, so the aggregated output is ordered by job
+//! key regardless of completion order: the campaign store is
+//! byte-deterministic even though execution is racy in time.
+
+use std::path::Path;
+use std::time::Instant;
+
+use crate::config::Schedule;
+use crate::engine::pool::ThreadPool;
+use crate::engine::{DisjointSlice, GpuSim};
+use crate::trace::workloads;
+
+use super::spec::{CampaignSpec, JobSpec};
+use super::store::{JobRecord, ResultStore};
+
+/// Run `f(i)` for every `i in 0..n` on up to `workers` threads
+/// (work-stealing via the pool's dynamic schedule) and return the
+/// results **in index order**, independent of completion order.
+///
+/// This is the campaign engine's generic executor; the figure harness
+/// uses it too (`harness::measure_all` fans its per-workload measurement
+/// runs through it instead of a serial loop).
+///
+/// Panics in `f` are caught on the worker, carried back, and re-thrown
+/// on the calling thread after the region joins — a panicking job must
+/// abort the campaign like the old serial loops did, not hang the
+/// pool's join barrier waiting on a worker that unwound.
+pub fn run_ordered<T, F>(n: usize, workers: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    if workers <= 1 || n <= 1 {
+        return (0..n).map(f).collect();
+    }
+    let pool = ThreadPool::new(workers.min(n));
+    let mut slots: Vec<Option<std::thread::Result<T>>> = (0..n).map(|_| None).collect();
+    {
+        let ds = DisjointSlice::new(slots.as_mut_slice());
+        pool.parallel_for(n, Schedule::Dynamic { chunk: 1 }, |i| {
+            let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(i)));
+            // SAFETY: the pool delivers each index exactly once per
+            // region, so no two threads write the same slot, and the
+            // region's join orders all writes before `slots` is read.
+            unsafe { *ds.get_mut(i) = Some(out) };
+        });
+    }
+    slots
+        .into_iter()
+        .map(|s| match s.expect("every index visited") {
+            Ok(v) => v,
+            Err(payload) => std::panic::resume_unwind(payload),
+        })
+        .collect()
+}
+
+/// Host-resource policy for one campaign run.
+#[derive(Debug, Clone)]
+pub struct CampaignConfig {
+    /// Maximum concurrently running jobs (job-level workers).
+    pub workers: usize,
+    /// Global core budget shared by all concurrent jobs; each job's
+    /// effective SM-phase thread count is clamped to
+    /// `core_budget / concurrent_jobs` (≥ 1). Clamping never changes
+    /// results — the paper's determinism guarantee.
+    pub core_budget: usize,
+    /// Ignore cached results and re-simulate everything.
+    pub force: bool,
+    /// Suppress per-job progress lines.
+    pub quiet: bool,
+}
+
+impl Default for CampaignConfig {
+    fn default() -> Self {
+        let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        CampaignConfig { workers: cores.min(4), core_budget: cores, force: false, quiet: true }
+    }
+}
+
+/// Outcome of one campaign run (host timing lives here, in the terminal
+/// report — never in the deterministic store).
+#[derive(Debug)]
+pub struct CampaignReport {
+    pub campaign: String,
+    pub total_jobs: usize,
+    pub simulated: usize,
+    pub cache_hits: usize,
+    /// Job-level workers actually used.
+    pub workers: usize,
+    /// Effective SM-phase threads granted to each simulated job.
+    pub threads_per_job: usize,
+    pub wall_s: f64,
+    /// Files written into the store directory.
+    pub files: Vec<String>,
+    pub out_dir: std::path::PathBuf,
+}
+
+impl CampaignReport {
+    /// Simulated jobs per wall-clock second (0 when everything was
+    /// cached).
+    pub fn jobs_per_s(&self) -> f64 {
+        if self.wall_s > 0.0 {
+            self.simulated as f64 / self.wall_s
+        } else {
+            0.0
+        }
+    }
+
+    /// Human summary for the CLI.
+    pub fn summary(&self) -> String {
+        format!(
+            "campaign {:?}: {} job(s) — {} simulated, {} cache hit(s) ({:.0}%)\n\
+             workers {} × {} SM-thread(s)/job, {:.2}s wall, {:.2} job/s\n\
+             store: {} ({})",
+            self.campaign,
+            self.total_jobs,
+            self.simulated,
+            self.cache_hits,
+            100.0 * self.cache_hits as f64 / self.total_jobs.max(1) as f64,
+            self.workers,
+            self.threads_per_job,
+            self.wall_s,
+            self.jobs_per_s(),
+            self.out_dir.display(),
+            self.files.join(", "),
+        )
+    }
+}
+
+/// Simulate one job at the given effective thread count.
+fn run_job(spec: &JobSpec, hash: u64, effective_threads: usize) -> JobRecord {
+    let gpu = spec.build_gpu().expect("job validated before dispatch");
+    let wl = workloads::build(&spec.workload, spec.scale).expect("job validated before dispatch");
+    let mut sim = GpuSim::new(gpu, spec.to_sim_config(effective_threads));
+    let stats = sim.run_workload(&wl);
+    JobRecord::from_stats(spec, hash, &stats)
+}
+
+/// Execute a campaign: open the store under `out_root/<campaign name>`,
+/// skip jobs whose content hash is already cached, run the remainder
+/// concurrently, and flush the store sorted by job key.
+pub fn run_campaign(
+    spec: &CampaignSpec,
+    out_root: &Path,
+    cfg: &CampaignConfig,
+) -> Result<CampaignReport, String> {
+    spec.validate().map_err(|errs| format!("invalid campaign:\n  {}", errs.join("\n  ")))?;
+    let dir = out_root.join(&spec.name);
+    let mut store = ResultStore::open(&dir)?;
+
+    // hash every job once, then partition into cache hits and work
+    let hashes: Vec<u64> =
+        spec.jobs().iter().map(|j| j.content_hash()).collect::<Result<_, _>>()?;
+    let mut todo: Vec<(usize, &JobSpec, u64)> = Vec::new();
+    let mut cache_hits = 0usize;
+    for (i, (job, &hash)) in spec.jobs().iter().zip(&hashes).enumerate() {
+        if !cfg.force && store.lookup(&job.key(), hash).is_some() {
+            cache_hits += 1;
+        } else {
+            todo.push((i, job, hash));
+        }
+    }
+
+    // global core budget → per-job effective SM threads
+    let workers = cfg.workers.clamp(1, todo.len().max(1));
+    let threads_per_job = (cfg.core_budget / workers).max(1);
+
+    let t0 = Instant::now();
+    let records = run_ordered(todo.len(), workers, |i| {
+        let (_, job, hash) = todo[i];
+        let effective = job.threads.min(threads_per_job);
+        let rec = run_job(job, hash, effective);
+        if !cfg.quiet {
+            eprintln!(
+                "[campaign] {} done ({} cycles, fp {:016x})",
+                rec.key, rec.total_gpu_cycles, rec.fingerprint
+            );
+        }
+        rec
+    });
+    let wall_s = t0.elapsed().as_secs_f64();
+
+    let simulated = records.len();
+    for rec in records {
+        store.insert(rec);
+    }
+    let files = store.flush().map_err(|e| format!("flush store {}: {e}", dir.display()))?;
+
+    Ok(CampaignReport {
+        campaign: spec.name.clone(),
+        total_jobs: spec.len(),
+        simulated,
+        cache_hits,
+        workers,
+        threads_per_job,
+        wall_s,
+        files,
+        out_dir: dir,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn run_ordered_preserves_index_order() {
+        for workers in [1, 2, 4] {
+            let out = run_ordered(23, workers, |i| i * i);
+            assert_eq!(out, (0..23).map(|i| i * i).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn run_ordered_runs_every_index_once() {
+        let count = AtomicUsize::new(0);
+        let out = run_ordered(100, 4, |i| {
+            count.fetch_add(1, Ordering::Relaxed);
+            i
+        });
+        assert_eq!(count.load(Ordering::Relaxed), 100);
+        assert_eq!(out.len(), 100);
+        assert_eq!(run_ordered(0, 4, |i| i), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn run_ordered_propagates_job_panics_instead_of_hanging() {
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            run_ordered(8, 4, |i| {
+                if i == 5 {
+                    panic!("job 5 exploded");
+                }
+                i
+            })
+        }));
+        let payload = result.expect_err("panic must propagate to the caller");
+        let msg = payload.downcast_ref::<&str>().copied().unwrap_or_default();
+        assert_eq!(msg, "job 5 exploded");
+    }
+
+    #[test]
+    fn core_budget_math() {
+        // 8-core budget across 4 workers → 2 threads per job; a job
+        // requesting 1 keeps 1.
+        let cfg = CampaignConfig { workers: 4, core_budget: 8, force: false, quiet: true };
+        let workers = cfg.workers.clamp(1, 12);
+        let per_job = (cfg.core_budget / workers).max(1);
+        assert_eq!((workers, per_job), (4, 2));
+        // budget smaller than workers still grants ≥ 1 thread
+        assert_eq!((1usize / 4).max(1), 1);
+    }
+}

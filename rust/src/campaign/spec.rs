@@ -1,0 +1,333 @@
+//! Campaign job specification: one [`JobSpec`] per simulation, and
+//! [`CampaignSpec`] as the `workload × GpuConfig × SimConfig` matrix.
+//!
+//! Every job has a **canonical key** (human-readable, sortable — the
+//! deterministic order of the result store) and a **content hash** that
+//! additionally folds in the resolved GPU configuration and the store
+//! schema version, so a cached result is only reused when everything
+//! that could change the simulation's output is unchanged.
+
+use crate::config::{presets, FunctionalMode, GpuConfig, Schedule, SimConfig, StatsStrategy};
+use crate::trace::workloads::{self, Scale};
+use crate::util::{mix2, mix64};
+
+/// Bump when the result-record format or its semantics change; folded
+/// into every content hash so stale stores never produce false cache hits.
+pub const STORE_SCHEMA_VERSION: u64 = 1;
+
+/// Deterministic hash of an arbitrary string (8-byte chunks through the
+/// SplitMix64 finalizer chain).
+pub fn hash_str(s: &str) -> u64 {
+    let mut h = 0x70a2_15c0_11e4_b657u64 ^ s.len() as u64;
+    for chunk in s.as_bytes().chunks(8) {
+        let mut buf = [0u8; 8];
+        buf[..chunk.len()].copy_from_slice(chunk);
+        h = mix2(h, u64::from_le_bytes(buf));
+    }
+    mix64(h)
+}
+
+/// Render a schedule as the stable `name:chunk` token used in job keys
+/// and stored records.
+pub fn schedule_token(s: Schedule) -> String {
+    format!("{}:{}", s.name(), s.chunk())
+}
+
+/// Parse a `name` or `name:chunk` schedule token.
+pub fn parse_schedule_token(s: &str) -> Option<Schedule> {
+    let (name, chunk) = match s.split_once(':') {
+        Some((n, c)) => (n, c.parse::<usize>().ok()?),
+        None => match s {
+            "static" => return Some(Schedule::Static { chunk: 0 }),
+            "dynamic" => return Some(Schedule::Dynamic { chunk: 1 }),
+            _ => return None,
+        },
+    };
+    match name {
+        "static" => Some(Schedule::Static { chunk }),
+        "dynamic" => Some(Schedule::Dynamic { chunk: chunk.max(1) }),
+        _ => None,
+    }
+}
+
+/// Parse a stats-strategy name (same tokens as `StatsStrategy::name`).
+pub fn parse_strategy_token(s: &str) -> Option<StatsStrategy> {
+    match s {
+        "per-sm" => Some(StatsStrategy::PerSm),
+        "shared-locked" => Some(StatsStrategy::SharedLocked),
+        "seq-point" => Some(StatsStrategy::SeqPoint),
+        _ => None,
+    }
+}
+
+/// One simulation job: a point in the campaign matrix.
+#[derive(Debug, Clone, PartialEq)]
+pub struct JobSpec {
+    pub workload: String,
+    pub scale: Scale,
+    /// GPU preset name (resolved through `config::presets`).
+    pub gpu: String,
+    /// *Requested* SM-phase threads. The scheduler may clamp the
+    /// effective count to respect the global core budget; that never
+    /// changes results (the paper's determinism guarantee), so only the
+    /// request is part of the job identity.
+    pub threads: usize,
+    pub schedule: Schedule,
+    pub stats_strategy: StatsStrategy,
+    pub seed: u64,
+    /// Per-kernel cycle guard (0 = default).
+    pub max_cycles: u64,
+}
+
+impl JobSpec {
+    /// Canonical, sortable job key. This is the result store's primary
+    /// key and its deterministic output order.
+    pub fn key(&self) -> String {
+        format!(
+            "wl={} scale={} gpu={} thr={} sched={} stats={} seed={:x} maxcyc={}",
+            self.workload,
+            self.scale.name(),
+            self.gpu,
+            self.threads,
+            schedule_token(self.schedule),
+            self.stats_strategy.name(),
+            self.seed,
+            self.max_cycles
+        )
+    }
+
+    /// Resolve the GPU preset.
+    pub fn build_gpu(&self) -> Result<GpuConfig, String> {
+        presets::by_name(&self.gpu).ok_or_else(|| format!("unknown GPU preset {:?}", self.gpu))
+    }
+
+    /// Content hash: job key + the *resolved* GPU configuration + the
+    /// store schema version. If a preset's parameters change between
+    /// simulator versions, cached results for it are invalidated even
+    /// though the key is unchanged.
+    pub fn content_hash(&self) -> Result<u64, String> {
+        let gpu = self.build_gpu()?;
+        // `Debug` of a plain-data struct tree is deterministic and covers
+        // every modelled parameter.
+        let gpu_fp = hash_str(&format!("{gpu:?}"));
+        Ok(mix2(mix2(hash_str(&self.key()), gpu_fp), STORE_SCHEMA_VERSION))
+    }
+
+    /// The `SimConfig` for this job, with the scheduler-granted effective
+    /// thread count.
+    pub fn to_sim_config(&self, effective_threads: usize) -> SimConfig {
+        SimConfig {
+            threads: effective_threads.max(1),
+            schedule: self.schedule,
+            stats_strategy: self.stats_strategy,
+            functional: FunctionalMode::TimingOnly,
+            max_cycles: self.max_cycles,
+            profile: false,
+            profile_sample: 8,
+            measure_work: false,
+            seed: self.seed,
+        }
+    }
+
+    /// Validate that the job can run (workload and preset exist).
+    pub fn validate(&self) -> Result<(), String> {
+        if !workloads::names().contains(&self.workload.as_str()) {
+            return Err(format!("unknown workload {:?}", self.workload));
+        }
+        self.build_gpu().map(|_| ())
+    }
+}
+
+/// A named batch of jobs. Jobs are always held sorted by key and
+/// de-duplicated, so expansion order never leaks into results.
+#[derive(Debug, Clone)]
+pub struct CampaignSpec {
+    pub name: String,
+    jobs: Vec<JobSpec>,
+}
+
+impl CampaignSpec {
+    /// Build from an explicit job list (sorted + de-duplicated).
+    pub fn new(name: impl Into<String>, mut jobs: Vec<JobSpec>) -> Self {
+        jobs.sort_by_key(|j| j.key());
+        jobs.dedup_by_key(|j| j.key());
+        CampaignSpec { name: name.into(), jobs }
+    }
+
+    /// Expand the full cartesian matrix
+    /// `workloads × gpus × threads × schedules × strategies` at one scale.
+    #[allow(clippy::too_many_arguments)]
+    pub fn matrix(
+        name: impl Into<String>,
+        workload_names: &[&str],
+        scale: Scale,
+        gpus: &[&str],
+        threads: &[usize],
+        schedules: &[Schedule],
+        strategies: &[StatsStrategy],
+        seed: u64,
+    ) -> Self {
+        let mut jobs = Vec::new();
+        for &wl in workload_names {
+            for &gpu in gpus {
+                for &thr in threads {
+                    for &sched in schedules {
+                        for &strat in strategies {
+                            jobs.push(JobSpec {
+                                workload: wl.to_string(),
+                                scale,
+                                gpu: gpu.to_string(),
+                                threads: thr,
+                                schedule: sched,
+                                stats_strategy: strat,
+                                seed,
+                                max_cycles: 0,
+                            });
+                        }
+                    }
+                }
+            }
+        }
+        CampaignSpec::new(name, jobs)
+    }
+
+    /// The jobs, in canonical key order.
+    pub fn jobs(&self) -> &[JobSpec] {
+        &self.jobs
+    }
+
+    pub fn len(&self) -> usize {
+        self.jobs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.jobs.is_empty()
+    }
+
+    /// Validate every job, collecting all problems.
+    pub fn validate(&self) -> Result<(), Vec<String>> {
+        let errs: Vec<String> = self
+            .jobs
+            .iter()
+            .filter_map(|j| j.validate().err().map(|e| format!("{}: {e}", j.key())))
+            .collect();
+        if errs.is_empty() {
+            Ok(())
+        } else {
+            Err(errs)
+        }
+    }
+}
+
+/// The default demonstration matrix used by `parsim campaign` with no
+/// arguments, `examples/campaign_sweep.rs` and the campaign bench:
+/// 3 workloads × {1, 4} threads × {static, dynamic} on the tiny GPU at
+/// CI scale = 12 jobs, small enough to finish in seconds.
+pub fn default_matrix(name: &str) -> CampaignSpec {
+    CampaignSpec::matrix(
+        name,
+        &["nn", "hotspot", "mst"],
+        Scale::Ci,
+        &["tiny"],
+        &[1, 4],
+        &[Schedule::Static { chunk: 0 }, Schedule::Dynamic { chunk: 1 }],
+        &[StatsStrategy::PerSm],
+        0xC0FFEE,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn job(wl: &str, thr: usize) -> JobSpec {
+        JobSpec {
+            workload: wl.into(),
+            scale: Scale::Ci,
+            gpu: "tiny".into(),
+            threads: thr,
+            schedule: Schedule::Dynamic { chunk: 1 },
+            stats_strategy: StatsStrategy::PerSm,
+            seed: 1,
+            max_cycles: 0,
+        }
+    }
+
+    #[test]
+    fn matrix_expansion_counts_and_order() {
+        let c = default_matrix("t");
+        assert_eq!(c.len(), 12);
+        let keys: Vec<String> = c.jobs().iter().map(|j| j.key()).collect();
+        let mut sorted = keys.clone();
+        sorted.sort();
+        assert_eq!(keys, sorted, "jobs held in canonical key order");
+        // expansion order must not matter
+        let c2 = CampaignSpec::new("t", c.jobs().iter().rev().cloned().collect());
+        let keys2: Vec<String> = c2.jobs().iter().map(|j| j.key()).collect();
+        assert_eq!(keys, keys2);
+    }
+
+    #[test]
+    fn dedup_removes_identical_jobs() {
+        let c = CampaignSpec::new("t", vec![job("nn", 2), job("nn", 2), job("nn", 4)]);
+        assert_eq!(c.len(), 2);
+    }
+
+    #[test]
+    fn keys_distinguish_every_axis() {
+        let base = job("nn", 2);
+        let mut other = base.clone();
+        other.schedule = Schedule::Static { chunk: 0 };
+        assert_ne!(base.key(), other.key());
+        let mut other = base.clone();
+        other.scale = Scale::Small;
+        assert_ne!(base.key(), other.key());
+        let mut other = base.clone();
+        other.seed = 2;
+        assert_ne!(base.key(), other.key());
+    }
+
+    #[test]
+    fn content_hash_covers_gpu_parameters() {
+        let a = job("nn", 2).content_hash().unwrap();
+        // same key → same hash, reproducibly
+        assert_eq!(a, job("nn", 2).content_hash().unwrap());
+        let mut g = job("nn", 2);
+        g.gpu = "rtx3080ti".into();
+        assert_ne!(a, g.content_hash().unwrap());
+    }
+
+    #[test]
+    fn schedule_tokens_round_trip() {
+        for s in [
+            Schedule::Static { chunk: 0 },
+            Schedule::Static { chunk: 3 },
+            Schedule::Dynamic { chunk: 1 },
+            Schedule::Dynamic { chunk: 4 },
+        ] {
+            assert_eq!(parse_schedule_token(&schedule_token(s)), Some(s));
+        }
+        assert_eq!(parse_schedule_token("static"), Some(Schedule::Static { chunk: 0 }));
+        assert_eq!(parse_schedule_token("dynamic"), Some(Schedule::Dynamic { chunk: 1 }));
+        assert_eq!(parse_schedule_token("bogus"), None);
+    }
+
+    #[test]
+    fn validate_flags_unknown_names() {
+        assert!(job("nn", 1).validate().is_ok());
+        let mut bad = job("nope", 1);
+        assert!(bad.validate().is_err());
+        bad = job("nn", 1);
+        bad.gpu = "warp9".into();
+        assert!(bad.validate().is_err());
+        let c = CampaignSpec::new("t", vec![job("nn", 1), job("nope", 1)]);
+        assert_eq!(c.validate().unwrap_err().len(), 1);
+    }
+
+    #[test]
+    fn hash_str_is_stable_and_diffuse() {
+        assert_eq!(hash_str("abc"), hash_str("abc"));
+        assert_ne!(hash_str("abc"), hash_str("abd"));
+        assert_ne!(hash_str(""), hash_str("\0"));
+    }
+}

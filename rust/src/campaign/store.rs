@@ -1,0 +1,361 @@
+//! Persistent, cache-aware campaign result store.
+//!
+//! One directory per campaign (default `campaign_out/<name>/`) holding:
+//!
+//! * `results.jsonl` — one flat JSON record per job, **sorted by job
+//!   key**. This file is the cache: on open it is parsed back into
+//!   memory, and jobs whose `(key, content-hash)` pair is already
+//!   present are not re-simulated.
+//! * `results.csv` — the same records as a spreadsheet-friendly table.
+//!
+//! Both files are deterministic byte-for-byte: records are ordered by
+//! job key (never by completion order), all values are integers, hex
+//! strings or plain strings (no floats), and wall-clock is excluded.
+//! Re-running an identical campaign rewrites identical bytes — the
+//! paper's bit-identical-stats guarantee lifted to campaign granularity.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::io;
+use std::path::{Path, PathBuf};
+
+use crate::stats::export::{jsonl_str, jsonl_u64, parse_flat_json, JsonScalar};
+use crate::stats::GpuStats;
+
+use super::spec::JobSpec;
+
+/// One job's persisted result. Only simulation *model* outputs are
+/// stored (deterministic); host timing lives in the run report printed
+/// to the terminal, never in the store.
+#[derive(Debug, Clone, PartialEq)]
+pub struct JobRecord {
+    /// Canonical job key (primary key, sort order).
+    pub key: String,
+    /// Content hash binding the record to workload + resolved GPU config
+    /// + schema version (see [`JobSpec::content_hash`]).
+    pub hash: u64,
+    pub workload: String,
+    pub scale: String,
+    pub gpu: String,
+    pub threads: u64,
+    pub schedule: String,
+    pub stats: String,
+    pub seed: u64,
+    pub kernels: u64,
+    pub total_gpu_cycles: u64,
+    pub total_warp_insts: u64,
+    pub total_thread_insts: u64,
+    /// Sum of per-kernel distinct-global-line counts.
+    pub unique_lines: u64,
+    /// Run-level statistics fingerprint (determinism witness).
+    pub fingerprint: u64,
+}
+
+impl JobRecord {
+    /// Build the record for a finished job.
+    pub fn from_stats(spec: &JobSpec, hash: u64, stats: &GpuStats) -> JobRecord {
+        JobRecord {
+            key: spec.key(),
+            hash,
+            workload: spec.workload.clone(),
+            scale: spec.scale.name().to_string(),
+            gpu: spec.gpu.clone(),
+            threads: spec.threads as u64,
+            schedule: super::spec::schedule_token(spec.schedule),
+            stats: spec.stats_strategy.name().to_string(),
+            seed: spec.seed,
+            kernels: stats.kernels.len() as u64,
+            total_gpu_cycles: stats.total_gpu_cycles,
+            total_warp_insts: stats.total_warp_insts(),
+            total_thread_insts: stats.total_thread_insts(),
+            unique_lines: stats.kernels.iter().map(|k| k.unique_lines_global).sum(),
+            fingerprint: stats.fingerprint(),
+        }
+    }
+
+    /// Serialize as one JSONL line (fixed field order, no trailing `\n`).
+    pub fn to_jsonl(&self) -> String {
+        let mut out = String::from("{");
+        jsonl_str(&mut out, "key", &self.key, true);
+        jsonl_str(&mut out, "hash", &format!("{:016x}", self.hash), false);
+        jsonl_str(&mut out, "workload", &self.workload, false);
+        jsonl_str(&mut out, "scale", &self.scale, false);
+        jsonl_str(&mut out, "gpu", &self.gpu, false);
+        jsonl_u64(&mut out, "threads", self.threads, false);
+        jsonl_str(&mut out, "schedule", &self.schedule, false);
+        jsonl_str(&mut out, "stats", &self.stats, false);
+        jsonl_str(&mut out, "seed", &format!("{:x}", self.seed), false);
+        jsonl_u64(&mut out, "kernels", self.kernels, false);
+        jsonl_u64(&mut out, "total_gpu_cycles", self.total_gpu_cycles, false);
+        jsonl_u64(&mut out, "total_warp_insts", self.total_warp_insts, false);
+        jsonl_u64(&mut out, "total_thread_insts", self.total_thread_insts, false);
+        jsonl_u64(&mut out, "unique_lines", self.unique_lines, false);
+        jsonl_str(&mut out, "fingerprint", &format!("{:016x}", self.fingerprint), false);
+        out.push('}');
+        out
+    }
+
+    /// Parse a [`JobRecord::to_jsonl`] line (field order insensitive).
+    pub fn from_jsonl(line: &str) -> Result<JobRecord, String> {
+        let fields = parse_flat_json(line)?;
+        let map: BTreeMap<&str, &JsonScalar> =
+            fields.iter().map(|(k, v)| (k.as_str(), v)).collect();
+        let s = |k: &str| -> Result<String, String> {
+            map.get(k)
+                .and_then(|v| v.as_str())
+                .map(str::to_string)
+                .ok_or_else(|| format!("missing/invalid string field {k:?}"))
+        };
+        let u = |k: &str| -> Result<u64, String> {
+            map.get(k)
+                .and_then(|v| v.as_u64())
+                .ok_or_else(|| format!("missing/invalid integer field {k:?}"))
+        };
+        let hex = |k: &str| -> Result<u64, String> {
+            let h = s(k)?;
+            u64::from_str_radix(&h, 16).map_err(|e| format!("bad hex field {k:?}={h:?}: {e}"))
+        };
+        Ok(JobRecord {
+            key: s("key")?,
+            hash: hex("hash")?,
+            workload: s("workload")?,
+            scale: s("scale")?,
+            gpu: s("gpu")?,
+            threads: u("threads")?,
+            schedule: s("schedule")?,
+            stats: s("stats")?,
+            seed: hex("seed")?,
+            kernels: u("kernels")?,
+            total_gpu_cycles: u("total_gpu_cycles")?,
+            total_warp_insts: u("total_warp_insts")?,
+            total_thread_insts: u("total_thread_insts")?,
+            unique_lines: u("unique_lines")?,
+            fingerprint: hex("fingerprint")?,
+        })
+    }
+
+    /// CSV header matching [`JobRecord::csv_row`].
+    pub fn csv_header() -> &'static str {
+        "key,workload,scale,gpu,threads,schedule,stats,seed,kernels,\
+         total_gpu_cycles,total_warp_insts,total_thread_insts,unique_lines,fingerprint"
+    }
+
+    /// One CSV row (keys contain spaces but never commas/quotes).
+    pub fn csv_row(&self) -> String {
+        format!(
+            "{},{},{},{},{},{},{},{:x},{},{},{},{},{},{:016x}",
+            self.key,
+            self.workload,
+            self.scale,
+            self.gpu,
+            self.threads,
+            self.schedule,
+            self.stats,
+            self.seed,
+            self.kernels,
+            self.total_gpu_cycles,
+            self.total_warp_insts,
+            self.total_thread_insts,
+            self.unique_lines,
+            self.fingerprint
+        )
+    }
+}
+
+/// The on-disk store: records keyed by job key, flushed sorted.
+#[derive(Debug)]
+pub struct ResultStore {
+    dir: PathBuf,
+    records: BTreeMap<String, JobRecord>,
+}
+
+/// File name of the JSONL store inside a campaign directory.
+pub const RESULTS_JSONL: &str = "results.jsonl";
+/// File name of the CSV mirror inside a campaign directory.
+pub const RESULTS_CSV: &str = "results.csv";
+
+impl ResultStore {
+    /// Open (or create) the store at `dir`, loading any existing
+    /// `results.jsonl`. A corrupt line is a hard error — silently
+    /// dropping cached results would masquerade as cache misses and
+    /// silently re-simulate.
+    pub fn open(dir: &Path) -> Result<ResultStore, String> {
+        let mut records = BTreeMap::new();
+        let path = dir.join(RESULTS_JSONL);
+        if path.exists() {
+            let text = std::fs::read_to_string(&path)
+                .map_err(|e| format!("read {}: {e}", path.display()))?;
+            for (i, line) in text.lines().enumerate() {
+                if line.trim().is_empty() {
+                    continue;
+                }
+                let rec = JobRecord::from_jsonl(line)
+                    .map_err(|e| format!("{}:{}: {e}", path.display(), i + 1))?;
+                records.insert(rec.key.clone(), rec);
+            }
+        }
+        Ok(ResultStore { dir: dir.to_path_buf(), records })
+    }
+
+    /// Cache lookup: a hit requires the key to exist **and** the content
+    /// hash to match (a changed GPU preset or schema version invalidates
+    /// the entry even though the key is unchanged).
+    pub fn lookup(&self, key: &str, hash: u64) -> Option<&JobRecord> {
+        self.records.get(key).filter(|r| r.hash == hash)
+    }
+
+    /// Insert or replace a record.
+    pub fn insert(&mut self, rec: JobRecord) {
+        self.records.insert(rec.key.clone(), rec);
+    }
+
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Records in canonical (key) order.
+    pub fn records(&self) -> impl Iterator<Item = &JobRecord> {
+        self.records.values()
+    }
+
+    /// Render the JSONL file contents (sorted by key, trailing newline).
+    pub fn render_jsonl(&self) -> String {
+        let mut out = String::new();
+        for r in self.records.values() {
+            out.push_str(&r.to_jsonl());
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Render the CSV file contents (sorted by key).
+    pub fn render_csv(&self) -> String {
+        let mut out = String::from(JobRecord::csv_header());
+        out.push('\n');
+        for r in self.records.values() {
+            let _ = writeln!(out, "{}", r.csv_row());
+        }
+        out
+    }
+
+    /// Write `results.jsonl` + `results.csv` atomically (tmp + rename).
+    /// Returns the file names written.
+    pub fn flush(&self) -> io::Result<Vec<String>> {
+        std::fs::create_dir_all(&self.dir)?;
+        let mut written = Vec::new();
+        for (name, content) in
+            [(RESULTS_JSONL, self.render_jsonl()), (RESULTS_CSV, self.render_csv())]
+        {
+            let tmp = self.dir.join(format!("{name}.tmp"));
+            std::fs::write(&tmp, &content)?;
+            std::fs::rename(&tmp, self.dir.join(name))?;
+            written.push(name.to_string());
+        }
+        Ok(written)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Schedule, StatsStrategy};
+    use crate::trace::workloads::Scale;
+
+    fn spec() -> JobSpec {
+        JobSpec {
+            workload: "nn".into(),
+            scale: Scale::Ci,
+            gpu: "tiny".into(),
+            threads: 4,
+            schedule: Schedule::Dynamic { chunk: 1 },
+            stats_strategy: StatsStrategy::PerSm,
+            seed: 0xC0FFEE,
+            max_cycles: 0,
+        }
+    }
+
+    fn record() -> JobRecord {
+        JobRecord {
+            key: spec().key(),
+            hash: 0xDEAD_BEEF_0BAD_F00D,
+            workload: "nn".into(),
+            scale: "ci".into(),
+            gpu: "tiny".into(),
+            threads: 4,
+            schedule: "dynamic:1".into(),
+            stats: "per-sm".into(),
+            seed: 0xC0FFEE,
+            kernels: 1,
+            total_gpu_cycles: 123_456_789_012_345,
+            total_warp_insts: 98765,
+            total_thread_insts: 3_160_480,
+            unique_lines: 2048,
+            fingerprint: u64::MAX - 7, // above 2^53: must survive exactly
+        }
+    }
+
+    #[test]
+    fn jsonl_round_trip_exact() {
+        let r = record();
+        let line = r.to_jsonl();
+        let back = JobRecord::from_jsonl(&line).expect("parse own output");
+        assert_eq!(back, r);
+        // determinism of the serialized form itself
+        assert_eq!(line, record().to_jsonl());
+    }
+
+    #[test]
+    fn store_open_insert_flush_reload() {
+        let dir = std::env::temp_dir().join(format!("parsim_store_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut st = ResultStore::open(&dir).unwrap();
+        assert!(st.is_empty());
+        st.insert(record());
+        let files = st.flush().unwrap();
+        assert_eq!(files, vec!["results.jsonl".to_string(), "results.csv".to_string()]);
+
+        let st2 = ResultStore::open(&dir).unwrap();
+        assert_eq!(st2.len(), 1);
+        let r = record();
+        assert_eq!(st2.lookup(&r.key, r.hash), Some(&r));
+        // hash mismatch = stale entry = cache miss
+        assert_eq!(st2.lookup(&r.key, r.hash ^ 1), None);
+        // flush is byte-stable
+        assert_eq!(st.render_jsonl(), st2.render_jsonl());
+        assert_eq!(st.render_csv(), st2.render_csv());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn corrupt_store_is_a_hard_error() {
+        let dir = std::env::temp_dir().join(format!("parsim_store_bad_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join(RESULTS_JSONL), "not json\n").unwrap();
+        let e = ResultStore::open(&dir).unwrap_err();
+        assert!(e.contains("results.jsonl:1"), "{e}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn csv_mirror_has_one_row_per_record() {
+        let mut st = ResultStore { dir: PathBuf::from("."), records: BTreeMap::new() };
+        st.insert(record());
+        let mut r2 = record();
+        r2.key = "a different key".into();
+        st.insert(r2);
+        let csv = st.render_csv();
+        assert_eq!(csv.lines().count(), 3);
+        assert!(csv.starts_with("key,workload"));
+        // sorted: "a different key" < "wl=nn ..."
+        assert!(csv.lines().nth(1).unwrap().starts_with("a different key"));
+    }
+}

@@ -155,9 +155,18 @@ impl ThreadPool {
 
 impl Drop for ThreadPool {
     fn drop(&mut self) {
-        self.shared.quit.store(1, Ordering::Release);
-        self.shared.phase.fetch_add(1, Ordering::Release);
-        self.shared.cv.notify_all();
+        // The quit/phase stores and the notify must happen under the job
+        // mutex: a worker holds it while re-checking `quit`/`phase` right
+        // before `cv.wait`, and signalling without the lock could slip
+        // into that window — the worker would miss the wake-up and the
+        // join below would hang (and before this fix, leak the worker
+        // thread when the pool was dropped from a detached context).
+        {
+            let _job = self.shared.job.lock().unwrap();
+            self.shared.quit.store(1, Ordering::Release);
+            self.shared.phase.fetch_add(1, Ordering::Release);
+            self.shared.cv.notify_all();
+        }
         for w in self.workers.drain(..) {
             let _ = w.join();
         }
@@ -306,6 +315,54 @@ mod tests {
     fn zero_items_is_fine() {
         let pool = ThreadPool::new(4);
         pool.parallel_for(0, Schedule::Dynamic { chunk: 1 }, |_| panic!("no items"));
+    }
+
+    /// Count live threads named `parsim-worker-*` via /proc (Linux);
+    /// `None` elsewhere. Only pool workers carry this name, so the count
+    /// is immune to the test harness's own threads.
+    fn live_worker_count() -> Option<usize> {
+        let tasks = std::fs::read_dir("/proc/self/task").ok()?;
+        let mut n = 0;
+        for t in tasks.flatten() {
+            if let Ok(comm) = std::fs::read_to_string(t.path().join("comm")) {
+                if comm.starts_with("parsim-work") {
+                    n += 1;
+                }
+            }
+        }
+        Some(n)
+    }
+
+    /// Regression test for the worker lifecycle: dropping a pool must
+    /// join its workers (no detached threads leaking across campaign
+    /// jobs), including pools that are dropped without ever running a
+    /// region and pools dropped immediately after one. Before the Drop
+    /// fix (quit signal published outside the job mutex) a worker could
+    /// miss the shutdown wake-up — this test then either hangs in
+    /// `Drop::join` or, with a detaching Drop, leaks 180 named threads.
+    #[test]
+    fn many_pools_create_drop_without_leaking_threads() {
+        for round in 0..60 {
+            let pool = ThreadPool::new(4);
+            if round % 2 == 0 {
+                let sum = AtomicU32::new(0);
+                pool.parallel_for(16, Schedule::Dynamic { chunk: 1 }, |i| {
+                    sum.fetch_add(i as u32, Ordering::Relaxed);
+                });
+                assert_eq!(sum.load(Ordering::Relaxed), (0..16).sum::<u32>());
+            }
+            // round % 2 == 1: drop without ever publishing a region —
+            // workers are still parked in their initial cv.wait
+            drop(pool);
+        }
+        // 60 dropped pools spawned 180 workers; leaking them would leave
+        // ~180 `parsim-worker-*` threads alive. Other tests in this
+        // process hold at most a few live pools concurrently, so a
+        // threshold of 60 separates "leak" from "concurrent test noise"
+        // with a wide margin.
+        if let Some(live) = live_worker_count() {
+            assert!(live < 60, "pool workers leaked across drops: {live} still alive");
+        }
     }
 
     #[test]

@@ -3,8 +3,20 @@
 //! (profiler breakdown), Fig 5 (speed-up vs threads), Fig 6 (OpenMP
 //! scheduler comparison), Fig 7 (CTAs per kernel), plus Table 1/2/3
 //! echoes. Used by `parsim figure …` and by `rust/benches/*`.
+//!
+//! The per-workload sweeps ([`measure_all`], [`fig1`], [`fig7_report`])
+//! are issued as campaign jobs through
+//! [`crate::campaign::run_ordered`] — one job per workload, executed on
+//! the campaign scheduler's work-stealing pool and aggregated in
+//! workload order, replacing the old serial loops. Sweeps that measure
+//! wall-clock (`measure_all`, `fig1`) default to one worker so
+//! co-running jobs cannot contaminate the timings Figures 1/5/6 report;
+//! set `PARSIM_CAMPAIGN_WORKERS=N` to trade fidelity for throughput
+//! (fig7, which only builds workloads, fans out by default).
 
 use std::time::Instant;
+
+use crate::campaign::run_ordered;
 
 use crate::config::{presets::Testbed, GpuConfig, Schedule, SimConfig, StatsStrategy};
 use crate::engine::costmodel::CostModel;
@@ -60,26 +72,27 @@ pub fn measure_workload(name: &str, scale: Scale, gpu: &GpuConfig) -> Measured {
 }
 
 /// Measure every Table-2 workload (the shared substrate of Fig 1/5/6).
+///
+/// Each workload is one campaign job: the 19 measurement runs execute
+/// concurrently on the campaign scheduler and are aggregated in Table-2
+/// order, so reports are laid out identically to the old serial loop.
 pub fn measure_all(scale: Scale, gpu: &GpuConfig, progress: bool) -> Vec<Measured> {
-    workloads::names()
-        .iter()
-        .map(|&n| {
-            if progress {
-                eprintln!("[measure] {n} …");
-            }
-            let t0 = Instant::now();
-            let m = measure_workload(n, scale, gpu);
-            if progress {
-                eprintln!(
-                    "[measure] {n}: {:.2}s wall, {} cycles, {} warp-insts",
-                    t0.elapsed().as_secs_f64(),
-                    m.stats.total_cycles(),
-                    m.stats.total_warp_insts()
-                );
-            }
-            m
-        })
-        .collect()
+    let names = workloads::names();
+    let workers = crate::campaign::harness_measure_workers();
+    run_ordered(names.len(), workers, |i| {
+        let n = names[i];
+        let t0 = Instant::now();
+        let m = measure_workload(n, scale, gpu);
+        if progress {
+            eprintln!(
+                "[measure] {n}: {:.2}s wall, {} cycles, {} warp-insts",
+                t0.elapsed().as_secs_f64(),
+                m.stats.total_cycles(),
+                m.stats.total_warp_insts()
+            );
+        }
+        m
+    })
 }
 
 // ---------------------------------------------------------------------------
@@ -95,24 +108,24 @@ pub struct Fig1Row {
 }
 
 pub fn fig1(scale: Scale, gpu: &GpuConfig, progress: bool) -> Vec<Fig1Row> {
-    workloads::names()
-        .iter()
-        .map(|&n| {
-            if progress {
-                eprintln!("[fig1] {n} …");
-            }
-            let wl = workloads::build(n, scale).unwrap();
-            let mut gs = GpuSim::new(gpu.clone(), SimConfig::default());
-            let stats = gs.run_workload(&wl);
-            Fig1Row {
-                name: n.to_string(),
-                seconds: stats.sim_wallclock_s,
-                cycles: stats.total_cycles(),
-                warp_insts: stats.total_warp_insts(),
-                rate: stats.sim_rate(),
-            }
-        })
-        .collect()
+    let names = workloads::names();
+    let workers = crate::campaign::harness_measure_workers();
+    run_ordered(names.len(), workers, |i| {
+        let n = names[i];
+        let wl = workloads::build(n, scale).unwrap();
+        let mut gs = GpuSim::new(gpu.clone(), SimConfig::default());
+        let stats = gs.run_workload(&wl);
+        if progress {
+            eprintln!("[fig1] {n}: {:.2}s", stats.sim_wallclock_s);
+        }
+        Fig1Row {
+            name: n.to_string(),
+            seconds: stats.sim_wallclock_s,
+            cycles: stats.total_cycles(),
+            warp_insts: stats.total_warp_insts(),
+            rate: stats.sim_rate(),
+        }
+    })
 }
 
 pub fn fig1_report(rows: &[Fig1Row], scale: Scale) -> String {
@@ -299,18 +312,23 @@ pub fn fig7_report(scale: Scale) -> String {
         "max",
         "≥#SM?"
     );
-    for &n in workloads::names() {
+    let names = workloads::names();
+    let rows = run_ordered(names.len(), crate::campaign::harness_workers(), |i| {
+        let n = names[i];
         let wl = workloads::build(n, scale).unwrap();
         let mean = wl.mean_ctas_per_kernel();
         let max = wl.kernels.iter().map(|k| k.grid_ctas).max().unwrap_or(0);
-        s.push_str(&format!(
+        format!(
             "{:<12} {:>9} {:>9.1} {:>9} {:>8}\n",
             workloads::alias_of(n),
             wl.kernels.len(),
             mean,
             max,
             if mean >= 80.0 { "yes" } else { "no" }
-        ));
+        )
+    });
+    for row in rows {
+        s.push_str(&row);
     }
     s
 }

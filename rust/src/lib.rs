@@ -25,7 +25,31 @@
 //!   benchmarks (Rodinia, Polybench, Lonestar, DeepBench, CUTLASS).
 //! * [`runtime`] — PJRT/XLA bridge: loads the AOT-compiled JAX/Pallas GEMM
 //!   artifacts (`artifacts/*.hlo.txt`) used to functionally validate the
-//!   GEMM-family workloads. Python never runs at simulation time.
+//!   GEMM-family workloads. Python never runs at simulation time. (Gated
+//!   behind the `xla` feature; the offline default builds a stub.)
+//! * [`campaign`] — batched multi-simulation orchestration: a
+//!   `workload × GpuConfig × SimConfig` job matrix, a work-stealing
+//!   multi-simulation scheduler with **two-level parallelism** (jobs run
+//!   concurrently, each job may use the paper's parallel SM phase, all
+//!   under one global core budget), and a persistent content-hash-keyed
+//!   JSONL/CSV result store — re-running a campaign skips
+//!   already-simulated jobs, and reruns write byte-identical result
+//!   files (the paper's determinism at campaign granularity).
+//!
+//! ## Two-level parallelism
+//!
+//! The paper's cycle-level parallel SM phase composes with campaign-level
+//! job parallelism. A campaign running `W` jobs concurrently under a core
+//! budget `B` grants each job `max(1, B / W)` SM-phase threads — thread
+//! counts only change wall-clock, never statistics, so any budget split
+//! yields identical stores.
+//!
+//! ```text
+//! campaign scheduler (ThreadPool, schedule(dynamic,1): job stealing)
+//!   ├─ job 0: GpuSim ── parallel SM phase (ThreadPool, B/W threads)
+//!   ├─ job 1: GpuSim ── parallel SM phase
+//!   └─ ...            results keyed + ordered by job key, cached by hash
+//! ```
 //!
 //! ## Quickstart
 //!
@@ -42,6 +66,7 @@
 //! println!("cycles = {}", stats.total_cycles());
 //! ```
 
+pub mod campaign;
 pub mod cli;
 pub mod config;
 pub mod core;

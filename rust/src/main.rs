@@ -24,8 +24,12 @@ use parsim::trace::workloads::{self, Scale};
 const VALUE_OPTS: &[&str] = &[
     "workload", "scale", "threads", "schedule", "stats", "gpu", "gpu-config", "max-cycles",
     "chunk", "seed", "export-dir",
+    // campaign options
+    "workloads", "gpus", "threads-list", "schedules", "stats-list", "workers", "core-budget",
+    "out", "name",
 ];
-const FLAG_OPTS: &[&str] = &["list", "show", "describe", "profile", "functional", "quiet", "help"];
+const FLAG_OPTS: &[&str] =
+    &["list", "show", "describe", "profile", "functional", "quiet", "help", "force"];
 
 fn main() -> ExitCode {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -49,6 +53,7 @@ fn main() -> ExitCode {
         "stats" => cmd_stats(&args),
         "determinism" => cmd_determinism(&args),
         "validate" => cmd_validate(&args),
+        "campaign" => cmd_campaign(&args),
         _ => {
             eprintln!("error: unknown command {cmd:?} (try --help)");
             return ExitCode::from(2);
@@ -74,10 +79,17 @@ fn print_help() {
          \x20 config        show/list GPU presets (Table 1)\n\
          \x20 stats         describe reported statistics\n\
          \x20 determinism   run 1-thread vs N-thread and diff all statistics\n\
-         \x20 validate      cross-check GEMM workloads against XLA artifacts\n\n\
+         \x20 validate      cross-check GEMM workloads against XLA artifacts\n\
+         \x20 campaign      run a job matrix concurrently with a cached result store\n\n\
          common options: --workload NAME --scale ci|small|paper --threads N\n\
          \x20               --schedule static|static1|dynamic --stats per-sm|shared-locked|seq-point\n\
-         \x20               --gpu rtx3080ti|tiny|rtx3090|a100-like --profile --functional"
+         \x20               --gpu rtx3080ti|tiny|rtx3090|a100-like --profile --functional\n\n\
+         campaign options (matrix = workloads × gpus × threads-list × schedules × stats-list):\n\
+         \x20               --workloads a,b,c|all --gpus tiny,rtx3080ti --threads-list 1,4\n\
+         \x20               --schedules static:0,dynamic:1 --stats-list per-sm --scale ci\n\
+         \x20               --name sweep --out campaign_out --workers N --core-budget N --force\n\
+         \x20               (defaults: nn,hotspot,mst × tiny × 1,4 × static:0,dynamic:1 = 12 jobs;\n\
+         \x20               rerunning reports cache hits and simulates only the delta)"
     );
 }
 
@@ -319,6 +331,92 @@ fn cmd_validate(args: &Args) -> Result<(), String> {
         Some(s) => Scale::parse(s).ok_or_else(|| format!("bad --scale {s:?}"))?,
     };
     parsim_validate(name, scale).map_err(|e| e.to_string())
+}
+
+fn cmd_campaign(args: &Args) -> Result<(), String> {
+    use parsim::campaign::{self, CampaignConfig, CampaignSpec};
+    use parsim::config::{Schedule, StatsStrategy};
+
+    let csv = |s: &str| -> Vec<String> {
+        s.split(',').map(str::trim).filter(|t| !t.is_empty()).map(str::to_string).collect()
+    };
+
+    let scale = match args.get("scale") {
+        None => Scale::Ci,
+        Some(s) => Scale::parse(s).ok_or_else(|| format!("bad --scale {s:?}"))?,
+    };
+    let workload_names: Vec<String> = match args.get("workloads") {
+        None => vec!["nn".into(), "hotspot".into(), "mst".into()],
+        Some("all") => workloads::names().iter().map(|s| s.to_string()).collect(),
+        Some(list) => csv(list),
+    };
+    let gpus: Vec<String> = match args.get("gpus") {
+        None => vec!["tiny".into()],
+        Some(list) => csv(list),
+    };
+    let threads: Vec<usize> = match args.get("threads-list") {
+        None => vec![1, 4],
+        Some(list) => csv(list)
+            .iter()
+            .map(|t| t.parse().map_err(|_| format!("bad --threads-list entry {t:?}")))
+            .collect::<Result<_, _>>()?,
+    };
+    let schedules: Vec<Schedule> = match args.get("schedules") {
+        None => vec![Schedule::Static { chunk: 0 }, Schedule::Dynamic { chunk: 1 }],
+        Some(list) => csv(list)
+            .iter()
+            .map(|t| {
+                campaign::parse_schedule_token(t)
+                    .ok_or_else(|| format!("bad --schedules entry {t:?} (name[:chunk])"))
+            })
+            .collect::<Result<_, _>>()?,
+    };
+    let strategies: Vec<StatsStrategy> = match args.get("stats-list") {
+        None => vec![StatsStrategy::PerSm],
+        Some(list) => csv(list)
+            .iter()
+            .map(|t| {
+                campaign::parse_strategy_token(t)
+                    .ok_or_else(|| format!("bad --stats-list entry {t:?}"))
+            })
+            .collect::<Result<_, _>>()?,
+    };
+    let seed = args.get_u64("seed", 0xC0FFEE).map_err(|e| e.to_string())?;
+    let name = args.get("name").unwrap_or("sweep");
+    let out = std::path::PathBuf::from(args.get("out").unwrap_or("campaign_out"));
+
+    let wl_refs: Vec<&str> = workload_names.iter().map(String::as_str).collect();
+    let gpu_refs: Vec<&str> = gpus.iter().map(String::as_str).collect();
+    let spec = CampaignSpec::matrix(
+        name, &wl_refs, scale, &gpu_refs, &threads, &schedules, &strategies, seed,
+    );
+    if spec.is_empty() {
+        return Err("campaign matrix is empty".into());
+    }
+
+    let defaults = CampaignConfig::default();
+    let cfg = CampaignConfig {
+        workers: args.get_usize("workers", defaults.workers).map_err(|e| e.to_string())?,
+        core_budget: args
+            .get_usize("core-budget", defaults.core_budget)
+            .map_err(|e| e.to_string())?,
+        force: args.flag("force"),
+        quiet: args.flag("quiet"),
+    };
+    eprintln!(
+        "campaign {name:?}: {} job(s) ({} workload(s) × {} gpu(s) × {} thread count(s) × \
+         {} schedule(s) × {} stats strategie(s), scale={})",
+        spec.len(),
+        wl_refs.len(),
+        gpu_refs.len(),
+        threads.len(),
+        schedules.len(),
+        strategies.len(),
+        scale.name(),
+    );
+    let report = campaign::run_campaign(&spec, &out, &cfg)?;
+    println!("{}", report.summary());
+    Ok(())
 }
 
 /// Shared by `parsim validate` and `examples/gemm_validate.rs`.

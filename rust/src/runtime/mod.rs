@@ -13,18 +13,37 @@
 //! with `HloModuleProto::from_text_file` (the interchange that survives
 //! the jax≥0.5 ↔ xla_extension 0.5.1 proto-id mismatch — see
 //! /opt/xla-example/README.md).
+//!
+//! The PJRT bindings (`xla` crate) are not available in the offline
+//! build environment, so the real bridge is gated behind the `xla`
+//! cargo feature. Without it, [`CompiledHlo`] is an API-compatible stub
+//! whose `load` returns a descriptive error; artifact-path helpers and
+//! everything that only *checks* for artifacts keep working, and the
+//! XLA round-trip tests skip (artifacts are absent without
+//! `make artifacts` anyway).
 
 use std::path::{Path, PathBuf};
 
-use anyhow::{bail, Context, Result};
+#[cfg(feature = "xla")]
+use anyhow::Context;
+use anyhow::{bail, Result};
 
 /// Default artifacts directory (relative to the repo root).
 pub const ARTIFACTS_DIR: &str = "artifacts";
 
 /// A compiled HLO executable bound to a PJRT client.
+#[cfg(feature = "xla")]
 pub struct CompiledHlo {
     client: xla::PjRtClient,
     exe: xla::PjRtLoadedExecutable,
+    path: PathBuf,
+}
+
+/// Stub standing in for the PJRT executable when parsim is built without
+/// the `xla` feature (the offline default). Same API; `load` fails with
+/// an actionable message instead of compiling HLO.
+#[cfg(not(feature = "xla"))]
+pub struct CompiledHlo {
     path: PathBuf,
 }
 
@@ -34,6 +53,7 @@ impl std::fmt::Debug for CompiledHlo {
     }
 }
 
+#[cfg(feature = "xla")]
 impl CompiledHlo {
     /// Load HLO text from `path`, compile on the PJRT CPU client.
     pub fn load(path: &Path) -> Result<Self> {
@@ -71,6 +91,29 @@ impl CompiledHlo {
             .context("device→host")?;
         let out = result.to_tuple1().context("unwrap 1-tuple output")?;
         Ok(out.to_vec::<f32>().context("literal→vec")?)
+    }
+}
+
+#[cfg(not(feature = "xla"))]
+impl CompiledHlo {
+    /// Stub: always fails — the offline build carries no PJRT bindings.
+    pub fn load(path: &Path) -> Result<Self> {
+        bail!(
+            "parsim was built without the `xla` feature; PJRT execution of {} \
+             is unavailable (vendor the `xla` bindings and build with \
+             `--features xla` to enable the functional cross-validation)",
+            path.display()
+        )
+    }
+
+    /// Stub platform name.
+    pub fn platform(&self) -> String {
+        "unavailable (built without `xla` feature)".to_string()
+    }
+
+    /// Stub: always fails (see [`CompiledHlo::load`]).
+    pub fn run_f32(&self, _inputs: &[(&[f32], usize, usize)]) -> Result<Vec<f32>> {
+        bail!("parsim was built without the `xla` feature")
     }
 }
 

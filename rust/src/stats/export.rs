@@ -1,10 +1,15 @@
-//! Statistics export: CSV (per-SM, per-kernel) and a JSON run summary —
+//! Statistics export: CSV (per-SM, per-kernel), a JSON run summary, and
+//! the JSONL record format used by the campaign result store —
 //! what a research group actually pipes into pandas/gnuplot after a
-//! simulation campaign. `parsim run --export-dir DIR` writes both.
+//! simulation campaign. `parsim run --export-dir DIR` writes the CSV/JSON
+//! set; `parsim campaign` appends JSONL records via [`crate::campaign`].
 //!
 //! Formats are stable and covered by tests; exports are deterministic
 //! byte-for-byte (same guarantees as the statistics themselves), so they
-//! can be diffed across simulator versions.
+//! can be diffed across simulator versions. JSONL is additionally
+//! *round-trippable*: [`parse_flat_json`] parses any line emitted here
+//! back into typed fields, and a unit test locks serialize → parse →
+//! equal so the campaign store format cannot drift silently.
 
 use std::fmt::Write as _;
 
@@ -100,7 +105,7 @@ pub fn summary_json(stats: &GpuStats) -> String {
 }
 
 /// Write the full export set into a directory:
-/// `summary.json`, `kernels.csv`, `kernel_<id>_per_sm.csv`.
+/// `summary.json`, `summary.jsonl`, `kernels.csv`, `kernel_<id>_per_sm.csv`.
 pub fn write_all(stats: &GpuStats, dir: &std::path::Path) -> std::io::Result<Vec<String>> {
     std::fs::create_dir_all(dir)?;
     let mut written = Vec::new();
@@ -110,11 +115,279 @@ pub fn write_all(stats: &GpuStats, dir: &std::path::Path) -> std::io::Result<Vec
         Ok(())
     };
     put("summary.json".into(), summary_json(stats))?;
+    put("summary.jsonl".into(), gpu_stats_jsonl(stats) + "\n")?;
     put("kernels.csv".into(), kernels_csv(stats))?;
     for k in &stats.kernels {
         put(format!("kernel_{}_per_sm.csv", k.kernel_id), per_sm_csv(k))?;
     }
     Ok(written)
+}
+
+// ---------------------------------------------------------------------------
+// JSONL: one-line records + a flat-object parser (round-trip guaranteed)
+// ---------------------------------------------------------------------------
+
+/// A scalar JSON value as produced by the flat-object parser. Integers
+/// that fit u64/i64 are kept exact (never routed through f64, so content
+/// hashes and fingerprints survive the round trip bit-for-bit).
+#[derive(Debug, Clone, PartialEq)]
+pub enum JsonScalar {
+    Str(String),
+    UInt(u64),
+    Int(i64),
+    Num(f64),
+    Bool(bool),
+    Null,
+}
+
+impl JsonScalar {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            JsonScalar::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_u64(&self) -> Option<u64> {
+        match *self {
+            JsonScalar::UInt(v) => Some(v),
+            JsonScalar::Int(v) if v >= 0 => Some(v as u64),
+            _ => None,
+        }
+    }
+}
+
+/// Serialize one `"key": value` JSON member for a string value.
+pub fn jsonl_str(out: &mut String, key: &str, value: &str, first: bool) {
+    if !first {
+        out.push_str(", ");
+    }
+    let _ = write!(out, "\"{}\": \"{}\"", json_escape(key), json_escape(value));
+}
+
+/// Serialize one `"key": value` JSON member for an unsigned value.
+pub fn jsonl_u64(out: &mut String, key: &str, value: u64, first: bool) {
+    if !first {
+        out.push_str(", ");
+    }
+    let _ = write!(out, "\"{}\": {}", json_escape(key), value);
+}
+
+/// Parse one line containing a **flat** JSON object (scalar values only —
+/// exactly what [`gpu_stats_jsonl`] and the campaign store emit). Returns
+/// the members in document order. Nested objects/arrays are rejected.
+pub fn parse_flat_json(line: &str) -> Result<Vec<(String, JsonScalar)>, String> {
+    let mut p = FlatParser { b: line.as_bytes(), i: 0 };
+    p.skip_ws();
+    p.expect(b'{')?;
+    let mut out = Vec::new();
+    p.skip_ws();
+    if p.peek() == Some(b'}') {
+        p.i += 1;
+        return Ok(out);
+    }
+    loop {
+        p.skip_ws();
+        let key = p.parse_string()?;
+        p.skip_ws();
+        p.expect(b':')?;
+        p.skip_ws();
+        let val = p.parse_scalar()?;
+        out.push((key, val));
+        p.skip_ws();
+        match p.next() {
+            Some(b',') => continue,
+            Some(b'}') => break,
+            other => return Err(format!("expected ',' or '}}', got {other:?}")),
+        }
+    }
+    p.skip_ws();
+    if p.i != p.b.len() {
+        return Err(format!("trailing content at byte {}", p.i));
+    }
+    Ok(out)
+}
+
+struct FlatParser<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl FlatParser<'_> {
+    fn peek(&self) -> Option<u8> {
+        self.b.get(self.i).copied()
+    }
+    fn next(&mut self) -> Option<u8> {
+        let c = self.peek();
+        if c.is_some() {
+            self.i += 1;
+        }
+        c
+    }
+    fn skip_ws(&mut self) {
+        while matches!(self.peek(), Some(b' ' | b'\t' | b'\n' | b'\r')) {
+            self.i += 1;
+        }
+    }
+    fn expect(&mut self, c: u8) -> Result<(), String> {
+        match self.next() {
+            Some(g) if g == c => Ok(()),
+            other => Err(format!("expected {:?}, got {other:?}", c as char)),
+        }
+    }
+
+    fn parse_string(&mut self) -> Result<String, String> {
+        self.expect(b'"')?;
+        let mut s = String::new();
+        loop {
+            match self.next() {
+                None => return Err("unterminated string".into()),
+                Some(b'"') => return Ok(s),
+                Some(b'\\') => match self.next() {
+                    Some(b'"') => s.push('"'),
+                    Some(b'\\') => s.push('\\'),
+                    Some(b'/') => s.push('/'),
+                    Some(b'n') => s.push('\n'),
+                    Some(b't') => s.push('\t'),
+                    Some(b'r') => s.push('\r'),
+                    Some(b'b') => s.push('\u{8}'),
+                    Some(b'f') => s.push('\u{c}'),
+                    Some(b'u') => {
+                        let mut code = 0u32;
+                        for _ in 0..4 {
+                            let d = self.next().ok_or("truncated \\u escape")?;
+                            code = code * 16
+                                + (d as char).to_digit(16).ok_or("bad \\u hex digit")?;
+                        }
+                        s.push(char::from_u32(code).ok_or("invalid \\u code point")?);
+                    }
+                    other => return Err(format!("bad escape {other:?}")),
+                },
+                Some(c) if c < 0x80 => s.push(c as char),
+                Some(c) => {
+                    // multi-byte UTF-8: copy the full sequence verbatim
+                    let start = self.i - 1;
+                    let len = match c {
+                        0xC0..=0xDF => 2,
+                        0xE0..=0xEF => 3,
+                        _ => 4,
+                    };
+                    let end = (start + len).min(self.b.len());
+                    let frag = std::str::from_utf8(&self.b[start..end])
+                        .map_err(|_| "invalid UTF-8 in string")?;
+                    s.push_str(frag);
+                    self.i = end;
+                }
+            }
+        }
+    }
+
+    fn parse_scalar(&mut self) -> Result<JsonScalar, String> {
+        match self.peek() {
+            Some(b'"') => Ok(JsonScalar::Str(self.parse_string()?)),
+            Some(b't') => self.parse_lit("true", JsonScalar::Bool(true)),
+            Some(b'f') => self.parse_lit("false", JsonScalar::Bool(false)),
+            Some(b'n') => self.parse_lit("null", JsonScalar::Null),
+            Some(b'{') | Some(b'[') => Err("nested values not supported (flat objects only)".into()),
+            Some(_) => {
+                let start = self.i;
+                while matches!(
+                    self.peek(),
+                    Some(b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E')
+                ) {
+                    self.i += 1;
+                }
+                let tok = std::str::from_utf8(&self.b[start..self.i]).unwrap();
+                if tok.is_empty() {
+                    return Err("empty number token".into());
+                }
+                if !(tok.contains('.') || tok.contains('e') || tok.contains('E')) {
+                    if let Some(rest) = tok.strip_prefix('-') {
+                        if rest.bytes().all(|c| c.is_ascii_digit()) {
+                            return tok
+                                .parse::<i64>()
+                                .map(JsonScalar::Int)
+                                .map_err(|e| format!("bad integer {tok:?}: {e}"));
+                        }
+                    } else if tok.bytes().all(|c| c.is_ascii_digit()) {
+                        return tok
+                            .parse::<u64>()
+                            .map(JsonScalar::UInt)
+                            .map_err(|e| format!("bad integer {tok:?}: {e}"));
+                    }
+                }
+                tok.parse::<f64>()
+                    .map(JsonScalar::Num)
+                    .map_err(|e| format!("bad number {tok:?}: {e}"))
+            }
+            None => Err("unexpected end of input".into()),
+        }
+    }
+
+    fn parse_lit(&mut self, lit: &str, v: JsonScalar) -> Result<JsonScalar, String> {
+        if self.b[self.i..].starts_with(lit.as_bytes()) {
+            self.i += lit.len();
+            Ok(v)
+        } else {
+            Err(format!("expected literal {lit:?}"))
+        }
+    }
+}
+
+/// Deterministic single-line JSONL summary of one run, written by
+/// [`write_all`] as `summary.jsonl` (append-friendly for sweep scripts,
+/// unlike the pretty-printed `summary.json`). Wall-clock (host noise) is
+/// deliberately excluded so the line is byte-identical across reruns —
+/// the same discipline the campaign store's `JobRecord` follows.
+pub fn gpu_stats_jsonl(stats: &GpuStats) -> String {
+    let mut out = String::from("{");
+    jsonl_str(&mut out, "workload", &stats.workload, true);
+    jsonl_u64(&mut out, "kernels", stats.kernels.len() as u64, false);
+    jsonl_u64(&mut out, "total_gpu_cycles", stats.total_gpu_cycles, false);
+    jsonl_u64(&mut out, "total_warp_insts", stats.total_warp_insts(), false);
+    jsonl_u64(&mut out, "total_thread_insts", stats.total_thread_insts(), false);
+    jsonl_str(&mut out, "fingerprint", &format!("{:016x}", stats.fingerprint()), false);
+    out.push('}');
+    out
+}
+
+/// Typed view of a [`gpu_stats_jsonl`] line.
+#[derive(Debug, Clone, PartialEq)]
+pub struct JsonlSummary {
+    pub workload: String,
+    pub kernels: u64,
+    pub total_gpu_cycles: u64,
+    pub total_warp_insts: u64,
+    pub total_thread_insts: u64,
+    pub fingerprint: u64,
+}
+
+/// Parse a [`gpu_stats_jsonl`] line back into its typed fields.
+pub fn parse_gpu_stats_jsonl(line: &str) -> Result<JsonlSummary, String> {
+    let fields = parse_flat_json(line)?;
+    let get = |k: &str| -> Result<&JsonScalar, String> {
+        fields
+            .iter()
+            .find(|(key, _)| key == k)
+            .map(|(_, v)| v)
+            .ok_or_else(|| format!("missing field {k:?}"))
+    };
+    let s = |k: &str| -> Result<String, String> {
+        get(k)?.as_str().map(str::to_string).ok_or_else(|| format!("field {k:?} not a string"))
+    };
+    let u = |k: &str| -> Result<u64, String> {
+        get(k)?.as_u64().ok_or_else(|| format!("field {k:?} not an unsigned integer"))
+    };
+    let fp_hex = s("fingerprint")?;
+    let fingerprint =
+        u64::from_str_radix(&fp_hex, 16).map_err(|e| format!("bad fingerprint {fp_hex:?}: {e}"))?;
+    Ok(JsonlSummary {
+        workload: s("workload")?,
+        kernels: u("kernels")?,
+        total_gpu_cycles: u("total_gpu_cycles")?,
+        total_warp_insts: u("total_warp_insts")?,
+        total_thread_insts: u("total_thread_insts")?,
+        fingerprint,
+    })
 }
 
 fn csv_escape(s: &str) -> String {
@@ -192,12 +465,69 @@ mod tests {
     }
 
     #[test]
+    fn jsonl_round_trip_locks_store_format() {
+        // serialize → parse → equal: the campaign store format is locked.
+        let s = sample();
+        let line = gpu_stats_jsonl(&s);
+        assert!(!line.contains('\n'), "JSONL record must be one line");
+        let parsed = parse_gpu_stats_jsonl(&line).expect("parse own output");
+        assert_eq!(
+            parsed,
+            JsonlSummary {
+                workload: s.workload.clone(),
+                kernels: s.kernels.len() as u64,
+                total_gpu_cycles: s.total_gpu_cycles,
+                total_warp_insts: s.total_warp_insts(),
+                total_thread_insts: s.total_thread_insts(),
+                fingerprint: s.fingerprint(),
+            }
+        );
+        // byte-determinism of the record itself
+        assert_eq!(line, gpu_stats_jsonl(&s));
+    }
+
+    #[test]
+    fn flat_json_parser_handles_types_and_escapes() {
+        let line = r#"{"s": "a\"b\\c", "u": 18446744073709551615, "i": -42, "f": 1.5, "t": true, "n": null}"#;
+        let fields = parse_flat_json(line).unwrap();
+        assert_eq!(fields[0], ("s".into(), JsonScalar::Str("a\"b\\c".into())));
+        assert_eq!(fields[1].1.as_u64(), Some(u64::MAX));
+        assert_eq!(fields[2].1, JsonScalar::Int(-42));
+        assert_eq!(fields[3].1, JsonScalar::Num(1.5));
+        assert_eq!(fields[4].1, JsonScalar::Bool(true));
+        assert_eq!(fields[5].1, JsonScalar::Null);
+        assert!(parse_flat_json("{}").unwrap().is_empty());
+        // u64 values above 2^53 must survive exactly (hashes/fingerprints)
+        let big = (1u64 << 60) + 7;
+        let fields = parse_flat_json(&format!("{{\"v\": {big}}}")).unwrap();
+        assert_eq!(fields[0].1.as_u64(), Some(big));
+    }
+
+    #[test]
+    fn flat_json_parser_rejects_malformed_input() {
+        for bad in [
+            "",
+            "{",
+            "{\"a\" 1}",
+            "{\"a\": 1} trailing",
+            "{\"a\": {\"nested\": 1}}",
+            "{\"a\": [1]}",
+            "{\"a\": 1e}",
+            "{\"unterminated}",
+        ] {
+            assert!(parse_flat_json(bad).is_err(), "{bad:?} should fail");
+        }
+    }
+
+    #[test]
     fn write_all_creates_files() {
         let dir = std::env::temp_dir().join(format!("parsim_export_{}", std::process::id()));
         let written = write_all(&sample(), &dir).unwrap();
         assert!(written.contains(&"summary.json".to_string()));
         assert!(written.contains(&"kernels.csv".to_string()));
         assert!(dir.join("kernel_0_per_sm.csv").exists());
+        let line = std::fs::read_to_string(dir.join("summary.jsonl")).unwrap();
+        parse_gpu_stats_jsonl(line.trim_end()).expect("summary.jsonl parses back");
         std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -1,0 +1,208 @@
+//! Campaign engine integration tests: the paper's determinism guarantee
+//! lifted to campaign granularity.
+//!
+//! * single- vs multi-threaded `GpuSim` statistics are bit-identical
+//!   (≥ 3 workloads at `Scale::Ci`) — the per-job precondition;
+//! * two campaign runs produce **byte-identical** result files, whether
+//!   rerun in place (100% cache hits, 0 simulated) or into a fresh
+//!   directory, and regardless of job-level worker count;
+//! * incremental sweeps simulate only the delta.
+
+use std::path::PathBuf;
+
+use parsim::campaign::{
+    run_campaign, CampaignConfig, CampaignSpec, JobSpec, RESULTS_CSV, RESULTS_JSONL,
+};
+use parsim::config::{GpuConfig, Schedule, SimConfig, StatsStrategy};
+use parsim::engine::GpuSim;
+use parsim::stats::diff::diff_runs;
+use parsim::trace::workloads::{self, Scale};
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("parsim_campaign_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+fn cfg(workers: usize) -> CampaignConfig {
+    CampaignConfig { workers, core_budget: 4, force: false, quiet: true }
+}
+
+fn job(wl: &str, threads: usize, schedule: Schedule) -> JobSpec {
+    JobSpec {
+        workload: wl.to_string(),
+        scale: Scale::Ci,
+        gpu: "tiny".to_string(),
+        threads,
+        schedule,
+        stats_strategy: StatsStrategy::PerSm,
+        seed: 0xC0FFEE,
+        max_cycles: 0,
+    }
+}
+
+/// 3 workloads × {1, 4} threads × {static, dynamic} = 12 jobs.
+fn matrix12(name: &str) -> CampaignSpec {
+    CampaignSpec::matrix(
+        name,
+        &["nn", "hotspot", "mst"],
+        Scale::Ci,
+        &["tiny"],
+        &[1, 4],
+        &[Schedule::Static { chunk: 0 }, Schedule::Dynamic { chunk: 1 }],
+        &[StatsStrategy::PerSm],
+        0xC0FFEE,
+    )
+}
+
+fn read(dir: &PathBuf, name: &str) -> String {
+    std::fs::read_to_string(dir.join(name))
+        .unwrap_or_else(|e| panic!("read {name} in {}: {e}", dir.display()))
+}
+
+/// Satellite requirement: single- vs multi-threaded `GpuSim` stats are
+/// bit-identical for at least 3 workloads at `Scale::Ci` (full stat diff,
+/// not just fingerprints).
+#[test]
+fn single_vs_multi_thread_stats_bit_identical_three_workloads() {
+    let gpu = GpuConfig::tiny();
+    for name in ["nn", "hotspot", "mst"] {
+        let wl = workloads::build(name, Scale::Ci).unwrap();
+        let mut seq = GpuSim::new(gpu.clone(), SimConfig::default());
+        let a = seq.run_workload(&wl);
+        let sim = SimConfig {
+            threads: 8,
+            schedule: Schedule::Dynamic { chunk: 1 },
+            ..SimConfig::default()
+        };
+        let mut par = GpuSim::new(gpu.clone(), sim);
+        let b = par.run_workload(&wl);
+        let d = diff_runs(&a, &b);
+        assert!(d.identical(), "{name}: 1t vs 8t diverged:\n{}", d.report());
+        assert_eq!(a.fingerprint(), b.fingerprint(), "{name} fingerprint");
+    }
+}
+
+/// The acceptance scenario: a ≥12-job matrix runs concurrently, the
+/// store is written, and an immediate rerun reports 100% cache hits
+/// while simulating 0 jobs — with byte-identical files.
+#[test]
+fn rerun_is_all_cache_hits_and_byte_identical() {
+    let spec = matrix12("rerun");
+    assert!(spec.len() >= 12, "acceptance requires a ≥12-job matrix");
+    let out = tmp_dir("rerun");
+
+    let r1 = run_campaign(&spec, &out, &cfg(4)).expect("first run");
+    assert_eq!(r1.total_jobs, 12);
+    assert_eq!(r1.simulated, 12);
+    assert_eq!(r1.cache_hits, 0);
+    let jsonl1 = read(&r1.out_dir, RESULTS_JSONL);
+    let csv1 = read(&r1.out_dir, RESULTS_CSV);
+    assert_eq!(jsonl1.lines().count(), 12, "one record per job");
+    assert_eq!(csv1.lines().count(), 13, "header + one row per job");
+
+    let r2 = run_campaign(&spec, &out, &cfg(4)).expect("rerun");
+    assert_eq!(r2.simulated, 0, "rerun must simulate nothing");
+    assert_eq!(r2.cache_hits, 12, "rerun must be 100% cache hits");
+    assert_eq!(read(&r2.out_dir, RESULTS_JSONL), jsonl1, "results.jsonl byte-identical");
+    assert_eq!(read(&r2.out_dir, RESULTS_CSV), csv1, "results.csv byte-identical");
+
+    std::fs::remove_dir_all(&out).ok();
+}
+
+/// Campaign-level determinism: fresh runs into different directories,
+/// with different job-level worker counts, write byte-identical stores
+/// (results ordered by job key, never completion order).
+#[test]
+fn fresh_runs_any_worker_count_byte_identical() {
+    let spec = CampaignSpec::matrix(
+        "workers",
+        &["nn", "lud"],
+        Scale::Ci,
+        &["tiny"],
+        &[1, 2],
+        &[Schedule::Dynamic { chunk: 1 }],
+        &[StatsStrategy::PerSm],
+        7,
+    );
+    let out_serial = tmp_dir("w1");
+    let out_parallel = tmp_dir("w4");
+    let r1 = run_campaign(&spec, &out_serial, &cfg(1)).expect("serial run");
+    let r4 = run_campaign(&spec, &out_parallel, &cfg(4)).expect("parallel run");
+    assert_eq!(r1.simulated, spec.len());
+    assert_eq!(r4.simulated, spec.len());
+    assert_eq!(
+        read(&r1.out_dir, RESULTS_JSONL),
+        read(&r4.out_dir, RESULTS_JSONL),
+        "worker count must not leak into the store"
+    );
+    assert_eq!(read(&r1.out_dir, RESULTS_CSV), read(&r4.out_dir, RESULTS_CSV));
+    std::fs::remove_dir_all(&out_serial).ok();
+    std::fs::remove_dir_all(&out_parallel).ok();
+}
+
+/// Per-workload thread counts are part of the job key but must not
+/// change simulation output: the stored fingerprints for thr=1 and
+/// thr=4 of the same workload are equal.
+#[test]
+fn campaign_records_confirm_thread_count_invariance() {
+    let spec = matrix12("fpcheck");
+    let out = tmp_dir("fpcheck");
+    run_campaign(&spec, &out, &cfg(4)).expect("run");
+    let store = parsim::campaign::ResultStore::open(&out.join("fpcheck")).expect("open store");
+    for wl in ["nn", "hotspot", "mst"] {
+        let fps: Vec<u64> = store
+            .records()
+            .filter(|r| r.workload == wl)
+            .map(|r| r.fingerprint)
+            .collect();
+        assert_eq!(fps.len(), 4, "{wl}: 2 thread counts × 2 schedules");
+        assert!(
+            fps.windows(2).all(|w| w[0] == w[1]),
+            "{wl}: fingerprints differ across threads/schedules: {fps:x?}"
+        );
+    }
+    std::fs::remove_dir_all(&out).ok();
+}
+
+/// Incremental sweep: extending a cached campaign simulates only the
+/// delta.
+#[test]
+fn incremental_sweep_simulates_only_the_delta() {
+    let small = CampaignSpec::new(
+        "incr",
+        vec![job("nn", 1, Schedule::Static { chunk: 0 })],
+    );
+    let bigger = CampaignSpec::new(
+        "incr",
+        vec![
+            job("nn", 1, Schedule::Static { chunk: 0 }),
+            job("nn", 4, Schedule::Static { chunk: 0 }),
+            job("lud", 1, Schedule::Static { chunk: 0 }),
+        ],
+    );
+    let out = tmp_dir("incr");
+    let r1 = run_campaign(&small, &out, &cfg(2)).expect("seed run");
+    assert_eq!((r1.simulated, r1.cache_hits), (1, 0));
+    let r2 = run_campaign(&bigger, &out, &cfg(2)).expect("extended run");
+    assert_eq!((r2.simulated, r2.cache_hits), (2, 1), "only the delta simulates");
+    // and --force re-simulates everything but rewrites identical bytes
+    let bytes = read(&r2.out_dir, RESULTS_JSONL);
+    let forced = CampaignConfig { force: true, ..cfg(2) };
+    let r3 = run_campaign(&bigger, &out, &forced).expect("forced run");
+    assert_eq!((r3.simulated, r3.cache_hits), (3, 0));
+    assert_eq!(read(&r3.out_dir, RESULTS_JSONL), bytes, "forced rerun rewrites same bytes");
+    std::fs::remove_dir_all(&out).ok();
+}
+
+/// Invalid jobs are rejected up front, before anything simulates or the
+/// store is touched.
+#[test]
+fn invalid_jobs_rejected_before_running() {
+    let spec = CampaignSpec::new("bad", vec![job("not_a_workload", 1, Schedule::Static { chunk: 0 })]);
+    let out = tmp_dir("bad");
+    let err = run_campaign(&spec, &out, &cfg(1)).unwrap_err();
+    assert!(err.contains("not_a_workload"), "{err}");
+    assert!(!out.join("bad").join(RESULTS_JSONL).exists());
+    std::fs::remove_dir_all(&out).ok();
+}
