@@ -32,7 +32,7 @@ fn main() {
     let mut total_default = 0.0;
     let mut total_planned = 0.0;
     for &name in workloads::names() {
-        let m = harness::measure_workload(name, Scale::Ci, &gpu);
+        let m = harness::measure_workload(name, Scale::Ci, &gpu).expect("Table-2 workload");
         // throughput score: (node_cores / T) parallel jobs × speedup(T)
         let mut best = (1usize, 1.0f64);
         for &t in candidates.iter().filter(|&&t| t <= cores) {

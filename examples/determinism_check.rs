@@ -9,10 +9,15 @@
 //! THREADS=16 cargo run --release --example determinism_check
 //! ```
 
-use parsim::config::{GpuConfig, Schedule, SimConfig, StatsStrategy};
-use parsim::engine::GpuSim;
+use parsim::config::{GpuConfig, Schedule, StatsStrategy};
+use parsim::harness::real_run;
 use parsim::stats::diff::diff_runs;
 use parsim::trace::workloads::{self, Scale};
+
+fn run(name: &str, gpu: &GpuConfig, threads: usize, schedule: Schedule) -> parsim::GpuStats {
+    real_run(name, Scale::Ci, gpu, threads, schedule, StatsStrategy::PerSm)
+        .expect("Table-2 workload on a valid GPU")
+}
 
 fn main() {
     let threads: usize =
@@ -21,18 +26,9 @@ fn main() {
     let mut failures = 0;
     println!("determinism sweep: 1 thread vs {threads} threads, all 19 workloads\n");
     for &name in workloads::names() {
-        let wl = workloads::build(name, Scale::Ci).unwrap();
-        let mut seq = GpuSim::new(gpu.clone(), SimConfig::default());
-        let s = seq.run_workload(&wl);
+        let s = run(name, &gpu, 1, Schedule::Static { chunk: 1 });
         for schedule in [Schedule::Static { chunk: 1 }, Schedule::Dynamic { chunk: 1 }] {
-            let sim = SimConfig {
-                threads,
-                schedule,
-                stats_strategy: StatsStrategy::PerSm,
-                ..SimConfig::default()
-            };
-            let mut par = GpuSim::new(gpu.clone(), sim);
-            let p = par.run_workload(&wl);
+            let p = run(name, &gpu, threads, schedule);
             let d = diff_runs(&s, &p);
             if d.identical() {
                 println!(

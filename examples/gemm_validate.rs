@@ -17,11 +17,11 @@
 //! make artifacts && cargo run --release --example gemm_validate
 //! ```
 
-use parsim::config::{FunctionalMode, GpuConfig, SimConfig};
-use parsim::engine::GpuSim;
+use parsim::config::{FunctionalMode, GpuConfig};
 use parsim::runtime::{artifact_path, artifacts_available, CompiledHlo};
 use parsim::trace::functional;
 use parsim::trace::workloads::{self, Scale};
+use parsim::SimBuilder;
 
 fn main() {
     let gpu = GpuConfig::rtx3080ti();
@@ -31,6 +31,8 @@ fn main() {
         let wl = workloads::build(name, Scale::Ci).unwrap();
         let kd = wl.kernels.iter().find(|k| k.gemm.is_some()).expect("gemm kernel");
         let sem = kd.gemm.unwrap();
+        let kd_name = kd.name.clone();
+        let kernel_seed = kd.seed;
         let stem = format!("gemm_{}x{}x{}", sem.m, sem.n, sem.k);
         if !artifacts_available(&stem) {
             println!("{name:<8} SKIP (artifact {stem} missing — run `make artifacts`)");
@@ -38,23 +40,28 @@ fn main() {
             continue;
         }
 
-        // L3: timing simulation + functional replay
-        let sim = SimConfig { functional: FunctionalMode::Full, ..SimConfig::default() };
-        let mut gs = GpuSim::new(gpu.clone(), sim);
-        let stats = gs.run_workload(&wl);
-        let fr = gs.functional_results.iter().find(|f| f.sem == sem).expect("replay");
+        // L3: timing simulation + functional replay (session API)
+        let mut session = SimBuilder::new()
+            .gpu(gpu.clone())
+            .workload(wl)
+            .functional(FunctionalMode::Full)
+            .build()
+            .expect("valid config");
+        session.run_to_completion().expect("run");
+        let stats = session.stats().expect("finished");
+        let fr = session.sim().functional_results.iter().find(|f| f.sem == sem).expect("replay");
 
         // runtime: the Pallas-kernel artifact through PJRT
         let exe = CompiledHlo::load(&artifact_path(&stem)).expect("load artifact");
-        let a = functional::gen_matrix(kd.seed ^ 0xA, sem.m as usize, sem.k as usize);
-        let b = functional::gen_matrix(kd.seed ^ 0xB, sem.k as usize, sem.n as usize);
+        let a = functional::gen_matrix(kernel_seed ^ 0xA, sem.m as usize, sem.k as usize);
+        let b = functional::gen_matrix(kernel_seed ^ 0xB, sem.k as usize, sem.n as usize);
         let c_xla = exe
             .run_f32(&[(&a, sem.m as usize, sem.k as usize), (&b, sem.k as usize, sem.n as usize)])
             .expect("execute artifact");
 
         let diff = functional::max_abs_diff(&fr.c, &c_xla);
         let tol = 1e-3 * sem.k as f32;
-        let kstats = stats.kernels.iter().find(|k| k.name == kd.name).unwrap();
+        let kstats = stats.kernels.iter().find(|k| k.name == kd_name).unwrap();
         println!(
             "{name:<8} C[{}×{}] K={}  sim {} cycles, IPC {:.2}  |sim−xla|max = {diff:.2e}  {}",
             sem.m,

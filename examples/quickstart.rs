@@ -1,30 +1,30 @@
 //! Quickstart: simulate one Rodinia workload on the paper's RTX 3080 Ti
-//! model, sequentially and with the paper's parallel SM loop, and show
-//! that the statistics are bit-identical.
+//! model through the session API — sequentially and with the paper's
+//! parallel SM loop — and show that the statistics are bit-identical.
 //!
 //! ```sh
 //! cargo run --release --example quickstart
 //! ```
 
-use parsim::config::{GpuConfig, Schedule, SimConfig};
-use parsim::engine::GpuSim;
-use parsim::trace::workloads::{self, Scale};
+use parsim::config::Schedule;
+use parsim::{Scale, SimBuilder, SimError};
 
-fn main() {
-    let gpu = GpuConfig::rtx3080ti();
-    let wl = workloads::build("hotspot", Scale::Ci).expect("hotspot is in Table 2");
+fn main() -> Result<(), SimError> {
+    // 1. vanilla single-threaded simulation (the Accel-sim baseline)
+    let mut seq = SimBuilder::new()
+        .gpu_preset("rtx3080ti")
+        .workload_named("hotspot", Scale::Ci)
+        .build()?;
     println!(
         "simulating {} ({} kernels, {:.0} CTAs/kernel) on {} ({} SMs)",
-        wl.name,
-        wl.kernels.len(),
-        wl.mean_ctas_per_kernel(),
-        gpu.name,
-        gpu.num_sms
+        seq.workload().name,
+        seq.workload().kernels.len(),
+        seq.workload().mean_ctas_per_kernel(),
+        seq.sim().gpu.name,
+        seq.sim().gpu.num_sms
     );
-
-    // 1. vanilla single-threaded simulation (the Accel-sim baseline)
-    let mut seq = GpuSim::new(gpu.clone(), SimConfig::default());
-    let s = seq.run_workload(&wl);
+    seq.run_to_completion()?;
+    let s = seq.into_stats()?;
     println!(
         "sequential:  {} cycles, {} warp-insts, {:.2}s wall, fp={:016x}",
         s.total_cycles(),
@@ -34,13 +34,14 @@ fn main() {
     );
 
     // 2. the paper's contribution: parallel SM loop (8 threads, dynamic)
-    let sim = SimConfig {
-        threads: 8,
-        schedule: Schedule::Dynamic { chunk: 1 },
-        ..SimConfig::default()
-    };
-    let mut par = GpuSim::new(gpu, sim);
-    let p = par.run_workload(&wl);
+    let mut par = SimBuilder::new()
+        .gpu_preset("rtx3080ti")
+        .workload_named("hotspot", Scale::Ci)
+        .threads(8)
+        .schedule(Schedule::Dynamic { chunk: 1 })
+        .build()?;
+    par.run_to_completion()?;
+    let p = par.into_stats()?;
     println!(
         "parallel:    {} cycles, {} warp-insts, {:.2}s wall, fp={:016x}",
         p.total_cycles(),
@@ -60,4 +61,5 @@ fn main() {
     println!("  L2 hit rate       {:.1}%", 100.0 * k.l2_hit_rate());
     println!("  unique 128B lines {}", k.unique_lines_global);
     println!("  barriers          {}", k.sm.barriers_completed);
+    Ok(())
 }

@@ -1,0 +1,74 @@
+//! Session observers: drive a simulation through `SimBuilder` /
+//! `SimSession`, sample it mid-flight with the periodic JSONL stats
+//! sampler, pause it on a cycle budget, checkpoint, and resume — the
+//! design-space-exploration workflow the session API exists for.
+//!
+//! ```sh
+//! cargo run --release --example session_observer
+//! ```
+
+use parsim::engine::{Observer, StatsSampler, StopCondition};
+use parsim::stats::KernelStats;
+use parsim::{GpuSim, Scale, SimBuilder, SimError};
+
+/// A custom observer: one line per completed kernel.
+struct KernelLogger;
+
+impl Observer for KernelLogger {
+    fn on_kernel_end(&mut self, stats: &KernelStats, _sim: &GpuSim) {
+        println!(
+            "  kernel {:<2} {:<24} {:>7} cycles  IPC {:.2}",
+            stats.kernel_id,
+            stats.name,
+            stats.cycles,
+            stats.ipc()
+        );
+    }
+}
+
+fn main() -> Result<(), SimError> {
+    // periodic sampler: one flat JSONL record every 100 kernel cycles,
+    // collected into a shared buffer we can read after the run
+    // (`parsim run --sample-every 100` streams the same records live)
+    let (sampler, samples) = StatsSampler::shared(100);
+
+    let mut session = SimBuilder::new()
+        .gpu_preset("tiny")
+        .workload_named("hotspot", Scale::Ci)
+        .threads(4)
+        .observer(sampler)
+        .observer(KernelLogger)
+        .build()?; // typed SimError on bad input — never a panic
+
+    println!(
+        "session: {} on {} — {} kernels",
+        session.workload().name,
+        session.sim().gpu.name,
+        session.workload().kernels.len()
+    );
+
+    // run a 150-cycle slice, then checkpoint the mid-run state
+    session.run(StopCondition::CycleBudget(150))?;
+    let cp = session.checkpoint();
+    println!(
+        "paused at cycle {} ({} kernels complete) — checkpoint {:016x}",
+        cp.cycle, cp.kernels_completed, cp.hash
+    );
+    println!("(an uninterrupted run of the same config reproduces this hash bit-for-bit)");
+
+    // resume to completion
+    session.run_to_completion()?;
+    let stats = session.stats().expect("finished");
+    println!(
+        "finished: {} cycles, {} warp-insts, fingerprint {:016x}\n",
+        stats.total_cycles(),
+        stats.total_warp_insts(),
+        stats.fingerprint()
+    );
+
+    println!("periodic samples (every 100 kernel cycles):");
+    for line in samples.borrow().iter() {
+        println!("  {line}");
+    }
+    Ok(())
+}

@@ -13,20 +13,21 @@
 
 mod common;
 
-use parsim::config::{GpuConfig, Schedule, SimConfig, StatsStrategy};
-use parsim::engine::GpuSim;
-use parsim::trace::workloads::{self, Scale};
+use parsim::config::{GpuConfig, Schedule, StatsStrategy};
+use parsim::trace::workloads::Scale;
+use parsim::SimBuilder;
 
 fn run(name: &str, threads: usize, strategy: StatsStrategy, scale: Scale) -> f64 {
-    let wl = workloads::build(name, scale).unwrap();
-    let sim = SimConfig {
-        threads,
-        schedule: Schedule::Static { chunk: 1 },
-        stats_strategy: strategy,
-        ..SimConfig::default()
-    };
-    let mut gs = GpuSim::new(GpuConfig::rtx3080ti(), sim);
-    gs.run_workload(&wl).sim_wallclock_s
+    let mut session = SimBuilder::new()
+        .gpu(GpuConfig::rtx3080ti())
+        .workload_named(name, scale)
+        .threads(threads)
+        .schedule(Schedule::Static { chunk: 1 })
+        .stats_strategy(strategy)
+        .build()
+        .expect("valid config");
+    session.run_to_completion().expect("run");
+    session.into_stats().expect("finished").sim_wallclock_s
 }
 
 fn main() {

@@ -11,6 +11,6 @@ use parsim::harness;
 fn main() {
     let scale = common::env_scale();
     let gpu = GpuConfig::rtx3080ti();
-    let rows = harness::fig1(scale, &gpu, true);
+    let rows = harness::fig1(scale, &gpu, true).expect("valid figure config");
     println!("\n{}", harness::fig1_report(&rows, scale));
 }

@@ -9,7 +9,8 @@ use parsim::harness;
 fn main() {
     let scale = common::env_scale();
     let wl = common::env_workload_filter().unwrap_or_else(|| "hotspot".to_string());
-    let (report, sm_pct) = harness::fig4(&wl, scale, &GpuConfig::rtx3080ti());
+    let (report, sm_pct) =
+        harness::fig4(&wl, scale, &GpuConfig::rtx3080ti()).expect("valid figure config");
     println!("{report}");
     println!("SM-cycle share: {sm_pct:.1}%  (paper: ≈93% on hotspot)");
     println!(

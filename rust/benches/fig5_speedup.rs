@@ -14,8 +14,8 @@ fn main() {
     let scale = common::env_scale();
     let gpu = GpuConfig::rtx3080ti();
     let measured = match common::env_workload_filter() {
-        Some(w) => vec![harness::measure_workload(&w, scale, &gpu)],
-        None => harness::measure_all(scale, &gpu, true),
+        Some(w) => vec![harness::measure_workload(&w, scale, &gpu).expect("known workload")],
+        None => harness::measure_all(scale, &gpu, true).expect("valid figure config"),
     };
     println!("\n{}", harness::fig5_report(&measured));
 }

@@ -18,7 +18,7 @@ use std::time::Instant;
 
 use crate::config::Schedule;
 use crate::engine::pool::ThreadPool;
-use crate::engine::{DisjointSlice, GpuSim};
+use crate::engine::{DisjointSlice, SimBuilder};
 use crate::trace::workloads;
 
 use super::spec::{CampaignSpec, JobSpec};
@@ -138,12 +138,20 @@ impl CampaignReport {
     }
 }
 
-/// Simulate one job at the given effective thread count.
+/// Simulate one job at the given effective thread count (on the session
+/// API; `CampaignSpec::validate` ran before dispatch, so build errors
+/// here are scheduler bugs, not user input).
 fn run_job(spec: &JobSpec, hash: u64, effective_threads: usize) -> JobRecord {
     let gpu = spec.build_gpu().expect("job validated before dispatch");
     let wl = workloads::build(&spec.workload, spec.scale).expect("job validated before dispatch");
-    let mut sim = GpuSim::new(gpu, spec.to_sim_config(effective_threads));
-    let stats = sim.run_workload(&wl);
+    let mut session = SimBuilder::new()
+        .gpu(gpu)
+        .sim(spec.to_sim_config(effective_threads))
+        .workload(wl)
+        .build()
+        .expect("job validated before dispatch");
+    session.run_to_completion().expect("campaign job runs to completion");
+    let stats = session.into_stats().expect("session finished");
     JobRecord::from_stats(spec, hash, &stats)
 }
 

@@ -22,6 +22,7 @@
 
 pub mod costmodel;
 pub mod pool;
+pub mod session;
 
 use std::marker::PhantomData;
 use std::sync::Arc;
@@ -99,6 +100,9 @@ pub struct GpuSim {
     next_cta: u32,
     total_ctas: u32,
     last_issue_sm: usize,
+    /// `gpu_cycle` at the start of the current kernel (set by
+    /// [`Self::start_kernel`]).
+    kernel_start_cycle: u64,
     /// CTA dispatch order of the current kernel (functional replay).
     cta_order: Vec<u32>,
     /// Functional results of GEMM-family kernels (FunctionalMode::Full).
@@ -106,8 +110,26 @@ pub struct GpuSim {
 }
 
 impl GpuSim {
+    /// Construct, panicking on an invalid configuration. Engine-internal
+    /// code and tests may use this; every external driver goes through
+    /// [`session::SimBuilder`], whose `build()` surfaces the same
+    /// validation as a typed [`SimError`] instead.
     pub fn new(gpu: GpuConfig, sim: SimConfig) -> Self {
-        gpu.validate().expect("invalid GPU config");
+        Self::try_new(gpu, sim).unwrap_or_else(|e| panic!("invalid config: {e}"))
+    }
+
+    /// Construct, returning a typed [`SimError`] when the GPU model or
+    /// simulator configuration is invalid.
+    pub fn try_new(gpu: GpuConfig, sim: SimConfig) -> Result<Self, SimError> {
+        if let Err(errors) = gpu.validate() {
+            return Err(SimError::InvalidGpuConfig { gpu: gpu.name.clone(), errors });
+        }
+        if sim.threads == 0 {
+            return Err(SimError::InvalidSimConfig {
+                field: "threads",
+                message: "must be ≥ 1 (1 = the vanilla sequential simulator)".into(),
+            });
+        }
         let shared = Arc::new(SharedLockedStats::new());
         let mut sms: Vec<Sm> = (0..gpu.num_sms).map(|i| Sm::new(i as u32, &gpu)).collect();
         for sm in &mut sms {
@@ -130,7 +152,7 @@ impl GpuSim {
             None
         };
         let n = gpu.num_sms;
-        GpuSim {
+        Ok(GpuSim {
             gpu,
             sim,
             sms,
@@ -146,9 +168,10 @@ impl GpuSim {
             next_cta: 0,
             total_ctas: 0,
             last_issue_sm: 0,
+            kernel_start_cycle: 0,
             cta_order: Vec::new(),
             functional_results: Vec::new(),
-        }
+        })
     }
 
     pub fn gpu_cycle(&self) -> u64 {
@@ -296,8 +319,21 @@ impl GpuSim {
             && self.partitions.iter().all(|p| p.is_idle())
     }
 
-    /// Simulate one kernel launch to completion.
-    pub fn run_kernel(&mut self, kd: &KernelDesc, kernel_id: usize) -> KernelStats {
+    /// Per-kernel cycle guard (deadlock detector bound).
+    pub fn cycle_guard(&self) -> u64 {
+        if self.sim.max_cycles == 0 {
+            500_000_000
+        } else {
+            self.sim.max_cycles
+        }
+    }
+
+    /// Set up a kernel launch: reset per-kernel state/stats and issue the
+    /// first CTA wave. Pair with repeated [`Self::cycle`] calls until
+    /// [`Self::kernel_done`], then [`Self::finish_kernel`].
+    /// [`Self::run_kernel`] composes exactly these three, so a stepped
+    /// session is cycle-for-cycle identical to an uninterrupted run.
+    pub(crate) fn start_kernel(&mut self, kd: &KernelDesc) {
         let arc = Arc::new(kd.clone());
         for sm in &mut self.sms {
             sm.stats.reset();
@@ -316,21 +352,36 @@ impl GpuSim {
         self.total_ctas = kd.grid_ctas;
         self.last_issue_sm = self.sms.len() - 1;
         self.cta_order.clear();
-        let start_cycle = self.gpu_cycle;
-        let guard = if self.sim.max_cycles == 0 { 500_000_000 } else { self.sim.max_cycles };
-
+        self.kernel_start_cycle = self.gpu_cycle;
         self.issue_blocks();
+    }
+
+    /// All CTAs dispatched and every pipeline drained?
+    pub(crate) fn kernel_done(&self) -> bool {
+        self.next_cta >= self.total_ctas && self.all_idle()
+    }
+
+    /// Simulate one kernel launch to completion.
+    pub fn run_kernel(&mut self, kd: &KernelDesc, kernel_id: usize) -> KernelStats {
+        self.start_kernel(kd);
+        let guard = self.cycle_guard();
         loop {
             self.cycle();
-            if self.next_cta >= self.total_ctas && self.all_idle() {
+            if self.kernel_done() {
                 break;
             }
             assert!(
-                self.gpu_cycle - start_cycle < guard,
+                self.gpu_cycle - self.kernel_start_cycle < guard,
                 "kernel {} exceeded {guard} cycles (deadlock?)",
                 kd.name
             );
         }
+        self.finish_kernel(kd, kernel_id)
+    }
+
+    /// Tear down a completed kernel: drain deferred stats, aggregate,
+    /// and (in functional mode) replay the GEMM.
+    pub(crate) fn finish_kernel(&mut self, kd: &KernelDesc, kernel_id: usize) -> KernelStats {
         // final SeqPoint drain (buffers filled in the last parallel phase)
         if self.sim.stats_strategy == StatsStrategy::SeqPoint {
             for i in 0..self.sms.len() {
@@ -341,7 +392,7 @@ impl GpuSim {
             }
         }
 
-        let cycles = self.gpu_cycle - start_cycle;
+        let cycles = self.gpu_cycle - self.kernel_start_cycle;
         let per_sm: Vec<SmStats> = self.sms.iter().map(|s| s.stats.clone()).collect();
         let mem: Vec<MemStats> =
             self.partitions.iter().flat_map(|p| p.collect_stats()).collect();
@@ -372,6 +423,11 @@ impl GpuSim {
                 });
             }
         }
+
+        // between kernels the dispatch window is empty (keeps the
+        // ctas_issued()/total_ctas() observer contract honest)
+        self.next_cta = 0;
+        self.total_ctas = 0;
 
         KernelStats::aggregate(
             &kd.name,
@@ -422,9 +478,60 @@ impl GpuSim {
     pub fn shared_stats(&self) -> &SharedLockedStats {
         &self.shared_stats
     }
+
+    /// CTAs dispatched so far in the current kernel.
+    pub fn ctas_issued(&self) -> u32 {
+        self.next_cta
+    }
+
+    /// Grid size of the current kernel (0 between kernels).
+    pub fn total_ctas(&self) -> u32 {
+        self.total_ctas
+    }
+
+    /// `gpu_cycle` at which the current kernel started.
+    pub fn kernel_start_cycle(&self) -> u64 {
+        self.kernel_start_cycle
+    }
+
+    /// Warp instructions issued so far in the *current* kernel (per-SM
+    /// counters reset at each kernel start). Cheap: O(#SMs).
+    pub fn warp_insts_so_far(&self) -> u64 {
+        self.sms.iter().map(|s| s.stats.warp_insts_issued).sum()
+    }
+
+    /// Deterministic fingerprint of the current mid-kernel statistics
+    /// state: cycle counter, dispatch progress, every per-SM counter,
+    /// and the unique-line state of whichever §3 strategy is active
+    /// (per-SM sets, pending SeqPoint buffers + the global set, or the
+    /// shared-locked set). Two runs of the same configuration paused at
+    /// the same cycle must agree bit-for-bit regardless of thread count
+    /// or schedule — the paper's determinism claim, observable mid-run.
+    pub fn state_fingerprint(&self) -> u64 {
+        let mut h = crate::util::mix2(self.gpu_cycle, self.next_cta as u64);
+        for sm in &self.sms {
+            sm.stats.visit_counters(|_, v| {
+                h = crate::util::mix2(h, v);
+            });
+            h = crate::util::mix2(h, sm.stats.unique_lines.fingerprint());
+            // SeqPoint: addresses observed since the last sequential drain
+            for &addr in &sm.stats.addr_buffer {
+                h = crate::util::mix2(h, addr);
+            }
+        }
+        h = crate::util::mix2(h, self.seqpoint_lines.fingerprint());
+        if self.sim.stats_strategy == StatsStrategy::SharedLocked {
+            h = crate::util::mix2(h, self.shared_stats.unique_lines_fingerprint());
+        }
+        crate::util::mix64(h)
+    }
 }
 
 pub use costmodel::{CostParams, ModelConfig};
+pub use session::{
+    CycleView, Observer, PhaseProfileStreamer, ProgressTicker, SessionFingerprint, SessionStatus,
+    SimBuilder, SimError, SimSession, StatsSampler, StopCondition,
+};
 
 #[cfg(test)]
 mod tests {

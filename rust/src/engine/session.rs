@@ -1,0 +1,931 @@
+//! The public driving API: a **builder-based, steppable, observable
+//! simulation session** that unifies every driver of the simulator (CLI,
+//! figure harness, campaign scheduler, examples, tests).
+//!
+//! The seed design exposed only `GpuSim::new(gpu, sim)` +
+//! `run_workload(&wl)` — construction panicked on invalid configs, the
+//! run loop was opaque (no pausing, no sampling, no early stop), and
+//! eight call sites hand-rolled the same pair. This module replaces that
+//! pattern with:
+//!
+//! * [`SimBuilder`] — fluent configuration (GPU model or preset name,
+//!   workload by value or by `(name, scale)`, threads, schedule, stats
+//!   strategy, functional mode, profiler, cost model, observers), with
+//!   `build() -> Result<SimSession, SimError>`: every invalid input is a
+//!   typed [`SimError`] naming the offending field, never a panic.
+//! * [`SimSession`] — owns the run loop. `step_cycle()` advances one GPU
+//!   cycle (crossing kernel boundaries automatically); `run(cond)` steps
+//!   until a [`StopCondition`] fires — a cycle budget, the next kernel
+//!   boundary, an instruction count, or an arbitrary predicate; a
+//!   finished session yields the familiar [`GpuStats`].
+//! * [`Observer`] — hooks (`on_kernel_start` / `on_cycle` /
+//!   `on_kernel_end` / `on_finish`) fed **from the sequential part of the
+//!   loop**, after the parallel SM phase of each cycle has joined, so
+//!   observation can never perturb the paper's bit-determinism. Built-in
+//!   observers: [`ProgressTicker`], [`StatsSampler`] (periodic JSONL via
+//!   [`crate::stats::export`]), [`PhaseProfileStreamer`].
+//! * [`SimSession::checkpoint`] — a cheap [`SessionFingerprint`] over the
+//!   full mid-run statistics state, for pause/resume bit-identity
+//!   assertions (`tests/session.rs`).
+//!
+//! A stepped session executes *exactly* the same phase sequence as
+//! [`GpuSim::run_kernel`] (which is itself built from the same
+//! `start_kernel` / `cycle` / `finish_kernel` parts), so pausing,
+//! resuming, and observing are guaranteed not to change a single
+//! statistic.
+
+use std::cell::RefCell;
+use std::fmt;
+use std::rc::Rc;
+use std::time::Instant;
+
+use crate::config::{presets, FunctionalMode, GpuConfig, Schedule, SimConfig, StatsStrategy};
+use crate::stats::{GpuStats, KernelStats};
+use crate::trace::workloads::{self, Scale};
+use crate::trace::{KernelDesc, WorkloadSpec};
+use crate::util::{mix2, mix64};
+
+use super::GpuSim;
+
+// ---------------------------------------------------------------------------
+// Errors
+// ---------------------------------------------------------------------------
+
+/// Typed configuration / session errors. Every variant names the thing
+/// that was wrong — these replace the seed's `expect("invalid GPU
+/// config")` / `workloads::build(..).unwrap()` panics.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SimError {
+    /// The GPU model failed [`GpuConfig::validate`].
+    InvalidGpuConfig { gpu: String, errors: Vec<String> },
+    /// A GPU preset name did not resolve via [`presets::by_name`].
+    UnknownGpuPreset { name: String },
+    /// A workload name is not in the Table-2 suite.
+    UnknownWorkload { name: String },
+    /// A [`SimConfig`] field is out of range.
+    InvalidSimConfig { field: &'static str, message: String },
+    /// `SimBuilder::build` was called without a workload.
+    NoWorkload,
+    /// The session already ran to completion.
+    SessionFinished,
+    /// Final statistics were requested before the session finished.
+    SessionNotFinished,
+    /// A kernel exceeded the per-kernel cycle guard (deadlock detector).
+    CycleLimitExceeded { kernel: String, limit: u64 },
+}
+
+impl fmt::Display for SimError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SimError::InvalidGpuConfig { gpu, errors } => {
+                write!(f, "invalid GPU config {gpu:?}: {}", errors.join("; "))
+            }
+            SimError::UnknownGpuPreset { name } => {
+                write!(f, "unknown GPU preset {name:?} (available: {})", presets::names().join(", "))
+            }
+            SimError::UnknownWorkload { name } => {
+                write!(
+                    f,
+                    "unknown workload {name:?} (Table-2 names: {})",
+                    workloads::names().join(", ")
+                )
+            }
+            SimError::InvalidSimConfig { field, message } => {
+                write!(f, "invalid SimConfig: {field} {message}")
+            }
+            SimError::NoWorkload => {
+                write!(f, "SimBuilder::build: no workload set (use .workload()/.workload_named())")
+            }
+            SimError::SessionFinished => {
+                write!(f, "session already finished (read results via stats()/into_stats())")
+            }
+            SimError::SessionNotFinished => {
+                write!(f, "session not finished (run(StopCondition::ToCompletion) first)")
+            }
+            SimError::CycleLimitExceeded { kernel, limit } => {
+                write!(f, "kernel {kernel:?} exceeded {limit} cycles (deadlock?)")
+            }
+        }
+    }
+}
+
+impl std::error::Error for SimError {}
+
+// ---------------------------------------------------------------------------
+// Observers
+// ---------------------------------------------------------------------------
+
+/// Per-cycle view handed to observers and [`StopCondition::Predicate`].
+/// All reads are of sequential-phase state — the parallel SM section of
+/// the cycle has already joined. The counter fields are snapshotted
+/// immediately after the cycle, *before* any kernel-boundary teardown,
+/// so they are consistent with `kernel_id`/`kernel_cycle` even on the
+/// cycle that completes a kernel.
+pub struct CycleView<'a> {
+    /// Global GPU cycle just completed.
+    pub cycle: u64,
+    /// Index of the kernel this cycle simulated.
+    pub kernel_id: usize,
+    pub kernel_name: &'a str,
+    /// Cycles into that kernel.
+    pub kernel_cycle: u64,
+    /// CTAs dispatched so far in that kernel.
+    pub ctas_issued: u32,
+    /// The kernel's grid size.
+    pub total_ctas: u32,
+    /// Warp instructions issued so far in that kernel.
+    pub warp_insts: u64,
+    /// The engine, for ad-hoc reads (the profiler, shared stats, …).
+    /// NOTE: on a kernel-boundary cycle the engine's dispatch window has
+    /// already been torn down — prefer the snapshot fields above for
+    /// progress math.
+    pub sim: &'a GpuSim,
+}
+
+/// Session observation hooks. All methods have empty defaults; implement
+/// only what you need. Hooks are invoked from the session's sequential
+/// driver loop, so they see settled state and cannot perturb results —
+/// `tests/session.rs` asserts fingerprints are identical with and
+/// without observers registered.
+#[allow(unused_variables)]
+pub trait Observer {
+    /// Whether this observer implements [`Self::on_cycle`]. Return
+    /// `false` from boundary-only observers so the session skips the
+    /// per-cycle [`CycleView`] snapshot entirely when nobody reads it.
+    fn wants_cycles(&self) -> bool {
+        true
+    }
+    /// A kernel is about to start (per-kernel state just reset).
+    fn on_kernel_start(&mut self, kernel: &KernelDesc, kernel_id: usize) {}
+    /// One GPU cycle completed (only called when [`Self::wants_cycles`]
+    /// is true for at least one registered observer).
+    fn on_cycle(&mut self, view: &CycleView<'_>) {}
+    /// A kernel completed and its statistics were aggregated.
+    fn on_kernel_end(&mut self, stats: &KernelStats, sim: &GpuSim) {}
+    /// The whole workload completed.
+    fn on_finish(&mut self, stats: &GpuStats) {}
+}
+
+/// Built-in observer: a coarse progress line on stderr every `every`
+/// kernel cycles (`parsim run` wires this to `--progress-every`).
+pub struct ProgressTicker {
+    every: u64,
+}
+
+impl ProgressTicker {
+    pub fn new(every: u64) -> Self {
+        ProgressTicker { every: every.max(1) }
+    }
+}
+
+impl Observer for ProgressTicker {
+    fn on_cycle(&mut self, v: &CycleView<'_>) {
+        if v.kernel_cycle % self.every == 0 {
+            eprintln!(
+                "[parsim] cycle {} | kernel {} ({}) +{} cyc | CTAs {}/{} | warp-insts {}",
+                v.cycle,
+                v.kernel_id,
+                v.kernel_name,
+                v.kernel_cycle,
+                v.ctas_issued,
+                v.total_ctas,
+                v.warp_insts
+            );
+        }
+    }
+}
+
+/// Built-in observer: every `every` kernel cycles, emit one flat JSONL
+/// record ([`crate::stats::export::cycle_sample_jsonl`]) of the run's
+/// progress counters — a mid-flight time series of the simulation, in
+/// the same stable record format as the campaign store. Each sample is
+/// formatted once and delivered to stdout, a shared buffer, or both.
+pub struct StatsSampler {
+    every: u64,
+    /// Echo each record to stdout as it is produced.
+    echo: bool,
+    /// Collect records into a shared buffer (readable after the sampler
+    /// is boxed into the session).
+    buf: Option<Rc<RefCell<Vec<String>>>>,
+}
+
+impl StatsSampler {
+    /// Stream samples to stdout only (`parsim run --sample-every N`).
+    pub fn streaming(every: u64) -> Self {
+        StatsSampler { every: every.max(1), echo: true, buf: None }
+    }
+
+    /// Collect samples into a shared buffer only.
+    pub fn shared(every: u64) -> (Self, Rc<RefCell<Vec<String>>>) {
+        let buf = Rc::new(RefCell::new(Vec::new()));
+        (StatsSampler { every: every.max(1), echo: false, buf: Some(buf.clone()) }, buf)
+    }
+
+    /// Stream to stdout *and* collect (the CLI's `--sample-every` +
+    /// `--export-dir` combination) — one observer, one format pass.
+    pub fn shared_streaming(every: u64) -> (Self, Rc<RefCell<Vec<String>>>) {
+        let buf = Rc::new(RefCell::new(Vec::new()));
+        (StatsSampler { every: every.max(1), echo: true, buf: Some(buf.clone()) }, buf)
+    }
+}
+
+impl Observer for StatsSampler {
+    fn on_cycle(&mut self, v: &CycleView<'_>) {
+        if v.kernel_cycle % self.every != 0 {
+            return;
+        }
+        let line = crate::stats::export::cycle_sample_jsonl(
+            v.cycle,
+            v.kernel_id as u64,
+            v.kernel_name,
+            v.kernel_cycle,
+            v.ctas_issued as u64,
+            v.total_ctas as u64,
+            v.warp_insts,
+        );
+        if self.echo {
+            println!("{line}");
+        }
+        if let Some(buf) = &self.buf {
+            buf.borrow_mut().push(line);
+        }
+    }
+}
+
+/// Built-in observer: after each kernel, stream the cumulative Fig-4
+/// phase breakdown to stderr (requires the profiler — build with
+/// `.profile(true)`; silent otherwise).
+#[derive(Default)]
+pub struct PhaseProfileStreamer;
+
+impl PhaseProfileStreamer {
+    pub fn new() -> Self {
+        Self
+    }
+}
+
+impl Observer for PhaseProfileStreamer {
+    fn wants_cycles(&self) -> bool {
+        false // kernel-boundary only; skip the per-cycle snapshot
+    }
+
+    fn on_kernel_end(&mut self, stats: &KernelStats, sim: &GpuSim) {
+        if let Some(pct) = sim.profiler.percentages() {
+            let sm = pct[crate::profiler::Phase::SmCycle as usize];
+            eprintln!(
+                "[profile] kernel {} ({}): {} cycles, SM phase {sm:.1}% of sampled time so far",
+                stats.kernel_id, stats.name, stats.cycles
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Stop conditions
+// ---------------------------------------------------------------------------
+
+/// When should [`SimSession::run`] hand control back?
+pub enum StopCondition {
+    /// Run the whole workload to completion.
+    ToCompletion,
+    /// Pause after at most this many further GPU cycles.
+    CycleBudget(u64),
+    /// Pause at the next kernel boundary (after its stats aggregate).
+    KernelBoundary,
+    /// Pause once the workload has issued at least this many warp
+    /// instructions in total.
+    InstructionCount(u64),
+    /// Pause when the predicate returns `true` for the just-completed
+    /// cycle.
+    Predicate(Box<dyn FnMut(&CycleView<'_>) -> bool>),
+}
+
+impl StopCondition {
+    /// Convenience constructor for [`StopCondition::Predicate`].
+    pub fn predicate(f: impl FnMut(&CycleView<'_>) -> bool + 'static) -> Self {
+        StopCondition::Predicate(Box::new(f))
+    }
+}
+
+impl fmt::Debug for StopCondition {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            StopCondition::ToCompletion => write!(f, "ToCompletion"),
+            StopCondition::CycleBudget(n) => write!(f, "CycleBudget({n})"),
+            StopCondition::KernelBoundary => write!(f, "KernelBoundary"),
+            StopCondition::InstructionCount(n) => write!(f, "InstructionCount({n})"),
+            StopCondition::Predicate(_) => write!(f, "Predicate(..)"),
+        }
+    }
+}
+
+/// Where a [`SimSession::run`] / [`SimSession::step_cycle`] left the
+/// session.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SessionStatus {
+    /// Paused with work remaining — call `run`/`step_cycle` again.
+    Running,
+    /// The workload completed; [`SimSession::stats`] is available.
+    Finished,
+}
+
+/// A cheap mid-run checkpoint for bit-identity assertions: two sessions
+/// of the same configuration paused at the same cycle must produce equal
+/// fingerprints, for any thread count and schedule.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SessionFingerprint {
+    /// Global GPU cycle at checkpoint time.
+    pub cycle: u64,
+    /// Kernels fully completed so far.
+    pub kernels_completed: usize,
+    /// Mix of completed-kernel fingerprints + the live mid-kernel
+    /// statistics state ([`GpuSim::state_fingerprint`]).
+    pub hash: u64,
+}
+
+// ---------------------------------------------------------------------------
+// Builder
+// ---------------------------------------------------------------------------
+
+/// Fluent, non-panicking session configuration. Defaults: the paper's
+/// RTX 3080 Ti model, [`SimConfig::default`] (single-threaded vanilla
+/// simulator), no observers — only the workload is mandatory.
+#[derive(Default)]
+pub struct SimBuilder {
+    gpu: Option<GpuConfig>,
+    gpu_preset: Option<String>,
+    sim: SimConfig,
+    workload: Option<WorkloadSpec>,
+    workload_name: Option<(String, Scale)>,
+    observers: Vec<Box<dyn Observer>>,
+}
+
+impl SimBuilder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// The modelled GPU, by value (wins over [`Self::gpu_preset`]).
+    pub fn gpu(mut self, gpu: GpuConfig) -> Self {
+        self.gpu = Some(gpu);
+        self
+    }
+
+    /// The modelled GPU, by preset name (resolved at `build`; an unknown
+    /// name becomes [`SimError::UnknownGpuPreset`]).
+    pub fn gpu_preset(mut self, name: impl Into<String>) -> Self {
+        self.gpu_preset = Some(name.into());
+        self
+    }
+
+    /// Replace the whole simulator configuration at once. Field setters
+    /// ([`Self::threads`] etc.) apply on top, in call order.
+    pub fn sim(mut self, sim: SimConfig) -> Self {
+        self.sim = sim;
+        self
+    }
+
+    /// The workload to simulate, by value (wins over
+    /// [`Self::workload_named`]).
+    pub fn workload(mut self, wl: WorkloadSpec) -> Self {
+        self.workload = Some(wl);
+        self
+    }
+
+    /// The workload, by Table-2 name and scale (resolved at `build`; an
+    /// unknown name becomes [`SimError::UnknownWorkload`]).
+    pub fn workload_named(mut self, name: impl Into<String>, scale: Scale) -> Self {
+        self.workload_name = Some((name.into(), scale));
+        self
+    }
+
+    /// Worker threads for the parallel SM section (1 = sequential).
+    pub fn threads(mut self, threads: usize) -> Self {
+        self.sim.threads = threads;
+        self
+    }
+
+    /// OpenMP-style schedule of the parallel SM section.
+    pub fn schedule(mut self, schedule: Schedule) -> Self {
+        self.sim.schedule = schedule;
+        self
+    }
+
+    /// §3 statistics-isolation strategy.
+    pub fn stats_strategy(mut self, strategy: StatsStrategy) -> Self {
+        self.sim.stats_strategy = strategy;
+        self
+    }
+
+    /// Timing-only vs timing+functional-replay execution.
+    pub fn functional(mut self, mode: FunctionalMode) -> Self {
+        self.sim.functional = mode;
+        self
+    }
+
+    /// Per-kernel cycle guard (0 = the engine default).
+    pub fn max_cycles(mut self, max_cycles: u64) -> Self {
+        self.sim.max_cycles = max_cycles;
+        self
+    }
+
+    /// Enable the per-phase profiler (Fig 4).
+    pub fn profile(mut self, on: bool) -> Self {
+        self.sim.profile = on;
+        self
+    }
+
+    /// Profiler sampling period (1 = every cycle).
+    pub fn profile_sample(mut self, every: u64) -> Self {
+        self.sim.profile_sample = every;
+        self
+    }
+
+    /// Enable the Fig-5/6 cost model (records per-SM per-cycle work).
+    pub fn measure_work(mut self, on: bool) -> Self {
+        self.sim.measure_work = on;
+        self
+    }
+
+    /// The run's [`SimConfig::seed`]. Carried in the configuration and
+    /// folded into campaign job identity; today's procedural workload
+    /// generators derive their per-kernel seeds from `(name, scale)`
+    /// alone, so changing this does not alter a generated workload.
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.sim.seed = seed;
+        self
+    }
+
+    /// Register an observer (repeatable; invoked in registration order).
+    pub fn observer(mut self, obs: impl Observer + 'static) -> Self {
+        self.observers.push(Box::new(obs));
+        self
+    }
+
+    /// Validate everything and construct the session. Never panics.
+    pub fn build(self) -> Result<SimSession, SimError> {
+        let gpu = match (self.gpu, self.gpu_preset) {
+            (Some(gpu), _) => gpu,
+            (None, Some(name)) => presets::by_name(&name)
+                .ok_or(SimError::UnknownGpuPreset { name })?,
+            (None, None) => GpuConfig::rtx3080ti(),
+        };
+        let workload = match (self.workload, self.workload_name) {
+            (Some(wl), _) => wl,
+            (None, Some((name, scale))) => workloads::build(&name, scale)
+                .ok_or(SimError::UnknownWorkload { name })?,
+            (None, None) => return Err(SimError::NoWorkload),
+        };
+        if workload.kernels.is_empty() {
+            return Err(SimError::InvalidSimConfig {
+                field: "workload",
+                message: format!("workload {:?} has no kernels", workload.name),
+            });
+        }
+        let sim = GpuSim::try_new(gpu, self.sim)?;
+        let cycle_observers = self.observers.iter().any(|o| o.wants_cycles());
+        Ok(SimSession {
+            sim,
+            workload,
+            observers: self.observers,
+            kernel_idx: 0,
+            in_kernel: false,
+            completed: Vec::new(),
+            wall_s: 0.0,
+            finished: None,
+            last_snap: StepSnapshot::default(),
+            cycle_observers,
+            completed_warp_insts: 0,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Session
+// ---------------------------------------------------------------------------
+
+/// Counters captured right after a cycle, before any kernel-boundary
+/// teardown — the consistent source for [`CycleView`]s.
+#[derive(Clone, Copy, Default)]
+struct StepSnapshot {
+    cycle: u64,
+    kernel_id: usize,
+    kernel_cycle: u64,
+    ctas_issued: u32,
+    total_ctas: u32,
+    warp_insts: u64,
+}
+
+/// Build a [`CycleView`] from a snapshot — a free function over the
+/// individual session fields so callers keep disjoint field borrows
+/// (observer dispatch needs `&mut observers` alongside the view).
+fn snap_view<'a>(
+    snap: &StepSnapshot,
+    workload: &'a WorkloadSpec,
+    sim: &'a GpuSim,
+) -> CycleView<'a> {
+    CycleView {
+        cycle: snap.cycle,
+        kernel_id: snap.kernel_id,
+        kernel_name: &workload.kernels[snap.kernel_id].name,
+        kernel_cycle: snap.kernel_cycle,
+        ctas_issued: snap.ctas_issued,
+        total_ctas: snap.total_ctas,
+        warp_insts: snap.warp_insts,
+        sim,
+    }
+}
+
+/// A configured, steppable simulation of one workload. See the module
+/// docs for the life cycle; obtain one from [`SimBuilder::build`].
+pub struct SimSession {
+    sim: GpuSim,
+    workload: WorkloadSpec,
+    observers: Vec<Box<dyn Observer>>,
+    /// Index of the current (or next, when `!in_kernel`) kernel.
+    kernel_idx: usize,
+    in_kernel: bool,
+    completed: Vec<KernelStats>,
+    /// Accumulated simulating wall-clock (pauses excluded).
+    wall_s: f64,
+    finished: Option<GpuStats>,
+    /// Snapshot of the last stepped cycle (valid when observers ran or a
+    /// predicate condition requested it).
+    last_snap: StepSnapshot,
+    /// Any registered observer with a live `on_cycle` (computed once at
+    /// build; gates the per-cycle snapshot + dispatch).
+    cycle_observers: bool,
+    /// Warp instructions of all *completed* kernels (kept incrementally
+    /// so instruction-count stop checks are O(#SMs), not O(kernels)).
+    completed_warp_insts: u64,
+}
+
+impl SimSession {
+    /// Advance the simulation by (at most) one GPU cycle, crossing
+    /// kernel boundaries automatically. Returns
+    /// [`SessionStatus::Finished`] on the cycle that completes the last
+    /// kernel; erring with [`SimError::SessionFinished`] after that.
+    pub fn step_cycle(&mut self) -> Result<SessionStatus, SimError> {
+        let t0 = Instant::now();
+        let r = self.step_inner(false);
+        self.wall_s += t0.elapsed().as_secs_f64();
+        if matches!(r, Ok(SessionStatus::Finished)) {
+            self.finalize();
+        }
+        r
+    }
+
+    /// One cycle of the state machine. Does NOT touch the wall-clock and
+    /// does NOT finalize — callers accumulate time and call
+    /// [`Self::finalize`] on `Finished` (so the hot `run` loop pays two
+    /// clock reads per *slice*, not per cycle, and `sim_wallclock_s`
+    /// stays comparable to the seed's once-per-workload timing).
+    /// `want_snapshot` forces capturing [`StepSnapshot`] even without
+    /// observers (predicate stop conditions read it).
+    fn step_inner(&mut self, want_snapshot: bool) -> Result<SessionStatus, SimError> {
+        if self.finished.is_some() {
+            return Err(SimError::SessionFinished);
+        }
+        if !self.in_kernel {
+            self.sim.start_kernel(&self.workload.kernels[self.kernel_idx]);
+            for obs in &mut self.observers {
+                obs.on_kernel_start(&self.workload.kernels[self.kernel_idx], self.kernel_idx);
+            }
+            self.in_kernel = true;
+        }
+        self.sim.cycle();
+        // capture counters before any kernel-boundary teardown below, so
+        // views stay self-consistent on the kernel's final cycle
+        if want_snapshot || self.cycle_observers {
+            self.last_snap = StepSnapshot {
+                cycle: self.sim.gpu_cycle(),
+                kernel_id: self.kernel_idx,
+                kernel_cycle: self.sim.gpu_cycle() - self.sim.kernel_start_cycle(),
+                ctas_issued: self.sim.ctas_issued(),
+                total_ctas: self.sim.total_ctas(),
+                warp_insts: self.sim.warp_insts_so_far(),
+            };
+        }
+        if self.cycle_observers {
+            let view = snap_view(&self.last_snap, &self.workload, &self.sim);
+            for obs in &mut self.observers {
+                obs.on_cycle(&view);
+            }
+        }
+        if self.sim.kernel_done() {
+            let ks =
+                self.sim.finish_kernel(&self.workload.kernels[self.kernel_idx], self.kernel_idx);
+            for obs in &mut self.observers {
+                obs.on_kernel_end(&ks, &self.sim);
+            }
+            self.completed_warp_insts += ks.sm.warp_insts_issued;
+            self.completed.push(ks);
+            self.in_kernel = false;
+            self.kernel_idx += 1;
+            if self.kernel_idx == self.workload.kernels.len() {
+                return Ok(SessionStatus::Finished);
+            }
+        } else {
+            let guard = self.sim.cycle_guard();
+            if self.sim.gpu_cycle() - self.sim.kernel_start_cycle() >= guard {
+                return Err(SimError::CycleLimitExceeded {
+                    kernel: self.workload.kernels[self.kernel_idx].name.clone(),
+                    limit: guard,
+                });
+            }
+        }
+        Ok(SessionStatus::Running)
+    }
+
+    /// Aggregate the final [`GpuStats`] — the exact mirror of the seed's
+    /// `GpuSim::run_workload` epilogue (cost-model calibration included).
+    fn finalize(&mut self) {
+        let kernels = std::mem::take(&mut self.completed);
+        let total_gpu_cycles = kernels.iter().map(|k| k.cycles).sum();
+        let mut stats = GpuStats {
+            workload: self.workload.name.clone(),
+            kernels,
+            sim_wallclock_s: self.wall_s,
+            sm_section_s: self.sim.profiler.sm_section_s(),
+            total_gpu_cycles,
+        };
+        if let Some(cm) = &mut self.sim.cost_model {
+            if stats.sm_section_s > 0.0 {
+                cm.calibrate(stats.sm_section_s * 1e9);
+            }
+        }
+        if stats.sm_section_s == 0.0 {
+            stats.sm_section_s = stats.sim_wallclock_s;
+        }
+        for obs in &mut self.observers {
+            obs.on_finish(&stats);
+        }
+        self.finished = Some(stats);
+    }
+
+    /// Step until `cond` fires or the workload completes. Calling `run`
+    /// on a finished session returns [`SessionStatus::Finished`]
+    /// immediately (it is not an error, unlike stepping one).
+    pub fn run(&mut self, mut cond: StopCondition) -> Result<SessionStatus, SimError> {
+        if self.finished.is_some() {
+            return Ok(SessionStatus::Finished);
+        }
+        let t0 = Instant::now();
+        let r = self.run_unclocked(&mut cond);
+        self.wall_s += t0.elapsed().as_secs_f64();
+        if matches!(r, Ok(SessionStatus::Finished)) {
+            self.finalize();
+        }
+        r
+    }
+
+    fn run_unclocked(&mut self, cond: &mut StopCondition) -> Result<SessionStatus, SimError> {
+        let start_cycle = self.sim.gpu_cycle();
+        let want_snapshot = matches!(*cond, StopCondition::Predicate(_));
+        loop {
+            // state-based conditions are checked *before* stepping, so an
+            // already-satisfied budget (e.g. CycleBudget(0), or an
+            // instruction count the session passed earlier) pauses
+            // without consuming a cycle
+            let already_met = match &*cond {
+                StopCondition::CycleBudget(n) => self.sim.gpu_cycle() - start_cycle >= *n,
+                StopCondition::InstructionCount(n) => self.total_warp_insts_so_far() >= *n,
+                _ => false,
+            };
+            if already_met {
+                return Ok(SessionStatus::Running);
+            }
+            // the kernel this step simulates (kernel_idx may advance past
+            // it when the step completes the kernel)
+            let stepped_kernel = self.kernel_idx;
+            if self.step_inner(want_snapshot)? == SessionStatus::Finished {
+                return Ok(SessionStatus::Finished);
+            }
+            let stop = match &mut *cond {
+                StopCondition::ToCompletion
+                | StopCondition::CycleBudget(_)
+                | StopCondition::InstructionCount(_) => false,
+                StopCondition::KernelBoundary => self.kernel_idx != stepped_kernel,
+                StopCondition::Predicate(f) => {
+                    // the snapshot was taken before any kernel-boundary
+                    // teardown, so the view is self-consistent even on a
+                    // kernel's final cycle
+                    f(&snap_view(&self.last_snap, &self.workload, &self.sim))
+                }
+            };
+            if stop {
+                return Ok(SessionStatus::Running);
+            }
+        }
+    }
+
+    /// Run the whole workload to completion (resumable: fine to call
+    /// after any number of paused `run`/`step_cycle` calls).
+    pub fn run_to_completion(&mut self) -> Result<(), SimError> {
+        self.run(StopCondition::ToCompletion).map(|_| ())
+    }
+
+    /// Run until the next kernel boundary.
+    pub fn run_kernel(&mut self) -> Result<SessionStatus, SimError> {
+        self.run(StopCondition::KernelBoundary)
+    }
+
+    /// Warp instructions issued so far across the whole session
+    /// (completed kernels + the in-flight one). O(#SMs): the completed
+    /// portion is maintained incrementally.
+    pub fn total_warp_insts_so_far(&self) -> u64 {
+        if self.in_kernel {
+            self.completed_warp_insts + self.sim.warp_insts_so_far()
+        } else {
+            self.completed_warp_insts
+        }
+    }
+
+    /// Cheap deterministic checkpoint of the session's statistics state
+    /// (see [`SessionFingerprint`]).
+    pub fn checkpoint(&self) -> SessionFingerprint {
+        let mut h = 0x5e55_10f9_c4ec_4a17u64;
+        match &self.finished {
+            Some(stats) => {
+                for k in &stats.kernels {
+                    h = mix2(h, k.fingerprint());
+                }
+            }
+            None => {
+                for k in &self.completed {
+                    h = mix2(h, k.fingerprint());
+                }
+            }
+        }
+        h = mix2(h, self.sim.state_fingerprint());
+        SessionFingerprint {
+            cycle: self.sim.gpu_cycle(),
+            kernels_completed: self.kernels_completed(),
+            hash: mix64(h),
+        }
+    }
+
+    /// Kernels fully completed so far.
+    pub fn kernels_completed(&self) -> usize {
+        match &self.finished {
+            Some(stats) => stats.kernels.len(),
+            None => self.completed.len(),
+        }
+    }
+
+    /// Index of the kernel currently (or next) being simulated.
+    pub fn kernel_index(&self) -> usize {
+        self.kernel_idx
+    }
+
+    /// Global GPU cycle counter.
+    pub fn gpu_cycle(&self) -> u64 {
+        self.sim.gpu_cycle()
+    }
+
+    pub fn is_finished(&self) -> bool {
+        self.finished.is_some()
+    }
+
+    /// The workload being simulated.
+    pub fn workload(&self) -> &WorkloadSpec {
+        &self.workload
+    }
+
+    /// The underlying engine (profiler, functional results, shared
+    /// stats, …).
+    pub fn sim(&self) -> &GpuSim {
+        &self.sim
+    }
+
+    /// Mutable engine access (e.g. `cost_model.take()` after a
+    /// measurement run).
+    pub fn sim_mut(&mut self) -> &mut GpuSim {
+        &mut self.sim
+    }
+
+    /// Final statistics, once finished.
+    pub fn stats(&self) -> Option<&GpuStats> {
+        self.finished.as_ref()
+    }
+
+    /// Consume the session, yielding the final statistics.
+    pub fn into_stats(self) -> Result<GpuStats, SimError> {
+        self.finished.ok_or(SimError::SessionNotFinished)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn nn_session(threads: usize) -> SimSession {
+        SimBuilder::new()
+            .gpu(GpuConfig::tiny())
+            .workload_named("nn", Scale::Ci)
+            .threads(threads)
+            .build()
+            .expect("valid config")
+    }
+
+    #[test]
+    fn build_rejects_unknown_workload_naming_it() {
+        let err = SimBuilder::new()
+            .gpu(GpuConfig::tiny())
+            .workload_named("knn", Scale::Ci)
+            .build()
+            .unwrap_err();
+        assert_eq!(err, SimError::UnknownWorkload { name: "knn".into() });
+        assert!(err.to_string().contains("knn"), "message names the workload");
+        assert!(err.to_string().contains("hotspot"), "message lists valid names");
+    }
+
+    #[test]
+    fn build_rejects_invalid_gpu_with_field_names() {
+        let mut gpu = GpuConfig::tiny();
+        gpu.num_sms = 0;
+        let err = SimBuilder::new()
+            .gpu(gpu)
+            .workload_named("nn", Scale::Ci)
+            .build()
+            .unwrap_err();
+        match &err {
+            SimError::InvalidGpuConfig { gpu, errors } => {
+                assert_eq!(gpu, "TinyTestGpu");
+                assert!(errors.iter().any(|e| e.contains("num_sms")), "{errors:?}");
+            }
+            other => panic!("wrong error: {other:?}"),
+        }
+        assert!(err.to_string().contains("num_sms"));
+    }
+
+    #[test]
+    fn build_rejects_unknown_preset_and_zero_threads_and_no_workload() {
+        let err = SimBuilder::new()
+            .gpu_preset("warp9")
+            .workload_named("nn", Scale::Ci)
+            .build()
+            .unwrap_err();
+        assert_eq!(err, SimError::UnknownGpuPreset { name: "warp9".into() });
+
+        let err = nn_builder_threads(0).build().unwrap_err();
+        assert!(matches!(err, SimError::InvalidSimConfig { field: "threads", .. }));
+
+        let err = SimBuilder::new().gpu(GpuConfig::tiny()).build().unwrap_err();
+        assert_eq!(err, SimError::NoWorkload);
+    }
+
+    fn nn_builder_threads(threads: usize) -> SimBuilder {
+        SimBuilder::new()
+            .gpu(GpuConfig::tiny())
+            .workload_named("nn", Scale::Ci)
+            .threads(threads)
+    }
+
+    #[test]
+    fn session_matches_run_workload_exactly() {
+        // the session's stepped loop vs the engine's own run loop
+        let wl = workloads::build("nn", Scale::Ci).unwrap();
+        let mut gs = GpuSim::new(GpuConfig::tiny(), SimConfig::default());
+        let direct = gs.run_workload(&wl);
+
+        let mut session = nn_session(1);
+        session.run_to_completion().unwrap();
+        let via_session = session.into_stats().unwrap();
+        assert_eq!(direct.fingerprint(), via_session.fingerprint());
+        assert_eq!(direct.total_cycles(), via_session.total_cycles());
+        assert_eq!(direct.kernels.len(), via_session.kernels.len());
+    }
+
+    #[test]
+    fn step_cycle_advances_one_cycle_and_errors_after_finish() {
+        let mut s = nn_session(1);
+        assert_eq!(s.gpu_cycle(), 0);
+        s.step_cycle().unwrap();
+        assert_eq!(s.gpu_cycle(), 1);
+        s.run_to_completion().unwrap();
+        assert!(s.is_finished());
+        assert_eq!(s.step_cycle().unwrap_err(), SimError::SessionFinished);
+        // run() on a finished session is a no-op, not an error
+        assert_eq!(s.run(StopCondition::CycleBudget(5)).unwrap(), SessionStatus::Finished);
+    }
+
+    #[test]
+    fn stop_conditions_pause_where_promised() {
+        let mut s = nn_session(1);
+        assert_eq!(s.run(StopCondition::CycleBudget(10)).unwrap(), SessionStatus::Running);
+        assert_eq!(s.gpu_cycle(), 10);
+        assert!(s.stats().is_none());
+
+        assert_eq!(
+            s.run(StopCondition::predicate(|v| v.cycle >= 25)).unwrap(),
+            SessionStatus::Running
+        );
+        assert_eq!(s.gpu_cycle(), 25);
+
+        let mut s = nn_session(1);
+        assert_eq!(s.run(StopCondition::InstructionCount(1)).unwrap(), SessionStatus::Running);
+        assert!(s.total_warp_insts_so_far() >= 1);
+        s.run_to_completion().unwrap();
+    }
+}

@@ -18,9 +18,9 @@ use std::time::Instant;
 
 use crate::campaign::run_ordered;
 
-use crate::config::{presets::Testbed, GpuConfig, Schedule, SimConfig, StatsStrategy};
+use crate::config::{presets::Testbed, GpuConfig, Schedule, StatsStrategy};
 use crate::engine::costmodel::CostModel;
-use crate::engine::GpuSim;
+use crate::engine::{SimBuilder, SimError};
 use crate::stats::GpuStats;
 use crate::trace::workloads::{self, Scale};
 use crate::util::{geomean, pearson};
@@ -55,20 +55,26 @@ impl Measured {
     }
 }
 
-/// Run one workload sequentially with work measurement enabled.
-pub fn measure_workload(name: &str, scale: Scale, gpu: &GpuConfig) -> Measured {
-    let wl = workloads::build(name, scale)
-        .unwrap_or_else(|| panic!("unknown workload {name}"));
-    let sim = SimConfig { threads: 1, measure_work: true, ..SimConfig::default() };
-    let mut gs = GpuSim::new(gpu.clone(), sim);
-    let stats = gs.run_workload(&wl);
+/// Run one workload sequentially with work measurement enabled. An
+/// unknown workload name or invalid GPU model is a typed [`SimError`]
+/// naming the offender, not a panic.
+pub fn measure_workload(name: &str, scale: Scale, gpu: &GpuConfig) -> Result<Measured, SimError> {
+    let mut session = SimBuilder::new()
+        .gpu(gpu.clone())
+        .workload_named(name, scale)
+        .threads(1)
+        .measure_work(true)
+        .build()?;
+    session.run_to_completion()?;
     // Serial section from the *profiler's phase sum* — NOT wallclock minus
     // SM section: wallclock includes the cost model's own per-cycle
     // recording overhead, which exists only in measurement runs and must
     // not be attributed to the simulator's serial phases.
-    let serial_ns = (gs.profiler.total_s() - gs.profiler.sm_section_s()).max(0.0) * 1e9;
-    let cost = gs.cost_model.take().expect("measure_work enabled");
-    Measured { name: name.to_string(), stats, cost, serial_ns }
+    let prof = &session.sim().profiler;
+    let serial_ns = (prof.total_s() - prof.sm_section_s()).max(0.0) * 1e9;
+    let cost = session.sim_mut().cost_model.take().expect("measure_work enabled");
+    let stats = session.into_stats()?;
+    Ok(Measured { name: name.to_string(), stats, cost, serial_ns })
 }
 
 /// Measure every Table-2 workload (the shared substrate of Fig 1/5/6).
@@ -76,13 +82,13 @@ pub fn measure_workload(name: &str, scale: Scale, gpu: &GpuConfig) -> Measured {
 /// Each workload is one campaign job: the 19 measurement runs execute
 /// concurrently on the campaign scheduler and are aggregated in Table-2
 /// order, so reports are laid out identically to the old serial loop.
-pub fn measure_all(scale: Scale, gpu: &GpuConfig, progress: bool) -> Vec<Measured> {
+pub fn measure_all(scale: Scale, gpu: &GpuConfig, progress: bool) -> Result<Vec<Measured>, SimError> {
     let names = workloads::names();
     let workers = crate::campaign::harness_measure_workers();
     run_ordered(names.len(), workers, |i| {
         let n = names[i];
         let t0 = Instant::now();
-        let m = measure_workload(n, scale, gpu);
+        let m = measure_workload(n, scale, gpu)?;
         if progress {
             eprintln!(
                 "[measure] {n}: {:.2}s wall, {} cycles, {} warp-insts",
@@ -91,8 +97,10 @@ pub fn measure_all(scale: Scale, gpu: &GpuConfig, progress: bool) -> Vec<Measure
                 m.stats.total_warp_insts()
             );
         }
-        m
+        Ok(m)
     })
+    .into_iter()
+    .collect()
 }
 
 // ---------------------------------------------------------------------------
@@ -107,25 +115,28 @@ pub struct Fig1Row {
     pub rate: f64,
 }
 
-pub fn fig1(scale: Scale, gpu: &GpuConfig, progress: bool) -> Vec<Fig1Row> {
+pub fn fig1(scale: Scale, gpu: &GpuConfig, progress: bool) -> Result<Vec<Fig1Row>, SimError> {
     let names = workloads::names();
     let workers = crate::campaign::harness_measure_workers();
     run_ordered(names.len(), workers, |i| {
         let n = names[i];
-        let wl = workloads::build(n, scale).unwrap();
-        let mut gs = GpuSim::new(gpu.clone(), SimConfig::default());
-        let stats = gs.run_workload(&wl);
+        let mut session =
+            SimBuilder::new().gpu(gpu.clone()).workload_named(n, scale).build()?;
+        session.run_to_completion()?;
+        let stats = session.into_stats()?;
         if progress {
             eprintln!("[fig1] {n}: {:.2}s", stats.sim_wallclock_s);
         }
-        Fig1Row {
+        Ok(Fig1Row {
             name: n.to_string(),
             seconds: stats.sim_wallclock_s,
             cycles: stats.total_cycles(),
             warp_insts: stats.total_warp_insts(),
             rate: stats.sim_rate(),
-        }
+        })
     })
+    .into_iter()
+    .collect()
 }
 
 pub fn fig1_report(rows: &[Fig1Row], scale: Scale) -> String {
@@ -166,21 +177,25 @@ pub fn fig1_report(rows: &[Fig1Row], scale: Scale) -> String {
 // Figure 4 — per-phase profile (hotspot)
 // ---------------------------------------------------------------------------
 
-pub fn fig4(workload: &str, scale: Scale, gpu: &GpuConfig) -> (String, f64) {
-    let wl = workloads::build(workload, scale).unwrap();
-    let sim = SimConfig { threads: 1, profile: true, profile_sample: 4, ..SimConfig::default() };
-    let mut gs = GpuSim::new(gpu.clone(), sim);
-    let _ = gs.run_workload(&wl);
-    let sm_pct = gs
-        .profiler
+pub fn fig4(workload: &str, scale: Scale, gpu: &GpuConfig) -> Result<(String, f64), SimError> {
+    let mut session = SimBuilder::new()
+        .gpu(gpu.clone())
+        .workload_named(workload, scale)
+        .threads(1)
+        .profile(true)
+        .profile_sample(4)
+        .build()?;
+    session.run_to_completion()?;
+    let profiler = &session.sim().profiler;
+    let sm_pct = profiler
         .percentages()
         .map(|p| p[crate::profiler::Phase::SmCycle as usize])
         .unwrap_or(0.0);
     let mut report = format!(
         "Figure 4 — cycle-loop profile of `{workload}` (paper: SM cycles ≳ 93%)\n\n"
     );
-    report.push_str(&gs.profiler.report());
-    (report, sm_pct)
+    report.push_str(&profiler.report());
+    Ok((report, sm_pct))
 }
 
 // ---------------------------------------------------------------------------
@@ -340,6 +355,8 @@ pub fn fig7_report(scale: Scale) -> String {
 /// Wall-clock of a real run at `threads`/`schedule` — on a multi-core
 /// host this measures actual parallel speed-up; on this 1-core container
 /// it demonstrates correctness (and is used by the determinism tests).
+/// Bad inputs (unknown workload, invalid GPU, 0 threads) surface as
+/// typed [`SimError`]s.
 pub fn real_run(
     name: &str,
     scale: Scale,
@@ -347,11 +364,16 @@ pub fn real_run(
     threads: usize,
     schedule: Schedule,
     strategy: StatsStrategy,
-) -> GpuStats {
-    let wl = workloads::build(name, scale).unwrap();
-    let sim = SimConfig { threads, schedule, stats_strategy: strategy, ..SimConfig::default() };
-    let mut gs = GpuSim::new(gpu.clone(), sim);
-    gs.run_workload(&wl)
+) -> Result<GpuStats, SimError> {
+    let mut session = SimBuilder::new()
+        .gpu(gpu.clone())
+        .workload_named(name, scale)
+        .threads(threads)
+        .schedule(schedule)
+        .stats_strategy(strategy)
+        .build()?;
+    session.run_to_completion()?;
+    session.into_stats()
 }
 
 // ---------------------------------------------------------------------------
@@ -410,7 +432,7 @@ mod tests {
     fn measure_and_figures_smoke_on_tiny() {
         // Use the tiny GPU + CI scale for a fast end-to-end harness check.
         let gpu = GpuConfig::tiny();
-        let m = measure_workload("nn", Scale::Ci, &gpu);
+        let m = measure_workload("nn", Scale::Ci, &gpu).expect("nn is in Table 2");
         assert!(m.cost.cycles() > 0);
         let sp = m.speedup(16, FIG5_SCHEDULE);
         assert!(sp > 0.0 && sp < 32.0, "speedup sane: {sp}");
@@ -445,8 +467,25 @@ mod tests {
 
     #[test]
     fn fig4_sm_dominates_even_on_tiny() {
-        let (report, sm_pct) = fig4("nn", Scale::Ci, &GpuConfig::tiny());
+        let (report, sm_pct) = fig4("nn", Scale::Ci, &GpuConfig::tiny()).expect("valid config");
         assert!(report.contains("SM cycles"));
         assert!(sm_pct > 30.0, "SM phase should dominate: {sm_pct}%");
+    }
+
+    #[test]
+    fn harness_errors_are_typed_and_name_the_workload() {
+        let gpu = GpuConfig::tiny();
+        let err = measure_workload("knn", Scale::Ci, &gpu).unwrap_err();
+        assert_eq!(err, crate::engine::SimError::UnknownWorkload { name: "knn".into() });
+        let err = real_run(
+            "nope",
+            Scale::Ci,
+            &gpu,
+            1,
+            Schedule::Static { chunk: 1 },
+            StatsStrategy::PerSm,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("nope"), "{err}");
     }
 }

@@ -13,6 +13,9 @@
 //! * [`engine::GpuSim`] — the Algorithm-1 cycle loop: sequential
 //!   interconnect / L2 / DRAM phases, a **parallel SM phase**, and a
 //!   sequential block-issue phase.
+//! * [`engine::session`] — the public driving API:
+//!   [`SimBuilder`]/[`SimSession`] (build → step/run-until → observe →
+//!   checkpoint), typed [`SimError`]s, and built-in observers.
 //! * [`engine::pool`] — a persistent worker pool with OpenMP-equivalent
 //!   `schedule(static, chunk)` / `schedule(dynamic, chunk)` semantics.
 //! * [`stats`] — the paper's §3 statistics isolation: per-SM stats merged
@@ -51,19 +54,39 @@
 //!   └─ ...            results keyed + ordered by job key, cached by hash
 //! ```
 //!
+//! ## The session API
+//!
+//! Every driver — the `parsim` CLI, the figure harness, the campaign
+//! scheduler, examples and tests — goes through one public surface:
+//! [`engine::SimBuilder`] (fluent, non-panicking configuration) and
+//! [`engine::SimSession`] (a steppable, observable run loop). Sessions
+//! can pause on a [`engine::StopCondition`] (cycle budget, kernel
+//! boundary, instruction count, predicate), resume, take cheap
+//! [`engine::SimSession::checkpoint`] fingerprints mid-run, and feed
+//! [`engine::Observer`] hooks from the sequential part of the cycle —
+//! so observation and pausing can never perturb the paper's
+//! bit-determinism (`tests/session.rs` proves it).
+//!
 //! ## Quickstart
 //!
 //! ```no_run
-//! use parsim::config::{GpuConfig, SimConfig};
-//! use parsim::trace::workloads;
-//! use parsim::engine::GpuSim;
+//! use parsim::{Scale, SimBuilder, StopCondition};
 //!
-//! let gpu = GpuConfig::rtx3080ti();
-//! let sim = SimConfig::default();                 // single-threaded
-//! let wl = workloads::build("hotspot", workloads::Scale::Ci).unwrap();
-//! let mut gpusim = GpuSim::new(gpu, sim);
-//! let stats = gpusim.run_workload(&wl);
+//! # fn main() -> Result<(), parsim::SimError> {
+//! let mut session = SimBuilder::new()
+//!     .gpu_preset("rtx3080ti")
+//!     .workload_named("hotspot", Scale::Ci)
+//!     .threads(8)                       // the paper's parallel SM loop
+//!     .build()?;                        // typed SimError, never a panic
+//!
+//! session.run(StopCondition::CycleBudget(10_000))?;   // pause mid-run…
+//! let checkpoint = session.checkpoint();              // …fingerprint it…
+//! println!("paused at cycle {} (fp {:016x})", checkpoint.cycle, checkpoint.hash);
+//!
+//! session.run_to_completion()?;                       // …and resume
+//! let stats = session.stats().expect("finished");
 //! println!("cycles = {}", stats.total_cycles());
+//! # Ok(()) }
 //! ```
 
 pub mod campaign;
@@ -81,6 +104,8 @@ pub mod trace;
 pub mod util;
 
 pub use config::{GpuConfig, SimConfig};
-pub use engine::GpuSim;
+pub use engine::{
+    GpuSim, Observer, SessionStatus, SimBuilder, SimError, SimSession, StopCondition,
+};
 pub use stats::GpuStats;
 pub use trace::workloads::{Scale, Workload};

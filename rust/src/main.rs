@@ -16,7 +16,7 @@ use std::process::ExitCode;
 
 use parsim::cli::Args;
 use parsim::config::{presets, FunctionalMode, GpuConfig, Schedule, SimConfig, StatsStrategy};
-use parsim::engine::GpuSim;
+use parsim::engine::{PhaseProfileStreamer, ProgressTicker, SimBuilder, StatsSampler};
 use parsim::harness;
 use parsim::stats::diff::diff_runs;
 use parsim::trace::workloads::{self, Scale};
@@ -24,6 +24,8 @@ use parsim::trace::workloads::{self, Scale};
 const VALUE_OPTS: &[&str] = &[
     "workload", "scale", "threads", "schedule", "stats", "gpu", "gpu-config", "max-cycles",
     "chunk", "seed", "export-dir",
+    // session observers
+    "sample-every", "progress-every",
     // campaign options
     "workloads", "gpus", "threads-list", "schedules", "stats-list", "workers", "core-budget",
     "out", "name",
@@ -84,6 +86,9 @@ fn print_help() {
          common options: --workload NAME --scale ci|small|paper --threads N\n\
          \x20               --schedule static|static1|dynamic --stats per-sm|shared-locked|seq-point\n\
          \x20               --gpu rtx3080ti|tiny|rtx3090|a100-like --profile --functional\n\n\
+         run observers:  --sample-every N    stream one JSONL progress record per N kernel\n\
+         \x20               cycles to stdout (also written to --export-dir as samples.jsonl)\n\
+         \x20               --progress-every N  coarse progress line on stderr every N cycles\n\n\
          campaign options (matrix = workloads × gpus × threads-list × schedules × stats-list):\n\
          \x20               --workloads a,b,c|all --gpus tiny,rtx3080ti --threads-list 1,4\n\
          \x20               --schedules static:0,dynamic:1 --stats-list per-sm --scale ci\n\
@@ -155,20 +160,67 @@ fn cmd_run(args: &Args) -> Result<(), String> {
     let scale = parse_scale(args)?;
     let gpu = parse_gpu(args)?;
     let sim = build_simconfig(args)?;
-    let wl = workloads::build(name, scale).ok_or_else(|| format!("unknown workload {name:?}"))?;
-    eprintln!(
-        "simulating {name} (scale={}, {} kernels, {} CTAs mean) on {} with {} thread(s), {} schedule, {} stats",
-        scale.name(),
-        wl.kernels.len(),
-        wl.mean_ctas_per_kernel() as u64,
-        gpu.name,
-        sim.threads,
-        sim.schedule.name(),
-        sim.stats_strategy.name(),
-    );
     let profile = sim.profile;
-    let mut gs = GpuSim::new(gpu, sim);
-    let stats = gs.run_workload(&wl);
+    let sample_every = args.get_u64("sample-every", 0).map_err(|e| e.to_string())?;
+    let progress_every = args.get_u64("progress-every", 0).map_err(|e| e.to_string())?;
+    let export_dir = args.get("export-dir").map(std::path::PathBuf::from);
+
+    let mut builder = SimBuilder::new().gpu(gpu).sim(sim).workload_named(name, scale);
+    let mut sample_buf = None;
+    if sample_every > 0 {
+        if export_dir.is_some() {
+            let (sampler, buf) = StatsSampler::shared_streaming(sample_every);
+            builder = builder.observer(sampler);
+            sample_buf = Some(buf);
+        } else {
+            builder = builder.observer(StatsSampler::streaming(sample_every));
+        }
+    }
+    if progress_every > 0 {
+        builder = builder.observer(ProgressTicker::new(progress_every));
+    }
+    if profile {
+        builder = builder.observer(PhaseProfileStreamer::new());
+    }
+    let mut session = builder.build().map_err(|e| e.to_string())?;
+    {
+        let wl = session.workload();
+        let sim = &session.sim().sim;
+        eprintln!(
+            "simulating {name} (scale={}, {} kernels, {} CTAs mean) on {} with {} thread(s), {} schedule, {} stats",
+            scale.name(),
+            wl.kernels.len(),
+            wl.mean_ctas_per_kernel() as u64,
+            session.sim().gpu.name,
+            sim.threads,
+            sim.schedule.name(),
+            sim.stats_strategy.name(),
+        );
+    }
+    let run_result = session.run_to_completion();
+    // flush collected samples even when the run fails (e.g. the cycle
+    // guard tripped) — a partial time series is still worth keeping; a
+    // flush failure must never mask the simulation's own error
+    let mut samples_written = false;
+    if let (Some(dir), Some(buf)) = (export_dir.as_ref(), sample_buf.as_ref()) {
+        let lines = buf.borrow();
+        if !lines.is_empty() {
+            let flush = std::fs::create_dir_all(dir)
+                .and_then(|()| {
+                    let mut body = lines.join("\n");
+                    body.push('\n');
+                    std::fs::write(dir.join("samples.jsonl"), body)
+                })
+                .map_err(|e| format!("export samples.jsonl: {e}"));
+            match flush {
+                Ok(()) => samples_written = true,
+                Err(e) if run_result.is_ok() => return Err(e),
+                Err(e) => eprintln!("warning: {e}"),
+            }
+        }
+    }
+    run_result.map_err(|e| e.to_string())?;
+    let stats = session.stats().expect("session finished");
     println!("workload           {}", stats.workload);
     println!("kernels            {}", stats.kernels.len());
     println!("gpu cycles         {}", stats.total_cycles());
@@ -191,19 +243,21 @@ fn cmd_run(args: &Args) -> Result<(), String> {
         }
     }
     if profile {
-        println!("\n{}", gs.profiler.report());
+        println!("\n{}", session.sim().profiler.report());
     }
-    for fr in &gs.functional_results {
+    for fr in &session.sim().functional_results {
         println!(
             "functional: {} C[{}×{}] computed (replay of dispatch order)",
             fr.kernel_name, fr.sem.m, fr.sem.n
         );
     }
-    if let Some(dir) = args.get("export-dir") {
-        let written =
-            parsim::stats::export::write_all(&stats, std::path::Path::new(dir))
-                .map_err(|e| format!("export: {e}"))?;
-        println!("exported {} files to {dir}", written.len());
+    if let Some(dir) = export_dir {
+        let mut written = parsim::stats::export::write_all(stats, &dir)
+            .map_err(|e| format!("export: {e}"))?;
+        if samples_written {
+            written.push("samples.jsonl".into());
+        }
+        println!("exported {} files to {}", written.len(), dir.display());
     }
     Ok(())
 }
@@ -213,20 +267,21 @@ fn cmd_figure(args: &Args) -> Result<(), String> {
     let scale = parse_scale(args)?;
     let gpu = parse_gpu(args)?;
     let progress = !args.flag("quiet");
+    let err = |e: parsim::engine::SimError| e.to_string();
     match which {
         "fig1" => {
-            let rows = harness::fig1(scale, &gpu, progress);
+            let rows = harness::fig1(scale, &gpu, progress).map_err(err)?;
             println!("{}", harness::fig1_report(&rows, scale));
         }
         "fig4" => {
             let wl = args.get("workload").unwrap_or("hotspot");
-            let (report, sm_pct) = harness::fig4(wl, scale, &gpu);
+            let (report, sm_pct) = harness::fig4(wl, scale, &gpu).map_err(err)?;
             println!("{report}");
             println!("SM-cycle share: {sm_pct:.1}% (paper: >93% on hotspot)");
         }
         "fig5" | "fig6" | "fig56" => {
             // one measurement pass feeds both figures
-            let measured = harness::measure_all(scale, &gpu, progress);
+            let measured = harness::measure_all(scale, &gpu, progress).map_err(err)?;
             if which != "fig6" {
                 println!("{}", harness::fig5_report(&measured));
             }
@@ -240,11 +295,11 @@ fn cmd_figure(args: &Args) -> Result<(), String> {
             println!("{}", harness::table2_report());
             println!("{}", harness::table3_report());
             println!("{}", harness::fig7_report(scale));
-            let rows = harness::fig1(scale, &gpu, progress);
+            let rows = harness::fig1(scale, &gpu, progress).map_err(err)?;
             println!("{}", harness::fig1_report(&rows, scale));
-            let (f4, _) = harness::fig4("hotspot", scale, &gpu);
+            let (f4, _) = harness::fig4("hotspot", scale, &gpu).map_err(err)?;
             println!("{f4}");
-            let measured = harness::measure_all(scale, &gpu, progress);
+            let measured = harness::measure_all(scale, &gpu, progress).map_err(err)?;
             println!("{}", harness::fig5_report(&measured));
             println!("{}", harness::fig6_report(&measured));
         }
@@ -300,7 +355,9 @@ fn cmd_determinism(args: &Args) -> Result<(), String> {
     let threads = args.get_usize("threads", 8).map_err(|e| e.to_string())?;
     let gpu = parse_gpu(args)?;
     println!("determinism check: {name} (scale={}), 1 thread vs {threads} threads", scale.name());
-    let a = harness::real_run(name, scale, &gpu, 1, Schedule::Static { chunk: 1 }, StatsStrategy::PerSm);
+    let a =
+        harness::real_run(name, scale, &gpu, 1, Schedule::Static { chunk: 1 }, StatsStrategy::PerSm)
+            .map_err(|e| e.to_string())?;
     let b = harness::real_run(
         name,
         scale,
@@ -308,7 +365,8 @@ fn cmd_determinism(args: &Args) -> Result<(), String> {
         threads,
         Schedule::Dynamic { chunk: 1 },
         StatsStrategy::PerSm,
-    );
+    )
+    .map_err(|e| e.to_string())?;
     let d = diff_runs(&a, &b);
     if d.identical() {
         println!(
@@ -432,6 +490,7 @@ fn parsim_validate(name: &str, scale: Scale) -> anyhow::Result<()> {
         .find(|k| k.gemm.is_some())
         .ok_or_else(|| anyhow::anyhow!("{name} carries no GEMM semantics"))?;
     let sem = kd.gemm.unwrap();
+    let kernel_seed = kd.seed;
     let stem = format!("gemm_{}x{}x{}", sem.m, sem.n, sem.k);
     if !artifacts_available(&stem) {
         anyhow::bail!(
@@ -441,18 +500,23 @@ fn parsim_validate(name: &str, scale: Scale) -> anyhow::Result<()> {
     }
 
     // 1. simulate with functional replay
-    let sim = SimConfig { functional: FunctionalMode::Full, ..SimConfig::default() };
-    let mut gs = GpuSim::new(GpuConfig::rtx3080ti(), sim);
-    let stats = gs.run_workload(&wl);
-    let fr = gs
+    let mut session = SimBuilder::new()
+        .gpu(GpuConfig::rtx3080ti())
+        .workload(wl)
+        .functional(FunctionalMode::Full)
+        .build()?;
+    session.run_to_completion()?;
+    let stats = session.stats().expect("session finished").clone();
+    let fr = session
+        .sim()
         .functional_results
         .iter()
         .find(|f| f.sem == sem)
         .ok_or_else(|| anyhow::anyhow!("no functional result"))?;
 
     // 2. run the XLA artifact with the same inputs
-    let a = functional::gen_matrix(kd.seed ^ 0xA, sem.m as usize, sem.k as usize);
-    let b = functional::gen_matrix(kd.seed ^ 0xB, sem.k as usize, sem.n as usize);
+    let a = functional::gen_matrix(kernel_seed ^ 0xA, sem.m as usize, sem.k as usize);
+    let b = functional::gen_matrix(kernel_seed ^ 0xB, sem.k as usize, sem.n as usize);
     let exe = CompiledHlo::load(&artifact_path(&stem))?;
     let c_xla = exe.run_f32(&[
         (&a, sem.m as usize, sem.k as usize),

@@ -350,6 +350,34 @@ pub fn gpu_stats_jsonl(stats: &GpuStats) -> String {
     out
 }
 
+/// One mid-run sample record, emitted by the session API's
+/// `StatsSampler` observer (`parsim run --sample-every N`): a flat JSONL
+/// line of the simulation's progress counters at one cycle. Same
+/// round-trip guarantee as the other JSONL records ([`parse_flat_json`]
+/// parses it back), and deterministic: samples contain only model state,
+/// never wall-clock.
+#[allow(clippy::too_many_arguments)]
+pub fn cycle_sample_jsonl(
+    cycle: u64,
+    kernel_id: u64,
+    kernel: &str,
+    kernel_cycle: u64,
+    ctas_issued: u64,
+    grid_ctas: u64,
+    warp_insts: u64,
+) -> String {
+    let mut out = String::from("{");
+    jsonl_u64(&mut out, "cycle", cycle, true);
+    jsonl_u64(&mut out, "kernel_id", kernel_id, false);
+    jsonl_str(&mut out, "kernel", kernel, false);
+    jsonl_u64(&mut out, "kernel_cycle", kernel_cycle, false);
+    jsonl_u64(&mut out, "ctas_issued", ctas_issued, false);
+    jsonl_u64(&mut out, "grid_ctas", grid_ctas, false);
+    jsonl_u64(&mut out, "warp_insts", warp_insts, false);
+    out.push('}');
+    out
+}
+
 /// Typed view of a [`gpu_stats_jsonl`] line.
 #[derive(Debug, Clone, PartialEq)]
 pub struct JsonlSummary {
@@ -484,6 +512,20 @@ mod tests {
         );
         // byte-determinism of the record itself
         assert_eq!(line, gpu_stats_jsonl(&s));
+    }
+
+    #[test]
+    fn cycle_sample_round_trips_and_is_deterministic() {
+        let line = cycle_sample_jsonl(1234, 2, "relax_k", 90, 17, 64, 55_000);
+        assert!(!line.contains('\n'));
+        let fields = parse_flat_json(&line).expect("sample parses back");
+        let get = |k: &str| fields.iter().find(|(key, _)| key == k).map(|(_, v)| v.clone());
+        assert_eq!(get("cycle").unwrap().as_u64(), Some(1234));
+        assert_eq!(get("kernel").unwrap().as_str(), Some("relax_k"));
+        assert_eq!(get("ctas_issued").unwrap().as_u64(), Some(17));
+        assert_eq!(get("grid_ctas").unwrap().as_u64(), Some(64));
+        assert_eq!(get("warp_insts").unwrap().as_u64(), Some(55_000));
+        assert_eq!(line, cycle_sample_jsonl(1234, 2, "relax_k", 90, 17, 64, 55_000));
     }
 
     #[test]

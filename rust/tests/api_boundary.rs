@@ -1,0 +1,56 @@
+//! Grep-enforced API boundary (ISSUE 2 acceptance criterion): the
+//! panicking `GpuSim` constructor is an engine-internal detail. Every
+//! driver — src outside `engine/`, integration tests, benches, examples
+//! — must construct simulations through `SimBuilder`, whose `build()`
+//! returns typed `SimError`s instead of panicking.
+
+use std::path::{Path, PathBuf};
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) {
+    for entry in std::fs::read_dir(dir).unwrap_or_else(|e| panic!("read {}: {e}", dir.display())) {
+        let path = entry.expect("dir entry").path();
+        if path.is_dir() {
+            collect_rs(&path, out);
+        } else if path.extension().is_some_and(|x| x == "rs") {
+            out.push(path);
+        }
+    }
+}
+
+#[test]
+fn gpusim_construction_is_engine_internal() {
+    let manifest = PathBuf::from(env!("CARGO_MANIFEST_DIR")); // …/rust
+    // assembled at runtime so this test file never matches itself
+    let needle = format!("GpuSim::{}", "new(");
+
+    let mut files = Vec::new();
+    for root in ["src", "tests", "benches"] {
+        collect_rs(&manifest.join(root), &mut files);
+    }
+    // examples live at the repository root (see Cargo.toml)
+    let examples = manifest.parent().expect("workspace root").join("examples");
+    if examples.is_dir() {
+        collect_rs(&examples, &mut files);
+    }
+
+    let engine_dir = manifest.join("src").join("engine");
+    let vendor_dir = manifest.join("vendor");
+    let offenders: Vec<String> = files
+        .iter()
+        .filter(|f| !f.starts_with(&engine_dir) && !f.starts_with(&vendor_dir))
+        .filter(|f| {
+            std::fs::read_to_string(f)
+                .unwrap_or_else(|e| panic!("read {}: {e}", f.display()))
+                .contains(&needle)
+        })
+        .map(|f| f.display().to_string())
+        .collect();
+
+    assert!(
+        offenders.is_empty(),
+        "`{needle}…)` call sites outside rust/src/engine/ — drive the simulator through \
+         SimBuilder/SimSession instead:\n  {}",
+        offenders.join("\n  ")
+    );
+    assert!(files.len() > 20, "sanity: the scan saw the whole tree ({} files)", files.len());
+}

@@ -13,10 +13,10 @@ use std::path::PathBuf;
 use parsim::campaign::{
     run_campaign, CampaignConfig, CampaignSpec, JobSpec, RESULTS_CSV, RESULTS_JSONL,
 };
-use parsim::config::{GpuConfig, Schedule, SimConfig, StatsStrategy};
-use parsim::engine::GpuSim;
+use parsim::config::{GpuConfig, Schedule, StatsStrategy};
 use parsim::stats::diff::diff_runs;
-use parsim::trace::workloads::{self, Scale};
+use parsim::trace::workloads::Scale;
+use parsim::SimBuilder;
 
 fn tmp_dir(tag: &str) -> PathBuf {
     let d = std::env::temp_dir().join(format!("parsim_campaign_{tag}_{}", std::process::id()));
@@ -67,16 +67,22 @@ fn read(dir: &PathBuf, name: &str) -> String {
 fn single_vs_multi_thread_stats_bit_identical_three_workloads() {
     let gpu = GpuConfig::tiny();
     for name in ["nn", "hotspot", "mst"] {
-        let wl = workloads::build(name, Scale::Ci).unwrap();
-        let mut seq = GpuSim::new(gpu.clone(), SimConfig::default());
-        let a = seq.run_workload(&wl);
-        let sim = SimConfig {
-            threads: 8,
-            schedule: Schedule::Dynamic { chunk: 1 },
-            ..SimConfig::default()
-        };
-        let mut par = GpuSim::new(gpu.clone(), sim);
-        let b = par.run_workload(&wl);
+        let mut seq = SimBuilder::new()
+            .gpu(gpu.clone())
+            .workload_named(name, Scale::Ci)
+            .build()
+            .expect("valid config");
+        seq.run_to_completion().expect("run");
+        let a = seq.into_stats().expect("finished");
+        let mut par = SimBuilder::new()
+            .gpu(gpu.clone())
+            .workload_named(name, Scale::Ci)
+            .threads(8)
+            .schedule(Schedule::Dynamic { chunk: 1 })
+            .build()
+            .expect("valid config");
+        par.run_to_completion().expect("run");
+        let b = par.into_stats().expect("finished");
         let d = diff_runs(&a, &b);
         assert!(d.identical(), "{name}: 1t vs 8t diverged:\n{}", d.report());
         assert_eq!(a.fingerprint(), b.fingerprint(), "{name} fingerprint");

@@ -12,11 +12,11 @@
 //! stats nondeterministically (debug assertions + the full per-SM stat
 //! diff would catch it).
 
-use parsim::config::{GpuConfig, Schedule, SimConfig, StatsStrategy};
-use parsim::engine::GpuSim;
+use parsim::config::{GpuConfig, Schedule, StatsStrategy};
 use parsim::stats::diff::diff_runs;
 use parsim::stats::GpuStats;
 use parsim::trace::workloads::{self, Scale};
+use parsim::SimBuilder;
 
 fn run(
     name: &str,
@@ -25,10 +25,16 @@ fn run(
     schedule: Schedule,
     strategy: StatsStrategy,
 ) -> GpuStats {
-    let wl = workloads::build(name, Scale::Ci).unwrap();
-    let sim = SimConfig { threads, schedule, stats_strategy: strategy, ..SimConfig::default() };
-    let mut gs = GpuSim::new(gpu.clone(), sim);
-    gs.run_workload(&wl)
+    let mut session = SimBuilder::new()
+        .gpu(gpu.clone())
+        .workload_named(name, Scale::Ci)
+        .threads(threads)
+        .schedule(schedule)
+        .stats_strategy(strategy)
+        .build()
+        .expect("valid config");
+    session.run_to_completion().expect("run");
+    session.into_stats().expect("finished")
 }
 
 fn assert_identical(name: &str, a: &GpuStats, b: &GpuStats, what: &str) {

@@ -8,12 +8,12 @@
 //! * pool index-coverage under random region shapes
 //! * cost-model bounds (1 ≤ speedup ≤ threads on balanced work, etc.)
 
-use parsim::config::{GpuConfig, Schedule, SimConfig, StatsStrategy};
+use parsim::config::{GpuConfig, Schedule, StatsStrategy};
 use parsim::engine::pool::ThreadPool;
-use parsim::engine::GpuSim;
 use parsim::mem::cache::{test_request, AccessOutcome, Cache};
 use parsim::trace::workloads::{self, Scale};
 use parsim::util::SplitMix64;
+use parsim::SimBuilder;
 
 const PROPERTY_ITERS: usize = 12;
 
@@ -45,14 +45,24 @@ fn prop_random_configs_are_deterministic() {
             _ => StatsStrategy::SharedLocked,
         };
         let base = *baselines.entry(name).or_insert_with(|| {
-            let wl = workloads::build(name, Scale::Ci).unwrap();
-            let mut gs = GpuSim::new(gpu.clone(), SimConfig::default());
-            gs.run_workload(&wl).fingerprint()
+            let mut s = SimBuilder::new()
+                .gpu(gpu.clone())
+                .workload_named(name, Scale::Ci)
+                .build()
+                .expect("valid config");
+            s.run_to_completion().expect("run");
+            s.into_stats().expect("finished").fingerprint()
         });
-        let wl = workloads::build(name, Scale::Ci).unwrap();
-        let sim = SimConfig { threads, schedule, stats_strategy: strategy, ..SimConfig::default() };
-        let mut gs = GpuSim::new(gpu.clone(), sim);
-        let fp = gs.run_workload(&wl).fingerprint();
+        let mut s = SimBuilder::new()
+            .gpu(gpu.clone())
+            .workload_named(name, Scale::Ci)
+            .threads(threads)
+            .schedule(schedule)
+            .stats_strategy(strategy)
+            .build()
+            .expect("valid config");
+        s.run_to_completion().expect("run");
+        let fp = s.into_stats().expect("finished").fingerprint();
         assert_eq!(
             fp, base,
             "iter {iter}: {name} threads={threads} {schedule:?} {strategy:?} diverged"

@@ -4,11 +4,11 @@
 //! These tests **skip** (with a notice) when `make artifacts` has not
 //! run — the Rust test suite must not require Python.
 
-use parsim::config::{FunctionalMode, GpuConfig, SimConfig};
-use parsim::engine::GpuSim;
+use parsim::config::{FunctionalMode, GpuConfig};
 use parsim::runtime::{artifact_path, artifacts_available, CompiledHlo};
 use parsim::trace::functional;
 use parsim::trace::workloads::{self, Scale};
+use parsim::SimBuilder;
 
 fn artifact_or_skip(stem: &str) -> Option<CompiledHlo> {
     if !artifacts_available(stem) {
@@ -45,20 +45,26 @@ fn simulator_functional_replay_matches_xla_for_all_gemm_workloads() {
         let wl = workloads::build(name, Scale::Ci).unwrap();
         let kd = wl.kernels.iter().find(|k| k.gemm.is_some()).unwrap();
         let sem = kd.gemm.unwrap();
+        let kernel_seed = kd.seed;
         let stem = format!("gemm_{}x{}x{}", sem.m, sem.n, sem.k);
         let Some(exe) = artifact_or_skip(&stem) else { continue };
 
-        let sim = SimConfig { functional: FunctionalMode::Full, ..SimConfig::default() };
-        let mut gs = GpuSim::new(GpuConfig::tiny(), sim);
-        let _ = gs.run_workload(&wl);
-        let fr = gs
+        let mut session = SimBuilder::new()
+            .gpu(GpuConfig::tiny())
+            .workload(wl)
+            .functional(FunctionalMode::Full)
+            .build()
+            .expect("valid config");
+        session.run_to_completion().expect("run");
+        let fr = session
+            .sim()
             .functional_results
             .iter()
             .find(|f| f.sem == sem)
             .unwrap_or_else(|| panic!("{name}: no functional result"));
 
-        let a = functional::gen_matrix(kd.seed ^ 0xA, sem.m as usize, sem.k as usize);
-        let b = functional::gen_matrix(kd.seed ^ 0xB, sem.k as usize, sem.n as usize);
+        let a = functional::gen_matrix(kernel_seed ^ 0xA, sem.m as usize, sem.k as usize);
+        let b = functional::gen_matrix(kernel_seed ^ 0xB, sem.k as usize, sem.n as usize);
         let c_xla = exe
             .run_f32(&[(&a, sem.m as usize, sem.k as usize), (&b, sem.k as usize, sem.n as usize)])
             .expect("execute");

@@ -1,0 +1,217 @@
+//! Session-API determinism: pausing, resuming, stepping, and observing
+//! a simulation must not change a single statistic — for any thread
+//! count and schedule. This is the paper's bit-determinism claim lifted
+//! to the steppable [`parsim::SimSession`] surface, including *mid-run*
+//! state via `checkpoint()` fingerprints.
+
+use std::cell::RefCell;
+use std::rc::Rc;
+
+use parsim::config::{GpuConfig, Schedule};
+use parsim::engine::{
+    Observer, ProgressTicker, SessionFingerprint, SessionStatus, StatsSampler, StopCondition,
+};
+use parsim::stats::diff::diff_runs;
+use parsim::trace::workloads::Scale;
+use parsim::{GpuStats, SimBuilder, SimSession};
+
+fn session(name: &str, threads: usize, schedule: Schedule) -> SimSession {
+    SimBuilder::new()
+        .gpu(GpuConfig::tiny())
+        .workload_named(name, Scale::Ci)
+        .threads(threads)
+        .schedule(schedule)
+        .build()
+        .expect("valid config")
+}
+
+fn uninterrupted(name: &str, threads: usize, schedule: Schedule) -> GpuStats {
+    let mut s = session(name, threads, schedule);
+    s.run_to_completion().expect("run");
+    s.into_stats().expect("finished")
+}
+
+/// Drive a session in `budget`-cycle slices, collecting a checkpoint at
+/// every pause, and return (checkpoints, final stats).
+fn run_paused(
+    name: &str,
+    threads: usize,
+    schedule: Schedule,
+    budget: u64,
+) -> (Vec<SessionFingerprint>, GpuStats) {
+    let mut s = session(name, threads, schedule);
+    let mut checkpoints = Vec::new();
+    while s.run(StopCondition::CycleBudget(budget)).expect("run slice")
+        == SessionStatus::Running
+    {
+        checkpoints.push(s.checkpoint());
+    }
+    (checkpoints, s.into_stats().expect("finished"))
+}
+
+/// The acceptance scenario: pause at arbitrary (budget-37) cycles —
+/// including mid-kernel — resume, and the final `GpuStats::fingerprint`
+/// is bit-identical to an uninterrupted run, across 1/4/8 threads and
+/// both schedules. The mid-run checkpoints must agree across all
+/// configurations too, pause for pause.
+#[test]
+fn pause_resume_bit_identical_across_threads_and_schedules() {
+    let base = uninterrupted("nn", 1, Schedule::Static { chunk: 1 });
+    let (ref_cps, ref_stats) = run_paused("nn", 1, Schedule::Static { chunk: 1 }, 37);
+    assert_eq!(ref_stats.fingerprint(), base.fingerprint(), "pausing changed the 1t run");
+    assert!(ref_cps.len() > 1, "need several pauses to exercise resume");
+    // at least one pause must land mid-kernel (nothing completed yet,
+    // but cycles burned) — the acceptance's mid-kernel fingerprint check
+    assert!(
+        ref_cps.iter().any(|cp| cp.kernels_completed == 0 && cp.cycle > 0),
+        "no mid-kernel pause in {ref_cps:?}"
+    );
+
+    for threads in [1usize, 4, 8] {
+        for schedule in [Schedule::Static { chunk: 1 }, Schedule::Dynamic { chunk: 1 }] {
+            let straight = uninterrupted("nn", threads, schedule);
+            let d = diff_runs(&base, &straight);
+            assert!(d.identical(), "{threads}t {schedule:?} straight diverged:\n{}", d.report());
+
+            let (cps, paused) = run_paused("nn", threads, schedule, 37);
+            assert_eq!(
+                paused.fingerprint(),
+                base.fingerprint(),
+                "{threads}t {schedule:?}: pause/resume changed the result"
+            );
+            let d = diff_runs(&base, &paused);
+            assert!(d.identical(), "{threads}t {schedule:?} paused diverged:\n{}", d.report());
+            assert_eq!(
+                cps, ref_cps,
+                "{threads}t {schedule:?}: mid-run checkpoints diverged from the 1t reference"
+            );
+        }
+    }
+}
+
+/// `step_cycle` and `run(CycleBudget)` are the same machine: stepping N
+/// cycles by hand reaches the same checkpoint as one N-cycle run, and
+/// both resume to the same final fingerprint.
+#[test]
+fn manual_stepping_equals_budgeted_run_mid_kernel() {
+    let pause_at = 53;
+    let mut a = session("nn", 4, Schedule::Dynamic { chunk: 1 });
+    a.run(StopCondition::CycleBudget(pause_at)).expect("run");
+
+    let mut b = session("nn", 1, Schedule::Static { chunk: 1 });
+    for _ in 0..pause_at {
+        b.step_cycle().expect("step");
+    }
+    assert_eq!(a.gpu_cycle(), pause_at);
+    assert_eq!(a.checkpoint(), b.checkpoint(), "mid-kernel state diverged");
+
+    a.run_to_completion().expect("resume a");
+    b.run_to_completion().expect("resume b");
+    assert_eq!(
+        a.into_stats().unwrap().fingerprint(),
+        b.into_stats().unwrap().fingerprint()
+    );
+}
+
+/// Observer registration must not perturb fingerprints — observers see
+/// sequential-phase state only.
+#[test]
+fn observers_do_not_perturb_results() {
+    #[derive(Default)]
+    struct Counts {
+        kernel_starts: usize,
+        cycles: u64,
+        kernel_ends: usize,
+        finishes: usize,
+    }
+    struct Counting(Rc<RefCell<Counts>>);
+    impl Observer for Counting {
+        fn on_kernel_start(&mut self, _k: &parsim::trace::KernelDesc, _id: usize) {
+            self.0.borrow_mut().kernel_starts += 1;
+        }
+        fn on_cycle(&mut self, _v: &parsim::engine::CycleView<'_>) {
+            self.0.borrow_mut().cycles += 1;
+        }
+        fn on_kernel_end(&mut self, _s: &parsim::stats::KernelStats, _sim: &parsim::GpuSim) {
+            self.0.borrow_mut().kernel_ends += 1;
+        }
+        fn on_finish(&mut self, _s: &GpuStats) {
+            self.0.borrow_mut().finishes += 1;
+        }
+    }
+
+    let plain = uninterrupted("hotspot", 4, Schedule::Dynamic { chunk: 1 });
+
+    let counts = Rc::new(RefCell::new(Counts::default()));
+    let (sampler, samples) = StatsSampler::shared(50);
+    let mut observed = SimBuilder::new()
+        .gpu(GpuConfig::tiny())
+        .workload_named("hotspot", Scale::Ci)
+        .threads(4)
+        .schedule(Schedule::Dynamic { chunk: 1 })
+        .observer(Counting(counts.clone()))
+        .observer(sampler)
+        .observer(ProgressTicker::new(1 << 40)) // registered but silent
+        .build()
+        .expect("valid config");
+    observed.run_to_completion().expect("run");
+    let stats = observed.into_stats().expect("finished");
+
+    let d = diff_runs(&plain, &stats);
+    assert!(d.identical(), "observers perturbed the run:\n{}", d.report());
+    assert_eq!(plain.fingerprint(), stats.fingerprint());
+
+    let c = counts.borrow();
+    assert_eq!(c.kernel_starts, stats.kernels.len());
+    assert_eq!(c.kernel_ends, stats.kernels.len());
+    assert_eq!(c.finishes, 1);
+    assert_eq!(c.cycles, stats.total_cycles(), "one on_cycle per simulated cycle");
+    drop(c);
+
+    // sampler emitted valid, parseable JSONL records
+    let lines = samples.borrow();
+    assert!(!lines.is_empty(), "expected periodic samples");
+    for line in lines.iter() {
+        let fields = parsim::stats::export::parse_flat_json(line).expect("sample parses");
+        assert!(fields.iter().any(|(k, _)| k == "cycle"));
+        assert!(fields.iter().any(|(k, _)| k == "warp_insts"));
+    }
+}
+
+/// `KernelBoundary` pauses between kernels of a multi-kernel workload,
+/// and resuming still reproduces the uninterrupted fingerprint.
+#[test]
+fn kernel_boundary_pause_on_multi_kernel_workload() {
+    let base = uninterrupted("mst", 1, Schedule::Static { chunk: 1 });
+    assert!(base.kernels.len() > 1, "mst must launch several kernels");
+
+    let mut s = session("mst", 4, Schedule::Dynamic { chunk: 1 });
+    assert_eq!(s.run_kernel().expect("first kernel"), SessionStatus::Running);
+    assert_eq!(s.kernels_completed(), 1);
+    assert_eq!(s.kernel_index(), 1);
+    assert!(s.stats().is_none(), "not finished yet");
+
+    // finish kernel-by-kernel the whole way down
+    let mut boundaries = 1;
+    while s.run_kernel().expect("next kernel") == SessionStatus::Running {
+        boundaries += 1;
+    }
+    let stats = s.into_stats().expect("finished");
+    assert_eq!(stats.fingerprint(), base.fingerprint());
+    assert!(boundaries <= stats.kernels.len());
+}
+
+/// An `InstructionCount` stop leaves the session resumable and the
+/// result unchanged.
+#[test]
+fn instruction_count_stop_is_resumable() {
+    let base = uninterrupted("hotspot", 1, Schedule::Static { chunk: 1 });
+    let target = base.total_warp_insts() / 2;
+    let mut s = session("hotspot", 8, Schedule::Static { chunk: 0 });
+    let status = s.run(StopCondition::InstructionCount(target)).expect("run");
+    if status == SessionStatus::Running {
+        assert!(s.total_warp_insts_so_far() >= target);
+    }
+    s.run_to_completion().expect("resume");
+    assert_eq!(s.into_stats().unwrap().fingerprint(), base.fingerprint());
+}

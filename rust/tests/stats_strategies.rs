@@ -3,30 +3,30 @@
 //! differ in *how* the data races are avoided, which
 //! `benches/ablation_stats.rs` prices.
 
-use parsim::config::{GpuConfig, Schedule, SimConfig, StatsStrategy};
-use parsim::engine::GpuSim;
-use parsim::trace::workloads::{self, Scale};
+use parsim::config::{GpuConfig, Schedule, StatsStrategy};
+use parsim::trace::workloads::Scale;
+use parsim::SimBuilder;
 
 fn run(
     name: &str,
     threads: usize,
     strategy: StatsStrategy,
 ) -> (parsim::GpuStats, Option<(u64, u64, u64)>) {
-    let wl = workloads::build(name, Scale::Ci).unwrap();
-    let sim = SimConfig {
-        threads,
-        schedule: Schedule::Static { chunk: 1 },
-        stats_strategy: strategy,
-        ..SimConfig::default()
-    };
-    let mut gs = GpuSim::new(GpuConfig::tiny(), sim);
-    let stats = gs.run_workload(&wl);
+    let mut session = SimBuilder::new()
+        .gpu(GpuConfig::tiny())
+        .workload_named(name, Scale::Ci)
+        .threads(threads)
+        .schedule(Schedule::Static { chunk: 1 })
+        .stats_strategy(strategy)
+        .build()
+        .expect("valid config");
+    session.run_to_completion().expect("run");
     let shared = if strategy == StatsStrategy::SharedLocked {
-        Some(gs.shared_stats().snapshot())
+        Some(session.sim().shared_stats().snapshot())
     } else {
         None
     };
-    (stats, shared)
+    (session.into_stats().expect("finished"), shared)
 }
 
 /// The unique-address count — the paper's worked example of a

@@ -1,14 +1,22 @@
 //! End-to-end invariants: every Table-2 workload simulates to completion
 //! on the tiny GPU with self-consistent statistics.
 
-use parsim::config::{GpuConfig, SimConfig};
-use parsim::engine::GpuSim;
+use parsim::config::GpuConfig;
 use parsim::trace::workloads::{self, Scale};
+use parsim::SimBuilder;
+
+fn run_on(name: &str, scale: Scale, gpu: GpuConfig) -> parsim::GpuStats {
+    let mut session = SimBuilder::new()
+        .gpu(gpu)
+        .workload_named(name, scale)
+        .build()
+        .expect("valid config");
+    session.run_to_completion().expect("run");
+    session.into_stats().expect("finished")
+}
 
 fn run_ci(name: &str) -> parsim::GpuStats {
-    let wl = workloads::build(name, Scale::Ci).unwrap();
-    let mut gs = GpuSim::new(GpuConfig::tiny(), SimConfig::default());
-    gs.run_workload(&wl)
+    run_on(name, Scale::Ci, GpuConfig::tiny())
 }
 
 /// All 19 workloads complete, with conservation laws intact.
@@ -83,11 +91,8 @@ fn workload_characters_are_right() {
 #[test]
 fn imbalance_signature() {
     let gpu = GpuConfig::rtx3080ti();
-    let sim = SimConfig::default();
     // cut_1: 20 CTAs on 80 SMs → exactly 20 SMs see work
-    let wl = workloads::build("cut_1", Scale::Ci).unwrap();
-    let mut gs = GpuSim::new(gpu.clone(), sim.clone());
-    let stats = gs.run_workload(&wl);
+    let stats = run_on("cut_1", Scale::Ci, gpu.clone());
     let busy = stats.kernels[0].per_sm.iter().filter(|s| s.ctas_launched > 0).count();
     assert_eq!(busy, 20, "cut_1 busy SMs");
     // and they are the *first* 20 (contiguous — the static-schedule trap)
@@ -96,9 +101,7 @@ fn imbalance_signature() {
     }
 
     // sssp: per-warp trip spread ⇒ uneven issued counts across busy SMs
-    let wl = workloads::build("sssp", Scale::Ci).unwrap();
-    let mut gs = GpuSim::new(gpu, sim);
-    let stats = gs.run_workload(&wl);
+    let stats = run_on("sssp", Scale::Ci, gpu);
     let k = stats
         .kernels
         .iter()
@@ -128,9 +131,7 @@ fn cache_behaviour_plausible() {
 fn scale_increases_simulated_work() {
     for name in ["nn", "pathfinder"] {
         let ci = run_ci(name);
-        let wl = workloads::build(name, Scale::Small).unwrap();
-        let mut gs = GpuSim::new(GpuConfig::tiny(), SimConfig::default());
-        let small = gs.run_workload(&wl);
+        let small = run_on(name, Scale::Small, GpuConfig::tiny());
         assert!(small.total_warp_insts() > ci.total_warp_insts(), "{name}");
     }
 }
