@@ -1,0 +1,106 @@
+//! Cluster engine demo: sweep a tensor-parallel split GEMM over
+//! 1/2/4-GPU clusters through the campaign engine, then run the 4-GPU
+//! point directly to print per-GPU vs aggregate statistics.
+//!
+//! Shows the three-level determinism story end to end: every GPU-count
+//! point lands in the campaign store with its own `(key, hash)` identity
+//! (a rerun is 100% cache hits), and the direct session exposes the
+//! fabric/communication breakdown per GPU.
+//!
+//! ```sh
+//! cargo run --release --example cluster_sweep
+//! ```
+
+use parsim::campaign::{self, CampaignConfig, CampaignSpec, RESULTS_JSONL};
+use parsim::config::{ClusterConfig, GpuConfig, Schedule, StatsStrategy};
+use parsim::trace::workloads::Scale;
+use parsim::SimBuilder;
+
+fn main() {
+    // --- 1. campaign sweep over GPU counts -------------------------------
+    let spec = CampaignSpec::cluster_matrix(
+        "cluster_sweep_demo",
+        &["tp_gemm"],
+        Scale::Ci,
+        &["tiny"],
+        &[1, 2, 4],
+        "p2p",
+        &[2],
+        &[Schedule::Static { chunk: 0 }],
+        &[StatsStrategy::PerSm],
+        0xC0FFEE,
+    );
+    let out = std::env::temp_dir().join(format!("parsim_cluster_sweep_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&out);
+
+    println!("campaign of {} cluster jobs → {}", spec.len(), out.display());
+    let cfg = CampaignConfig::default();
+    let r1 = campaign::run_campaign(&spec, &out, &cfg).expect("cluster campaign");
+    println!("{}\n", r1.summary());
+
+    let store = campaign::ResultStore::open(&r1.out_dir).expect("open store");
+    println!(
+        "{:>5} {:>14} {:>14} {:>12} {:>12}  {}",
+        "gpus", "gpu cycles", "warp insts", "comm cyc", "fabric B", "fingerprint"
+    );
+    for rec in store.records() {
+        println!(
+            "{:>5} {:>14} {:>14} {:>12} {:>12}  {:016x}",
+            rec.gpus,
+            rec.total_gpu_cycles,
+            rec.total_warp_insts,
+            rec.comm_cycles,
+            rec.fabric_bytes,
+            rec.fingerprint
+        );
+    }
+
+    // rerun: the content-hash cache must hit every GPU-count point
+    let bytes1 = std::fs::read(r1.out_dir.join(RESULTS_JSONL)).expect("read store");
+    let r2 = campaign::run_campaign(&spec, &out, &cfg).expect("rerun");
+    assert_eq!(r2.simulated, 0, "warm rerun must simulate nothing");
+    assert_eq!(r2.cache_hits, r2.total_jobs);
+    let bytes2 = std::fs::read(r2.out_dir.join(RESULTS_JSONL)).expect("read store");
+    assert_eq!(bytes1, bytes2, "store byte-identical across reruns");
+    println!("\nrerun: {}/{} cache hits, store byte-identical\n", r2.cache_hits, r2.total_jobs);
+
+    // --- 2. the 4-GPU point, directly, for the per-GPU breakdown ---------
+    let mut session = SimBuilder::new()
+        .gpu(GpuConfig::tiny())
+        .workload_named("tp_gemm", Scale::Ci)
+        .threads(2)
+        .cluster(ClusterConfig::p2p(4))
+        .build_cluster()
+        .expect("valid cluster config");
+    session.run_to_completion().expect("run");
+    let stats = session.stats().expect("finished");
+
+    println!("4-GPU tp_gemm, per GPU vs aggregate:");
+    println!(
+        "{:>5} {:>12} {:>14} {:>12} {:>12}",
+        "gpu", "cycles", "warp insts", "sent B", "recv B"
+    );
+    for (g, gs) in stats.per_gpu.iter().enumerate() {
+        println!(
+            "{:>5} {:>12} {:>14} {:>12} {:>12}",
+            g,
+            gs.total_gpu_cycles,
+            gs.total_warp_insts(),
+            stats.sent_bytes[g],
+            stats.recv_bytes[g]
+        );
+    }
+    println!(
+        "{:>5} {:>12} {:>14} {:>12} {:>12}   ({} lock-step cycles, {} comm)",
+        "all",
+        stats.total_cycles(),
+        stats.total_warp_insts(),
+        stats.sent_bytes.iter().sum::<u64>(),
+        stats.recv_bytes.iter().sum::<u64>(),
+        stats.cluster_cycles,
+        stats.comm_cycles
+    );
+    println!("\nJSONL export:\n{}", parsim::stats::export::cluster_stats_jsonl(stats));
+
+    std::fs::remove_dir_all(&out).ok();
+}

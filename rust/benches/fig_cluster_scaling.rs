@@ -1,0 +1,78 @@
+//! Cluster scaling: simulation throughput (simulated GPU-cycles per host
+//! second) vs GPU count × host thread count.
+//!
+//! The cluster engine fans the parallel phase out over flattened
+//! `(gpu, sm)` pairs, so adding GPUs multiplies the parallel work per
+//! lock-step cycle — on a multi-core host, throughput at `T` threads
+//! should hold up as the GPU count grows (the "same core budget as the
+//! paper's single-GPU loop" claim). On a single-core container the
+//! table instead quantifies the lock-step driver's overhead.
+//!
+//! Every cell also reports the run fingerprint; within a GPU-count row
+//! all fingerprints must agree (the determinism claim, checked here as
+//! a side effect of benchmarking).
+//!
+//! `BENCH_CLUSTER_GPUS=1,2,4 BENCH_CLUSTER_THREADS=1,2,4,8 \
+//!     cargo bench --bench fig_cluster_scaling`
+
+use std::time::Instant;
+
+use parsim::config::{ClusterConfig, GpuConfig};
+use parsim::trace::workloads::Scale;
+use parsim::SimBuilder;
+
+fn env_list(key: &str, default: &[usize]) -> Vec<usize> {
+    std::env::var(key)
+        .ok()
+        .map(|v| v.split(',').filter_map(|t| t.trim().parse().ok()).collect())
+        .unwrap_or_else(|| default.to_vec())
+}
+
+fn main() {
+    let gpu_counts = env_list("BENCH_CLUSTER_GPUS", &[1, 2, 4]);
+    let thread_counts = env_list("BENCH_CLUSTER_THREADS", &[1, 2, 4, 8]);
+    let host = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    println!(
+        "cluster scaling: tp_gemm (CI scale, tiny GPU), host parallelism {host}\n"
+    );
+    println!(
+        "{:>5} {:>8} {:>12} {:>14} {:>14} {:>10}  {}",
+        "gpus", "threads", "wall (s)", "gpu cycles", "Mcycles/s", "comm cyc", "fingerprint"
+    );
+
+    for &gpus in &gpu_counts {
+        let mut row_fp: Option<u64> = None;
+        for &threads in &thread_counts {
+            let mut session = SimBuilder::new()
+                .gpu(GpuConfig::tiny())
+                .workload_named("tp_gemm", Scale::Ci)
+                .threads(threads)
+                .cluster(ClusterConfig::p2p(gpus))
+                .build_cluster()
+                .expect("valid cluster config");
+            let t0 = Instant::now();
+            session.run_to_completion().expect("run");
+            let wall = t0.elapsed().as_secs_f64();
+            let stats = session.into_stats().expect("finished");
+            let fp = stats.fingerprint();
+            println!(
+                "{:>5} {:>8} {:>12.4} {:>14} {:>14.2} {:>10}  {:016x}",
+                gpus,
+                threads,
+                wall,
+                stats.total_cycles(),
+                stats.total_cycles() as f64 / wall / 1e6,
+                stats.comm_cycles,
+                fp
+            );
+            match row_fp {
+                None => row_fp = Some(fp),
+                Some(expect) => assert_eq!(
+                    expect, fp,
+                    "{gpus} GPUs: fingerprint diverged at {threads} threads"
+                ),
+            }
+        }
+        println!();
+    }
+}

@@ -42,7 +42,7 @@ pub mod store;
 pub use scheduler::{run_campaign, run_ordered, CampaignConfig, CampaignReport};
 pub use spec::{
     default_matrix, parse_schedule_token, parse_strategy_token, schedule_token, CampaignSpec,
-    JobSpec, STORE_SCHEMA_VERSION,
+    JobSpec, STORE_SCHEMA_VERSION, TOPOLOGY_SINGLE,
 };
 pub use store::{JobRecord, ResultStore, RESULTS_CSV, RESULTS_JSONL};
 

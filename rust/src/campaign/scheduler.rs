@@ -140,9 +140,25 @@ impl CampaignReport {
 
 /// Simulate one job at the given effective thread count (on the session
 /// API; `CampaignSpec::validate` ran before dispatch, so build errors
-/// here are scheduler bugs, not user input).
+/// here are scheduler bugs, not user input). Cluster jobs (any topology
+/// other than `single`) run on the cluster engine; both paths land in
+/// the same [`JobRecord`] shape.
 fn run_job(spec: &JobSpec, hash: u64, effective_threads: usize) -> JobRecord {
     let gpu = spec.build_gpu().expect("job validated before dispatch");
+    if let Some(cluster) =
+        spec.build_cluster_config().expect("job validated before dispatch")
+    {
+        let mut session = SimBuilder::new()
+            .gpu(gpu)
+            .sim(spec.to_sim_config(effective_threads))
+            .workload_named(spec.workload.as_str(), spec.scale)
+            .cluster(cluster)
+            .build_cluster()
+            .expect("job validated before dispatch");
+        session.run_to_completion().expect("campaign job runs to completion");
+        let stats = session.into_stats().expect("session finished");
+        return JobRecord::from_cluster_stats(spec, hash, &stats);
+    }
     let wl = workloads::build(&spec.workload, spec.scale).expect("job validated before dispatch");
     let mut session = SimBuilder::new()
         .gpu(gpu)

@@ -7,13 +7,21 @@
 //! schema version, so a cached result is only reused when everything
 //! that could change the simulation's output is unchanged.
 
-use crate::config::{presets, FunctionalMode, GpuConfig, Schedule, SimConfig, StatsStrategy};
+use crate::config::{
+    presets, ClusterConfig, FunctionalMode, GpuConfig, Schedule, SimConfig, StatsStrategy,
+};
 use crate::trace::workloads::{self, Scale};
 use crate::util::{mix2, mix64};
 
 /// Bump when the result-record format or its semantics change; folded
 /// into every content hash so stale stores never produce false cache hits.
-pub const STORE_SCHEMA_VERSION: u64 = 1;
+/// v2: job identity carries the GPU count and cluster topology (and the
+/// resolved fabric parameters in the hash), so multi-GPU results can
+/// never collide with cached single-GPU results for the same workload.
+pub const STORE_SCHEMA_VERSION: u64 = 2;
+
+/// The topology token of a plain (non-cluster) single-GPU job.
+pub const TOPOLOGY_SINGLE: &str = "single";
 
 /// Deterministic hash of an arbitrary string (8-byte chunks through the
 /// SplitMix64 finalizer chain).
@@ -77,17 +85,28 @@ pub struct JobSpec {
     pub seed: u64,
     /// Per-kernel cycle guard (0 = default).
     pub max_cycles: u64,
+    /// Simulated GPUs. `1` + [`TOPOLOGY_SINGLE`] = the plain single-GPU
+    /// engine; anything else runs on the cluster engine.
+    pub num_gpus: usize,
+    /// Fabric topology token (`single` / `p2p` / `switch`). Part of the
+    /// job identity: a 1-GPU *cluster* job is a different simulation
+    /// (lock-step driver, fabric present) than a plain job.
+    pub topology: String,
 }
 
 impl JobSpec {
     /// Canonical, sortable job key. This is the result store's primary
-    /// key and its deterministic output order.
+    /// key and its deterministic output order. GPU count and topology
+    /// are part of the key, so multi-GPU results can never collide with
+    /// cached single-GPU results for the same workload.
     pub fn key(&self) -> String {
         format!(
-            "wl={} scale={} gpu={} thr={} sched={} stats={} seed={:x} maxcyc={}",
+            "wl={} scale={} gpu={} gpus={} topo={} thr={} sched={} stats={} seed={:x} maxcyc={}",
             self.workload,
             self.scale.name(),
             self.gpu,
+            self.num_gpus,
+            self.topology,
             self.threads,
             schedule_token(self.schedule),
             self.stats_strategy.name(),
@@ -101,8 +120,34 @@ impl JobSpec {
         presets::by_name(&self.gpu).ok_or_else(|| format!("unknown GPU preset {:?}", self.gpu))
     }
 
-    /// Content hash: job key + the *resolved* GPU configuration + the
-    /// store schema version. If a preset's parameters change between
+    /// Is this a cluster-engine job (fabric + lock-step driver)?
+    pub fn is_cluster(&self) -> bool {
+        self.topology != TOPOLOGY_SINGLE
+    }
+
+    /// Resolve the cluster configuration of a cluster job.
+    pub fn build_cluster_config(&self) -> Result<Option<ClusterConfig>, String> {
+        if !self.is_cluster() {
+            if self.num_gpus != 1 {
+                return Err(format!(
+                    "topology {TOPOLOGY_SINGLE:?} requires num_gpus=1, got {}",
+                    self.num_gpus
+                ));
+            }
+            return Ok(None);
+        }
+        let cfg = ClusterConfig::by_topology(&self.topology, self.num_gpus)
+            .ok_or_else(|| format!("unknown cluster topology {:?}", self.topology))?;
+        // surface bad GPU counts (0, absurdly large) at validation time,
+        // not as a mid-campaign panic in the scheduler
+        cfg.validate()
+            .map_err(|errors| format!("invalid cluster config: {}", errors.join("; ")))?;
+        Ok(Some(cfg))
+    }
+
+    /// Content hash: job key + the *resolved* GPU configuration (and,
+    /// for cluster jobs, the resolved cluster/fabric configuration) +
+    /// the store schema version. If a preset's parameters change between
     /// simulator versions, cached results for it are invalidated even
     /// though the key is unchanged.
     pub fn content_hash(&self) -> Result<u64, String> {
@@ -110,7 +155,11 @@ impl JobSpec {
         // `Debug` of a plain-data struct tree is deterministic and covers
         // every modelled parameter.
         let gpu_fp = hash_str(&format!("{gpu:?}"));
-        Ok(mix2(mix2(hash_str(&self.key()), gpu_fp), STORE_SCHEMA_VERSION))
+        let mut h = mix2(mix2(hash_str(&self.key()), gpu_fp), STORE_SCHEMA_VERSION);
+        if let Some(cluster) = self.build_cluster_config()? {
+            h = mix2(h, hash_str(&format!("{cluster:?}")));
+        }
+        Ok(h)
     }
 
     /// The `SimConfig` for this job, with the scheduler-granted effective
@@ -129,11 +178,20 @@ impl JobSpec {
         }
     }
 
-    /// Validate that the job can run (workload and preset exist).
+    /// Validate that the job can run (workload, preset, and — for
+    /// cluster jobs — topology all resolve).
     pub fn validate(&self) -> Result<(), String> {
-        if !workloads::names().contains(&self.workload.as_str()) {
+        let single = workloads::names().contains(&self.workload.as_str());
+        if self.is_cluster() {
+            // cluster jobs accept multi-GPU names and replicated
+            // single-GPU names (mirrors SimBuilder::build_cluster)
+            if !single && !workloads::cluster_names().contains(&self.workload.as_str()) {
+                return Err(format!("unknown workload {:?}", self.workload));
+            }
+        } else if !single {
             return Err(format!("unknown workload {:?}", self.workload));
         }
+        self.build_cluster_config()?;
         self.build_gpu().map(|_| ())
     }
 }
@@ -155,7 +213,8 @@ impl CampaignSpec {
     }
 
     /// Expand the full cartesian matrix
-    /// `workloads × gpus × threads × schedules × strategies` at one scale.
+    /// `workloads × gpus × threads × schedules × strategies` at one
+    /// scale (plain single-GPU jobs).
     #[allow(clippy::too_many_arguments)]
     pub fn matrix(
         name: impl Into<String>,
@@ -167,22 +226,59 @@ impl CampaignSpec {
         strategies: &[StatsStrategy],
         seed: u64,
     ) -> Self {
+        Self::cluster_matrix(
+            name,
+            workload_names,
+            scale,
+            gpus,
+            &[1],
+            TOPOLOGY_SINGLE,
+            threads,
+            schedules,
+            strategies,
+            seed,
+        )
+    }
+
+    /// Expand a matrix that additionally sweeps **GPU counts** on one
+    /// fabric topology: `workloads × gpu presets × gpu_counts × threads
+    /// × schedules × strategies`. With `topology == TOPOLOGY_SINGLE`
+    /// every count must be 1 and jobs run on the plain engine; any other
+    /// topology runs every job (including 1-GPU ones) on the cluster
+    /// engine.
+    #[allow(clippy::too_many_arguments)]
+    pub fn cluster_matrix(
+        name: impl Into<String>,
+        workload_names: &[&str],
+        scale: Scale,
+        gpus: &[&str],
+        gpu_counts: &[usize],
+        topology: &str,
+        threads: &[usize],
+        schedules: &[Schedule],
+        strategies: &[StatsStrategy],
+        seed: u64,
+    ) -> Self {
         let mut jobs = Vec::new();
         for &wl in workload_names {
             for &gpu in gpus {
-                for &thr in threads {
-                    for &sched in schedules {
-                        for &strat in strategies {
-                            jobs.push(JobSpec {
-                                workload: wl.to_string(),
-                                scale,
-                                gpu: gpu.to_string(),
-                                threads: thr,
-                                schedule: sched,
-                                stats_strategy: strat,
-                                seed,
-                                max_cycles: 0,
-                            });
+                for &num_gpus in gpu_counts {
+                    for &thr in threads {
+                        for &sched in schedules {
+                            for &strat in strategies {
+                                jobs.push(JobSpec {
+                                    workload: wl.to_string(),
+                                    scale,
+                                    gpu: gpu.to_string(),
+                                    threads: thr,
+                                    schedule: sched,
+                                    stats_strategy: strat,
+                                    seed,
+                                    max_cycles: 0,
+                                    num_gpus,
+                                    topology: topology.to_string(),
+                                });
+                            }
                         }
                     }
                 }
@@ -250,6 +346,8 @@ mod tests {
             stats_strategy: StatsStrategy::PerSm,
             seed: 1,
             max_cycles: 0,
+            num_gpus: 1,
+            topology: TOPOLOGY_SINGLE.into(),
         }
     }
 
@@ -295,6 +393,78 @@ mod tests {
         let mut g = job("nn", 2);
         g.gpu = "rtx3080ti".into();
         assert_ne!(a, g.content_hash().unwrap());
+    }
+
+    #[test]
+    fn gpu_count_and_topology_are_part_of_key_and_hash() {
+        // the store-collision fix: a multi-GPU job must never reuse a
+        // cached single-GPU record for the same workload (and vice versa)
+        let single = job("nn", 2);
+        let mut quad = single.clone();
+        quad.num_gpus = 4;
+        quad.topology = "p2p".into();
+        assert_ne!(single.key(), quad.key());
+        assert_ne!(single.content_hash().unwrap(), quad.content_hash().unwrap());
+
+        // a 1-GPU *cluster* job is a different simulation than a plain job
+        let mut one_gpu_cluster = single.clone();
+        one_gpu_cluster.topology = "p2p".into();
+        assert_ne!(single.key(), one_gpu_cluster.key());
+        assert_ne!(
+            single.content_hash().unwrap(),
+            one_gpu_cluster.content_hash().unwrap()
+        );
+
+        // topology changes the resolved fabric → different hash
+        let mut switched = quad.clone();
+        switched.topology = "switch".into();
+        assert_ne!(quad.content_hash().unwrap(), switched.content_hash().unwrap());
+
+        // bad combinations are rejected
+        let mut bad = single.clone();
+        bad.num_gpus = 2; // topology still "single"
+        assert!(bad.content_hash().is_err());
+        assert!(bad.validate().is_err());
+        let mut bad = quad.clone();
+        bad.topology = "torus".into();
+        assert!(bad.validate().is_err());
+        // bad GPU counts fail at validation time, not mid-campaign
+        let mut bad = quad.clone();
+        bad.num_gpus = 0;
+        assert!(bad.validate().unwrap_err().contains("invalid cluster config"));
+        bad.num_gpus = 128;
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn cluster_matrix_expands_gpu_counts_and_validates() {
+        let c = CampaignSpec::cluster_matrix(
+            "t",
+            &["tp_gemm", "nn"],
+            Scale::Ci,
+            &["tiny"],
+            &[1, 2, 4],
+            "p2p",
+            &[1],
+            &[Schedule::Static { chunk: 0 }],
+            &[StatsStrategy::PerSm],
+            1,
+        );
+        assert_eq!(c.len(), 6);
+        c.validate().expect("cluster matrix valid");
+        assert!(c.jobs().iter().all(|j| j.is_cluster()));
+        // a cluster-only workload in a single-GPU matrix is rejected
+        let c = CampaignSpec::matrix(
+            "t",
+            &["tp_gemm"],
+            Scale::Ci,
+            &["tiny"],
+            &[1],
+            &[Schedule::Static { chunk: 0 }],
+            &[StatsStrategy::PerSm],
+            1,
+        );
+        assert_eq!(c.validate().unwrap_err().len(), 1);
     }
 
     #[test]

@@ -37,22 +37,31 @@ pub struct JobRecord {
     pub workload: String,
     pub scale: String,
     pub gpu: String,
+    /// Simulated GPU count (1 for plain jobs).
+    pub gpus: u64,
+    /// Fabric topology token (`single` for plain jobs).
+    pub topology: String,
     pub threads: u64,
     pub schedule: String,
     pub stats: String,
     pub seed: u64,
+    /// Kernel launches simulated (per GPU × GPU count for cluster jobs).
     pub kernels: u64,
     pub total_gpu_cycles: u64,
     pub total_warp_insts: u64,
     pub total_thread_insts: u64,
     /// Sum of per-kernel distinct-global-line counts.
     pub unique_lines: u64,
+    /// Cluster communication cycles (0 for plain jobs).
+    pub comm_cycles: u64,
+    /// Bytes delivered over the inter-GPU fabric (0 for plain jobs).
+    pub fabric_bytes: u64,
     /// Run-level statistics fingerprint (determinism witness).
     pub fingerprint: u64,
 }
 
 impl JobRecord {
-    /// Build the record for a finished job.
+    /// Build the record for a finished plain (single-GPU) job.
     pub fn from_stats(spec: &JobSpec, hash: u64, stats: &GpuStats) -> JobRecord {
         JobRecord {
             key: spec.key(),
@@ -60,6 +69,8 @@ impl JobRecord {
             workload: spec.workload.clone(),
             scale: spec.scale.name().to_string(),
             gpu: spec.gpu.clone(),
+            gpus: spec.num_gpus as u64,
+            topology: spec.topology.clone(),
             threads: spec.threads as u64,
             schedule: super::spec::schedule_token(spec.schedule),
             stats: spec.stats_strategy.name().to_string(),
@@ -69,6 +80,39 @@ impl JobRecord {
             total_warp_insts: stats.total_warp_insts(),
             total_thread_insts: stats.total_thread_insts(),
             unique_lines: stats.kernels.iter().map(|k| k.unique_lines_global).sum(),
+            comm_cycles: 0,
+            fabric_bytes: 0,
+            fingerprint: stats.fingerprint(),
+        }
+    }
+
+    /// Build the record for a finished cluster job (totals are summed
+    /// over GPUs; the fingerprint is the cluster fingerprint, which
+    /// folds in every per-GPU fingerprint and the fabric history).
+    pub fn from_cluster_stats(
+        spec: &JobSpec,
+        hash: u64,
+        stats: &crate::cluster::ClusterStats,
+    ) -> JobRecord {
+        JobRecord {
+            key: spec.key(),
+            hash,
+            workload: spec.workload.clone(),
+            scale: spec.scale.name().to_string(),
+            gpu: spec.gpu.clone(),
+            gpus: spec.num_gpus as u64,
+            topology: spec.topology.clone(),
+            threads: spec.threads as u64,
+            schedule: super::spec::schedule_token(spec.schedule),
+            stats: spec.stats_strategy.name().to_string(),
+            seed: spec.seed,
+            kernels: stats.per_gpu.iter().map(|g| g.kernels.len() as u64).sum(),
+            total_gpu_cycles: stats.total_cycles(),
+            total_warp_insts: stats.total_warp_insts(),
+            total_thread_insts: stats.total_thread_insts(),
+            unique_lines: stats.total_unique_lines(),
+            comm_cycles: stats.comm_cycles,
+            fabric_bytes: stats.fabric.bytes_delivered,
             fingerprint: stats.fingerprint(),
         }
     }
@@ -81,6 +125,8 @@ impl JobRecord {
         jsonl_str(&mut out, "workload", &self.workload, false);
         jsonl_str(&mut out, "scale", &self.scale, false);
         jsonl_str(&mut out, "gpu", &self.gpu, false);
+        jsonl_u64(&mut out, "gpus", self.gpus, false);
+        jsonl_str(&mut out, "topology", &self.topology, false);
         jsonl_u64(&mut out, "threads", self.threads, false);
         jsonl_str(&mut out, "schedule", &self.schedule, false);
         jsonl_str(&mut out, "stats", &self.stats, false);
@@ -90,6 +136,8 @@ impl JobRecord {
         jsonl_u64(&mut out, "total_warp_insts", self.total_warp_insts, false);
         jsonl_u64(&mut out, "total_thread_insts", self.total_thread_insts, false);
         jsonl_u64(&mut out, "unique_lines", self.unique_lines, false);
+        jsonl_u64(&mut out, "comm_cycles", self.comm_cycles, false);
+        jsonl_u64(&mut out, "fabric_bytes", self.fabric_bytes, false);
         jsonl_str(&mut out, "fingerprint", &format!("{:016x}", self.fingerprint), false);
         out.push('}');
         out
@@ -115,12 +163,37 @@ impl JobRecord {
             let h = s(k)?;
             u64::from_str_radix(&h, 16).map_err(|e| format!("bad hex field {k:?}={h:?}: {e}"))
         };
+        // Fields introduced by schema v2 default only when **absent**
+        // (a store written by an older simulator still loads; its
+        // records can never cache-hit — their hashes carry the old
+        // schema version — and are purged on open). A field that is
+        // present but ill-typed is corruption and stays a hard error,
+        // like every other field.
+        let u_or = |k: &str, default: u64| -> Result<u64, String> {
+            match map.get(k) {
+                None => Ok(default),
+                Some(v) => v
+                    .as_u64()
+                    .ok_or_else(|| format!("missing/invalid integer field {k:?}")),
+            }
+        };
+        let s_or = |k: &str, default: &str| -> Result<String, String> {
+            match map.get(k) {
+                None => Ok(default.to_string()),
+                Some(v) => v
+                    .as_str()
+                    .map(str::to_string)
+                    .ok_or_else(|| format!("missing/invalid string field {k:?}")),
+            }
+        };
         Ok(JobRecord {
             key: s("key")?,
             hash: hex("hash")?,
             workload: s("workload")?,
             scale: s("scale")?,
             gpu: s("gpu")?,
+            gpus: u_or("gpus", 1)?,
+            topology: s_or("topology", super::spec::TOPOLOGY_SINGLE)?,
             threads: u("threads")?,
             schedule: s("schedule")?,
             stats: s("stats")?,
@@ -130,24 +203,38 @@ impl JobRecord {
             total_warp_insts: u("total_warp_insts")?,
             total_thread_insts: u("total_thread_insts")?,
             unique_lines: u("unique_lines")?,
+            comm_cycles: u_or("comm_cycles", 0)?,
+            fabric_bytes: u_or("fabric_bytes", 0)?,
             fingerprint: hex("fingerprint")?,
         })
     }
 
+    /// Was this record written by the current key schema? Pre-v2 keys
+    /// lack the `gpus=` token; such records can never cache-hit (their
+    /// hashes fold the old schema version), so [`ResultStore::open`]
+    /// drops them instead of letting stale rows shadow their
+    /// re-simulated replacements forever under a different key.
+    pub fn key_is_current_schema(&self) -> bool {
+        self.key.contains(" gpus=")
+    }
+
     /// CSV header matching [`JobRecord::csv_row`].
     pub fn csv_header() -> &'static str {
-        "key,workload,scale,gpu,threads,schedule,stats,seed,kernels,\
-         total_gpu_cycles,total_warp_insts,total_thread_insts,unique_lines,fingerprint"
+        "key,workload,scale,gpu,gpus,topology,threads,schedule,stats,seed,kernels,\
+         total_gpu_cycles,total_warp_insts,total_thread_insts,unique_lines,\
+         comm_cycles,fabric_bytes,fingerprint"
     }
 
     /// One CSV row (keys contain spaces but never commas/quotes).
     pub fn csv_row(&self) -> String {
         format!(
-            "{},{},{},{},{},{},{},{:x},{},{},{},{},{},{:016x}",
+            "{},{},{},{},{},{},{},{},{},{:x},{},{},{},{},{},{},{},{:016x}",
             self.key,
             self.workload,
             self.scale,
             self.gpu,
+            self.gpus,
+            self.topology,
             self.threads,
             self.schedule,
             self.stats,
@@ -157,6 +244,8 @@ impl JobRecord {
             self.total_warp_insts,
             self.total_thread_insts,
             self.unique_lines,
+            self.comm_cycles,
+            self.fabric_bytes,
             self.fingerprint
         )
     }
@@ -191,7 +280,12 @@ impl ResultStore {
                 }
                 let rec = JobRecord::from_jsonl(line)
                     .map_err(|e| format!("{}:{}: {e}", path.display(), i + 1))?;
-                records.insert(rec.key.clone(), rec);
+                // migration: drop pre-v2 records — their keys differ
+                // from the current format, so keeping them would leave
+                // permanently stale rows beside the re-simulated ones
+                if rec.key_is_current_schema() {
+                    records.insert(rec.key.clone(), rec);
+                }
             }
         }
         Ok(ResultStore { dir: dir.to_path_buf(), records })
@@ -279,6 +373,8 @@ mod tests {
             stats_strategy: StatsStrategy::PerSm,
             seed: 0xC0FFEE,
             max_cycles: 0,
+            num_gpus: 1,
+            topology: super::super::spec::TOPOLOGY_SINGLE.into(),
         }
     }
 
@@ -289,6 +385,8 @@ mod tests {
             workload: "nn".into(),
             scale: "ci".into(),
             gpu: "tiny".into(),
+            gpus: 4,
+            topology: "p2p".into(),
             threads: 4,
             schedule: "dynamic:1".into(),
             stats: "per-sm".into(),
@@ -298,6 +396,8 @@ mod tests {
             total_warp_insts: 98765,
             total_thread_insts: 3_160_480,
             unique_lines: 2048,
+            comm_cycles: 777,
+            fabric_bytes: 1 << 33,
             fingerprint: u64::MAX - 7, // above 2^53: must survive exactly
         }
     }
@@ -332,6 +432,41 @@ mod tests {
         assert_eq!(st.render_jsonl(), st2.render_jsonl());
         assert_eq!(st.render_csv(), st2.render_csv());
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn schema_v1_lines_load_with_defaults_instead_of_hard_failing() {
+        // a record as the v1 (PR-1) store wrote it: no gpus / topology /
+        // comm_cycles / fabric_bytes members
+        let v1 = "{\"key\": \"wl=nn scale=ci\", \"hash\": \"00000000deadbeef\", \
+                  \"workload\": \"nn\", \"scale\": \"ci\", \"gpu\": \"tiny\", \
+                  \"threads\": 4, \"schedule\": \"dynamic:1\", \"stats\": \"per-sm\", \
+                  \"seed\": \"c0ffee\", \"kernels\": 1, \"total_gpu_cycles\": 10, \
+                  \"total_warp_insts\": 20, \"total_thread_insts\": 30, \
+                  \"unique_lines\": 2, \"fingerprint\": \"0000000000000001\"}";
+        let rec = JobRecord::from_jsonl(v1).expect("v1 record loads");
+        assert_eq!(rec.gpus, 1);
+        assert_eq!(rec.topology, super::super::spec::TOPOLOGY_SINGLE);
+        assert_eq!((rec.comm_cycles, rec.fabric_bytes), (0, 0));
+        assert!(!rec.key_is_current_schema(), "pre-v2 key detected");
+
+        // opening a store holding that line purges it (no permanently
+        // stale rows beside the re-keyed v2 replacements) instead of
+        // hard-failing
+        let dir = std::env::temp_dir().join(format!("parsim_store_v1_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join(RESULTS_JSONL), format!("{v1}\n")).unwrap();
+        let st = ResultStore::open(&dir).expect("v1 store opens");
+        assert!(st.is_empty(), "stale pre-v2 records are dropped on open");
+        std::fs::remove_dir_all(&dir).ok();
+
+        // present-but-ill-typed v2 fields stay a hard error (corruption,
+        // not migration)
+        let bad = v1
+            .replace("\"unique_lines\": 2", "\"unique_lines\": 2, \"comm_cycles\": \"777\"");
+        let e = JobRecord::from_jsonl(&bad).unwrap_err();
+        assert!(e.contains("comm_cycles"), "{e}");
     }
 
     #[test]

@@ -100,6 +100,32 @@ impl Args {
             }),
         }
     }
+
+    /// A comma-separated list option (`--key a,b,c`), trimmed, with
+    /// empty entries dropped. `None` when the option is absent.
+    pub fn get_list(&self, key: &str) -> Option<Vec<String>> {
+        self.options.get(key).map(|v| {
+            v.split(',').map(str::trim).filter(|t| !t.is_empty()).map(str::to_string).collect()
+        })
+    }
+
+    /// A comma-separated list of unsigned integers (`--key 1,2,4`).
+    pub fn get_usize_list(&self, key: &str) -> Result<Option<Vec<usize>>, CliError> {
+        match self.get_list(key) {
+            None => Ok(None),
+            Some(items) => items
+                .iter()
+                .map(|t| {
+                    t.parse().map_err(|_| CliError::BadValue {
+                        key: key.into(),
+                        value: t.clone(),
+                        expected: "comma-separated unsigned integers",
+                    })
+                })
+                .collect::<Result<Vec<_>, _>>()
+                .map(Some),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -143,5 +169,21 @@ mod tests {
     fn bad_value_error() {
         let a = Args::parse(&argv(&["--threads", "many"]), &["threads"], &[]).unwrap();
         assert!(matches!(a.get_usize("threads", 1), Err(CliError::BadValue { .. })));
+    }
+
+    #[test]
+    fn list_options() {
+        let a = Args::parse(
+            &argv(&["--workloads", "nn, hotspot,,mst", "--gpu-counts", "1,2,4"]),
+            &["workloads", "gpu-counts"],
+            &[],
+        )
+        .unwrap();
+        assert_eq!(a.get_list("workloads").unwrap(), vec!["nn", "hotspot", "mst"]);
+        assert_eq!(a.get_usize_list("gpu-counts").unwrap().unwrap(), vec![1, 2, 4]);
+        assert_eq!(a.get_list("missing"), None);
+        assert_eq!(a.get_usize_list("missing").unwrap(), None);
+        let bad = Args::parse(&argv(&["--gpu-counts", "1,x"]), &["gpu-counts"], &[]).unwrap();
+        assert!(matches!(bad.get_usize_list("gpu-counts"), Err(CliError::BadValue { .. })));
     }
 }

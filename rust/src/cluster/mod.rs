@@ -1,0 +1,877 @@
+//! Cluster engine: deterministic multi-GPU simulation — N [`GpuSim`]
+//! instances lock-stepped on a shared cluster cycle, connected by an
+//! inter-GPU [`fabric`], driven through the same session surface
+//! (observers, stop conditions, checkpoints) as a single-GPU run.
+//!
+//! # The three-level determinism argument
+//!
+//! The paper's single-GPU claim is that the parallel SM phase cannot
+//! perturb statistics because SMs touch only their own state between two
+//! sequential synchronization points, and everything shared (the
+//! interconnect) is totally ordered by `(ready_cycle, seq)`. The cluster
+//! engine extends that argument one level up, so the whole hierarchy is
+//! deterministic by construction:
+//!
+//! 1. **Fabric (cluster level).** Inter-GPU traffic exists only in
+//!    communication phases between kernels. Packets are injected in
+//!    fixed GPU-index order from the cluster's sequential phase and
+//!    delivered in `(ready_cycle, seq)` total order
+//!    ([`fabric::Fabric`]), exactly the discipline [`crate::icnt`] uses
+//!    on chip — so peer traffic is a pure function of the workload's
+//!    [`CommPhase`](crate::trace::CommPhase) lists, never of host
+//!    threads.
+//! 2. **Per-GPU sequential phases (GPU level).** Every cluster cycle
+//!    first runs each GPU's sequential pipeline stages
+//!    (`GpuSim::cycle_sequential_pre`: icnt→SM, L2/DRAM, icnt drain)
+//!    **in fixed GPU-index order** on the driving thread, then the
+//!    sequential tail (`GpuSim::cycle_finish`: cycle count + CTA
+//!    issue) likewise. GPUs never share state, so their order is an
+//!    implementation convenience — but fixing it makes the schedule of
+//!    the whole cycle a constant.
+//! 3. **Parallel `(gpu, sm)` fan-out (SM level).** The paper's parallel
+//!    SM phase is lifted to the flattened pair space: all active GPUs'
+//!    SMs form one index range dispatched over one shared
+//!    [`ThreadPool`] through [`DisjointSlice`]s, so a 4-GPU × N-SM run
+//!    fills the same core budget the paper's single-GPU loop does.
+//!    Each SM still touches only its own state and ports (the
+//!    [`crate::core::Sm`] contract), so thread count and schedule
+//!    remain invisible to results.
+//!
+//! `tests/cluster.rs` asserts the consequence: a 4-GPU run is
+//! bit-identical — final statistics *and* mid-run
+//! [`SessionFingerprint`] checkpoints, including checkpoints taken
+//! mid-communication — across 1/4/8 host threads and both OpenMP-style
+//! schedules, and a 1-GPU cluster run matches the plain single-GPU
+//! engine statistic for statistic.
+//!
+//! # Life cycle
+//!
+//! Kernels advance bulk-synchronously: compute phase `k` cycles every
+//! GPU until its `k`-th kernel drains (GPUs that finish early park, so
+//! per-GPU kernel cycle counts are identical to a standalone run), then
+//! the workload's `k`-th communication phase drains through the fabric,
+//! then phase `k + 1` starts. A parked GPU's cycle counter does not
+//! advance; the cluster's own counter ([`ClusterSession::cluster_cycle`])
+//! counts every lock-step cycle including communication.
+
+pub mod fabric;
+
+use std::collections::VecDeque;
+use std::time::Instant;
+
+use crate::config::{ClusterConfig, GpuConfig, Schedule, SimConfig};
+use crate::core::Sm;
+use crate::engine::pool::ThreadPool;
+use crate::engine::{
+    CycleView, DisjointSlice, GpuSim, Observer, SessionFingerprint, SessionStatus, SimError,
+    StopCondition,
+};
+use crate::stats::{GpuStats, KernelStats};
+use crate::trace::ClusterWorkloadSpec;
+use crate::util::{mix2, mix64};
+
+pub use fabric::{Fabric, FabricPacket, FabricStats};
+
+// ---------------------------------------------------------------------------
+// Aggregate statistics
+// ---------------------------------------------------------------------------
+
+/// Statistics of one cluster run: the familiar per-GPU [`GpuStats`] plus
+/// cluster-level aggregates (lock-step cycles, communication cycles,
+/// fabric traffic).
+#[derive(Debug, Clone)]
+pub struct ClusterStats {
+    pub workload: String,
+    pub num_gpus: usize,
+    /// One [`GpuStats`] per GPU, in GPU-index order. For a 1-GPU cluster
+    /// this entry is statistic-for-statistic identical to a plain
+    /// single-GPU run of the same workload.
+    pub per_gpu: Vec<GpuStats>,
+    /// Lock-step cluster cycles (compute + communication).
+    pub cluster_cycles: u64,
+    /// Cycles spent draining communication phases.
+    pub comm_cycles: u64,
+    pub fabric: FabricStats,
+    /// Bytes each GPU sent / received over the fabric.
+    pub sent_bytes: Vec<u64>,
+    pub recv_bytes: Vec<u64>,
+    /// Host wall-clock (excluded from the fingerprint, like
+    /// [`GpuStats::sim_wallclock_s`]).
+    pub sim_wallclock_s: f64,
+}
+
+impl ClusterStats {
+    /// Sum of simulated GPU cycles across the cluster.
+    pub fn total_cycles(&self) -> u64 {
+        self.per_gpu.iter().map(|g| g.total_gpu_cycles).sum()
+    }
+
+    pub fn total_warp_insts(&self) -> u64 {
+        self.per_gpu.iter().map(|g| g.total_warp_insts()).sum()
+    }
+
+    pub fn total_thread_insts(&self) -> u64 {
+        self.per_gpu.iter().map(|g| g.total_thread_insts()).sum()
+    }
+
+    /// Sum of per-kernel distinct-global-line counts across all GPUs.
+    pub fn total_unique_lines(&self) -> u64 {
+        self.per_gpu
+            .iter()
+            .flat_map(|g| g.kernels.iter())
+            .map(|k| k.unique_lines_global)
+            .sum()
+    }
+
+    /// Deterministic run fingerprint: every per-GPU fingerprint in GPU
+    /// order, the fabric's traffic history, and the cluster/communication
+    /// cycle counts. Bit-identical across thread counts and schedules ⇔
+    /// the three-level determinism argument holds.
+    pub fn fingerprint(&self) -> u64 {
+        let mut h = mix2(0xC1A5_7E12_0000_0000 ^ self.num_gpus as u64, self.cluster_cycles);
+        h = mix2(h, self.comm_cycles);
+        h = mix2(h, self.fabric.traffic_fp);
+        h = mix2(h, self.fabric.packets_delivered);
+        h = mix2(h, self.fabric.bytes_delivered);
+        for g in &self.per_gpu {
+            h = mix2(h, g.fingerprint());
+        }
+        for &b in self.sent_bytes.iter().chain(self.recv_bytes.iter()) {
+            h = mix2(h, b);
+        }
+        mix64(h)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The lock-step engine
+// ---------------------------------------------------------------------------
+
+/// Where the lock-step state machine stands.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Phase {
+    /// All GPUs are simulating kernel `kernel` (some may have finished
+    /// it and parked).
+    Compute { kernel: usize },
+    /// Kernel `kernel` completed everywhere; its communication phase is
+    /// draining through the fabric.
+    Comm { kernel: usize },
+    Done,
+}
+
+/// Lead-GPU counters captured right after a compute cycle (feeds
+/// [`CycleView`]s for observers and predicate stop conditions).
+#[derive(Debug, Clone, Copy, Default)]
+struct LeadSnap {
+    cycle: u64,
+    kernel_id: usize,
+    kernel_cycle: u64,
+    ctas_issued: u32,
+    total_ctas: u32,
+    warp_insts: u64,
+}
+
+/// What one lock-step cycle did (session-facing bookkeeping).
+struct StepOutcome {
+    status: SessionStatus,
+    /// Kernel index that started on every GPU this cycle.
+    started_kernel: Option<usize>,
+    /// Kernel index that completed on the *last* straggler this cycle.
+    completed_kernel: Option<usize>,
+    /// Whether this was a compute cycle (observers' per-cycle views
+    /// cover compute cycles; communication cycles surface via stats).
+    compute_cycle: bool,
+}
+
+/// The multi-GPU engine: owns the GPUs, the fabric, and the shared pool.
+struct ClusterSim {
+    cluster: ClusterConfig,
+    gpus: Vec<GpuSim>,
+    fabric: Fabric,
+    pool: Option<ThreadPool>,
+    schedule: Schedule,
+    wl: ClusterWorkloadSpec,
+    phase: Phase,
+    kernel_started: bool,
+    cluster_cycle: u64,
+    comm_cycles: u64,
+    /// Per-GPU "finished the current kernel" flags.
+    gpu_done: Vec<bool>,
+    /// Per-GPU completed kernel statistics.
+    completed: Vec<Vec<KernelStats>>,
+    /// Per-GPU warp instructions of completed kernels (incremental).
+    completed_warp_insts: Vec<u64>,
+    /// Per-source pending fabric packets `(dst, bytes)` of the active
+    /// communication phase.
+    pending: Vec<VecDeque<(u32, u32)>>,
+    sent_bytes: Vec<u64>,
+    recv_bytes: Vec<u64>,
+    /// Reusable flattened `(part, sm)` index map of the parallel phase.
+    pair_buf: Vec<(u32, u32)>,
+    capture_views: bool,
+    lead_snap: LeadSnap,
+}
+
+impl ClusterSim {
+    fn new(
+        gpu: GpuConfig,
+        sim: SimConfig,
+        cluster: ClusterConfig,
+        wl: ClusterWorkloadSpec,
+    ) -> Result<ClusterSim, SimError> {
+        if let Err(errors) = cluster.validate() {
+            return Err(SimError::InvalidClusterConfig { errors });
+        }
+        if let Err(errors) = wl.validate() {
+            return Err(SimError::InvalidSimConfig {
+                field: "cluster workload",
+                message: errors.join("; "),
+            });
+        }
+        if wl.num_gpus != cluster.num_gpus {
+            return Err(SimError::InvalidSimConfig {
+                field: "cluster",
+                message: format!(
+                    "workload {:?} is built for {} GPU(s), cluster has {}",
+                    wl.name, wl.num_gpus, cluster.num_gpus
+                ),
+            });
+        }
+        if sim.threads == 0 {
+            return Err(SimError::InvalidSimConfig {
+                field: "threads",
+                message: "must be ≥ 1 (1 = the vanilla sequential simulator)".into(),
+            });
+        }
+        let n = cluster.num_gpus;
+        // Each GPU runs single-threaded internals: the cluster owns the
+        // one shared pool and fans out over flattened (gpu, sm) pairs.
+        // Per-GPU profiler/cost-model instrumentation is meaningless
+        // under a shared lock-step driver, so it stays off.
+        let mut per_gpu_sim = sim.clone();
+        per_gpu_sim.threads = 1;
+        per_gpu_sim.profile = false;
+        per_gpu_sim.measure_work = false;
+        let gpus = (0..n)
+            .map(|_| GpuSim::try_new(gpu.clone(), per_gpu_sim.clone()))
+            .collect::<Result<Vec<_>, _>>()?;
+        let pool = if sim.threads > 1 { Some(ThreadPool::new(sim.threads)) } else { None };
+        let fabric = Fabric::new(cluster.fabric.clone(), n);
+        Ok(ClusterSim {
+            cluster,
+            gpus,
+            fabric,
+            pool,
+            schedule: sim.schedule,
+            phase: Phase::Compute { kernel: 0 },
+            kernel_started: false,
+            cluster_cycle: 0,
+            comm_cycles: 0,
+            gpu_done: vec![false; n],
+            completed: (0..n).map(|_| Vec::with_capacity(wl.kernels_per_gpu())).collect(),
+            completed_warp_insts: vec![0; n],
+            pending: (0..n).map(|_| VecDeque::new()).collect(),
+            sent_bytes: vec![0; n],
+            recv_bytes: vec![0; n],
+            pair_buf: Vec::new(),
+            capture_views: false,
+            lead_snap: LeadSnap::default(),
+            wl,
+        })
+    }
+
+    fn num_gpus(&self) -> usize {
+        self.gpus.len()
+    }
+
+    fn step(&mut self) -> Result<StepOutcome, SimError> {
+        match self.phase {
+            Phase::Done => Err(SimError::SessionFinished),
+            Phase::Compute { kernel } => self.step_compute(kernel),
+            Phase::Comm { kernel } => self.step_comm(kernel),
+        }
+    }
+
+    /// One lock-step compute cycle of kernel `k`.
+    fn step_compute(&mut self, k: usize) -> Result<StepOutcome, SimError> {
+        let n = self.gpus.len();
+        let mut started_kernel = None;
+        if !self.kernel_started {
+            for g in 0..n {
+                self.gpus[g].start_kernel(&self.wl.per_gpu[g].kernels[k]);
+                self.gpu_done[g] = false;
+            }
+            self.kernel_started = true;
+            started_kernel = Some(k);
+        }
+
+        // level 2: per-GPU sequential stages, fixed GPU-index order
+        for g in 0..n {
+            if !self.gpu_done[g] {
+                self.gpus[g].cycle_sequential_pre();
+            }
+        }
+        // level 3: one fan-out over all active (gpu, sm) pairs
+        self.parallel_sm_phase();
+        for g in 0..n {
+            if !self.gpu_done[g] {
+                self.gpus[g].cycle_finish();
+            }
+        }
+        self.cluster_cycle += 1;
+
+        if self.capture_views {
+            let g0 = &self.gpus[0];
+            self.lead_snap = LeadSnap {
+                cycle: self.cluster_cycle,
+                kernel_id: k,
+                kernel_cycle: g0.gpu_cycle() - g0.kernel_start_cycle(),
+                ctas_issued: g0.ctas_issued(),
+                total_ctas: g0.total_ctas(),
+                warp_insts: g0.warp_insts_so_far(),
+            };
+        }
+
+        // completion + deadlock guard, fixed GPU-index order
+        let mut completed_kernel = None;
+        for g in 0..n {
+            if self.gpu_done[g] {
+                continue;
+            }
+            if self.gpus[g].kernel_done() {
+                let ks = self.gpus[g].finish_kernel(&self.wl.per_gpu[g].kernels[k], k);
+                self.completed_warp_insts[g] += ks.sm.warp_insts_issued;
+                self.completed[g].push(ks);
+                self.gpu_done[g] = true;
+            } else {
+                let guard = self.gpus[g].cycle_guard();
+                if self.gpus[g].gpu_cycle() - self.gpus[g].kernel_start_cycle() >= guard {
+                    return Err(SimError::CycleLimitExceeded {
+                        kernel: self.wl.per_gpu[g].kernels[k].name.clone(),
+                        limit: guard,
+                    });
+                }
+            }
+        }
+
+        let status = if self.gpu_done.iter().all(|&d| d) {
+            completed_kernel = Some(k);
+            self.kernel_started = false;
+            self.begin_comm_or_advance(k)
+        } else {
+            SessionStatus::Running
+        };
+        Ok(StepOutcome { status, started_kernel, completed_kernel, compute_cycle: true })
+    }
+
+    /// Queue kernel `k`'s communication phase (if any), else advance.
+    fn begin_comm_or_advance(&mut self, k: usize) -> SessionStatus {
+        if self.wl.comms[k].is_empty() {
+            return self.next_kernel_or_done(k);
+        }
+        let packet_bytes = self.cluster.fabric.packet_bytes as u64;
+        let transfers = self.wl.comms[k].transfers.clone();
+        for t in transfers {
+            let mut rem = t.bytes;
+            while rem > 0 {
+                let sz = rem.min(packet_bytes) as u32;
+                self.pending[t.src as usize].push_back((t.dst, sz));
+                rem -= sz as u64;
+            }
+            self.sent_bytes[t.src as usize] += t.bytes;
+        }
+        self.phase = Phase::Comm { kernel: k };
+        SessionStatus::Running
+    }
+
+    fn next_kernel_or_done(&mut self, k: usize) -> SessionStatus {
+        if k + 1 < self.wl.kernels_per_gpu() {
+            self.phase = Phase::Compute { kernel: k + 1 };
+            SessionStatus::Running
+        } else {
+            self.phase = Phase::Done;
+            SessionStatus::Finished
+        }
+    }
+
+    /// One fabric cycle of the communication phase after kernel `k`:
+    /// inject up to `inject_rate` packets per source in fixed GPU order,
+    /// transfer, drain ejections in fixed GPU order.
+    fn step_comm(&mut self, k: usize) -> Result<StepOutcome, SimError> {
+        let n = self.gpus.len();
+        let now = self.cluster_cycle;
+        let rate = self.cluster.fabric.inject_rate as usize;
+        for src in 0..n {
+            for _ in 0..rate {
+                match self.pending[src].pop_front() {
+                    Some((dst, bytes)) => self.fabric.inject(src as u32, dst, bytes, now),
+                    None => break,
+                }
+            }
+        }
+        self.fabric.transfer(now);
+        for dst in 0..n {
+            while let Some(p) = self.fabric.eject(dst) {
+                self.recv_bytes[dst] += p.size_bytes as u64;
+            }
+        }
+        self.cluster_cycle += 1;
+        self.comm_cycles += 1;
+
+        let drained = self.fabric.is_idle() && self.pending.iter().all(|q| q.is_empty());
+        let status = if drained {
+            self.next_kernel_or_done(k)
+        } else {
+            SessionStatus::Running
+        };
+        Ok(StepOutcome {
+            status,
+            started_kernel: None,
+            completed_kernel: None,
+            compute_cycle: false,
+        })
+    }
+
+    /// The flattened `(gpu, sm)` parallel phase over all active GPUs.
+    fn parallel_sm_phase(&mut self) {
+        let Self { gpus, gpu_done, pool, schedule, pair_buf, .. } = self;
+        let mut parts: Vec<(u64, DisjointSlice<'_, Sm>, DisjointSlice<'_, u32>)> =
+            Vec::with_capacity(gpus.len());
+        pair_buf.clear();
+        for (g, gpu) in gpus.iter_mut().enumerate() {
+            if gpu_done[g] {
+                continue;
+            }
+            let (now, sms, work) = gpu.sm_parallel_parts();
+            let part = parts.len() as u32;
+            for s in 0..sms.len() as u32 {
+                pair_buf.push((part, s));
+            }
+            parts.push((now, DisjointSlice::new(sms), DisjointSlice::new(work)));
+        }
+        let pairs: &[(u32, u32)] = pair_buf;
+        let run = |i: usize| {
+            let (part, s) = pairs[i];
+            let (now, sms, work) = &parts[part as usize];
+            // SAFETY: the pool delivers each flattened index exactly once
+            // per region, and distinct indices address distinct SMs.
+            let w = unsafe { sms.get_mut(s as usize) }.cycle(*now);
+            unsafe { *work.get_mut(s as usize) = w };
+        };
+        match pool {
+            Some(pool) => pool.parallel_for(pairs.len(), *schedule, run),
+            None => {
+                for i in 0..pairs.len() {
+                    run(i);
+                }
+            }
+        }
+    }
+
+    /// Warp instructions issued so far across the whole cluster.
+    fn total_warp_insts_so_far(&self) -> u64 {
+        let mut total: u64 = self.completed_warp_insts.iter().sum();
+        if self.kernel_started {
+            for (g, gpu) in self.gpus.iter().enumerate() {
+                if !self.gpu_done[g] {
+                    total += gpu.warp_insts_so_far();
+                }
+            }
+        }
+        total
+    }
+
+    /// Kernel indices fully completed by every GPU.
+    fn kernels_completed(&self) -> usize {
+        self.completed.iter().map(|c| c.len()).min().unwrap_or(0)
+    }
+
+    /// Phase discriminant folded into checkpoints (a run paused at the
+    /// same cycle in a different phase must fingerprint differently).
+    fn phase_tag(&self) -> u64 {
+        match self.phase {
+            Phase::Compute { kernel } => (1 << 32) | kernel as u64,
+            Phase::Comm { kernel } => (2 << 32) | kernel as u64,
+            Phase::Done => 3 << 32,
+        }
+    }
+
+    /// Assemble final statistics (consumes the per-GPU kernel lists).
+    fn take_stats(&mut self, wall_s: f64) -> ClusterStats {
+        let Self { completed, wl, .. } = &mut *self;
+        let per_gpu: Vec<GpuStats> = completed
+            .iter_mut()
+            .enumerate()
+            .map(|(g, ks)| {
+                let kernels = std::mem::take(ks);
+                let total_gpu_cycles = kernels.iter().map(|k| k.cycles).sum();
+                GpuStats {
+                    workload: wl.per_gpu[g].name.clone(),
+                    kernels,
+                    sim_wallclock_s: wall_s,
+                    sm_section_s: wall_s,
+                    total_gpu_cycles,
+                }
+            })
+            .collect();
+        ClusterStats {
+            workload: self.wl.name.clone(),
+            num_gpus: self.gpus.len(),
+            per_gpu,
+            cluster_cycles: self.cluster_cycle,
+            comm_cycles: self.comm_cycles,
+            fabric: *self.fabric.stats(),
+            sent_bytes: self.sent_bytes.clone(),
+            recv_bytes: self.recv_bytes.clone(),
+            sim_wallclock_s: wall_s,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The session wrapper
+// ---------------------------------------------------------------------------
+
+/// A configured, steppable multi-GPU simulation. Obtain one from
+/// [`SimBuilder::build_cluster`](crate::engine::SimBuilder::build_cluster);
+/// the driving surface mirrors [`SimSession`](crate::engine::SimSession):
+///
+/// * [`step_cycle`](Self::step_cycle) / [`run`](Self::run) with the same
+///   [`StopCondition`]s (`KernelBoundary` pauses when a kernel completes
+///   on *every* GPU; `Predicate` and per-cycle [`Observer`] views read
+///   the lead GPU, and cover compute cycles — communication cycles are
+///   observable through [`ClusterStats`]).
+/// * [`Observer`]s are fed from the sequential driver loop:
+///   `on_kernel_start` / `on_kernel_end` fire once per GPU in GPU-index
+///   order, `on_finish` once per GPU with that GPU's [`GpuStats`].
+/// * [`checkpoint`](Self::checkpoint) returns a [`SessionFingerprint`]
+///   over every GPU's mid-kernel state, all completed kernels, and the
+///   fabric — bit-identical across thread counts and schedules at any
+///   pause point, including mid-communication.
+pub struct ClusterSession {
+    sim: ClusterSim,
+    observers: Vec<Box<dyn Observer>>,
+    cycle_observers: bool,
+    finished: Option<ClusterStats>,
+    wall_s: f64,
+}
+
+impl ClusterSession {
+    /// Engine-internal constructor — drivers go through
+    /// [`SimBuilder::build_cluster`](crate::engine::SimBuilder::build_cluster).
+    pub(crate) fn build(
+        gpu: GpuConfig,
+        sim: SimConfig,
+        cluster: ClusterConfig,
+        wl: ClusterWorkloadSpec,
+        observers: Vec<Box<dyn Observer>>,
+    ) -> Result<ClusterSession, SimError> {
+        let mut sim = ClusterSim::new(gpu, sim, cluster, wl)?;
+        let cycle_observers = observers.iter().any(|o| o.wants_cycles());
+        sim.capture_views = cycle_observers;
+        Ok(ClusterSession { sim, observers, cycle_observers, finished: None, wall_s: 0.0 })
+    }
+
+    /// Advance the cluster by one lock-step cycle.
+    pub fn step_cycle(&mut self) -> Result<SessionStatus, SimError> {
+        if self.finished.is_some() {
+            return Err(SimError::SessionFinished);
+        }
+        let t0 = Instant::now();
+        let r = self.step_inner().map(|o| o.status);
+        self.wall_s += t0.elapsed().as_secs_f64();
+        if matches!(r, Ok(SessionStatus::Finished)) {
+            self.finalize();
+        }
+        r
+    }
+
+    /// One cycle of the state machine plus observer dispatch. Does not
+    /// touch the wall clock or finalize (mirrors `SimSession`).
+    fn step_inner(&mut self) -> Result<StepOutcome, SimError> {
+        let out = self.sim.step()?;
+        let Self { sim, observers, cycle_observers, .. } = self;
+        if let Some(k) = out.started_kernel {
+            for wl_gpu in &sim.wl.per_gpu {
+                for obs in observers.iter_mut() {
+                    obs.on_kernel_start(&wl_gpu.kernels[k], k);
+                }
+            }
+        }
+        if out.compute_cycle && *cycle_observers {
+            let snap = &sim.lead_snap;
+            let view = CycleView {
+                cycle: snap.cycle,
+                kernel_id: snap.kernel_id,
+                kernel_name: &sim.wl.per_gpu[0].kernels[snap.kernel_id].name,
+                kernel_cycle: snap.kernel_cycle,
+                ctas_issued: snap.ctas_issued,
+                total_ctas: snap.total_ctas,
+                warp_insts: snap.warp_insts,
+                sim: &sim.gpus[0],
+            };
+            for obs in observers.iter_mut() {
+                obs.on_cycle(&view);
+            }
+        }
+        if out.completed_kernel.is_some() {
+            for (done, gpu) in sim.completed.iter().zip(&sim.gpus) {
+                let ks = done.last().expect("kernel completed on every GPU");
+                for obs in observers.iter_mut() {
+                    obs.on_kernel_end(ks, gpu);
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    fn finalize(&mut self) {
+        let stats = self.sim.take_stats(self.wall_s);
+        for gs in &stats.per_gpu {
+            for obs in &mut self.observers {
+                obs.on_finish(gs);
+            }
+        }
+        self.finished = Some(stats);
+    }
+
+    /// Step until `cond` fires or the workload completes (same contract
+    /// as [`SimSession::run`](crate::engine::SimSession::run)).
+    pub fn run(&mut self, mut cond: StopCondition) -> Result<SessionStatus, SimError> {
+        if self.finished.is_some() {
+            return Ok(SessionStatus::Finished);
+        }
+        let t0 = Instant::now();
+        let r = self.run_unclocked(&mut cond);
+        self.wall_s += t0.elapsed().as_secs_f64();
+        if matches!(r, Ok(SessionStatus::Finished)) {
+            self.finalize();
+        }
+        r
+    }
+
+    fn run_unclocked(&mut self, cond: &mut StopCondition) -> Result<SessionStatus, SimError> {
+        let start_cycle = self.sim.cluster_cycle;
+        self.sim.capture_views =
+            self.cycle_observers || matches!(*cond, StopCondition::Predicate(_));
+        loop {
+            let already_met = match &*cond {
+                StopCondition::CycleBudget(n) => self.sim.cluster_cycle - start_cycle >= *n,
+                StopCondition::InstructionCount(n) => self.sim.total_warp_insts_so_far() >= *n,
+                _ => false,
+            };
+            if already_met {
+                return Ok(SessionStatus::Running);
+            }
+            let out = self.step_inner()?;
+            if out.status == SessionStatus::Finished {
+                return Ok(SessionStatus::Finished);
+            }
+            let stop = match &mut *cond {
+                StopCondition::ToCompletion
+                | StopCondition::CycleBudget(_)
+                | StopCondition::InstructionCount(_) => false,
+                StopCondition::KernelBoundary => out.completed_kernel.is_some(),
+                StopCondition::Predicate(f) => {
+                    out.compute_cycle && {
+                        let snap = &self.sim.lead_snap;
+                        let view = CycleView {
+                            cycle: snap.cycle,
+                            kernel_id: snap.kernel_id,
+                            kernel_name: &self.sim.wl.per_gpu[0].kernels[snap.kernel_id].name,
+                            kernel_cycle: snap.kernel_cycle,
+                            ctas_issued: snap.ctas_issued,
+                            total_ctas: snap.total_ctas,
+                            warp_insts: snap.warp_insts,
+                            sim: &self.sim.gpus[0],
+                        };
+                        f(&view)
+                    }
+                }
+            };
+            if stop {
+                return Ok(SessionStatus::Running);
+            }
+        }
+    }
+
+    /// Run the whole workload to completion (resumable).
+    pub fn run_to_completion(&mut self) -> Result<(), SimError> {
+        self.run(StopCondition::ToCompletion).map(|_| ())
+    }
+
+    /// Cheap deterministic checkpoint: all completed kernels, every
+    /// GPU's live mid-kernel state, the fabric (including in-flight
+    /// packets mid-communication), and the phase.
+    pub fn checkpoint(&self) -> SessionFingerprint {
+        let mut h = 0xC1A5_7E12_5E55_10F9u64;
+        match &self.finished {
+            Some(stats) => {
+                for gs in &stats.per_gpu {
+                    for k in &gs.kernels {
+                        h = mix2(h, k.fingerprint());
+                    }
+                }
+                h = mix2(h, stats.fabric.traffic_fp);
+            }
+            None => {
+                for ks in &self.sim.completed {
+                    for k in ks {
+                        h = mix2(h, k.fingerprint());
+                    }
+                }
+                h = mix2(h, self.sim.fabric.fingerprint());
+            }
+        }
+        for gpu in &self.sim.gpus {
+            h = mix2(h, gpu.state_fingerprint());
+        }
+        h = mix2(h, self.sim.phase_tag());
+        SessionFingerprint {
+            cycle: self.sim.cluster_cycle,
+            kernels_completed: self.sim.kernels_completed(),
+            hash: mix64(h),
+        }
+    }
+
+    /// Lock-step cluster cycles elapsed (compute + communication).
+    pub fn cluster_cycle(&self) -> u64 {
+        self.sim.cluster_cycle
+    }
+
+    /// Cycles spent in communication phases so far.
+    pub fn comm_cycles(&self) -> u64 {
+        self.sim.comm_cycles
+    }
+
+    pub fn num_gpus(&self) -> usize {
+        self.sim.num_gpus()
+    }
+
+    /// Kernel indices completed by every GPU.
+    pub fn kernels_completed(&self) -> usize {
+        match &self.finished {
+            Some(stats) => stats.per_gpu.first().map(|g| g.kernels.len()).unwrap_or(0),
+            None => self.sim.kernels_completed(),
+        }
+    }
+
+    /// Warp instructions issued so far across the whole cluster.
+    pub fn total_warp_insts_so_far(&self) -> u64 {
+        match &self.finished {
+            Some(stats) => stats.total_warp_insts(),
+            None => self.sim.total_warp_insts_so_far(),
+        }
+    }
+
+    /// One member GPU's engine (ad-hoc reads).
+    pub fn gpu(&self, g: usize) -> &GpuSim {
+        &self.sim.gpus[g]
+    }
+
+    /// The workload being simulated.
+    pub fn workload(&self) -> &ClusterWorkloadSpec {
+        &self.sim.wl
+    }
+
+    pub fn is_finished(&self) -> bool {
+        self.finished.is_some()
+    }
+
+    /// Final statistics, once finished.
+    pub fn stats(&self) -> Option<&ClusterStats> {
+        self.finished.as_ref()
+    }
+
+    /// Consume the session, yielding the final statistics.
+    pub fn into_stats(self) -> Result<ClusterStats, SimError> {
+        self.finished.ok_or(SimError::SessionNotFinished)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::SimBuilder;
+    use crate::trace::workloads::Scale;
+
+    fn session(workload: &str, n_gpus: usize, threads: usize) -> ClusterSession {
+        SimBuilder::new()
+            .gpu(GpuConfig::tiny())
+            .workload_named(workload, Scale::Ci)
+            .threads(threads)
+            .cluster(ClusterConfig::p2p(n_gpus))
+            .build_cluster()
+            .expect("valid cluster config")
+    }
+
+    #[test]
+    fn two_gpu_tp_gemm_completes_with_fabric_traffic() {
+        let mut s = session("tp_gemm", 2, 1);
+        s.run_to_completion().unwrap();
+        let stats = s.into_stats().unwrap();
+        assert_eq!(stats.num_gpus, 2);
+        assert_eq!(stats.per_gpu.len(), 2);
+        assert!(stats.comm_cycles > 0, "all-reduce must cost cycles");
+        assert!(stats.fabric.packets_delivered > 0);
+        assert_eq!(stats.fabric.bytes_delivered, stats.sent_bytes.iter().sum::<u64>());
+        assert_eq!(stats.sent_bytes, stats.recv_bytes, "all-reduce is symmetric");
+        assert!(stats.cluster_cycles > stats.comm_cycles);
+        for g in &stats.per_gpu {
+            assert_eq!(g.kernels.len(), 2);
+            assert!(g.total_warp_insts() > 0);
+        }
+    }
+
+    #[test]
+    fn replicated_single_gpu_workload_has_no_traffic() {
+        let mut s = session("nn", 3, 1);
+        assert_eq!(s.workload().num_gpus, 3);
+        s.run_to_completion().unwrap();
+        let stats = s.into_stats().unwrap();
+        assert_eq!(stats.comm_cycles, 0);
+        assert_eq!(stats.fabric.packets_delivered, 0);
+        // identical replicas: identical per-GPU fingerprints
+        let fp0 = stats.per_gpu[0].fingerprint();
+        assert!(stats.per_gpu.iter().all(|g| g.fingerprint() == fp0));
+    }
+
+    #[test]
+    fn kernel_boundary_and_cycle_budget_stops() {
+        let mut s = session("tp_gemm", 2, 1);
+        assert_eq!(s.run(StopCondition::CycleBudget(10)).unwrap(), SessionStatus::Running);
+        assert_eq!(s.cluster_cycle(), 10);
+        assert_eq!(s.run(StopCondition::KernelBoundary).unwrap(), SessionStatus::Running);
+        assert_eq!(s.kernels_completed(), 1);
+        s.run_to_completion().unwrap();
+        assert!(s.is_finished());
+        assert_eq!(s.step_cycle().unwrap_err(), SimError::SessionFinished);
+        assert_eq!(s.run(StopCondition::CycleBudget(1)).unwrap(), SessionStatus::Finished);
+    }
+
+    #[test]
+    fn builder_rejects_bad_cluster_configs() {
+        let err = SimBuilder::new()
+            .gpu(GpuConfig::tiny())
+            .workload_named("tp_gemm", Scale::Ci)
+            .cluster(ClusterConfig::p2p(0))
+            .build_cluster()
+            .unwrap_err();
+        assert!(matches!(err, SimError::InvalidClusterConfig { .. }), "{err:?}");
+
+        let err = SimBuilder::new()
+            .gpu(GpuConfig::tiny())
+            .workload_named("no_such_workload", Scale::Ci)
+            .cluster(ClusterConfig::p2p(2))
+            .build_cluster()
+            .unwrap_err();
+        assert_eq!(err, SimError::UnknownWorkload { name: "no_such_workload".into() });
+
+        let err = SimBuilder::new()
+            .gpu(GpuConfig::tiny())
+            .workload_named("tp_gemm", Scale::Ci)
+            .build_cluster()
+            .unwrap_err();
+        assert!(matches!(err, SimError::InvalidSimConfig { field: "cluster", .. }), "{err:?}");
+    }
+}

@@ -351,6 +351,136 @@ impl GpuConfig {
     }
 }
 
+/// Inter-GPU fabric topology (cluster simulation).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FabricTopology {
+    /// NVLink-style direct point-to-point links between every GPU pair
+    /// (one zero-load link latency per hop).
+    PointToPoint,
+    /// All traffic crosses a central switch: two link hops plus the
+    /// switch's own latency, and the switch caps total packets delivered
+    /// per cycle across all destinations.
+    Switch,
+}
+
+impl FabricTopology {
+    pub fn name(&self) -> &'static str {
+        match self {
+            FabricTopology::PointToPoint => "p2p",
+            FabricTopology::Switch => "switch",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<FabricTopology> {
+        match s.to_ascii_lowercase().as_str() {
+            "p2p" | "nvlink" | "point-to-point" => Some(FabricTopology::PointToPoint),
+            "switch" | "switched" => Some(FabricTopology::Switch),
+            _ => None,
+        }
+    }
+}
+
+/// Inter-GPU fabric parameters ([`crate::cluster::fabric`]). Modeled with
+/// the same latency/bandwidth + `(ready_cycle, seq)` discipline as
+/// [`IcntConfig`], at inter-GPU scale.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FabricConfig {
+    pub topology: FabricTopology,
+    /// Zero-load latency of one link hop, in cluster (core) cycles.
+    pub link_latency: u32,
+    /// Flit (transfer granularity) size in bytes.
+    pub flit_bytes: u32,
+    /// Flits a link serializes per cycle (bandwidth = flit_bytes × rate).
+    pub link_rate: u32,
+    /// Extra latency through the switch ([`FabricTopology::Switch`]).
+    pub switch_latency: u32,
+    /// Packets a source GPU may inject per cycle.
+    pub inject_rate: u32,
+    /// Packets a destination GPU may eject per cycle.
+    pub output_rate: u32,
+    /// Per-destination ejection-queue capacity in packets.
+    pub eject_queue: usize,
+    /// Messages are segmented into packets of at most this many bytes.
+    pub packet_bytes: u32,
+}
+
+/// A simulated multi-GPU system: N identical GPUs lock-stepped on a
+/// shared cluster cycle, connected by a deterministic inter-GPU fabric
+/// ([`crate::cluster`]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClusterConfig {
+    pub num_gpus: usize,
+    pub fabric: FabricConfig,
+}
+
+impl ClusterConfig {
+    /// NVLink-style all-to-all preset. At the modelled 1365 MHz core
+    /// clock, 32 B/cycle ≈ 44 GB/s per link and ~0.5 µs zero-load
+    /// latency — the right order of magnitude for NVLink3.
+    pub fn p2p(num_gpus: usize) -> Self {
+        ClusterConfig {
+            num_gpus,
+            fabric: FabricConfig {
+                topology: FabricTopology::PointToPoint,
+                link_latency: 700,
+                flit_bytes: 32,
+                link_rate: 1,
+                switch_latency: 0,
+                inject_rate: 1,
+                output_rate: 2,
+                eject_queue: 16,
+                packet_bytes: 4096,
+            },
+        }
+    }
+
+    /// NVSwitch-style preset: same links, but every transfer crosses a
+    /// central switch (two hops + switch latency, shared delivery cap).
+    pub fn switched(num_gpus: usize) -> Self {
+        let mut c = Self::p2p(num_gpus);
+        c.fabric.topology = FabricTopology::Switch;
+        c.fabric.switch_latency = 300;
+        c
+    }
+
+    /// Resolve a topology preset by token (`p2p` / `switch`).
+    pub fn by_topology(topology: &str, num_gpus: usize) -> Option<Self> {
+        match FabricTopology::parse(topology)? {
+            FabricTopology::PointToPoint => Some(Self::p2p(num_gpus)),
+            FabricTopology::Switch => Some(Self::switched(num_gpus)),
+        }
+    }
+
+    /// Validate internal consistency; returns a human-readable error list.
+    pub fn validate(&self) -> Result<(), Vec<String>> {
+        let mut errs = Vec::new();
+        if self.num_gpus == 0 {
+            errs.push("num_gpus must be > 0".into());
+        }
+        if self.num_gpus > 64 {
+            errs.push(format!("num_gpus ({}) > 64 is untested", self.num_gpus));
+        }
+        let f = &self.fabric;
+        if f.flit_bytes == 0 || f.link_rate == 0 {
+            errs.push("fabric flit_bytes and link_rate must be > 0".into());
+        }
+        if f.inject_rate == 0 || f.output_rate == 0 {
+            errs.push("fabric inject_rate and output_rate must be > 0".into());
+        }
+        if f.eject_queue == 0 {
+            errs.push("fabric eject_queue must be > 0".into());
+        }
+        if f.packet_bytes == 0 {
+            errs.push("fabric packet_bytes must be > 0".into());
+        }
+        if errs.is_empty() {
+            Ok(())
+        } else {
+            Err(errs)
+        }
+    }
+}
+
 /// OpenMP-style for-loop schedule (paper §4.3).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Schedule {
@@ -498,6 +628,26 @@ mod tests {
     fn schedule_accessors() {
         assert_eq!(Schedule::Static { chunk: 2 }.name(), "static");
         assert_eq!(Schedule::Dynamic { chunk: 4 }.chunk(), 4);
+    }
+
+    #[test]
+    fn cluster_presets_validate_and_parse() {
+        for n in [1, 2, 4, 8] {
+            ClusterConfig::p2p(n).validate().expect("p2p");
+            ClusterConfig::switched(n).validate().expect("switched");
+        }
+        assert_eq!(FabricTopology::parse("p2p"), Some(FabricTopology::PointToPoint));
+        assert_eq!(FabricTopology::parse("nvlink"), Some(FabricTopology::PointToPoint));
+        assert_eq!(FabricTopology::parse("switch"), Some(FabricTopology::Switch));
+        assert_eq!(FabricTopology::parse("mesh"), None);
+        assert_eq!(
+            ClusterConfig::by_topology("switch", 4).unwrap().fabric.topology,
+            FabricTopology::Switch
+        );
+        assert!(ClusterConfig::by_topology("ring", 4).is_none());
+        let mut bad = ClusterConfig::p2p(0);
+        bad.fabric.packet_bytes = 0;
+        assert!(bad.validate().unwrap_err().len() >= 2);
     }
 
     #[test]

@@ -178,8 +178,20 @@ impl GpuSim {
         self.gpu_cycle
     }
 
-    /// One GPU cycle — Algorithm 1's `cycle()`.
+    /// One GPU cycle — Algorithm 1's `cycle()`. Composed of the three
+    /// parts below so the cluster engine ([`crate::cluster`]) can run the
+    /// sequential parts per GPU in fixed index order and fan the SM part
+    /// out over flattened `(gpu, sm)` pairs on one shared pool.
     pub fn cycle(&mut self) {
+        self.cycle_sequential_pre();
+        self.cycle_sm_parallel();
+        self.cycle_finish();
+    }
+
+    /// The sequential head of the cycle: deliver interconnect replies,
+    /// inject L2 replies, DRAM, L2, and the interconnect drain/transfer
+    /// (phases `doIcntToSm` … `doIcntScheduling` of Algorithm 1).
+    pub(crate) fn cycle_sequential_pre(&mut self) {
         let now = self.gpu_cycle;
         let n_sms = self.sms.len();
         self.profiler.begin_cycle();
@@ -257,8 +269,14 @@ impl GpuSim {
         }
         self.icnt.transfer(now);
         self.profiler.record(Phase::IcntSched, m);
+    }
 
-        // ---- the parallel SM section (paper §3) ----
+    /// The parallel SM section (paper §3), on this GPU's own pool (or
+    /// serially when `threads == 1`). The cluster engine substitutes its
+    /// own `(gpu, sm)` fan-out for this part via [`Self::sm_parallel_parts`].
+    fn cycle_sm_parallel(&mut self) {
+        let now = self.gpu_cycle;
+        let n_sms = self.sms.len();
         let m = self.profiler.mark();
         {
             let Self { pool, sms, work_buf, sim, .. } = self;
@@ -280,6 +298,11 @@ impl GpuSim {
             }
         }
         self.profiler.record(Phase::SmCycle, m);
+    }
+
+    /// The sequential tail of the cycle: cost-model capture, the cycle
+    /// counter increment, and `issueBlocksToSMs`.
+    pub(crate) fn cycle_finish(&mut self) {
         if let Some(cm) = &mut self.cost_model {
             cm.record_cycle(&self.work_buf);
         }
@@ -290,6 +313,17 @@ impl GpuSim {
         let m = self.profiler.mark();
         self.issue_blocks();
         self.profiler.record(Phase::Issue, m);
+    }
+
+    /// Split borrows for the cluster engine's flattened `(gpu, sm)`
+    /// fan-out: the GPU's current cycle, its SM slice, and the per-SM
+    /// work buffer. Between [`Self::cycle_sequential_pre`] and
+    /// [`Self::cycle_finish`] each SM touches only its own state, so a
+    /// caller may cycle the SMs of many GPUs concurrently through
+    /// [`DisjointSlice`]s over these parts.
+    pub(crate) fn sm_parallel_parts(&mut self) -> (u64, &mut [Sm], &mut [u32]) {
+        let Self { gpu_cycle, sms, work_buf, .. } = self;
+        (*gpu_cycle, sms.as_mut_slice(), work_buf.as_mut_slice())
     }
 
     /// Round-robin CTA dispatch, at most one new CTA per SM per cycle.

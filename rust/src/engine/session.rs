@@ -39,10 +39,13 @@ use std::fmt;
 use std::rc::Rc;
 use std::time::Instant;
 
-use crate::config::{presets, FunctionalMode, GpuConfig, Schedule, SimConfig, StatsStrategy};
+use crate::cluster::ClusterSession;
+use crate::config::{
+    presets, ClusterConfig, FunctionalMode, GpuConfig, Schedule, SimConfig, StatsStrategy,
+};
 use crate::stats::{GpuStats, KernelStats};
 use crate::trace::workloads::{self, Scale};
-use crate::trace::{KernelDesc, WorkloadSpec};
+use crate::trace::{ClusterWorkloadSpec, KernelDesc, WorkloadSpec};
 use crate::util::{mix2, mix64};
 
 use super::GpuSim;
@@ -64,6 +67,8 @@ pub enum SimError {
     UnknownWorkload { name: String },
     /// A [`SimConfig`] field is out of range.
     InvalidSimConfig { field: &'static str, message: String },
+    /// The cluster configuration failed [`ClusterConfig::validate`].
+    InvalidClusterConfig { errors: Vec<String> },
     /// `SimBuilder::build` was called without a workload.
     NoWorkload,
     /// The session already ran to completion.
@@ -86,12 +91,17 @@ impl fmt::Display for SimError {
             SimError::UnknownWorkload { name } => {
                 write!(
                     f,
-                    "unknown workload {name:?} (Table-2 names: {})",
-                    workloads::names().join(", ")
+                    "unknown workload {name:?} (Table-2 names: {}; multi-GPU: {}; \
+                     `parsim workloads` lists them all)",
+                    workloads::names().join(", "),
+                    workloads::cluster_names().join(", ")
                 )
             }
             SimError::InvalidSimConfig { field, message } => {
                 write!(f, "invalid SimConfig: {field} {message}")
+            }
+            SimError::InvalidClusterConfig { errors } => {
+                write!(f, "invalid ClusterConfig: {}", errors.join("; "))
             }
             SimError::NoWorkload => {
                 write!(f, "SimBuilder::build: no workload set (use .workload()/.workload_named())")
@@ -357,7 +367,24 @@ pub struct SimBuilder {
     sim: SimConfig,
     workload: Option<WorkloadSpec>,
     workload_name: Option<(String, Scale)>,
+    cluster: Option<ClusterConfig>,
+    cluster_workload: Option<ClusterWorkloadSpec>,
     observers: Vec<Box<dyn Observer>>,
+}
+
+/// Resolve the modelled GPU from the builder's by-value / by-preset pair
+/// (shared by [`SimBuilder::build`] and [`SimBuilder::build_cluster`]).
+fn resolve_gpu(
+    gpu: Option<GpuConfig>,
+    gpu_preset: Option<String>,
+) -> Result<GpuConfig, SimError> {
+    match (gpu, gpu_preset) {
+        (Some(gpu), _) => Ok(gpu),
+        (None, Some(name)) => {
+            presets::by_name(&name).ok_or(SimError::UnknownGpuPreset { name })
+        }
+        (None, None) => Ok(GpuConfig::rtx3080ti()),
+    }
 }
 
 impl SimBuilder {
@@ -456,20 +483,71 @@ impl SimBuilder {
         self
     }
 
+    /// Simulate a multi-GPU cluster: `cfg.num_gpus` lock-stepped GPUs on
+    /// a shared cycle, connected by the configured fabric. Finish the
+    /// builder with [`Self::build_cluster`] (a `build()` call with a
+    /// cluster configured is an error naming the right method).
+    pub fn cluster(mut self, cfg: ClusterConfig) -> Self {
+        self.cluster = Some(cfg);
+        self
+    }
+
+    /// The multi-GPU workload, by value (wins over
+    /// [`Self::workload`]/[`Self::workload_named`] in `build_cluster`).
+    pub fn cluster_workload(mut self, wl: ClusterWorkloadSpec) -> Self {
+        self.cluster_workload = Some(wl);
+        self
+    }
+
     /// Register an observer (repeatable; invoked in registration order).
     pub fn observer(mut self, obs: impl Observer + 'static) -> Self {
         self.observers.push(Box::new(obs));
         self
     }
 
+    /// Validate everything and construct a multi-GPU session. Workload
+    /// resolution: an explicit [`Self::cluster_workload`] wins; a
+    /// single-GPU workload set by value is replicated across GPUs (data
+    /// parallel, no fabric traffic); a name is resolved first against
+    /// the multi-GPU registry
+    /// ([`workloads::build_cluster`]) and then against
+    /// the Table-2 registry (replicated).
+    pub fn build_cluster(self) -> Result<ClusterSession, SimError> {
+        let cluster = self.cluster.ok_or(SimError::InvalidSimConfig {
+            field: "cluster",
+            message: "build_cluster() requires .cluster(ClusterConfig)".into(),
+        })?;
+        if let Err(errors) = cluster.validate() {
+            return Err(SimError::InvalidClusterConfig { errors });
+        }
+        let gpu = resolve_gpu(self.gpu, self.gpu_preset)?;
+        let n = cluster.num_gpus;
+        let wl = match (self.cluster_workload, self.workload, self.workload_name) {
+            (Some(cw), _, _) => cw,
+            (None, Some(wl), _) => ClusterWorkloadSpec::replicate(wl, n),
+            (None, None, Some((name, scale))) => {
+                match workloads::build_cluster(&name, scale, n) {
+                    Some(cw) => cw,
+                    None => match workloads::build(&name, scale) {
+                        Some(wl) => ClusterWorkloadSpec::replicate(wl, n),
+                        None => return Err(SimError::UnknownWorkload { name }),
+                    },
+                }
+            }
+            (None, None, None) => return Err(SimError::NoWorkload),
+        };
+        ClusterSession::build(gpu, self.sim, cluster, wl, self.observers)
+    }
+
     /// Validate everything and construct the session. Never panics.
     pub fn build(self) -> Result<SimSession, SimError> {
-        let gpu = match (self.gpu, self.gpu_preset) {
-            (Some(gpu), _) => gpu,
-            (None, Some(name)) => presets::by_name(&name)
-                .ok_or(SimError::UnknownGpuPreset { name })?,
-            (None, None) => GpuConfig::rtx3080ti(),
-        };
+        if self.cluster.is_some() {
+            return Err(SimError::InvalidSimConfig {
+                field: "cluster",
+                message: "a cluster is configured — finish with build_cluster()".into(),
+            });
+        }
+        let gpu = resolve_gpu(self.gpu, self.gpu_preset)?;
         let workload = match (self.workload, self.workload_name) {
             (Some(wl), _) => wl,
             (None, Some((name, scale))) => workloads::build(&name, scale)
@@ -880,6 +958,23 @@ mod tests {
             .gpu(GpuConfig::tiny())
             .workload_named("nn", Scale::Ci)
             .threads(threads)
+    }
+
+    #[test]
+    fn build_with_cluster_configured_points_at_build_cluster() {
+        let err = SimBuilder::new()
+            .gpu(GpuConfig::tiny())
+            .workload_named("nn", Scale::Ci)
+            .cluster(crate::config::ClusterConfig::p2p(2))
+            .build()
+            .unwrap_err();
+        match err {
+            SimError::InvalidSimConfig { field, message } => {
+                assert_eq!(field, "cluster");
+                assert!(message.contains("build_cluster"), "{message}");
+            }
+            other => panic!("wrong error: {other:?}"),
+        }
     }
 
     #[test]

@@ -349,6 +349,73 @@ pub fn fig7_report(scale: Scale) -> String {
 }
 
 // ---------------------------------------------------------------------------
+// Cluster scaling (multi-GPU lock-step engine)
+// ---------------------------------------------------------------------------
+
+/// Run one multi-GPU workload across a sweep of GPU counts and report
+/// cycles, communication share, fabric traffic, and the determinism
+/// witness per point (`parsim figure cluster`). Thread count is the
+/// host's available parallelism — results are thread-invariant, so the
+/// fingerprint column doubles as a live determinism check against the
+/// single-threaded rerun each row performs.
+pub fn fig_cluster_report(
+    workload: &str,
+    scale: Scale,
+    gpu: &GpuConfig,
+    gpu_counts: &[usize],
+) -> Result<String, SimError> {
+    use crate::config::ClusterConfig;
+
+    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let mut s = format!(
+        "Cluster scaling — {workload} (scale={}) on {} × N GPUs, p2p fabric\n\
+         (each row runs at {threads} thread(s) and re-runs at 1 thread; equal\n\
+         fingerprints are the three-level determinism argument, live)\n\n\
+         {:>5} {:>14} {:>11} {:>9} {:>13} {:>5}  {}\n",
+        scale.name(),
+        gpu.name,
+        "gpus",
+        "gpu cycles",
+        "comm cyc",
+        "comm %",
+        "fabric B",
+        "ok",
+        "fingerprint"
+    );
+    for &n in gpu_counts {
+        let run = |threads: usize| -> Result<crate::cluster::ClusterStats, SimError> {
+            let mut session = SimBuilder::new()
+                .gpu(gpu.clone())
+                .workload_named(workload, scale)
+                .threads(threads)
+                .cluster(ClusterConfig::p2p(n))
+                .build_cluster()?;
+            session.run_to_completion()?;
+            session.into_stats()
+        };
+        let par = run(threads)?;
+        let seq = run(1)?;
+        let fp = par.fingerprint();
+        let ok = fp == seq.fingerprint();
+        let comm_pct = 100.0 * par.comm_cycles as f64 / par.cluster_cycles.max(1) as f64;
+        s.push_str(&format!(
+            "{:>5} {:>14} {:>11} {:>8.1}% {:>13} {:>5}  {:016x}\n",
+            n,
+            par.total_cycles(),
+            par.comm_cycles,
+            comm_pct,
+            par.fabric.bytes_delivered,
+            if ok { "yes" } else { "NO" },
+            fp
+        ));
+        if !ok {
+            s.push_str("  ^ DETERMINISM VIOLATION — multi- and single-threaded runs differ\n");
+        }
+    }
+    Ok(s)
+}
+
+// ---------------------------------------------------------------------------
 // Real-execution speed-up (meaningful on multi-core hosts)
 // ---------------------------------------------------------------------------
 
@@ -463,6 +530,16 @@ mod tests {
         assert!(t2.contains("Rodinia 3.1") && t2.contains("Cutlass"));
         let t3 = table3_report();
         assert!(t3.contains("EPYC"));
+    }
+
+    #[test]
+    fn cluster_report_covers_counts_and_confirms_determinism() {
+        let r = fig_cluster_report("tp_gemm", Scale::Ci, &GpuConfig::tiny(), &[1, 2])
+            .expect("cluster report");
+        assert!(r.contains("tp_gemm"));
+        assert!(!r.contains("DETERMINISM VIOLATION"), "{r}");
+        // one row per GPU count, each ending in a yes marker + fingerprint
+        assert_eq!(r.matches(" yes  ").count(), 2, "{r}");
     }
 
     #[test]

@@ -30,6 +30,16 @@
 //!   artifacts (`artifacts/*.hlo.txt`) used to functionally validate the
 //!   GEMM-family workloads. Python never runs at simulation time. (Gated
 //!   behind the `xla` feature; the offline default builds a stub.)
+//! * [`cluster`] — deterministic **multi-GPU simulation**: N `GpuSim`
+//!   instances lock-stepped on a shared cluster cycle, connected by an
+//!   NVLink-style inter-GPU fabric (point-to-point links or a switch)
+//!   that uses the same `(ready_cycle, seq)` total-order discipline as
+//!   the on-chip interconnect. The engine's two-phase cycle becomes
+//!   three levels: fabric → per-GPU sequential phases (fixed GPU order)
+//!   → one parallel fan-out over all flattened `(gpu, sm)` pairs, so a
+//!   4-GPU × N-SM run fills the same core budget as the paper's
+//!   single-GPU loop — and stays bit-deterministic (see the
+//!   [`cluster`] module docs for the three-level argument).
 //! * [`campaign`] — batched multi-simulation orchestration: a
 //!   `workload × GpuConfig × SimConfig` job matrix, a work-stealing
 //!   multi-simulation scheduler with **two-level parallelism** (jobs run
@@ -88,9 +98,45 @@
 //! println!("cycles = {}", stats.total_cycles());
 //! # Ok(()) }
 //! ```
+//!
+//! ## Multi-GPU quickstart
+//!
+//! The same builder drives a cluster: configure the fabric, pick a
+//! multi-GPU workload (`tp_gemm`, `halo_stencil`, `graph_part` — or any
+//! Table-2 name, replicated data-parallel), and finish with
+//! `build_cluster()`. Observers, checkpoints, and stop conditions work
+//! unchanged.
+//!
+//! ```no_run
+//! use parsim::{ClusterConfig, Scale, SimBuilder, StopCondition};
+//!
+//! # fn main() -> Result<(), parsim::SimError> {
+//! let mut cluster = SimBuilder::new()
+//!     .gpu_preset("rtx3080ti")
+//!     .workload_named("tp_gemm", Scale::Ci)   // tensor-parallel split GEMM
+//!     .threads(8)                             // shared (gpu, sm) fan-out
+//!     .cluster(ClusterConfig::p2p(4))         // 4 GPUs, NVLink-style links
+//!     .build_cluster()?;
+//!
+//! cluster.run(StopCondition::KernelBoundary)?;        // layer 0 done everywhere
+//! let checkpoint = cluster.checkpoint();              // bit-stable mid-run
+//! println!("paused at cluster cycle {}", checkpoint.cycle);
+//!
+//! cluster.run_to_completion()?;
+//! let stats = cluster.stats().expect("finished");
+//! println!(
+//!     "{} GPUs: {} GPU-cycles, {} comm cycles, {} fabric bytes",
+//!     stats.num_gpus,
+//!     stats.total_cycles(),
+//!     stats.comm_cycles,
+//!     stats.fabric.bytes_delivered
+//! );
+//! # Ok(()) }
+//! ```
 
 pub mod campaign;
 pub mod cli;
+pub mod cluster;
 pub mod config;
 pub mod core;
 pub mod engine;
@@ -103,7 +149,8 @@ pub mod stats;
 pub mod trace;
 pub mod util;
 
-pub use config::{GpuConfig, SimConfig};
+pub use cluster::{ClusterSession, ClusterStats};
+pub use config::{ClusterConfig, GpuConfig, SimConfig};
 pub use engine::{
     GpuSim, Observer, SessionStatus, SimBuilder, SimError, SimSession, StopCondition,
 };

@@ -26,9 +26,12 @@ const VALUE_OPTS: &[&str] = &[
     "chunk", "seed", "export-dir",
     // session observers
     "sample-every", "progress-every",
+    // cluster options (`--gpus N` = GPU count; campaign reuses `--gpus`
+    // as its preset list, as documented per subcommand)
+    "gpus", "topology", "link-latency", "packet-bytes",
     // campaign options
-    "workloads", "gpus", "threads-list", "schedules", "stats-list", "workers", "core-budget",
-    "out", "name",
+    "workloads", "gpu-counts", "threads-list", "schedules", "stats-list", "workers",
+    "core-budget", "out", "name",
 ];
 const FLAG_OPTS: &[&str] =
     &["list", "show", "describe", "profile", "functional", "quiet", "help", "force"];
@@ -49,6 +52,7 @@ fn main() -> ExitCode {
     let cmd = args.positional[0].as_str();
     let r = match cmd {
         "run" => cmd_run(&args),
+        "cluster" => cmd_cluster(&args),
         "figure" => cmd_figure(&args),
         "workloads" => cmd_workloads(&args),
         "config" => cmd_config(&args),
@@ -76,8 +80,10 @@ fn print_help() {
          (reproduction of 'Parallelizing a modern GPU simulator', Huerta & González 2025)\n\n\
          commands:\n\
          \x20 run           simulate one workload and print statistics\n\
+         \x20 cluster       simulate N lock-stepped GPUs with an inter-GPU fabric\n\
          \x20 figure        regenerate a paper figure (fig1|fig4|fig5|fig6|fig7|all)\n\
-         \x20 workloads     list the Table-2 benchmark suite\n\
+         \x20               or the cluster-scaling table (cluster [--gpu-counts 1,2,4])\n\
+         \x20 workloads     list every registered workload (single- and multi-GPU)\n\
          \x20 config        show/list GPU presets (Table 1)\n\
          \x20 stats         describe reported statistics\n\
          \x20 determinism   run 1-thread vs N-thread and diff all statistics\n\
@@ -89,8 +95,13 @@ fn print_help() {
          run observers:  --sample-every N    stream one JSONL progress record per N kernel\n\
          \x20               cycles to stdout (also written to --export-dir as samples.jsonl)\n\
          \x20               --progress-every N  coarse progress line on stderr every N cycles\n\n\
-         campaign options (matrix = workloads × gpus × threads-list × schedules × stats-list):\n\
+         cluster options: --workload tp_gemm|halo_stencil|graph_part|<any Table-2 name>\n\
+         \x20               --gpus N (GPU count) --topology p2p|switch\n\
+         \x20               --link-latency CYC --packet-bytes B --threads N (shared (gpu,sm) pool)\n\n\
+         campaign options (matrix = workloads × gpus × gpu-counts × threads-list × schedules\n\
+         \x20               × stats-list):\n\
          \x20               --workloads a,b,c|all --gpus tiny,rtx3080ti --threads-list 1,4\n\
+         \x20               --gpu-counts 1,2,4 --topology p2p|switch (cluster-engine jobs)\n\
          \x20               --schedules static:0,dynamic:1 --stats-list per-sm --scale ci\n\
          \x20               --name sweep --out campaign_out --workers N --core-budget N --force\n\
          \x20               (defaults: nn,hotspot,mst × tiny × 1,4 × static:0,dynamic:1 = 12 jobs;\n\
@@ -262,6 +273,88 @@ fn cmd_run(args: &Args) -> Result<(), String> {
     Ok(())
 }
 
+fn cmd_cluster(args: &Args) -> Result<(), String> {
+    use parsim::config::ClusterConfig;
+
+    let name = args.get("workload").ok_or(
+        "cluster requires --workload (multi-GPU: tp_gemm, halo_stencil, graph_part; \
+         any Table-2 name runs replicated)",
+    )?;
+    let scale = parse_scale(args)?;
+    let gpu = parse_gpu(args)?;
+    let sim = build_simconfig(args)?;
+    let n_gpus = args.get_usize("gpus", 2).map_err(|e| e.to_string())?;
+    let topology = args.get("topology").unwrap_or("p2p");
+    let mut cluster_cfg = ClusterConfig::by_topology(topology, n_gpus)
+        .ok_or_else(|| format!("bad --topology {topology:?} (p2p|switch)"))?;
+    if let Some(lat) = args.get("link-latency") {
+        cluster_cfg.fabric.link_latency =
+            lat.parse().map_err(|_| format!("bad --link-latency {lat:?}"))?;
+    }
+    if let Some(pb) = args.get("packet-bytes") {
+        cluster_cfg.fabric.packet_bytes =
+            pb.parse().map_err(|_| format!("bad --packet-bytes {pb:?}"))?;
+    }
+    let progress_every = args.get_u64("progress-every", 0).map_err(|e| e.to_string())?;
+
+    let mut builder = SimBuilder::new()
+        .gpu(gpu)
+        .sim(sim)
+        .workload_named(name, scale)
+        .cluster(cluster_cfg);
+    if progress_every > 0 {
+        builder = builder.observer(ProgressTicker::new(progress_every));
+    }
+    let mut session = builder.build_cluster().map_err(|e| e.to_string())?;
+    {
+        let wl = session.workload();
+        eprintln!(
+            "simulating {name} (scale={}) on {} × {} with {} topology, {} kernel(s)/GPU, \
+             {} comm bytes total",
+            scale.name(),
+            session.num_gpus(),
+            session.gpu(0).gpu.name,
+            topology,
+            wl.kernels_per_gpu(),
+            wl.total_comm_bytes(),
+        );
+    }
+    session.run_to_completion().map_err(|e| e.to_string())?;
+    let stats = session.stats().expect("session finished");
+
+    println!("workload            {}", stats.workload);
+    println!("gpus                {} ({topology})", stats.num_gpus);
+    println!("cluster cycles      {}", stats.cluster_cycles);
+    println!("comm cycles         {}", stats.comm_cycles);
+    println!("gpu cycles (sum)    {}", stats.total_cycles());
+    println!("warp instructions   {}", stats.total_warp_insts());
+    println!("thread instructions {}", stats.total_thread_insts());
+    println!(
+        "fabric              {} packet(s), {} byte(s) delivered",
+        stats.fabric.packets_delivered, stats.fabric.bytes_delivered
+    );
+    println!("wall-clock          {:.3} s", stats.sim_wallclock_s);
+    println!("fingerprint         {:016x}", stats.fingerprint());
+    if !args.flag("quiet") {
+        println!(
+            "\n{:<6} {:>12} {:>14} {:>12} {:>12} {:>18}",
+            "gpu", "cycles", "warp insts", "sent B", "recv B", "fingerprint"
+        );
+        for (g, gs) in stats.per_gpu.iter().enumerate() {
+            println!(
+                "{:<6} {:>12} {:>14} {:>12} {:>12} {:>18}",
+                g,
+                gs.total_gpu_cycles,
+                gs.total_warp_insts(),
+                stats.sent_bytes[g],
+                stats.recv_bytes[g],
+                format!("{:016x}", gs.fingerprint()),
+            );
+        }
+    }
+    Ok(())
+}
+
 fn cmd_figure(args: &Args) -> Result<(), String> {
     let which = args.positional.get(1).map(|s| s.as_str()).unwrap_or("all");
     let scale = parse_scale(args)?;
@@ -290,6 +383,16 @@ fn cmd_figure(args: &Args) -> Result<(), String> {
             }
         }
         "fig7" => println!("{}", harness::fig7_report(scale)),
+        "cluster" => {
+            let wl = args.get("workload").unwrap_or("tp_gemm");
+            let gpu_counts = args
+                .get_usize_list("gpu-counts")
+                .map_err(|e| e.to_string())?
+                .unwrap_or_else(|| vec![1, 2, 4]);
+            let report =
+                harness::fig_cluster_report(wl, scale, &gpu, &gpu_counts).map_err(err)?;
+            println!("{report}");
+        }
         "all" => {
             println!("{}", harness::table1_report(&gpu));
             println!("{}", harness::table2_report());
@@ -308,19 +411,60 @@ fn cmd_figure(args: &Args) -> Result<(), String> {
     Ok(())
 }
 
-fn cmd_workloads(_args: &Args) -> Result<(), String> {
-    println!("{}", harness::table2_report());
-    println!("{:<12} {:<12} {:>9} {:>12}", "name", "suite", "kernels", "mean CTAs");
+/// List every registered workload — single-GPU (Table 2) and multi-GPU
+/// — with kernel counts, CTA sizes at each scale, and the exact tokens
+/// `--workload` and `--scale` accept, so users stop guessing names that
+/// `SimError` rejects.
+fn cmd_workloads(args: &Args) -> Result<(), String> {
+    let gpus = args.get_usize("gpus", 2).map_err(|e| e.to_string())?;
+    if gpus == 0 {
+        return Err("--gpus must be ≥ 1".into());
+    }
+    println!("single-GPU workloads (Table 2) — `parsim run --workload NAME --scale SCALE`\n");
+    println!(
+        "{:<12} {:<12} {:>7} {:>10} {:>10} {:>10}",
+        "name", "suite", "kernels", "CTAs@ci", "CTAs@small", "CTAs@paper"
+    );
     for &n in workloads::names() {
-        let wl = workloads::build(n, Scale::Small).unwrap();
+        let per_scale: Vec<f64> = [Scale::Ci, Scale::Small, Scale::Paper]
+            .iter()
+            .map(|&s| workloads::build(n, s).expect("registered").mean_ctas_per_kernel())
+            .collect();
+        let kernels = workloads::build(n, Scale::Small).expect("registered").kernels.len();
         println!(
-            "{:<12} {:<12} {:>9} {:>12.1}",
+            "{:<12} {:<12} {:>7} {:>10.1} {:>10.1} {:>10.1}",
             n,
             workloads::suite_of(n),
-            wl.kernels.len(),
-            wl.mean_ctas_per_kernel()
+            kernels,
+            per_scale[0],
+            per_scale[1],
+            per_scale[2]
         );
     }
+    println!(
+        "\nmulti-GPU workloads (at --gpus {gpus}) — `parsim cluster --workload NAME --gpus N`\n"
+    );
+    println!(
+        "{:<14} {:>11} {:>14} {:>10} {:>14}",
+        "name", "kernels/gpu", "CTAs/gpu@ci", "comms", "comm bytes"
+    );
+    for &n in workloads::cluster_names() {
+        let w = workloads::build_cluster(n, Scale::Ci, gpus).expect("registered");
+        let mean_ctas = w.per_gpu[0].mean_ctas_per_kernel();
+        let comm_phases = w.comms.iter().filter(|c| !c.is_empty()).count();
+        println!(
+            "{:<14} {:>11} {:>14.1} {:>10} {:>14}",
+            n,
+            w.kernels_per_gpu(),
+            mean_ctas,
+            comm_phases,
+            w.total_comm_bytes()
+        );
+    }
+    println!(
+        "\nscales: ci | small | paper   (any Table-2 name also runs on the cluster engine,\n\
+         replicated data-parallel across GPUs with no fabric traffic)"
+    );
     Ok(())
 }
 
@@ -392,12 +536,8 @@ fn cmd_validate(args: &Args) -> Result<(), String> {
 }
 
 fn cmd_campaign(args: &Args) -> Result<(), String> {
-    use parsim::campaign::{self, CampaignConfig, CampaignSpec};
+    use parsim::campaign::{self, CampaignConfig, CampaignSpec, TOPOLOGY_SINGLE};
     use parsim::config::{Schedule, StatsStrategy};
-
-    let csv = |s: &str| -> Vec<String> {
-        s.split(',').map(str::trim).filter(|t| !t.is_empty()).map(str::to_string).collect()
-    };
 
     let scale = match args.get("scale") {
         None => Scale::Ci,
@@ -406,22 +546,27 @@ fn cmd_campaign(args: &Args) -> Result<(), String> {
     let workload_names: Vec<String> = match args.get("workloads") {
         None => vec!["nn".into(), "hotspot".into(), "mst".into()],
         Some("all") => workloads::names().iter().map(|s| s.to_string()).collect(),
-        Some(list) => csv(list),
+        Some(_) => args.get_list("workloads").unwrap_or_default(),
     };
-    let gpus: Vec<String> = match args.get("gpus") {
-        None => vec!["tiny".into()],
-        Some(list) => csv(list),
+    let gpus: Vec<String> =
+        args.get_list("gpus").unwrap_or_else(|| vec!["tiny".into()]);
+    let threads: Vec<usize> = args
+        .get_usize_list("threads-list")
+        .map_err(|e| e.to_string())?
+        .unwrap_or_else(|| vec![1, 4]);
+    // GPU-count expansion: any --gpu-counts or --topology switches the
+    // matrix onto the cluster engine
+    let gpu_counts: Option<Vec<usize>> =
+        args.get_usize_list("gpu-counts").map_err(|e| e.to_string())?;
+    let topology = match (args.get("topology"), &gpu_counts) {
+        (Some(t), _) => t.to_string(),
+        (None, Some(_)) => "p2p".into(),
+        (None, None) => TOPOLOGY_SINGLE.into(),
     };
-    let threads: Vec<usize> = match args.get("threads-list") {
-        None => vec![1, 4],
-        Some(list) => csv(list)
-            .iter()
-            .map(|t| t.parse().map_err(|_| format!("bad --threads-list entry {t:?}")))
-            .collect::<Result<_, _>>()?,
-    };
-    let schedules: Vec<Schedule> = match args.get("schedules") {
+    let gpu_counts = gpu_counts.unwrap_or_else(|| vec![1]);
+    let schedules: Vec<Schedule> = match args.get_list("schedules") {
         None => vec![Schedule::Static { chunk: 0 }, Schedule::Dynamic { chunk: 1 }],
-        Some(list) => csv(list)
+        Some(list) => list
             .iter()
             .map(|t| {
                 campaign::parse_schedule_token(t)
@@ -429,9 +574,9 @@ fn cmd_campaign(args: &Args) -> Result<(), String> {
             })
             .collect::<Result<_, _>>()?,
     };
-    let strategies: Vec<StatsStrategy> = match args.get("stats-list") {
+    let strategies: Vec<StatsStrategy> = match args.get_list("stats-list") {
         None => vec![StatsStrategy::PerSm],
-        Some(list) => csv(list)
+        Some(list) => list
             .iter()
             .map(|t| {
                 campaign::parse_strategy_token(t)
@@ -445,8 +590,9 @@ fn cmd_campaign(args: &Args) -> Result<(), String> {
 
     let wl_refs: Vec<&str> = workload_names.iter().map(String::as_str).collect();
     let gpu_refs: Vec<&str> = gpus.iter().map(String::as_str).collect();
-    let spec = CampaignSpec::matrix(
-        name, &wl_refs, scale, &gpu_refs, &threads, &schedules, &strategies, seed,
+    let spec = CampaignSpec::cluster_matrix(
+        name, &wl_refs, scale, &gpu_refs, &gpu_counts, &topology, &threads, &schedules,
+        &strategies, seed,
     );
     if spec.is_empty() {
         return Err("campaign matrix is empty".into());
@@ -462,11 +608,12 @@ fn cmd_campaign(args: &Args) -> Result<(), String> {
         quiet: args.flag("quiet"),
     };
     eprintln!(
-        "campaign {name:?}: {} job(s) ({} workload(s) × {} gpu(s) × {} thread count(s) × \
-         {} schedule(s) × {} stats strategie(s), scale={})",
+        "campaign {name:?}: {} job(s) ({} workload(s) × {} gpu preset(s) × {} gpu count(s) \
+         [{topology}] × {} thread count(s) × {} schedule(s) × {} stats strategie(s), scale={})",
         spec.len(),
         wl_refs.len(),
         gpu_refs.len(),
+        gpu_counts.len(),
         threads.len(),
         schedules.len(),
         strategies.len(),

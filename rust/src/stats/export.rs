@@ -378,6 +378,41 @@ pub fn cycle_sample_jsonl(
     out
 }
 
+/// Deterministic JSONL summary of one **cluster** run: one line per GPU
+/// (`gpu` = index) plus one aggregate line (`gpu` = `"all"`) carrying
+/// the cluster-level counters (lock-step cycles, communication cycles,
+/// fabric traffic). Same discipline as [`gpu_stats_jsonl`]: model state
+/// only, byte-identical across reruns, round-trippable through
+/// [`parse_flat_json`]. Used by `examples/cluster_sweep.rs`.
+pub fn cluster_stats_jsonl(stats: &crate::cluster::ClusterStats) -> String {
+    let mut out = String::new();
+    for (g, gs) in stats.per_gpu.iter().enumerate() {
+        out.push('{');
+        jsonl_str(&mut out, "workload", &stats.workload, true);
+        jsonl_str(&mut out, "gpu", &g.to_string(), false);
+        jsonl_u64(&mut out, "kernels", gs.kernels.len() as u64, false);
+        jsonl_u64(&mut out, "total_gpu_cycles", gs.total_gpu_cycles, false);
+        jsonl_u64(&mut out, "total_warp_insts", gs.total_warp_insts(), false);
+        jsonl_u64(&mut out, "sent_bytes", stats.sent_bytes[g], false);
+        jsonl_u64(&mut out, "recv_bytes", stats.recv_bytes[g], false);
+        jsonl_str(&mut out, "fingerprint", &format!("{:016x}", gs.fingerprint()), false);
+        out.push_str("}\n");
+    }
+    out.push('{');
+    jsonl_str(&mut out, "workload", &stats.workload, true);
+    jsonl_str(&mut out, "gpu", "all", false);
+    jsonl_u64(&mut out, "gpus", stats.num_gpus as u64, false);
+    jsonl_u64(&mut out, "cluster_cycles", stats.cluster_cycles, false);
+    jsonl_u64(&mut out, "comm_cycles", stats.comm_cycles, false);
+    jsonl_u64(&mut out, "total_gpu_cycles", stats.total_cycles(), false);
+    jsonl_u64(&mut out, "total_warp_insts", stats.total_warp_insts(), false);
+    jsonl_u64(&mut out, "fabric_packets", stats.fabric.packets_delivered, false);
+    jsonl_u64(&mut out, "fabric_bytes", stats.fabric.bytes_delivered, false);
+    jsonl_str(&mut out, "fingerprint", &format!("{:016x}", stats.fingerprint()), false);
+    out.push_str("}\n");
+    out
+}
+
 /// Typed view of a [`gpu_stats_jsonl`] line.
 #[derive(Debug, Clone, PartialEq)]
 pub struct JsonlSummary {
@@ -450,6 +485,32 @@ mod tests {
             sm_section_s: 0.4,
             total_gpu_cycles: 100,
         }
+    }
+
+    #[test]
+    fn cluster_jsonl_one_line_per_gpu_plus_aggregate() {
+        let stats = crate::cluster::ClusterStats {
+            workload: "tp_gemm".into(),
+            num_gpus: 2,
+            per_gpu: vec![sample(), sample()],
+            cluster_cycles: 150,
+            comm_cycles: 50,
+            fabric: Default::default(),
+            sent_bytes: vec![4096, 4096],
+            recv_bytes: vec![4096, 4096],
+            sim_wallclock_s: 0.5,
+        };
+        let text = cluster_stats_jsonl(&stats);
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 3, "2 GPUs + aggregate");
+        for line in &lines {
+            parse_flat_json(line).expect("every line is flat JSON");
+        }
+        assert!(lines[0].contains("\"gpu\": \"0\""));
+        assert!(lines[2].contains("\"gpu\": \"all\""));
+        assert!(lines[2].contains("\"comm_cycles\": 50"));
+        // byte-determinism
+        assert_eq!(text, cluster_stats_jsonl(&stats));
     }
 
     #[test]

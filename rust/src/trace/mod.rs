@@ -430,6 +430,194 @@ impl WorkloadSpec {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Multi-GPU (cluster) workload representation
+// ---------------------------------------------------------------------------
+
+/// One inter-GPU message of a communication phase.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Transfer {
+    pub src: u32,
+    pub dst: u32,
+    pub bytes: u64,
+}
+
+/// A bulk-synchronous inter-GPU communication phase: a fixed transfer
+/// list drained through the cluster fabric after a kernel completes on
+/// every GPU. Transfers are held sorted by `(src, dst)` so the fabric's
+/// injection order — and therefore every downstream statistic — is a
+/// pure function of the workload.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct CommPhase {
+    pub transfers: Vec<Transfer>,
+}
+
+impl CommPhase {
+    /// No communication after this kernel.
+    pub fn empty() -> Self {
+        CommPhase::default()
+    }
+
+    fn normalized(mut transfers: Vec<Transfer>) -> Self {
+        transfers.retain(|t| t.src != t.dst && t.bytes > 0);
+        transfers.sort_by_key(|t| (t.src, t.dst));
+        CommPhase { transfers }
+    }
+
+    /// Ring-style all-reduce of one `shard_bytes` buffer per GPU,
+    /// modeled as reduce-scatter + all-gather: every ordered pair
+    /// exchanges `2 · shard_bytes / n` bytes.
+    pub fn all_reduce(n_gpus: usize, shard_bytes: u64) -> Self {
+        let n = n_gpus as u32;
+        let mut t = Vec::new();
+        if n > 1 {
+            let per_pair = (2 * shard_bytes / n as u64).max(1);
+            for src in 0..n {
+                for dst in 0..n {
+                    if src != dst {
+                        t.push(Transfer { src, dst, bytes: per_pair });
+                    }
+                }
+            }
+        }
+        Self::normalized(t)
+    }
+
+    /// 1-D (non-periodic) halo exchange: GPU `g` trades `halo_bytes`
+    /// with `g − 1` and `g + 1`.
+    pub fn halo_1d(n_gpus: usize, halo_bytes: u64) -> Self {
+        let n = n_gpus as u32;
+        let mut t = Vec::new();
+        for g in 0..n {
+            if g > 0 {
+                t.push(Transfer { src: g, dst: g - 1, bytes: halo_bytes });
+            }
+            if g + 1 < n {
+                t.push(Transfer { src: g, dst: g + 1, bytes: halo_bytes });
+            }
+        }
+        Self::normalized(t)
+    }
+
+    /// Irregular all-to-all (remote-edge / frontier exchange): each
+    /// ordered pair carries `base + mix(seed, src, dst) % spread` bytes.
+    pub fn all_to_all_irregular(n_gpus: usize, seed: u64, base: u64, spread: u64) -> Self {
+        let n = n_gpus as u32;
+        let mut t = Vec::new();
+        for src in 0..n {
+            for dst in 0..n {
+                if src != dst {
+                    let jitter = if spread == 0 {
+                        0
+                    } else {
+                        mix2(seed, ((src as u64) << 32) | dst as u64) % spread
+                    };
+                    t.push(Transfer { src, dst, bytes: base + jitter });
+                }
+            }
+        }
+        Self::normalized(t)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.transfers.is_empty()
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.transfers.iter().map(|t| t.bytes).sum()
+    }
+}
+
+/// A multi-GPU workload: one [`WorkloadSpec`] per GPU (all with the same
+/// kernel count, lock-stepped kernel-by-kernel) plus one [`CommPhase`]
+/// per kernel index, drained through the fabric after that kernel
+/// completes on every GPU.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClusterWorkloadSpec {
+    pub name: String,
+    pub num_gpus: usize,
+    /// Per-GPU kernel sequences; `per_gpu.len() == num_gpus` and every
+    /// entry has the same number of kernels.
+    pub per_gpu: Vec<WorkloadSpec>,
+    /// `comms[k]` runs after kernel `k`; `comms.len()` equals the
+    /// per-GPU kernel count (phases may be empty).
+    pub comms: Vec<CommPhase>,
+}
+
+impl ClusterWorkloadSpec {
+    /// Data-parallel replication of a single-GPU workload: every GPU
+    /// runs the same kernels, with no inter-GPU traffic.
+    pub fn replicate(wl: WorkloadSpec, num_gpus: usize) -> Self {
+        let kernels = wl.kernels.len();
+        ClusterWorkloadSpec {
+            name: wl.name.clone(),
+            num_gpus,
+            per_gpu: (0..num_gpus).map(|_| wl.clone()).collect(),
+            comms: (0..kernels).map(|_| CommPhase::empty()).collect(),
+        }
+    }
+
+    /// Kernels each GPU launches (uniform across GPUs).
+    pub fn kernels_per_gpu(&self) -> usize {
+        self.per_gpu.first().map(|w| w.kernels.len()).unwrap_or(0)
+    }
+
+    /// Total dynamic warp instructions across all GPUs.
+    pub fn total_warp_insts(&self, warp_size: usize) -> u64 {
+        self.per_gpu.iter().map(|w| w.total_warp_insts(warp_size)).sum()
+    }
+
+    /// Bytes crossing the fabric over the whole workload.
+    pub fn total_comm_bytes(&self) -> u64 {
+        self.comms.iter().map(|c| c.total_bytes()).sum()
+    }
+
+    /// Structural validation; returns a human-readable error list.
+    pub fn validate(&self) -> Result<(), Vec<String>> {
+        let mut errs = Vec::new();
+        if self.num_gpus == 0 {
+            errs.push("num_gpus must be > 0".into());
+        }
+        if self.per_gpu.len() != self.num_gpus {
+            errs.push(format!(
+                "per_gpu has {} entries for {} GPUs",
+                self.per_gpu.len(),
+                self.num_gpus
+            ));
+        }
+        let k = self.kernels_per_gpu();
+        if k == 0 {
+            errs.push("workload has no kernels".into());
+        }
+        for (g, w) in self.per_gpu.iter().enumerate() {
+            if w.kernels.len() != k {
+                errs.push(format!(
+                    "GPU {g} has {} kernels, GPU 0 has {k} (lock-step requires equal counts)",
+                    w.kernels.len()
+                ));
+            }
+        }
+        if self.comms.len() != k {
+            errs.push(format!("{} comm phases for {k} kernels", self.comms.len()));
+        }
+        for (i, c) in self.comms.iter().enumerate() {
+            for t in &c.transfers {
+                if t.src as usize >= self.num_gpus || t.dst as usize >= self.num_gpus {
+                    errs.push(format!(
+                        "comm {i}: transfer {}→{} outside 0..{}",
+                        t.src, t.dst, self.num_gpus
+                    ));
+                }
+            }
+        }
+        if errs.is_empty() {
+            Ok(())
+        } else {
+            Err(errs)
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -566,5 +754,65 @@ mod tests {
     fn gemm_semantics_grid() {
         let g = GemmSemantics { m: 2560, n: 16, k: 2560, tile_m: 128, tile_n: 16 };
         assert_eq!(g.grid_ctas(), 20);
+    }
+
+    #[test]
+    fn comm_phase_builders() {
+        // all-reduce: n·(n−1) ordered pairs, self-pairs dropped
+        let ar = CommPhase::all_reduce(4, 4096);
+        assert_eq!(ar.transfers.len(), 12);
+        assert_eq!(ar.transfers[0].bytes, 2 * 4096 / 4);
+        assert!(ar.transfers.windows(2).all(|w| (w[0].src, w[0].dst) < (w[1].src, w[1].dst)));
+        assert!(CommPhase::all_reduce(1, 4096).is_empty());
+
+        // halo: interior GPUs talk to both neighbours, edges to one
+        let halo = CommPhase::halo_1d(3, 512);
+        assert_eq!(halo.transfers.len(), 4);
+        assert_eq!(halo.total_bytes(), 4 * 512);
+        assert!(CommPhase::halo_1d(1, 512).is_empty());
+
+        // irregular all-to-all is deterministic and per-pair varied
+        let a = CommPhase::all_to_all_irregular(3, 7, 128, 1024);
+        let b = CommPhase::all_to_all_irregular(3, 7, 128, 1024);
+        assert_eq!(a, b);
+        assert_eq!(a.transfers.len(), 6);
+        assert!(a.transfers.iter().all(|t| t.bytes >= 128));
+    }
+
+    #[test]
+    fn cluster_spec_replicate_and_validate() {
+        let wl = WorkloadSpec {
+            name: "w".into(),
+            suite: "s".into(),
+            kernels: vec![KernelDesc {
+                name: "k".into(),
+                grid_ctas: 4,
+                block_threads: 64,
+                regs_per_thread: 16,
+                smem_per_cta: 0,
+                regions: REGIONS.to_vec(),
+                program: Program::new(vec![BBlock {
+                    trips: Trips::Fixed(1),
+                    insts: vec![InstTemplate::alu(OpClass::IAlu, 1, &[1])],
+                }]),
+                code_base: 0x100,
+                seed: 0,
+                gemm: None,
+            }],
+        };
+        let c = ClusterWorkloadSpec::replicate(wl.clone(), 3);
+        c.validate().expect("replicated spec is valid");
+        assert_eq!(c.kernels_per_gpu(), 1);
+        assert_eq!(c.total_comm_bytes(), 0);
+        assert_eq!(c.total_warp_insts(32), 3 * wl.total_warp_insts(32));
+
+        let mut bad = c;
+        bad.comms[0] = CommPhase {
+            transfers: vec![Transfer { src: 0, dst: 9, bytes: 64 }],
+        };
+        bad.per_gpu[1].kernels.clear();
+        let errs = bad.validate().unwrap_err();
+        assert!(errs.iter().any(|e| e.contains("outside")), "{errs:?}");
+        assert!(errs.iter().any(|e| e.contains("lock-step")), "{errs:?}");
     }
 }

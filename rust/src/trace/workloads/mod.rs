@@ -21,10 +21,12 @@
 mod cutlass;
 mod deepbench;
 mod lonestar;
+mod multi_gpu;
 mod polybench;
 mod rodinia;
 
 pub use crate::trace::WorkloadSpec as Workload;
+pub use multi_gpu::{build_cluster, cluster_names};
 
 use crate::trace::{
     AddrPattern, BBlock, InstTemplate, KernelDesc, MemTemplate, OpClass, Program, Region, Trips,

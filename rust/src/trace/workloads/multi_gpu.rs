@@ -1,0 +1,259 @@
+//! Multi-GPU workload variants for the cluster engine
+//! ([`crate::cluster`]): per-GPU kernel sequences plus the inter-GPU
+//! communication phases the fabric drains between kernels.
+//!
+//! Three communication archetypes cover the patterns multi-GPU research
+//! frameworks (MGSim/MGMark) benchmark:
+//!
+//! * [`tp_gemm`] — **tensor-parallel split GEMM**: the output columns of
+//!   a CUTLASS-style tiled GEMM are sharded across GPUs; after each
+//!   layer the partial activations are all-reduced (reduce-scatter +
+//!   all-gather traffic between every GPU pair).
+//! * [`halo_stencil`] — **halo-exchange stencil**: grid rows are
+//!   partitioned 1-D across GPUs; every iteration trades one halo row
+//!   with each neighbour.
+//! * [`graph_part`] — **partitioned graph traversal**: each GPU owns a
+//!   vertex partition with per-GPU-irregular frontier work; after every
+//!   level the remote-edge frontier crosses the fabric as an irregular
+//!   all-to-all.
+//!
+//! Every builder is a pure function of `(scale, n_gpus)`, so cluster
+//! simulations stay bit-deterministic end to end.
+
+use super::*;
+use crate::trace::{ClusterWorkloadSpec, CommPhase, WorkloadSpec};
+
+/// Registered multi-GPU workload names.
+pub fn cluster_names() -> &'static [&'static str] {
+    &["tp_gemm", "halo_stencil", "graph_part"]
+}
+
+/// Build one multi-GPU workload by name.
+pub fn build_cluster(name: &str, scale: Scale, n_gpus: usize) -> Option<ClusterWorkloadSpec> {
+    if n_gpus == 0 {
+        return None;
+    }
+    let w = match name {
+        "tp_gemm" => tp_gemm(scale, n_gpus),
+        "halo_stencil" => halo_stencil(scale, n_gpus),
+        "graph_part" => graph_part(scale, n_gpus),
+        _ => return None,
+    };
+    Some(w)
+}
+
+/// Tensor-parallel split GEMM: two GEMM layers whose output columns are
+/// sharded across GPUs, each followed by an all-reduce of the shard.
+pub fn tp_gemm(scale: Scale, n_gpus: usize) -> ClusterWorkloadSpec {
+    let (m, n_total, k) = match scale {
+        Scale::Ci => (256u32, 256u32, 32u32),
+        Scale::Small => (1280, 1024, 160),
+        Scale::Paper => (2560, 2048, 320),
+    };
+    let n_shard = (n_total / n_gpus as u32).max(32);
+    let shard_bytes = m as u64 * n_shard as u64 * 4;
+
+    let mut per_gpu = Vec::with_capacity(n_gpus);
+    for g in 0..n_gpus {
+        let kernels = (0..2)
+            .map(|layer| {
+                super::cutlass::gemm_tiled_kernel(
+                    format!("tp_gemm_l{layer}_g{g}"),
+                    m,
+                    n_shard,
+                    k,
+                    64,
+                    32,
+                    8,
+                    128,
+                    0x79E3 ^ ((layer as u64) << 8) ^ (g as u64),
+                )
+            })
+            .collect();
+        per_gpu.push(WorkloadSpec {
+            name: format!("tp_gemm[gpu{g}]"),
+            suite: "MultiGPU".into(),
+            kernels,
+        });
+    }
+    ClusterWorkloadSpec {
+        name: "tp_gemm".into(),
+        num_gpus: n_gpus,
+        per_gpu,
+        comms: vec![
+            CommPhase::all_reduce(n_gpus, shard_bytes),
+            CommPhase::all_reduce(n_gpus, shard_bytes),
+        ],
+    }
+}
+
+/// 1-D partitioned stencil: each iteration is one kernel per GPU over
+/// that GPU's row slab, followed by a halo exchange with its neighbours
+/// (no exchange after the final iteration).
+pub fn halo_stencil(scale: Scale, n_gpus: usize) -> ClusterWorkloadSpec {
+    let iters = sc(scale, 3, 6, 10);
+    let total_ctas = sc(scale, 64, 512, 2048);
+    let ctas_per_gpu = (total_ctas / n_gpus as u32).max(1);
+    let trips = sc(scale, 6, 24, 64);
+    let halo_bytes = sc(scale, 4096, 65536, 262144) as u64;
+    let region_bytes = sc(scale, 1 << 18, 1 << 22, 1 << 24) as u64;
+
+    let mut per_gpu = Vec::with_capacity(n_gpus);
+    for g in 0..n_gpus {
+        let kernels = (0..iters)
+            .map(|it| {
+                kernel(
+                    format!("halo_iter{it}_g{g}"),
+                    ctas_per_gpu,
+                    256,
+                    32,
+                    4 * 1024,
+                    regions3(region_bytes),
+                    vec![
+                        fma_loop(
+                            Trips::Fixed(trips),
+                            &[
+                                (0, AddrPattern::Strided { stride_bytes: 128 }),
+                                (1, AddrPattern::Coalesced),
+                            ],
+                            6,
+                            0,
+                            2,
+                            Some((2, AddrPattern::Coalesced)),
+                            true,
+                        ),
+                        smem_loop(Trips::Fixed(2), 4, 1),
+                    ],
+                    0x4A10 ^ ((it as u64) << 8) ^ (g as u64),
+                )
+            })
+            .collect();
+        per_gpu.push(WorkloadSpec {
+            name: format!("halo_stencil[gpu{g}]"),
+            suite: "MultiGPU".into(),
+            kernels,
+        });
+    }
+    let comms = (0..iters)
+        .map(|it| {
+            if it + 1 < iters {
+                CommPhase::halo_1d(n_gpus, halo_bytes)
+            } else {
+                CommPhase::empty()
+            }
+        })
+        .collect();
+    ClusterWorkloadSpec { name: "halo_stencil".into(), num_gpus: n_gpus, per_gpu, comms }
+}
+
+/// Partitioned graph traversal: per-level frontier kernels with
+/// deliberately **unequal** per-GPU work (different seeds and grids, so
+/// GPUs straggle and the lock-step park/resume path is exercised),
+/// followed by an irregular all-to-all remote-edge exchange.
+pub fn graph_part(scale: Scale, n_gpus: usize) -> ClusterWorkloadSpec {
+    let levels = sc(scale, 3, 5, 8);
+    let base_ctas = sc(scale, 16, 96, 384);
+    let comm_base = sc(scale, 2048, 8192, 32768) as u64;
+
+    let mut per_gpu = Vec::with_capacity(n_gpus);
+    for g in 0..n_gpus {
+        let kernels = (0..levels)
+            .map(|lvl| {
+                let seed = 0x6A27 ^ ((lvl as u64) << 16) ^ ((g as u64) << 4);
+                // partition imbalance: each GPU's frontier differs by up
+                // to 50% of the base grid, deterministically
+                let jitter =
+                    crate::util::mix2(seed, 0x617D) % (base_ctas as u64 / 2 + 1);
+                let grid = base_ctas + jitter as u32;
+                kernel(
+                    format!("frontier_l{lvl}_g{g}"),
+                    grid,
+                    128,
+                    24,
+                    0,
+                    regions3(sc(scale, 1 << 18, 1 << 21, 1 << 23) as u64),
+                    vec![graph_loop(
+                        Trips::PerCta { base: sc(scale, 4, 8, 16), spread: 8 },
+                        2,
+                        4,
+                    )],
+                    seed,
+                )
+            })
+            .collect();
+        per_gpu.push(WorkloadSpec {
+            name: format!("graph_part[gpu{g}]"),
+            suite: "MultiGPU".into(),
+            kernels,
+        });
+    }
+    let comms = (0..levels)
+        .map(|lvl| {
+            CommPhase::all_to_all_irregular(n_gpus, 0xF207 ^ lvl as u64, comm_base, comm_base)
+        })
+        .collect();
+    ClusterWorkloadSpec { name: "graph_part".into(), num_gpus: n_gpus, per_gpu, comms }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_cluster_workloads_build_and_validate() {
+        for &name in cluster_names() {
+            for &scale in &[Scale::Ci, Scale::Small, Scale::Paper] {
+                for n in [1, 2, 4] {
+                    let w = build_cluster(name, scale, n).unwrap_or_else(|| panic!("{name}"));
+                    w.validate().unwrap_or_else(|e| panic!("{name}/{n}: {e:?}"));
+                    assert_eq!(w.num_gpus, n);
+                    assert!(w.kernels_per_gpu() > 0);
+                }
+            }
+        }
+        assert!(build_cluster("nonexistent", Scale::Ci, 2).is_none());
+        assert!(build_cluster("tp_gemm", Scale::Ci, 0).is_none());
+    }
+
+    #[test]
+    fn construction_is_pure() {
+        for &name in cluster_names() {
+            assert_eq!(
+                build_cluster(name, Scale::Ci, 4),
+                build_cluster(name, Scale::Ci, 4)
+            );
+        }
+    }
+
+    #[test]
+    fn multi_gpu_workloads_carry_fabric_traffic() {
+        for &name in cluster_names() {
+            let w = build_cluster(name, Scale::Ci, 4).unwrap();
+            assert!(w.total_comm_bytes() > 0, "{name} must exchange bytes at 4 GPUs");
+            // single-GPU variants have nothing to exchange
+            let w1 = build_cluster(name, Scale::Ci, 1).unwrap();
+            assert_eq!(w1.total_comm_bytes(), 0, "{name} at 1 GPU");
+        }
+    }
+
+    #[test]
+    fn tp_gemm_shards_the_grid() {
+        let w1 = tp_gemm(Scale::Ci, 1);
+        let w4 = tp_gemm(Scale::Ci, 4);
+        let g1 = w1.per_gpu[0].kernels[0].grid_ctas;
+        let g4 = w4.per_gpu[0].kernels[0].grid_ctas;
+        assert!(g4 < g1, "sharded grid shrinks per GPU: {g4} vs {g1}");
+        assert_eq!(w4.kernels_per_gpu(), 2);
+    }
+
+    #[test]
+    fn graph_part_is_imbalanced_across_gpus() {
+        let w = graph_part(Scale::Ci, 4);
+        let grids: Vec<u32> =
+            (0..4).map(|g| w.per_gpu[g].kernels[0].grid_ctas).collect();
+        assert!(
+            grids.iter().any(|&x| x != grids[0]),
+            "per-GPU frontiers must differ: {grids:?}"
+        );
+    }
+}

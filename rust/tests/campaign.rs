@@ -12,6 +12,7 @@ use std::path::PathBuf;
 
 use parsim::campaign::{
     run_campaign, CampaignConfig, CampaignSpec, JobSpec, RESULTS_CSV, RESULTS_JSONL,
+    TOPOLOGY_SINGLE,
 };
 use parsim::config::{GpuConfig, Schedule, StatsStrategy};
 use parsim::stats::diff::diff_runs;
@@ -38,6 +39,8 @@ fn job(wl: &str, threads: usize, schedule: Schedule) -> JobSpec {
         stats_strategy: StatsStrategy::PerSm,
         seed: 0xC0FFEE,
         max_cycles: 0,
+        num_gpus: 1,
+        topology: TOPOLOGY_SINGLE.to_string(),
     }
 }
 
@@ -198,6 +201,48 @@ fn incremental_sweep_simulates_only_the_delta() {
     let r3 = run_campaign(&bigger, &out, &forced).expect("forced run");
     assert_eq!((r3.simulated, r3.cache_hits), (3, 0));
     assert_eq!(read(&r3.out_dir, RESULTS_JSONL), bytes, "forced rerun rewrites same bytes");
+    std::fs::remove_dir_all(&out).ok();
+}
+
+/// Cluster jobs in a campaign: GPU-count expansion runs on the cluster
+/// engine, records stay distinct per GPU count (no cache collisions with
+/// single-GPU results — the store-hash fix), and reruns are cache hits.
+#[test]
+fn cluster_campaign_sweeps_gpu_counts_without_cache_collisions() {
+    let spec = CampaignSpec::cluster_matrix(
+        "cluster",
+        &["tp_gemm"],
+        Scale::Ci,
+        &["tiny"],
+        &[1, 2, 4],
+        "p2p",
+        &[2],
+        &[Schedule::Static { chunk: 0 }],
+        &[StatsStrategy::PerSm],
+        0xC0FFEE,
+    );
+    assert_eq!(spec.len(), 3);
+    let out = tmp_dir("cluster");
+    let r1 = run_campaign(&spec, &out, &cfg(2)).expect("cluster campaign");
+    assert_eq!((r1.simulated, r1.cache_hits), (3, 0));
+    let store = parsim::campaign::ResultStore::open(&out.join("cluster")).expect("open store");
+    let recs: Vec<_> = store.records().collect();
+    assert_eq!(recs.len(), 3);
+    let gpus: Vec<u64> = recs.iter().map(|r| r.gpus).collect();
+    assert_eq!(gpus, vec![1, 2, 4]);
+    assert!(recs.iter().all(|r| r.topology == "p2p"));
+    // multi-GPU runs carry fabric traffic; 1-GPU tp_gemm has none
+    assert_eq!(recs[0].fabric_bytes, 0, "1-GPU split GEMM has no peers");
+    assert!(recs[1].fabric_bytes > 0 && recs[2].fabric_bytes > 0);
+    assert!(recs[1].comm_cycles > 0);
+    // per-GPU-count results are genuinely different simulations
+    assert_ne!(recs[0].fingerprint, recs[1].fingerprint);
+    assert_ne!(recs[1].fingerprint, recs[2].fingerprint);
+    // rerun: all cache hits, byte-identical store
+    let bytes = read(&r1.out_dir, RESULTS_JSONL);
+    let r2 = run_campaign(&spec, &out, &cfg(2)).expect("rerun");
+    assert_eq!((r2.simulated, r2.cache_hits), (0, 3));
+    assert_eq!(read(&r2.out_dir, RESULTS_JSONL), bytes);
     std::fs::remove_dir_all(&out).ok();
 }
 

@@ -1,0 +1,250 @@
+//! Cluster-engine acceptance tests — the three-level determinism
+//! argument, as a test suite:
+//!
+//! * a 4-GPU run is **bit-identical** — final statistics *and* mid-run
+//!   [`SessionFingerprint`] checkpoints (taken every 50 cluster cycles,
+//!   which lands inside both compute and communication phases) — across
+//!   1/4/8 host threads and both OpenMP-style schedules;
+//! * a 1-GPU cluster run matches the plain single-GPU engine
+//!   **statistic for statistic** (full per-SM diff, kernel cycles, and
+//!   run fingerprint);
+//! * observers cannot perturb cluster results.
+//!
+//! The CI determinism matrix re-runs this file under
+//! `PARSIM_THREADS={1,4,8}`; when set, that thread count joins the sweep.
+
+use parsim::cluster::ClusterStats;
+use parsim::config::{ClusterConfig, GpuConfig, Schedule};
+use parsim::engine::SessionFingerprint;
+use parsim::stats::diff::diff_runs;
+use parsim::trace::workloads::Scale;
+use parsim::{ClusterSession, Observer, SimBuilder, StopCondition};
+
+/// Thread counts to sweep: 1/4/8 plus `PARSIM_THREADS` (the CI matrix).
+fn thread_counts() -> Vec<usize> {
+    let mut counts = vec![1, 4, 8];
+    if let Some(t) = std::env::var("PARSIM_THREADS").ok().and_then(|v| v.parse().ok()) {
+        counts.push(t);
+    }
+    counts.sort_unstable();
+    counts.dedup();
+    counts
+}
+
+fn session(workload: &str, n_gpus: usize, threads: usize, schedule: Schedule) -> ClusterSession {
+    SimBuilder::new()
+        .gpu(GpuConfig::tiny())
+        .workload_named(workload, Scale::Ci)
+        .threads(threads)
+        .schedule(schedule)
+        .cluster(ClusterConfig::p2p(n_gpus))
+        .build_cluster()
+        .expect("valid cluster config")
+}
+
+/// Run to completion, checkpointing every 50 cluster cycles. Returns the
+/// checkpoint trail and the final statistics.
+fn run_with_checkpoints(
+    workload: &str,
+    n_gpus: usize,
+    threads: usize,
+    schedule: Schedule,
+) -> (Vec<SessionFingerprint>, ClusterStats) {
+    let mut s = session(workload, n_gpus, threads, schedule);
+    let mut cps = Vec::new();
+    loop {
+        let status = s.run(StopCondition::CycleBudget(50)).expect("run slice");
+        cps.push(s.checkpoint());
+        if status == parsim::SessionStatus::Finished {
+            break;
+        }
+    }
+    let stats = s.into_stats().expect("finished");
+    (cps, stats)
+}
+
+/// The headline acceptance criterion: 4 GPUs, bit-identical final and
+/// checkpoint fingerprints across thread counts × both schedules, on a
+/// comm-heavy workload and an imbalanced one.
+#[test]
+fn four_gpu_run_bit_identical_across_threads_and_schedules() {
+    for workload in ["tp_gemm", "graph_part"] {
+        let (base_cps, base_stats) =
+            run_with_checkpoints(workload, 4, 1, Schedule::Static { chunk: 1 });
+        assert!(base_stats.comm_cycles > 0, "{workload}: fabric must be exercised");
+        // sanity: the 50-cycle checkpoint grid must observe both phases
+        assert!(
+            base_cps.len() >= 3,
+            "{workload}: expected a multi-checkpoint run, got {}",
+            base_cps.len()
+        );
+        let base_fp = base_stats.fingerprint();
+        for threads in thread_counts() {
+            for schedule in [Schedule::Static { chunk: 0 }, Schedule::Dynamic { chunk: 1 }] {
+                let (cps, stats) = run_with_checkpoints(workload, 4, threads, schedule);
+                assert_eq!(
+                    base_cps, cps,
+                    "{workload}: checkpoint trail diverged at {threads} threads {schedule:?}"
+                );
+                assert_eq!(
+                    base_fp,
+                    stats.fingerprint(),
+                    "{workload}: final fingerprint diverged at {threads} threads {schedule:?}"
+                );
+                // per-GPU statistics, not just the aggregate mix
+                for (g, (a, b)) in
+                    base_stats.per_gpu.iter().zip(&stats.per_gpu).enumerate()
+                {
+                    let d = diff_runs(a, b);
+                    assert!(
+                        d.identical(),
+                        "{workload} GPU {g} diverged at {threads} threads {schedule:?}:\n{}",
+                        d.report()
+                    );
+                }
+                assert_eq!(base_stats.cluster_cycles, stats.cluster_cycles);
+                assert_eq!(base_stats.comm_cycles, stats.comm_cycles);
+                assert_eq!(base_stats.fabric, stats.fabric);
+            }
+        }
+    }
+}
+
+/// A 1-GPU cluster run must match the plain single-GPU engine statistic
+/// for statistic: same kernel cycles, same per-SM counters, same run
+/// fingerprint.
+#[test]
+fn one_gpu_cluster_matches_plain_engine_statistic_for_statistic() {
+    for workload in ["nn", "hotspot", "mst"] {
+        let mut plain = SimBuilder::new()
+            .gpu(GpuConfig::tiny())
+            .workload_named(workload, Scale::Ci)
+            .build()
+            .expect("valid config");
+        plain.run_to_completion().expect("plain run");
+        let plain_stats = plain.into_stats().expect("finished");
+
+        let mut cluster = session(workload, 1, 1, Schedule::Static { chunk: 1 });
+        cluster.run_to_completion().expect("cluster run");
+        let cluster_stats = cluster.into_stats().expect("finished");
+
+        assert_eq!(cluster_stats.num_gpus, 1);
+        assert_eq!(cluster_stats.comm_cycles, 0);
+        let gpu0 = &cluster_stats.per_gpu[0];
+        let d = diff_runs(&plain_stats, gpu0);
+        assert!(d.identical(), "{workload}: plain vs 1-GPU cluster:\n{}", d.report());
+        assert_eq!(plain_stats.fingerprint(), gpu0.fingerprint(), "{workload}");
+        assert_eq!(plain_stats.total_cycles(), gpu0.total_gpu_cycles, "{workload}");
+        let a: Vec<u64> = plain_stats.kernels.iter().map(|k| k.cycles).collect();
+        let b: Vec<u64> = gpu0.kernels.iter().map(|k| k.cycles).collect();
+        assert_eq!(a, b, "{workload}: kernel-by-kernel cycle counts");
+    }
+}
+
+/// Multi-GPU cluster workloads also hold at 2 GPUs under the thread
+/// sweep (halo pattern: neighbour traffic only).
+#[test]
+fn two_gpu_halo_stencil_deterministic() {
+    let (base_cps, base) =
+        run_with_checkpoints("halo_stencil", 2, 1, Schedule::Static { chunk: 1 });
+    assert!(base.comm_cycles > 0);
+    for threads in thread_counts() {
+        let (cps, stats) =
+            run_with_checkpoints("halo_stencil", 2, threads, Schedule::Dynamic { chunk: 1 });
+        assert_eq!(base_cps, cps, "{threads} threads");
+        assert_eq!(base.fingerprint(), stats.fingerprint(), "{threads} threads");
+    }
+}
+
+/// Observers must not perturb cluster results (they run from the
+/// sequential driver loop).
+#[test]
+fn observers_do_not_perturb_cluster_results() {
+    use std::cell::RefCell;
+    use std::rc::Rc;
+
+    /// Counts (cycles, kernel starts, kernel ends, finishes) into a
+    /// shared cell so the totals stay readable after the observer is
+    /// boxed into the session.
+    struct Counter(Rc<RefCell<[u64; 4]>>);
+    impl Observer for Counter {
+        fn on_cycle(&mut self, _v: &parsim::engine::CycleView<'_>) {
+            self.0.borrow_mut()[0] += 1;
+        }
+        fn on_kernel_start(&mut self, _k: &parsim::trace::KernelDesc, _id: usize) {
+            self.0.borrow_mut()[1] += 1;
+        }
+        fn on_kernel_end(&mut self, _s: &parsim::stats::KernelStats, _sim: &parsim::GpuSim) {
+            self.0.borrow_mut()[2] += 1;
+        }
+        fn on_finish(&mut self, _s: &parsim::GpuStats) {
+            self.0.borrow_mut()[3] += 1;
+        }
+    }
+
+    let mut bare = session("tp_gemm", 2, 1, Schedule::Static { chunk: 1 });
+    bare.run_to_completion().unwrap();
+    let bare_fp = bare.into_stats().unwrap().fingerprint();
+
+    let events = Rc::new(RefCell::new([0u64; 4]));
+    let mut observed = SimBuilder::new()
+        .gpu(GpuConfig::tiny())
+        .workload_named("tp_gemm", Scale::Ci)
+        .cluster(ClusterConfig::p2p(2))
+        .observer(Counter(events.clone()))
+        .build_cluster()
+        .expect("valid config");
+    observed.run_to_completion().unwrap();
+    let stats = observed.into_stats().unwrap();
+    assert_eq!(stats.fingerprint(), bare_fp, "observer perturbed the simulation");
+    let [cycles, starts, ends, finishes] = *events.borrow();
+    assert!(cycles > 0, "per-cycle hook fed");
+    assert_eq!(starts, 2 * 2, "2 kernels × 2 GPUs");
+    assert_eq!(ends, 2 * 2);
+    assert_eq!(finishes, 2, "one on_finish per GPU");
+}
+
+/// Stop conditions work on clusters: instruction counts accumulate
+/// across GPUs and cycle budgets count lock-step cycles.
+#[test]
+fn cluster_stop_conditions() {
+    let mut s = session("tp_gemm", 2, 1, Schedule::Static { chunk: 1 });
+    assert_eq!(
+        s.run(StopCondition::InstructionCount(100)).unwrap(),
+        parsim::SessionStatus::Running
+    );
+    assert!(s.total_warp_insts_so_far() >= 100);
+    let at = s.cluster_cycle();
+    assert_eq!(s.run(StopCondition::CycleBudget(7)).unwrap(), parsim::SessionStatus::Running);
+    assert_eq!(s.cluster_cycle(), at + 7);
+    s.run_to_completion().unwrap();
+    let stats = s.stats().expect("finished");
+    assert_eq!(stats.per_gpu.len(), 2);
+}
+
+/// Switch topology is deterministic too, and slower (it adds latency and
+/// caps delivery through the switch) — same workload takes at least as
+/// many comm cycles as on point-to-point links.
+#[test]
+fn switch_topology_deterministic_and_costlier() {
+    let run = |cfg: ClusterConfig| {
+        let mut s = SimBuilder::new()
+            .gpu(GpuConfig::tiny())
+            .workload_named("tp_gemm", Scale::Ci)
+            .cluster(cfg)
+            .build_cluster()
+            .expect("valid config");
+        s.run_to_completion().unwrap();
+        s.into_stats().unwrap()
+    };
+    let p2p = run(ClusterConfig::p2p(4));
+    let sw1 = run(ClusterConfig::switched(4));
+    let sw2 = run(ClusterConfig::switched(4));
+    assert_eq!(sw1.fingerprint(), sw2.fingerprint(), "switch topology reproducible");
+    assert!(sw1.comm_cycles >= p2p.comm_cycles, "{} < {}", sw1.comm_cycles, p2p.comm_cycles);
+    assert_ne!(sw1.fingerprint(), p2p.fingerprint(), "topology is part of the result");
+    // compute is identical — only the fabric differs
+    for (a, b) in p2p.per_gpu.iter().zip(&sw1.per_gpu) {
+        assert_eq!(a.fingerprint(), b.fingerprint());
+    }
+}

@@ -89,6 +89,30 @@ fn schedules_do_not_change_results() {
     }
 }
 
+/// CI determinism matrix hook: `PARSIM_THREADS` (default 4) vs the
+/// sequential baseline, across both schedules. The workflow re-runs
+/// this suite with `PARSIM_THREADS={1,4,8}`.
+#[test]
+fn parsim_threads_env_matrix_equals_sequential() {
+    let threads: usize = std::env::var("PARSIM_THREADS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(4);
+    let gpu = GpuConfig::tiny();
+    for name in ["nn", "lud", "cut_1"] {
+        let seq = run(name, &gpu, 1, Schedule::Static { chunk: 1 }, StatsStrategy::PerSm);
+        for schedule in [Schedule::Static { chunk: 0 }, Schedule::Dynamic { chunk: 1 }] {
+            let par = run(name, &gpu, threads, schedule, StatsStrategy::PerSm);
+            assert_identical(
+                name,
+                &seq,
+                &par,
+                &format!("PARSIM_THREADS={threads} {schedule:?}"),
+            );
+        }
+    }
+}
+
 /// Repeated runs of the *same* parallel configuration must agree with
 /// themselves (no hidden host-timing dependence).
 #[test]

@@ -174,6 +174,128 @@ fn prop_cost_model_bounds() {
     }
 }
 
+/// Interconnect ordering invariant, shared by the on-chip crossbar and
+/// the inter-GPU fabric: under bursty same-cycle injection from many
+/// nodes toward one destination, the delivered sequence at that
+/// destination is **strictly sorted by `(ready_cycle, seq)`** — the
+/// total order that makes every downstream statistic a pure function of
+/// the program. Ties in `ready_cycle` (a same-cycle burst of equal-size
+/// packets) must resolve in injection order, and the whole delivery
+/// sequence must be reproducible run-to-run.
+#[test]
+fn prop_delivery_is_ready_cycle_seq_total_order() {
+    use parsim::cluster::Fabric;
+    use parsim::config::ClusterConfig;
+    use parsim::icnt::{Icnt, Packet};
+    use parsim::mem::{MemRequest, WarpRef};
+
+    fn assert_total_order(tag: &str, delivered: &[(u64, u64, u32)]) {
+        for w in delivered.windows(2) {
+            assert!(
+                (w[0].0, w[0].1) < (w[1].0, w[1].1),
+                "{tag}: delivery violates (ready_cycle, seq) total order: \
+                 {:?} before {:?}",
+                w[0],
+                w[1]
+            );
+        }
+    }
+
+    for iter in 0..PROPERTY_ITERS as u64 {
+        let mut g = SplitMix64::new(0x07D3_0BD3u64.wrapping_add(iter));
+        let n_src = g.range(2, 8);
+        let dst = n_src as u32;
+        // burst schedule: per cycle, which sources fire and how big
+        let bursts: Vec<Vec<(u32, usize)>> = (0..60)
+            .map(|_| {
+                (0..n_src as u32)
+                    .filter_map(|s| {
+                        if g.chance(0.7) {
+                            Some((s, g.next_below(4) as usize))
+                        } else {
+                            None
+                        }
+                    })
+                    .collect()
+            })
+            .collect();
+        let injected: usize = bursts.iter().map(|b| b.len()).sum();
+        if injected == 0 {
+            continue;
+        }
+
+        let run_icnt = || {
+            const SIZES: [u32; 4] = [8, 40, 136, 520];
+            let mut ic = Icnt::new(parsim::config::GpuConfig::tiny().icnt, n_src + 1);
+            let mut delivered = Vec::new();
+            let mut now = 0u64;
+            while delivered.len() < injected {
+                if let Some(burst) = bursts.get(now as usize) {
+                    for &(src, size_idx) in burst {
+                        ic.inject(
+                            Packet {
+                                req: MemRequest {
+                                    line_addr: 128 * now,
+                                    is_write: false,
+                                    sm_id: src,
+                                    warp: WarpRef { warp_slot: 0, load_slot: 0 },
+                                },
+                                is_reply: false,
+                                src,
+                                dst,
+                                size_bytes: SIZES[size_idx],
+                                ready_cycle: 0,
+                                seq: 0,
+                            },
+                            now,
+                        );
+                    }
+                }
+                ic.transfer(now);
+                while let Some(p) = ic.eject(dst as usize) {
+                    delivered.push((p.ready_cycle, p.seq, p.src));
+                }
+                now += 1;
+                assert!(now < 1_000_000, "icnt never drained");
+            }
+            assert!(ic.is_idle());
+            delivered
+        };
+
+        let run_fabric = || {
+            const SIZES: [u32; 4] = [32, 512, 4096, 8192];
+            let mut f = Fabric::new(ClusterConfig::p2p(n_src + 1).fabric, n_src + 1);
+            let mut delivered = Vec::new();
+            let mut now = 0u64;
+            while delivered.len() < injected {
+                if let Some(burst) = bursts.get(now as usize) {
+                    for &(src, size_idx) in burst {
+                        f.inject(src, dst, SIZES[size_idx], now);
+                    }
+                }
+                f.transfer(now);
+                while let Some(p) = f.eject(dst as usize) {
+                    delivered.push((p.ready_cycle, p.seq, p.src));
+                }
+                now += 1;
+                assert!(now < 1_000_000, "fabric never drained");
+            }
+            assert!(f.is_idle());
+            delivered
+        };
+
+        let icnt_order = run_icnt();
+        assert_eq!(icnt_order.len(), injected, "iter {iter}: every packet delivered once");
+        assert_total_order(&format!("iter {iter} icnt"), &icnt_order);
+        assert_eq!(icnt_order, run_icnt(), "iter {iter}: icnt delivery reproducible");
+
+        let fabric_order = run_fabric();
+        assert_eq!(fabric_order.len(), injected, "iter {iter}: every packet delivered once");
+        assert_total_order(&format!("iter {iter} fabric"), &fabric_order);
+        assert_eq!(fabric_order, run_fabric(), "iter {iter}: fabric delivery reproducible");
+    }
+}
+
 /// Workload construction is a pure function of (name, scale).
 #[test]
 fn prop_workload_construction_pure() {
