@@ -1,0 +1,60 @@
+//! Hot-path throughput bench: the optimized engine (lock-free fork/join
+//! barrier + deterministic active-SM worklist + idle-cycle fast-forward)
+//! vs the pre-optimization reference engine (full SM scan, cycle-by-cycle
+//! loop), per workload × thread count, fingerprint-checked.
+//!
+//! Writes `BENCH_hotpath.json` (one flat JSON object per matrix point —
+//! the repo's perf trajectory record; CI uploads it as an artifact).
+//!
+//! Env knobs: `BENCH_SCALE=ci|small|paper` (default ci),
+//! `BENCH_WORKLOAD=name` to restrict to one workload,
+//! `BENCH_GPU=tiny|rtx3080ti|…` (default rtx3080ti — the acceptance
+//! config: `myocyte` there occupies 2 of 80 SMs, the worklist's best
+//! case), `BENCH_THREADS=1,4` for the thread sweep.
+
+mod common;
+
+use parsim::config::{presets, Schedule};
+use parsim::harness;
+
+fn main() {
+    let scale = common::env_scale();
+    let gpu = match std::env::var("BENCH_GPU").ok() {
+        Some(name) => presets::by_name(&name).expect("BENCH_GPU names a preset"),
+        None => parsim::config::GpuConfig::rtx3080ti(),
+    };
+    // myocyte = idle-heavy (2 busy SMs), hotspot/nn = dense: the
+    // acceptance pair — big win on the former, no regression on the
+    // latter.
+    let default_names = ["myocyte", "hotspot", "nn"];
+    let filter = common::env_workload_filter();
+    let names: Vec<&str> = match &filter {
+        Some(one) => vec![one.as_str()],
+        None => default_names.to_vec(),
+    };
+    let threads: Vec<usize> = match std::env::var("BENCH_THREADS").ok() {
+        Some(list) => list
+            .split(',')
+            .map(|t| t.trim().parse().expect("BENCH_THREADS is a comma list of ints"))
+            .collect(),
+        None => vec![1, 4],
+    };
+    let rows = harness::bench_hotpath(
+        &names,
+        scale,
+        &gpu,
+        &threads,
+        Schedule::Static { chunk: 0 },
+        harness::HotpathLayers::default(),
+        true,
+    )
+    .expect("valid bench config");
+    println!("\n{}", harness::hotpath_report(&rows, scale, &gpu));
+    std::fs::write("BENCH_hotpath.json", harness::hotpath_json(&rows))
+        .expect("write BENCH_hotpath.json");
+    println!("wrote BENCH_hotpath.json");
+    assert!(
+        rows.iter().all(|r| r.identical),
+        "hot-path fingerprint mismatch — an optimization changed results"
+    );
+}

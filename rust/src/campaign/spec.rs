@@ -175,6 +175,8 @@ impl JobSpec {
             profile_sample: 8,
             measure_work: false,
             seed: self.seed,
+            sm_worklist: true,
+            fast_forward: true,
         }
     }
 

@@ -186,6 +186,28 @@ impl Fabric {
         self.in_flight == 0
     }
 
+    /// Earliest future cycle at which any in-flight packet can move
+    /// (feeds the cluster engine's communication-phase fast-forward,
+    /// same contract as [`crate::icnt::Icnt::next_event_cycle`]):
+    /// `None` when an ejection buffer already holds a packet,
+    /// `Some(u64::MAX)` when fully idle, else the min `ready_cycle`
+    /// over the per-destination heaps.
+    pub fn next_event_cycle(&self) -> Option<u64> {
+        if self.in_flight == 0 {
+            return Some(u64::MAX);
+        }
+        if self.eject.iter().any(|q| !q.is_empty()) {
+            return None;
+        }
+        let mut t = u64::MAX;
+        for h in &self.per_dst {
+            if let Some(&Due(pkt)) = h.peek() {
+                t = t.min(pkt.ready_cycle);
+            }
+        }
+        Some(t)
+    }
+
     pub fn in_flight(&self) -> usize {
         self.in_flight
     }
@@ -325,6 +347,18 @@ mod tests {
         };
         assert_eq!(run(&[32, 4096, 64]), run(&[32, 4096, 64]));
         assert_ne!(run(&[32, 4096, 64]), run(&[32, 4096, 128]));
+    }
+
+    #[test]
+    fn next_event_cycle_matches_arrival() {
+        let mut f = fabric(2);
+        assert_eq!(f.next_event_cycle(), Some(u64::MAX), "idle fabric");
+        f.inject(0, 1, 32, 0); // 1 flit → latency 700 + 1
+        assert_eq!(f.next_event_cycle(), Some(701));
+        f.transfer(701);
+        assert_eq!(f.next_event_cycle(), None, "deliverable now ⇒ no jump");
+        f.eject(1);
+        assert_eq!(f.next_event_cycle(), Some(u64::MAX));
     }
 
     #[test]

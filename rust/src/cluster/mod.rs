@@ -30,12 +30,28 @@
 //!    the whole cycle a constant.
 //! 3. **Parallel `(gpu, sm)` fan-out (SM level).** The paper's parallel
 //!    SM phase is lifted to the flattened pair space: all active GPUs'
-//!    SMs form one index range dispatched over one shared
+//!    *worklist* SMs form one index range dispatched over one shared
 //!    [`ThreadPool`] through [`DisjointSlice`]s, so a 4-GPU × N-SM run
 //!    fills the same core budget the paper's single-GPU loop does.
+//!    Each per-GPU worklist is rebuilt in that GPU's sequential phase
+//!    (level 2 above), so pair-space membership is itself a pure
+//!    function of model state — see the engine module docs, layer 2.
 //!    Each SM still touches only its own state and ports (the
 //!    [`crate::core::Sm`] contract), so thread count and schedule
 //!    remain invisible to results.
+//!
+//! The engine's idle fast-forward extends here unchanged: when every
+//! non-parked GPU's worklist is empty and only icnt/DRAM latencies are
+//! pending, the whole cluster jumps by the minimum of the per-GPU jump
+//! targets (each GPU replays its skipped-cycle bookkeeping exactly —
+//! see `GpuSim::apply_fast_forward`); during communication phases the
+//! same jump is computed from the fabric's `(ready_cycle, seq)` heaps
+//! once all packets are injected. Both jumps only skip windows in which
+//! nothing can transition, so `ClusterStats` — including
+//! `cluster_cycles`/`comm_cycles` — is bit-identical with the
+//! fast-forward on or off; sessions needing exact stepping
+//! (`step_cycle`, `CycleBudget`, predicates, per-cycle observers)
+//! disable it.
 //!
 //! `tests/cluster.rs` asserts the consequence: a 4-GPU run is
 //! bit-identical — final statistics *and* mid-run
@@ -210,6 +226,13 @@ struct ClusterSim {
     pair_buf: Vec<(u32, u32)>,
     capture_views: bool,
     lead_snap: LeadSnap,
+    /// [`SimConfig::fast_forward`] as configured — the ablation/reference
+    /// switch. `ff_allowed` below can only narrow this.
+    ff_config: bool,
+    /// Idle fast-forward gate for the current driving mode (set by the
+    /// session: exact stepping modes clear it; never true when
+    /// `ff_config` is off).
+    ff_allowed: bool,
 }
 
 impl ClusterSim {
@@ -276,6 +299,8 @@ impl ClusterSim {
             pair_buf: Vec::new(),
             capture_views: false,
             lead_snap: LeadSnap::default(),
+            ff_config: sim.fast_forward,
+            ff_allowed: false,
             wl,
         })
     }
@@ -361,7 +386,39 @@ impl ClusterSim {
         } else {
             SessionStatus::Running
         };
+        if self.ff_allowed && status == SessionStatus::Running && completed_kernel.is_none() {
+            self.try_fast_forward_compute();
+        }
         Ok(StepOutcome { status, started_kernel, completed_kernel, compute_cycle: true })
+    }
+
+    /// Cluster-level idle fast-forward of the compute phase: when every
+    /// non-parked GPU is provably inactive until some future cycle, jump
+    /// the whole lock-step by the minimum per-GPU distance. Nothing
+    /// transitions in the skipped window on any GPU (each jump target is
+    /// that GPU's first possible event), so per-GPU cycle counts, the
+    /// cluster counter, and every statistic match the unskipped engine
+    /// bit-for-bit.
+    fn try_fast_forward_compute(&mut self) {
+        let mut delta = u64::MAX;
+        for (g, gpu) in self.gpus.iter().enumerate() {
+            if self.gpu_done[g] {
+                continue;
+            }
+            match gpu.idle_jump_target() {
+                Some(t) => delta = delta.min(t - gpu.gpu_cycle()),
+                None => return,
+            }
+        }
+        if delta == 0 || delta == u64::MAX {
+            return;
+        }
+        for (g, gpu) in self.gpus.iter_mut().enumerate() {
+            if !self.gpu_done[g] {
+                gpu.apply_fast_forward(delta);
+            }
+        }
+        self.cluster_cycle += delta;
     }
 
     /// Queue kernel `k`'s communication phase (if any), else advance.
@@ -419,6 +476,20 @@ impl ClusterSim {
         self.comm_cycles += 1;
 
         let drained = self.fabric.is_idle() && self.pending.iter().all(|q| q.is_empty());
+        // Communication-phase fast-forward: every packet is injected and
+        // none can arrive before the fabric's next `(ready_cycle, seq)`
+        // event — the skipped cycles are pure latency (each would inject
+        // nothing, transfer nothing, eject nothing), so folding them
+        // into the counters is bit-identical to cycling through.
+        if self.ff_allowed && !drained && self.pending.iter().all(|q| q.is_empty()) {
+            if let Some(t) = self.fabric.next_event_cycle() {
+                let now = self.cluster_cycle;
+                if t != u64::MAX && t > now {
+                    self.cluster_cycle += t - now;
+                    self.comm_cycles += t - now;
+                }
+            }
+        }
         let status = if drained {
             self.next_kernel_or_done(k)
         } else {
@@ -432,7 +503,10 @@ impl ClusterSim {
         })
     }
 
-    /// The flattened `(gpu, sm)` parallel phase over all active GPUs.
+    /// The flattened `(gpu, sm)` parallel phase over all active GPUs'
+    /// worklists (parked-idle SMs of a GPU never enter the pair space —
+    /// their bookkeeping is settled sequentially by that GPU, exactly as
+    /// in the single-GPU engine).
     fn parallel_sm_phase(&mut self) {
         let Self { gpus, gpu_done, pool, schedule, pair_buf, .. } = self;
         let mut parts: Vec<(u64, DisjointSlice<'_, Sm>, DisjointSlice<'_, u32>)> =
@@ -442,9 +516,9 @@ impl ClusterSim {
             if gpu_done[g] {
                 continue;
             }
-            let (now, sms, work) = gpu.sm_parallel_parts();
+            let (now, active, sms, work) = gpu.sm_parallel_parts();
             let part = parts.len() as u32;
-            for s in 0..sms.len() as u32 {
+            for &s in active {
                 pair_buf.push((part, s));
             }
             parts.push((now, DisjointSlice::new(sms), DisjointSlice::new(work)));
@@ -572,11 +646,14 @@ impl ClusterSession {
         Ok(ClusterSession { sim, observers, cycle_observers, finished: None, wall_s: 0.0 })
     }
 
-    /// Advance the cluster by one lock-step cycle.
+    /// Advance the cluster by exactly one lock-step cycle (the idle
+    /// fast-forward is suppressed — stepping is the exact-observation
+    /// surface).
     pub fn step_cycle(&mut self) -> Result<SessionStatus, SimError> {
         if self.finished.is_some() {
             return Err(SimError::SessionFinished);
         }
+        self.sim.ff_allowed = false;
         let t0 = Instant::now();
         let r = self.step_inner().map(|o| o.status);
         self.wall_s += t0.elapsed().as_secs_f64();
@@ -654,6 +731,18 @@ impl ClusterSession {
         let start_cycle = self.sim.cluster_cycle;
         self.sim.capture_views =
             self.cycle_observers || matches!(*cond, StopCondition::Predicate(_));
+        // Same exact-observation contract as `SimSession::run`: jump only
+        // where nobody needs to see every cycle, and never when the
+        // configuration disabled the fast-forward outright (the
+        // ablation/reference switch). Results are identical either way.
+        self.sim.ff_allowed = self.sim.ff_config
+            && !self.cycle_observers
+            && matches!(
+                *cond,
+                StopCondition::ToCompletion
+                    | StopCondition::KernelBoundary
+                    | StopCondition::InstructionCount(_)
+            );
         loop {
             let already_met = match &*cond {
                 StopCondition::CycleBudget(n) => self.sim.cluster_cycle - start_cycle >= *n,

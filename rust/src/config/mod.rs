@@ -564,6 +564,16 @@ pub struct SimConfig {
     pub measure_work: bool,
     /// Deterministic seed for anything stochastic in workload synthesis.
     pub seed: u64,
+    /// Fan the parallel SM phase out over the deterministic active-SM
+    /// worklist instead of `0..num_sms` (bit-identical results; off =
+    /// the pre-optimization full scan, kept for golden-fingerprint
+    /// reference runs and ablation benches).
+    pub sm_worklist: bool,
+    /// Allow the engine to jump `gpu_cycle` across provably-inactive
+    /// windows (bit-identical results; sessions force exact stepping
+    /// where per-cycle observation is required). Off = the
+    /// pre-optimization cycle-by-cycle loop.
+    pub fast_forward: bool,
 }
 
 impl Default for SimConfig {
@@ -578,6 +588,8 @@ impl Default for SimConfig {
             profile_sample: 8,
             measure_work: false,
             seed: 0xC0FFEE,
+            sm_worklist: true,
+            fast_forward: true,
         }
     }
 }

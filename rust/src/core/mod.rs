@@ -258,6 +258,22 @@ impl Sm {
         self.resident_warps
     }
 
+    /// Could [`Self::cycle`] do anything this cycle? When this is false,
+    /// `cycle()` is exactly its trivial early-out (`stats.cycles += 1`,
+    /// work estimate 1): no resident warps, nothing delivered on the
+    /// in-port, and an idle LD/ST unit. (`ifetch_fill` entries and busy
+    /// exec pipes imply a resident warp — a warp waiting on an i-fetch
+    /// or holding a pending register write cannot exit — so they need no
+    /// separate check.) The engine's deterministic active-SM worklist
+    /// parks SMs for which this is false; an SM can only leave the
+    /// parked state through *sequential* events (a CTA launch or an icnt
+    /// delivery to `in_port`), never during the parallel phase, which is
+    /// what makes worklist membership schedule-independent.
+    #[inline]
+    pub fn needs_cycle(&self) -> bool {
+        self.resident_warps > 0 || !self.in_port.is_empty() || !self.ldst.is_idle()
+    }
+
     /// Fully drained? (kernel-completion check)
     pub fn is_idle(&self) -> bool {
         self.resident_ctas == 0

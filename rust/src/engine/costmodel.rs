@@ -206,15 +206,31 @@ impl CostModel {
 
     /// Feed the measured per-SM work of one simulated cycle.
     pub fn record_cycle(&mut self, work: &[u32]) {
-        self.cycles += 1;
+        self.record_cycle_times(work, 1);
+    }
+
+    /// Record the same per-SM work vector for `times` consecutive cycles
+    /// in one pass — the engine's idle fast-forward batches its skipped
+    /// (all-idle) cycles through here, so a jump over N cycles costs one
+    /// makespan evaluation per configuration instead of N. Integer
+    /// totals (`cycles`, `total_work`) are exact; float accumulators are
+    /// scaled rather than repeatedly added, which can differ from the
+    /// unbatched sum in the last ulp — acceptable for a model that is
+    /// advisory (never fingerprinted).
+    pub fn record_cycle_times(&mut self, work: &[u32], times: u64) {
+        if times == 0 {
+            return;
+        }
+        let tf = times as f64;
+        self.cycles += times;
         let cycle_work: u64 = work.iter().map(|&w| w as u64).sum();
-        self.total_work += cycle_work;
+        self.total_work += cycle_work * times;
         // paper-regime weights: busy activity (work − idle base of 1)
         // plus a small idle weight — see ACCELSIM_IDLE_WEIGHT.
         let paper_w = |i: usize, w: &[u32]| {
             (w[i].saturating_sub(1)) as f64 + ACCELSIM_IDLE_WEIGHT
         };
-        self.total_paper += (0..work.len()).map(|i| paper_w(i, work)).sum::<f64>();
+        self.total_paper += (0..work.len()).map(|i| paper_w(i, work)).sum::<f64>() * tf;
         for (ci, cfg) in self.configs.iter().enumerate() {
             let t = cfg.threads;
             let (m1, events) = Self::makespan(
@@ -231,9 +247,9 @@ impl CostModel {
                 t,
                 |i| paper_w(i, work),
             );
-            self.par_units[ci] += m1;
-            self.par_units_paper[ci] += m2;
-            self.sched_events[ci] += events;
+            self.par_units[ci] += m1 * tf;
+            self.par_units_paper[ci] += m2 * tf;
+            self.sched_events[ci] += events * tf;
         }
     }
 
@@ -439,6 +455,24 @@ mod tests {
         let paper = m.speedup_paper_regime(0, 0.0);
         assert!(paper > this_sub, "discounted overheads ⇒ higher speed-up");
         assert!(paper > 8.0, "balanced 80-SM work @16t in paper regime: {paper}");
+    }
+
+    #[test]
+    fn batched_records_match_repeated_records() {
+        // the fast-forward batching path must agree with per-cycle feeds
+        let mut a = model(cfgs(4));
+        let mut b = model(cfgs(4));
+        let work = [1u32; 16];
+        for _ in 0..37 {
+            a.record_cycle(&work);
+        }
+        b.record_cycle_times(&work, 37);
+        assert_eq!(a.cycles(), b.cycles());
+        assert_eq!(a.total_work(), b.total_work());
+        for ci in 0..3 {
+            let (sa, sb) = (a.speedup(ci, 0.0), b.speedup(ci, 0.0));
+            assert!((sa - sb).abs() < 1e-9, "config {ci}: {sa} vs {sb}");
+        }
     }
 
     #[test]

@@ -12,48 +12,158 @@
 //! * **dynamic, chunk c** — idle threads grab the next `c` iterations
 //!   from a shared atomic counter.
 //!
-//! Workers are created once and parked between regions (OpenMP thread
-//! pools do the same); a fork/join region is two atomic phase
-//! transitions. `parallel_for` with `threads == 1` bypasses the pool
-//! entirely — the paper's "can be disabled and executed sequentially".
+//! # The fork/join barrier
+//!
+//! The engine opens a parallel region **every simulated GPU cycle**, so
+//! the fork/join cost is first-order for the whole simulator
+//! (ScaleSimulator, arXiv:1803.11440, measures barrier cost as the
+//! dominant limiter of cycle-locked parallel simulation). The original
+//! implementation took a `Mutex<Option<Job>>` on every fork, signalled a
+//! condvar, and re-took the mutex on join to retire the job — two mutex
+//! round-trips plus a condvar broadcast per simulated cycle.
+//!
+//! This version is a **sense-reversing epoch barrier** with a lock-free
+//! hot path:
+//!
+//! * The job descriptor lives in an [`UnsafeCell`] slot. The publisher
+//!   writes it, resets the ticket/done counters, and then bumps the
+//!   `epoch` word with `Release` ordering — the epoch bump *is* the
+//!   fork. (A monotonically increasing epoch plays the role of the
+//!   classic alternating sense bit: any change of the word means "new
+//!   region", and a worker's locally remembered epoch is its sense.)
+//! * Workers bounded-spin on the epoch with `Acquire` loads (the hot
+//!   path when regions arrive back-to-back, as they do mid-kernel), and
+//!   only **park on the condvar as the cold fallback** — e.g. between
+//!   kernels, while the sequential phases run long, or when the host has
+//!   fewer cores than workers.
+//! * The join is a `done`-counter spin: each worker publishes its
+//!   region's writes with an `AcqRel` increment, the caller spins with
+//!   `Acquire` loads until all have arrived. **No mutex is re-taken to
+//!   retire the job** — the stale descriptor is simply never read again,
+//!   because workers only dereference it after observing a *newer*
+//!   epoch, and the publisher overwrites it only after the previous join
+//!   completed (so no worker can still be reading it).
+//!
+//! # Memory-ordering audit
+//!
+//! * `epoch`: `Release` store on publish / `Acquire` load in workers —
+//!   carries the job slot, the `done = 0` reset, and the ticket reset to
+//!   the workers.
+//! * `done`: `AcqRel` fetch-add / `Acquire` join loads — carries every
+//!   region write (SM state mutated through [`super::DisjointSlice`])
+//!   back to the caller before `parallel_for` returns.
+//! * `ticket`: **`Relaxed` is correct and intentional.** The dynamic
+//!   schedule needs each index handed out exactly once, which the
+//!   atomicity of `fetch_add` alone guarantees; tickets order nothing
+//!   and publish nothing (the data a ticket leads to is only written
+//!   *by* the ticket holder, and its visibility is carried by `done`).
+//!   The reset to 0 happens before the `Release` epoch bump, so workers
+//!   that acquired the new epoch cannot observe a stale ticket value.
+//! * The park/wake handshake uses `SeqCst` on `epoch`/`sleepers` (see
+//!   `Shared::wake_sleepers`) so a worker deciding to sleep and a
+//!   publisher deciding not to notify cannot miss each other.
 //!
 //! # Safety
 //! The closure receives each index **exactly once per region** across all
 //! workers (disjoint static blocks / unique `fetch_add` tickets), which is
-//! what makes handing workers a shared `&(dyn Fn(usize) + Sync)` over
-//! per-index `&mut` data sound — see [`super::DisjointSlice`].
+//! what makes handing every worker shared access to one `F: Fn(usize) +
+//! Sync` over per-index `&mut` data sound — see [`super::DisjointSlice`].
+//! The closure itself is type-erased with a thin-pointer cast plus a
+//! monomorphized trampoline (`call_one`), not a lifetime-laundering
+//! `transmute` of a fat `dyn` pointer.
 
+use std::cell::UnsafeCell;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 
 use crate::config::Schedule;
 
+/// Spin iterations before a worker parks on the condvar. The first few
+/// are pure `spin_loop` hints; the rest yield the CPU so hosts with
+/// fewer cores than workers (CI runners) don't burn whole scheduler
+/// quanta spinning.
+const SPIN_BEFORE_PARK: u32 = 512;
+/// Of those, how many busy-spin before switching to `yield_now`.
+const SPIN_BUSY: u32 = 64;
+
 /// Type-erased job descriptor shared with workers for one region.
+///
+/// The closure is erased with an **honest thin-pointer cast** plus a
+/// monomorphized trampoline (`data` = `&F` cast `*const F` → `*const ()`;
+/// `call` = `call_one::<F>`), replacing the previous lifetime-laundering
+/// `transmute` of a fat `dyn` pointer. Nothing about the type is lied
+/// about — only the borrow's lifetime is erased, at the raw-pointer
+/// level, and validity is re-established by the barrier protocol: the
+/// pointer is dereferenced strictly between fork and join, while the
+/// closure is alive on the caller's stack (see `worker_loop`).
+#[derive(Clone, Copy)]
 struct Job {
-    /// Pointer to the `&(dyn Fn(usize) + Sync)` for this region.
-    /// Valid only while the region is active (join precedes drop).
-    func: *const (dyn Fn(usize) + Sync),
+    /// Erased `&F` of this region's closure.
+    data: *const (),
+    /// Monomorphized trampoline that reconstitutes `&F` and runs one
+    /// iteration. SAFETY contract: `data` points to a live `F`.
+    call: unsafe fn(*const (), usize),
     n: usize,
     schedule: Schedule,
     threads: usize,
 }
 
-// The raw pointer is only dereferenced between fork and join, while the
-// referent is alive on the caller's stack.
-unsafe impl Send for Job {}
-unsafe impl Sync for Job {}
+/// The trampoline behind [`ThreadPool::parallel_for`]'s type erasure.
+///
+/// # Safety
+/// `data` must be the erased `&F` of a closure that is still alive —
+/// guaranteed by the fork/join protocol (the publisher keeps `F` on its
+/// stack until every worker has passed the join barrier).
+unsafe fn call_one<F: Fn(usize) + Sync>(data: *const (), i: usize) {
+    (*(data as *const F))(i)
+}
 
 struct Shared {
-    /// Region generation counter: bumped to publish a new job.
-    phase: AtomicU64,
-    /// Dynamic-schedule ticket counter.
+    /// Region epoch (the barrier's sense word): bumped to publish a new
+    /// job, and once more — with `quit` set — to shut the pool down.
+    epoch: AtomicU64,
+    /// Dynamic-schedule ticket counter (see the module docs for why all
+    /// its accesses are deliberately `Relaxed`).
     ticket: AtomicUsize,
     /// Workers done with the current region.
     done: AtomicUsize,
-    job: Mutex<Option<Job>>,
-    cv: Condvar,
-    /// Pool shutdown flag.
+    /// Pool shutdown flag (read after every epoch change).
     quit: AtomicU64,
+    /// Workers parked (or committed to parking) on `cv`. The publisher
+    /// skips the mutex+notify entirely while this is 0 — the common case
+    /// when regions arrive back-to-back and workers are still spinning.
+    sleepers: AtomicUsize,
+    /// The current region's descriptor. Synchronized by `epoch`: written
+    /// only while all workers are quiescent (after the previous join),
+    /// read only after acquiring a newer epoch.
+    job: UnsafeCell<Option<Job>>,
+    park: Mutex<()>,
+    cv: Condvar,
+}
+
+// SAFETY: `job` is the only non-Sync field; the epoch protocol above
+// guarantees writes to it never race with reads (publisher writes only
+// between a completed join and the next epoch bump; workers read only
+// after acquiring that bump). The erased `data` pointer inside is only
+// dereferenced (through `call`) while the caller keeps the closure alive.
+unsafe impl Send for Shared {}
+unsafe impl Sync for Shared {}
+
+impl Shared {
+    /// Wake any parked workers after an epoch bump. Pairs with the
+    /// `sleepers`/`epoch` protocol in `wait_for_epoch`: both sides use
+    /// `SeqCst` so either the publisher sees `sleepers > 0` and notifies
+    /// under the park mutex, or the worker's post-increment epoch check
+    /// (which is after the publisher's store in the single total order)
+    /// sees the new epoch and never sleeps. The mutex is held empty for
+    /// the notify only, so a worker between "decided to sleep" and
+    /// "actually waiting" still can't miss the wake-up.
+    fn wake_sleepers(&self) {
+        if self.sleepers.load(Ordering::SeqCst) > 0 {
+            let _g = self.park.lock().unwrap();
+            self.cv.notify_all();
+        }
+    }
 }
 
 /// Persistent worker pool.
@@ -75,12 +185,14 @@ impl ThreadPool {
     pub fn new(threads: usize) -> Self {
         assert!(threads >= 1);
         let shared = Arc::new(Shared {
-            phase: AtomicU64::new(0),
+            epoch: AtomicU64::new(0),
             ticket: AtomicUsize::new(0),
             done: AtomicUsize::new(0),
-            job: Mutex::new(None),
-            cv: Condvar::new(),
             quit: AtomicU64::new(0),
+            sleepers: AtomicUsize::new(0),
+            job: UnsafeCell::new(None),
+            park: Mutex::new(()),
+            cv: Condvar::new(),
         });
         let mut workers = Vec::new();
         for wid in 1..threads {
@@ -111,34 +223,38 @@ impl ThreadPool {
             }
             return;
         }
-        let func: &(dyn Fn(usize) + Sync) = &f;
-        // publish the job
-        {
-            let mut job = self.shared.job.lock().unwrap();
-            *job = Some(Job {
-                // erase the stack lifetime: joined before `f` drops
-                func: unsafe {
-                    std::mem::transmute::<
-                        *const (dyn Fn(usize) + Sync),
-                        *const (dyn Fn(usize) + Sync),
-                    >(func as *const _)
-                },
+        // Fork: publish the job, then bump the epoch. The previous
+        // region's join completed before we got here, so every worker is
+        // back in `wait_for_epoch` and none can be reading the slot.
+        // SAFETY: see `Shared::job` and `call_one`.
+        unsafe {
+            *self.shared.job.get() = Some(Job {
+                data: &f as *const F as *const (),
+                call: call_one::<F>,
                 n,
                 schedule,
                 threads: self.threads,
             });
-            self.shared.ticket.store(0, Ordering::Relaxed);
-            self.shared.done.store(0, Ordering::Release);
-            self.shared.phase.fetch_add(1, Ordering::Release);
-            self.shared.cv.notify_all();
         }
+        self.shared.ticket.store(0, Ordering::Relaxed);
+        self.shared.done.store(0, Ordering::Relaxed);
+        // SeqCst rather than plain Release: the store participates in
+        // the sleepers handshake (see `Shared::wake_sleepers`). It still
+        // provides the Release edge that publishes the job/ticket/done
+        // writes above to workers' Acquire/SeqCst epoch loads.
+        self.shared.epoch.fetch_add(1, Ordering::SeqCst);
+        self.shared.wake_sleepers();
+
         // participate as worker 0
-        run_region(&self.shared, 0, func, n, schedule, self.threads);
+        run_region(&self.shared, 0, &f, n, schedule, self.threads);
         self.shared.done.fetch_add(1, Ordering::AcqRel);
-        // join: wait for all workers. Spin briefly (fast path on idle
+
+        // Join: wait for all workers. Spin briefly (fast path on idle
         // multicore hosts), then yield — on hosts with fewer cores than
         // threads a pure spin would burn whole scheduler quanta while the
-        // workers wait for the CPU.
+        // workers wait for the CPU. No lock is taken and nothing is
+        // retired: the stale job slot is inert until the next fork
+        // overwrites it.
         let mut spins = 0u32;
         while self.shared.done.load(Ordering::Acquire) < self.threads {
             spins += 1;
@@ -148,67 +264,93 @@ impl ThreadPool {
                 std::thread::yield_now();
             }
         }
-        // retire the job so no worker can observe a stale pointer
-        *self.shared.job.lock().unwrap() = None;
     }
 }
 
 impl Drop for ThreadPool {
     fn drop(&mut self) {
-        // The quit/phase stores and the notify must happen under the job
-        // mutex: a worker holds it while re-checking `quit`/`phase` right
-        // before `cv.wait`, and signalling without the lock could slip
-        // into that window — the worker would miss the wake-up and the
-        // join below would hang (and before this fix, leak the worker
-        // thread when the pool was dropped from a detached context).
-        {
-            let _job = self.shared.job.lock().unwrap();
-            self.shared.quit.store(1, Ordering::Release);
-            self.shared.phase.fetch_add(1, Ordering::Release);
-            self.shared.cv.notify_all();
-        }
+        // Shutdown is "publish a region that is a quit": set `quit`
+        // first, then bump the epoch — workers re-check `quit`
+        // immediately after acquiring any new epoch, before touching the
+        // job slot (which still holds the previous region's stale
+        // descriptor). `wake_sleepers` uses the same lost-wakeup-free
+        // handshake as a normal fork, so a worker that was about to park
+        // either sees the bumped epoch or is woken under the mutex —
+        // this preserves the guarantee the old mutex-held Drop provided.
+        self.shared.quit.store(1, Ordering::Release);
+        self.shared.epoch.fetch_add(1, Ordering::SeqCst);
+        self.shared.wake_sleepers();
         for w in self.workers.drain(..) {
             let _ = w.join();
         }
     }
 }
 
+/// Wait until the epoch moves past `seen`; returns the new value.
+/// Bounded spin first, condvar park as the cold fallback.
+fn wait_for_epoch(sh: &Shared, seen: u64) -> u64 {
+    for i in 0..SPIN_BEFORE_PARK {
+        let e = sh.epoch.load(Ordering::Acquire);
+        if e != seen {
+            return e;
+        }
+        if i < SPIN_BUSY {
+            std::hint::spin_loop();
+        } else {
+            std::thread::yield_now();
+        }
+    }
+    // Cold path: park. The SeqCst increment of `sleepers` followed by a
+    // SeqCst re-check of `epoch` pairs with the publisher's SeqCst
+    // epoch-store → sleepers-load sequence: in the single total order,
+    // if the publisher read `sleepers == 0` our increment came later,
+    // which forces our re-check after its store — we see the new epoch
+    // and never sleep. Otherwise the publisher notifies under the park
+    // mutex, which we hold until `cv.wait` atomically releases it.
+    let mut guard = sh.park.lock().unwrap();
+    sh.sleepers.fetch_add(1, Ordering::SeqCst);
+    let e = loop {
+        let e = sh.epoch.load(Ordering::SeqCst);
+        if e != seen {
+            break e;
+        }
+        guard = sh.cv.wait(guard).unwrap();
+    };
+    sh.sleepers.fetch_sub(1, Ordering::SeqCst);
+    e
+}
+
 fn worker_loop(sh: Arc<Shared>, wid: usize) {
-    let mut seen_phase = 0u64;
+    let mut seen = 0u64;
     loop {
-        // wait for a new phase
-        let (func, n, schedule, threads) = {
-            let mut job = sh.job.lock().unwrap();
-            loop {
-                if sh.quit.load(Ordering::Acquire) != 0 {
-                    return;
-                }
-                let p = sh.phase.load(Ordering::Acquire);
-                if p != seen_phase {
-                    seen_phase = p;
-                    if let Some(j) = job.as_ref() {
-                        break (j.func, j.n, j.schedule, j.threads);
-                    }
-                    // phase bump without job = shutdown signal race; loop
-                }
-                job = sh.cv.wait(job).unwrap();
-            }
-        };
+        seen = wait_for_epoch(&sh, seen);
+        if sh.quit.load(Ordering::Acquire) != 0 {
+            return;
+        }
+        // SAFETY: the epoch Acquire made the publisher's slot write
+        // visible, and the publisher will not overwrite the slot until
+        // this worker (like every other) has bumped `done` below.
+        let Job { data, call, n, schedule, threads } =
+            unsafe { (*sh.job.get()).expect("epoch bump without quit publishes a job") };
         if wid < threads {
-            // SAFETY: the publisher keeps `func`'s referent alive until all
-            // workers bump `done` (the join loop in `parallel_for`).
-            let f = unsafe { &*func };
-            run_region(&sh, wid, f, n, schedule, threads);
+            // SAFETY (for `call`): the publisher keeps the closure alive
+            // until all workers bump `done` (the join loop in
+            // `parallel_for`).
+            let f = move |i: usize| unsafe { call(data, i) };
+            run_region(&sh, wid, &f, n, schedule, threads);
         }
         sh.done.fetch_add(1, Ordering::AcqRel);
     }
 }
 
-/// Execute worker `wid`'s share of the region.
+/// Execute worker `wid`'s share of the region. The closure reference is
+/// thread-local here (each worker reconstitutes its own trampoline), so
+/// no `Sync` bound is needed at this level — `parallel_for`'s `F: Sync`
+/// bound is what makes the *shared* underlying closure sound.
 fn run_region(
     sh: &Shared,
     wid: usize,
-    f: &(dyn Fn(usize) + Sync),
+    f: &dyn Fn(usize),
     n: usize,
     schedule: Schedule,
     threads: usize,
@@ -238,6 +380,8 @@ fn run_region(
         Schedule::Dynamic { chunk } => {
             let c = chunk.max(1);
             loop {
+                // Relaxed: uniqueness is all the schedule needs (module
+                // docs, "Memory-ordering audit").
                 let base = sh.ticket.fetch_add(c, Ordering::Relaxed);
                 if base >= n {
                     break;
@@ -296,6 +440,23 @@ mod tests {
         assert_eq!(sum.load(Ordering::Relaxed), 100 * (0..16).sum::<u32>());
     }
 
+    /// Exercise the cold park/wake path: long gaps between regions force
+    /// workers past the spin budget onto the condvar, and the next fork
+    /// must wake them (a lost wake-up hangs this test).
+    #[test]
+    fn park_and_wake_across_idle_gaps() {
+        let pool = ThreadPool::new(4);
+        let sum = AtomicU32::new(0);
+        for round in 0..3u32 {
+            std::thread::sleep(std::time::Duration::from_millis(30));
+            pool.parallel_for(16, Schedule::Static { chunk: 0 }, |i| {
+                sum.fetch_add(i as u32 + round, Ordering::Relaxed);
+            });
+        }
+        let expected: u32 = (0..3).map(|round| (0..16u32).map(|i| i + round).sum::<u32>()).sum();
+        assert_eq!(sum.load(Ordering::Relaxed), expected);
+    }
+
     #[test]
     fn static_contiguous_blocks_match_openmp_default() {
         // capture which worker ran which index via thread id mapping
@@ -336,10 +497,9 @@ mod tests {
     /// Regression test for the worker lifecycle: dropping a pool must
     /// join its workers (no detached threads leaking across campaign
     /// jobs), including pools that are dropped without ever running a
-    /// region and pools dropped immediately after one. Before the Drop
-    /// fix (quit signal published outside the job mutex) a worker could
-    /// miss the shutdown wake-up — this test then either hangs in
-    /// `Drop::join` or, with a detaching Drop, leaks 180 named threads.
+    /// region and pools dropped immediately after one. A lost shutdown
+    /// wake-up hangs the `Drop::join`; a detaching Drop would leak 180
+    /// named threads.
     #[test]
     fn many_pools_create_drop_without_leaking_threads() {
         for round in 0..60 {
@@ -352,7 +512,7 @@ mod tests {
                 assert_eq!(sum.load(Ordering::Relaxed), (0..16).sum::<u32>());
             }
             // round % 2 == 1: drop without ever publishing a region —
-            // workers are still parked in their initial cv.wait
+            // workers may be spinning or already parked on the condvar
             drop(pool);
         }
         // 60 dropped pools spawned 180 workers; leaking them would leave

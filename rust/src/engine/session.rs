@@ -474,6 +474,26 @@ impl SimBuilder {
         self
     }
 
+    /// Enable/disable the deterministic active-SM worklist
+    /// ([`SimConfig::sm_worklist`]; default on). Off restores the
+    /// pre-optimization full `0..num_sms` scan — results are
+    /// bit-identical either way (`tests/hotpath.rs` pins this), only
+    /// wall-clock differs.
+    pub fn sm_worklist(mut self, on: bool) -> Self {
+        self.sim.sm_worklist = on;
+        self
+    }
+
+    /// Enable/disable the idle-cycle fast-forward
+    /// ([`SimConfig::fast_forward`]; default on). Sessions additionally
+    /// force exact per-cycle stepping where per-cycle observation is
+    /// required (see [`SimSession::run`]); results are bit-identical
+    /// either way.
+    pub fn fast_forward(mut self, on: bool) -> Self {
+        self.sim.fast_forward = on;
+        self
+    }
+
     /// The run's [`SimConfig::seed`]. Carried in the configuration and
     /// folded into campaign job identity; today's procedural workload
     /// generators derive their per-kernel seeds from `(name, scale)`
@@ -639,11 +659,13 @@ pub struct SimSession {
 }
 
 impl SimSession {
-    /// Advance the simulation by (at most) one GPU cycle, crossing
-    /// kernel boundaries automatically. Returns
+    /// Advance the simulation by exactly one GPU cycle, crossing kernel
+    /// boundaries automatically (the idle fast-forward is suppressed —
+    /// stepping is the exact-observation surface). Returns
     /// [`SessionStatus::Finished`] on the cycle that completes the last
     /// kernel; erring with [`SimError::SessionFinished`] after that.
     pub fn step_cycle(&mut self) -> Result<SessionStatus, SimError> {
+        self.sim.set_fast_forward(false);
         let t0 = Instant::now();
         let r = self.step_inner(false);
         self.wall_s += t0.elapsed().as_secs_f64();
@@ -744,10 +766,26 @@ impl SimSession {
     /// Step until `cond` fires or the workload completes. Calling `run`
     /// on a finished session returns [`SessionStatus::Finished`]
     /// immediately (it is not an error, unlike stepping one).
+    ///
+    /// The engine's idle fast-forward is active only where exact
+    /// per-cycle observation is not required: `ToCompletion`,
+    /// `KernelBoundary` and `InstructionCount` runs with no per-cycle
+    /// observers registered. `CycleBudget` and `Predicate` (and any
+    /// session with a cycle observer) visit every simulated cycle, so
+    /// their pause points land exactly where promised. Results are
+    /// bit-identical in both modes — only wall-clock differs.
     pub fn run(&mut self, mut cond: StopCondition) -> Result<SessionStatus, SimError> {
         if self.finished.is_some() {
             return Ok(SessionStatus::Finished);
         }
+        let ff_ok = !self.cycle_observers
+            && matches!(
+                cond,
+                StopCondition::ToCompletion
+                    | StopCondition::KernelBoundary
+                    | StopCondition::InstructionCount(_)
+            );
+        self.sim.set_fast_forward(ff_ok);
         let t0 = Instant::now();
         let r = self.run_unclocked(&mut cond);
         self.wall_s += t0.elapsed().as_secs_f64();

@@ -416,6 +416,215 @@ pub fn fig_cluster_report(
 }
 
 // ---------------------------------------------------------------------------
+// Hot-path bench — the repo's perf trajectory (BENCH_hotpath.json)
+// ---------------------------------------------------------------------------
+
+/// One hot-path measurement point: the optimized engine (active-SM
+/// worklist + idle fast-forward + lock-free barrier fan-out) vs the
+/// reference engine (pre-optimization full scan, no jumps) at the same
+/// `(workload, threads, schedule)`, wall-clocked and fingerprint-checked.
+#[derive(Debug)]
+pub struct HotpathRow {
+    pub workload: String,
+    pub gpu: String,
+    pub scale: Scale,
+    pub threads: usize,
+    pub schedule: Schedule,
+    /// Simulated GPU cycles (identical in both engines by construction —
+    /// asserted via `identical`).
+    pub cycles: u64,
+    /// Wall-clock of the optimized engine, seconds.
+    pub opt_s: f64,
+    /// Wall-clock of the reference engine, seconds.
+    pub ref_s: f64,
+    /// `GpuStats::fingerprint` of the optimized run.
+    pub fingerprint: u64,
+    /// Optimized and reference runs agree bit-for-bit (fingerprint and
+    /// cycle count) — the golden gate every row must pass.
+    pub identical: bool,
+}
+
+impl HotpathRow {
+    /// Simulated cycles per host second, optimized engine — the bench's
+    /// headline quantity.
+    pub fn cps_opt(&self) -> f64 {
+        if self.opt_s <= 0.0 {
+            0.0
+        } else {
+            self.cycles as f64 / self.opt_s
+        }
+    }
+
+    pub fn cps_ref(&self) -> f64 {
+        if self.ref_s <= 0.0 {
+            0.0
+        } else {
+            self.cycles as f64 / self.ref_s
+        }
+    }
+
+    /// Optimized-over-reference throughput ratio (≥ 1 is a win).
+    pub fn speedup(&self) -> f64 {
+        if self.opt_s <= 0.0 {
+            0.0
+        } else {
+            self.ref_s / self.opt_s
+        }
+    }
+}
+
+/// Which hot-loop layers the bench's "optimized" side enables. The
+/// reference side always runs with both off (the pre-optimization
+/// engine), so disabling one layer here isolates the other's
+/// contribution (`parsim bench --no-fast-forward` measures the worklist
+/// alone, and vice versa).
+#[derive(Debug, Clone, Copy)]
+pub struct HotpathLayers {
+    pub sm_worklist: bool,
+    pub fast_forward: bool,
+}
+
+impl Default for HotpathLayers {
+    fn default() -> Self {
+        HotpathLayers { sm_worklist: true, fast_forward: true }
+    }
+}
+
+fn hotpath_run(
+    name: &str,
+    scale: Scale,
+    gpu: &GpuConfig,
+    threads: usize,
+    schedule: Schedule,
+    layers: HotpathLayers,
+) -> Result<GpuStats, SimError> {
+    let mut session = SimBuilder::new()
+        .gpu(gpu.clone())
+        .workload_named(name, scale)
+        .threads(threads)
+        .schedule(schedule)
+        .sm_worklist(layers.sm_worklist)
+        .fast_forward(layers.fast_forward)
+        .build()?;
+    session.run_to_completion()?;
+    session.into_stats()
+}
+
+/// Measure every `(workload, threads)` point of the hot-path matrix:
+/// one optimized run (the layers in `layers`) and one reference run
+/// (both layers off) each, serially (no co-running jobs, so the
+/// wall-clocks are honest). Every row carries the fingerprint
+/// cross-check — a bench that speeds up by changing results fails
+/// loudly downstream.
+pub fn bench_hotpath(
+    names: &[&str],
+    scale: Scale,
+    gpu: &GpuConfig,
+    threads_list: &[usize],
+    schedule: Schedule,
+    layers: HotpathLayers,
+    progress: bool,
+) -> Result<Vec<HotpathRow>, SimError> {
+    const REFERENCE: HotpathLayers = HotpathLayers { sm_worklist: false, fast_forward: false };
+    let mut rows = Vec::new();
+    for &name in names {
+        for &threads in threads_list {
+            let opt = hotpath_run(name, scale, gpu, threads, schedule, layers)?;
+            let reference = hotpath_run(name, scale, gpu, threads, schedule, REFERENCE)?;
+            let identical = opt.fingerprint() == reference.fingerprint()
+                && opt.total_cycles() == reference.total_cycles();
+            let row = HotpathRow {
+                workload: name.to_string(),
+                gpu: gpu.name.clone(),
+                scale,
+                threads,
+                schedule,
+                cycles: opt.total_cycles(),
+                opt_s: opt.sim_wallclock_s,
+                ref_s: reference.sim_wallclock_s,
+                fingerprint: opt.fingerprint(),
+                identical,
+            };
+            if progress {
+                eprintln!(
+                    "[hotpath] {name} @{threads}t: {:.0} cyc/s opt vs {:.0} cyc/s ref \
+                     ({:.2}x, {})",
+                    row.cps_opt(),
+                    row.cps_ref(),
+                    row.speedup(),
+                    if identical { "fingerprints match" } else { "FINGERPRINT MISMATCH" }
+                );
+            }
+            rows.push(row);
+        }
+    }
+    Ok(rows)
+}
+
+/// `BENCH_hotpath.json`: one flat JSON object per line (the repo's JSONL
+/// idiom — greppable, appendable, pandas-friendly), one line per matrix
+/// point.
+pub fn hotpath_json(rows: &[HotpathRow]) -> String {
+    use crate::stats::export::{jsonl_f64, jsonl_str, jsonl_u64};
+    let mut out = String::new();
+    for r in rows {
+        out.push('{');
+        jsonl_str(&mut out, "bench", "hotpath", true);
+        jsonl_str(&mut out, "workload", &r.workload, false);
+        jsonl_str(&mut out, "gpu", &r.gpu, false);
+        jsonl_str(&mut out, "scale", r.scale.name(), false);
+        jsonl_u64(&mut out, "threads", r.threads as u64, false);
+        jsonl_str(&mut out, "schedule", r.schedule.name(), false);
+        jsonl_u64(&mut out, "cycles", r.cycles, false);
+        jsonl_f64(&mut out, "opt_s", r.opt_s, false);
+        jsonl_f64(&mut out, "ref_s", r.ref_s, false);
+        jsonl_f64(&mut out, "cycles_per_s_opt", r.cps_opt(), false);
+        jsonl_f64(&mut out, "cycles_per_s_ref", r.cps_ref(), false);
+        jsonl_f64(&mut out, "speedup", r.speedup(), false);
+        jsonl_str(&mut out, "fingerprint", &format!("{:016x}", r.fingerprint), false);
+        jsonl_str(&mut out, "identical", if r.identical { "yes" } else { "NO" }, false);
+        out.push_str("}\n");
+    }
+    out
+}
+
+/// Human-readable hot-path table (`parsim bench`).
+pub fn hotpath_report(rows: &[HotpathRow], scale: Scale, gpu: &GpuConfig) -> String {
+    let mut s = format!(
+        "Hot-path throughput — optimized (worklist + fast-forward) vs reference\n\
+         engine on {} (scale={}); every row is fingerprint-checked\n\n\
+         {:<12} {:>3} {:>9} {:>12} {:>14} {:>14} {:>8} {:>6}\n",
+        gpu.name,
+        scale.name(),
+        "workload",
+        "t",
+        "sched",
+        "cycles",
+        "cyc/s opt",
+        "cyc/s ref",
+        "speedup",
+        "ident"
+    );
+    for r in rows {
+        s.push_str(&format!(
+            "{:<12} {:>3} {:>9} {:>12} {:>14.0} {:>14.0} {:>7.2}x {:>6}\n",
+            workloads::alias_of(&r.workload),
+            r.threads,
+            r.schedule.name(),
+            r.cycles,
+            r.cps_opt(),
+            r.cps_ref(),
+            r.speedup(),
+            if r.identical { "yes" } else { "NO" }
+        ));
+    }
+    if rows.iter().any(|r| !r.identical) {
+        s.push_str("\nFINGERPRINT MISMATCH — an optimization changed results; do not ship.\n");
+    }
+    s
+}
+
+// ---------------------------------------------------------------------------
 // Real-execution speed-up (meaningful on multi-core hosts)
 // ---------------------------------------------------------------------------
 

@@ -153,6 +153,29 @@ impl Icnt {
         self.in_flight == 0
     }
 
+    /// Earliest future cycle at which any in-flight packet can move
+    /// (feeds the engine's idle fast-forward). `None` means something is
+    /// already deliverable — an ejection buffer holds a packet — so the
+    /// caller must not skip cycles; `Some(u64::MAX)` means fully idle.
+    /// A returned cycle `≤ now` (rate-limited leftovers whose
+    /// `ready_cycle` has passed) likewise prevents a jump at the caller,
+    /// which only accepts strictly-future targets.
+    pub fn next_event_cycle(&self) -> Option<u64> {
+        if self.in_flight == 0 {
+            return Some(u64::MAX);
+        }
+        if self.eject.iter().any(|q| !q.is_empty()) {
+            return None;
+        }
+        let mut t = u64::MAX;
+        for h in &self.per_dst {
+            if let Some(&Due(ready, _, _)) = h.peek() {
+                t = t.min(ready);
+            }
+        }
+        Some(t)
+    }
+
     pub fn in_flight(&self) -> usize {
         self.in_flight
     }
@@ -281,6 +304,18 @@ mod tests {
         }
         assert_eq!(drained, 20);
         assert!(ic.is_idle());
+    }
+
+    #[test]
+    fn next_event_cycle_tracks_heap_and_eject_state() {
+        let mut ic = icnt();
+        assert_eq!(ic.next_event_cycle(), Some(u64::MAX), "idle crossbar");
+        ic.inject(pkt(0, 5, 8), 0); // latency 8 + 1 flit → ready at 9
+        assert_eq!(ic.next_event_cycle(), Some(9), "in-flight packet's ready cycle");
+        ic.transfer(9); // moved into the ejection buffer
+        assert_eq!(ic.next_event_cycle(), None, "deliverable now ⇒ no jump");
+        ic.eject(5);
+        assert_eq!(ic.next_event_cycle(), Some(u64::MAX));
     }
 
     #[test]

@@ -11,13 +11,19 @@
 //! paper's contribution as a first-class feature:
 //!
 //! * [`engine::GpuSim`] — the Algorithm-1 cycle loop: sequential
-//!   interconnect / L2 / DRAM phases, a **parallel SM phase**, and a
-//!   sequential block-issue phase.
+//!   interconnect / L2 / DRAM phases, a **parallel SM phase** fanned out
+//!   over a deterministic active-SM worklist, a sequential block-issue
+//!   phase, and an idle-cycle fast-forward that jumps provably-inactive
+//!   latency windows — all bit-identical to the naive cycle-everything
+//!   loop (the engine module docs walk the argument layer by layer).
 //! * [`engine::session`] — the public driving API:
 //!   [`SimBuilder`]/[`SimSession`] (build → step/run-until → observe →
 //!   checkpoint), typed [`SimError`]s, and built-in observers.
 //! * [`engine::pool`] — a persistent worker pool with OpenMP-equivalent
-//!   `schedule(static, chunk)` / `schedule(dynamic, chunk)` semantics.
+//!   `schedule(static, chunk)` / `schedule(dynamic, chunk)` semantics and
+//!   a lock-free sense-reversing epoch barrier for the per-cycle
+//!   fork/join (workers bounded-spin, parking on a condvar only as the
+//!   cold fallback).
 //! * [`stats`] — the paper's §3 statistics isolation: per-SM stats merged
 //!   once at kernel end (plus the locked-shared and sequential-point
 //!   alternatives, for the ablation).

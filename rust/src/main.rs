@@ -32,9 +32,15 @@ const VALUE_OPTS: &[&str] = &[
     // campaign options
     "workloads", "gpu-counts", "threads-list", "schedules", "stats-list", "workers",
     "core-budget", "out", "name",
+    // bench output
+    "json",
 ];
-const FLAG_OPTS: &[&str] =
-    &["list", "show", "describe", "profile", "functional", "quiet", "help", "force"];
+const FLAG_OPTS: &[&str] = &[
+    "list", "show", "describe", "profile", "functional", "quiet", "help", "force",
+    // engine ablation switches (run/cluster/bench; results are
+    // bit-identical with or without — these only change wall-clock)
+    "no-worklist", "no-fast-forward",
+];
 
 fn main() -> ExitCode {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -60,6 +66,7 @@ fn main() -> ExitCode {
         "determinism" => cmd_determinism(&args),
         "validate" => cmd_validate(&args),
         "campaign" => cmd_campaign(&args),
+        "bench" => cmd_bench(&args),
         _ => {
             eprintln!("error: unknown command {cmd:?} (try --help)");
             return ExitCode::from(2);
@@ -88,7 +95,9 @@ fn print_help() {
          \x20 stats         describe reported statistics\n\
          \x20 determinism   run 1-thread vs N-thread and diff all statistics\n\
          \x20 validate      cross-check GEMM workloads against XLA artifacts\n\
-         \x20 campaign      run a job matrix concurrently with a cached result store\n\n\
+         \x20 campaign      run a job matrix concurrently with a cached result store\n\
+         \x20 bench         hot-path throughput: optimized vs reference engine,\n\
+         \x20               fingerprint-checked; writes BENCH_hotpath.json (--json PATH)\n\n\
          common options: --workload NAME --scale ci|small|paper --threads N\n\
          \x20               --schedule static|static1|dynamic --stats per-sm|shared-locked|seq-point\n\
          \x20               --gpu rtx3080ti|tiny|rtx3090|a100-like --profile --functional\n\n\
@@ -163,6 +172,8 @@ fn build_simconfig(args: &Args) -> Result<SimConfig, String> {
         profile_sample: 8,
         measure_work: false,
         seed: args.get_u64("seed", 0xC0FFEE).map_err(|e| e.to_string())?,
+        sm_worklist: !args.flag("no-worklist"),
+        fast_forward: !args.flag("no-fast-forward"),
     })
 }
 
@@ -621,6 +632,52 @@ fn cmd_campaign(args: &Args) -> Result<(), String> {
     );
     let report = campaign::run_campaign(&spec, &out, &cfg)?;
     println!("{}", report.summary());
+    Ok(())
+}
+
+/// `parsim bench`: the hot-path throughput matrix (optimized engine vs
+/// the pre-optimization reference), printed as a table and written as
+/// `BENCH_hotpath.json` (override with `--json PATH`). Exits non-zero if
+/// any point's fingerprints diverge — perf must never buy a result
+/// change.
+fn cmd_bench(args: &Args) -> Result<(), String> {
+    let scale = match args.get("scale") {
+        None => Scale::Ci,
+        Some(s) => Scale::parse(s).ok_or_else(|| format!("bad --scale {s:?}"))?,
+    };
+    let gpu = parse_gpu(args)?;
+    let names: Vec<String> = match args.get("workloads") {
+        None => vec!["myocyte".into(), "hotspot".into(), "nn".into()],
+        Some("all") => workloads::names().iter().map(|s| s.to_string()).collect(),
+        Some(_) => args.get_list("workloads").unwrap_or_default(),
+    };
+    if names.is_empty() {
+        return Err("bench: --workloads list is empty".into());
+    }
+    let threads: Vec<usize> = args
+        .get_usize_list("threads-list")
+        .map_err(|e| e.to_string())?
+        .unwrap_or_else(|| vec![1, 4]);
+    let schedule = parse_schedule(args)?;
+    // ablation: --no-worklist / --no-fast-forward strip a layer from the
+    // optimized side (the reference side always runs with both off), so
+    // each layer's contribution can be measured in isolation
+    let layers = harness::HotpathLayers {
+        sm_worklist: !args.flag("no-worklist"),
+        fast_forward: !args.flag("no-fast-forward"),
+    };
+    let refs: Vec<&str> = names.iter().map(String::as_str).collect();
+    let rows =
+        harness::bench_hotpath(&refs, scale, &gpu, &threads, schedule, layers, !args.flag("quiet"))
+            .map_err(|e| e.to_string())?;
+    println!("{}", harness::hotpath_report(&rows, scale, &gpu));
+    let path = std::path::PathBuf::from(args.get("json").unwrap_or("BENCH_hotpath.json"));
+    std::fs::write(&path, harness::hotpath_json(&rows))
+        .map_err(|e| format!("write {}: {e}", path.display()))?;
+    println!("wrote {}", path.display());
+    if rows.iter().any(|r| !r.identical) {
+        return Err("hot-path fingerprint mismatch — an optimization changed results".into());
+    }
     Ok(())
 }
 

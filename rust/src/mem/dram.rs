@@ -94,6 +94,15 @@ impl Dram {
 
     /// Advance the DRAM clock domain by one *core* cycle; issue and
     /// complete requests on each internal DRAM cycle.
+    ///
+    /// The engine's idle fast-forward replays this call once per skipped
+    /// core cycle (rather than batching the clock math) so the
+    /// fractional `clock_acc` accumulator and the bank-busy statistics
+    /// follow the exact same float/counter sequence as the unskipped
+    /// engine — the channel is provably request-free in skipped windows
+    /// (`MemPartition::next_event_cycle` returns `None` otherwise), so
+    /// each replayed call takes the fast path below or drains residual
+    /// bank-busy cycles, both O(1)-cheap.
     pub fn core_cycle(&mut self, stats: &mut MemStats) {
         self.clock_acc += self.clock_ratio;
         // fast path: channel fully idle (no queue, nothing in flight, all

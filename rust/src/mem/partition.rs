@@ -143,6 +143,22 @@ impl SubPartition {
         self.input.is_empty() && self.reply.is_empty() && self.l2.is_idle()
     }
 
+    /// Earliest future cycle at which this slice can do anything (feeds
+    /// the engine's idle fast-forward). `None` when the slice has
+    /// per-cycle work — queued input or live L2 MSHRs/miss/write-back
+    /// queues; otherwise the head reply's ready cycle (the queue is
+    /// FIFO-by-ready: every push uses the then-current `now` plus the
+    /// same hit latency), or `u64::MAX` when fully idle.
+    pub fn next_event_cycle(&self) -> Option<u64> {
+        if !self.input.is_empty() || !self.l2.is_idle() {
+            return None;
+        }
+        match self.reply.front() {
+            Some(&(ready, _)) => Some(ready),
+            None => Some(u64::MAX),
+        }
+    }
+
     pub fn flush(&mut self) {
         self.l2.flush();
         self.input.clear();
@@ -207,6 +223,22 @@ impl MemPartition {
 
     pub fn is_idle(&self) -> bool {
         self.dram.is_idle() && self.subs.iter().all(|s| s.is_idle())
+    }
+
+    /// Earliest future cycle at which this partition can do anything.
+    /// `None` when the DRAM channel has any queued/in-flight request —
+    /// a busy channel has events on (nearly) every core cycle, so the
+    /// engine's fast-forward never jumps over DRAM activity — otherwise
+    /// the min over the slices' next events.
+    pub fn next_event_cycle(&self) -> Option<u64> {
+        if !self.dram.is_idle() {
+            return None;
+        }
+        let mut t = u64::MAX;
+        for s in &self.subs {
+            t = t.min(s.next_event_cycle()?);
+        }
+        Some(t)
     }
 
     pub fn flush(&mut self) {
@@ -329,6 +361,30 @@ mod tests {
             p.subs[1].pop_reply(now);
         }
         assert!(p.is_idle());
+    }
+
+    #[test]
+    fn next_event_cycle_exposes_reply_latency_windows_only() {
+        let mut p = MemPartition::new(0, &cfg());
+        assert_eq!(p.next_event_cycle(), Some(u64::MAX), "idle partition");
+        p.subs[0].push_request(rd(5, 2));
+        assert_eq!(p.next_event_cycle(), None, "queued input has events every cycle");
+        // run until the only pending thing is a reply aging toward its
+        // ready cycle — the exact window the engine fast-forwards over
+        let mut now = 0u64;
+        let ready = loop {
+            p.dram_cycle();
+            p.cache_cycle(now);
+            if let Some(t) = p.next_event_cycle() {
+                if t != u64::MAX && t > now {
+                    break t;
+                }
+            }
+            now += 1;
+            assert!(now < 5000, "reply window never appeared");
+        };
+        assert!(p.subs[0].pop_reply(now).is_none(), "not ready before the reported cycle");
+        assert!(p.subs[0].pop_reply(ready).is_some(), "ready exactly at the reported cycle");
     }
 
     #[test]

@@ -137,6 +137,17 @@ impl PhaseProfiler {
         self.phase_ns().iter().sum::<u64>() as f64 / 1e9
     }
 
+    /// Account `n` cycles skipped by the engine's idle fast-forward:
+    /// advances the cycle counter so the sampling cadence stays aligned
+    /// with simulated time, without timing anything — a skipped cycle
+    /// costs (by construction) no measurable wall-clock.
+    #[inline]
+    pub fn skip_cycles(&mut self, n: u64) {
+        if self.enabled {
+            self.cycle_counter += n;
+        }
+    }
+
     pub fn reset(&mut self) {
         self.ns = [0; NUM_PHASES];
         self.samples = 0;

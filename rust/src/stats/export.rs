@@ -172,6 +172,16 @@ pub fn jsonl_u64(out: &mut String, key: &str, value: u64, first: bool) {
     let _ = write!(out, "\"{}\": {}", json_escape(key), value);
 }
 
+/// Serialize one `"key": value` JSON member for a float (6 decimal
+/// places — wall-clock/rate fields, same precision as
+/// [`summary_json`]).
+pub fn jsonl_f64(out: &mut String, key: &str, value: f64, first: bool) {
+    if !first {
+        out.push_str(", ");
+    }
+    let _ = write!(out, "\"{}\": {:.6}", json_escape(key), value);
+}
+
 /// Parse one line containing a **flat** JSON object (scalar values only —
 /// exactly what [`gpu_stats_jsonl`] and the campaign store emit). Returns
 /// the members in document order. Nested objects/arrays are rejected.

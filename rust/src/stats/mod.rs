@@ -280,7 +280,18 @@ impl AddrSet {
     pub fn is_empty(&self) -> bool {
         self.set.is_empty()
     }
+    /// Pre-size for at least `additional` further inserts. The SeqPoint
+    /// drain and the kernel-end reductions insert addresses in bulk;
+    /// reserving once replaces a cascade of rehash-and-regrow steps
+    /// (each of which re-mixes every resident key).
+    pub fn reserve(&mut self, additional: usize) {
+        self.set.reserve(additional);
+    }
     pub fn union_with(&mut self, other: &AddrSet) {
+        // reserve before inserting: unions into a near-empty set (the
+        // kernel-end per-SM merge) otherwise rehash repeatedly on the way
+        // up to the final size
+        self.set.reserve(other.set.len());
         for &a in &other.set {
             self.set.insert(a);
         }
