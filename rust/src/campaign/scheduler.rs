@@ -221,6 +221,24 @@ pub fn run_campaign(
     }
     let files = store.flush().map_err(|e| format!("flush store {}: {e}", dir.display()))?;
 
+    // campaign-level telemetry: a metrics.jsonl snapshot next to the
+    // store (same registry + JSONL surface as `parsim run
+    // --metrics-out`). Deliberately NOT in `files`: the store's own
+    // outputs stay byte-deterministic and cache-keyed, this is
+    // observability on the side — a write failure only warns.
+    {
+        let mut reg = crate::telemetry::MetricsRegistry::new();
+        reg.counter("campaign.total_jobs", spec.len() as u64);
+        reg.counter("campaign.simulated", simulated as u64);
+        reg.counter("campaign.cache_hits", cache_hits as u64);
+        reg.gauge("campaign.workers", workers as u64);
+        reg.gauge("campaign.threads_per_job", threads_per_job as u64);
+        let body = crate::stats::export::metrics_jsonl(0, &reg);
+        if let Err(e) = std::fs::write(dir.join("metrics.jsonl"), body) {
+            eprintln!("warning: write {}: {e}", dir.join("metrics.jsonl").display());
+        }
+    }
+
     Ok(CampaignReport {
         campaign: spec.name.clone(),
         total_jobs: spec.len(),

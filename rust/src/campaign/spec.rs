@@ -9,6 +9,7 @@
 
 use crate::config::{
     presets, ClusterConfig, FunctionalMode, GpuConfig, Schedule, SimConfig, StatsStrategy,
+    TelemetryConfig,
 };
 use crate::trace::workloads::{self, Scale};
 use crate::util::{mix2, mix64};
@@ -177,6 +178,7 @@ impl JobSpec {
             seed: self.seed,
             sm_worklist: true,
             fast_forward: true,
+            telemetry: TelemetryConfig::default(),
         }
     }
 

@@ -66,6 +66,11 @@ pub struct FabricStats {
     /// sequential, deterministic) program order — a content fingerprint
     /// of all fabric activity.
     pub traffic_fp: u64,
+    /// Transfer attempts that stopped because a destination's ejection
+    /// buffer was full (one per destination per such cycle). Purely a
+    /// function of traffic — deterministic like every other counter —
+    /// and exported as the `fabric.backpressure_stalls` metric.
+    pub backpressure_stalls: u64,
 }
 
 /// The inter-GPU network. Nodes are GPU indices `0..num_gpus`.
@@ -153,7 +158,12 @@ impl Fabric {
             let mut moved = 0;
             while moved < self.cfg.output_rate && switch_budget > 0 {
                 if self.eject[dst].len() >= self.cfg.eject_queue {
-                    break; // backpressure: ejection buffer full
+                    // backpressure: ejection buffer full. Only counted
+                    // when the buffer is non-drainable, a state in which
+                    // `next_event_cycle()` already returns `None`, so the
+                    // counter is identical with or without fast-forward.
+                    self.stats.backpressure_stalls += 1;
+                    break;
                 }
                 match self.per_dst[dst].peek() {
                     Some(&Due(pkt)) if pkt.ready_cycle <= now => {

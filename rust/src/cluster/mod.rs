@@ -75,7 +75,7 @@ pub mod fabric;
 use std::collections::VecDeque;
 use std::time::Instant;
 
-use crate::config::{ClusterConfig, GpuConfig, Schedule, SimConfig};
+use crate::config::{ClusterConfig, GpuConfig, Schedule, SimConfig, TelemetryConfig};
 use crate::core::Sm;
 use crate::engine::pool::ThreadPool;
 use crate::engine::{
@@ -83,6 +83,8 @@ use crate::engine::{
     StopCondition,
 };
 use crate::stats::{GpuStats, KernelStats};
+use crate::telemetry::metrics::MetricsRegistry;
+use crate::telemetry::trace::{TraceEvent, TraceWriter, PID_SIM, PID_WALL};
 use crate::trace::ClusterWorkloadSpec;
 use crate::util::{mix2, mix64};
 
@@ -199,6 +201,15 @@ struct StepOutcome {
     compute_cycle: bool,
 }
 
+/// Chrome-trace buffering state of the cluster driver (mirrors the
+/// engine's: wall-clock sampling + simulated-time spans, drained by the
+/// session after every step).
+struct ClusterTrace {
+    t0: Instant,
+    sample_every: u64,
+    events: Vec<TraceEvent>,
+}
+
 /// The multi-GPU engine: owns the GPUs, the fabric, and the shared pool.
 struct ClusterSim {
     cluster: ClusterConfig,
@@ -211,6 +222,16 @@ struct ClusterSim {
     kernel_started: bool,
     cluster_cycle: u64,
     comm_cycles: u64,
+    /// Telemetry configuration of the cluster driver (member GPUs run
+    /// with tracing forced off — the cluster owns the timeline).
+    telemetry: TelemetryConfig,
+    /// Cluster-level idle fast-forward jumps taken (compute + comm).
+    ff_jumps: u64,
+    /// Total cluster cycles skipped by those jumps.
+    ff_cycles_skipped: u64,
+    /// `cluster_cycle` at which the active communication phase began.
+    comm_start: u64,
+    trace: Option<Box<ClusterTrace>>,
     /// Per-GPU "finished the current kernel" flags.
     gpu_done: Vec<bool>,
     /// Per-GPU completed kernel statistics.
@@ -275,11 +296,32 @@ impl ClusterSim {
         per_gpu_sim.threads = 1;
         per_gpu_sim.profile = false;
         per_gpu_sim.measure_work = false;
+        // the cluster driver owns the trace timeline; member GPUs never
+        // run their own `cycle()` loop, so their trace buffers would
+        // only waste memory (their metric accumulators stay useful)
+        per_gpu_sim.telemetry.trace = false;
         let gpus = (0..n)
             .map(|_| GpuSim::try_new(gpu.clone(), per_gpu_sim.clone()))
             .collect::<Result<Vec<_>, _>>()?;
-        let pool = if sim.threads > 1 { Some(ThreadPool::new(sim.threads)) } else { None };
+        let pool = if sim.threads > 1 {
+            Some(ThreadPool::new_instrumented(sim.threads, sim.telemetry.trace))
+        } else {
+            None
+        };
         let fabric = Fabric::new(cluster.fabric.clone(), n);
+        if sim.telemetry.trace_sample_every == 0 {
+            return Err(SimError::InvalidSimConfig {
+                field: "telemetry.trace_sample_every",
+                message: "must be ≥ 1 (sample the wall-clock trace lane every N cycles)".into(),
+            });
+        }
+        let trace = sim.telemetry.trace.then(|| {
+            Box::new(ClusterTrace {
+                t0: Instant::now(),
+                sample_every: sim.telemetry.trace_sample_every,
+                events: Vec::new(),
+            })
+        });
         Ok(ClusterSim {
             cluster,
             gpus,
@@ -301,6 +343,11 @@ impl ClusterSim {
             lead_snap: LeadSnap::default(),
             ff_config: sim.fast_forward,
             ff_allowed: false,
+            telemetry: sim.telemetry,
+            ff_jumps: 0,
+            ff_cycles_skipped: 0,
+            comm_start: 0,
+            trace,
             wl,
         })
     }
@@ -330,20 +377,34 @@ impl ClusterSim {
             started_kernel = Some(k);
         }
 
+        // wall-clock sampling (tracing only; model state untouched)
+        let sampled = match &self.trace {
+            Some(t) => self.cluster_cycle % t.sample_every == 0,
+            None => false,
+        };
+        let t_seq = sampled.then(Instant::now);
         // level 2: per-GPU sequential stages, fixed GPU-index order
         for g in 0..n {
             if !self.gpu_done[g] {
                 self.gpus[g].cycle_sequential_pre();
             }
         }
+        let bw_before = if sampled { self.pool.as_ref().map(|p| p.busy_wait_ns()) } else { None };
+        let t_par = sampled.then(Instant::now);
         // level 3: one fan-out over all active (gpu, sm) pairs
         self.parallel_sm_phase();
+        let t_tail = sampled.then(Instant::now);
+        let bw_after = if sampled { self.pool.as_ref().map(|p| p.busy_wait_ns()) } else { None };
         for g in 0..n {
             if !self.gpu_done[g] {
                 self.gpus[g].cycle_finish();
             }
         }
+        let cycle_before = self.cluster_cycle;
         self.cluster_cycle += 1;
+        if let (Some(t_seq), Some(t_par), Some(t_tail)) = (t_seq, t_par, t_tail) {
+            self.push_wall_sample(cycle_before, t_seq, t_par, t_tail, bw_before, bw_after);
+        }
 
         if self.capture_views {
             let g0 = &self.gpus[0];
@@ -364,6 +425,24 @@ impl ClusterSim {
                 continue;
             }
             if self.gpus[g].kernel_done() {
+                if self.trace.is_some() {
+                    // per-GPU sim lane: that GPU's own cycle counter
+                    // (parked GPUs' counters pause, so lanes drift apart
+                    // — each lane is self-consistent)
+                    let start = self.gpus[g].kernel_start_cycle();
+                    let len = self.gpus[g].gpu_cycle() - start;
+                    let ev = TraceEvent::sim_span(
+                        self.wl.per_gpu[g].kernels[k].name.clone(),
+                        "kernel",
+                        g as u32,
+                        start,
+                        len,
+                    )
+                    .arg("kernel_id", k as u64);
+                    if let Some(t) = &mut self.trace {
+                        t.events.push(ev);
+                    }
+                }
                 let ks = self.gpus[g].finish_kernel(&self.wl.per_gpu[g].kernels[k], k);
                 self.completed_warp_insts[g] += ks.sm.warp_insts_issued;
                 self.completed[g].push(ks);
@@ -418,7 +497,72 @@ impl ClusterSim {
                 gpu.apply_fast_forward(delta);
             }
         }
+        self.note_ff_jump(delta);
         self.cluster_cycle += delta;
+    }
+
+    /// Telemetry bookkeeping for a cluster-level fast-forward jump of
+    /// `delta` cycles starting at the current `cluster_cycle`.
+    fn note_ff_jump(&mut self, delta: u64) {
+        self.ff_jumps += 1;
+        self.ff_cycles_skipped += delta;
+        let from = self.cluster_cycle;
+        let lane = self.gpus.len() as u32; // the cluster/fabric lane
+        if let Some(t) = &mut self.trace {
+            t.events.push(TraceEvent::sim_span("fast_forward", "ff", lane, from, delta));
+        }
+    }
+
+    /// Append one sampled wall-clock span triple + per-worker busy /
+    /// barrier-wait slices (tracing only; mirrors the single-GPU
+    /// engine's `cycle_traced`).
+    #[allow(clippy::too_many_arguments)]
+    fn push_wall_sample(
+        &mut self,
+        cycle: u64,
+        t_seq: Instant,
+        t_par: Instant,
+        t_tail: Instant,
+        bw_before: Option<Vec<(u64, u64)>>,
+        bw_after: Option<Vec<(u64, u64)>>,
+    ) {
+        let t_end = Instant::now();
+        let Some(tb) = &mut self.trace else { return };
+        let t0 = tb.t0;
+        let us = |a: Instant, b: Instant| b.duration_since(a).as_micros() as u64;
+        let span = |name, a: Instant, b: Instant| {
+            TraceEvent::wall_span(name, "phase", 0, us(t0, a), us(a, b)).arg("cycle", cycle)
+        };
+        tb.events.push(span("sequential_phase", t_seq, t_par));
+        tb.events.push(span("parallel_fanout", t_par, t_tail));
+        tb.events.push(span("sequential_tail", t_tail, t_end));
+        if let (Some(before), Some(after)) = (bw_before, bw_after) {
+            let par_us = us(t0, t_par);
+            for (w, (&(b0, w0), &(b1, w1))) in before.iter().zip(after.iter()).enumerate() {
+                let busy_us = (b1 - b0) / 1_000;
+                let wait_us = (w1 - w0) / 1_000;
+                if busy_us == 0 && wait_us == 0 {
+                    continue;
+                }
+                let tid = w as u32 + 1;
+                tb.events.push(
+                    TraceEvent::wall_span("busy", "worker", tid, par_us, busy_us)
+                        .arg("cycle", cycle),
+                );
+                tb.events.push(
+                    TraceEvent::wall_span("barrier_wait", "worker", tid, par_us + busy_us, wait_us)
+                        .arg("cycle", cycle),
+                );
+            }
+        }
+    }
+
+    /// Drain buffered trace events (session side; empty when off).
+    fn take_trace_events(&mut self) -> Vec<TraceEvent> {
+        match &mut self.trace {
+            Some(t) => std::mem::take(&mut t.events),
+            None => Vec::new(),
+        }
     }
 
     /// Queue kernel `k`'s communication phase (if any), else advance.
@@ -437,6 +581,7 @@ impl ClusterSim {
             }
             self.sent_bytes[t.src as usize] += t.bytes;
         }
+        self.comm_start = self.cluster_cycle;
         self.phase = Phase::Comm { kernel: k };
         SessionStatus::Running
     }
@@ -485,12 +630,23 @@ impl ClusterSim {
             if let Some(t) = self.fabric.next_event_cycle() {
                 let now = self.cluster_cycle;
                 if t != u64::MAX && t > now {
+                    self.note_ff_jump(t - now);
                     self.cluster_cycle += t - now;
                     self.comm_cycles += t - now;
                 }
             }
         }
         let status = if drained {
+            if self.trace.is_some() {
+                let from = self.comm_start;
+                let len = self.cluster_cycle - from;
+                let lane = self.gpus.len() as u32;
+                let ev = TraceEvent::sim_span("comm_phase", "comm", lane, from, len)
+                    .arg("kernel_id", k as u64);
+                if let Some(t) = &mut self.trace {
+                    t.events.push(ev);
+                }
+            }
             self.next_kernel_or_done(k)
         } else {
             SessionStatus::Running
@@ -628,6 +784,8 @@ pub struct ClusterSession {
     cycle_observers: bool,
     finished: Option<ClusterStats>,
     wall_s: f64,
+    /// Chrome-trace output (cluster events drained after every step).
+    trace: Option<TraceWriter>,
 }
 
 impl ClusterSession {
@@ -639,11 +797,36 @@ impl ClusterSession {
         cluster: ClusterConfig,
         wl: ClusterWorkloadSpec,
         observers: Vec<Box<dyn Observer>>,
+        mut trace: Option<TraceWriter>,
     ) -> Result<ClusterSession, SimError> {
+        let threads = sim.threads;
         let mut sim = ClusterSim::new(gpu, sim, cluster, wl)?;
         let cycle_observers = observers.iter().any(|o| o.wants_cycles());
         sim.capture_views = cycle_observers;
-        Ok(ClusterSession { sim, observers, cycle_observers, finished: None, wall_s: 0.0 })
+        if let Some(w) = &mut trace {
+            let n = sim.num_gpus();
+            for g in 0..n {
+                w.thread_name(PID_SIM, g as u32, &format!("gpu {g}"));
+            }
+            w.thread_name(PID_SIM, n as u32, "cluster (fabric / fast-forward)");
+            w.thread_name(PID_WALL, 0, "cluster phases");
+            if threads > 1 {
+                for lane in 0..threads {
+                    w.thread_name(PID_WALL, lane as u32 + 1, &format!("worker {lane}"));
+                }
+            }
+        }
+        Ok(ClusterSession { sim, observers, cycle_observers, finished: None, wall_s: 0.0, trace })
+    }
+
+    /// Drain the driver's buffered trace events into the writer (no-op
+    /// when tracing is off).
+    fn pump_trace(&mut self) {
+        if let Some(w) = &mut self.trace {
+            for ev in self.sim.take_trace_events() {
+                w.event(&ev);
+            }
+        }
     }
 
     /// Advance the cluster by exactly one lock-step cycle (the idle
@@ -699,6 +882,7 @@ impl ClusterSession {
                 }
             }
         }
+        self.pump_trace();
         Ok(out)
     }
 
@@ -708,6 +892,10 @@ impl ClusterSession {
             for obs in &mut self.observers {
                 obs.on_finish(gs);
             }
+        }
+        if let Some(w) = &mut self.trace {
+            // best-effort: a broken trace sink must not fail the run
+            let _ = w.finish();
         }
         self.finished = Some(stats);
     }
@@ -816,11 +1004,63 @@ impl ClusterSession {
             h = mix2(h, gpu.state_fingerprint());
         }
         h = mix2(h, self.sim.phase_tag());
+        // component fingerprints: per-GPU values folded with their GPU
+        // index (a plain XOR would cancel between identical replicas)
+        let mut sm = 0u64;
+        let mut icnt = 0u64;
+        let mut mem = 0u64;
+        for (g, gpu) in self.sim.gpus.iter().enumerate() {
+            sm ^= mix64(mix2(g as u64, gpu.fingerprint_sm()));
+            icnt ^= mix64(mix2(g as u64, gpu.fingerprint_icnt()));
+            mem ^= mix64(mix2(g as u64, gpu.fingerprint_mem()));
+        }
         SessionFingerprint {
             cycle: self.sim.cluster_cycle,
             kernels_completed: self.sim.kernels_completed(),
             hash: mix64(h),
+            sm,
+            icnt,
+            mem,
+            fabric: self.sim.fabric.fingerprint(),
         }
+    }
+
+    /// Snapshot the telemetry metrics registry (`None` unless built with
+    /// [`SimBuilder::metrics`](crate::engine::SimBuilder::metrics)):
+    /// cluster-level counters (lock-step/communication cycles,
+    /// fast-forward jumps, fabric traffic and backpressure stalls,
+    /// per-GPU fabric byte counts) plus every member GPU's registry
+    /// namespaced as `gpu<i>.*`.
+    pub fn metrics_snapshot(&self) -> Option<MetricsRegistry> {
+        if !self.sim.telemetry.metrics {
+            return None;
+        }
+        let mut reg = MetricsRegistry::new();
+        reg.gauge("cluster.cycle", self.sim.cluster_cycle);
+        reg.counter("cluster.comm_cycles", self.sim.comm_cycles);
+        reg.counter("cluster.ff_jumps", self.sim.ff_jumps);
+        reg.counter("cluster.ff_cycles_skipped", self.sim.ff_cycles_skipped);
+        let fs = self.sim.fabric.stats();
+        reg.counter("fabric.packets_delivered", fs.packets_delivered);
+        reg.counter("fabric.bytes_delivered", fs.bytes_delivered);
+        reg.counter("fabric.backpressure_stalls", fs.backpressure_stalls);
+        for (g, (&s, &r)) in
+            self.sim.sent_bytes.iter().zip(self.sim.recv_bytes.iter()).enumerate()
+        {
+            reg.counter(format!("fabric.gpu{g}.sent_bytes"), s);
+            reg.counter(format!("fabric.gpu{g}.recv_bytes"), r);
+        }
+        for (g, gpu) in self.sim.gpus.iter().enumerate() {
+            let mut sub = MetricsRegistry::new();
+            gpu.fill_metrics(&mut sub);
+            reg.merge_prefixed(&format!("gpu{g}."), &sub);
+        }
+        Some(reg)
+    }
+
+    /// Trace events written so far (0 when tracing is off).
+    pub fn trace_events_written(&self) -> u64 {
+        self.trace.as_ref().map(|w| w.events_written()).unwrap_or(0)
     }
 
     /// Lock-step cluster cycles elapsed (compute + communication).

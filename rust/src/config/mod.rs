@@ -544,6 +544,32 @@ pub enum FunctionalMode {
     Full,
 }
 
+/// Observability configuration (see [`crate::telemetry`]). Everything
+/// here is guaranteed non-perturbing: enabling any of it leaves every
+/// fingerprint and statistic bit-identical (`tests/telemetry.rs`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TelemetryConfig {
+    /// Maintain the hot-path metric accumulators (fast-forward jumps,
+    /// worklist occupancy, icnt in-flight depth, …) so
+    /// `metrics_snapshot()` can fill a
+    /// [`crate::telemetry::MetricsRegistry`] mid-run.
+    pub metrics: bool,
+    /// Buffer Chrome trace events (simulated-time and wall-clock lanes)
+    /// for the session to drain into a
+    /// [`crate::telemetry::TraceWriter`]. Set automatically by
+    /// `SimBuilder::trace_writer`.
+    pub trace: bool,
+    /// Sample the wall-clock lane (sequential vs parallel phase spans,
+    /// per-worker busy/wait slices) every N cycles. Must be ≥ 1.
+    pub trace_sample_every: u64,
+}
+
+impl Default for TelemetryConfig {
+    fn default() -> Self {
+        TelemetryConfig { metrics: false, trace: false, trace_sample_every: 64 }
+    }
+}
+
 /// Simulator-run configuration — the knobs the paper sweeps.
 #[derive(Debug, Clone)]
 pub struct SimConfig {
@@ -574,6 +600,9 @@ pub struct SimConfig {
     /// where per-cycle observation is required). Off = the
     /// pre-optimization cycle-by-cycle loop.
     pub fast_forward: bool,
+    /// Observability: metrics registry + trace-event buffering
+    /// (default: all off; see [`crate::telemetry`]).
+    pub telemetry: TelemetryConfig,
 }
 
 impl Default for SimConfig {
@@ -590,6 +619,7 @@ impl Default for SimConfig {
             seed: 0xC0FFEE,
             sm_worklist: true,
             fast_forward: true,
+            telemetry: TelemetryConfig::default(),
         }
     }
 }

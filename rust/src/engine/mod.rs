@@ -90,6 +90,8 @@ use crate::icnt::{Icnt, Packet};
 use crate::mem::{subpartition_of, MemPartition};
 use crate::profiler::{Phase, PhaseProfiler};
 use crate::stats::{AddrSet, GpuStats, KernelStats, MemStats, SharedLockedStats, SmStats};
+use crate::telemetry::metrics::{Histogram, MetricsRegistry};
+use crate::telemetry::trace::TraceEvent;
 use crate::trace::{functional, GemmSemantics, KernelDesc, WorkloadSpec};
 
 use costmodel::CostModel;
@@ -97,6 +99,39 @@ use pool::ThreadPool;
 
 /// Sentinel in `parked_at`: the SM is on the active worklist.
 const NOT_PARKED: u64 = u64::MAX;
+
+/// Hot-path metric accumulators ([`crate::telemetry::metrics`]),
+/// `Option`-gated on [`crate::config::TelemetryConfig::metrics`] so the
+/// disabled engine pays one branch. All updates happen at sequential
+/// points of the cycle loop and never touch model state — the
+/// no-perturb property `tests/telemetry.rs` pins.
+#[derive(Debug, Default)]
+struct EngineMetrics {
+    /// Idle fast-forward jumps taken.
+    ff_jumps: u64,
+    /// Total cycles skipped by those jumps.
+    ff_cycles_skipped: u64,
+    /// Active-worklist size at each sequential rebuild.
+    worklist_occupancy: Histogram,
+    /// Interconnect in-flight depth, sampled once per engine cycle.
+    icnt_in_flight: Histogram,
+}
+
+/// Chrome-trace buffering state ([`crate::telemetry::trace`]): the
+/// engine appends events here; the owning session drains them into its
+/// [`crate::telemetry::TraceWriter`] after every step. Wall-clock
+/// sampling state lives here too so untraced runs take no timestamps.
+struct TraceBuf {
+    /// Wall-clock origin of the trace's `PID_WALL` lane.
+    t0: Instant,
+    /// Sample the wall-clock lane every N cycles.
+    sample_every: u64,
+    events: Vec<TraceEvent>,
+}
+
+fn us_since(t0: Instant, t: Instant) -> u64 {
+    t.duration_since(t0).as_micros() as u64
+}
 
 /// Hands out disjoint `&mut T` by index across threads.
 ///
@@ -179,6 +214,10 @@ pub struct GpuSim {
     cta_order: Vec<u32>,
     /// Functional results of GEMM-family kernels (FunctionalMode::Full).
     pub functional_results: Vec<FunctionalResult>,
+    /// Telemetry metric accumulators (`None` ⇒ metrics off).
+    metrics: Option<Box<EngineMetrics>>,
+    /// Chrome-trace event buffer (`None` ⇒ tracing off).
+    trace: Option<Box<TraceBuf>>,
 }
 
 impl GpuSim {
@@ -202,6 +241,12 @@ impl GpuSim {
                 message: "must be ≥ 1 (1 = the vanilla sequential simulator)".into(),
             });
         }
+        if sim.telemetry.trace_sample_every == 0 {
+            return Err(SimError::InvalidSimConfig {
+                field: "telemetry.trace_sample_every",
+                message: "must be ≥ 1 (sample the wall-clock trace lane every N cycles)".into(),
+            });
+        }
         let shared = Arc::new(SharedLockedStats::new());
         let mut sms: Vec<Sm> = (0..gpu.num_sms).map(|i| Sm::new(i as u32, &gpu)).collect();
         for sm in &mut sms {
@@ -215,7 +260,11 @@ impl GpuSim {
         let partitions =
             (0..gpu.num_mem_partitions).map(|i| MemPartition::new(i, &gpu)).collect();
         let icnt = Icnt::new(gpu.icnt.clone(), gpu.icnt_nodes());
-        let pool = if sim.threads > 1 { Some(ThreadPool::new(sim.threads)) } else { None };
+        let pool = if sim.threads > 1 {
+            Some(ThreadPool::new_instrumented(sim.threads, sim.telemetry.trace))
+        } else {
+            None
+        };
         let profile = sim.profile || sim.measure_work;
         let profiler = PhaseProfiler::new(profile, sim.profile_sample);
         let cost_model = if sim.measure_work {
@@ -225,6 +274,14 @@ impl GpuSim {
         };
         let n = gpu.num_sms;
         let ff_runtime = sim.fast_forward;
+        let metrics = sim.telemetry.metrics.then(|| Box::new(EngineMetrics::default()));
+        let trace = sim.telemetry.trace.then(|| {
+            Box::new(TraceBuf {
+                t0: Instant::now(),
+                sample_every: sim.telemetry.trace_sample_every,
+                events: Vec::new(),
+            })
+        });
         Ok(GpuSim {
             gpu,
             sim,
@@ -248,6 +305,8 @@ impl GpuSim {
             kernel_start_cycle: 0,
             cta_order: Vec::new(),
             functional_results: Vec::new(),
+            metrics,
+            trace,
         })
     }
 
@@ -281,15 +340,84 @@ impl GpuSim {
     /// inactive, `gpu_cycle` may advance by more than one (module docs,
     /// layer 3).
     pub fn cycle(&mut self) {
-        self.cycle_sequential_pre();
-        self.cycle_sm_parallel();
-        self.cycle_finish();
+        let sampled = match &self.trace {
+            Some(tb) => self.gpu_cycle % tb.sample_every == 0,
+            None => false,
+        };
+        if sampled {
+            self.cycle_traced();
+        } else {
+            self.cycle_sequential_pre();
+            self.cycle_sm_parallel();
+            self.cycle_finish();
+        }
+        if let Some(m) = &mut self.metrics {
+            m.icnt_in_flight.record(self.icnt.in_flight() as u64);
+        }
         if self.ff_runtime {
             // a drained kernel yields no target (everything idle ⇒ no
             // pending event), so this never jumps past kernel_done
             if let Some(target) = self.idle_jump_target() {
-                let skipped = target - self.gpu_cycle;
+                let from = self.gpu_cycle;
+                let skipped = target - from;
                 self.apply_fast_forward(skipped);
+                if let Some(m) = &mut self.metrics {
+                    m.ff_jumps += 1;
+                    m.ff_cycles_skipped += skipped;
+                }
+                if let Some(tb) = &mut self.trace {
+                    tb.events.push(TraceEvent::sim_span("fast_forward", "ff", 0, from, skipped));
+                }
+            }
+        }
+    }
+
+    /// [`Self::cycle`]'s three parts with wall-clock sampling around
+    /// them: one `sequential_phase` / `parallel_fanout` /
+    /// `sequential_tail` span triple on the wall lane, plus per-worker
+    /// busy and `barrier_wait` slices derived from the pool's
+    /// instrumented nanosecond counters (deltas across this cycle's
+    /// fan-out, laid out sequentially from the fan-out start). Strictly
+    /// read-only with respect to model state: only wall clocks and the
+    /// trace buffer are touched, so a traced run is bit-identical to an
+    /// untraced one.
+    fn cycle_traced(&mut self) {
+        let cycle = self.gpu_cycle;
+        let t0 = self.trace.as_ref().map(|tb| tb.t0).unwrap_or_else(Instant::now);
+        let t_seq = Instant::now();
+        self.cycle_sequential_pre();
+        let bw_before = self.pool.as_ref().map(|p| p.busy_wait_ns());
+        let t_par = Instant::now();
+        self.cycle_sm_parallel();
+        let t_tail = Instant::now();
+        let bw_after = self.pool.as_ref().map(|p| p.busy_wait_ns());
+        self.cycle_finish();
+        let t_end = Instant::now();
+        let Some(tb) = &mut self.trace else { return };
+        let span = |name, a: Instant, b: Instant| {
+            TraceEvent::wall_span(name, "phase", 0, us_since(t0, a), us_since(a, b))
+                .arg("cycle", cycle)
+        };
+        tb.events.push(span("sequential_phase", t_seq, t_par));
+        tb.events.push(span("parallel_fanout", t_par, t_tail));
+        tb.events.push(span("sequential_tail", t_tail, t_end));
+        if let (Some(before), Some(after)) = (bw_before, bw_after) {
+            let par_us = us_since(t0, t_par);
+            for (w, (&(b0, w0), &(b1, w1))) in before.iter().zip(after.iter()).enumerate() {
+                let busy_us = (b1 - b0) / 1_000;
+                let wait_us = (w1 - w0) / 1_000;
+                if busy_us == 0 && wait_us == 0 {
+                    continue;
+                }
+                let tid = w as u32 + 1;
+                tb.events.push(
+                    TraceEvent::wall_span("busy", "worker", tid, par_us, busy_us)
+                        .arg("cycle", cycle),
+                );
+                tb.events.push(
+                    TraceEvent::wall_span("barrier_wait", "worker", tid, par_us + busy_us, wait_us)
+                        .arg("cycle", cycle),
+                );
             }
         }
     }
@@ -388,6 +516,9 @@ impl GpuSim {
         // index order keeps the list sorted, so the fan-out order (and
         // the out-port drain order above) is a constant of the schedule.
         self.rebuild_active();
+        if let Some(mt) = &mut self.metrics {
+            mt.worklist_occupancy.record(self.active.len() as u64);
+        }
         self.profiler.record(Phase::IcntSched, m);
     }
 
@@ -843,6 +974,112 @@ impl GpuSim {
             h = crate::util::mix2(h, self.shared_stats.unique_lines_fingerprint());
         }
         crate::util::mix64(h)
+    }
+
+    // -----------------------------------------------------------------
+    // Telemetry (metrics snapshots, trace draining, component
+    // fingerprints for the divergence probe)
+    // -----------------------------------------------------------------
+
+    /// Component fingerprint: the SM/statistics side. Alias of
+    /// [`Self::state_fingerprint`], named for symmetry with the other
+    /// per-component fingerprints the divergence probe
+    /// ([`crate::telemetry::diverge`]) bisects over.
+    pub fn fingerprint_sm(&self) -> u64 {
+        self.state_fingerprint()
+    }
+
+    /// Component fingerprint: interconnect occupancy (in-flight and
+    /// ejected packets, sequence counters).
+    pub fn fingerprint_icnt(&self) -> u64 {
+        self.icnt.fingerprint()
+    }
+
+    /// Component fingerprint: the memory side — every partition's L2
+    /// queues, DRAM queues/banks and counters, XOR-folded so partition
+    /// iteration order is irrelevant.
+    pub fn fingerprint_mem(&self) -> u64 {
+        let mut x = 0u64;
+        for p in &self.partitions {
+            x ^= p.fingerprint();
+        }
+        crate::util::mix64(crate::util::mix2(0x7aad_f0e1_5bc4_9d36, x))
+    }
+
+    /// Fill `reg` with this engine's metrics: telemetry accumulators
+    /// (when enabled), interconnect and memory counters, pool busy/wait
+    /// times and cost-model gauges. Read-only; callable mid-run from
+    /// observers via [`Self::metrics_snapshot`].
+    pub fn fill_metrics(&self, reg: &mut MetricsRegistry) {
+        reg.gauge("engine.cycle", self.gpu_cycle);
+        reg.gauge("engine.active_sms", self.active.len() as u64);
+        if let Some(m) = &self.metrics {
+            reg.counter("engine.ff_jumps", m.ff_jumps);
+            reg.counter("engine.ff_cycles_skipped", m.ff_cycles_skipped);
+            reg.histogram("engine.worklist_occupancy", &m.worklist_occupancy);
+            reg.histogram("icnt.in_flight_depth", &m.icnt_in_flight);
+        }
+        reg.counter("icnt.delivered", self.icnt.delivered);
+        reg.gauge("icnt.in_flight", self.icnt.in_flight() as u64);
+        let mut agg = MemStats::default();
+        for p in &self.partitions {
+            for s in p.collect_stats() {
+                agg.merge(&s);
+            }
+        }
+        agg.visit_counters(|name, v| reg.counter(format!("mem.{name}"), v));
+        if let Some(pool) = &self.pool {
+            if pool.is_instrumented() {
+                for (w, (busy, wait)) in pool.busy_wait_ns().into_iter().enumerate() {
+                    reg.counter(format!("pool.worker{w}.busy_ns"), busy);
+                    reg.counter(format!("pool.worker{w}.wait_ns"), wait);
+                }
+            }
+        }
+        if let Some(cm) = &self.cost_model {
+            reg.gauge("costmodel.cycles", cm.cycles());
+            reg.gauge("costmodel.total_work", cm.total_work());
+        }
+    }
+
+    /// Snapshot the metrics registry, or `None` when
+    /// [`crate::config::TelemetryConfig::metrics`] is off.
+    pub fn metrics_snapshot(&self) -> Option<MetricsRegistry> {
+        if !self.sim.telemetry.metrics {
+            return None;
+        }
+        let mut reg = MetricsRegistry::new();
+        self.fill_metrics(&mut reg);
+        Some(reg)
+    }
+
+    /// Drain buffered trace events (the owning session streams them to
+    /// its [`crate::telemetry::TraceWriter`] after every step). Returns
+    /// an empty vector when tracing is off — no allocation either way.
+    pub fn take_trace_events(&mut self) -> Vec<TraceEvent> {
+        match &mut self.trace {
+            Some(tb) => std::mem::take(&mut tb.events),
+            None => Vec::new(),
+        }
+    }
+
+    /// Number of worker-thread lanes the wall-clock trace can emit
+    /// (0 when single-threaded or tracing is off).
+    pub fn trace_worker_lanes(&self) -> usize {
+        match (&self.trace, &self.pool) {
+            (Some(_), Some(p)) => p.busy_wait_ns().len(),
+            _ => 0,
+        }
+    }
+
+    /// Diagnostic back-door for `parsim diverge --perturb-at`: bump one
+    /// SM's `cycles` counter by one, artificially corrupting the SM
+    /// component fingerprint so the probe's bisection can be validated
+    /// end-to-end against a known divergence point. Never called by the
+    /// simulation itself.
+    pub fn probe_perturb_sm_counter(&mut self, sm: usize) {
+        let i = sm % self.sms.len();
+        self.sms[i].stats.cycles += 1;
     }
 }
 

@@ -75,6 +75,7 @@
 use std::cell::UnsafeCell;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
+use std::time::Instant;
 
 use crate::config::Schedule;
 
@@ -139,6 +140,17 @@ struct Shared {
     job: UnsafeCell<Option<Job>>,
     park: Mutex<()>,
     cv: Condvar,
+    /// Telemetry (fixed at construction): when set, every worker
+    /// accumulates cumulative *busy* (inside `run_region`) and *wait*
+    /// (barrier spin/park + join spin) nanoseconds into the per-worker
+    /// slots below. Off by default — the hot path then takes no
+    /// timestamps at all. The counters are wall-clock observability and
+    /// never feed back into scheduling or simulation state.
+    instrument: bool,
+    /// Cumulative per-worker busy ns (index = worker id, 0 = caller).
+    busy_ns: Box<[AtomicU64]>,
+    /// Cumulative per-worker barrier-wait ns.
+    wait_ns: Box<[AtomicU64]>,
 }
 
 // SAFETY: `job` is the only non-Sync field; the epoch protocol above
@@ -183,6 +195,12 @@ impl ThreadPool {
     /// Create a pool with `threads` total workers (the calling thread
     /// participates as worker 0, so `threads - 1` are spawned).
     pub fn new(threads: usize) -> Self {
+        Self::new_instrumented(threads, false)
+    }
+
+    /// Like [`ThreadPool::new`], optionally with per-worker busy/wait
+    /// timing for the telemetry trace (see [`ThreadPool::busy_wait_ns`]).
+    pub fn new_instrumented(threads: usize, instrument: bool) -> Self {
         assert!(threads >= 1);
         let shared = Arc::new(Shared {
             epoch: AtomicU64::new(0),
@@ -193,6 +211,9 @@ impl ThreadPool {
             job: UnsafeCell::new(None),
             park: Mutex::new(()),
             cv: Condvar::new(),
+            instrument,
+            busy_ns: (0..threads).map(|_| AtomicU64::new(0)).collect(),
+            wait_ns: (0..threads).map(|_| AtomicU64::new(0)).collect(),
         });
         let mut workers = Vec::new();
         for wid in 1..threads {
@@ -211,6 +232,24 @@ impl ThreadPool {
         self.threads
     }
 
+    /// Whether per-worker busy/wait timing is being accumulated.
+    pub fn is_instrumented(&self) -> bool {
+        self.shared.instrument
+    }
+
+    /// Cumulative `(busy_ns, wait_ns)` per worker (index 0 = the calling
+    /// thread). All zeros unless the pool was built with
+    /// [`ThreadPool::new_instrumented`]. Monotonic; the engine's trace
+    /// sampler reads deltas between samples.
+    pub fn busy_wait_ns(&self) -> Vec<(u64, u64)> {
+        self.shared
+            .busy_ns
+            .iter()
+            .zip(self.shared.wait_ns.iter())
+            .map(|(b, w)| (b.load(Ordering::Relaxed), w.load(Ordering::Relaxed)))
+            .collect()
+    }
+
     /// Run `f(i)` for every `i in 0..n`, partitioned per `schedule`.
     /// Blocks until all iterations complete (the OpenMP implicit barrier).
     pub fn parallel_for<F>(&self, n: usize, schedule: Schedule, f: F)
@@ -218,8 +257,19 @@ impl ThreadPool {
         F: Fn(usize) + Sync,
     {
         if self.threads == 1 || n <= 1 {
-            for i in 0..n {
-                f(i);
+            // Sequential bypass (1 worker, or nothing to fan out). Still
+            // attribute the work to worker 0 when instrumented so tiny
+            // regions don't vanish from the wall-clock trace lane.
+            if self.shared.instrument {
+                let t = Instant::now();
+                for i in 0..n {
+                    f(i);
+                }
+                self.shared.busy_ns[0].fetch_add(t.elapsed().as_nanos() as u64, Ordering::Relaxed);
+            } else {
+                for i in 0..n {
+                    f(i);
+                }
             }
             return;
         }
@@ -246,7 +296,11 @@ impl ThreadPool {
         self.shared.wake_sleepers();
 
         // participate as worker 0
+        let t_busy = self.shared.instrument.then(Instant::now);
         run_region(&self.shared, 0, &f, n, schedule, self.threads);
+        if let Some(t) = t_busy {
+            self.shared.busy_ns[0].fetch_add(t.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        }
         self.shared.done.fetch_add(1, Ordering::AcqRel);
 
         // Join: wait for all workers. Spin briefly (fast path on idle
@@ -255,6 +309,7 @@ impl ThreadPool {
         // workers wait for the CPU. No lock is taken and nothing is
         // retired: the stale job slot is inert until the next fork
         // overwrites it.
+        let t_wait = self.shared.instrument.then(Instant::now);
         let mut spins = 0u32;
         while self.shared.done.load(Ordering::Acquire) < self.threads {
             spins += 1;
@@ -263,6 +318,9 @@ impl ThreadPool {
             } else {
                 std::thread::yield_now();
             }
+        }
+        if let Some(t) = t_wait {
+            self.shared.wait_ns[0].fetch_add(t.elapsed().as_nanos() as u64, Ordering::Relaxed);
         }
     }
 }
@@ -323,7 +381,11 @@ fn wait_for_epoch(sh: &Shared, seen: u64) -> u64 {
 fn worker_loop(sh: Arc<Shared>, wid: usize) {
     let mut seen = 0u64;
     loop {
+        let t_wait = sh.instrument.then(Instant::now);
         seen = wait_for_epoch(&sh, seen);
+        if let Some(t) = t_wait {
+            sh.wait_ns[wid].fetch_add(t.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        }
         if sh.quit.load(Ordering::Acquire) != 0 {
             return;
         }
@@ -337,7 +399,11 @@ fn worker_loop(sh: Arc<Shared>, wid: usize) {
             // until all workers bump `done` (the join loop in
             // `parallel_for`).
             let f = move |i: usize| unsafe { call(data, i) };
+            let t_busy = sh.instrument.then(Instant::now);
             run_region(&sh, wid, &f, n, schedule, threads);
+            if let Some(t) = t_busy {
+                sh.busy_ns[wid].fetch_add(t.elapsed().as_nanos() as u64, Ordering::Relaxed);
+            }
         }
         sh.done.fetch_add(1, Ordering::AcqRel);
     }
@@ -523,6 +589,35 @@ mod tests {
         if let Some(live) = live_worker_count() {
             assert!(live < 60, "pool workers leaked across drops: {live} still alive");
         }
+    }
+
+    /// Telemetry instrumentation: an instrumented pool accumulates
+    /// per-worker busy/wait nanoseconds; a plain pool stays at zero (no
+    /// timestamps on the hot path).
+    #[test]
+    fn instrumented_pool_accumulates_busy_and_wait() {
+        let pool = ThreadPool::new_instrumented(4, true);
+        assert!(pool.is_instrumented());
+        let sum = AtomicU32::new(0);
+        for _ in 0..50 {
+            pool.parallel_for(64, Schedule::Static { chunk: 0 }, |i| {
+                sum.fetch_add(i as u32, Ordering::Relaxed);
+            });
+        }
+        let bw = pool.busy_wait_ns();
+        assert_eq!(bw.len(), 4, "one (busy, wait) pair per worker");
+        assert!(bw.iter().any(|&(b, _)| b > 0), "no busy time recorded: {bw:?}");
+        // the n <= 1 sequential bypass still attributes busy time to worker 0
+        let before = pool.busy_wait_ns()[0].0;
+        pool.parallel_for(1, Schedule::Static { chunk: 0 }, |_| {
+            std::thread::sleep(std::time::Duration::from_micros(50));
+        });
+        assert!(pool.busy_wait_ns()[0].0 > before, "bypass path not attributed");
+
+        let plain = ThreadPool::new(4);
+        plain.parallel_for(64, Schedule::Static { chunk: 0 }, |_| {});
+        assert!(!plain.is_instrumented());
+        assert!(plain.busy_wait_ns().iter().all(|&(b, w)| b == 0 && w == 0));
     }
 
     #[test]

@@ -44,6 +44,8 @@ use crate::config::{
     presets, ClusterConfig, FunctionalMode, GpuConfig, Schedule, SimConfig, StatsStrategy,
 };
 use crate::stats::{GpuStats, KernelStats};
+use crate::telemetry::metrics::MetricsRegistry;
+use crate::telemetry::trace::{TraceEvent, TraceWriter, PID_SIM, PID_WALL};
 use crate::trace::workloads::{self, Scale};
 use crate::trace::{ClusterWorkloadSpec, KernelDesc, WorkloadSpec};
 use crate::util::{mix2, mix64};
@@ -176,31 +178,61 @@ pub trait Observer {
     fn on_finish(&mut self, stats: &GpuStats) {}
 }
 
-/// Built-in observer: a coarse progress line on stderr every `every`
+/// Where [`ProgressTicker`] lines go. Stdout is deliberately not an
+/// option: it belongs to machine-readable exports (JSONL samples,
+/// `--export-dir` files), and a progress line interleaved into those
+/// would corrupt them. `tests` pin the stderr default.
+enum TickSink {
+    /// Human-facing diagnostics stream (the default).
+    Stderr,
+    /// Capture into a shared buffer (tests, embedding drivers).
+    Shared(Rc<RefCell<Vec<String>>>),
+}
+
+/// Built-in observer: a coarse progress line on **stderr** every `every`
 /// kernel cycles (`parsim run` wires this to `--progress-every`).
 pub struct ProgressTicker {
     every: u64,
+    sink: TickSink,
 }
 
 impl ProgressTicker {
     pub fn new(every: u64) -> Self {
-        ProgressTicker { every: every.max(1) }
+        ProgressTicker { every: every.max(1), sink: TickSink::Stderr }
+    }
+
+    /// Capture tick lines into a shared buffer instead of stderr.
+    pub fn shared(every: u64) -> (Self, Rc<RefCell<Vec<String>>>) {
+        let buf = Rc::new(RefCell::new(Vec::new()));
+        (ProgressTicker { every: every.max(1), sink: TickSink::Shared(buf.clone()) }, buf)
+    }
+
+    /// Does the default sink route to stderr (never stdout)? Regression
+    /// surface for the stdout-interleaving hazard described on
+    /// [`TickSink`].
+    pub fn writes_to_stderr(&self) -> bool {
+        matches!(self.sink, TickSink::Stderr)
     }
 }
 
 impl Observer for ProgressTicker {
     fn on_cycle(&mut self, v: &CycleView<'_>) {
-        if v.kernel_cycle % self.every == 0 {
-            eprintln!(
-                "[parsim] cycle {} | kernel {} ({}) +{} cyc | CTAs {}/{} | warp-insts {}",
-                v.cycle,
-                v.kernel_id,
-                v.kernel_name,
-                v.kernel_cycle,
-                v.ctas_issued,
-                v.total_ctas,
-                v.warp_insts
-            );
+        if v.kernel_cycle % self.every != 0 {
+            return;
+        }
+        let line = format!(
+            "[parsim] cycle {} | kernel {} ({}) +{} cyc | CTAs {}/{} | warp-insts {}",
+            v.cycle,
+            v.kernel_id,
+            v.kernel_name,
+            v.kernel_cycle,
+            v.ctas_issued,
+            v.total_ctas,
+            v.warp_insts
+        );
+        match &self.sink {
+            TickSink::Stderr => eprintln!("{line}"),
+            TickSink::Shared(buf) => buf.borrow_mut().push(line),
         }
     }
 }
@@ -351,6 +383,44 @@ pub struct SessionFingerprint {
     /// Mix of completed-kernel fingerprints + the live mid-kernel
     /// statistics state ([`GpuSim::state_fingerprint`]).
     pub hash: u64,
+    /// Component fingerprint: SM/statistics state
+    /// ([`GpuSim::fingerprint_sm`]). The per-component fields let the
+    /// divergence probe ([`crate::telemetry::diverge`]) name *which*
+    /// subsystem first disagreed, not just that something did.
+    pub sm: u64,
+    /// Component fingerprint: interconnect ([`GpuSim::fingerprint_icnt`]).
+    pub icnt: u64,
+    /// Component fingerprint: memory side ([`GpuSim::fingerprint_mem`]).
+    pub mem: u64,
+    /// Component fingerprint: inter-GPU fabric (0 for single-GPU
+    /// sessions, which have no fabric).
+    pub fabric: u64,
+}
+
+impl SessionFingerprint {
+    /// Names of the component fingerprints that differ between two
+    /// checkpoints taken at the same cycle (empty ⇒ bit-identical).
+    pub fn diff_components(&self, other: &SessionFingerprint) -> Vec<&'static str> {
+        let mut out = Vec::new();
+        if self.sm != other.sm {
+            out.push("sm");
+        }
+        if self.icnt != other.icnt {
+            out.push("icnt");
+        }
+        if self.mem != other.mem {
+            out.push("mem");
+        }
+        if self.fabric != other.fabric {
+            out.push("fabric");
+        }
+        if out.is_empty() && self.hash != other.hash {
+            // divergence outside every component hash (e.g. completed-
+            // kernel history) — report it under the aggregate
+            out.push("hash");
+        }
+        out
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -370,6 +440,7 @@ pub struct SimBuilder {
     cluster: Option<ClusterConfig>,
     cluster_workload: Option<ClusterWorkloadSpec>,
     observers: Vec<Box<dyn Observer>>,
+    trace_writer: Option<TraceWriter>,
 }
 
 /// Resolve the modelled GPU from the builder's by-value / by-preset pair
@@ -525,6 +596,35 @@ impl SimBuilder {
         self
     }
 
+    /// Enable the telemetry metrics registry
+    /// ([`crate::config::TelemetryConfig::metrics`]): counter/histogram
+    /// accumulators updated at sequential points, snapshot-able mid-run
+    /// via [`SimSession::metrics_snapshot`] (or an [`Observer`] reading
+    /// `view.sim.metrics_snapshot()`). Never perturbs results.
+    pub fn metrics(mut self, on: bool) -> Self {
+        self.sim.telemetry.metrics = on;
+        self
+    }
+
+    /// Attach a Chrome-trace writer ([`crate::telemetry::TraceWriter`]);
+    /// implies [`crate::config::TelemetryConfig::trace`]. The session
+    /// streams simulated-time spans (kernels, fast-forward jumps) and
+    /// sampled wall-clock spans (sequential vs parallel phase, per-worker
+    /// busy / barrier-wait) into it and finishes the JSON on completion.
+    pub fn trace_writer(mut self, writer: TraceWriter) -> Self {
+        self.sim.telemetry.trace = true;
+        self.trace_writer = Some(writer);
+        self
+    }
+
+    /// Wall-clock trace sampling period in cycles
+    /// ([`crate::config::TelemetryConfig::trace_sample_every`]; default
+    /// 64, must be ≥ 1). Simulated-time spans are exact regardless.
+    pub fn trace_sample_every(mut self, every: u64) -> Self {
+        self.sim.telemetry.trace_sample_every = every;
+        self
+    }
+
     /// Validate everything and construct a multi-GPU session. Workload
     /// resolution: an explicit [`Self::cluster_workload`] wins; a
     /// single-GPU workload set by value is replicated across GPUs (data
@@ -556,7 +656,7 @@ impl SimBuilder {
             }
             (None, None, None) => return Err(SimError::NoWorkload),
         };
-        ClusterSession::build(gpu, self.sim, cluster, wl, self.observers)
+        ClusterSession::build(gpu, self.sim, cluster, wl, self.observers, self.trace_writer)
     }
 
     /// Validate everything and construct the session. Never panics.
@@ -582,6 +682,14 @@ impl SimBuilder {
         }
         let sim = GpuSim::try_new(gpu, self.sim)?;
         let cycle_observers = self.observers.iter().any(|o| o.wants_cycles());
+        let mut trace = self.trace_writer;
+        if let Some(w) = &mut trace {
+            w.thread_name(PID_SIM, 0, "gpu 0");
+            w.thread_name(PID_WALL, 0, "engine phases");
+            for lane in 0..sim.trace_worker_lanes() {
+                w.thread_name(PID_WALL, lane as u32 + 1, &format!("worker {lane}"));
+            }
+        }
         Ok(SimSession {
             sim,
             workload,
@@ -594,6 +702,7 @@ impl SimBuilder {
             last_snap: StepSnapshot::default(),
             cycle_observers,
             completed_warp_insts: 0,
+            trace,
         })
     }
 }
@@ -656,6 +765,9 @@ pub struct SimSession {
     /// Warp instructions of all *completed* kernels (kept incrementally
     /// so instruction-count stop checks are O(#SMs), not O(kernels)).
     completed_warp_insts: u64,
+    /// Chrome-trace output (engine events drained after every step;
+    /// JSON finished at [`Self::finalize`]).
+    trace: Option<TraceWriter>,
 }
 
 impl SimSession {
@@ -713,6 +825,21 @@ impl SimSession {
             }
         }
         if self.sim.kernel_done() {
+            if self.trace.is_some() {
+                let start = self.sim.kernel_start_cycle();
+                let len = self.sim.gpu_cycle() - start;
+                let ev = TraceEvent::sim_span(
+                    self.workload.kernels[self.kernel_idx].name.clone(),
+                    "kernel",
+                    0,
+                    start,
+                    len,
+                )
+                .arg("kernel_id", self.kernel_idx as u64);
+                if let Some(w) = &mut self.trace {
+                    w.event(&ev);
+                }
+            }
             let ks =
                 self.sim.finish_kernel(&self.workload.kernels[self.kernel_idx], self.kernel_idx);
             for obs in &mut self.observers {
@@ -723,6 +850,7 @@ impl SimSession {
             self.in_kernel = false;
             self.kernel_idx += 1;
             if self.kernel_idx == self.workload.kernels.len() {
+                self.pump_trace();
                 return Ok(SessionStatus::Finished);
             }
         } else {
@@ -734,7 +862,18 @@ impl SimSession {
                 });
             }
         }
+        self.pump_trace();
         Ok(SessionStatus::Running)
+    }
+
+    /// Drain the engine's buffered trace events into the writer (no-op
+    /// when tracing is off).
+    fn pump_trace(&mut self) {
+        if let Some(w) = &mut self.trace {
+            for ev in self.sim.take_trace_events() {
+                w.event(&ev);
+            }
+        }
     }
 
     /// Aggregate the final [`GpuStats`] — the exact mirror of the seed's
@@ -759,6 +898,10 @@ impl SimSession {
         }
         for obs in &mut self.observers {
             obs.on_finish(&stats);
+        }
+        if let Some(w) = &mut self.trace {
+            // best-effort: a broken trace sink must not fail the run
+            let _ = w.finish();
         }
         self.finished = Some(stats);
     }
@@ -878,7 +1021,23 @@ impl SimSession {
             cycle: self.sim.gpu_cycle(),
             kernels_completed: self.kernels_completed(),
             hash: mix64(h),
+            sm: self.sim.fingerprint_sm(),
+            icnt: self.sim.fingerprint_icnt(),
+            mem: self.sim.fingerprint_mem(),
+            fabric: 0,
         }
+    }
+
+    /// Snapshot the telemetry metrics registry (`None` unless the
+    /// session was built with [`SimBuilder::metrics`]). Read-only and
+    /// callable at any pause point.
+    pub fn metrics_snapshot(&self) -> Option<MetricsRegistry> {
+        self.sim.metrics_snapshot()
+    }
+
+    /// Trace events written so far (0 when tracing is off).
+    pub fn trace_events_written(&self) -> u64 {
+        self.trace.as_ref().map(|w| w.events_written()).unwrap_or(0)
     }
 
     /// Kernels fully completed so far.
@@ -1060,5 +1219,38 @@ mod tests {
         assert_eq!(s.run(StopCondition::InstructionCount(1)).unwrap(), SessionStatus::Running);
         assert!(s.total_warp_insts_so_far() >= 1);
         s.run_to_completion().unwrap();
+    }
+
+    /// Regression pin for the stdout-interleaving hazard: the ticker's
+    /// default sink is stderr (stdout is reserved for JSONL exports),
+    /// and the shared sink captures the exact lines.
+    #[test]
+    fn progress_ticker_default_sink_is_stderr_never_stdout() {
+        assert!(ProgressTicker::new(10).writes_to_stderr());
+        let (ticker, buf) = ProgressTicker::shared(5);
+        assert!(!ticker.writes_to_stderr());
+        let mut s = SimBuilder::new()
+            .gpu(GpuConfig::tiny())
+            .workload_named("nn", Scale::Ci)
+            .observer(ticker)
+            .build()
+            .unwrap();
+        s.run_to_completion().unwrap();
+        let lines = buf.borrow();
+        assert!(!lines.is_empty(), "ticker produced lines");
+        assert!(lines.iter().all(|l| l.starts_with("[parsim]")), "{lines:?}");
+    }
+
+    #[test]
+    fn checkpoint_component_fingerprints_match_across_threads() {
+        let mut a = nn_session(1);
+        let mut b = nn_session(4);
+        for _ in 0..40 {
+            a.step_cycle().unwrap();
+            b.step_cycle().unwrap();
+        }
+        let (ca, cb) = (a.checkpoint(), b.checkpoint());
+        assert_eq!(ca, cb, "component fingerprints thread-invariant");
+        assert!(ca.diff_components(&cb).is_empty());
     }
 }

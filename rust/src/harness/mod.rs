@@ -624,6 +624,113 @@ pub fn hotpath_report(rows: &[HotpathRow], scale: Scale, gpu: &GpuConfig) -> Str
     s
 }
 
+/// Compare two `BENCH_hotpath.json` files (baseline vs current) and fail
+/// on throughput regressions: any matrix point whose `cycles_per_s_opt`
+/// dropped more than `threshold_pct` percent below the baseline, or any
+/// baseline point missing from the current file (coverage regression),
+/// turns the result into `Err` — `parsim bench --diff` exits non-zero so
+/// CI can gate on it. Points only present in the current file are
+/// reported informationally (a grown matrix is not a regression).
+pub fn bench_diff(old: &str, new: &str, threshold_pct: f64) -> Result<String, String> {
+    use crate::stats::export::{parse_flat_json, JsonScalar};
+
+    // (key, cycles_per_s_opt) per row; key = the bench matrix coordinates
+    fn parse_rows(text: &str, which: &str) -> Result<Vec<(String, f64)>, String> {
+        let mut rows = Vec::new();
+        for (i, raw) in text.lines().enumerate() {
+            let line = raw.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let fields =
+                parse_flat_json(line).map_err(|e| format!("{which} line {}: {e}", i + 1))?;
+            let get = |k: &str| fields.iter().find(|(key, _)| key == k).map(|(_, v)| v);
+            let s = |k: &str| -> Result<&str, String> {
+                get(k)
+                    .and_then(|v| v.as_str())
+                    .ok_or_else(|| format!("{which} line {}: missing field {k:?}", i + 1))
+            };
+            let threads = get("threads")
+                .and_then(|v| v.as_u64())
+                .ok_or_else(|| format!("{which} line {}: missing field \"threads\"", i + 1))?;
+            let key = format!(
+                "{}/{}/{}/{}t/{}",
+                s("workload")?,
+                s("gpu")?,
+                s("scale")?,
+                threads,
+                s("schedule")?
+            );
+            let cps = match get("cycles_per_s_opt") {
+                Some(JsonScalar::Num(v)) => *v,
+                Some(JsonScalar::UInt(v)) => *v as f64,
+                Some(JsonScalar::Int(v)) => *v as f64,
+                _ => {
+                    return Err(format!(
+                        "{which} line {}: missing field \"cycles_per_s_opt\"",
+                        i + 1
+                    ))
+                }
+            };
+            rows.push((key, cps));
+        }
+        if rows.is_empty() {
+            return Err(format!("{which}: no bench rows"));
+        }
+        Ok(rows)
+    }
+
+    let old_rows = parse_rows(old, "baseline")?;
+    let new_rows = parse_rows(new, "current")?;
+    let mut report = format!(
+        "bench diff (fail threshold: -{threshold_pct:.1}%)\n\
+         {:<40} {:>14} {:>14} {:>8}  {}\n",
+        "point", "baseline cyc/s", "current cyc/s", "delta", "verdict"
+    );
+    let mut failures = 0usize;
+    for (key, old_cps) in &old_rows {
+        match new_rows.iter().find(|(k, _)| k == key) {
+            None => {
+                failures += 1;
+                report.push_str(&format!(
+                    "{key:<40} {old_cps:>14.0} {:>14} {:>8}  FAIL (point missing)\n",
+                    "-", "-"
+                ));
+            }
+            Some((_, new_cps)) => {
+                let delta_pct = if *old_cps > 0.0 {
+                    100.0 * (new_cps - old_cps) / old_cps
+                } else {
+                    0.0
+                };
+                let fail = delta_pct < -threshold_pct;
+                if fail {
+                    failures += 1;
+                }
+                report.push_str(&format!(
+                    "{key:<40} {old_cps:>14.0} {new_cps:>14.0} {delta_pct:>+7.1}%  {}\n",
+                    if fail { "FAIL" } else { "ok" }
+                ));
+            }
+        }
+    }
+    for (key, new_cps) in &new_rows {
+        if !old_rows.iter().any(|(k, _)| k == key) {
+            report.push_str(&format!(
+                "{key:<40} {:>14} {new_cps:>14.0} {:>8}  new (no baseline)\n",
+                "-", "-"
+            ));
+        }
+    }
+    if failures > 0 {
+        report.push_str(&format!("\n{failures} regression(s) beyond -{threshold_pct:.1}%\n"));
+        Err(report)
+    } else {
+        report.push_str("\nno regressions\n");
+        Ok(report)
+    }
+}
+
 // ---------------------------------------------------------------------------
 // Real-execution speed-up (meaningful on multi-core hosts)
 // ---------------------------------------------------------------------------
@@ -756,6 +863,45 @@ mod tests {
         let (report, sm_pct) = fig4("nn", Scale::Ci, &GpuConfig::tiny()).expect("valid config");
         assert!(report.contains("SM cycles"));
         assert!(sm_pct > 30.0, "SM phase should dominate: {sm_pct}%");
+    }
+
+    #[test]
+    fn bench_diff_passes_within_threshold_and_fails_beyond() {
+        fn row(workload: &str, threads: usize, cps: f64) -> String {
+            let r = HotpathRow {
+                workload: workload.into(),
+                gpu: "tiny".into(),
+                scale: Scale::Ci,
+                threads,
+                schedule: Schedule::Static { chunk: 0 },
+                cycles: 1000,
+                opt_s: 1000.0 / cps,
+                ref_s: 2000.0 / cps,
+                fingerprint: 0xDEAD,
+                identical: true,
+            };
+            hotpath_json(std::slice::from_ref(&r))
+        }
+        let baseline = row("nn", 1, 10_000.0) + &row("nn", 4, 20_000.0);
+        // within 5%: 2% drop on one point, 50% gain on the other
+        let ok = row("nn", 1, 9_800.0) + &row("nn", 4, 30_000.0);
+        let report = bench_diff(&baseline, &ok, 5.0).expect("within threshold");
+        assert!(report.contains("no regressions"), "{report}");
+        // a 40% drop must fail
+        let bad = row("nn", 1, 6_000.0) + &row("nn", 4, 30_000.0);
+        let report = bench_diff(&baseline, &bad, 5.0).expect_err("regression must fail");
+        assert!(report.contains("FAIL"), "{report}");
+        assert!(report.contains("1 regression(s)"), "{report}");
+        // a baseline point missing from the current file is a failure too
+        let shrunk = row("nn", 1, 10_000.0);
+        let report = bench_diff(&baseline, &shrunk, 5.0).expect_err("missing point must fail");
+        assert!(report.contains("point missing"), "{report}");
+        // grown matrix is informational, not a failure
+        let grown = ok.clone() + &row("hotspot", 1, 5_000.0);
+        assert!(bench_diff(&baseline, &grown, 5.0).is_ok());
+        // malformed input surfaces as a parse error, not a panic
+        assert!(bench_diff("not json", &ok, 5.0).is_err());
+        assert!(bench_diff(&baseline, "", 5.0).is_err());
     }
 
     #[test]

@@ -18,6 +18,7 @@ use std::collections::{BinaryHeap, VecDeque};
 
 use crate::config::IcntConfig;
 use crate::mem::MemRequest;
+use crate::util::{mix2, mix64};
 
 /// A packet in flight.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -180,6 +181,32 @@ impl Icnt {
         self.in_flight
     }
 
+    /// Deterministic fingerprint of the crossbar's full state: delivery
+    /// history plus everything currently in flight or awaiting ejection.
+    /// In-flight contents are mixed order-independently (XOR) because
+    /// heap layout is not canonical — two equivalent runs must agree
+    /// bit-for-bit mid-flight. Feeds the `icnt` component of
+    /// [`crate::engine::SessionFingerprint`].
+    pub fn fingerprint(&self) -> u64 {
+        let mut h = mix2(0x6b79_11d4_83ce_5a2fu64, self.seq);
+        h = mix2(h, self.in_flight as u64);
+        h = mix2(h, self.delivered);
+        let mut x = 0u64;
+        let pkt_fp = |p: &Packet| {
+            let tag = ((p.is_reply as u64) << 63) | ((p.src as u64) << 32) | p.dst as u64;
+            mix64(mix2(p.req.fingerprint(), mix2(p.ready_cycle, mix2(p.seq, tag))))
+        };
+        for p in self.slab.iter().flatten() {
+            x ^= pkt_fp(p);
+        }
+        for q in &self.eject {
+            for p in q {
+                x ^= pkt_fp(p);
+            }
+        }
+        mix64(mix2(h, x))
+    }
+
     pub fn flush(&mut self) {
         for h in &mut self.per_dst {
             h.clear();
@@ -316,6 +343,20 @@ mod tests {
         assert_eq!(ic.next_event_cycle(), None, "deliverable now ⇒ no jump");
         ic.eject(5);
         assert_eq!(ic.next_event_cycle(), Some(u64::MAX));
+    }
+
+    #[test]
+    fn fingerprint_tracks_crossbar_state() {
+        let mut a = icnt();
+        let mut b = icnt();
+        assert_eq!(a.fingerprint(), b.fingerprint(), "fresh crossbars agree");
+        a.inject(pkt(0, 5, 8), 0);
+        assert_ne!(a.fingerprint(), b.fingerprint(), "in-flight packet visible");
+        b.inject(pkt(0, 5, 8), 0);
+        assert_eq!(a.fingerprint(), b.fingerprint(), "equal state agrees");
+        a.transfer(9);
+        a.eject(5);
+        assert_ne!(a.fingerprint(), b.fingerprint(), "delivery history visible");
     }
 
     #[test]

@@ -139,6 +139,45 @@
 //! );
 //! # Ok(()) }
 //! ```
+//!
+//! ## Observability
+//!
+//! The [`telemetry`] subsystem adds three strictly read-only surfaces,
+//! all guaranteed not to perturb results (a fully-instrumented run is
+//! bit-identical to a bare one — `tests/telemetry.rs` pins it):
+//!
+//! * **Metrics** — `.metrics(true)` on the builder enables a typed
+//!   registry (fast-forward jumps, worklist occupancy and icnt depth
+//!   histograms, DRAM/L2 counters, pool busy/wait, fabric backpressure),
+//!   snapshot-able mid-run and exported as JSONL
+//!   ([`stats::export::metrics_jsonl`], `parsim run --metrics-out`).
+//! * **Chrome trace** — `.trace_writer(TraceWriter::create(path)?)`
+//!   streams a perfetto-loadable timeline with a *simulated-time* lane
+//!   (kernels, comm phases, fast-forward jumps; 1 cycle = 1 µs) and a
+//!   sampled *wall-clock* lane (sequential vs parallel-fan-out spans,
+//!   per-worker busy / barrier-wait slices). `parsim run --trace-out
+//!   trace.json`, then load the file at `ui.perfetto.dev`.
+//! * **Divergence probe** — [`telemetry::diverge_probe`] / `parsim
+//!   diverge` runs two configurations in lock-step and bisects to the
+//!   first divergent cycle and the component (SM / icnt / mem / fabric)
+//!   whose [`engine::SessionFingerprint`] sub-fingerprint differs.
+//!
+//! ```no_run
+//! use parsim::telemetry::TraceWriter;
+//! use parsim::{Scale, SimBuilder};
+//!
+//! # fn main() -> Result<(), Box<dyn std::error::Error>> {
+//! let mut session = SimBuilder::new()
+//!     .workload_named("myocyte", Scale::Ci)
+//!     .threads(8)
+//!     .metrics(true)
+//!     .trace_writer(TraceWriter::create(std::path::Path::new("trace.json"))?)
+//!     .build()?;
+//! session.run_to_completion()?;
+//! let reg = session.metrics_snapshot().expect("metrics enabled");
+//! println!("{}", parsim::stats::export::metrics_jsonl(session.gpu_cycle(), &reg));
+//! # Ok(()) }
+//! ```
 
 pub mod campaign;
 pub mod cli;
@@ -152,6 +191,7 @@ pub mod mem;
 pub mod profiler;
 pub mod runtime;
 pub mod stats;
+pub mod telemetry;
 pub mod trace;
 pub mod util;
 

@@ -32,8 +32,12 @@ const VALUE_OPTS: &[&str] = &[
     // campaign options
     "workloads", "gpu-counts", "threads-list", "schedules", "stats-list", "workers",
     "core-budget", "out", "name",
-    // bench output
-    "json",
+    // bench output + regression gate
+    "json", "diff", "diff-threshold",
+    // telemetry (run/cluster)
+    "metrics-out", "trace-out", "trace-sample-every",
+    // diverge probe: per-side overrides + self-test perturbation
+    "threads-a", "threads-b", "schedule-a", "schedule-b", "perturb-at",
 ];
 const FLAG_OPTS: &[&str] = &[
     "list", "show", "describe", "profile", "functional", "quiet", "help", "force",
@@ -64,6 +68,7 @@ fn main() -> ExitCode {
         "config" => cmd_config(&args),
         "stats" => cmd_stats(&args),
         "determinism" => cmd_determinism(&args),
+        "diverge" => cmd_diverge(&args),
         "validate" => cmd_validate(&args),
         "campaign" => cmd_campaign(&args),
         "bench" => cmd_bench(&args),
@@ -94,16 +99,27 @@ fn print_help() {
          \x20 config        show/list GPU presets (Table 1)\n\
          \x20 stats         describe reported statistics\n\
          \x20 determinism   run 1-thread vs N-thread and diff all statistics\n\
+         \x20 diverge       lock-step two configs and bisect to the first divergent\n\
+         \x20               cycle + component (--threads-a/-b --schedule-a/-b\n\
+         \x20               --perturb-at N self-test, --max-cycles budget)\n\
          \x20 validate      cross-check GEMM workloads against XLA artifacts\n\
          \x20 campaign      run a job matrix concurrently with a cached result store\n\
          \x20 bench         hot-path throughput: optimized vs reference engine,\n\
-         \x20               fingerprint-checked; writes BENCH_hotpath.json (--json PATH)\n\n\
+         \x20               fingerprint-checked; writes BENCH_hotpath.json (--json PATH);\n\
+         \x20               --diff BASELINE [CURRENT] gates against a committed baseline\n\
+         \x20               (fails on >--diff-threshold % regressions, default 5%)\n\n\
          common options: --workload NAME --scale ci|small|paper --threads N\n\
          \x20               --schedule static|static1|dynamic --stats per-sm|shared-locked|seq-point\n\
          \x20               --gpu rtx3080ti|tiny|rtx3090|a100-like --profile --functional\n\n\
          run observers:  --sample-every N    stream one JSONL progress record per N kernel\n\
          \x20               cycles to stdout (also written to --export-dir as samples.jsonl)\n\
          \x20               --progress-every N  coarse progress line on stderr every N cycles\n\n\
+         telemetry (run/cluster; never perturbs results):\n\
+         \x20               --metrics-out FILE  JSONL metric registry snapshot at run end\n\
+         \x20               --trace-out FILE    Chrome/perfetto trace: simulated-time lane\n\
+         \x20               (kernels, comm, fast-forward) + sampled wall-clock lane\n\
+         \x20               (phases, per-worker busy/barrier-wait)\n\
+         \x20               --trace-sample-every N  wall-lane sampling cadence (default 64)\n\n\
          cluster options: --workload tp_gemm|halo_stencil|graph_part|<any Table-2 name>\n\
          \x20               --gpus N (GPU count) --topology p2p|switch\n\
          \x20               --link-latency CYC --packet-bytes B --threads N (shared (gpu,sm) pool)\n\n\
@@ -174,7 +190,45 @@ fn build_simconfig(args: &Args) -> Result<SimConfig, String> {
         seed: args.get_u64("seed", 0xC0FFEE).map_err(|e| e.to_string())?,
         sm_worklist: !args.flag("no-worklist"),
         fast_forward: !args.flag("no-fast-forward"),
+        telemetry: Default::default(),
     })
+}
+
+/// Apply the telemetry CLI surface (`--metrics-out`, `--trace-out`,
+/// `--trace-sample-every`) shared by `run` and `cluster`. Returns the
+/// builder plus the metrics output path (written after the run).
+fn apply_telemetry_opts(
+    args: &Args,
+    mut builder: SimBuilder,
+) -> Result<(SimBuilder, Option<std::path::PathBuf>), String> {
+    let metrics_out = args.get("metrics-out").map(std::path::PathBuf::from);
+    if metrics_out.is_some() {
+        builder = builder.metrics(true);
+    }
+    if let Some(path) = args.get("trace-out") {
+        let path = std::path::Path::new(path);
+        let w = parsim::telemetry::TraceWriter::create(path)
+            .map_err(|e| format!("create {}: {e}", path.display()))?;
+        builder = builder.trace_writer(w);
+    }
+    let sample_every = args.get_u64("trace-sample-every", 0).map_err(|e| e.to_string())?;
+    if sample_every > 0 {
+        builder = builder.trace_sample_every(sample_every);
+    }
+    Ok((builder, metrics_out))
+}
+
+/// Write a metrics-registry snapshot as JSONL (`--metrics-out FILE`).
+fn write_metrics_out(
+    path: &std::path::Path,
+    cycle: u64,
+    reg: Option<parsim::telemetry::MetricsRegistry>,
+) -> Result<(), String> {
+    let reg = reg.ok_or("metrics snapshot unavailable")?;
+    std::fs::write(path, parsim::stats::export::metrics_jsonl(cycle, &reg))
+        .map_err(|e| format!("write {}: {e}", path.display()))?;
+    println!("wrote {} ({} metric(s))", path.display(), reg.len());
+    Ok(())
 }
 
 fn cmd_run(args: &Args) -> Result<(), String> {
@@ -204,6 +258,7 @@ fn cmd_run(args: &Args) -> Result<(), String> {
     if profile {
         builder = builder.observer(PhaseProfileStreamer::new());
     }
+    let (builder, metrics_out) = apply_telemetry_opts(args, builder)?;
     let mut session = builder.build().map_err(|e| e.to_string())?;
     {
         let wl = session.workload();
@@ -281,6 +336,12 @@ fn cmd_run(args: &Args) -> Result<(), String> {
         }
         println!("exported {} files to {}", written.len(), dir.display());
     }
+    if let Some(path) = &metrics_out {
+        write_metrics_out(path, session.gpu_cycle(), session.metrics_snapshot())?;
+    }
+    if let Some(path) = args.get("trace-out") {
+        println!("wrote {path} ({} trace event(s))", session.trace_events_written());
+    }
     Ok(())
 }
 
@@ -316,6 +377,7 @@ fn cmd_cluster(args: &Args) -> Result<(), String> {
     if progress_every > 0 {
         builder = builder.observer(ProgressTicker::new(progress_every));
     }
+    let (builder, metrics_out) = apply_telemetry_opts(args, builder)?;
     let mut session = builder.build_cluster().map_err(|e| e.to_string())?;
     {
         let wl = session.workload();
@@ -362,6 +424,12 @@ fn cmd_cluster(args: &Args) -> Result<(), String> {
                 format!("{:016x}", gs.fingerprint()),
             );
         }
+    }
+    if let Some(path) = &metrics_out {
+        write_metrics_out(path, session.cluster_cycle(), session.metrics_snapshot())?;
+    }
+    if let Some(path) = args.get("trace-out") {
+        println!("wrote {path} ({} trace event(s))", session.trace_events_written());
     }
     Ok(())
 }
@@ -537,6 +605,102 @@ fn cmd_determinism(args: &Args) -> Result<(), String> {
     }
 }
 
+/// `parsim diverge`: run two configurations of the same workload in
+/// exact lock-step and bisect to the first divergent cycle and the
+/// component fingerprint (sm/icnt/mem/fabric) that differs. Exits
+/// non-zero on a real divergence; with `--perturb-at N` (the self-test
+/// mode, which corrupts side B's SM state at cycle N) divergence is the
+/// expected outcome and *not* finding it is the failure.
+fn cmd_diverge(args: &Args) -> Result<(), String> {
+    use parsim::campaign::parse_schedule_token;
+    use parsim::telemetry::{diverge_probe, DivergeOutcome};
+
+    let name = args.get("workload").unwrap_or("nn").to_string();
+    let scale = match args.get("scale") {
+        None => Scale::Ci,
+        Some(s) => Scale::parse(s).ok_or_else(|| format!("bad --scale {s:?}"))?,
+    };
+    let gpu = parse_gpu(args)?;
+    let mut sim = build_simconfig(args)?;
+    // --max-cycles bounds the probe's comparison window, not the
+    // sessions themselves (a tripped cycle guard would abort the probe)
+    let budget = sim.max_cycles;
+    sim.max_cycles = 0;
+    let threads_a = args.get_usize("threads-a", 1).map_err(|e| e.to_string())?;
+    let threads_b =
+        args.get_usize("threads-b", sim.threads.max(1)).map_err(|e| e.to_string())?;
+    let sched = |key: &str| -> Result<Schedule, String> {
+        match args.get(key) {
+            None => Ok(sim.schedule),
+            Some(t) => parse_schedule_token(t)
+                .ok_or_else(|| format!("bad --{key} {t:?} (name[:chunk])")),
+        }
+    };
+    let schedule_a = sched("schedule-a")?;
+    let schedule_b = sched("schedule-b")?;
+    let perturb_at = match args.get("perturb-at") {
+        None => None,
+        Some(v) => {
+            Some(v.parse::<u64>().map_err(|_| format!("bad --perturb-at {v:?}"))?)
+        }
+    };
+
+    let make = |threads: usize, schedule: Schedule| {
+        let sim = sim.clone();
+        let gpu = gpu.clone();
+        let name = name.clone();
+        move || {
+            let mut s = sim.clone();
+            s.threads = threads;
+            s.schedule = schedule;
+            SimBuilder::new().gpu(gpu.clone()).sim(s).workload_named(&name, scale).build()
+        }
+    };
+    eprintln!(
+        "diverge probe: {name} (scale={}) — A: {threads_a} thread(s), {} | B: {threads_b} \
+         thread(s), {}{}",
+        scale.name(),
+        schedule_a.name(),
+        schedule_b.name(),
+        match perturb_at {
+            Some(p) => format!(" (B's SM state perturbed at cycle {p})"),
+            None => String::new(),
+        },
+    );
+    let out =
+        diverge_probe(make(threads_a, schedule_a), make(threads_b, schedule_b), budget, perturb_at)
+            .map_err(|e| e.to_string())?;
+    match out {
+        DivergeOutcome::Identical { cycles } => {
+            println!("IDENTICAL — both sides agree over {cycles} compared cycle(s)");
+            if perturb_at.is_some() {
+                return Err("perturbation armed but no divergence found".into());
+            }
+            Ok(())
+        }
+        DivergeOutcome::Diverged(r) => {
+            println!(
+                "DIVERGED at cycle {} — component(s): {}",
+                r.first_divergent_cycle,
+                r.components.join(", ")
+            );
+            for (side, fp) in [("A", &r.a), ("B", &r.b)] {
+                println!(
+                    "  side {side}: cycle={} hash={:016x} sm={:016x} icnt={:016x} \
+                     mem={:016x} fabric={:016x}",
+                    fp.cycle, fp.hash, fp.sm, fp.icnt, fp.mem, fp.fabric
+                );
+            }
+            if perturb_at.is_some() {
+                println!("(expected: the perturbation was armed — self-test passed)");
+                Ok(())
+            } else {
+                Err("runs diverged".into())
+            }
+        }
+    }
+}
+
 fn cmd_validate(args: &Args) -> Result<(), String> {
     let name = args.get("workload").unwrap_or("cut_1");
     let scale = match args.get("scale") {
@@ -641,6 +805,25 @@ fn cmd_campaign(args: &Args) -> Result<(), String> {
 /// any point's fingerprints diverge — perf must never buy a result
 /// change.
 fn cmd_bench(args: &Args) -> Result<(), String> {
+    // `bench --diff BASELINE [CURRENT]`: no measurement, just gate the
+    // current JSON against a committed baseline (CI's perf-smoke job)
+    if let Some(old_path) = args.get("diff") {
+        let new_path =
+            args.positional.get(1).map(String::as_str).unwrap_or("BENCH_hotpath.json");
+        let old =
+            std::fs::read_to_string(old_path).map_err(|e| format!("read {old_path}: {e}"))?;
+        let new =
+            std::fs::read_to_string(new_path).map_err(|e| format!("read {new_path}: {e}"))?;
+        let threshold = match args.get("diff-threshold") {
+            None => 5.0,
+            Some(v) => {
+                v.parse::<f64>().map_err(|_| format!("bad --diff-threshold {v:?}"))?
+            }
+        };
+        let report = harness::bench_diff(&old, &new, threshold)?;
+        println!("{report}");
+        return Ok(());
+    }
     let scale = match args.get("scale") {
         None => Scale::Ci,
         Some(s) => Scale::parse(s).ok_or_else(|| format!("bad --scale {s:?}"))?,

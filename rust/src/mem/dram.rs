@@ -9,6 +9,7 @@ use std::collections::VecDeque;
 use crate::config::DramConfig;
 use crate::mem::MemRequest;
 use crate::stats::MemStats;
+use crate::util::{mix2, mix64};
 
 /// A request queued at the DRAM channel. `subpart` remembers which L2
 /// slice to return the fill to.
@@ -202,6 +203,33 @@ impl Dram {
         self.queue.is_empty() && self.in_flight.is_empty() && self.done.is_empty()
     }
 
+    /// Deterministic fingerprint of the channel's full integer state:
+    /// clock, queued/in-flight/completed requests and per-bank open-row
+    /// tracking. Order-independent (XOR) over container contents so heap
+    /// layout never matters; the fractional `clock_acc` is excluded (its
+    /// integer consequences surface through `dram_cycle`). Feeds the
+    /// `mem` component fingerprint of
+    /// [`crate::engine::SessionFingerprint`].
+    pub fn fingerprint(&self) -> u64 {
+        let h = mix2(0x9d8a_7b21_4c63_0e5fu64, self.dram_cycle);
+        let mut x = 0u64;
+        for q in &self.queue {
+            x ^= mix64(mix2(q.r.req.fingerprint(), ((q.bank as u64) << 48) ^ q.row));
+        }
+        for &(due, r) in &self.in_flight {
+            x ^= mix64(mix2(r.req.fingerprint(), due));
+        }
+        for r in &self.done {
+            x ^= mix64(mix2(r.req.fingerprint(), 0x1));
+        }
+        for (i, b) in self.banks.iter().enumerate() {
+            if b.open_row.is_some() || b.busy_until > 0 {
+                x ^= mix64(mix2(i as u64, mix2(b.open_row.unwrap_or(u64::MAX), b.busy_until)));
+            }
+        }
+        mix64(mix2(h, x))
+    }
+
     /// Between-kernel reset (keeps the clock phase, drops state).
     pub fn flush(&mut self) {
         self.queue.clear();
@@ -314,6 +342,20 @@ mod tests {
             }
         }
         assert!(t_slow.unwrap() > t_fast.unwrap() * 3);
+    }
+
+    #[test]
+    fn fingerprint_tracks_state() {
+        let mut a = dram();
+        let mut b = dram();
+        assert_eq!(a.fingerprint(), b.fingerprint(), "fresh channels agree");
+        a.push(req(1, false));
+        assert_ne!(a.fingerprint(), b.fingerprint(), "queued request visible");
+        b.push(req(1, false));
+        assert_eq!(a.fingerprint(), b.fingerprint(), "equal state agrees");
+        let mut st = MemStats::default();
+        a.core_cycle(&mut st);
+        assert_ne!(a.fingerprint(), b.fingerprint(), "clock advance visible");
     }
 
     #[test]

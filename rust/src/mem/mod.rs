@@ -54,6 +54,17 @@ impl MemRequest {
     pub fn reply_bytes(&self) -> u32 {
         8 + LINE_BYTES as u32
     }
+
+    /// Deterministic content mix of the request (every field), used by
+    /// the component fingerprints behind the divergence probe
+    /// ([`crate::telemetry::diverge`]).
+    pub fn fingerprint(&self) -> u64 {
+        let tag = ((self.is_write as u64) << 63)
+            | ((self.sm_id as u64) << 32)
+            | ((self.warp.warp_slot as u64) << 16)
+            | self.warp.load_slot as u64;
+        mix64(crate::util::mix2(self.line_addr, tag))
+    }
 }
 
 /// Map a line address to its memory sub-partition (L2 slice).

@@ -10,6 +10,7 @@ use crate::mem::cache::{AccessOutcome, Cache};
 use crate::mem::dram::{Dram, DramReq};
 use crate::mem::MemRequest;
 use crate::stats::MemStats;
+use crate::util::{mix2, mix64};
 
 /// An L2 slice with its queues (one per sub-partition).
 #[derive(Debug)]
@@ -164,6 +165,23 @@ impl SubPartition {
         self.input.clear();
         self.reply.clear();
     }
+
+    /// Deterministic fingerprint of the slice: queued input, pending
+    /// replies, and every statistic counter. (L2 tag/MSHR internals are
+    /// not hashed directly; any divergence there surfaces through the
+    /// hit/miss counters and the queues on the next access.)
+    fn fingerprint(&self) -> u64 {
+        let mut h = mix2(0x3c6e_f372_fe94_f82bu64, self.id as u64);
+        let mut x = 0u64;
+        for (i, r) in self.input.iter().enumerate() {
+            x ^= mix64(mix2(r.fingerprint(), i as u64));
+        }
+        for &(ready, r) in &self.reply {
+            x ^= mix64(mix2(r.fingerprint(), ready));
+        }
+        self.stats.visit_counters(|_, v| h = mix2(h, v));
+        mix64(mix2(h, x))
+    }
 }
 
 /// A memory partition: one DRAM channel + `subpartitions_per_partition`
@@ -251,6 +269,20 @@ impl MemPartition {
     /// Record an icnt-delivery failure (queue full) for diagnostics.
     pub fn note_queue_full(&mut self) {
         self.dram_stats.dram_queue_full_stalls += 1;
+    }
+
+    /// Deterministic fingerprint of the whole partition: every slice,
+    /// the DRAM channel state, and the DRAM counters. Feeds the `mem`
+    /// component of [`crate::engine::SessionFingerprint`] so the
+    /// divergence probe can attribute a mismatch to the memory system.
+    pub fn fingerprint(&self) -> u64 {
+        let mut h = mix2(0xa1b8_55e0_2d4f_96c3u64, self.id as u64);
+        for s in &self.subs {
+            h = mix2(h, s.fingerprint());
+        }
+        h = mix2(h, self.dram.fingerprint());
+        self.dram_stats.visit_counters(|_, v| h = mix2(h, v));
+        mix64(h)
     }
 }
 
@@ -385,6 +417,23 @@ mod tests {
         };
         assert!(p.subs[0].pop_reply(now).is_none(), "not ready before the reported cycle");
         assert!(p.subs[0].pop_reply(ready).is_some(), "ready exactly at the reported cycle");
+    }
+
+    #[test]
+    fn fingerprint_tracks_partition_state() {
+        let mut a = MemPartition::new(0, &cfg());
+        let b = MemPartition::new(0, &cfg());
+        assert_eq!(a.fingerprint(), b.fingerprint(), "fresh partitions agree");
+        a.subs[0].push_request(rd(5, 2));
+        assert_ne!(a.fingerprint(), b.fingerprint(), "queued input visible");
+        // drain; stats counters now differ even though queues are empty
+        for now in 0..5000u64 {
+            a.dram_cycle();
+            a.cache_cycle(now);
+            a.subs[0].pop_reply(now);
+        }
+        assert!(a.is_idle());
+        assert_ne!(a.fingerprint(), b.fingerprint(), "stats history visible");
     }
 
     #[test]

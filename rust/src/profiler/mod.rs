@@ -103,12 +103,21 @@ impl PhaseProfiler {
         }
     }
 
-    /// Estimated *total* nanoseconds per phase (scaled by the sampling
-    /// ratio).
+    /// Estimated *total* nanoseconds per phase, scaled by the **true**
+    /// cycles-per-sample ratio `cycle_counter / samples` — not the
+    /// nominal `sample_every`. The two differ whenever
+    /// [`Self::skip_cycles`] ran (idle fast-forward advances the cycle
+    /// counter without sampling) or the run length is not a multiple of
+    /// the cadence; scaling by the nominal cadence under-estimated
+    /// fast-forwarding runs. u128 intermediate: `ns × cycles` overflows
+    /// u64 on long runs.
     pub fn phase_ns(&self) -> [u64; NUM_PHASES] {
         let mut out = self.ns;
+        if self.samples == 0 {
+            return out; // nothing sampled ⇒ ns is all zeros; avoid ÷0
+        }
         for v in &mut out {
-            *v *= self.sample_every;
+            *v = ((*v as u128 * self.cycle_counter as u128) / self.samples as u128) as u64;
         }
         out
     }
@@ -205,6 +214,41 @@ mod tests {
         assert!(p.sm_section_s() > 0.0015);
         let r = p.report();
         assert!(r.contains("SM cycles"));
+    }
+
+    #[test]
+    fn phase_ns_scales_by_true_ratio_not_nominal_cadence() {
+        // 10 cycles, 3 of them sampled for 300 ns total: the estimate is
+        // 300 × 10/3 = 1000 ns — NOT 300 × sample_every (the old bug,
+        // which over- or under-scaled whenever fast-forward skipped
+        // cycles or the run length wasn't a cadence multiple).
+        let mut p = PhaseProfiler::new(true, 4);
+        p.ns[Phase::SmCycle as usize] = 300;
+        p.samples = 3;
+        p.cycle_counter = 10;
+        assert_eq!(p.phase_ns()[Phase::SmCycle as usize], 1000);
+
+        // fast-forward regression: 2 sampled cycles of 8 total stepped,
+        // then 992 skipped cycles — the skipped window cost no wall-clock
+        // but IS simulated time, so the per-cycle estimate must spread
+        // over all 1000 cycles (100 × 1000/2), not 100 × 4
+        let mut p = PhaseProfiler::new(true, 4);
+        p.ns[Phase::Dram as usize] = 100;
+        p.samples = 2;
+        p.cycle_counter = 8;
+        p.skip_cycles(992);
+        assert_eq!(p.phase_ns()[Phase::Dram as usize], 50_000);
+
+        // ÷0 guard: enabled but never cycled
+        let p = PhaseProfiler::new(true, 8);
+        assert_eq!(p.phase_ns(), [0; NUM_PHASES]);
+
+        // u64-overflow guard: huge ns × huge cycle count stays exact
+        let mut p = PhaseProfiler::new(true, 1);
+        p.ns[0] = 1 << 62;
+        p.samples = 1 << 20;
+        p.cycle_counter = 1 << 21;
+        assert_eq!(p.phase_ns()[0], 1 << 63);
     }
 
     #[test]

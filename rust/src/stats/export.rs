@@ -388,6 +388,46 @@ pub fn cycle_sample_jsonl(
     out
 }
 
+/// JSONL export of a [`crate::telemetry::MetricsRegistry`] snapshot: one
+/// flat line per metric, tagged with the snapshot cycle. Counters and
+/// gauges carry a single `value`; histograms are flattened into
+/// `count`/`sum`/`max`/`p50`/`p90`/`p99` scalars so every line stays
+/// parseable by [`parse_flat_json`]. Registry iteration is ordered
+/// (BTreeMap), so the export is byte-deterministic for a given snapshot.
+/// This is what `parsim run --metrics-out FILE` writes.
+pub fn metrics_jsonl(cycle: u64, reg: &crate::telemetry::MetricsRegistry) -> String {
+    use crate::telemetry::MetricValue;
+    let mut out = String::new();
+    for (name, value) in reg.iter() {
+        out.push('{');
+        jsonl_str(&mut out, "metric", name, true);
+        match value {
+            MetricValue::Counter(v) => {
+                jsonl_str(&mut out, "kind", "counter", false);
+                jsonl_u64(&mut out, "cycle", cycle, false);
+                jsonl_u64(&mut out, "value", *v, false);
+            }
+            MetricValue::Gauge(v) => {
+                jsonl_str(&mut out, "kind", "gauge", false);
+                jsonl_u64(&mut out, "cycle", cycle, false);
+                jsonl_u64(&mut out, "value", *v, false);
+            }
+            MetricValue::Histogram(h) => {
+                jsonl_str(&mut out, "kind", "histogram", false);
+                jsonl_u64(&mut out, "cycle", cycle, false);
+                jsonl_u64(&mut out, "count", h.count(), false);
+                jsonl_u64(&mut out, "sum", h.sum(), false);
+                jsonl_u64(&mut out, "max", h.max(), false);
+                jsonl_u64(&mut out, "p50", h.percentile(0.50), false);
+                jsonl_u64(&mut out, "p90", h.percentile(0.90), false);
+                jsonl_u64(&mut out, "p99", h.percentile(0.99), false);
+            }
+        }
+        out.push_str("}\n");
+    }
+    out
+}
+
 /// Deterministic JSONL summary of one **cluster** run: one line per GPU
 /// (`gpu` = index) plus one aggregate line (`gpu` = `"all"`) carrying
 /// the cluster-level counters (lock-step cycles, communication cycles,
@@ -597,6 +637,38 @@ mod tests {
         assert_eq!(get("grid_ctas").unwrap().as_u64(), Some(64));
         assert_eq!(get("warp_insts").unwrap().as_u64(), Some(55_000));
         assert_eq!(line, cycle_sample_jsonl(1234, 2, "relax_k", 90, 17, 64, 55_000));
+    }
+
+    #[test]
+    fn metrics_jsonl_is_flat_parseable_and_deterministic() {
+        use crate::telemetry::{Histogram, MetricsRegistry};
+        let mut reg = MetricsRegistry::new();
+        reg.counter("engine.ff_jumps", 7);
+        reg.gauge("icnt.in_flight", 3);
+        let mut h = Histogram::new();
+        for v in [1u64, 2, 4, 100] {
+            h.record(v);
+        }
+        reg.histogram("engine.worklist_occupancy", &h);
+        let text = metrics_jsonl(512, &reg);
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 3, "one line per metric");
+        for line in &lines {
+            let fields = parse_flat_json(line).expect("every metric line is flat JSON");
+            let get = |k: &str| fields.iter().find(|(key, _)| key == k).map(|(_, v)| v.clone());
+            assert_eq!(get("cycle").unwrap().as_u64(), Some(512));
+            assert!(get("metric").unwrap().as_str().is_some());
+        }
+        // BTreeMap order: engine.* before icnt.*
+        assert!(lines[0].contains("\"metric\": \"engine.ff_jumps\""));
+        assert!(lines[0].contains("\"kind\": \"counter\""));
+        assert!(lines[0].contains("\"value\": 7"));
+        assert!(lines[1].contains("\"kind\": \"histogram\""));
+        assert!(lines[1].contains("\"count\": 4"));
+        assert!(lines[1].contains("\"sum\": 107"));
+        assert!(lines[1].contains("\"max\": 100"));
+        assert!(lines[2].contains("\"kind\": \"gauge\""));
+        assert_eq!(text, metrics_jsonl(512, &reg), "byte-deterministic");
     }
 
     #[test]

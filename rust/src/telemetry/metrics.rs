@@ -1,0 +1,268 @@
+//! The unified metrics registry: typed counters, gauges and histograms,
+//! registered **by name** from every subsystem (engine, pool, icnt,
+//! memory partitions, fabric, campaign scheduler).
+//!
+//! Design constraints, in priority order:
+//!
+//! 1. **Zero perturbation.** Metric state lives *outside* the
+//!    fingerprinted model state and is only ever written from sequential
+//!    phases of the cycle loop (or from hot-path structs gated behind an
+//!    `Option` that is `None` when telemetry is off). Snapshots are pure
+//!    reads. `tests/telemetry.rs` pins bit-identity with metrics on/off.
+//! 2. **Deterministic output.** The registry is a `BTreeMap`, so
+//!    iteration (and therefore the exported JSONL,
+//!    [`crate::stats::export::metrics_jsonl`]) is byte-stable for a given
+//!    simulation state — wall-clock never enters a metric value unless a
+//!    subsystem explicitly exports a timing counter (the pool's worker
+//!    busy/wait counters do; they are observability-only and never fed
+//!    back into the model).
+//! 3. **Cheap hot path.** Recording into a [`Histogram`] is a couple of
+//!    integer ops (leading-zeros bucket index); components keep their own
+//!    typed counter structs and *fill* a registry only at snapshot time.
+
+use std::collections::BTreeMap;
+
+/// Number of power-of-two histogram buckets: bucket 0 holds zeros,
+/// bucket `i ≥ 1` holds values with bit-width `i` (i.e. `2^(i-1) ..
+/// 2^i - 1`), up to bucket 64 for the top bit of a `u64`.
+pub const HIST_BUCKETS: usize = 65;
+
+/// A fixed-footprint power-of-two histogram: O(1) record, O(buckets)
+/// snapshot, no allocation after construction. Percentiles are estimated
+/// as the upper bound of the bucket containing the requested rank —
+/// coarse (factor-of-two resolution) but entirely deterministic and
+/// allocation-free, which is what a per-cycle hot path can afford.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Histogram {
+    buckets: [u64; HIST_BUCKETS],
+    count: u64,
+    sum: u64,
+    max: u64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram { buckets: [0; HIST_BUCKETS], count: 0, sum: 0, max: 0 }
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    #[inline]
+    fn bucket_of(v: u64) -> usize {
+        if v == 0 {
+            0
+        } else {
+            64 - v.leading_zeros() as usize
+        }
+    }
+
+    /// Upper bound of bucket `i` (the value reported for percentiles).
+    #[inline]
+    fn bucket_top(i: usize) -> u64 {
+        if i == 0 {
+            0
+        } else if i >= 64 {
+            u64::MAX
+        } else {
+            (1u64 << i) - 1
+        }
+    }
+
+    /// Record one observation. O(1), no allocation.
+    #[inline]
+    pub fn record(&mut self, v: u64) {
+        self.buckets[Self::bucket_of(v)] += 1;
+        self.count += 1;
+        self.sum = self.sum.saturating_add(v);
+        if v > self.max {
+            self.max = v;
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn sum(&self) -> u64 {
+        self.sum
+    }
+
+    pub fn max(&self) -> u64 {
+        self.max
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    /// Estimated `q`-quantile (`0.0 ..= 1.0`): the upper bound of the
+    /// bucket holding the rank-`⌈q·count⌉` observation. 0 for an empty
+    /// histogram.
+    pub fn percentile(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let rank = ((q.clamp(0.0, 1.0) * self.count as f64).ceil() as u64).max(1);
+        let mut seen = 0u64;
+        for (i, &b) in self.buckets.iter().enumerate() {
+            seen += b;
+            if seen >= rank {
+                return Self::bucket_top(i);
+            }
+        }
+        self.max
+    }
+
+    /// Merge another histogram into this one (bucket-wise).
+    pub fn merge(&mut self, other: &Histogram) {
+        for (a, b) in self.buckets.iter_mut().zip(&other.buckets) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum = self.sum.saturating_add(other.sum);
+        self.max = self.max.max(other.max);
+    }
+}
+
+/// One registered metric value.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum MetricValue {
+    /// Monotonic event count (e.g. `engine.ff_jumps`).
+    Counter(u64),
+    /// Point-in-time level (e.g. `icnt.in_flight`).
+    Gauge(u64),
+    /// Distribution snapshot (e.g. `engine.worklist_occupancy`).
+    Histogram(Histogram),
+}
+
+/// A name → value snapshot of every registered metric, filled by each
+/// subsystem's `fill_metrics` at snapshot time. `BTreeMap` keeps the
+/// export order deterministic.
+#[derive(Debug, Clone, Default)]
+pub struct MetricsRegistry {
+    entries: BTreeMap<String, MetricValue>,
+}
+
+impl MetricsRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register/overwrite a counter.
+    pub fn counter(&mut self, name: impl Into<String>, v: u64) {
+        self.entries.insert(name.into(), MetricValue::Counter(v));
+    }
+
+    /// Register/overwrite a gauge.
+    pub fn gauge(&mut self, name: impl Into<String>, v: u64) {
+        self.entries.insert(name.into(), MetricValue::Gauge(v));
+    }
+
+    /// Register/overwrite a histogram (cloned — snapshots outlive the
+    /// live accumulator).
+    pub fn histogram(&mut self, name: impl Into<String>, h: &Histogram) {
+        self.entries.insert(name.into(), MetricValue::Histogram(h.clone()));
+    }
+
+    /// Copy every entry of `other` into this registry under
+    /// `prefix + name` (the cluster session namespaces per-GPU
+    /// registries as `gpu0.`, `gpu1.`, … this way).
+    pub fn merge_prefixed(&mut self, prefix: &str, other: &MetricsRegistry) {
+        for (name, v) in other.iter() {
+            self.entries.insert(format!("{prefix}{name}"), v.clone());
+        }
+    }
+
+    pub fn get(&self, name: &str) -> Option<&MetricValue> {
+        self.entries.get(name)
+    }
+
+    /// Iterate in name order (the JSONL export order).
+    pub fn iter(&self) -> impl Iterator<Item = (&str, &MetricValue)> {
+        self.entries.iter().map(|(k, v)| (k.as_str(), v))
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_buckets_and_percentiles() {
+        let mut h = Histogram::new();
+        assert_eq!(h.percentile(0.5), 0, "empty histogram");
+        for v in [0u64, 1, 1, 2, 3, 7, 100] {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 7);
+        assert_eq!(h.sum(), 114);
+        assert_eq!(h.max(), 100);
+        // rank 4 of 7 at q=0.5 → value 2 or 3 → bucket top 3
+        assert_eq!(h.percentile(0.5), 3);
+        // the top observation (100, bucket 7: 64..127) bounds p99
+        assert_eq!(h.percentile(0.99), 127);
+        assert_eq!(h.percentile(0.0), 0);
+    }
+
+    #[test]
+    fn histogram_extremes() {
+        let mut h = Histogram::new();
+        h.record(u64::MAX);
+        h.record(0);
+        assert_eq!(h.max(), u64::MAX);
+        assert_eq!(h.percentile(1.0), u64::MAX);
+        assert_eq!(h.percentile(0.1), 0);
+        // sum saturates rather than wrapping
+        h.record(u64::MAX);
+        assert_eq!(h.sum(), u64::MAX);
+    }
+
+    #[test]
+    fn histogram_merge_adds_everything() {
+        let mut a = Histogram::new();
+        let mut b = Histogram::new();
+        a.record(1);
+        a.record(8);
+        b.record(3);
+        let mut m = a.clone();
+        m.merge(&b);
+        assert_eq!(m.count(), 3);
+        assert_eq!(m.sum(), 12);
+        assert_eq!(m.max(), 8);
+    }
+
+    #[test]
+    fn registry_is_name_ordered_and_typed() {
+        let mut r = MetricsRegistry::new();
+        r.gauge("z.depth", 4);
+        r.counter("a.events", 10);
+        let mut h = Histogram::new();
+        h.record(5);
+        r.histogram("m.occupancy", &h);
+        assert_eq!(r.len(), 3);
+        let names: Vec<&str> = r.iter().map(|(n, _)| n).collect();
+        assert_eq!(names, vec!["a.events", "m.occupancy", "z.depth"]);
+        assert!(matches!(r.get("a.events"), Some(MetricValue::Counter(10))));
+        assert!(matches!(r.get("z.depth"), Some(MetricValue::Gauge(4))));
+        match r.get("m.occupancy") {
+            Some(MetricValue::Histogram(h)) => assert_eq!(h.count(), 1),
+            other => panic!("wrong value: {other:?}"),
+        }
+        // overwrite keeps one entry per name
+        r.counter("a.events", 11);
+        assert_eq!(r.len(), 3);
+        assert!(matches!(r.get("a.events"), Some(MetricValue::Counter(11))));
+    }
+}

@@ -1,0 +1,33 @@
+//! Observability for the simulator, in three coordinated pieces — none
+//! of which may perturb simulation state (pinned by `tests/telemetry.rs`:
+//! with everything enabled, fingerprints are bit-identical to a
+//! telemetry-off run at every thread count and schedule).
+//!
+//! * [`metrics`] — a unified registry of typed counters/gauges/histograms
+//!   filled by every subsystem (engine fast-forward jumps, worklist
+//!   occupancy, icnt in-flight depth, DRAM row hits, fabric backpressure
+//!   stalls, campaign cache hits, …), snapshot-able mid-run from
+//!   [`crate::engine::Observer`] hooks and exported as JSONL via
+//!   [`crate::stats::export::metrics_jsonl`] / `parsim … --metrics-out`.
+//! * [`trace`] — a streaming Chrome trace-event writer
+//!   (perfetto-loadable) with a simulated-time lane (kernels, cluster
+//!   comm phases, fast-forward jumps) and a wall-clock lane (sequential
+//!   vs parallel-fan-out phases, per-worker busy/barrier-wait slices from
+//!   the thread-pool instrumentation), behind `parsim … --trace-out`.
+//! * [`diverge`] — a determinism divergence probe: run two configurations
+//!   in lock-step, compare [`crate::engine::SessionFingerprint`]s at a
+//!   geometrically-refined cadence, and bisect to the first divergent
+//!   cycle and the component (SM / icnt / mem / fabric) whose
+//!   sub-fingerprint differs. Exposed as `parsim diverge`.
+//!
+//! Everything is wired through [`crate::config::TelemetryConfig`] on
+//! [`crate::SimConfig`] and the [`crate::SimBuilder`] setters; with the
+//! default (all off) configuration the hot loop pays one `Option` check.
+
+pub mod diverge;
+pub mod metrics;
+pub mod trace;
+
+pub use diverge::{diverge_probe, DivergeOutcome, DivergeReport};
+pub use metrics::{Histogram, MetricValue, MetricsRegistry};
+pub use trace::{TraceEvent, TraceWriter, PID_SIM, PID_WALL};

@@ -1,0 +1,311 @@
+//! Streaming Chrome trace-event writer (the JSON array format that
+//! `chrome://tracing` and [perfetto](https://ui.perfetto.dev) load
+//! directly).
+//!
+//! The timeline has two correlated lanes, distinguished by `pid`:
+//!
+//! * **`pid` [`PID_SIM`] — simulated time.** `ts` is the simulated cycle
+//!   rendered as one microsecond per cycle; `tid` is the GPU index.
+//!   Spans: kernel executions, cluster compute/communication phases, and
+//!   fast-forward jumps (so skipped idle windows are visible as explicit
+//!   slices rather than gaps).
+//! * **`pid` [`PID_WALL`] — wall-clock time.** `ts` is microseconds since
+//!   tracing started. `tid 0` carries the engine's sequential-phase vs
+//!   parallel-fan-out spans (sampled every
+//!   [`crate::config::TelemetryConfig::trace_sample_every`] cycles);
+//!   `tid 1..=W` carry per-worker fork/join *busy* and *barrier-wait*
+//!   slices from the instrumentation inside `engine/pool.rs` — the
+//!   per-epoch load-imbalance picture the paper's speedup analysis needs.
+//!
+//! Buffering is bounded: events serialize into a small in-memory string
+//! that is flushed to the underlying writer whenever it exceeds
+//! [`TraceWriter::FLUSH_BYTES`], so multi-million-cycle runs stream with
+//! constant memory instead of accumulating the whole trace.
+
+use std::fs::File;
+use std::io::{self, BufWriter, Write};
+use std::path::Path;
+
+/// `pid` of the simulated-time lane (1 cycle rendered as 1 µs).
+pub const PID_SIM: u32 = 1;
+/// `pid` of the wall-clock lane (µs since tracing started).
+pub const PID_WALL: u32 = 2;
+
+/// One complete ("ph":"X") span, produced by the engine/session/cluster
+/// and serialized by [`TraceWriter::event`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TraceEvent {
+    pub name: String,
+    /// Category string (shown as a filterable tag in perfetto).
+    pub cat: &'static str,
+    /// [`PID_SIM`] or [`PID_WALL`].
+    pub pid: u32,
+    pub tid: u32,
+    pub ts_us: u64,
+    pub dur_us: u64,
+    /// Extra numeric arguments rendered under `"args"`.
+    pub args: Vec<(&'static str, u64)>,
+}
+
+impl TraceEvent {
+    /// A span on the simulated-time lane of GPU `gpu`, covering cycles
+    /// `[from, from + len)`.
+    pub fn sim_span(name: impl Into<String>, cat: &'static str, gpu: u32, from: u64, len: u64) -> Self {
+        TraceEvent { name: name.into(), cat, pid: PID_SIM, tid: gpu, ts_us: from, dur_us: len, args: Vec::new() }
+    }
+
+    /// A span on the wall-clock lane, `tid` row, covering
+    /// `[ts_us, ts_us + dur_us)` microseconds since tracing started.
+    pub fn wall_span(name: impl Into<String>, cat: &'static str, tid: u32, ts_us: u64, dur_us: u64) -> Self {
+        TraceEvent { name: name.into(), cat, pid: PID_WALL, tid, ts_us, dur_us, args: Vec::new() }
+    }
+
+    pub fn arg(mut self, key: &'static str, value: u64) -> Self {
+        self.args.push((key, value));
+        self
+    }
+}
+
+fn push_escaped(out: &mut String, s: &str) {
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32));
+            }
+            c => out.push(c),
+        }
+    }
+}
+
+/// Streams Chrome trace events as a JSON array with bounded buffering.
+///
+/// The writer owns its sink; [`TraceWriter::finish`] (or `Drop`, as a
+/// best-effort fallback) closes the JSON array so the file is always
+/// loadable. Construction emits two `"M"` (metadata) events naming the
+/// lanes so perfetto shows "simulated time" / "wall clock" instead of
+/// bare pids.
+pub struct TraceWriter {
+    out: Box<dyn Write>,
+    buf: String,
+    events: u64,
+    finished: bool,
+}
+
+impl std::fmt::Debug for TraceWriter {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("TraceWriter")
+            .field("events", &self.events)
+            .field("buffered_bytes", &self.buf.len())
+            .field("finished", &self.finished)
+            .finish()
+    }
+}
+
+impl TraceWriter {
+    /// Buffered bytes beyond which the in-memory string is flushed to
+    /// the sink.
+    pub const FLUSH_BYTES: usize = 64 * 1024;
+
+    /// Stream to a file at `path` (buffered).
+    pub fn create(path: &Path) -> io::Result<Self> {
+        let f = File::create(path)?;
+        Ok(Self::to_writer(Box::new(BufWriter::new(f))))
+    }
+
+    /// Stream to an arbitrary sink (used by tests to capture in memory).
+    pub fn to_writer(out: Box<dyn Write>) -> Self {
+        let mut w = TraceWriter { out, buf: String::with_capacity(Self::FLUSH_BYTES + 1024), events: 0, finished: false };
+        w.buf.push('[');
+        w.meta_name("process_name", PID_SIM, 0, "simulated time (1 cycle = 1us)");
+        w.meta_name("process_name", PID_WALL, 0, "wall clock");
+        w
+    }
+
+    fn raw_begin(&mut self) {
+        if self.events == 0 {
+            self.buf.push('\n');
+        } else {
+            self.buf.push_str(",\n");
+        }
+        self.events += 1;
+    }
+
+    fn raw_end(&mut self) {
+        if self.buf.len() > Self::FLUSH_BYTES {
+            let _ = self.flush_buf();
+        }
+    }
+
+    fn flush_buf(&mut self) -> io::Result<()> {
+        if !self.buf.is_empty() {
+            self.out.write_all(self.buf.as_bytes())?;
+            self.buf.clear();
+        }
+        Ok(())
+    }
+
+    /// Emit a `"M"` metadata event (`process_name`, `thread_name`, …).
+    pub fn meta_name(&mut self, meta: &str, pid: u32, tid: u32, name: &str) {
+        self.raw_begin();
+        self.buf.push_str("{\"name\":\"");
+        push_escaped(&mut self.buf, meta);
+        self.buf.push_str("\",\"ph\":\"M\",\"pid\":");
+        self.buf.push_str(&pid.to_string());
+        self.buf.push_str(",\"tid\":");
+        self.buf.push_str(&tid.to_string());
+        self.buf.push_str(",\"args\":{\"name\":\"");
+        push_escaped(&mut self.buf, name);
+        self.buf.push_str("\"}}");
+        self.raw_end();
+    }
+
+    /// Name a wall-clock lane row (worker thread, phase row, …).
+    pub fn thread_name(&mut self, pid: u32, tid: u32, name: &str) {
+        self.meta_name("thread_name", pid, tid, name);
+    }
+
+    /// Serialize one complete span.
+    pub fn event(&mut self, ev: &TraceEvent) {
+        self.raw_begin();
+        self.buf.push_str("{\"name\":\"");
+        push_escaped(&mut self.buf, &ev.name);
+        self.buf.push_str("\",\"cat\":\"");
+        push_escaped(&mut self.buf, ev.cat);
+        self.buf.push_str("\",\"ph\":\"X\",\"pid\":");
+        self.buf.push_str(&ev.pid.to_string());
+        self.buf.push_str(",\"tid\":");
+        self.buf.push_str(&ev.tid.to_string());
+        self.buf.push_str(",\"ts\":");
+        self.buf.push_str(&ev.ts_us.to_string());
+        self.buf.push_str(",\"dur\":");
+        self.buf.push_str(&ev.dur_us.to_string());
+        if !ev.args.is_empty() {
+            self.buf.push_str(",\"args\":{");
+            for (i, (k, v)) in ev.args.iter().enumerate() {
+                if i > 0 {
+                    self.buf.push(',');
+                }
+                self.buf.push('"');
+                push_escaped(&mut self.buf, k);
+                self.buf.push_str("\":");
+                self.buf.push_str(&v.to_string());
+            }
+            self.buf.push('}');
+        }
+        self.buf.push('}');
+        self.raw_end();
+    }
+
+    /// Number of events emitted so far (metadata included).
+    pub fn events_written(&self) -> u64 {
+        self.events
+    }
+
+    /// Close the JSON array and flush the sink. Idempotent.
+    pub fn finish(&mut self) -> io::Result<()> {
+        if self.finished {
+            return Ok(());
+        }
+        self.finished = true;
+        self.buf.push_str("\n]\n");
+        self.flush_buf()?;
+        self.out.flush()
+    }
+}
+
+impl Drop for TraceWriter {
+    fn drop(&mut self) {
+        let _ = self.finish();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::cell::RefCell;
+    use std::rc::Rc;
+
+    /// `Write` adapter capturing output in a shared buffer.
+    struct SharedSink(Rc<RefCell<Vec<u8>>>);
+    impl Write for SharedSink {
+        fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+            self.0.borrow_mut().extend_from_slice(buf);
+            Ok(buf.len())
+        }
+        fn flush(&mut self) -> io::Result<()> {
+            Ok(())
+        }
+    }
+
+    fn capture() -> (TraceWriter, Rc<RefCell<Vec<u8>>>) {
+        let buf = Rc::new(RefCell::new(Vec::new()));
+        let w = TraceWriter::to_writer(Box::new(SharedSink(Rc::clone(&buf))));
+        (w, buf)
+    }
+
+    #[test]
+    fn emits_wellformed_array_with_metadata_and_spans() {
+        let (mut w, buf) = capture();
+        w.thread_name(PID_WALL, 3, "worker 2");
+        w.event(&TraceEvent::sim_span("kernel_0", "kernel", 0, 100, 50).arg("ctas", 4));
+        w.event(&TraceEvent::wall_span("barrier_wait", "pool", 3, 10, 7));
+        w.finish().unwrap();
+        let s = String::from_utf8(buf.borrow().clone()).unwrap();
+        assert!(s.starts_with('['), "opens a JSON array: {s}");
+        assert!(s.trim_end().ends_with(']'), "closes the JSON array: {s}");
+        assert!(s.contains("\"ph\":\"M\""), "metadata events present");
+        assert!(s.contains("\"name\":\"kernel_0\""));
+        assert!(s.contains("\"ts\":100"));
+        assert!(s.contains("\"dur\":50"));
+        assert!(s.contains("\"args\":{\"ctas\":4}"));
+        assert!(s.contains("\"name\":\"barrier_wait\""));
+        assert!(s.contains("\"name\":\"worker 2\""));
+        // no trailing comma before the closing bracket
+        assert!(!s.contains(",\n]"), "trailing comma: {s}");
+        // events: 2 construction metadata + 1 thread_name + 2 spans
+        assert_eq!(w.events_written(), 5);
+    }
+
+    #[test]
+    fn escapes_names() {
+        let (mut w, buf) = capture();
+        w.event(&TraceEvent::sim_span("k\"er\\nel\n", "kernel", 0, 0, 1));
+        w.finish().unwrap();
+        let s = String::from_utf8(buf.borrow().clone()).unwrap();
+        assert!(s.contains("k\\\"er\\\\nel\\n"), "escaped: {s}");
+    }
+
+    #[test]
+    fn streams_bounded_instead_of_accumulating() {
+        let (mut w, buf) = capture();
+        for i in 0..20_000u64 {
+            w.event(&TraceEvent::sim_span("ff", "fast_forward", 0, i, 1));
+        }
+        // long before finish(), most bytes must already be in the sink
+        assert!(
+            buf.borrow().len() > 100_000,
+            "writer accumulated instead of streaming ({} bytes flushed)",
+            buf.borrow().len()
+        );
+        assert!(w.buf.len() <= TraceWriter::FLUSH_BYTES + 1024, "in-memory buffer unbounded");
+        w.finish().unwrap();
+        let s = String::from_utf8(buf.borrow().clone()).unwrap();
+        assert!(s.trim_end().ends_with(']'));
+    }
+
+    #[test]
+    fn finish_is_idempotent_and_drop_closes() {
+        let (mut w, buf) = capture();
+        w.event(&TraceEvent::wall_span("seq_phase", "engine", 0, 0, 5));
+        w.finish().unwrap();
+        w.finish().unwrap();
+        drop(w);
+        let s = String::from_utf8(buf.borrow().clone()).unwrap();
+        assert_eq!(s.matches(']').count(), 1, "array closed exactly once: {s}");
+    }
+}

@@ -1,0 +1,218 @@
+//! Telemetry must be a pure observer: a fully-instrumented run (metrics
+//! registry + Chrome trace, both lanes) is **bit-identical** to a bare
+//! one — same statistics, same fingerprints, same mid-run checkpoint
+//! trail — across thread counts, schedules, and engines (single-GPU and
+//! cluster). Plus the end-to-end contracts of the trace file format and
+//! the divergence probe.
+
+use std::path::PathBuf;
+
+use parsim::config::{ClusterConfig, GpuConfig, Schedule};
+use parsim::engine::SessionFingerprint;
+use parsim::stats::diff::diff_runs;
+use parsim::stats::export::{metrics_jsonl, parse_flat_json};
+use parsim::telemetry::{diverge_probe, DivergeOutcome, TraceWriter};
+use parsim::trace::workloads::Scale;
+use parsim::{SimBuilder, SimSession};
+
+fn tmp(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("parsim_telemetry_{}_{tag}.json", std::process::id()))
+}
+
+fn builder(name: &str, threads: usize, schedule: Schedule) -> SimBuilder {
+    SimBuilder::new()
+        .gpu(GpuConfig::tiny())
+        .workload_named(name, Scale::Ci)
+        .threads(threads)
+        .schedule(schedule)
+}
+
+/// Run with all telemetry on (metrics + trace, dense sampling) and
+/// return the stats; the trace goes to a throwaway temp file.
+fn run_instrumented(name: &str, threads: usize, schedule: Schedule, tag: &str) -> parsim::GpuStats {
+    let path = tmp(tag);
+    let mut s = builder(name, threads, schedule)
+        .metrics(true)
+        .trace_writer(TraceWriter::create(&path).expect("create trace file"))
+        .trace_sample_every(4)
+        .build()
+        .expect("valid config");
+    s.run_to_completion().expect("run");
+    std::fs::remove_file(&path).ok();
+    s.into_stats().expect("finished")
+}
+
+fn run_bare(name: &str, threads: usize, schedule: Schedule) -> parsim::GpuStats {
+    let mut s = builder(name, threads, schedule).build().expect("valid config");
+    s.run_to_completion().expect("run");
+    s.into_stats().expect("finished")
+}
+
+/// The acceptance gate: telemetry on vs off, bit-identical statistics
+/// across threads {1, 4, 8} × both schedules.
+#[test]
+fn instrumented_runs_are_bit_identical_across_threads_and_schedules() {
+    for name in ["nn", "hotspot", "myocyte"] {
+        for threads in [1usize, 4, 8] {
+            for schedule in [Schedule::Static { chunk: 1 }, Schedule::Dynamic { chunk: 1 }] {
+                let bare = run_bare(name, threads, schedule);
+                let tag = format!("{name}_{threads}_{}", schedule.name());
+                let inst = run_instrumented(name, threads, schedule, &tag);
+                let d = diff_runs(&bare, &inst);
+                assert!(
+                    d.identical(),
+                    "{name} @{threads}t {}: telemetry perturbed results:\n{}",
+                    schedule.name(),
+                    d.report()
+                );
+                assert_eq!(bare.fingerprint(), inst.fingerprint(), "{name} fingerprint");
+            }
+        }
+    }
+}
+
+/// Same gate on the cluster engine: a 2-GPU tp_gemm run with the full
+/// instrumentation matches the bare run bit-for-bit.
+#[test]
+fn instrumented_cluster_run_is_bit_identical() {
+    let run = |instrumented: bool| {
+        let mut b = SimBuilder::new()
+            .gpu(GpuConfig::tiny())
+            .workload_named("tp_gemm", Scale::Ci)
+            .threads(4)
+            .cluster(ClusterConfig::p2p(2));
+        let path = tmp("cluster");
+        if instrumented {
+            b = b
+                .metrics(true)
+                .trace_writer(TraceWriter::create(&path).expect("create trace file"))
+                .trace_sample_every(4);
+        }
+        let mut s = b.build_cluster().expect("valid cluster config");
+        s.run_to_completion().expect("run");
+        std::fs::remove_file(&path).ok();
+        s.stats().expect("finished").fingerprint()
+    };
+    assert_eq!(run(false), run(true), "cluster telemetry perturbed the fingerprint");
+}
+
+/// Mid-run checkpoint trails (including the new per-component
+/// fingerprints) are identical with and without telemetry — observation
+/// cannot perturb even transient state.
+#[test]
+fn checkpoint_trail_is_identical_with_telemetry_on() {
+    let trail = |instrumented: bool| -> Vec<SessionFingerprint> {
+        let path = tmp("trail");
+        let mut b = builder("nn", 4, Schedule::Dynamic { chunk: 1 });
+        if instrumented {
+            b = b
+                .metrics(true)
+                .trace_writer(TraceWriter::create(&path).expect("create trace file"))
+                .trace_sample_every(2);
+        }
+        let mut s = b.build().expect("valid config");
+        let mut out = Vec::new();
+        for _ in 0..60 {
+            if s.is_finished() {
+                break;
+            }
+            s.step_cycle().expect("step");
+            out.push(s.checkpoint());
+        }
+        std::fs::remove_file(&path).ok();
+        out
+    };
+    let bare = trail(false);
+    let inst = trail(true);
+    assert_eq!(bare.len(), inst.len());
+    for (a, b) in bare.iter().zip(&inst) {
+        assert_eq!(a, b, "checkpoint diverged at cycle {}", a.cycle);
+        assert!(a.diff_components(b).is_empty());
+    }
+}
+
+/// The trace file contract: loadable JSON array, both lanes present,
+/// per-worker barrier-wait spans included (the pool instrumentation the
+/// wall-clock lane is built from).
+#[test]
+fn trace_file_is_valid_json_with_worker_barrier_spans() {
+    let path = tmp("shape");
+    let mut s = builder("myocyte", 4, Schedule::Static { chunk: 1 })
+        .trace_writer(TraceWriter::create(&path).expect("create trace file"))
+        .trace_sample_every(1)
+        .build()
+        .expect("valid config");
+    s.run_to_completion().expect("run");
+    assert!(s.trace_events_written() > 0, "no trace events emitted");
+    drop(s); // session drop closes the writer (finalize already did)
+    let text = std::fs::read_to_string(&path).expect("trace file readable");
+    std::fs::remove_file(&path).ok();
+    let t = text.trim();
+    assert!(t.starts_with('[') && t.ends_with(']'), "not a JSON array: {:.80}…", t);
+    assert_eq!(t.matches('{').count(), t.matches('}').count(), "unbalanced braces");
+    assert!(!t.contains(",\n]"), "trailing comma before close");
+    for needle in
+        ["\"ph\":\"M\"", "\"ph\":\"X\"", "barrier_wait", "busy", "parallel_fanout", "kernel"]
+    {
+        assert!(t.contains(needle), "trace lacks {needle:?}");
+    }
+}
+
+/// The metrics registry export: every line is flat JSON, and the core
+/// engine metrics are present after a finished run.
+#[test]
+fn metrics_snapshot_exports_parseable_jsonl() {
+    let mut s = builder("nn", 4, Schedule::Static { chunk: 1 })
+        .metrics(true)
+        .build()
+        .expect("valid config");
+    s.run_to_completion().expect("run");
+    let reg = s.metrics_snapshot().expect("metrics enabled");
+    let text = metrics_jsonl(s.gpu_cycle(), &reg);
+    let mut names = Vec::new();
+    for line in text.lines() {
+        let fields = parse_flat_json(line).expect("metric line is flat JSON");
+        let name = fields
+            .iter()
+            .find(|(k, _)| k == "metric")
+            .and_then(|(_, v)| v.as_str())
+            .expect("metric name");
+        names.push(name.to_string());
+    }
+    for expected in
+        ["engine.cycle", "engine.worklist_occupancy", "icnt.in_flight_depth", "icnt.delivered"]
+    {
+        assert!(names.iter().any(|n| n == expected), "missing metric {expected:?} in {names:?}");
+    }
+    // snapshots of the same state are byte-identical
+    let again = s.metrics_snapshot().expect("metrics enabled");
+    assert_eq!(text, metrics_jsonl(s.gpu_cycle(), &again));
+}
+
+/// End-to-end divergence probe: an artificial SM perturbation at cycle N
+/// is reported at exactly cycle N, component "sm"; identical configs
+/// report identical.
+#[test]
+fn diverge_probe_pins_cycle_and_component_end_to_end() {
+    let nn = |threads: usize| {
+        move || -> Result<SimSession, parsim::SimError> {
+            SimBuilder::new()
+                .gpu(GpuConfig::tiny())
+                .workload_named("nn", Scale::Ci)
+                .threads(threads)
+                .build()
+        }
+    };
+    match diverge_probe(nn(1), nn(4), 0, None).expect("probe runs") {
+        DivergeOutcome::Identical { cycles } => assert!(cycles > 0),
+        other => panic!("thread counts must not diverge: {other:?}"),
+    }
+    let target = 21;
+    match diverge_probe(nn(1), nn(4), 0, Some(target)).expect("probe runs") {
+        DivergeOutcome::Diverged(r) => {
+            assert_eq!(r.first_divergent_cycle, target, "wrong divergence cycle");
+            assert_eq!(r.components, vec!["sm"], "wrong component");
+        }
+        other => panic!("perturbed run must diverge: {other:?}"),
+    }
+}
