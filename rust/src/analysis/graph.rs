@@ -1,0 +1,428 @@
+//! Call-graph construction over the scanned tree, and reachability from
+//! the parallel-phase roots.
+//!
+//! Resolution is *typed where the tokens allow it* and conservatively
+//! name-based otherwise:
+//!
+//! * `self.m(…)` → the enclosing impl type's method `m`;
+//! * `self.f.m(…)` / `self.f[i].m(…)` → the field `f`'s scanned core
+//!   type (wrappers like `Vec<T>`/`Option<Arc<T>>` peeled) → `T::m`;
+//! * `A::m(…)` → type `A`'s method, or a free `m` in a module segment
+//!   named `A`;
+//! * bare `x.m(…)` / `m(…)` → if exactly one function named `m` exists
+//!   anywhere, that one; otherwise only candidates in the caller's
+//!   top-level module (this repository routes cross-module calls through
+//!   typed fields, so the unique-name case covers the rest — e.g. the
+//!   SM → `SharedLockedStats::record_issue` ablation path).
+//!
+//! Unresolvable names produce no edge: the graph is an
+//! under-approximation by construction, and the phase-safety rule
+//! compensates by also token-scanning every *reachable* body for
+//! interior-mutability escapes (`.lock(`, `.borrow_mut(`).
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use super::lexer::TokKind;
+use super::scan::{FileScan, FnInfo};
+
+/// The whole scanned tree: files plus cross-file indices.
+pub struct Model {
+    pub files: Vec<FileScan>,
+    /// Flattened functions: `(file index, fn)`.
+    pub fns: Vec<(usize, FnInfo)>,
+    /// Type name → defining file (root-relative path).
+    pub type_file: BTreeMap<String, String>,
+    /// Type name → field name → core type name.
+    pub type_fields: BTreeMap<String, BTreeMap<String, String>>,
+    /// Function name → indices into `fns`.
+    by_name: BTreeMap<String, Vec<usize>>,
+    /// `Type::name` / free-fn name → indices into `fns`.
+    by_key: BTreeMap<String, Vec<usize>>,
+}
+
+/// First path segment — the top-level module a file belongs to
+/// (`engine/pool.rs` → `engine`, `lib.rs` → `lib.rs`).
+pub fn top_module(path: &str) -> &str {
+    path.split('/').next().unwrap_or(path)
+}
+
+/// Ubiquitous std method names excluded from name-based fallback
+/// resolution (sorted; see [`Model::resolve_by_name`]).
+const STD_METHOD_NAMES: &[&str] = &[
+    "abs", "all", "and_then", "any", "append", "as_bytes", "as_micros", "as_millis",
+    "as_mut", "as_mut_slice", "as_nanos", "as_ref", "as_secs", "as_secs_f64", "as_slice",
+    "as_str", "back", "binary_search", "binary_search_by", "borrow", "borrow_mut",
+    "bytes", "chain", "chars", "checked_add", "checked_div", "checked_mul",
+    "checked_sub", "chunks", "clear", "clone", "clone_from_slice", "cloned", "cmp",
+    "collect", "compare_exchange", "compare_exchange_weak", "contains", "contains_key",
+    "copied", "copy_from_slice", "count", "count_ones", "dedup", "default", "deref",
+    "deref_mut", "drain", "drop", "elapsed", "ends_with", "entry", "enumerate", "eq",
+    "err", "expect", "extend", "fetch_add", "fetch_and", "fetch_or", "fetch_sub",
+    "fetch_xor", "fill", "filter", "filter_map", "find", "find_map", "first",
+    "flat_map", "flatten", "floor", "fmt", "fold", "from_be_bytes", "from_le_bytes",
+    "front", "get", "get_mut", "get_or_insert_with", "hash", "index", "insert",
+    "into_iter", "is_empty", "is_err", "is_none", "is_ok", "is_some", "iter",
+    "iter_mut", "join", "keys", "last", "leading_zeros", "len", "lines", "load",
+    "lock", "lt", "map", "map_err", "map_or", "max", "max_by_key", "min", "min_by_key",
+    "ne", "next", "ok", "ok_or", "or_else", "parse", "partition", "partition_point",
+    "pop", "pop_back", "pop_front", "position", "pow", "product", "push", "push_back",
+    "push_front", "read", "recv", "remove", "replace", "resize", "retain", "rev",
+    "rotate_left", "rotate_right", "round", "saturating_add", "saturating_mul",
+    "saturating_sub", "send", "skip", "skip_while", "sleep", "sort", "sort_by",
+    "sort_by_key", "sort_unstable", "sort_unstable_by", "spawn", "split", "split_at",
+    "split_at_mut", "sqrt", "starts_with", "store", "sum", "swap", "swap_remove",
+    "take", "take_while", "to_be_bytes", "to_le_bytes", "to_owned", "to_string",
+    "to_vec", "trailing_zeros", "trim", "truncate", "try_into", "unwrap", "unwrap_or",
+    "unwrap_or_default", "unwrap_or_else", "values", "values_mut", "windows",
+    "wrapping_add", "wrapping_mul", "wrapping_sub", "write", "zip",
+];
+
+impl Model {
+    pub fn build(files: Vec<FileScan>) -> Model {
+        let mut fns = Vec::new();
+        let mut type_file = BTreeMap::new();
+        let mut type_fields: BTreeMap<String, BTreeMap<String, String>> = BTreeMap::new();
+        for (fi, f) in files.iter().enumerate() {
+            for t in &f.types {
+                type_file.entry(t.name.clone()).or_insert_with(|| t.file.clone());
+                let entry = type_fields.entry(t.name.clone()).or_default();
+                for (fname, fty) in &t.fields {
+                    entry.entry(fname.clone()).or_insert_with(|| fty.clone());
+                }
+            }
+            for g in &f.fns {
+                fns.push((fi, g.clone()));
+            }
+        }
+        let mut by_name: BTreeMap<String, Vec<usize>> = BTreeMap::new();
+        let mut by_key: BTreeMap<String, Vec<usize>> = BTreeMap::new();
+        for (i, (_, g)) in fns.iter().enumerate() {
+            by_name.entry(g.name.clone()).or_default().push(i);
+            by_key.entry(g.key.clone()).or_default().push(i);
+        }
+        Model { files, fns, type_file, type_fields, by_name, by_key }
+    }
+
+    /// Resolve a root spec (`Type::method` or a bare function name) to
+    /// function indices.
+    pub fn resolve_spec(&self, spec: &str) -> Vec<usize> {
+        let spec = spec.trim();
+        if let Some(v) = self.by_key.get(spec) {
+            return v.clone();
+        }
+        // `module::fn` specs: match by final segment + module hint
+        if let Some((head, tail)) = spec.rsplit_once("::") {
+            if let Some(cands) = self.by_name.get(tail) {
+                let hinted: Vec<usize> = cands
+                    .iter()
+                    .copied()
+                    .filter(|&i| {
+                        let (fi, g) = &self.fns[i];
+                        g.impl_type.as_deref() == Some(head)
+                            || self.files[*fi].path.contains(head)
+                    })
+                    .collect();
+                if !hinted.is_empty() {
+                    return hinted;
+                }
+            }
+        }
+        self.by_name.get(spec).cloned().unwrap_or_default()
+    }
+
+    /// Name-based resolution for calls the tokens can't type: unique
+    /// name anywhere, else same-top-module candidates. Names that
+    /// collide with ubiquitous std methods are never name-resolved —
+    /// otherwise a single project fn called `len` would absorb every
+    /// `.len()` call in the tree and blow up reachability. (Typed
+    /// `by_key` hits are checked before this fallback, so such methods
+    /// are still reachable through `self.field.m(…)` chains.)
+    fn resolve_by_name(&self, name: &str, caller_file: &str) -> Vec<usize> {
+        if STD_METHOD_NAMES.contains(&name) {
+            return Vec::new();
+        }
+        let Some(cands) = self.by_name.get(name) else { return Vec::new() };
+        if cands.len() == 1 {
+            return cands.clone();
+        }
+        let top = top_module(caller_file);
+        cands
+            .iter()
+            .copied()
+            .filter(|&i| top_module(&self.files[self.fns[i].0].path) == top)
+            .collect()
+    }
+
+    fn resolve_method_of(&self, ty: &str, name: &str, caller_file: &str) -> Vec<usize> {
+        if let Some(v) = self.by_key.get(&format!("{ty}::{name}")) {
+            return v.clone();
+        }
+        self.resolve_by_name(name, caller_file)
+    }
+
+    /// Call edges out of function `idx` (deduplicated, sorted).
+    pub fn callees(&self, idx: usize) -> Vec<usize> {
+        let (fi, g) = &self.fns[idx];
+        let toks = &self.files[*fi].toks;
+        let file = self.files[*fi].path.clone();
+        let ctx = g.impl_type.as_deref();
+        let (start, end) = g.body;
+        let mut out: BTreeSet<usize> = BTreeSet::new();
+        let mut k = start;
+        while k + 1 < end.min(toks.len()) {
+            let t = &toks[k];
+            if t.kind != TokKind::Ident || !toks[k + 1].is_punct('(') {
+                k += 1;
+                continue;
+            }
+            let name = t.text.clone();
+            // skip nested `fn name(` definitions and keywords
+            if k > 0 && toks[k - 1].is_ident("fn") {
+                k += 1;
+                continue;
+            }
+            if matches!(name.as_str(), "if" | "while" | "for" | "match" | "return" | "fn") {
+                k += 1;
+                continue;
+            }
+            let resolved: Vec<usize> = if k > 0 && toks[k - 1].is_punct('.') {
+                // method call — inspect the receiver chain
+                self.resolve_receiver_chain(toks, start, k, ctx, &file, &name)
+            } else if k >= 2 && toks[k - 1].is_punct(':') && toks[k - 2].is_punct(':') {
+                // `Qual::name(` — qualified call
+                let qual =
+                    if k >= 3 && toks[k - 3].kind == TokKind::Ident {
+                        Some(toks[k - 3].text.clone())
+                    } else {
+                        None
+                    };
+                match qual.as_deref() {
+                    Some("Self") => match ctx {
+                        Some(c) => self.resolve_method_of(c, &name, &file),
+                        None => self.resolve_by_name(&name, &file),
+                    },
+                    Some(q) if self.type_file.contains_key(q) => {
+                        self.resolve_method_of(q, &name, &file)
+                    }
+                    Some(q) => {
+                        // module path: free fns whose file mentions the
+                        // segment (e.g. `functional::tile_coord`)
+                        let cands = self.by_name.get(&name).cloned().unwrap_or_default();
+                        cands
+                            .into_iter()
+                            .filter(|&i| {
+                                self.fns[i].1.impl_type.is_none()
+                                    && self.files[self.fns[i].0].path.contains(q)
+                            })
+                            .collect()
+                    }
+                    None => self.resolve_by_name(&name, &file),
+                }
+            } else {
+                // bare `name(` — free fn or same-impl helper
+                let mut v = match ctx {
+                    Some(c) => self
+                        .by_key
+                        .get(&format!("{c}::{name}"))
+                        .cloned()
+                        .unwrap_or_default(),
+                    None => Vec::new(),
+                };
+                if v.is_empty() {
+                    v = self.resolve_by_name(&name, &file);
+                }
+                v
+            };
+            out.extend(resolved);
+            k += 1;
+        }
+        // never self-loop (harmless but noisy)
+        out.remove(&idx);
+        out.into_iter().collect()
+    }
+
+    /// Resolve the receiver of `… . name (` where `name` is at token
+    /// index `k` and `k - 1` is the `.`.
+    fn resolve_receiver_chain(
+        &self,
+        toks: &[crate::analysis::lexer::Tok],
+        body_start: usize,
+        k: usize,
+        ctx: Option<&str>,
+        file: &str,
+        name: &str,
+    ) -> Vec<usize> {
+        let before = k.wrapping_sub(2);
+        if before >= toks.len() || k < 2 || before < body_start.saturating_sub(1) {
+            return self.resolve_by_name(name, file);
+        }
+        let recv = &toks[before];
+        // `self.name(`
+        if recv.is_ident("self") {
+            if let Some(c) = ctx {
+                let direct = self.by_key.get(&format!("{c}::{name}"));
+                if let Some(v) = direct {
+                    return v.clone();
+                }
+            }
+            return self.resolve_by_name(name, file);
+        }
+        // `self.field.name(`
+        if recv.kind == TokKind::Ident
+            && k >= 4
+            && toks[k - 3].is_punct('.')
+            && toks[k - 4].is_ident("self")
+        {
+            if let Some(c) = ctx {
+                if let Some(fty) =
+                    self.type_fields.get(c).and_then(|m| m.get(&recv.text))
+                {
+                    if !fty.is_empty() {
+                        return self.resolve_method_of(fty, name, file);
+                    }
+                }
+            }
+            return self.resolve_by_name(name, file);
+        }
+        // `self.field[idx].name(` — walk back over the index expression
+        if recv.is_punct(']') {
+            let mut j = before;
+            let mut depth = 0i32;
+            while j > body_start {
+                if toks[j].is_punct(']') {
+                    depth += 1;
+                } else if toks[j].is_punct('[') {
+                    depth -= 1;
+                    if depth == 0 {
+                        break;
+                    }
+                }
+                j -= 1;
+            }
+            if j >= 3
+                && toks[j - 1].kind == TokKind::Ident
+                && toks[j - 2].is_punct('.')
+                && toks[j - 3].is_ident("self")
+            {
+                if let Some(c) = ctx {
+                    if let Some(fty) =
+                        self.type_fields.get(c).and_then(|m| m.get(&toks[j - 1].text))
+                    {
+                        if !fty.is_empty() {
+                            return self.resolve_method_of(fty, name, file);
+                        }
+                    }
+                }
+            }
+            return self.resolve_by_name(name, file);
+        }
+        // local variable / chained call — fall back to names
+        self.resolve_by_name(name, file)
+    }
+
+    /// Everything reachable from `roots` (inclusive), as fn indices.
+    pub fn reachable(&self, roots: &[usize]) -> BTreeSet<usize> {
+        let mut seen: BTreeSet<usize> = BTreeSet::new();
+        let mut work: Vec<usize> = roots.to_vec();
+        while let Some(i) = work.pop() {
+            if !seen.insert(i) {
+                continue;
+            }
+            for c in self.callees(i) {
+                if !seen.contains(&c) {
+                    work.push(c);
+                }
+            }
+        }
+        seen
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::lexer::lex;
+    use crate::analysis::scan::scan_file;
+
+    fn model(files: &[(&str, &str)]) -> Model {
+        Model::build(
+            files.iter().map(|(p, src)| scan_file(p, lex(src))).collect(),
+        )
+    }
+
+    fn key_of(m: &Model, i: usize) -> String {
+        m.fns[i].1.key.clone()
+    }
+
+    #[test]
+    fn typed_field_calls_resolve_cross_module() {
+        let m = model(&[
+            (
+                "core/mod.rs",
+                "pub struct Sm { ldst: LdstUnit } \
+                 impl Sm { pub fn cycle(&mut self) { self.ldst.cycle(1); } }",
+            ),
+            (
+                "mem/mod.rs",
+                "pub struct LdstUnit { x: u64 } \
+                 impl LdstUnit { pub fn cycle(&mut self, n: u64) { self.x += n; } }",
+            ),
+        ]);
+        let root = m.resolve_spec("Sm::cycle");
+        assert_eq!(root.len(), 1);
+        let reach: Vec<String> =
+            m.reachable(&root).into_iter().map(|i| key_of(&m, i)).collect();
+        assert!(reach.contains(&"LdstUnit::cycle".to_string()), "{reach:?}");
+    }
+
+    #[test]
+    fn unique_names_resolve_anywhere_ambiguous_stay_in_module() {
+        let m = model(&[
+            (
+                "core/mod.rs",
+                "impl Sm { fn go(&mut self, s: &Stats) { s.record_issue(1); helper(); } } \
+                 struct Sm { x: u64 } fn helper() {}",
+            ),
+            (
+                "stats/mod.rs",
+                "pub struct Stats { n: u64 } \
+                 impl Stats { pub fn record_issue(&self, n: u64) {} } fn helper() {}",
+            ),
+        ]);
+        let root = m.resolve_spec("Sm::go");
+        let reach: Vec<String> =
+            m.reachable(&root).into_iter().map(|i| key_of(&m, i)).collect();
+        // record_issue is globally unique → resolves cross-module
+        assert!(reach.contains(&"Stats::record_issue".to_string()), "{reach:?}");
+        // helper is ambiguous → only the caller's module candidate
+        let helpers: Vec<&String> =
+            reach.iter().filter(|k| k.as_str() == "helper").collect();
+        assert_eq!(helpers.len(), 1, "{reach:?}");
+    }
+
+    #[test]
+    fn indexed_field_calls_use_element_type() {
+        let m = model(&[(
+            "core/mod.rs",
+            "struct Sm { warps: Vec<WarpState> } struct WarpState { pc: u64 } \
+             impl WarpState { fn step(&mut self) { self.pc += 1; } } \
+             impl Sm { fn cycle(&mut self, w: usize) { self.warps[w + 1].step(); } }",
+        )]);
+        let reach: Vec<String> = m
+            .reachable(&m.resolve_spec("Sm::cycle"))
+            .into_iter()
+            .map(|i| key_of(&m, i))
+            .collect();
+        assert!(reach.contains(&"WarpState::step".to_string()), "{reach:?}");
+    }
+
+    #[test]
+    fn unresolvable_calls_add_no_edges() {
+        let m = model(&[(
+            "a/mod.rs",
+            "impl A { fn f(&self) { unknown_external(); x.mystery(); } } struct A {}",
+        )]);
+        let reach = m.reachable(&m.resolve_spec("A::f"));
+        assert_eq!(reach.len(), 1);
+    }
+}

@@ -1,0 +1,344 @@
+//! A minimal, dependency-free Rust lexer — just enough fidelity for
+//! `detlint`'s token-pattern rules and item scanning.
+//!
+//! The lexer produces a flat token stream (identifiers, punctuation,
+//! literals, lifetimes) plus a separate comment list (waivers and
+//! parallel-region annotations live in comments). It handles the
+//! constructs that would otherwise corrupt a naive scan:
+//!
+//! * nested block comments (`/* /* */ */`),
+//! * string literals with escapes, byte strings, and raw strings
+//!   (`r"…"`, `r#"…"#`, arbitrary `#` depth),
+//! * char literals vs lifetimes (`'a'` vs `'a`),
+//! * numeric literals with embedded `.` (without eating `0..n` ranges).
+//!
+//! Everything is tagged with a 1-based source line so findings and
+//! waivers can be matched up precisely.
+
+/// Token classes `detlint` distinguishes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TokKind {
+    /// Identifiers *and* keywords (`fn`, `impl`, `unsafe`, …).
+    Ident,
+    /// One punctuation character.
+    Punct,
+    /// String / char / byte / numeric literal (verbatim text).
+    Literal,
+    /// `'name` lifetime.
+    Lifetime,
+}
+
+/// One lexical token with its 1-based source line.
+#[derive(Debug, Clone)]
+pub struct Tok {
+    pub kind: TokKind,
+    pub text: String,
+    pub line: u32,
+}
+
+impl Tok {
+    pub fn is_ident(&self, s: &str) -> bool {
+        self.kind == TokKind::Ident && self.text == s
+    }
+    pub fn is_punct(&self, c: char) -> bool {
+        self.kind == TokKind::Punct && self.text.len() == 1 && self.text.starts_with(c)
+    }
+}
+
+/// A comment (line or block) with the line it starts on; text includes
+/// the delimiters.
+#[derive(Debug, Clone)]
+pub struct Comment {
+    pub line: u32,
+    pub text: String,
+}
+
+/// Lexer output: the token stream and the comment side-channel.
+#[derive(Debug, Default)]
+pub struct Lexed {
+    pub toks: Vec<Tok>,
+    pub comments: Vec<Comment>,
+}
+
+fn is_ident_start(c: char) -> bool {
+    c.is_ascii_alphabetic() || c == '_'
+}
+
+fn is_ident_char(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+/// Lex `src` into tokens + comments. Never fails: unrecognized bytes
+/// become single-character punctuation, and unterminated literals run
+/// to end-of-file (the rules degrade gracefully on malformed input).
+pub fn lex(src: &str) -> Lexed {
+    let b: Vec<char> = src.chars().collect();
+    let n = b.len();
+    let mut out = Lexed::default();
+    let mut i = 0usize;
+    let mut line = 1u32;
+
+    macro_rules! push_tok {
+        ($kind:expr, $text:expr, $line:expr) => {
+            out.toks.push(Tok { kind: $kind, text: $text, line: $line })
+        };
+    }
+
+    while i < n {
+        let c = b[i];
+        if c == '\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c.is_whitespace() {
+            i += 1;
+            continue;
+        }
+        // ---- comments ----
+        if c == '/' && i + 1 < n && b[i + 1] == '/' {
+            let start = i;
+            let start_line = line;
+            while i < n && b[i] != '\n' {
+                i += 1;
+            }
+            out.comments
+                .push(Comment { line: start_line, text: b[start..i].iter().collect() });
+            continue;
+        }
+        if c == '/' && i + 1 < n && b[i + 1] == '*' {
+            let start = i;
+            let start_line = line;
+            let mut depth = 1u32;
+            i += 2;
+            while i < n && depth > 0 {
+                if b[i] == '/' && i + 1 < n && b[i + 1] == '*' {
+                    depth += 1;
+                    i += 2;
+                } else if b[i] == '*' && i + 1 < n && b[i + 1] == '/' {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    if b[i] == '\n' {
+                        line += 1;
+                    }
+                    i += 1;
+                }
+            }
+            out.comments
+                .push(Comment { line: start_line, text: b[start..i].iter().collect() });
+            continue;
+        }
+        // ---- raw strings: r"…", r#"…"#, br"…" ----
+        if (c == 'r' || c == 'b')
+            && i + 1 < n
+            && (b[i + 1] == '"' || b[i + 1] == '#' || (c == 'b' && b[i + 1] == 'r'))
+        {
+            let start = i;
+            let start_line = line;
+            let mut j = i + 1;
+            if c == 'b' && j < n && b[j] == 'r' {
+                j += 1;
+            }
+            let mut hashes = 0usize;
+            while j < n && b[j] == '#' {
+                hashes += 1;
+                j += 1;
+            }
+            if j < n && b[j] == '"' {
+                j += 1;
+                // scan for `"` followed by `hashes` of `#`
+                loop {
+                    if j >= n {
+                        break;
+                    }
+                    if b[j] == '\n' {
+                        line += 1;
+                        j += 1;
+                        continue;
+                    }
+                    if b[j] == '"' {
+                        let mut k = j + 1;
+                        let mut got = 0usize;
+                        while k < n && got < hashes && b[k] == '#' {
+                            got += 1;
+                            k += 1;
+                        }
+                        if got == hashes {
+                            j = k;
+                            break;
+                        }
+                    }
+                    j += 1;
+                }
+                push_tok!(TokKind::Literal, b[start..j].iter().collect(), start_line);
+                i = j;
+                continue;
+            }
+            // not actually a raw/byte string (e.g. `r#ident`): fall
+            // through to the identifier path below
+        }
+        // ---- plain and byte strings ----
+        if c == '"' || (c == 'b' && i + 1 < n && b[i + 1] == '"') {
+            let start = i;
+            let start_line = line;
+            if c == 'b' {
+                i += 1;
+            }
+            i += 1; // opening quote
+            while i < n {
+                if b[i] == '\\' {
+                    i += 2;
+                    continue;
+                }
+                if b[i] == '\n' {
+                    line += 1;
+                }
+                if b[i] == '"' {
+                    i += 1;
+                    break;
+                }
+                i += 1;
+            }
+            push_tok!(TokKind::Literal, b[start..i.min(n)].iter().collect(), start_line);
+            continue;
+        }
+        // ---- char literal vs lifetime ----
+        if c == '\'' {
+            let start = i;
+            if i + 1 < n && b[i + 1] == '\\' {
+                // escaped char literal: '\n', '\'', '\u{..}'
+                i += 2;
+                while i < n && b[i] != '\'' {
+                    i += 1;
+                }
+                i = (i + 1).min(n);
+                push_tok!(TokKind::Literal, b[start..i].iter().collect(), line);
+                continue;
+            }
+            if i + 1 < n && is_ident_start(b[i + 1]) {
+                let mut j = i + 1;
+                while j < n && is_ident_char(b[j]) {
+                    j += 1;
+                }
+                if j < n && b[j] == '\'' && j == i + 2 {
+                    // 'x' — single-char literal
+                    push_tok!(TokKind::Literal, b[start..j + 1].iter().collect(), line);
+                    i = j + 1;
+                } else {
+                    // 'name — lifetime
+                    push_tok!(TokKind::Lifetime, b[start..j].iter().collect(), line);
+                    i = j;
+                }
+                continue;
+            }
+            if i + 2 < n && b[i + 2] == '\'' {
+                // non-alphabetic char literal: '+', ' '
+                push_tok!(TokKind::Literal, b[start..i + 3].iter().collect(), line);
+                i += 3;
+                continue;
+            }
+            push_tok!(TokKind::Punct, "'".to_string(), line);
+            i += 1;
+            continue;
+        }
+        // ---- numbers ----
+        if c.is_ascii_digit() {
+            let start = i;
+            while i < n && (is_ident_char(b[i])) {
+                i += 1;
+            }
+            // fractional part — but never eat `..` ranges
+            if i + 1 < n && b[i] == '.' && b[i + 1].is_ascii_digit() {
+                i += 1;
+                while i < n && is_ident_char(b[i]) {
+                    i += 1;
+                }
+            }
+            push_tok!(TokKind::Literal, b[start..i].iter().collect(), line);
+            continue;
+        }
+        // ---- identifiers / keywords ----
+        if is_ident_start(c) {
+            let start = i;
+            while i < n && is_ident_char(b[i]) {
+                i += 1;
+            }
+            push_tok!(TokKind::Ident, b[start..i].iter().collect(), line);
+            continue;
+        }
+        // ---- punctuation ----
+        push_tok!(TokKind::Punct, c.to_string(), line);
+        i += 1;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idents(src: &str) -> Vec<String> {
+        lex(src)
+            .toks
+            .into_iter()
+            .filter(|t| t.kind == TokKind::Ident)
+            .map(|t| t.text)
+            .collect()
+    }
+
+    #[test]
+    fn nested_block_comments_are_one_comment() {
+        let l = lex("a /* x /* y */ z */ b");
+        assert_eq!(idents("a /* x /* y */ z */ b"), ["a", "b"]);
+        assert_eq!(l.comments.len(), 1);
+    }
+
+    #[test]
+    fn raw_strings_swallow_quotes_and_hashes() {
+        let l = lex(r##"let s = r#"has "quotes" inside"#; next"##);
+        assert!(l.toks.iter().any(|t| t.is_ident("next")));
+        assert!(!l.toks.iter().any(|t| t.is_ident("quotes")));
+    }
+
+    #[test]
+    fn lifetimes_vs_char_literals() {
+        let l = lex("fn f<'a>(x: &'a str) { let c = 'x'; let nl = '\\n'; }");
+        let lifetimes: Vec<_> =
+            l.toks.iter().filter(|t| t.kind == TokKind::Lifetime).collect();
+        assert_eq!(lifetimes.len(), 2, "{lifetimes:?}");
+        assert!(l
+            .toks
+            .iter()
+            .any(|t| t.kind == TokKind::Literal && t.text == "'x'"));
+    }
+
+    #[test]
+    fn numeric_ranges_stay_split() {
+        let l = lex("for i in 0..10 {}");
+        let lits: Vec<_> = l
+            .toks
+            .iter()
+            .filter(|t| t.kind == TokKind::Literal)
+            .map(|t| t.text.clone())
+            .collect();
+        assert_eq!(lits, ["0", "10"]);
+    }
+
+    #[test]
+    fn line_numbers_track_comments_and_strings() {
+        let src = "a\n/* two\nlines */\nb \"str\nwith nl\"\nc";
+        let l = lex(src);
+        let a = l.toks.iter().find(|t| t.is_ident("a")).unwrap();
+        let b = l.toks.iter().find(|t| t.is_ident("b")).unwrap();
+        let c = l.toks.iter().find(|t| t.is_ident("c")).unwrap();
+        assert_eq!((a.line, b.line, c.line), (1, 4, 6));
+        assert_eq!(l.comments[0].line, 2);
+    }
+
+    #[test]
+    fn waiver_comments_are_captured_verbatim() {
+        let l = lex("// detlint: allow(relaxed-ordering): telemetry counter\nlet x = 1;");
+        assert!(l.comments[0].text.contains("detlint: allow(relaxed-ordering)"));
+    }
+}

@@ -1,0 +1,367 @@
+//! `detlint` — the determinism auditor.
+//!
+//! A dependency-free static analyzer that mechanically checks the
+//! invariants the paper's zero-inaccuracy claim rests on: the parallel
+//! SM fan-out must touch only SM-local state, every `unsafe` must carry
+//! a written audit, relaxed atomics are confined to the pool's
+//! documented sites, and nothing on a deterministic path may consult a
+//! hash order, a wall clock, or the environment.
+//!
+//! Pipeline: [`lexer`] tokenizes each file (comments kept as a side
+//! channel for waivers), [`scan`] extracts items/impls/fns/fields and a
+//! `#[cfg(test)]` mask, [`graph`] builds a typed call graph and computes
+//! reachability from the annotated parallel-region roots, and [`rules`]
+//! emits findings with inline waivers resolved.
+//!
+//! Run it with `cargo run --bin detlint` (exit 0 = clean, 1 = findings,
+//! `--json` for machine-readable output). Every waiver in the tree must
+//! carry a written justification — an empty reason is itself a finding.
+
+pub mod graph;
+pub mod lexer;
+pub mod rules;
+pub mod scan;
+
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+pub use rules::{Finding, Rule};
+
+/// The result of analyzing a tree.
+#[derive(Debug)]
+pub struct Report {
+    /// All findings, waived and not, sorted by `(file, line, rule, message)`.
+    pub findings: Vec<Finding>,
+    /// Number of `.rs` files scanned.
+    pub files_scanned: usize,
+    /// The resolved parallel-root specs (sorted, deduplicated).
+    pub roots: Vec<String>,
+}
+
+impl Report {
+    /// Findings not covered by a waiver — the ones that fail the build.
+    pub fn unwaivered(&self) -> Vec<&Finding> {
+        self.findings.iter().filter(|f| !f.waived).collect()
+    }
+
+    /// Human-readable report: sorted `file:line [rule] message` lines,
+    /// waived findings listed separately with their justification.
+    pub fn render_text(&self) -> String {
+        let mut out = String::new();
+        let active = self.unwaivered();
+        for f in &active {
+            out.push_str(&format!(
+                "{}:{} [{}] {}\n",
+                f.file,
+                f.line,
+                f.rule.name(),
+                f.message
+            ));
+        }
+        let waived: Vec<&Finding> = self.findings.iter().filter(|f| f.waived).collect();
+        out.push_str(&format!(
+            "detlint: {} file(s), {} root spec(s), {} finding(s), {} waived\n",
+            self.files_scanned,
+            self.roots.len(),
+            active.len(),
+            waived.len()
+        ));
+        for f in waived {
+            out.push_str(&format!(
+                "  waived {}:{} [{}] — {}\n",
+                f.file,
+                f.line,
+                f.rule.name(),
+                f.waiver_reason.as_deref().unwrap_or("")
+            ));
+        }
+        out
+    }
+
+    /// Machine-readable report (hand-rolled JSON; key order is fixed so
+    /// the artifact is byte-stable across runs).
+    pub fn render_json(&self) -> String {
+        let mut out = String::from("{\n");
+        out.push_str(&format!("  \"files_scanned\": {},\n", self.files_scanned));
+        out.push_str("  \"roots\": [");
+        for (i, r) in self.roots.iter().enumerate() {
+            if i > 0 {
+                out.push_str(", ");
+            }
+            out.push_str(&json_str(r));
+        }
+        out.push_str("],\n");
+        out.push_str("  \"findings\": [\n");
+        for (i, f) in self.findings.iter().enumerate() {
+            out.push_str("    {");
+            out.push_str(&format!("\"file\": {}, ", json_str(&f.file)));
+            out.push_str(&format!("\"line\": {}, ", f.line));
+            out.push_str(&format!("\"rule\": {}, ", json_str(f.rule.name())));
+            out.push_str(&format!("\"message\": {}, ", json_str(&f.message)));
+            out.push_str(&format!("\"waived\": {}", f.waived));
+            if let Some(r) = &f.waiver_reason {
+                out.push_str(&format!(", \"reason\": {}", json_str(r)));
+            }
+            out.push('}');
+            if i + 1 < self.findings.len() {
+                out.push(',');
+            }
+            out.push('\n');
+        }
+        out.push_str("  ]\n}\n");
+        out
+    }
+}
+
+fn json_str(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+/// Recursively collect `.rs` files under `dir`, sorted by path for
+/// deterministic file indices and output order.
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> io::Result<()> {
+    let mut entries: Vec<PathBuf> =
+        fs::read_dir(dir)?.filter_map(|e| e.ok().map(|e| e.path())).collect();
+    entries.sort();
+    for p in entries {
+        if p.is_dir() {
+            collect_rs(&p, out)?;
+        } else if p.extension().map(|e| e == "rs").unwrap_or(false) {
+            out.push(p);
+        }
+    }
+    Ok(())
+}
+
+/// Analyze sources in memory: `(root-relative path, source)` pairs.
+/// This is the core entry point; [`analyze_path`] wraps it with file IO.
+pub fn analyze_sources(sources: &[(String, String)]) -> Report {
+    let files: Vec<scan::FileScan> = sources
+        .iter()
+        .map(|(p, src)| scan::scan_file(p, lexer::lex(src)))
+        .collect();
+    let files_scanned = files.len();
+    let model = graph::Model::build(files);
+    let (mut findings, roots) = rules::run_rules(&model);
+    findings.sort_by(|a, b| {
+        (a.file.as_str(), a.line, a.rule, a.message.as_str())
+            .cmp(&(b.file.as_str(), b.line, b.rule, b.message.as_str()))
+    });
+    Report { findings, files_scanned, roots }
+}
+
+/// Analyze a directory tree (or a single `.rs` file). Paths in findings
+/// are relative to `root`.
+pub fn analyze_path(root: &Path) -> io::Result<Report> {
+    let mut paths = Vec::new();
+    if root.is_file() {
+        paths.push(root.to_path_buf());
+    } else {
+        collect_rs(root, &mut paths)?;
+    }
+    let mut sources = Vec::with_capacity(paths.len());
+    for p in &paths {
+        let rel = p
+            .strip_prefix(root)
+            .unwrap_or(p)
+            .to_string_lossy()
+            .replace('\\', "/");
+        let rel = if rel.is_empty() {
+            p.file_name().map(|n| n.to_string_lossy().into_owned()).unwrap_or_default()
+        } else {
+            rel
+        };
+        sources.push((rel, fs::read_to_string(p)?));
+    }
+    Ok(analyze_sources(&sources))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn report(files: &[(&str, &str)]) -> Report {
+        analyze_sources(
+            &files
+                .iter()
+                .map(|(p, s)| (p.to_string(), s.to_string()))
+                .collect::<Vec<_>>(),
+        )
+    }
+
+    #[test]
+    fn parallel_shared_write_is_flagged() {
+        let r = report(&[(
+            "engine/worker.rs",
+            "pub struct Shared { total: u64 }\n\
+             impl Shared { pub fn bump(&mut self) { self.total += 1; } }\n\
+             pub struct Worker { shared: Shared }\n\
+             impl Worker {\n\
+                 // detlint: parallel-root\n\
+                 pub fn step(&mut self) { self.shared.bump(); }\n\
+             }\n",
+        )]);
+        let active = r.unwaivered();
+        assert!(
+            active
+                .iter()
+                .any(|f| f.rule == Rule::ParallelMut && f.message.contains("Shared::bump")),
+            "{}",
+            r.render_text()
+        );
+    }
+
+    #[test]
+    fn waived_findings_do_not_fail() {
+        let r = report(&[(
+            "engine/x.rs",
+            "// detlint: allow(nondet-source): build-id only, never feeds sim state\n\
+             use std::collections::HashMap;\n",
+        )]);
+        assert!(r.unwaivered().is_empty(), "{}", r.render_text());
+        assert_eq!(r.findings.len(), 1);
+        assert!(r.findings[0].waived);
+    }
+
+    #[test]
+    fn empty_waiver_reason_is_a_finding() {
+        let r = report(&[(
+            "engine/x.rs",
+            "// detlint: allow(nondet-source):\n\
+             use std::collections::HashMap;\n",
+        )]);
+        assert!(
+            r.unwaivered().iter().any(|f| f.rule == Rule::BadWaiver),
+            "{}",
+            r.render_text()
+        );
+    }
+
+    #[test]
+    fn fn_scope_waiver_covers_whole_body() {
+        let r = report(&[(
+            "engine/x.rs",
+            "struct T { x: u64 }\n\
+             impl T {\n\
+                 // detlint: allow(nondet-source, fn): wall-clock telemetry only\n\
+                 fn f(&self) {\n\
+                     let a = std::time::Instant::now();\n\
+                     let b = std::time::Instant::now();\n\
+                 }\n\
+             }\n",
+        )]);
+        assert!(r.unwaivered().is_empty(), "{}", r.render_text());
+        assert_eq!(r.findings.iter().filter(|f| f.waived).count(), 2);
+    }
+
+    #[test]
+    fn unsafe_rules_split_on_allowlist_and_safety_comment() {
+        let r = report(&[
+            ("engine/other.rs", "fn f() { unsafe { core::hint::unreachable_unchecked() } }\n"),
+            (
+                "engine/pool.rs",
+                "// SAFETY: slot is uniquely owned by this worker.\n\
+                 fn g() { unsafe { do_thing() } }\n\
+                 fn h() { unsafe { do_thing() } }\n",
+            ),
+        ]);
+        let active = r.unwaivered();
+        assert!(active.iter().any(|f| {
+            f.rule == Rule::UnauditedUnsafe && f.file == "engine/other.rs"
+        }));
+        // g has a SAFETY comment nearby; h is > 8 lines? no — h is within
+        // 8 lines of the comment too, so neither pool site fires here.
+        assert!(
+            !active.iter().any(|f| f.file == "engine/pool.rs"),
+            "{}",
+            r.render_text()
+        );
+    }
+
+    #[test]
+    fn relaxed_outside_pool_is_flagged() {
+        let r = report(&[(
+            "engine/x.rs",
+            "fn f(a: &std::sync::atomic::AtomicU64) { a.load(std::sync::atomic::Ordering::Relaxed); }\n",
+        )]);
+        assert!(r.unwaivered().iter().any(|f| f.rule == Rule::RelaxedOrdering));
+    }
+
+    #[test]
+    fn parallel_region_needs_roots_annotation() {
+        let bad = report(&[(
+            "engine/x.rs",
+            "fn f(pool: &mut P) { pool.parallel_for(n, s, |i| work(i)); }\n",
+        )]);
+        assert!(bad.unwaivered().iter().any(|f| f.rule == Rule::ParallelRegion));
+
+        let good = report(&[(
+            "engine/x.rs",
+            "struct Sm { x: u64 }\n\
+             impl Sm { fn cycle(&mut self) { self.x += 1; } }\n\
+             fn f(pool: &mut P) {\n\
+                 // detlint: parallel-region roots=[Sm::cycle]\n\
+                 pool.parallel_for(n, s, |i| work(i));\n\
+             }\n",
+        )]);
+        assert!(good.unwaivered().is_empty(), "{}", good.render_text());
+        assert_eq!(good.roots, ["Sm::cycle"]);
+    }
+
+    #[test]
+    fn nondet_sources_exempt_host_side_paths() {
+        let r = report(&[
+            ("profiler/mod.rs", "fn f() { let t = std::time::Instant::now(); }\n"),
+            ("bin/tool.rs", "use std::collections::HashMap;\n"),
+            ("engine/x.rs", "fn f() { let v = std::env::var(\"SEED\"); }\n"),
+        ]);
+        let active = r.unwaivered();
+        assert_eq!(active.len(), 1, "{}", r.render_text());
+        assert_eq!(active[0].file, "engine/x.rs");
+        assert_eq!(active[0].rule, Rule::NondetSource);
+    }
+
+    #[test]
+    fn test_code_is_masked() {
+        let r = report(&[(
+            "engine/x.rs",
+            "fn f() {}\n\
+             #[cfg(test)]\n\
+             mod tests {\n\
+                 use std::collections::HashMap;\n\
+                 #[test] fn t() { let i = std::time::Instant::now(); }\n\
+             }\n",
+        )]);
+        assert!(r.unwaivered().is_empty(), "{}", r.render_text());
+    }
+
+    #[test]
+    fn output_is_sorted_and_json_escapes() {
+        let r = report(&[
+            ("b/x.rs", "use std::collections::HashSet;\n"),
+            ("a/x.rs", "use std::collections::HashMap;\nuse std::collections::HashSet;\n"),
+        ]);
+        let files: Vec<&str> = r.findings.iter().map(|f| f.file.as_str()).collect();
+        let mut sorted = files.clone();
+        sorted.sort();
+        assert_eq!(files, sorted);
+        assert_eq!(json_str("a\"b\\c\n"), "\"a\\\"b\\\\c\\n\"");
+        let j = r.render_json();
+        assert!(j.contains("\"rule\": \"nondet-source\""), "{j}");
+    }
+}

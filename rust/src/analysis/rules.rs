@@ -1,0 +1,546 @@
+//! The `detlint` rule set: phase safety via the call graph, plus token
+//! rules for `unsafe`, `Ordering::Relaxed`, and nondeterminism sources.
+//!
+//! Every rule can be waived inline by writing `allow(<rule>): <reason>`
+//! after the `detlint` marker in a comment on the offending line or in
+//! the comment block directly above it; `allow(<rule>, fn)` in the
+//! comment block above a `fn` waives the whole function body. A waiver
+//! with an empty reason is itself a finding (`bad-waiver`) — exceptions
+//! must be written down.
+//!
+//! Parallel-phase roots are declared at the fan-out call sites with a
+//! `parallel-region roots=[Type::method, …]` annotation after the same
+//! marker (or waived for regions whose closure provably owns disjoint
+//! data); fixture code can mark a function directly with a
+//! `parallel-root` annotation.
+//!
+//! (This module's own docs spell the marker indirectly on purpose: any
+//! comment containing the marker-plus-colon is parsed as a directive,
+//! including here.)
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use super::graph::{top_module, Model};
+use super::lexer::TokKind;
+use super::scan::Receiver;
+
+/// Rule identifiers (kebab-case, as used in waivers and JSON output).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Rule {
+    /// Mutation of non-SM-local state reachable from a parallel root.
+    ParallelMut,
+    /// `unsafe` outside the audited-module allowlist (or inside it but
+    /// missing a nearby `SAFETY:` comment).
+    UnauditedUnsafe,
+    /// `Ordering::Relaxed` outside the pool's documented allowlist.
+    RelaxedOrdering,
+    /// Nondeterminism source on a deterministic path: hash-ordered
+    /// collections, wall clocks, environment reads.
+    NondetSource,
+    /// `parallel_for` fan-out without a declared root set.
+    ParallelRegion,
+    /// A waiver with no written justification.
+    BadWaiver,
+}
+
+impl Rule {
+    pub fn name(self) -> &'static str {
+        match self {
+            Rule::ParallelMut => "parallel-mut",
+            Rule::UnauditedUnsafe => "unaudited-unsafe",
+            Rule::RelaxedOrdering => "relaxed-ordering",
+            Rule::NondetSource => "nondet-source",
+            Rule::ParallelRegion => "parallel-region",
+            Rule::BadWaiver => "bad-waiver",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Rule> {
+        Some(match s {
+            "parallel-mut" => Rule::ParallelMut,
+            "unaudited-unsafe" => Rule::UnauditedUnsafe,
+            "relaxed-ordering" => Rule::RelaxedOrdering,
+            "nondet-source" => Rule::NondetSource,
+            "parallel-region" => Rule::ParallelRegion,
+            "bad-waiver" => Rule::BadWaiver,
+            _ => return None,
+        })
+    }
+}
+
+/// One reported defect (possibly waived).
+#[derive(Debug, Clone)]
+pub struct Finding {
+    pub rule: Rule,
+    /// Root-relative path.
+    pub file: String,
+    pub line: u32,
+    pub message: String,
+    /// Set when an inline waiver covers this finding.
+    pub waived: bool,
+    pub waiver_reason: Option<String>,
+}
+
+/// Modules whose `unsafe` has a standing audit (the `DisjointSlice`
+/// erasure, the pool's type-erased job slot, the campaign result slots,
+/// and the SM's kernel pointer). `unsafe` here still requires a nearby
+/// `SAFETY:` comment; `unsafe` anywhere else requires a waiver.
+pub const UNSAFE_AUDITED: &[&str] = &[
+    "engine/pool.rs",
+    "engine/mod.rs",
+    "cluster/mod.rs",
+    "core/mod.rs",
+    "campaign/scheduler.rs",
+];
+
+/// Files whose `Ordering::Relaxed` uses are covered by a documented
+/// memory-ordering audit (the pool's module docs walk every site).
+pub const RELAXED_ALLOWED: &[&str] = &["engine/pool.rs"];
+
+/// Top-level modules whose types are SM-local by construction: each SM
+/// owns its own instances (`core`), or the type is per-SM plain data
+/// (`stats` counters/sets — shared-stats escapes are caught separately
+/// through the `.lock(` scan), per-SM caches (`mem`), read-only kernel
+/// descriptors (`trace`), or pure helpers (`util`).
+pub const SM_LOCAL_MODULES: &[&str] = &["core", "mem", "stats", "trace", "util"];
+
+/// Path fragments exempt from the nondeterminism-source rule: host-side
+/// observability and drivers, where wall clocks and env reads are the
+/// point. The engine/stats/export paths are *not* here — their clock
+/// reads each carry a written waiver.
+const NONDET_EXEMPT: &[&str] = &[
+    "bin/", "profiler", "harness", "telemetry", "campaign", "cli", "analysis", "runtime",
+    "main.rs", "engine/pool.rs",
+];
+
+/// Inline directives parsed from comments.
+#[derive(Debug, Clone)]
+enum Directive {
+    Allow { rule: Rule, fn_scope: bool, reason: String },
+    Roots { specs: Vec<String> },
+    Root,
+    /// `allow(...)` with an unknown rule name or missing reason.
+    Malformed { detail: String },
+}
+
+/// Per-file directive/comment index.
+struct FileCtx {
+    /// Every line covered by a comment.
+    comment_lines: BTreeSet<u32>,
+    /// Lines of comments that contain a safety justification.
+    safety_lines: BTreeSet<u32>,
+    /// Directives by starting line.
+    directives: BTreeMap<u32, Vec<Directive>>,
+}
+
+fn parse_comment_directives(line0: u32, text: &str, out: &mut BTreeMap<u32, Vec<Directive>>) {
+    for (off, l) in text.lines().enumerate() {
+        let Some(pos) = l.find("detlint:") else { continue };
+        let rest = l[pos + "detlint:".len()..].trim_start();
+        let line = line0 + off as u32;
+        let d = if let Some(body) = rest.strip_prefix("allow(") {
+            match body.split_once(')') {
+                Some((inside, tail)) => {
+                    let mut parts = inside.split(',').map(|s| s.trim());
+                    let rule_name = parts.next().unwrap_or("");
+                    let fn_scope = parts.any(|p| p == "fn");
+                    let reason = tail
+                        .trim_start()
+                        .strip_prefix(':')
+                        .map(|r| r.trim().trim_end_matches("*/").trim().to_string())
+                        .unwrap_or_default();
+                    match Rule::from_name(rule_name) {
+                        Some(rule) if !reason.is_empty() => {
+                            Directive::Allow { rule, fn_scope, reason }
+                        }
+                        Some(_) => Directive::Malformed {
+                            detail: format!("waiver for `{rule_name}` has no reason"),
+                        },
+                        None => Directive::Malformed {
+                            detail: format!("unknown rule `{rule_name}` in waiver"),
+                        },
+                    }
+                }
+                None => Directive::Malformed { detail: "unclosed allow(".into() },
+            }
+        } else if rest.starts_with("parallel-region") {
+            match rest.find("roots=[").and_then(|s| {
+                let after = &rest[s + "roots=[".len()..];
+                after.find(']').map(|e| &after[..e])
+            }) {
+                Some(list) => Directive::Roots {
+                    specs: list
+                        .split(',')
+                        .map(|s| s.trim().to_string())
+                        .filter(|s| !s.is_empty())
+                        .collect(),
+                },
+                None => Directive::Malformed {
+                    detail: "parallel-region annotation without roots=[…]".into(),
+                },
+            }
+        } else if rest.starts_with("parallel-root") {
+            Directive::Root
+        } else {
+            Directive::Malformed { detail: format!("unrecognized directive `{rest}`") }
+        };
+        out.entry(line).or_default().push(d);
+    }
+}
+
+fn build_ctx(file: &super::scan::FileScan) -> FileCtx {
+    let mut comment_lines = BTreeSet::new();
+    let mut safety_lines = BTreeSet::new();
+    let mut directives = BTreeMap::new();
+    for c in &file.comments {
+        let span = c.text.lines().count().max(1) as u32;
+        for l in c.line..c.line + span {
+            comment_lines.insert(l);
+        }
+        let lower = c.text.to_lowercase();
+        if lower.contains("safety") {
+            for l in c.line..c.line + span {
+                safety_lines.insert(l);
+            }
+        }
+        parse_comment_directives(c.line, &c.text, &mut directives);
+    }
+    FileCtx { comment_lines, safety_lines, directives }
+}
+
+impl FileCtx {
+    /// Directives attached to `line`: on the line itself, or anywhere in
+    /// the contiguous comment block that ends on `line - 1`.
+    fn attached(&self, line: u32) -> Vec<&Directive> {
+        let mut out = Vec::new();
+        if let Some(ds) = self.directives.get(&line) {
+            out.extend(ds.iter());
+        }
+        let mut l = line.saturating_sub(1);
+        while l > 0 && self.comment_lines.contains(&l) {
+            if let Some(ds) = self.directives.get(&l) {
+                out.extend(ds.iter());
+            }
+            l -= 1;
+        }
+        out
+    }
+
+    fn line_waiver(&self, rule: Rule, line: u32) -> Option<String> {
+        for d in self.attached(line) {
+            if let Directive::Allow { rule: r, fn_scope: false, reason } = d {
+                if *r == rule {
+                    return Some(reason.clone());
+                }
+            }
+        }
+        None
+    }
+
+    fn has_safety_near(&self, line: u32, window: u32) -> bool {
+        (line.saturating_sub(window)..=line).any(|l| self.safety_lines.contains(&l))
+    }
+}
+
+/// Fn-scope waivers of one file: `(rule, start line, end line, reason)`.
+type FnWaivers = Vec<(Rule, u32, u32, String)>;
+
+fn nondet_exempt(path: &str) -> bool {
+    NONDET_EXEMPT.iter().any(|frag| path.contains(frag))
+}
+
+/// Run every rule over the model; returns findings with waivers already
+/// resolved (sorted by the caller).
+pub fn run_rules(model: &Model) -> (Vec<Finding>, Vec<String>) {
+    let ctxs: Vec<FileCtx> = model.files.iter().map(build_ctx).collect();
+
+    // fn-scope waivers + explicit `parallel-root` markers
+    let mut fn_waivers: Vec<FnWaivers> = Vec::with_capacity(model.files.len());
+    let mut root_specs: Vec<String> = Vec::new();
+    let mut root_idxs: BTreeSet<usize> = BTreeSet::new();
+    for (fi, file) in model.files.iter().enumerate() {
+        let mut fw: FnWaivers = Vec::new();
+        for g in &file.fns {
+            let end_line = if g.body.1 > g.body.0 {
+                file.toks
+                    .get(g.body.1.saturating_sub(1))
+                    .map(|t| t.line)
+                    .unwrap_or(g.line)
+            } else {
+                g.line
+            };
+            for d in ctxs[fi].attached(g.line) {
+                match d {
+                    Directive::Allow { rule, fn_scope: true, reason } => {
+                        fw.push((*rule, g.line, end_line, reason.clone()));
+                    }
+                    Directive::Root => {
+                        root_specs.push(g.key.clone());
+                    }
+                    _ => {}
+                }
+            }
+        }
+        fn_waivers.push(fw);
+    }
+
+    let mut raw: Vec<Finding> = Vec::new();
+    let mut push = |rule: Rule, file: &str, line: u32, message: String| {
+        raw.push(Finding {
+            rule,
+            file: file.to_string(),
+            line,
+            message,
+            waived: false,
+            waiver_reason: None,
+        });
+    };
+
+    // ---- parallel-region: every fan-out must declare its roots ----
+    for (fi, file) in model.files.iter().enumerate() {
+        let toks = &file.toks;
+        for k in 1..toks.len() {
+            if file.test_mask[k] {
+                continue;
+            }
+            let t = &toks[k];
+            if !(t.kind == TokKind::Ident && t.text == "parallel_for") {
+                continue;
+            }
+            if !toks[k - 1].is_punct('.') {
+                continue; // definition or docs, not a call site
+            }
+            let line = t.line;
+            let mut roots_here = Vec::new();
+            for d in ctxs[fi].attached(line) {
+                if let Directive::Roots { specs } = d {
+                    roots_here.extend(specs.iter().cloned());
+                }
+            }
+            if roots_here.is_empty() {
+                push(
+                    Rule::ParallelRegion,
+                    &file.path,
+                    line,
+                    "parallel_for fan-out without a `detlint: parallel-region \
+                     roots=[…]` annotation — the phase-safety analysis cannot see \
+                     inside this region"
+                        .to_string(),
+                );
+            } else {
+                for spec in roots_here {
+                    let resolved = model.resolve_spec(&spec);
+                    if resolved.is_empty() {
+                        push(
+                            Rule::ParallelRegion,
+                            &file.path,
+                            line,
+                            format!("declared parallel root `{spec}` does not resolve"),
+                        );
+                    }
+                    root_specs.push(spec);
+                    root_idxs.extend(resolved);
+                }
+            }
+        }
+    }
+    for spec in &root_specs {
+        root_idxs.extend(model.resolve_spec(spec));
+    }
+
+    // ---- parallel-mut: the reachability rule ----
+    let reach = model.reachable(&root_idxs.iter().copied().collect::<Vec<_>>());
+    for &idx in &reach {
+        let (fi, g) = &model.fns[idx];
+        let file = &model.files[*fi];
+        if file.test_mask.get(g.body.0).copied().unwrap_or(false) {
+            continue;
+        }
+        // receiver check (the root itself is handed exclusive data by
+        // the region's DisjointSlice — its callees are the audit target)
+        if g.receiver == Receiver::RefMutSelf && !root_idxs.contains(&idx) {
+            if let Some(ty) = &g.impl_type {
+                let local = model
+                    .type_file
+                    .get(ty)
+                    .map(|p| SM_LOCAL_MODULES.contains(&top_module(p)))
+                    .unwrap_or(false);
+                if !local {
+                    push(
+                        Rule::ParallelMut,
+                        &file.path,
+                        g.line,
+                        format!(
+                            "`{}` takes `&mut self` on `{ty}` (not SM-local) and is \
+                             reachable from a parallel-phase root",
+                            g.key
+                        ),
+                    );
+                }
+            }
+        }
+        // interior-mutability escape: lock/borrow inside the fan-out
+        let toks = &file.toks;
+        let (bs, be) = g.body;
+        let mut k = bs;
+        while k + 2 < be.min(toks.len()) {
+            if toks[k].is_punct('.')
+                && toks[k + 1].kind == TokKind::Ident
+                && (toks[k + 1].text == "lock" || toks[k + 1].text == "borrow_mut")
+                && toks[k + 2].is_punct('(')
+            {
+                push(
+                    Rule::ParallelMut,
+                    &file.path,
+                    toks[k + 1].line,
+                    format!(
+                        "`{}` acquires a `.{}()` while reachable from a \
+                         parallel-phase root (shared mutable state in the fan-out)",
+                        g.key,
+                        toks[k + 1].text
+                    ),
+                );
+            }
+            k += 1;
+        }
+    }
+
+    // ---- unaudited-unsafe / relaxed-ordering / nondet-source ----
+    for (fi, file) in model.files.iter().enumerate() {
+        let audited = UNSAFE_AUDITED.iter().any(|p| file.path.ends_with(p));
+        let relaxed_ok = RELAXED_ALLOWED.iter().any(|p| file.path.ends_with(p));
+        let det_path = !nondet_exempt(&file.path);
+        let toks = &file.toks;
+        for k in 0..toks.len() {
+            if file.test_mask[k] {
+                continue;
+            }
+            let t = &toks[k];
+            if t.kind != TokKind::Ident {
+                continue;
+            }
+            match t.text.as_str() {
+                "unsafe" => {
+                    if !audited {
+                        push(
+                            Rule::UnauditedUnsafe,
+                            &file.path,
+                            t.line,
+                            "`unsafe` outside the audited-module allowlist".to_string(),
+                        );
+                    } else if !ctxs[fi].has_safety_near(t.line, 8) {
+                        push(
+                            Rule::UnauditedUnsafe,
+                            &file.path,
+                            t.line,
+                            "`unsafe` in an audited module but with no SAFETY \
+                             comment within 8 lines"
+                                .to_string(),
+                        );
+                    }
+                }
+                "Relaxed" if !relaxed_ok => {
+                    push(
+                        Rule::RelaxedOrdering,
+                        &file.path,
+                        t.line,
+                        "`Ordering::Relaxed` outside the pool's documented \
+                         memory-ordering allowlist (engine/pool.rs)"
+                            .to_string(),
+                    );
+                }
+                "HashMap" | "HashSet" | "RandomState" if det_path => {
+                    push(
+                        Rule::NondetSource,
+                        &file.path,
+                        t.line,
+                        format!(
+                            "`{}` on a deterministic path: iteration order is not \
+                             defined — use BTreeMap/BTreeSet or justify the hasher",
+                            t.text
+                        ),
+                    );
+                }
+                "Instant" if det_path => {
+                    if k + 2 < toks.len()
+                        && toks[k + 1].is_punct(':')
+                        && toks[k + 2].is_punct(':')
+                        && toks.get(k + 3).map(|n| n.is_ident("now")).unwrap_or(false)
+                    {
+                        push(
+                            Rule::NondetSource,
+                            &file.path,
+                            t.line,
+                            "`Instant::now` on a deterministic path — wall clocks \
+                             must never feed simulated state"
+                                .to_string(),
+                        );
+                    }
+                }
+                "SystemTime" if det_path => {
+                    push(
+                        Rule::NondetSource,
+                        &file.path,
+                        t.line,
+                        "`SystemTime` on a deterministic path".to_string(),
+                    );
+                }
+                "env" if det_path => {
+                    if k + 3 < toks.len()
+                        && toks[k + 1].is_punct(':')
+                        && toks[k + 2].is_punct(':')
+                        && (toks[k + 3].is_ident("var") || toks[k + 3].is_ident("var_os"))
+                    {
+                        push(
+                            Rule::NondetSource,
+                            &file.path,
+                            t.line,
+                            "environment read on a deterministic path — host env \
+                             must not influence simulated state"
+                                .to_string(),
+                        );
+                    }
+                }
+                _ => {}
+            }
+        }
+        // malformed directives are findings wherever they appear
+        for (line, ds) in &ctxs[fi].directives {
+            for d in ds {
+                if let Directive::Malformed { detail } = d {
+                    push(Rule::BadWaiver, &file.path, *line, detail.clone());
+                }
+            }
+        }
+    }
+
+    // ---- resolve waivers ----
+    let path_to_idx: BTreeMap<&str, usize> = model
+        .files
+        .iter()
+        .enumerate()
+        .map(|(i, f)| (f.path.as_str(), i))
+        .collect();
+    for f in &mut raw {
+        if f.rule == Rule::BadWaiver {
+            continue; // a bad waiver cannot waive itself
+        }
+        let Some(&fi) = path_to_idx.get(f.file.as_str()) else { continue };
+        if let Some(reason) = ctxs[fi].line_waiver(f.rule, f.line) {
+            f.waived = true;
+            f.waiver_reason = Some(reason);
+            continue;
+        }
+        for (rule, start, end, reason) in &fn_waivers[fi] {
+            if *rule == f.rule && f.line >= *start && f.line <= *end {
+                f.waived = true;
+                f.waiver_reason = Some(reason.clone());
+                break;
+            }
+        }
+    }
+
+    root_specs.sort();
+    root_specs.dedup();
+    (raw, root_specs)
+}

@@ -1,0 +1,582 @@
+//! Item scanner: walks a lexed token stream and extracts the structure
+//! `detlint` needs — struct fields (name → core type), `impl` blocks
+//! (type → methods, receiver kinds, body token ranges), free functions,
+//! and a per-token "inside `#[cfg(test)] mod`" mask so test code is
+//! exempt from the production-path rules.
+//!
+//! This is not a parser for all of Rust; it is a structural scanner that
+//! is *conservative on the constructs this repository uses* (plus the
+//! fixture corpus). Unknown constructs are skipped by balanced-delimiter
+//! matching, never mis-attributed.
+
+use super::lexer::{Comment, Lexed, Tok, TokKind};
+
+/// How a method takes `self`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Receiver {
+    /// Free function (no `self`).
+    None,
+    /// `&self`
+    RefSelf,
+    /// `&mut self`
+    RefMutSelf,
+    /// `self` / `mut self`
+    OwnSelf,
+}
+
+/// One function or method.
+#[derive(Debug, Clone)]
+pub struct FnInfo {
+    /// `Type::name` for methods, `name` for free functions.
+    pub key: String,
+    pub name: String,
+    /// Impl type, if a method (also set inside `trait` blocks).
+    pub impl_type: Option<String>,
+    /// Root-relative path of the defining file.
+    pub file: String,
+    /// Line of the `fn` keyword.
+    pub line: u32,
+    pub receiver: Receiver,
+    /// Token index range `[start, end)` of the braced body (empty for
+    /// bodyless trait declarations).
+    pub body: (usize, usize),
+}
+
+/// One struct definition: name plus `field → core type` pairs (wrapper
+/// types like `Vec<T>`, `Option<Arc<T>>`, `&mut T` are peeled down to
+/// `T`).
+#[derive(Debug, Clone)]
+pub struct TypeInfo {
+    pub name: String,
+    pub file: String,
+    pub fields: Vec<(String, String)>,
+}
+
+/// Scan result for one file.
+#[derive(Debug)]
+pub struct FileScan {
+    /// Root-relative path, `/`-separated.
+    pub path: String,
+    pub toks: Vec<Tok>,
+    pub comments: Vec<Comment>,
+    pub fns: Vec<FnInfo>,
+    pub types: Vec<TypeInfo>,
+    /// Per-token: true when the token sits inside a `#[cfg(test)] mod`
+    /// (or a `mod tests`) — exempt from every production-path rule.
+    pub test_mask: Vec<bool>,
+}
+
+/// Wrapper types peeled when reducing a field type to its core name.
+const WRAPPERS: &[&str] = &[
+    "Vec", "VecDeque", "Box", "Arc", "Rc", "Option", "RefCell", "Cell", "Mutex", "RwLock",
+    "BinaryHeap", "ManuallyDrop",
+];
+
+struct Scanner<'a> {
+    toks: &'a [Tok],
+    fns: Vec<FnInfo>,
+    types: Vec<TypeInfo>,
+    test_mask: Vec<bool>,
+    file: String,
+}
+
+impl<'a> Scanner<'a> {
+    /// Index of the token after the `close` that balances an `open`
+    /// already consumed at `pos - 1`.
+    fn skip_balanced(&self, mut pos: usize, open: char, close: char) -> usize {
+        let mut depth = 1i32;
+        while pos < self.toks.len() && depth > 0 {
+            let t = &self.toks[pos];
+            if t.is_punct(open) {
+                depth += 1;
+            } else if t.is_punct(close) {
+                depth -= 1;
+            }
+            pos += 1;
+        }
+        pos
+    }
+
+    /// Skip one attribute starting at `#` (returns index after `]`) and
+    /// report whether its tokens mention `test`.
+    fn skip_attr(&self, pos: usize) -> (usize, bool) {
+        // pos points at `#`; `#![…]` inner attributes too
+        let mut p = pos + 1;
+        if p < self.toks.len() && self.toks[p].is_punct('!') {
+            p += 1;
+        }
+        if p < self.toks.len() && self.toks[p].is_punct('[') {
+            let end = self.skip_balanced(p + 1, '[', ']');
+            let is_test = self.toks[p + 1..end.saturating_sub(1)]
+                .iter()
+                .any(|t| t.kind == TokKind::Ident && t.text == "test");
+            (end, is_test)
+        } else {
+            (pos + 1, false)
+        }
+    }
+
+    /// Reduce a field-type token slice to its core type name.
+    fn core_type(&self, ty: &[Tok]) -> String {
+        // drop leading refs, raw-pointer sigils, lifetimes, mutability
+        let mut s = 0usize;
+        while s < ty.len() {
+            let t = &ty[s];
+            let skip = t.is_punct('&')
+                || t.is_punct('*')
+                || t.kind == TokKind::Lifetime
+                || t.is_ident("mut")
+                || t.is_ident("const")
+                || t.is_ident("dyn");
+            if !skip {
+                break;
+            }
+            s += 1;
+        }
+        let ty = &ty[s..];
+        if ty.is_empty() {
+            return String::new();
+        }
+        if ty[0].is_punct('[') {
+            // [T; N] / [T] — recurse on the element type
+            let inner_end = ty
+                .iter()
+                .position(|t| t.is_punct(';') || t.is_punct(']'))
+                .unwrap_or(ty.len());
+            return self.core_type(&ty[1..inner_end]);
+        }
+        // leading path: idents separated by `::`
+        let mut last = String::new();
+        let mut i = 0usize;
+        while i < ty.len() && ty[i].kind == TokKind::Ident {
+            last = ty[i].text.clone();
+            if i + 2 < ty.len() && ty[i + 1].is_punct(':') && ty[i + 2].is_punct(':') {
+                i += 3;
+            } else {
+                i += 1;
+                break;
+            }
+        }
+        if WRAPPERS.contains(&last.as_str()) && i < ty.len() && ty[i].is_punct('<') {
+            // first generic argument, at angle depth 1
+            let mut depth = 1i32;
+            let mut j = i + 1;
+            let start = j;
+            while j < ty.len() && depth > 0 {
+                let t = &ty[j];
+                if t.is_punct('<') {
+                    depth += 1;
+                } else if t.is_punct('>') {
+                    depth -= 1;
+                } else if t.is_punct(',') && depth == 1 {
+                    break;
+                }
+                j += 1;
+            }
+            let end = if j > start && ty[j - 1].is_punct('>') { j - 1 } else { j };
+            return self.core_type(&ty[start..end]);
+        }
+        last
+    }
+
+    /// Parse a struct body `{ … }` starting after the `{` at `pos`;
+    /// returns index after the closing `}`.
+    fn parse_struct_fields(&mut self, name: &str, mut pos: usize) -> usize {
+        let mut fields: Vec<(String, String)> = Vec::new();
+        loop {
+            if pos >= self.toks.len() || self.toks[pos].is_punct('}') {
+                pos += 1;
+                break;
+            }
+            // attributes and visibility before the field name
+            if self.toks[pos].is_punct('#') {
+                let (p, _) = self.skip_attr(pos);
+                pos = p;
+                continue;
+            }
+            if self.toks[pos].is_ident("pub") {
+                pos += 1;
+                if pos < self.toks.len() && self.toks[pos].is_punct('(') {
+                    pos = self.skip_balanced(pos + 1, '(', ')');
+                }
+                continue;
+            }
+            if self.toks[pos].kind == TokKind::Ident
+                && pos + 1 < self.toks.len()
+                && self.toks[pos + 1].is_punct(':')
+                && !(pos + 2 < self.toks.len() && self.toks[pos + 2].is_punct(':'))
+            {
+                let fname = self.toks[pos].text.clone();
+                // type runs to the `,` or `}` at all-zero delimiter depth
+                let mut j = pos + 2;
+                let (mut ang, mut par, mut brk) = (0i32, 0i32, 0i32);
+                let ty_start = j;
+                while j < self.toks.len() {
+                    let t = &self.toks[j];
+                    if t.is_punct('<') {
+                        ang += 1;
+                    } else if t.is_punct('>') {
+                        ang -= 1;
+                    } else if t.is_punct('(') {
+                        par += 1;
+                    } else if t.is_punct(')') {
+                        par -= 1;
+                    } else if t.is_punct('[') {
+                        brk += 1;
+                    } else if t.is_punct(']') {
+                        brk -= 1;
+                    } else if (t.is_punct(',') || t.is_punct('}'))
+                        && ang <= 0
+                        && par == 0
+                        && brk == 0
+                    {
+                        break;
+                    }
+                    j += 1;
+                }
+                let core = {
+                    let ty: Vec<Tok> = self.toks[ty_start..j].to_vec();
+                    self.core_type(&ty)
+                };
+                fields.push((fname, core));
+                pos = j;
+                if pos < self.toks.len() && self.toks[pos].is_punct(',') {
+                    pos += 1;
+                }
+                continue;
+            }
+            pos += 1;
+        }
+        self.types.push(TypeInfo {
+            name: name.to_string(),
+            file: self.file.clone(),
+            fields,
+        });
+        pos
+    }
+
+    /// Parse a `fn` at `pos` (index of the `fn` token); returns index
+    /// after the body (or the `;`).
+    fn parse_fn(&mut self, pos: usize, impl_type: Option<&str>) -> usize {
+        let line = self.toks[pos].line;
+        let mut p = pos + 1;
+        if p >= self.toks.len() || self.toks[p].kind != TokKind::Ident {
+            return p;
+        }
+        let name = self.toks[p].text.clone();
+        p += 1;
+        // generics on the fn itself
+        if p < self.toks.len() && self.toks[p].is_punct('<') {
+            p = self.skip_balanced(p + 1, '<', '>');
+        }
+        if p >= self.toks.len() || !self.toks[p].is_punct('(') {
+            return p;
+        }
+        let params_start = p + 1;
+        let params_end = self.skip_balanced(p + 1, '(', ')');
+        // receiver: look at the first few parameter tokens
+        let mut receiver = Receiver::None;
+        {
+            let ps = &self.toks[params_start..params_end.saturating_sub(1)];
+            let mut q = 0usize;
+            let mut saw_amp = false;
+            let mut saw_mut = false;
+            while q < ps.len() && q < 4 {
+                let t = &ps[q];
+                if t.is_punct('&') {
+                    saw_amp = true;
+                } else if t.kind == TokKind::Lifetime {
+                    // &'a self
+                } else if t.is_ident("mut") {
+                    saw_mut = true;
+                } else if t.is_ident("self") {
+                    receiver = if saw_amp {
+                        if saw_mut {
+                            Receiver::RefMutSelf
+                        } else {
+                            Receiver::RefSelf
+                        }
+                    } else {
+                        Receiver::OwnSelf
+                    };
+                    break;
+                } else {
+                    break;
+                }
+                q += 1;
+            }
+        }
+        // find the body `{` (or `;` for a bodyless declaration)
+        let mut q = params_end;
+        while q < self.toks.len() {
+            let t = &self.toks[q];
+            if t.is_punct('{') {
+                break;
+            }
+            if t.is_punct(';') {
+                // trait method declaration — record with an empty body
+                self.push_fn(name, impl_type, line, receiver, (q, q));
+                return q + 1;
+            }
+            q += 1;
+        }
+        if q >= self.toks.len() {
+            return q;
+        }
+        let body_start = q + 1;
+        let body_end = self.skip_balanced(body_start, '{', '}');
+        self.push_fn(name, impl_type, line, receiver, (body_start, body_end.saturating_sub(1)));
+        body_end
+    }
+
+    fn push_fn(
+        &mut self,
+        name: String,
+        impl_type: Option<&str>,
+        line: u32,
+        receiver: Receiver,
+        body: (usize, usize),
+    ) {
+        let key = match impl_type {
+            Some(t) => format!("{t}::{name}"),
+            None => name.clone(),
+        };
+        self.fns.push(FnInfo {
+            key,
+            name,
+            impl_type: impl_type.map(|s| s.to_string()),
+            file: self.file.clone(),
+            line,
+            receiver,
+            body,
+        });
+    }
+
+    /// Item-level scan of `[pos, end)`; `impl_type` is set inside an
+    /// `impl`/`trait` block.
+    fn scan_items(&mut self, mut pos: usize, end: usize, impl_type: Option<&str>) {
+        let mut last_attr_was_test = false;
+        while pos < end.min(self.toks.len()) {
+            let t = &self.toks[pos];
+            if t.is_punct('#') {
+                let (p, is_test) = self.skip_attr(pos);
+                last_attr_was_test = last_attr_was_test || is_test;
+                pos = p;
+                continue;
+            }
+            if t.is_ident("mod") {
+                let name =
+                    self.toks.get(pos + 1).map(|t| t.text.clone()).unwrap_or_default();
+                let mut p = pos + 2;
+                if p < self.toks.len() && self.toks[p].is_punct(';') {
+                    pos = p + 1;
+                    last_attr_was_test = false;
+                    continue;
+                }
+                // find `{`
+                while p < self.toks.len() && !self.toks[p].is_punct('{') {
+                    p += 1;
+                }
+                let body_start = p + 1;
+                let body_end = self.skip_balanced(body_start, '{', '}');
+                if last_attr_was_test || name == "tests" {
+                    for m in &mut self.test_mask[body_start.min(self.test_mask.len())
+                        ..body_end.min(self.test_mask.len())]
+                    {
+                        *m = true;
+                    }
+                } else {
+                    self.scan_items(body_start, body_end.saturating_sub(1), None);
+                }
+                pos = body_end;
+                last_attr_was_test = false;
+                continue;
+            }
+            if t.is_ident("struct") {
+                let name =
+                    self.toks.get(pos + 1).map(|t| t.text.clone()).unwrap_or_default();
+                let mut p = pos + 2;
+                if p < self.toks.len() && self.toks[p].is_punct('<') {
+                    p = self.skip_balanced(p + 1, '<', '>');
+                }
+                if p < self.toks.len() && self.toks[p].is_punct('{') {
+                    pos = self.parse_struct_fields(&name, p + 1);
+                } else {
+                    // tuple / unit struct: record without fields
+                    self.types.push(TypeInfo {
+                        name,
+                        file: self.file.clone(),
+                        fields: Vec::new(),
+                    });
+                    while p < self.toks.len() && !self.toks[p].is_punct(';') {
+                        if self.toks[p].is_punct('(') {
+                            p = self.skip_balanced(p + 1, '(', ')');
+                            continue;
+                        }
+                        if self.toks[p].is_punct('{') {
+                            p = self.skip_balanced(p + 1, '{', '}');
+                            break;
+                        }
+                        p += 1;
+                    }
+                    pos = p + 1;
+                }
+                last_attr_was_test = false;
+                continue;
+            }
+            if t.is_ident("impl") || t.is_ident("trait") {
+                let is_trait = t.is_ident("trait");
+                let mut p = pos + 1;
+                if p < self.toks.len() && self.toks[p].is_punct('<') {
+                    p = self.skip_balanced(p + 1, '<', '>');
+                }
+                // walk the header up to `{`, tracking the last path-ish
+                // ident before `for` and after it (for a `trait`, the
+                // name is the *first* ident — supertrait bounds follow)
+                let mut first_ident: Option<String> = None;
+                let mut before_for: Option<String> = None;
+                let mut after_for: Option<String> = None;
+                let mut seen_for = false;
+                while p < self.toks.len() && !self.toks[p].is_punct('{') {
+                    let h = &self.toks[p];
+                    if h.is_ident("for") {
+                        seen_for = true;
+                    } else if h.is_ident("where") {
+                        // bounds: ignore the rest of the header
+                        while p < self.toks.len() && !self.toks[p].is_punct('{') {
+                            p += 1;
+                        }
+                        break;
+                    } else if h.kind == TokKind::Ident {
+                        if first_ident.is_none() {
+                            first_ident = Some(h.text.clone());
+                        }
+                        let slot = if seen_for { &mut after_for } else { &mut before_for };
+                        *slot = Some(h.text.clone());
+                    } else if h.is_punct('<') {
+                        p = self.skip_balanced(p + 1, '<', '>');
+                        continue;
+                    }
+                    p += 1;
+                }
+                let ty = if is_trait { first_ident } else { after_for.or(before_for) };
+                if p < self.toks.len() && self.toks[p].is_punct('{') {
+                    let body_start = p + 1;
+                    let body_end = self.skip_balanced(body_start, '{', '}');
+                    self.scan_items(body_start, body_end.saturating_sub(1), ty.as_deref());
+                    pos = body_end;
+                } else {
+                    pos = p + 1;
+                }
+                last_attr_was_test = false;
+                continue;
+            }
+            if t.is_ident("fn") {
+                pos = self.parse_fn(pos, impl_type);
+                last_attr_was_test = false;
+                continue;
+            }
+            if t.is_punct('{') {
+                // item-level brace (const initializer, macro body, …):
+                // skip it wholesale
+                pos = self.skip_balanced(pos + 1, '{', '}');
+                continue;
+            }
+            pos += 1;
+        }
+    }
+}
+
+/// Scan one lexed file. `path` must be root-relative, `/`-separated.
+pub fn scan_file(path: &str, lexed: Lexed) -> FileScan {
+    let Lexed { toks, comments } = lexed;
+    let ntoks = toks.len();
+    let mut s = Scanner {
+        toks: &toks,
+        fns: Vec::new(),
+        types: Vec::new(),
+        test_mask: vec![false; ntoks],
+        file: path.to_string(),
+    };
+    s.scan_items(0, ntoks, None);
+    let Scanner { fns, types, test_mask, .. } = s;
+    FileScan { path: path.to_string(), toks, comments, fns, types, test_mask }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::lexer::lex;
+
+    fn scan(src: &str) -> FileScan {
+        scan_file("x.rs", lex(src))
+    }
+
+    #[test]
+    fn struct_fields_reduce_to_core_types() {
+        let s = scan(
+            "pub struct Sm { pub l1d: Cache, warps: Vec<WarpState>, \
+             shared: Option<Arc<SharedLockedStats>>, kernel: *const KernelDesc, \
+             port: std::collections::VecDeque<Packet> }",
+        );
+        let t = &s.types[0];
+        assert_eq!(t.name, "Sm");
+        let get = |f: &str| {
+            t.fields
+                .iter()
+                .find(|(n, _)| n == f)
+                .map(|(_, ty)| ty.clone())
+                .unwrap_or_default()
+        };
+        assert_eq!(get("l1d"), "Cache");
+        assert_eq!(get("warps"), "WarpState");
+        assert_eq!(get("shared"), "SharedLockedStats");
+        assert_eq!(get("kernel"), "KernelDesc");
+        assert_eq!(get("port"), "Packet");
+    }
+
+    #[test]
+    fn impl_methods_get_receivers_and_keys() {
+        let s = scan(
+            "impl Sm { pub fn cycle(&mut self, now: u64) -> u32 { 0 } \
+             fn peek(&self) {} fn free(x: u32) {} } \
+             impl Drop for Pool { fn drop(&mut self) {} } \
+             fn top_level() {}",
+        );
+        let find = |k: &str| s.fns.iter().find(|f| f.key == k).expect(k);
+        assert_eq!(find("Sm::cycle").receiver, Receiver::RefMutSelf);
+        assert_eq!(find("Sm::peek").receiver, Receiver::RefSelf);
+        assert_eq!(find("Sm::free").receiver, Receiver::None);
+        assert_eq!(find("Pool::drop").receiver, Receiver::RefMutSelf);
+        assert_eq!(find("top_level").impl_type, None);
+    }
+
+    #[test]
+    fn cfg_test_mods_are_masked() {
+        let s = scan(
+            "fn live() { helper(); } #[cfg(test)] mod tests { fn dead() { helper(); } }",
+        );
+        let live = s.fns.iter().find(|f| f.key == "live").unwrap();
+        assert!(!s.test_mask[live.body.0]);
+        let dead = s.fns.iter().find(|f| f.key == "dead").unwrap();
+        assert!(s.test_mask[dead.body.0], "test-mod bodies are masked");
+    }
+
+    #[test]
+    fn fn_bodies_span_nested_braces() {
+        let s = scan("fn f() { if x { y(); } match z { _ => {} } } fn g() {}");
+        let f = s.fns.iter().find(|f| f.key == "f").unwrap();
+        let g = s.fns.iter().find(|f| f.key == "g").unwrap();
+        assert!(f.body.1 <= g.body.0, "bodies must not overlap");
+        // y() is inside f's body
+        let y = s.toks.iter().position(|t| t.is_ident("y")).unwrap();
+        assert!(f.body.0 <= y && y < f.body.1);
+    }
+
+    #[test]
+    fn macro_rules_bodies_are_skipped() {
+        let s = scan("macro_rules! m { ($x:ident) => { fn $x() {} }; } fn real() {}");
+        assert_eq!(s.fns.len(), 1);
+        assert_eq!(s.fns[0].key, "real");
+    }
+}

@@ -1,0 +1,72 @@
+//! `detlint` — determinism auditor CLI.
+//!
+//! Usage: `detlint [--json[=FILE]] [--path DIR]`
+//!
+//! Analyzes `rust/src` (or `--path DIR`) with the phase-safety rules in
+//! `parsim::analysis` and prints a deterministic report. Exit codes:
+//! `0` clean (every finding waived with a written reason), `1` active
+//! findings, `2` usage or IO error.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+fn default_root() -> PathBuf {
+    // Prefer the runtime env (set under `cargo run`), fall back to the
+    // compile-time location for standalone invocations of the binary.
+    let manifest = std::env::var("CARGO_MANIFEST_DIR")
+        .unwrap_or_else(|_| env!("CARGO_MANIFEST_DIR").to_string());
+    PathBuf::from(manifest).join("src")
+}
+
+fn main() -> ExitCode {
+    let mut json: Option<Option<String>> = None;
+    let mut root: Option<PathBuf> = None;
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        if a == "--json" {
+            json = Some(None);
+        } else if let Some(f) = a.strip_prefix("--json=") {
+            json = Some(Some(f.to_string()));
+        } else if a == "--path" {
+            match args.next() {
+                Some(p) => root = Some(PathBuf::from(p)),
+                None => {
+                    eprintln!("detlint: --path needs a directory argument");
+                    return ExitCode::from(2);
+                }
+            }
+        } else if a == "--help" || a == "-h" {
+            println!("usage: detlint [--json[=FILE]] [--path DIR]");
+            return ExitCode::SUCCESS;
+        } else {
+            eprintln!("detlint: unknown argument `{a}` (see --help)");
+            return ExitCode::from(2);
+        }
+    }
+
+    let root = root.unwrap_or_else(default_root);
+    let report = match parsim::analysis::analyze_path(&root) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("detlint: cannot analyze {}: {e}", root.display());
+            return ExitCode::from(2);
+        }
+    };
+
+    match json {
+        Some(Some(file)) => {
+            if let Err(e) = std::fs::write(&file, report.render_json()) {
+                eprintln!("detlint: cannot write {file}: {e}");
+                return ExitCode::from(2);
+            }
+        }
+        Some(None) => print!("{}", report.render_json()),
+        None => print!("{}", report.render_text()),
+    }
+
+    if report.unwaivered().is_empty() {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::from(1)
+    }
+}

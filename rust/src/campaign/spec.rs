@@ -179,6 +179,7 @@ impl JobSpec {
             sm_worklist: true,
             fast_forward: true,
             telemetry: TelemetryConfig::default(),
+            phase_guard: true,
         }
     }
 

@@ -85,6 +85,9 @@ pub struct Fabric {
     seq: u64,
     in_flight: usize,
     stats: FabricStats,
+    /// Debug-only phase check: fabric queues are cluster-sequential
+    /// state and must never be touched mid-fan-out.
+    guard: crate::engine::phase::PhaseGuard,
 }
 
 impl Fabric {
@@ -97,7 +100,14 @@ impl Fabric {
             seq: 0,
             in_flight: 0,
             stats: FabricStats::default(),
+            guard: crate::engine::phase::PhaseGuard::default(),
         }
+    }
+
+    /// Install the owning cluster's phase guard (a clone sharing its
+    /// flag). Without this the checks are inert.
+    pub fn set_phase_guard(&mut self, guard: crate::engine::phase::PhaseGuard) {
+        self.guard = guard;
     }
 
     /// Zero-load hop latency for the configured topology.
@@ -124,6 +134,7 @@ impl Fabric {
     /// only). `src == dst` is rejected at workload validation; debug
     /// asserts guard the model here.
     pub fn inject(&mut self, src: u32, dst: u32, size_bytes: u32, now: u64) {
+        self.guard.assert_sequential("Fabric::inject");
         debug_assert!((dst as usize) < self.num_gpus && (src as usize) < self.num_gpus);
         debug_assert_ne!(src, dst, "self-transfers never enter the fabric");
         let pkt = FabricPacket {
@@ -147,6 +158,7 @@ impl Fabric {
     /// aggregate — tighter than the sum of per-destination rates, so
     /// all-to-all bursts genuinely contend at the switch.
     pub fn transfer(&mut self, now: u64) {
+        self.guard.assert_sequential("Fabric::transfer");
         if self.in_flight == 0 {
             return;
         }
@@ -180,6 +192,7 @@ impl Fabric {
 
     /// Pop one arrived packet at GPU `dst`.
     pub fn eject(&mut self, dst: usize) -> Option<FabricPacket> {
+        self.guard.assert_sequential("Fabric::eject");
         let p = self.eject[dst].pop_front();
         if let Some(pkt) = p {
             self.in_flight -= 1;

@@ -232,6 +232,10 @@ struct ClusterSim {
     /// `cluster_cycle` at which the active communication phase began.
     comm_start: u64,
     trace: Option<Box<ClusterTrace>>,
+    /// Debug-only phase tracker for the cluster's own sequential state
+    /// (fabric queues); member GPUs carry their own guards, entered
+    /// around the shared `(gpu, sm)` fan-out. Inert in release builds.
+    guard: crate::engine::phase::PhaseGuard,
     /// Per-GPU "finished the current kernel" flags.
     gpu_done: Vec<bool>,
     /// Per-GPU completed kernel statistics.
@@ -308,7 +312,9 @@ impl ClusterSim {
         } else {
             None
         };
-        let fabric = Fabric::new(cluster.fabric.clone(), n);
+        let guard = crate::engine::phase::PhaseGuard::new(sim.phase_guard);
+        let mut fabric = Fabric::new(cluster.fabric.clone(), n);
+        fabric.set_phase_guard(guard.clone());
         if sim.telemetry.trace_sample_every == 0 {
             return Err(SimError::InvalidSimConfig {
                 field: "telemetry.trace_sample_every",
@@ -317,6 +323,8 @@ impl ClusterSim {
         }
         let trace = sim.telemetry.trace.then(|| {
             Box::new(ClusterTrace {
+                // detlint: allow(nondet-source): trace-timeline epoch —
+                // wall-clock lane only, never feeds simulated state
                 t0: Instant::now(),
                 sample_every: sim.telemetry.trace_sample_every,
                 events: Vec::new(),
@@ -348,6 +356,7 @@ impl ClusterSim {
             ff_cycles_skipped: 0,
             comm_start: 0,
             trace,
+            guard,
             wl,
         })
     }
@@ -365,6 +374,8 @@ impl ClusterSim {
     }
 
     /// One lock-step compute cycle of kernel `k`.
+    // detlint: allow(nondet-source, fn): wall-clock trace lane — clock
+    // reads feed only the trace buffer, never simulated state
     fn step_compute(&mut self, k: usize) -> Result<StepOutcome, SimError> {
         let n = self.gpus.len();
         let mut started_kernel = None;
@@ -526,6 +537,7 @@ impl ClusterSim {
         bw_before: Option<Vec<(u64, u64)>>,
         bw_after: Option<Vec<(u64, u64)>>,
     ) {
+        // detlint: allow(nondet-source): wall-clock trace lane only
         let t_end = Instant::now();
         let Some(tb) = &mut self.trace else { return };
         let t0 = tb.t0;
@@ -664,38 +676,56 @@ impl ClusterSim {
     /// their bookkeeping is settled sequentially by that GPU, exactly as
     /// in the single-GPU engine).
     fn parallel_sm_phase(&mut self) {
-        let Self { gpus, gpu_done, pool, schedule, pair_buf, .. } = self;
-        let mut parts: Vec<(u64, DisjointSlice<'_, Sm>, DisjointSlice<'_, u32>)> =
-            Vec::with_capacity(gpus.len());
-        pair_buf.clear();
-        for (g, gpu) in gpus.iter_mut().enumerate() {
-            if gpu_done[g] {
-                continue;
+        let Self { gpus, gpu_done, pool, schedule, pair_buf, guard, .. } = self;
+        // Mark the fan-out on the cluster's guard *and* every active
+        // member's: a worker closure reaching into any GPU's sequential
+        // state (icnt queues, worklists) must trip, not just the fabric.
+        guard.enter_parallel();
+        for (g, gpu) in gpus.iter().enumerate() {
+            if !gpu_done[g] {
+                gpu.phase_guard().enter_parallel();
             }
-            let (now, active, sms, work) = gpu.sm_parallel_parts();
-            let part = parts.len() as u32;
-            for &s in active {
-                pair_buf.push((part, s));
-            }
-            parts.push((now, DisjointSlice::new(sms), DisjointSlice::new(work)));
         }
-        let pairs: &[(u32, u32)] = pair_buf;
-        let run = |i: usize| {
-            let (part, s) = pairs[i];
-            let (now, sms, work) = &parts[part as usize];
-            // SAFETY: the pool delivers each flattened index exactly once
-            // per region, and distinct indices address distinct SMs.
-            let w = unsafe { sms.get_mut(s as usize) }.cycle(*now);
-            unsafe { *work.get_mut(s as usize) = w };
-        };
-        match pool {
-            Some(pool) => pool.parallel_for(pairs.len(), *schedule, run),
-            None => {
-                for i in 0..pairs.len() {
-                    run(i);
+        {
+            let mut parts: Vec<(u64, DisjointSlice<'_, Sm>, DisjointSlice<'_, u32>)> =
+                Vec::with_capacity(gpus.len());
+            pair_buf.clear();
+            for (g, gpu) in gpus.iter_mut().enumerate() {
+                if gpu_done[g] {
+                    continue;
+                }
+                let (now, active, sms, work) = gpu.sm_parallel_parts();
+                let part = parts.len() as u32;
+                for &s in active {
+                    pair_buf.push((part, s));
+                }
+                parts.push((now, DisjointSlice::new(sms), DisjointSlice::new(work)));
+            }
+            let pairs: &[(u32, u32)] = pair_buf;
+            let run = |i: usize| {
+                let (part, s) = pairs[i];
+                let (now, sms, work) = &parts[part as usize];
+                // SAFETY: the pool delivers each flattened index exactly once
+                // per region, and distinct indices address distinct SMs.
+                let w = unsafe { sms.get_mut(s as usize) }.cycle(*now);
+                unsafe { *work.get_mut(s as usize) = w };
+            };
+            match pool {
+                // detlint: parallel-region roots=[Sm::cycle]
+                Some(pool) => pool.parallel_for(pairs.len(), *schedule, run),
+                None => {
+                    for i in 0..pairs.len() {
+                        run(i);
+                    }
                 }
             }
         }
+        for (g, gpu) in gpus.iter().enumerate() {
+            if !gpu_done[g] {
+                gpu.phase_guard().exit_parallel();
+            }
+        }
+        guard.exit_parallel();
     }
 
     /// Warp instructions issued so far across the whole cluster.
@@ -837,6 +867,7 @@ impl ClusterSession {
             return Err(SimError::SessionFinished);
         }
         self.sim.ff_allowed = false;
+        // detlint: allow(nondet-source): wall-clock accounting only
         let t0 = Instant::now();
         let r = self.step_inner().map(|o| o.status);
         self.wall_s += t0.elapsed().as_secs_f64();
@@ -906,6 +937,7 @@ impl ClusterSession {
         if self.finished.is_some() {
             return Ok(SessionStatus::Finished);
         }
+        // detlint: allow(nondet-source): wall-clock accounting only
         let t0 = Instant::now();
         let r = self.run_unclocked(&mut cond);
         self.wall_s += t0.elapsed().as_secs_f64();

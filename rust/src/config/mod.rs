@@ -603,6 +603,13 @@ pub struct SimConfig {
     /// Observability: metrics registry + trace-event buffering
     /// (default: all off; see [`crate::telemetry`]).
     pub telemetry: TelemetryConfig,
+    /// Arm the debug-only [`crate::engine::phase::PhaseGuard`]: panic if
+    /// sequential-only engine state (icnt/fabric queues, worklist
+    /// rebuild, stats aggregation) is touched during the parallel SM
+    /// fan-out. No-op in release builds either way; on by default
+    /// because an armed guard never changes results (only whether a
+    /// determinism bug aborts loudly instead of flipping a fingerprint).
+    pub phase_guard: bool,
 }
 
 impl Default for SimConfig {
@@ -620,6 +627,7 @@ impl Default for SimConfig {
             sm_worklist: true,
             fast_forward: true,
             telemetry: TelemetryConfig::default(),
+            phase_guard: true,
         }
     }
 }

@@ -77,6 +77,7 @@
 //! `tests/determinism.rs` re-proves the cross-thread claim end to end.
 
 pub mod costmodel;
+pub mod phase;
 pub mod pool;
 pub mod session;
 
@@ -146,6 +147,9 @@ pub struct DisjointSlice<'a, T> {
     _marker: PhantomData<&'a mut [T]>,
 }
 
+// SAFETY: `Sync` here only shares the raw pointer; `&mut` access goes
+// through `get_mut`, whose contract (each index handed to exactly one
+// thread per region) restores exclusivity. See the struct docs above.
 unsafe impl<T: Send> Sync for DisjointSlice<'_, T> {}
 
 impl<'a, T> DisjointSlice<'a, T> {
@@ -218,6 +222,10 @@ pub struct GpuSim {
     metrics: Option<Box<EngineMetrics>>,
     /// Chrome-trace event buffer (`None` ⇒ tracing off).
     trace: Option<Box<TraceBuf>>,
+    /// Debug-only phase tracker: sequential-only mutators assert through
+    /// this that they never run inside the parallel SM fan-out. Inert in
+    /// release builds (see [`phase::PhaseGuard`]).
+    guard: phase::PhaseGuard,
 }
 
 impl GpuSim {
@@ -259,7 +267,9 @@ impl GpuSim {
         }
         let partitions =
             (0..gpu.num_mem_partitions).map(|i| MemPartition::new(i, &gpu)).collect();
-        let icnt = Icnt::new(gpu.icnt.clone(), gpu.icnt_nodes());
+        let guard = phase::PhaseGuard::new(sim.phase_guard);
+        let mut icnt = Icnt::new(gpu.icnt.clone(), gpu.icnt_nodes());
+        icnt.set_phase_guard(guard.clone());
         let pool = if sim.threads > 1 {
             Some(ThreadPool::new_instrumented(sim.threads, sim.telemetry.trace))
         } else {
@@ -277,6 +287,8 @@ impl GpuSim {
         let metrics = sim.telemetry.metrics.then(|| Box::new(EngineMetrics::default()));
         let trace = sim.telemetry.trace.then(|| {
             Box::new(TraceBuf {
+                // detlint: allow(nondet-source): trace-timeline epoch —
+                // wall-clock lane only, never feeds simulated state
                 t0: Instant::now(),
                 sample_every: sim.telemetry.trace_sample_every,
                 events: Vec::new(),
@@ -307,7 +319,14 @@ impl GpuSim {
             functional_results: Vec::new(),
             metrics,
             trace,
+            guard,
         })
+    }
+
+    /// The engine's [`phase::PhaseGuard`]. The cluster engine enters all
+    /// member guards around its shared `(gpu, sm)` fan-out.
+    pub(crate) fn phase_guard(&self) -> &phase::PhaseGuard {
+        &self.guard
     }
 
     pub fn gpu_cycle(&self) -> u64 {
@@ -381,6 +400,9 @@ impl GpuSim {
     /// read-only with respect to model state: only wall clocks and the
     /// trace buffer are touched, so a traced run is bit-identical to an
     /// untraced one.
+    // detlint: allow(nondet-source, fn): wall-clock trace lane — clock
+    // reads feed only the trace buffer, never simulated state (the
+    // traced-vs-bare matrix in tests/telemetry.rs pins bit-identity)
     fn cycle_traced(&mut self) {
         let cycle = self.gpu_cycle;
         let t0 = self.trace.as_ref().map(|tb| tb.t0).unwrap_or_else(Instant::now);
@@ -526,6 +548,7 @@ impl GpuSim {
     /// [`Sm::needs_cycle`] predicate, settling the lazily-accounted
     /// `stats.cycles` of SMs that re-enter and parking SMs that drained.
     fn rebuild_active(&mut self) {
+        self.guard.assert_sequential("GpuSim::active worklist rebuild");
         let now = self.gpu_cycle;
         self.active.clear();
         if !self.sim.sm_worklist {
@@ -569,6 +592,7 @@ impl GpuSim {
     fn cycle_sm_parallel(&mut self) {
         let now = self.gpu_cycle;
         let m = self.profiler.mark();
+        self.guard.enter_parallel();
         {
             let Self { pool, sms, work_buf, sim, active, .. } = self;
             let n_active = active.len();
@@ -577,6 +601,7 @@ impl GpuSim {
                     let sms_ds = DisjointSlice::new(sms.as_mut_slice());
                     let work_ds = DisjointSlice::new(work_buf.as_mut_slice());
                     let active: &[u32] = active;
+                    // detlint: parallel-region roots=[Sm::cycle]
                     pool.parallel_for(n_active, sim.schedule, |j| {
                         // SAFETY: worklist entries are distinct SM indices
                         // and each worklist position is visited exactly
@@ -594,6 +619,7 @@ impl GpuSim {
                 }
             }
         }
+        self.guard.exit_parallel();
         self.profiler.record(Phase::SmCycle, m);
     }
 
@@ -820,6 +846,7 @@ impl GpuSim {
     /// Tear down a completed kernel: drain deferred stats, aggregate,
     /// and (in functional mode) replay the GEMM.
     pub(crate) fn finish_kernel(&mut self, kd: &KernelDesc, kernel_id: usize) -> KernelStats {
+        self.guard.assert_sequential("GpuSim::finish_kernel stats aggregation");
         // settle the lazily-accounted cycle counters of parked SMs
         for i in 0..self.sms.len() {
             if self.parked_at[i] != NOT_PARKED {
@@ -888,6 +915,8 @@ impl GpuSim {
 
     /// Simulate a full workload (all kernel launches, in order).
     pub fn run_workload(&mut self, wl: &WorkloadSpec) -> GpuStats {
+        // detlint: allow(nondet-source): wall-clock reporting only
+        // (`GpuStats::wall_s`), never feeds simulated state
         let t0 = Instant::now();
         self.profiler.reset();
         self.functional_results.clear();
@@ -1080,6 +1109,26 @@ impl GpuSim {
     pub fn probe_perturb_sm_counter(&mut self, sm: usize) {
         let i = sm % self.sms.len();
         self.sms[i].stats.cycles += 1;
+    }
+
+    /// Diagnostic back-door for the PhaseGuard test suite: deliberately
+    /// touch sequential-only state (an icnt injection) from inside a
+    /// simulated parallel fan-out. In a debug build with the guard
+    /// enabled this panics — proving a parallel-phase shared write is
+    /// caught at runtime, not just by `detlint`. Never called by the
+    /// simulation itself.
+    pub fn probe_phase_violation(&mut self) {
+        self.guard.enter_parallel();
+        // The violation `detlint` would flag statically: shared engine
+        // state mutated while the fan-out is (nominally) in flight.
+        let icnt = &mut self.icnt;
+        let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            icnt.transfer(0);
+        }));
+        self.guard.exit_parallel();
+        if let Err(p) = outcome {
+            std::panic::resume_unwind(p);
+        }
     }
 }
 

@@ -1,0 +1,154 @@
+//! PhaseGuard — the runtime half of the determinism audit.
+//!
+//! The engine's cycle alternates between a *sequential* phase (icnt
+//! drain/inject, worklist rebuild, block issue, stats aggregation — all
+//! on the caller thread) and a *parallel fan-out* (SMs cycled by the
+//! pool, touching only SM-local state). `detlint` proves the second
+//! half statically; `PhaseGuard` enforces the first half dynamically:
+//! the engine publishes the current phase here, and every
+//! sequential-only mutator (icnt/fabric injection and ejection, worklist
+//! rebuild, kernel-end stats aggregation) asserts it is *not* running
+//! mid-fan-out. A violation — a worker closure reaching into shared
+//! engine state — panics immediately with the offending field instead of
+//! silently flipping a fingerprint thousands of cycles later.
+//!
+//! The guard is debug-only: in release builds it carries no data and
+//! every method compiles to nothing, so the paper's performance claims
+//! are untouched. It is also *per engine instance*, not global — the
+//! campaign scheduler runs whole simulations on pool workers
+//! (two-level parallelism), so "am I inside a fan-out" is a property of
+//! one `GpuSim`/`ClusterSim`, never of the thread.
+
+#[cfg(debug_assertions)]
+use std::sync::atomic::{AtomicBool, Ordering};
+#[cfg(debug_assertions)]
+use std::sync::Arc;
+
+/// Tracks whether the owning engine is inside its parallel SM fan-out.
+/// Cloning shares the underlying flag (the engine hands clones to its
+/// icnt/fabric so they can self-check).
+///
+/// Zero-sized and inert in release builds.
+#[derive(Clone, Debug, Default)]
+pub struct PhaseGuard {
+    /// `None` when disabled (`SimConfig::phase_guard = false`, or any
+    /// release build): every check short-circuits.
+    #[cfg(debug_assertions)]
+    cell: Option<Arc<AtomicBool>>,
+}
+
+impl PhaseGuard {
+    /// A guard that checks (in debug builds) iff `enabled`.
+    pub fn new(enabled: bool) -> Self {
+        #[cfg(debug_assertions)]
+        {
+            Self { cell: enabled.then(|| Arc::new(AtomicBool::new(false))) }
+        }
+        #[cfg(not(debug_assertions))]
+        {
+            let _ = enabled;
+            Self {}
+        }
+    }
+
+    /// Mark the start of the parallel SM fan-out. Caller must pair with
+    /// [`exit_parallel`](Self::exit_parallel) on the same (sequential)
+    /// thread; the fan-out itself happens between the two.
+    #[inline]
+    pub fn enter_parallel(&self) {
+        #[cfg(debug_assertions)]
+        if let Some(c) = &self.cell {
+            c.store(true, Ordering::Release);
+        }
+    }
+
+    /// Mark the end of the parallel SM fan-out.
+    #[inline]
+    pub fn exit_parallel(&self) {
+        #[cfg(debug_assertions)]
+        if let Some(c) = &self.cell {
+            c.store(false, Ordering::Release);
+        }
+    }
+
+    /// Assert the engine is in its sequential phase. `what` names the
+    /// guarded state for the panic message.
+    ///
+    /// # Panics
+    /// In debug builds, if called between
+    /// [`enter_parallel`](Self::enter_parallel) and
+    /// [`exit_parallel`](Self::exit_parallel) — i.e. sequential-only
+    /// state was touched from inside the parallel fan-out.
+    #[inline]
+    pub fn assert_sequential(&self, what: &'static str) {
+        #[cfg(debug_assertions)]
+        if let Some(c) = &self.cell {
+            if c.load(Ordering::Acquire) {
+                panic!(
+                    "PhaseGuard: sequential-only state `{what}` touched during \
+                     the parallel SM fan-out — shared mutation in the parallel \
+                     phase breaks the determinism contract"
+                );
+            }
+        }
+        #[cfg(not(debug_assertions))]
+        let _ = what;
+    }
+
+    /// Whether violations would actually be detected (debug build and
+    /// enabled). Lets tests skip assertions that need an armed guard.
+    pub fn armed(&self) -> bool {
+        #[cfg(debug_assertions)]
+        {
+            self.cell.is_some()
+        }
+        #[cfg(not(debug_assertions))]
+        {
+            false
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sequential_checks_pass_outside_fanout() {
+        let g = PhaseGuard::new(true);
+        g.assert_sequential("icnt.inject");
+        g.enter_parallel();
+        g.exit_parallel();
+        g.assert_sequential("icnt.inject");
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    #[should_panic(expected = "PhaseGuard")]
+    fn mid_fanout_touch_panics_in_debug() {
+        let g = PhaseGuard::new(true);
+        g.enter_parallel();
+        g.assert_sequential("worklist.rebuild");
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    fn clones_share_the_flag() {
+        let g = PhaseGuard::new(true);
+        let seen_by_icnt = g.clone();
+        g.enter_parallel();
+        assert!(seen_by_icnt.armed());
+        let r = std::panic::catch_unwind(|| seen_by_icnt.assert_sequential("icnt.eject"));
+        assert!(r.is_err(), "clone must observe the shared phase flag");
+        g.exit_parallel();
+        seen_by_icnt.assert_sequential("icnt.eject");
+    }
+
+    #[test]
+    fn disabled_guard_never_panics() {
+        let g = PhaseGuard::new(false);
+        g.enter_parallel();
+        g.assert_sequential("anything");
+        assert!(!g.armed());
+    }
+}

@@ -565,6 +565,17 @@ impl SimBuilder {
         self
     }
 
+    /// Arm/disarm the debug-only PhaseGuard race detector
+    /// ([`SimConfig::phase_guard`]; default on). In debug builds an
+    /// armed guard panics the moment sequential-only engine state is
+    /// touched inside the parallel SM fan-out; release builds never
+    /// check. Results are bit-identical armed or not
+    /// (`tests/phase_guard.rs` pins this).
+    pub fn phase_guard(mut self, on: bool) -> Self {
+        self.sim.phase_guard = on;
+        self
+    }
+
     /// The run's [`SimConfig::seed`]. Carried in the configuration and
     /// folded into campaign job identity; today's procedural workload
     /// generators derive their per-kernel seeds from `(name, scale)`
@@ -778,6 +789,7 @@ impl SimSession {
     /// kernel; erring with [`SimError::SessionFinished`] after that.
     pub fn step_cycle(&mut self) -> Result<SessionStatus, SimError> {
         self.sim.set_fast_forward(false);
+        // detlint: allow(nondet-source): wall-clock accounting only
         let t0 = Instant::now();
         let r = self.step_inner(false);
         self.wall_s += t0.elapsed().as_secs_f64();
@@ -929,6 +941,7 @@ impl SimSession {
                     | StopCondition::InstructionCount(_)
             );
         self.sim.set_fast_forward(ff_ok);
+        // detlint: allow(nondet-source): wall-clock accounting only
         let t0 = Instant::now();
         let r = self.run_unclocked(&mut cond);
         self.wall_s += t0.elapsed().as_secs_f64();

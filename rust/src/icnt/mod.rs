@@ -65,6 +65,9 @@ pub struct Icnt {
     in_flight: usize,
     /// Packets delivered (for utilization reporting).
     pub delivered: u64,
+    /// Debug-only phase check: injection/transfer/ejection are
+    /// sequential-phase operations and must never run mid-fan-out.
+    guard: crate::engine::phase::PhaseGuard,
 }
 
 impl Icnt {
@@ -79,7 +82,14 @@ impl Icnt {
             seq: 0,
             in_flight: 0,
             delivered: 0,
+            guard: crate::engine::phase::PhaseGuard::default(),
         }
+    }
+
+    /// Install the owning engine's phase guard (a clone sharing its
+    /// flag). Without this the checks are inert.
+    pub fn set_phase_guard(&mut self, guard: crate::engine::phase::PhaseGuard) {
+        self.guard = guard;
     }
 
     /// Serialization delay of a packet in cycles (flit count / rate).
@@ -90,6 +100,7 @@ impl Icnt {
 
     /// Inject a packet at `src` destined to `dst` (sequential phase only).
     pub fn inject(&mut self, mut pkt: Packet, now: u64) {
+        self.guard.assert_sequential("Icnt::inject");
         debug_assert!((pkt.dst as usize) < self.num_nodes);
         pkt.seq = self.seq;
         self.seq += 1;
@@ -111,6 +122,7 @@ impl Icnt {
     /// `doIcntScheduling`: move arrived packets into ejection buffers,
     /// respecting per-node output rate and ejection-queue capacity.
     pub fn transfer(&mut self, now: u64) {
+        self.guard.assert_sequential("Icnt::transfer");
         if self.in_flight == 0 {
             return; // nothing anywhere (incl. ejection buffers)
         }
@@ -137,6 +149,7 @@ impl Icnt {
     /// Pop one arrived packet at node `dst` (`doIcntToSm` /
     /// `doIcntToMemSubpartition`).
     pub fn eject(&mut self, dst: usize) -> Option<Packet> {
+        self.guard.assert_sequential("Icnt::eject");
         let p = self.eject[dst].pop_front();
         if p.is_some() {
             self.in_flight -= 1;

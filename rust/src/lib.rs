@@ -46,6 +46,17 @@
 //!   4-GPU × N-SM run fills the same core budget as the paper's
 //!   single-GPU loop — and stays bit-deterministic (see the
 //!   [`cluster`] module docs for the three-level argument).
+//! * [`analysis`] — the **determinism auditor** (`cargo run --bin
+//!   detlint`): a dependency-free static analyzer that builds a call
+//!   graph over this tree, computes everything reachable from the
+//!   parallel-phase roots, and flags shared-state mutation in the
+//!   fan-out, unaudited `unsafe`, stray `Ordering::Relaxed`, and
+//!   nondeterminism sources (hash iteration, wall clocks, env reads) on
+//!   deterministic paths — every exception is an inline written waiver.
+//!   Its runtime counterpart is [`engine::phase::PhaseGuard`], a
+//!   debug-only phase tracker that panics if sequential-only state
+//!   (icnt/fabric queues, worklist rebuild, stats aggregation) is
+//!   touched mid-fan-out.
 //! * [`campaign`] — batched multi-simulation orchestration: a
 //!   `workload × GpuConfig × SimConfig` job matrix, a work-stealing
 //!   multi-simulation scheduler with **two-level parallelism** (jobs run
@@ -179,6 +190,7 @@
 //! # Ok(()) }
 //! ```
 
+pub mod analysis;
 pub mod campaign;
 pub mod cli;
 pub mod cluster;

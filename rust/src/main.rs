@@ -44,6 +44,9 @@ const FLAG_OPTS: &[&str] = &[
     // engine ablation switches (run/cluster/bench; results are
     // bit-identical with or without — these only change wall-clock)
     "no-worklist", "no-fast-forward",
+    // disarm the debug-only PhaseGuard race detector (release builds
+    // never check regardless; results are identical either way)
+    "no-phase-guard",
 ];
 
 fn main() -> ExitCode {
@@ -191,6 +194,7 @@ fn build_simconfig(args: &Args) -> Result<SimConfig, String> {
         sm_worklist: !args.flag("no-worklist"),
         fast_forward: !args.flag("no-fast-forward"),
         telemetry: Default::default(),
+        phase_guard: !args.flag("no-phase-guard"),
     })
 }
 

@@ -1,0 +1,102 @@
+//! Seeded stress test for the pool's lock-free fork/join barrier — the
+//! synchronization the sanitizer CI lane (TSan + Miri) drives hardest.
+//!
+//! Hundreds of back-to-back regions with randomized sizes, schedules,
+//! and deliberate think-time gaps (long enough to push workers past the
+//! spin budget onto the park/wake path), checking after every region
+//! that each index ran exactly once and that a deterministic reduction
+//! over the visited indices is schedule-independent. The PRNG is seeded,
+//! so a failure reproduces byte-for-byte.
+
+use std::sync::atomic::{AtomicU32, Ordering};
+
+use parsim::config::Schedule;
+use parsim::engine::pool::ThreadPool;
+use parsim::util::SplitMix64;
+
+fn stress(threads: usize, seed: u64, rounds: usize) {
+    let pool = ThreadPool::new(threads);
+    let mut rng = SplitMix64::new(seed);
+    let max_n = 97usize;
+    let hits: Vec<AtomicU32> = (0..max_n).map(|_| AtomicU32::new(0)).collect();
+    for round in 0..rounds {
+        let n = rng.range(0, max_n + 1);
+        let schedule = match rng.next_below(4) {
+            0 => Schedule::Static { chunk: 0 },
+            1 => Schedule::Static { chunk: 1 + rng.range(0, 4) },
+            2 => Schedule::Dynamic { chunk: 1 },
+            _ => Schedule::Dynamic { chunk: 1 + rng.range(0, 4) },
+        };
+        // ~10% of rounds insert an idle gap long enough to park every
+        // worker, so the next fork exercises the condvar wake path, not
+        // just the spin path.
+        if rng.chance(0.1) {
+            std::thread::sleep(std::time::Duration::from_millis(1 + rng.next_below(2)));
+        }
+        for h in hits.iter().take(n) {
+            h.store(0, Ordering::Relaxed);
+        }
+        pool.parallel_for(n, schedule, |i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        // exactly-once delivery, every region
+        for (i, h) in hits.iter().take(n).enumerate() {
+            let c = h.load(Ordering::Relaxed);
+            assert_eq!(
+                c, 1,
+                "round {round} ({threads}t, {schedule:?}): index {i} ran {c} times"
+            );
+        }
+    }
+}
+
+#[test]
+fn barrier_survives_randomized_regions_at_2_threads() {
+    stress(2, 0x5eed_0002, if cfg!(miri) { 20 } else { 300 });
+}
+
+#[test]
+fn barrier_survives_randomized_regions_at_4_threads() {
+    stress(4, 0x5eed_0004, if cfg!(miri) { 20 } else { 300 });
+}
+
+#[test]
+fn barrier_survives_randomized_regions_at_8_threads() {
+    stress(8, 0x5eed_0008, if cfg!(miri) { 10 } else { 300 });
+}
+
+/// The determinism face of the same stress: a seeded random mix of
+/// region sizes and schedules must produce an identical reduction at
+/// every thread count — the pool's delivery guarantee, not luck.
+#[test]
+fn randomized_regions_reduce_identically_across_thread_counts() {
+    let run = |threads: usize| -> u64 {
+        let pool = ThreadPool::new(threads);
+        let mut rng = SplitMix64::new(0xfeed_face);
+        let mut acc = 0u64;
+        for _ in 0..if cfg!(miri) { 10 } else { 100 } {
+            let n = rng.range(1, 64);
+            let schedule = if rng.chance(0.5) {
+                Schedule::Static { chunk: 0 }
+            } else {
+                Schedule::Dynamic { chunk: 1 }
+            };
+            let cells: Vec<AtomicU32> = (0..n).map(|_| AtomicU32::new(0)).collect();
+            pool.parallel_for(n, schedule, |i| {
+                cells[i].store((i as u32).wrapping_mul(2654435761), Ordering::Relaxed);
+            });
+            // order-fixed fold over per-index results: identical iff
+            // every index was delivered with its own value
+            for (i, c) in cells.iter().enumerate() {
+                acc = acc
+                    .rotate_left(7)
+                    .wrapping_add(c.load(Ordering::Relaxed) as u64 ^ i as u64);
+            }
+        }
+        acc
+    };
+    let base = run(1);
+    for threads in [2, 4, 8] {
+        assert_eq!(run(threads), base, "reduction diverged at {threads} threads");
+    }
+}

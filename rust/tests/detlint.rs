@@ -1,0 +1,114 @@
+//! Integration tests for the `detlint` determinism auditor: every bad
+//! fixture must trip its rule, the clean fixture and the real source
+//! tree must pass, and the report surfaces must be byte-deterministic.
+//!
+//! The fixtures live under `tests/fixtures/detlint/` (a subdirectory,
+//! so cargo never compiles them — several are deliberately broken).
+
+use std::path::{Path, PathBuf};
+
+use parsim::analysis::{analyze_path, Report, Rule};
+
+fn fixture(name: &str) -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/fixtures/detlint")
+        .join(name)
+}
+
+fn run(name: &str) -> Report {
+    analyze_path(&fixture(name)).expect("fixture readable")
+}
+
+/// The exit-code contract the CI gate relies on: unwaivered findings
+/// present ⇔ the binary exits non-zero.
+fn fails_with(report: &Report, rule: Rule) -> bool {
+    !report.unwaivered().is_empty()
+        && report.unwaivered().iter().any(|f| f.rule == rule)
+}
+
+#[test]
+fn parallel_shared_write_fixture_is_flagged() {
+    let r = run("parallel_shared_write.rs");
+    assert!(fails_with(&r, Rule::ParallelMut), "{}", r.render_text());
+    // the finding points at the shared-state callee, not the root
+    assert!(
+        r.unwaivered().iter().any(|f| f.message.contains("Shared::bump")),
+        "{}",
+        r.render_text()
+    );
+}
+
+#[test]
+fn hashmap_export_fixture_is_flagged() {
+    let r = run("hashmap_export.rs");
+    assert!(fails_with(&r, Rule::NondetSource), "{}", r.render_text());
+}
+
+#[test]
+fn unwaivered_unsafe_fixture_is_flagged() {
+    let r = run("unwaivered_unsafe.rs");
+    assert!(fails_with(&r, Rule::UnauditedUnsafe), "{}", r.render_text());
+}
+
+#[test]
+fn relaxed_atomic_fixture_is_flagged() {
+    let r = run("relaxed_atomic.rs");
+    assert!(fails_with(&r, Rule::RelaxedOrdering), "{}", r.render_text());
+}
+
+#[test]
+fn unannotated_region_fixture_is_flagged() {
+    let r = run("unannotated_region.rs");
+    assert!(fails_with(&r, Rule::ParallelRegion), "{}", r.render_text());
+}
+
+#[test]
+fn clean_fixture_passes_with_waivers_recorded() {
+    let r = run("clean.rs");
+    assert!(r.unwaivered().is_empty(), "{}", r.render_text());
+    // the waiver and the declared root both survive into the report
+    assert!(r.findings.iter().any(|f| f.waived));
+    assert_eq!(r.roots, ["Sm::cycle"]);
+}
+
+/// The analyzer's own day-one acceptance bar: `cargo run --bin detlint`
+/// must exit 0 on the real tree. Every deliberate exception (stats
+/// `.lock()` reductions, the AddrSet hasher, telemetry clocks) carries
+/// a written waiver, so nothing may remain unwaivered.
+#[test]
+fn source_tree_is_clean() {
+    let src = Path::new(env!("CARGO_MANIFEST_DIR")).join("src");
+    let r = analyze_path(&src).expect("src tree readable");
+    assert!(r.files_scanned > 20, "unexpectedly small tree: {}", r.files_scanned);
+    // the engine + cluster fan-outs both declare Sm::cycle as their root
+    assert!(
+        r.roots.iter().any(|s| s == "Sm::cycle"),
+        "parallel-region annotations missing: {:?}",
+        r.roots
+    );
+    let active = r.unwaivered();
+    assert!(
+        active.is_empty(),
+        "detlint found {} unwaivered finding(s) in src:\n{}",
+        active.len(),
+        r.render_text()
+    );
+}
+
+#[test]
+fn reports_are_byte_deterministic() {
+    let src = Path::new(env!("CARGO_MANIFEST_DIR")).join("src");
+    let a = analyze_path(&src).expect("src tree readable");
+    let b = analyze_path(&src).expect("src tree readable");
+    assert_eq!(a.render_text(), b.render_text());
+    assert_eq!(a.render_json(), b.render_json());
+}
+
+#[test]
+fn json_report_carries_the_gate_fields() {
+    let r = run("relaxed_atomic.rs");
+    let j = r.render_json();
+    assert!(j.contains("\"files_scanned\": 1"), "{j}");
+    assert!(j.contains("\"rule\": \"relaxed-ordering\""), "{j}");
+    assert!(j.contains("\"waived\": false"), "{j}");
+}

@@ -1,0 +1,26 @@
+//! detlint fixture: a file that passes with zero unwaivered findings.
+//!
+//! It exercises the whole waiver surface — an annotated fan-out whose
+//! root resolves, an SM-local-style mutation under that root, and a
+//! justified line waiver — so the "clean tree" path of the analyzer is
+//! covered by something other than the real sources.
+
+pub struct Sm {
+    cycles: u64,
+}
+
+impl Sm {
+    pub fn cycle(&mut self) {
+        self.cycles += 1;
+        // detlint: allow(nondet-source): telemetry timestamp only — it is
+        // printed to stderr and never reaches simulated state
+        let _t = std::time::Instant::now();
+    }
+}
+
+pub fn fan_out(pool: &Pool, sms: &mut [Sm]) {
+    // detlint: parallel-region roots=[Sm::cycle]
+    pool.parallel_for(sms.len(), Schedule::Static { chunk: 0 }, |i| {
+        step(i);
+    });
+}

@@ -1,0 +1,15 @@
+//! detlint fixture: hash-ordered collection on a deterministic path.
+//!
+//! Iterating a `HashMap` here would serialize counters in RandomState
+//! order — byte-different output across runs. detlint must flag both
+//! the import and the use with `nondet-source`.
+
+use std::collections::HashMap;
+
+pub fn export_counters(counters: &HashMap<String, u64>) -> String {
+    let mut out = String::new();
+    for (name, value) in counters {
+        out.push_str(&format!("{name}={value}\n"));
+    }
+    out
+}

@@ -1,0 +1,26 @@
+//! detlint fixture: a parallel-phase root that mutates shared state.
+//!
+//! `Worker::step` is declared a parallel root; it calls `Shared::bump`,
+//! a `&mut self` method on a type that is not SM-local. detlint must
+//! flag the callee with `parallel-mut`.
+
+pub struct Shared {
+    total: u64,
+}
+
+impl Shared {
+    pub fn bump(&mut self) {
+        self.total += 1;
+    }
+}
+
+pub struct Worker {
+    shared: Shared,
+}
+
+impl Worker {
+    // detlint: parallel-root
+    pub fn step(&mut self) {
+        self.shared.bump();
+    }
+}

@@ -1,0 +1,12 @@
+//! detlint fixture: `Ordering::Relaxed` outside the pool allowlist.
+//!
+//! Relaxed atomics are confined to `engine/pool.rs`, whose module docs
+//! audit every site. Anywhere else they must be flagged
+//! `relaxed-ordering` — a Relaxed publish here could reorder against
+//! the data it guards.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+pub fn sloppy_publish(flag: &AtomicU64) {
+    flag.store(1, Ordering::Relaxed);
+}

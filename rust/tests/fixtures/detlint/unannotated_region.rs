@@ -1,0 +1,11 @@
+//! detlint fixture: a `parallel_for` fan-out with no declared roots.
+//!
+//! Without a `detlint: parallel-region roots=[…]` annotation the
+//! phase-safety analysis cannot see inside the region, so the call site
+//! itself must be flagged `parallel-region`.
+
+pub fn fan_out(pool: &Pool, n: usize) {
+    pool.parallel_for(n, Schedule::Dynamic { chunk: 1 }, |i| {
+        work(i);
+    });
+}

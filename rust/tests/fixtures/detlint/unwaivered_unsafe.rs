@@ -1,0 +1,9 @@
+//! detlint fixture: `unsafe` outside the audited-module allowlist.
+//!
+//! This file is not on `analysis::rules::UNSAFE_AUDITED`, so the block
+//! below must be flagged `unaudited-unsafe` even though it happens to
+//! be sound.
+
+pub fn read_first(v: &[u64]) -> u64 {
+    unsafe { *v.as_ptr() }
+}

@@ -1,0 +1,105 @@
+//! PhaseGuard acceptance: the runtime half of the determinism auditor.
+//!
+//! Two contracts. First, a deliberate parallel-phase shared write —
+//! the same violation `detlint` pins statically — must panic in a
+//! debug build the moment it happens (`GpuSim::probe_phase_violation`).
+//! Second, the guard must be a pure observer: runs with the guard
+//! armed are bit-identical to runs with it disabled, across workloads,
+//! thread counts, and schedules (mirroring `tests/telemetry.rs`).
+
+use parsim::config::{ClusterConfig, GpuConfig, Schedule};
+use parsim::stats::diff::diff_runs;
+use parsim::trace::workloads::Scale;
+use parsim::SimBuilder;
+
+fn builder(name: &str, threads: usize, schedule: Schedule) -> SimBuilder {
+    SimBuilder::new()
+        .gpu(GpuConfig::tiny())
+        .workload_named(name, Scale::Ci)
+        .threads(threads)
+        .schedule(schedule)
+}
+
+/// The runtime catch: a shared mutation (an icnt transfer) issued while
+/// the engine is inside the parallel SM fan-out must trip the guard.
+/// Only meaningful in debug builds — release compiles the guard away.
+#[cfg(debug_assertions)]
+#[test]
+#[should_panic(expected = "PhaseGuard")]
+fn mid_fanout_shared_write_panics_in_debug() {
+    let mut s = builder("nn", 4, Schedule::Static { chunk: 1 }).build().expect("valid config");
+    s.sim_mut().probe_phase_violation();
+}
+
+/// Same violation with the guard disabled: nothing fires, in any build.
+/// (`--no-phase-guard` / `SimConfig::phase_guard = false` is the escape
+/// hatch for perf runs.)
+#[test]
+fn disabled_guard_lets_the_probe_through() {
+    let mut s = builder("nn", 4, Schedule::Static { chunk: 1 })
+        .phase_guard(false)
+        .build()
+        .expect("valid config");
+    s.sim_mut().probe_phase_violation();
+}
+
+/// An ordinary run never trips the guard: every engine access pattern
+/// respects the sequential/parallel phase split.
+#[test]
+fn guarded_runs_complete_without_tripping() {
+    let mut s = builder("hotspot", 8, Schedule::Dynamic { chunk: 1 })
+        .phase_guard(true)
+        .build()
+        .expect("valid config");
+    s.run_to_completion().expect("guarded run");
+}
+
+fn run_with_guard(name: &str, threads: usize, schedule: Schedule, on: bool) -> parsim::GpuStats {
+    let mut s = builder(name, threads, schedule)
+        .phase_guard(on)
+        .build()
+        .expect("valid config");
+    s.run_to_completion().expect("run");
+    s.into_stats().expect("finished")
+}
+
+/// The observer gate: guard armed vs disabled, bit-identical statistics
+/// across workloads × threads {1, 4, 8} × both schedule families.
+#[test]
+fn guard_is_bit_identical_across_threads_and_schedules() {
+    for name in ["nn", "hotspot", "myocyte"] {
+        for threads in [1usize, 4, 8] {
+            for schedule in [Schedule::Static { chunk: 1 }, Schedule::Dynamic { chunk: 1 }] {
+                let off = run_with_guard(name, threads, schedule, false);
+                let on = run_with_guard(name, threads, schedule, true);
+                let d = diff_runs(&off, &on);
+                assert!(
+                    d.identical(),
+                    "{name} @{threads}t {}: PhaseGuard perturbed results:\n{}",
+                    schedule.name(),
+                    d.report()
+                );
+                assert_eq!(off.fingerprint(), on.fingerprint(), "{name} fingerprint");
+            }
+        }
+    }
+}
+
+/// The cluster engine shares the guard (fabric + per-GPU members): a
+/// guarded 2-GPU run completes and matches the unguarded fingerprint.
+#[test]
+fn cluster_guard_is_bit_identical() {
+    let run = |on: bool| {
+        let mut s = SimBuilder::new()
+            .gpu(GpuConfig::tiny())
+            .workload_named("tp_gemm", Scale::Ci)
+            .threads(4)
+            .phase_guard(on)
+            .cluster(ClusterConfig::p2p(2))
+            .build_cluster()
+            .expect("valid cluster config");
+        s.run_to_completion().expect("cluster run");
+        s.stats().expect("finished").fingerprint()
+    };
+    assert_eq!(run(false), run(true), "cluster fingerprint");
+}
