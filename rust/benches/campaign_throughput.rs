@@ -35,7 +35,7 @@ fn main() {
             workers,
             core_budget: host,
             force: true, // never let the cache short-circuit the measurement
-            quiet: true,
+            ..CampaignConfig::default()
         };
         let t0 = Instant::now();
         let report = campaign::run_campaign(&spec, &out, &cfg).expect("campaign run");

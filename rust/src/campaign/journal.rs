@@ -1,0 +1,335 @@
+//! The campaign's **write-ahead job journal** — the crash-recovery log
+//! behind `parsim campaign --resume`.
+//!
+//! The result store (`results.jsonl`) is only flushed when a campaign
+//! run completes, so a crash (OOM-kill, power loss, SIGKILL) mid-sweep
+//! would lose every job finished since the last flush. The journal
+//! closes that window: `journal.jsonl` in the campaign directory gets
+//! one durably appended line per job event —
+//!
+//! * `start` **before** a job begins simulating (so resume knows which
+//!   jobs were in flight at the moment of death and can restart them,
+//!   from a periodic checkpoint when one exists);
+//! * `done` with the **full result record inline** the moment a job
+//!   finishes (so resume recovers it without re-simulating);
+//! * `quarantined` when a job exhausted its retry budget (audit trail —
+//!   resume retries such jobs from scratch).
+//!
+//! Each line is `{crc:016x} {json}` — a content checksum over the JSON
+//! payload. On load, a line whose checksum does not match (torn write at
+//! the kill point) or that does not parse is **dropped and counted**,
+//! never fatal: the journal is an append-only log whose tail is expected
+//! to be ragged after a crash. Appends are followed by `sync_data`, so
+//! an acknowledged `done` survives the host dying one instruction later.
+//!
+//! Determinism: the journal is host-side bookkeeping. Replaying it only
+//! seeds the result store with records the simulator already produced —
+//! and every record is bit-deterministic — so a killed-and-resumed
+//! campaign converges to a byte-identical store (asserted by
+//! `tests/campaign.rs` and the CI kill-and-resume smoke job).
+
+use std::fs::{File, OpenOptions};
+use std::io::{self, Write as _};
+use std::path::{Path, PathBuf};
+
+use crate::engine::snapshot::hash_bytes;
+use crate::stats::export::{jsonl_str, parse_flat_json};
+
+use super::store::JobRecord;
+
+/// File name of the write-ahead journal inside a campaign directory.
+pub const JOURNAL_FILE: &str = "journal.jsonl";
+
+/// One replayed journal event.
+#[derive(Debug, Clone, PartialEq)]
+pub enum JournalEvent {
+    /// Job dispatched (written before simulation starts).
+    Start { key: String, hash: u64 },
+    /// Job finished; the full store record rides inline.
+    Done { record: JobRecord },
+    /// Job exhausted its retry budget and was quarantined.
+    Quarantined { key: String, reason: String },
+}
+
+/// Append-side handle. Every append is checksummed and fsynced.
+#[derive(Debug)]
+pub struct Journal {
+    file: File,
+    path: PathBuf,
+}
+
+/// What a tolerant journal load recovered.
+#[derive(Debug, Default)]
+pub struct JournalReplay {
+    pub events: Vec<JournalEvent>,
+    /// Lines dropped for bad checksum / unparsable payload (the ragged
+    /// tail a crash leaves behind).
+    pub dropped: usize,
+}
+
+impl JournalReplay {
+    /// Completed records, newest occurrence of each key winning.
+    pub fn completed(&self) -> Vec<&JobRecord> {
+        let mut by_key: std::collections::BTreeMap<&str, &JobRecord> =
+            std::collections::BTreeMap::new();
+        for ev in &self.events {
+            if let JournalEvent::Done { record } = ev {
+                by_key.insert(record.key.as_str(), record);
+            }
+        }
+        by_key.into_values().collect()
+    }
+
+    /// Keys that have a `start` but no `done` — in flight at the crash.
+    pub fn in_flight(&self) -> Vec<&str> {
+        let mut started: std::collections::BTreeSet<&str> = Default::default();
+        for ev in &self.events {
+            match ev {
+                JournalEvent::Start { key, .. } => {
+                    started.insert(key.as_str());
+                }
+                JournalEvent::Done { record } => {
+                    started.remove(record.key.as_str());
+                }
+                JournalEvent::Quarantined { .. } => {}
+            }
+        }
+        started.into_iter().collect()
+    }
+}
+
+/// Frame one payload as a journal line (no trailing newline).
+fn frame(json: &str) -> String {
+    format!("{:016x} {json}", hash_bytes(json.as_bytes()))
+}
+
+/// Unframe and verify one journal line. `None` = torn/corrupt line.
+fn unframe(line: &str) -> Option<&str> {
+    let (crc, json) = line.split_once(' ')?;
+    let crc = u64::from_str_radix(crc, 16).ok()?;
+    (crc == hash_bytes(json.as_bytes())).then_some(json)
+}
+
+impl Journal {
+    /// Open the journal for appending (creating it, and the campaign
+    /// directory, as needed).
+    pub fn open_append(dir: &Path) -> io::Result<Journal> {
+        std::fs::create_dir_all(dir)?;
+        let path = dir.join(JOURNAL_FILE);
+        let file = OpenOptions::new().create(true).append(true).open(&path)?;
+        Ok(Journal { file, path })
+    }
+
+    /// Delete any existing journal in `dir` (fresh, non-resumed runs
+    /// must not inherit a stale log).
+    pub fn reset(dir: &Path) -> io::Result<()> {
+        match std::fs::remove_file(dir.join(JOURNAL_FILE)) {
+            Ok(()) => Ok(()),
+            Err(e) if e.kind() == io::ErrorKind::NotFound => Ok(()),
+            Err(e) => Err(e),
+        }
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Durably append one payload: checksum-framed line + `sync_data`.
+    fn append(&mut self, json: &str) -> io::Result<()> {
+        let mut line = frame(json);
+        line.push('\n');
+        self.file.write_all(line.as_bytes())?;
+        self.file.sync_data()
+    }
+
+    /// Log that a job is about to run.
+    pub fn log_start(&mut self, key: &str, hash: u64) -> io::Result<()> {
+        let mut json = String::from("{");
+        jsonl_str(&mut json, "ev", "start", true);
+        jsonl_str(&mut json, "key", key, false);
+        jsonl_str(&mut json, "hash", &format!("{hash:016x}"), false);
+        json.push('}');
+        self.append(&json)
+    }
+
+    /// Log a finished job with its full record inline. The payload is
+    /// the record's own JSONL form plus an `ev` discriminant —
+    /// [`JobRecord::from_jsonl`] parses it back directly (unknown fields
+    /// are ignored by the flat-JSON reader).
+    pub fn log_done(&mut self, record: &JobRecord) -> io::Result<()> {
+        let rec = record.to_jsonl();
+        let body = rec.strip_prefix('{').expect("record JSONL starts with '{'");
+        let mut json = String::from("{");
+        jsonl_str(&mut json, "ev", "done", true);
+        json.push_str(", ");
+        json.push_str(body);
+        self.append(&json)
+    }
+
+    /// Log a job that exhausted its retries and was quarantined.
+    pub fn log_quarantined(&mut self, key: &str, reason: &str) -> io::Result<()> {
+        let mut json = String::from("{");
+        jsonl_str(&mut json, "ev", "quarantined", true);
+        jsonl_str(&mut json, "key", key, false);
+        jsonl_str(&mut json, "reason", reason, false);
+        json.push('}');
+        self.append(&json)
+    }
+}
+
+/// Load and replay the journal at `dir` (empty replay when none
+/// exists). Corrupt/torn lines are dropped and counted — a crash's
+/// ragged tail must never block resumption; only real I/O failure errs.
+pub fn load(dir: &Path) -> io::Result<JournalReplay> {
+    let path = dir.join(JOURNAL_FILE);
+    let text = match std::fs::read_to_string(&path) {
+        Ok(t) => t,
+        Err(e) if e.kind() == io::ErrorKind::NotFound => {
+            return Ok(JournalReplay::default());
+        }
+        Err(e) => return Err(e),
+    };
+    let mut replay = JournalReplay::default();
+    for line in text.lines() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        match unframe(line).and_then(parse_event) {
+            Some(ev) => replay.events.push(ev),
+            None => replay.dropped += 1,
+        }
+    }
+    Ok(replay)
+}
+
+/// Parse one verified payload. `None` = structurally invalid (counted
+/// as dropped by the caller).
+fn parse_event(json: &str) -> Option<JournalEvent> {
+    let fields = parse_flat_json(json).ok()?;
+    let get = |name: &str| -> Option<String> {
+        fields.iter().find(|(k, _)| k == name).and_then(|(_, v)| v.as_str()).map(String::from)
+    };
+    match get("ev")?.as_str() {
+        "start" => {
+            let key = get("key")?;
+            let hash = u64::from_str_radix(&get("hash")?, 16).ok()?;
+            Some(JournalEvent::Start { key, hash })
+        }
+        "done" => {
+            let record = JobRecord::from_jsonl(json).ok()?;
+            Some(JournalEvent::Done { record })
+        }
+        "quarantined" => {
+            let key = get("key")?;
+            let reason = get("reason")?;
+            Some(JournalEvent::Quarantined { key, reason })
+        }
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Schedule, StatsStrategy};
+    use crate::trace::workloads::Scale;
+
+    fn record(key: &str) -> JobRecord {
+        let spec = super::super::spec::JobSpec {
+            workload: "nn".into(),
+            scale: Scale::Ci,
+            gpu: "tiny".into(),
+            threads: 2,
+            schedule: Schedule::Static { chunk: 0 },
+            stats_strategy: StatsStrategy::PerSm,
+            seed: 1,
+            max_cycles: 0,
+            num_gpus: 1,
+            topology: super::super::spec::TOPOLOGY_SINGLE.into(),
+        };
+        let mut r = JobRecord {
+            key: spec.key(),
+            hash: 0x1234_5678_9abc_def0,
+            workload: "nn".into(),
+            scale: "ci".into(),
+            gpu: "tiny".into(),
+            gpus: 1,
+            topology: "single".into(),
+            threads: 2,
+            schedule: "static:0".into(),
+            stats: "per-sm".into(),
+            seed: 1,
+            kernels: 1,
+            total_gpu_cycles: 42,
+            total_warp_insts: 7,
+            total_thread_insts: 224,
+            unique_lines: 3,
+            comm_cycles: 0,
+            fabric_bytes: 0,
+            fingerprint: 0xFEED_FACE_CAFE_F00D,
+        };
+        r.key = key.to_string();
+        r
+    }
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("parsim_journal_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    #[test]
+    fn start_done_quarantine_round_trip() {
+        let dir = tmp_dir("rt");
+        let mut j = Journal::open_append(&dir).unwrap();
+        j.log_start("job-a gpus=1", 0xAB).unwrap();
+        j.log_done(&record("job-a gpus=1")).unwrap();
+        j.log_start("job-b gpus=1", 0xCD).unwrap();
+        j.log_quarantined("job-c gpus=1", "panicked: boom").unwrap();
+        let replay = load(&dir).unwrap();
+        assert_eq!(replay.dropped, 0);
+        assert_eq!(replay.events.len(), 4);
+        let done = replay.completed();
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0], &record("job-a gpus=1"));
+        assert_eq!(replay.in_flight(), vec!["job-b gpus=1"]);
+        assert!(matches!(
+            &replay.events[3],
+            JournalEvent::Quarantined { key, reason }
+                if key == "job-c gpus=1" && reason == "panicked: boom"
+        ));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn torn_tail_is_dropped_not_fatal() {
+        let dir = tmp_dir("torn");
+        let mut j = Journal::open_append(&dir).unwrap();
+        j.log_start("job-a gpus=1", 1).unwrap();
+        j.log_done(&record("job-a gpus=1")).unwrap();
+        // simulate a crash mid-append: a truncated line, a bad checksum,
+        // and garbage — all after the valid prefix
+        let path = dir.join(JOURNAL_FILE);
+        let mut text = std::fs::read_to_string(&path).unwrap();
+        text.push_str("0000000000000000 {\"ev\": \"start\", \"key\": \"x\"}\n");
+        text.push_str("deadbeef {\"ev\": \"sta");
+        std::fs::write(&path, text).unwrap();
+        let replay = load(&dir).unwrap();
+        assert_eq!(replay.dropped, 2, "both torn lines dropped");
+        assert_eq!(replay.events.len(), 2, "valid prefix fully recovered");
+        assert_eq!(replay.completed().len(), 1);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn reset_removes_and_missing_journal_is_empty() {
+        let dir = tmp_dir("reset");
+        assert_eq!(load(&dir).unwrap().events.len(), 0, "no dir → empty replay");
+        let mut j = Journal::open_append(&dir).unwrap();
+        j.log_start("k gpus=1", 2).unwrap();
+        Journal::reset(&dir).unwrap();
+        Journal::reset(&dir).unwrap(); // idempotent
+        assert_eq!(load(&dir).unwrap().events.len(), 0);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

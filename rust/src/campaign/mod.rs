@@ -17,7 +17,12 @@
 //! * [`store`] — the persistent JSONL + CSV result store under
 //!   `campaign_out/<name>/`, keyed by content hash: re-running a
 //!   campaign skips already-simulated jobs, and incremental sweeps only
-//!   simulate the delta.
+//!   simulate the delta. Corrupt store lines are quarantined to
+//!   `store.corrupt`, never silently dropped or fatal.
+//! * [`journal`] — the write-ahead job journal behind
+//!   `parsim campaign --resume`: a killed campaign replays it on the
+//!   next run, recovers every finished job without re-simulation, and
+//!   restarts in-flight jobs from their periodic checkpoints.
 //!
 //! Because every job is bit-deterministic (the paper's guarantee) and
 //! the store is ordered by job key rather than completion order, two
@@ -35,16 +40,18 @@
 //! println!("{}", report.summary());                 // rerun → 100% cache hits
 //! ```
 
+pub mod journal;
 pub mod scheduler;
 pub mod spec;
 pub mod store;
 
+pub use journal::{Journal, JournalEvent, JournalReplay, JOURNAL_FILE};
 pub use scheduler::{run_campaign, run_ordered, CampaignConfig, CampaignReport};
 pub use spec::{
     default_matrix, parse_schedule_token, parse_strategy_token, schedule_token, CampaignSpec,
     JobSpec, STORE_SCHEMA_VERSION, TOPOLOGY_SINGLE,
 };
-pub use store::{JobRecord, ResultStore, RESULTS_CSV, RESULTS_JSONL};
+pub use store::{JobRecord, ResultStore, RESULTS_CSV, RESULTS_JSONL, STORE_CORRUPT};
 
 /// Worker count for harness-level fan-out ([`run_ordered`] call sites in
 /// `crate::harness`): the `PARSIM_CAMPAIGN_WORKERS` environment variable

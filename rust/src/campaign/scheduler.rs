@@ -12,17 +12,34 @@
 //! slots indexed by job id, so the aggregated output is ordered by job
 //! key regardless of completion order: the campaign store is
 //! byte-deterministic even though execution is racy in time.
+//!
+//! On top of that sits **crash safety and fault isolation**:
+//!
+//! * every job event is durably appended to a write-ahead journal
+//!   ([`super::journal`]) so a killed campaign resumes with
+//!   `--resume` instead of re-simulating finished jobs;
+//! * long jobs periodically save engine snapshots
+//!   (`--checkpoint-every N`) and restart from them on resume;
+//! * each job runs inside a panic boundary with a deterministic retry
+//!   budget (`--retries N`); a job that exhausts it is **quarantined**
+//!   and reported in the summary — one bad job never aborts the sweep.
+//!   Wedged jobs are cancelled by the engine's per-kernel cycle
+//!   watchdog (`max_cycles`) and take the same quarantine path.
 
+use std::fmt::Write as _;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::path::Path;
+use std::sync::Mutex;
 use std::time::Instant;
 
 use crate::config::Schedule;
 use crate::engine::pool::ThreadPool;
-use crate::engine::{DisjointSlice, SimBuilder};
+use crate::engine::{DisjointSlice, SessionStatus, SimBuilder, StopCondition};
 use crate::trace::workloads;
 
+use super::journal::{self, Journal};
 use super::spec::{CampaignSpec, JobSpec};
-use super::store::{JobRecord, ResultStore};
+use super::store::{JobRecord, ResultStore, STORE_CORRUPT};
 
 /// Run `f(i)` for every `i in 0..n` on up to `workers` threads
 /// (work-stealing via the pool's dynamic schedule) and return the
@@ -83,12 +100,31 @@ pub struct CampaignConfig {
     pub force: bool,
     /// Suppress per-job progress lines.
     pub quiet: bool,
+    /// Crash recovery: replay the write-ahead journal before
+    /// scheduling — jobs a previous (killed) run finished are recovered
+    /// from the journal without re-simulation, and restarted jobs resume
+    /// from their latest checkpoint when one exists.
+    pub resume: bool,
+    /// Extra attempts granted to a job that panics or errors before it
+    /// is quarantined (total attempts = `retries + 1`).
+    pub retries: u32,
+    /// When > 0, each running job saves a crash-recovery snapshot every
+    /// this many GPU cycles under `<campaign dir>/checkpoints/`.
+    pub checkpoint_every: u64,
 }
 
 impl Default for CampaignConfig {
     fn default() -> Self {
         let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
-        CampaignConfig { workers: cores.min(4), core_budget: cores, force: false, quiet: true }
+        CampaignConfig {
+            workers: cores.min(4),
+            core_budget: cores,
+            force: false,
+            quiet: true,
+            resume: false,
+            retries: 0,
+            checkpoint_every: 0,
+        }
     }
 }
 
@@ -108,6 +144,13 @@ pub struct CampaignReport {
     /// Files written into the store directory.
     pub files: Vec<String>,
     pub out_dir: std::path::PathBuf,
+    /// Jobs recovered from the write-ahead journal on `--resume`
+    /// (finished by a previous killed run, not re-simulated).
+    pub recovered: usize,
+    /// `(job key, reason)` for every job that exhausted its retry budget
+    /// this run. The sweep completes around them; exit status is the
+    /// caller's call.
+    pub quarantined: Vec<(String, String)>,
 }
 
 impl CampaignReport {
@@ -123,7 +166,7 @@ impl CampaignReport {
 
     /// Human summary for the CLI.
     pub fn summary(&self) -> String {
-        format!(
+        let mut out = format!(
             "campaign {:?}: {} job(s) — {} simulated, {} cache hit(s) ({:.0}%)\n\
              workers {} × {} SM-thread(s)/job, {:.2}s wall, {:.2} job/s\n\
              store: {} ({})",
@@ -138,46 +181,217 @@ impl CampaignReport {
             self.jobs_per_s(),
             self.out_dir.display(),
             self.files.join(", "),
-        )
+        );
+        if self.recovered > 0 {
+            let _ = write!(
+                out,
+                "\nrecovered {} job(s) from the journal (crash recovery)",
+                self.recovered
+            );
+        }
+        if !self.quarantined.is_empty() {
+            let _ = write!(out, "\nquarantined {} job(s):", self.quarantined.len());
+            for (key, reason) in &self.quarantined {
+                let _ = write!(out, "\n  {key}: {reason}");
+            }
+        }
+        out
     }
+}
+
+/// Per-job crash-recovery policy handed to [`run_job`].
+struct JobRecovery<'a> {
+    /// This job's snapshot file (`<campaign dir>/checkpoints/<hash>.snap`).
+    path: &'a Path,
+    /// Save a snapshot every this many cycles (0 = never).
+    every: u64,
+    /// Resume from `path` when it exists.
+    resume: bool,
 }
 
 /// Simulate one job at the given effective thread count (on the session
 /// API; `CampaignSpec::validate` ran before dispatch, so build errors
-/// here are scheduler bugs, not user input). Cluster jobs (any topology
-/// other than `single`) run on the cluster engine; both paths land in
-/// the same [`JobRecord`] shape.
-fn run_job(spec: &JobSpec, hash: u64, effective_threads: usize) -> JobRecord {
-    let gpu = spec.build_gpu().expect("job validated before dispatch");
-    if let Some(cluster) =
-        spec.build_cluster_config().expect("job validated before dispatch")
-    {
-        let mut session = SimBuilder::new()
-            .gpu(gpu)
-            .sim(spec.to_sim_config(effective_threads))
-            .workload_named(spec.workload.as_str(), spec.scale)
-            .cluster(cluster)
-            .build_cluster()
-            .expect("job validated before dispatch");
-        session.run_to_completion().expect("campaign job runs to completion");
-        let stats = session.into_stats().expect("session finished");
-        return JobRecord::from_cluster_stats(spec, hash, &stats);
+/// here indicate a scheduler bug — but they are *reported*, not
+/// panicked, so one bad job cannot abort the sweep). Cluster jobs (any
+/// topology other than `single`) run on the cluster engine; both paths
+/// land in the same [`JobRecord`] shape.
+///
+/// Crash recovery per [`JobRecovery`]: optionally resume from the job's
+/// checkpoint, and periodically save one. A checkpoint that fails to
+/// restore (corrupt file, config drift since it was written) is
+/// discarded and the job restarts from scratch — a stale checkpoint
+/// must never wedge a resumed campaign. Wedged simulations are caught
+/// by the engine's own cycle watchdog (`max_cycles` →
+/// `SimError::CycleLimitExceeded`), which surfaces here as an `Err` and
+/// flows into the retry/quarantine path.
+fn run_job(
+    spec: &JobSpec,
+    hash: u64,
+    effective_threads: usize,
+    rec: &JobRecovery<'_>,
+) -> Result<JobRecord, String> {
+    // fault-injection hook (crash-safety tests + CI smoke job): any job
+    // whose key contains the marker panics instead of simulating,
+    // exercising the retry → quarantine path through the public API
+    if let Ok(marker) = std::env::var("PARSIM_FAULT_INJECT") {
+        if !marker.is_empty() && spec.key().contains(&marker) {
+            panic!("fault injection: job {}", spec.key());
+        }
     }
-    let wl = workloads::build(&spec.workload, spec.scale).expect("job validated before dispatch");
-    let mut session = SimBuilder::new()
-        .gpu(gpu)
-        .sim(spec.to_sim_config(effective_threads))
-        .workload(wl)
-        .build()
-        .expect("job validated before dispatch");
-    session.run_to_completion().expect("campaign job runs to completion");
-    let stats = session.into_stats().expect("session finished");
-    JobRecord::from_stats(spec, hash, &stats)
+    let gpu = spec.build_gpu()?;
+    let resume = rec.resume && rec.path.exists();
+    if let Some(cluster) = spec.build_cluster_config()? {
+        let make = |resume: bool| {
+            let mut b = SimBuilder::new()
+                .gpu(gpu.clone())
+                .sim(spec.to_sim_config(effective_threads))
+                .workload_named(spec.workload.as_str(), spec.scale)
+                .cluster(cluster.clone());
+            if resume {
+                b = b.resume_from(rec.path);
+            }
+            b.build_cluster().map_err(|e| e.to_string())
+        };
+        let mut session = match make(resume) {
+            Ok(s) => s,
+            Err(e) if resume => {
+                eprintln!(
+                    "warning: checkpoint {} unusable ({e}); restarting job from scratch",
+                    rec.path.display()
+                );
+                let _ = std::fs::remove_file(rec.path);
+                make(false)?
+            }
+            Err(e) => return Err(e),
+        };
+        if rec.every > 0 {
+            loop {
+                match session
+                    .run(StopCondition::CycleBudget(rec.every))
+                    .map_err(|e| e.to_string())?
+                {
+                    SessionStatus::Finished => break,
+                    SessionStatus::Running => {
+                        session.save_snapshot(rec.path).map_err(|e| e.to_string())?;
+                    }
+                }
+            }
+        } else {
+            session.run_to_completion().map_err(|e| e.to_string())?;
+        }
+        let stats = session.into_stats().map_err(|e| e.to_string())?;
+        return Ok(JobRecord::from_cluster_stats(spec, hash, &stats));
+    }
+    let wl = workloads::build(&spec.workload, spec.scale)
+        .ok_or_else(|| format!("unknown workload {:?}", spec.workload))?;
+    let make = |resume: bool| {
+        let mut b = SimBuilder::new()
+            .gpu(gpu.clone())
+            .sim(spec.to_sim_config(effective_threads))
+            .workload(wl.clone());
+        if resume {
+            b = b.resume_from(rec.path);
+        }
+        b.build().map_err(|e| e.to_string())
+    };
+    let mut session = match make(resume) {
+        Ok(s) => s,
+        Err(e) if resume => {
+            eprintln!(
+                "warning: checkpoint {} unusable ({e}); restarting job from scratch",
+                rec.path.display()
+            );
+            let _ = std::fs::remove_file(rec.path);
+            make(false)?
+        }
+        Err(e) => return Err(e),
+    };
+    if rec.every > 0 {
+        loop {
+            match session.run(StopCondition::CycleBudget(rec.every)).map_err(|e| e.to_string())? {
+                SessionStatus::Finished => break,
+                SessionStatus::Running => {
+                    session.save_snapshot(rec.path).map_err(|e| e.to_string())?;
+                }
+            }
+        }
+    } else {
+        session.run_to_completion().map_err(|e| e.to_string())?;
+    }
+    let stats = session.into_stats().map_err(|e| e.to_string())?;
+    Ok(JobRecord::from_stats(spec, hash, &stats))
+}
+
+/// Best-effort text of a caught panic payload.
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> &str {
+    if let Some(s) = payload.downcast_ref::<String>() {
+        s.as_str()
+    } else if let Some(s) = payload.downcast_ref::<&str>() {
+        s
+    } else {
+        "non-string panic payload"
+    }
+}
+
+/// Fault-isolated job execution: run one job inside a panic boundary
+/// with a deterministic retry budget. Returns the record, or — once the
+/// budget is exhausted — the final failure reason for the caller to
+/// quarantine. The campaign outlives its worst job.
+///
+/// Each retry starts clean: the job's checkpoint is deleted between
+/// attempts, since a deterministic failure would otherwise just replay
+/// from the checkpoint into the same failure.
+fn run_job_isolated(
+    spec: &JobSpec,
+    hash: u64,
+    effective_threads: usize,
+    rec: &JobRecovery<'_>,
+    retries: u32,
+) -> Result<JobRecord, String> {
+    let mut last = String::new();
+    for attempt in 0..=retries {
+        // the inner thread pool re-raises worker panics on this thread
+        // after its join barrier completes, so one boundary here sees
+        // both caller-share and worker panics — and the pool stays usable
+        let out =
+            catch_unwind(AssertUnwindSafe(|| run_job(spec, hash, effective_threads, rec)));
+        match out {
+            Ok(Ok(record)) => return Ok(record),
+            Ok(Err(e)) => last = e,
+            Err(payload) => last = format!("panicked: {}", panic_message(payload.as_ref())),
+        }
+        let _ = std::fs::remove_file(rec.path);
+        if attempt < retries {
+            eprintln!(
+                "[campaign] attempt {}/{} failed for {}: {last}; retrying",
+                attempt + 1,
+                retries + 1,
+                spec.key()
+            );
+        }
+    }
+    Err(last)
+}
+
+/// Outcome of one dispatched job (index-ordered slot in the sweep).
+enum JobOutcome {
+    Done(JobRecord),
+    Quarantined { key: String, reason: String },
+}
+
+/// Warn (never abort) when a journal append fails — the record still
+/// reaches the store at the final flush; only crash *recovery* coverage
+/// is degraded.
+fn journal_warn(res: std::io::Result<()>) {
+    if let Err(e) = res {
+        eprintln!("warning: journal append: {e}");
+    }
 }
 
 /// Execute a campaign: open the store under `out_root/<campaign name>`,
-/// skip jobs whose content hash is already cached, run the remainder
-/// concurrently, and flush the store sorted by job key.
+/// replay the write-ahead journal when resuming, skip jobs whose
+/// content hash is already cached, run the remainder concurrently under
+/// per-job fault isolation, and flush the store sorted by job key.
 pub fn run_campaign(
     spec: &CampaignSpec,
     out_root: &Path,
@@ -186,6 +400,39 @@ pub fn run_campaign(
     spec.validate().map_err(|errs| format!("invalid campaign:\n  {}", errs.join("\n  ")))?;
     let dir = out_root.join(&spec.name);
     let mut store = ResultStore::open(&dir)?;
+    if store.quarantined() > 0 {
+        eprintln!(
+            "warning: {} corrupt store line(s) quarantined to {}; affected jobs re-simulate",
+            store.quarantined(),
+            dir.join(STORE_CORRUPT).display()
+        );
+    }
+
+    // crash recovery: seed the store with every job the journal proves
+    // finished before partitioning, so those jobs count as cache hits
+    let mut recovered = 0usize;
+    if cfg.resume {
+        let replay =
+            journal::load(&dir).map_err(|e| format!("load journal {}: {e}", dir.display()))?;
+        if replay.dropped > 0 {
+            eprintln!(
+                "warning: journal: {} torn line(s) dropped (expected after a crash)",
+                replay.dropped
+            );
+        }
+        for rec in replay.completed() {
+            if store.lookup(&rec.key, rec.hash).is_none() {
+                store.insert(rec.clone());
+                recovered += 1;
+            }
+        }
+        // jobs with a `start` but no `done` were in flight at the kill:
+        // they simply stay in the todo partition below and restart —
+        // from their checkpoint when one was saved
+    } else {
+        // a fresh (non-resumed) run must not inherit a stale journal
+        Journal::reset(&dir).map_err(|e| format!("reset journal {}: {e}", dir.display()))?;
+    }
 
     // hash every job once, then partition into cache hits and work
     let hashes: Vec<u64> =
@@ -204,24 +451,63 @@ pub fn run_campaign(
     let workers = cfg.workers.clamp(1, todo.len().max(1));
     let threads_per_job = (cfg.core_budget / workers).max(1);
 
+    let journal = Mutex::new(
+        Journal::open_append(&dir).map_err(|e| format!("open journal {}: {e}", dir.display()))?,
+    );
+    // poison-tolerant lock: appends run outside the job's panic
+    // boundary, so a poisoned mutex only means a previous *append*
+    // panicked — the file handle itself is still sound
+    let with_journal = |f: &dyn Fn(&mut Journal) -> std::io::Result<()>| {
+        let mut j = journal.lock().unwrap_or_else(|p| p.into_inner());
+        journal_warn(f(&mut j));
+    };
+    let ckpt_dir = dir.join("checkpoints");
+
     let t0 = Instant::now();
-    let records = run_ordered(todo.len(), workers, |i| {
+    let outcomes = run_ordered(todo.len(), workers, |i| {
         let (_, job, hash) = todo[i];
         let effective = job.threads.min(threads_per_job);
-        let rec = run_job(job, hash, effective);
-        if !cfg.quiet {
-            eprintln!(
-                "[campaign] {} done ({} cycles, fp {:016x})",
-                rec.key, rec.total_gpu_cycles, rec.fingerprint
-            );
+        let key = job.key();
+        with_journal(&|j| j.log_start(&key, hash));
+        let ckpt_path = ckpt_dir.join(format!("{hash:016x}.snap"));
+        let recovery = JobRecovery {
+            path: &ckpt_path,
+            every: cfg.checkpoint_every,
+            resume: cfg.resume,
+        };
+        match run_job_isolated(job, hash, effective, &recovery, cfg.retries) {
+            Ok(rec) => {
+                // job is durably journaled below; its checkpoint is now
+                // dead weight
+                let _ = std::fs::remove_file(&ckpt_path);
+                with_journal(&|j| j.log_done(&rec));
+                if !cfg.quiet {
+                    eprintln!(
+                        "[campaign] {} done ({} cycles, fp {:016x})",
+                        rec.key, rec.total_gpu_cycles, rec.fingerprint
+                    );
+                }
+                JobOutcome::Done(rec)
+            }
+            Err(reason) => {
+                with_journal(&|j| j.log_quarantined(&key, &reason));
+                eprintln!("[campaign] quarantined {key}: {reason}");
+                JobOutcome::Quarantined { key, reason }
+            }
         }
-        rec
     });
     let wall_s = t0.elapsed().as_secs_f64();
 
-    let simulated = records.len();
-    for rec in records {
-        store.insert(rec);
+    let mut simulated = 0usize;
+    let mut quarantined: Vec<(String, String)> = Vec::new();
+    for out in outcomes {
+        match out {
+            JobOutcome::Done(rec) => {
+                simulated += 1;
+                store.insert(rec);
+            }
+            JobOutcome::Quarantined { key, reason } => quarantined.push((key, reason)),
+        }
     }
     let files = store.flush().map_err(|e| format!("flush store {}: {e}", dir.display()))?;
 
@@ -235,6 +521,8 @@ pub fn run_campaign(
         reg.counter("campaign.total_jobs", spec.len() as u64);
         reg.counter("campaign.simulated", simulated as u64);
         reg.counter("campaign.cache_hits", cache_hits as u64);
+        reg.counter("campaign.recovered", recovered as u64);
+        reg.counter("campaign.quarantined", quarantined.len() as u64);
         reg.gauge("campaign.workers", workers as u64);
         reg.gauge("campaign.threads_per_job", threads_per_job as u64);
         let body = crate::stats::export::metrics_jsonl(0, &reg);
@@ -253,6 +541,8 @@ pub fn run_campaign(
         wall_s,
         files,
         out_dir: dir,
+        recovered,
+        quarantined,
     })
 }
 
@@ -300,7 +590,7 @@ mod tests {
     fn core_budget_math() {
         // 8-core budget across 4 workers → 2 threads per job; a job
         // requesting 1 keeps 1.
-        let cfg = CampaignConfig { workers: 4, core_budget: 8, force: false, quiet: true };
+        let cfg = CampaignConfig { workers: 4, core_budget: 8, ..CampaignConfig::default() };
         let workers = cfg.workers.clamp(1, 12);
         let per_job = (cfg.core_budget / workers).max(1);
         assert_eq!((workers, per_job), (4, 2));

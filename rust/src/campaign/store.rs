@@ -7,6 +7,9 @@
 //!   memory, and jobs whose `(key, content-hash)` pair is already
 //!   present are not re-simulated.
 //! * `results.csv` — the same records as a spreadsheet-friendly table.
+//! * `store.corrupt` — quarantine: store lines that failed to parse on
+//!   open (e.g. a tail torn by a crash mid-write), appended verbatim
+//!   with a `file:line: reason` header so nothing is silently lost.
 //!
 //! Both files are deterministic byte-for-byte: records are ordered by
 //! job key (never by completion order), all values are integers, hex
@@ -256,20 +259,29 @@ impl JobRecord {
 pub struct ResultStore {
     dir: PathBuf,
     records: BTreeMap<String, JobRecord>,
+    /// Lines quarantined to `store.corrupt` by the last `open`.
+    quarantined: usize,
 }
 
 /// File name of the JSONL store inside a campaign directory.
 pub const RESULTS_JSONL: &str = "results.jsonl";
 /// File name of the CSV mirror inside a campaign directory.
 pub const RESULTS_CSV: &str = "results.csv";
+/// Quarantine file for store lines that failed to parse on open.
+pub const STORE_CORRUPT: &str = "store.corrupt";
 
 impl ResultStore {
     /// Open (or create) the store at `dir`, loading any existing
-    /// `results.jsonl`. A corrupt line is a hard error — silently
-    /// dropping cached results would masquerade as cache misses and
-    /// silently re-simulate.
+    /// `results.jsonl`. A malformed or truncated line (a crash can tear
+    /// the file's tail) is **quarantined**: appended verbatim, with a
+    /// `file:line: reason` header, to `store.corrupt`, surfaced via
+    /// [`ResultStore::quarantined`], and skipped — the healthy records
+    /// around it still load. Silently dropping it would masquerade as a
+    /// cache miss; hard-failing would hold the whole campaign hostage to
+    /// one torn line. Quarantined jobs simply re-simulate.
     pub fn open(dir: &Path) -> Result<ResultStore, String> {
         let mut records = BTreeMap::new();
+        let mut corrupt: Vec<String> = Vec::new();
         let path = dir.join(RESULTS_JSONL);
         if path.exists() {
             let text = std::fs::read_to_string(&path)
@@ -278,8 +290,17 @@ impl ResultStore {
                 if line.trim().is_empty() {
                     continue;
                 }
-                let rec = JobRecord::from_jsonl(line)
-                    .map_err(|e| format!("{}:{}: {e}", path.display(), i + 1))?;
+                let rec = match JobRecord::from_jsonl(line) {
+                    Ok(rec) => rec,
+                    Err(e) => {
+                        corrupt.push(format!(
+                            "# {}:{}: {e}\n{line}\n",
+                            path.display(),
+                            i + 1
+                        ));
+                        continue;
+                    }
+                };
                 // migration: drop pre-v2 records — their keys differ
                 // from the current format, so keeping them would leave
                 // permanently stale rows beside the re-simulated ones
@@ -288,7 +309,26 @@ impl ResultStore {
                 }
             }
         }
-        Ok(ResultStore { dir: dir.to_path_buf(), records })
+        if !corrupt.is_empty() {
+            use std::io::Write as _;
+            let qpath = dir.join(STORE_CORRUPT);
+            let mut f = std::fs::OpenOptions::new()
+                .create(true)
+                .append(true)
+                .open(&qpath)
+                .map_err(|e| format!("open {}: {e}", qpath.display()))?;
+            for entry in &corrupt {
+                f.write_all(entry.as_bytes())
+                    .map_err(|e| format!("write {}: {e}", qpath.display()))?;
+            }
+        }
+        Ok(ResultStore { dir: dir.to_path_buf(), records, quarantined: corrupt.len() })
+    }
+
+    /// Lines the last `open` quarantined to `store.corrupt` (0 for a
+    /// healthy store).
+    pub fn quarantined(&self) -> usize {
+        self.quarantined
     }
 
     /// Cache lookup: a hit requires the key to exist **and** the content
@@ -340,17 +380,19 @@ impl ResultStore {
         out
     }
 
-    /// Write `results.jsonl` + `results.csv` atomically (tmp + rename).
-    /// Returns the file names written.
+    /// Write `results.jsonl` + `results.csv` atomically **and durably**
+    /// (tmp + fsync + rename + directory fsync, via
+    /// [`crate::engine::snapshot::write_atomic`]): a crash mid-flush
+    /// leaves either the old file or the new one, never a torn hybrid,
+    /// and an acknowledged flush survives power loss. Returns the file
+    /// names written.
     pub fn flush(&self) -> io::Result<Vec<String>> {
-        std::fs::create_dir_all(&self.dir)?;
         let mut written = Vec::new();
         for (name, content) in
             [(RESULTS_JSONL, self.render_jsonl()), (RESULTS_CSV, self.render_csv())]
         {
-            let tmp = self.dir.join(format!("{name}.tmp"));
-            std::fs::write(&tmp, &content)?;
-            std::fs::rename(&tmp, self.dir.join(name))?;
+            crate::engine::snapshot::write_atomic(&self.dir.join(name), content.as_bytes())
+                .map_err(|e| io::Error::new(io::ErrorKind::Other, e.to_string()))?;
             written.push(name.to_string());
         }
         Ok(written)
@@ -470,19 +512,37 @@ mod tests {
     }
 
     #[test]
-    fn corrupt_store_is_a_hard_error() {
+    fn corrupt_lines_are_quarantined_not_fatal() {
         let dir = std::env::temp_dir().join(format!("parsim_store_bad_{}", std::process::id()));
         let _ = std::fs::remove_dir_all(&dir);
         std::fs::create_dir_all(&dir).unwrap();
-        std::fs::write(dir.join(RESULTS_JSONL), "not json\n").unwrap();
-        let e = ResultStore::open(&dir).unwrap_err();
-        assert!(e.contains("results.jsonl:1"), "{e}");
+        // healthy record sandwiched between garbage and a torn tail
+        let good = record().to_jsonl();
+        std::fs::write(
+            dir.join(RESULTS_JSONL),
+            format!("not json\n{good}\n{{\"key\": \"torn"),
+        )
+        .unwrap();
+        let st = ResultStore::open(&dir).expect("open survives corrupt lines");
+        assert_eq!(st.quarantined(), 2, "both bad lines quarantined");
+        assert_eq!(st.len(), 1, "healthy record still loads");
+        let r = record();
+        assert_eq!(st.lookup(&r.key, r.hash), Some(&r));
+        // quarantine file carries the verbatim lines + file:line headers
+        let q = std::fs::read_to_string(dir.join(STORE_CORRUPT)).unwrap();
+        assert!(q.contains("results.jsonl:1"), "{q}");
+        assert!(q.contains("not json"), "{q}");
+        assert!(q.contains("results.jsonl:3"), "{q}");
+        // reopening with the same file appends again (audit log), still ok
+        let st2 = ResultStore::open(&dir).unwrap();
+        assert_eq!(st2.quarantined(), 2);
         std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]
     fn csv_mirror_has_one_row_per_record() {
-        let mut st = ResultStore { dir: PathBuf::from("."), records: BTreeMap::new() };
+        let mut st =
+            ResultStore { dir: PathBuf::from("."), records: BTreeMap::new(), quarantined: 0 };
         st.insert(record());
         let mut r2 = record();
         r2.key = "a different key".into();

@@ -260,6 +260,97 @@ impl Fabric {
         }
         mix64(mix2(h, x))
     }
+
+    /// Serialize the fabric's full state. Heap layout is not canonical,
+    /// so in-flight packets are written sorted by `(ready_cycle, seq)` —
+    /// the exact pop order — giving byte-identical snapshots for
+    /// equivalent states; [`Fabric::restore`] re-pushes them, which
+    /// rebuilds an equivalent heap.
+    pub(crate) fn snap(&self, w: &mut crate::engine::snapshot::SnapWriter) {
+        w.len(self.num_gpus);
+        for dst in 0..self.num_gpus {
+            let mut pkts: Vec<FabricPacket> =
+                self.per_dst[dst].iter().map(|&Due(p)| p).collect();
+            pkts.sort_by_key(|p| (p.ready_cycle, p.seq));
+            w.len(pkts.len());
+            for p in &pkts {
+                p.snap(w);
+            }
+            w.len(self.eject[dst].len());
+            for p in &self.eject[dst] {
+                p.snap(w);
+            }
+        }
+        w.u64(self.seq);
+        w.u64(self.stats.packets_delivered);
+        w.u64(self.stats.bytes_delivered);
+        w.u64(self.stats.traffic_fp);
+        w.u64(self.stats.backpressure_stalls);
+    }
+
+    pub(crate) fn restore(
+        &mut self,
+        r: &mut crate::engine::snapshot::SnapReader,
+    ) -> Result<(), crate::engine::snapshot::SnapshotError> {
+        let n = r.len()?;
+        if n != self.num_gpus {
+            return Err(r.corrupt(format!(
+                "fabric has {n} nodes, engine has {}",
+                self.num_gpus
+            )));
+        }
+        self.in_flight = 0;
+        for dst in 0..self.num_gpus {
+            self.per_dst[dst].clear();
+            self.eject[dst].clear();
+            let np = r.len()?;
+            for _ in 0..np {
+                let p = FabricPacket::restore(r)?;
+                if p.dst as usize != dst {
+                    return Err(r.corrupt(format!(
+                        "packet for dst {} filed under node {dst}",
+                        p.dst
+                    )));
+                }
+                self.per_dst[dst].push(Due(p));
+                self.in_flight += 1;
+            }
+            let ne = r.len()?;
+            for _ in 0..ne {
+                let p = FabricPacket::restore(r)?;
+                self.eject[dst].push_back(p);
+                self.in_flight += 1;
+            }
+        }
+        self.seq = r.u64()?;
+        self.stats.packets_delivered = r.u64()?;
+        self.stats.bytes_delivered = r.u64()?;
+        self.stats.traffic_fp = r.u64()?;
+        self.stats.backpressure_stalls = r.u64()?;
+        Ok(())
+    }
+}
+
+impl FabricPacket {
+    pub(crate) fn snap(&self, w: &mut crate::engine::snapshot::SnapWriter) {
+        w.u32(self.src);
+        w.u32(self.dst);
+        w.u32(self.size_bytes);
+        w.u64(self.ready_cycle);
+        w.u64(self.seq);
+    }
+
+    pub(crate) fn restore(
+        r: &mut crate::engine::snapshot::SnapReader,
+    ) -> Result<Self, crate::engine::snapshot::SnapshotError> {
+        Ok(FabricPacket {
+            src: r.u32()?,
+            dst: r.u32()?,
+            size_bytes: r.u32()?,
+            ready_cycle: r.u64()?,
+            seq: r.u64()?,
+        })
+    }
 }
 
 #[cfg(test)]

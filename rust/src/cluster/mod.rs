@@ -73,11 +73,14 @@
 pub mod fabric;
 
 use std::collections::VecDeque;
+use std::path::{Path, PathBuf};
 use std::time::Instant;
 
 use crate::config::{ClusterConfig, GpuConfig, Schedule, SimConfig, TelemetryConfig};
 use crate::core::Sm;
 use crate::engine::pool::ThreadPool;
+use crate::engine::session::{gpu_config_hash, sim_config_hash, workload_hash};
+use crate::engine::snapshot::{SnapFlavor, SnapReader, SnapWriter, SnapshotError};
 use crate::engine::{
     CycleView, DisjointSlice, GpuSim, Observer, SessionFingerprint, SessionStatus, SimError,
     StopCondition,
@@ -756,6 +759,115 @@ impl ClusterSim {
         }
     }
 
+    /// Serialize the full cluster state: the lock-step state machine,
+    /// per-GPU session bookkeeping, the fabric (including packets in
+    /// flight mid-communication), and every member GPU's complete model
+    /// state. Telemetry-only counters (`ff_jumps`, `ff_cycles_skipped`,
+    /// trace buffers) restart fresh on resume — they never feed
+    /// simulated state or final statistics.
+    fn snap_state(&self, w: &mut SnapWriter) {
+        w.section("cluster");
+        let (tag, k) = match self.phase {
+            Phase::Compute { kernel } => (1u8, kernel),
+            Phase::Comm { kernel } => (2u8, kernel),
+            Phase::Done => (3u8, 0),
+        };
+        w.u8(tag);
+        w.len(k);
+        w.bool(self.kernel_started);
+        w.u64(self.cluster_cycle);
+        w.u64(self.comm_cycles);
+        w.u64(self.comm_start);
+        w.len(self.gpus.len());
+        for g in 0..self.gpus.len() {
+            w.bool(self.gpu_done[g]);
+            w.len(self.completed[g].len());
+            for ks in &self.completed[g] {
+                ks.snap(w);
+            }
+            w.u64(self.completed_warp_insts[g]);
+            w.len(self.pending[g].len());
+            for &(dst, bytes) in &self.pending[g] {
+                w.u32(dst);
+                w.u32(bytes);
+            }
+            w.u64(self.sent_bytes[g]);
+            w.u64(self.recv_bytes[g]);
+        }
+        w.section("fabric");
+        self.fabric.snap(w);
+        for gpu in &self.gpus {
+            gpu.snap_state(w);
+        }
+    }
+
+    /// Mirror image of [`ClusterSim::snap_state`] — overwrites the
+    /// freshly constructed engine's dynamic state. A GPU is mid-kernel
+    /// iff the snapshot was taken in a compute phase whose kernel had
+    /// started and that GPU had not yet drained it (`finish_kernel`
+    /// unbinds the kernel from every SM, so parked/comm-phase GPUs
+    /// restore kernel-less).
+    fn restore_state(&mut self, r: &mut SnapReader) -> Result<(), SnapshotError> {
+        r.section("cluster")?;
+        let tag = r.u8()?;
+        let k = r.len()?;
+        let kernels = self.wl.kernels_per_gpu();
+        if k >= kernels {
+            return Err(r.corrupt(format!(
+                "kernel index {k} out of range for {kernels} kernel(s) per GPU"
+            )));
+        }
+        self.phase = match tag {
+            1 => Phase::Compute { kernel: k },
+            2 => Phase::Comm { kernel: k },
+            _ => {
+                return Err(r.corrupt(format!("phase tag {tag} is not resumable")));
+            }
+        };
+        self.kernel_started = r.bool()?;
+        self.cluster_cycle = r.u64()?;
+        self.comm_cycles = r.u64()?;
+        self.comm_start = r.u64()?;
+        let n = r.len()?;
+        if n != self.gpus.len() {
+            return Err(r.corrupt(format!(
+                "snapshot has {n} GPU(s), cluster has {}",
+                self.gpus.len()
+            )));
+        }
+        for g in 0..n {
+            self.gpu_done[g] = r.bool()?;
+            let nk = r.len()?;
+            self.completed[g].clear();
+            for _ in 0..nk {
+                self.completed[g].push(KernelStats::restore(r)?);
+            }
+            self.completed_warp_insts[g] = r.u64()?;
+            let np = r.len()?;
+            self.pending[g].clear();
+            for _ in 0..np {
+                let dst = r.u32()?;
+                let bytes = r.u32()?;
+                self.pending[g].push_back((dst, bytes));
+            }
+            self.sent_bytes[g] = r.u64()?;
+            self.recv_bytes[g] = r.u64()?;
+        }
+        r.section("fabric")?;
+        self.fabric.restore(r)?;
+        let Self { gpus, gpu_done, kernel_started, phase, wl, .. } = self;
+        let in_compute = matches!(phase, Phase::Compute { .. });
+        for (g, gpu) in gpus.iter_mut().enumerate() {
+            let kernel = if in_compute && *kernel_started && !gpu_done[g] {
+                Some(&wl.per_gpu[g].kernels[k])
+            } else {
+                None
+            };
+            gpu.restore_state(r, kernel)?;
+        }
+        Ok(())
+    }
+
     /// Assemble final statistics (consumes the per-GPU kernel lists).
     fn take_stats(&mut self, wall_s: f64) -> ClusterStats {
         let Self { completed, wl, .. } = &mut *self;
@@ -828,9 +940,13 @@ impl ClusterSession {
         wl: ClusterWorkloadSpec,
         observers: Vec<Box<dyn Observer>>,
         mut trace: Option<TraceWriter>,
+        resume_from: Option<PathBuf>,
     ) -> Result<ClusterSession, SimError> {
         let threads = sim.threads;
         let mut sim = ClusterSim::new(gpu, sim, cluster, wl)?;
+        if let Some(path) = &resume_from {
+            restore_cluster_state(&mut sim, path)?;
+        }
         let cycle_observers = observers.iter().any(|o| o.wants_cycles());
         sim.capture_views = cycle_observers;
         if let Some(w) = &mut trace {
@@ -1057,6 +1173,29 @@ impl ClusterSession {
         }
     }
 
+    /// Serialize the full cluster state to a crash-safe snapshot file
+    /// (atomic tmp + rename + fsync) — callable at any pause point,
+    /// including mid-kernel and mid-communication-phase, and the restored
+    /// run (via [`SimBuilder::resume_from`](crate::engine::SimBuilder::resume_from)
+    /// + `build_cluster()`) is bit-identical at any thread count or
+    /// schedule. Errors with [`SimError::SessionFinished`] once finished.
+    pub fn save_snapshot(&self, path: impl AsRef<Path>) -> Result<(), SimError> {
+        if self.finished.is_some() || self.sim.phase == Phase::Done {
+            return Err(SimError::SessionFinished);
+        }
+        let mut w = SnapWriter::new(SnapFlavor::Cluster);
+        w.section("meta");
+        w.u64(gpu_config_hash(&self.sim.gpus[0].gpu));
+        w.u64(sim_config_hash(&self.sim.gpus[0].sim));
+        w.u64(workload_hash(&self.sim.cluster));
+        w.u64(workload_hash(&self.sim.wl));
+        w.str(&self.sim.gpus[0].gpu.name);
+        w.str(&self.sim.wl.name);
+        self.sim.snap_state(&mut w);
+        w.write_to(path.as_ref())?;
+        Ok(())
+    }
+
     /// Snapshot the telemetry metrics registry (`None` unless built with
     /// [`SimBuilder::metrics`](crate::engine::SimBuilder::metrics)):
     /// cluster-level counters (lock-step/communication cycles,
@@ -1148,6 +1287,67 @@ impl ClusterSession {
     pub fn into_stats(self) -> Result<ClusterStats, SimError> {
         self.finished.ok_or(SimError::SessionNotFinished)
     }
+}
+
+/// Restore a cluster snapshot into a freshly built engine: validate
+/// flavor and the four identity hashes (GPU config, determinism-relevant
+/// sim config, cluster config, workload), then overwrite the dynamic
+/// state of the state machine, the fabric, and every member GPU.
+fn restore_cluster_state(sim: &mut ClusterSim, path: &Path) -> Result<(), SimError> {
+    let mut r = SnapReader::open(path)?;
+    if r.flavor() != SnapFlavor::Cluster {
+        return Err(SnapshotError::FlavorMismatch {
+            found: r.flavor().name(),
+            expected: SnapFlavor::Cluster.name(),
+        }
+        .into());
+    }
+    r.section("meta")?;
+    let snap_gpu = r.u64()?;
+    let snap_sim = r.u64()?;
+    let snap_cluster = r.u64()?;
+    let snap_wl = r.u64()?;
+    let _gpu_name = r.str()?;
+    let _wl_name = r.str()?;
+    let here = gpu_config_hash(&sim.gpus[0].gpu);
+    if snap_gpu != here {
+        return Err(SnapshotError::ConfigMismatch {
+            what: "GPU config",
+            expected: snap_gpu,
+            found: here,
+        }
+        .into());
+    }
+    let here = sim_config_hash(&sim.gpus[0].sim);
+    if snap_sim != here {
+        return Err(SnapshotError::ConfigMismatch {
+            what: "sim config",
+            expected: snap_sim,
+            found: here,
+        }
+        .into());
+    }
+    let here = workload_hash(&sim.cluster);
+    if snap_cluster != here {
+        return Err(SnapshotError::ConfigMismatch {
+            what: "cluster config",
+            expected: snap_cluster,
+            found: here,
+        }
+        .into());
+    }
+    let here = workload_hash(&sim.wl);
+    if snap_wl != here {
+        return Err(SnapshotError::ConfigMismatch {
+            what: "workload",
+            expected: snap_wl,
+            found: here,
+        }
+        .into());
+    }
+    sim.restore_state(&mut r)?;
+    r.finish()?;
+    Ok(())
 }
 
 #[cfg(test)]

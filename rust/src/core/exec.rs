@@ -128,6 +128,62 @@ impl ExecUnits {
     }
 }
 
+// --- snapshot codecs (crash-safety layer) ---
+
+use crate::engine::snapshot::{SnapReader, SnapWriter, SnapshotError};
+
+impl Pipe {
+    /// Dynamic state only: latency/interval/depth are config-derived and
+    /// re-created at restore by `ExecUnits::new`.
+    pub(crate) fn snap(&self, w: &mut SnapWriter) {
+        w.u64(self.next_issue);
+        w.len(self.inflight.len());
+        for &(done, slot, dst) in &self.inflight {
+            w.u64(done);
+            w.u16(slot);
+            match dst {
+                Some(d) => {
+                    w.u8(1);
+                    w.u8(d);
+                }
+                None => w.u8(0),
+            }
+        }
+    }
+
+    pub(crate) fn restore(&mut self, r: &mut SnapReader) -> Result<(), SnapshotError> {
+        self.next_issue = r.u64()?;
+        let n = r.len()?;
+        self.inflight.clear();
+        for _ in 0..n {
+            let done = r.u64()?;
+            let slot = r.u16()?;
+            let dst = match r.u8()? {
+                0 => None,
+                1 => Some(r.u8()?),
+                t => return Err(r.corrupt(format!("pipe dst option tag {t}"))),
+            };
+            self.inflight.push_back((done, slot, dst));
+        }
+        Ok(())
+    }
+}
+
+impl ExecUnits {
+    pub(crate) fn snap(&self, w: &mut SnapWriter) {
+        for p in [&self.int, &self.fp32, &self.fp64, &self.sfu, &self.tensor] {
+            p.snap(w);
+        }
+    }
+
+    pub(crate) fn restore(&mut self, r: &mut SnapReader) -> Result<(), SnapshotError> {
+        for p in [&mut self.int, &mut self.fp32, &mut self.fp64, &mut self.sfu, &mut self.tensor] {
+            p.restore(r)?;
+        }
+        Ok(())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

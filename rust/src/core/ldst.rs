@@ -364,6 +364,118 @@ impl LdstUnit {
     pub fn queue_len(&self) -> usize {
         self.queue.len()
     }
+
+    // --- snapshot codecs (crash-safety layer) ---
+
+    /// Serialize dynamic state. `free_slots` is written **in order**: it
+    /// is a LIFO allocator whose pop order decides future load-slot ids,
+    /// which are architecturally observable (completion grouping), so the
+    /// exact stack must survive a round-trip. `vec_pool` is a pure
+    /// allocation cache and is skipped.
+    pub(crate) fn snap(&self, w: &mut crate::engine::snapshot::SnapWriter) {
+        w.len(self.queue.len());
+        for mi in &self.queue {
+            w.u16(mi.warp_slot);
+            mi.inst.snap(w);
+            w.u64_seq(&mi.lines);
+            w.len(mi.next_line);
+            w.u16(mi.load_slot);
+        }
+        w.len(self.loads.len());
+        for entry in &self.loads {
+            match entry {
+                Some(l) => {
+                    w.u8(1);
+                    w.u16(l.warp_slot);
+                    w.u8(l.dst);
+                    w.u32(l.remaining);
+                }
+                None => w.u8(0),
+            }
+        }
+        w.len(self.free_slots.len());
+        for &s in &self.free_slots {
+            w.u16(s);
+        }
+        w.len(self.hit_retire.len());
+        for &(done, slot) in &self.hit_retire {
+            w.u64(done);
+            w.u16(slot);
+        }
+        w.len(self.smem_retire.len());
+        for &(done, warp, dst) in &self.smem_retire {
+            w.u64(done);
+            w.u16(warp);
+            w.u8(dst);
+        }
+        w.u64(self.smem_next_free);
+        w.bool(self.head_blocked);
+    }
+
+    /// Overwrite dynamic state from a snapshot (latencies stay as
+    /// constructed from config). `kernel` resolves queued instructions'
+    /// templates; it may be `None` only for an idle (empty-queue) unit.
+    pub(crate) fn restore(
+        &mut self,
+        r: &mut crate::engine::snapshot::SnapReader,
+        kernel: Option<&crate::trace::KernelDesc>,
+    ) -> Result<(), crate::engine::snapshot::SnapshotError> {
+        let nq = r.len()?;
+        if nq > QUEUE_CAP {
+            return Err(r.corrupt(format!("ldst queue holds {nq} entries (cap {QUEUE_CAP})")));
+        }
+        self.queue.clear();
+        for _ in 0..nq {
+            let warp_slot = r.u16()?;
+            let kd = kernel
+                .ok_or_else(|| r.corrupt("queued memory instruction but no kernel in flight"))?;
+            let inst = DecodedInst::restore(r, kd)?;
+            let lines = r.u64_seq()?;
+            let next_line = r.len()?;
+            let load_slot = r.u16()?;
+            self.queue.push_back(MemInst { warp_slot, inst, lines, next_line, load_slot });
+        }
+        let nl = r.len()?;
+        if nl != LOAD_TABLE {
+            return Err(r.corrupt(format!("load table has {nl} slots, expected {LOAD_TABLE}")));
+        }
+        self.live_loads = 0;
+        for slot in self.loads.iter_mut() {
+            *slot = match r.u8()? {
+                0 => None,
+                1 => {
+                    self.live_loads += 1;
+                    Some(InFlightLoad {
+                        warp_slot: r.u16()?,
+                        dst: r.u8()?,
+                        remaining: r.u32()?,
+                    })
+                }
+                t => return Err(r.corrupt(format!("load option tag {t}"))),
+            };
+        }
+        let nf = r.len()?;
+        if nf > LOAD_TABLE {
+            return Err(r.corrupt(format!("{nf} free load slots, table holds {LOAD_TABLE}")));
+        }
+        self.free_slots.clear();
+        for _ in 0..nf {
+            self.free_slots.push(r.u16()?);
+        }
+        let nh = r.len()?;
+        self.hit_retire.clear();
+        for _ in 0..nh {
+            self.hit_retire.push_back((r.u64()?, r.u16()?));
+        }
+        let ns = r.len()?;
+        self.smem_retire.clear();
+        for _ in 0..ns {
+            self.smem_retire.push_back((r.u64()?, r.u16()?, r.u8()?));
+        }
+        self.smem_next_free = r.u64()?;
+        self.head_blocked = r.bool()?;
+        Ok(())
+    }
 }
 
 #[inline]

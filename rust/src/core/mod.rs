@@ -683,6 +683,138 @@ impl Sm {
         }
         0
     }
+
+    // --- snapshot codecs (crash-safety layer) ---
+
+    /// Serialize all dynamic SM state. Config-derived fields (warp size,
+    /// occupancy limits, …) and scratch buffers (empty at sequential
+    /// points) are reconstructed by `Sm::new` at restore.
+    pub(crate) fn snap(&self, w: &mut crate::engine::snapshot::SnapWriter) {
+        w.bool(self.kernel.is_some());
+        w.len(self.warps.len());
+        for warp in &self.warps {
+            warp.snap(w);
+        }
+        w.len(self.ctas.len());
+        for c in &self.ctas {
+            w.bool(c.active);
+            w.u32(c.cta_id);
+            w.u16(c.warps_remaining);
+            w.u16(c.barrier_expected);
+            w.u16(c.barrier_arrived);
+        }
+        w.len(self.subcores.len());
+        for sc in &self.subcores {
+            w.len(sc.fetch_rr);
+            match sc.last_issued {
+                Some(v) => {
+                    w.u8(1);
+                    w.u16(v);
+                }
+                None => w.u8(0),
+            }
+            w.len(sc.lrr_next);
+            sc.exec.snap(w);
+        }
+        self.l0i.snap(w);
+        self.l1i.snap(w);
+        self.l1d.snap(w);
+        self.ldst.snap(w);
+        w.len(self.ifetch_fill.len());
+        for &(cycle, line) in &self.ifetch_fill {
+            w.u64(cycle);
+            w.u64(line);
+        }
+        w.len(self.out_port.len());
+        for p in &self.out_port {
+            p.snap(w);
+        }
+        w.len(self.in_port.len());
+        for p in &self.in_port {
+            p.snap(w);
+        }
+        self.stats.snap(w);
+        w.u64(self.free_regs);
+        w.u64(self.free_smem);
+        w.len(self.resident_ctas);
+        w.len(self.resident_warps);
+    }
+
+    /// Overwrite dynamic state from a snapshot. `kernel` must be the
+    /// in-flight kernel (rebound directly — `begin_kernel` would flush
+    /// caches and reset sub-core schedulers) or `None` when the snapshot
+    /// was taken between kernels.
+    pub(crate) fn restore(
+        &mut self,
+        r: &mut crate::engine::snapshot::SnapReader,
+        kernel: Option<Arc<KernelDesc>>,
+    ) -> Result<(), crate::engine::snapshot::SnapshotError> {
+        let had_kernel = r.bool()?;
+        if had_kernel != kernel.is_some() {
+            return Err(r.corrupt("kernel-in-flight flag disagrees with restore context"));
+        }
+        self.kernel = kernel;
+        let kd = self.kernel.clone();
+        let nw = r.len()?;
+        if nw != self.warps.len() {
+            return Err(r.corrupt(format!("{nw} warp slots, SM has {}", self.warps.len())));
+        }
+        for warp in self.warps.iter_mut() {
+            *warp = WarpState::restore(r, kd.as_deref())?;
+        }
+        let nc = r.len()?;
+        if nc != self.ctas.len() {
+            return Err(r.corrupt(format!("{nc} CTA slots, SM has {}", self.ctas.len())));
+        }
+        for c in self.ctas.iter_mut() {
+            *c = CtaSlot {
+                active: r.bool()?,
+                cta_id: r.u32()?,
+                warps_remaining: r.u16()?,
+                barrier_expected: r.u16()?,
+                barrier_arrived: r.u16()?,
+            };
+        }
+        let ns = r.len()?;
+        if ns != self.subcores.len() {
+            return Err(r.corrupt(format!("{ns} sub-cores, SM has {}", self.subcores.len())));
+        }
+        for sc in self.subcores.iter_mut() {
+            sc.fetch_rr = r.len()?;
+            sc.last_issued = match r.u8()? {
+                0 => None,
+                1 => Some(r.u16()?),
+                t => return Err(r.corrupt(format!("last_issued option tag {t}"))),
+            };
+            sc.lrr_next = r.len()?;
+            sc.exec.restore(r)?;
+        }
+        self.l0i.restore(r)?;
+        self.l1i.restore(r)?;
+        self.l1d.restore(r)?;
+        self.ldst.restore(r, kd.as_deref())?;
+        let nf = r.len()?;
+        self.ifetch_fill.clear();
+        for _ in 0..nf {
+            self.ifetch_fill.push((r.u64()?, r.u64()?));
+        }
+        let no = r.len()?;
+        self.out_port.clear();
+        for _ in 0..no {
+            self.out_port.push_back(Packet::restore(r)?);
+        }
+        let ni = r.len()?;
+        self.in_port.clear();
+        for _ in 0..ni {
+            self.in_port.push_back(Packet::restore(r)?);
+        }
+        self.stats = SmStats::restore(r)?;
+        self.free_regs = r.u64()?;
+        self.free_smem = r.u64()?;
+        self.resident_ctas = r.len()?;
+        self.resident_warps = r.len()?;
+        Ok(())
+    }
 }
 
 #[cfg(test)]

@@ -194,6 +194,118 @@ impl WarpState {
     }
 }
 
+// --- snapshot codecs (crash-safety layer) ---
+
+use crate::engine::snapshot::{SnapReader, SnapWriter, SnapshotError};
+
+/// Locate the static instruction at a code-segment offset; the implicit
+/// EXIT lives one 16-byte slot past the last real instruction. `None`
+/// for offsets outside the program (corrupt snapshot).
+fn template_at(kernel: &KernelDesc, code_off: u64) -> Option<InstTemplate> {
+    if code_off % 16 != 0 {
+        return None;
+    }
+    let flat = (code_off / 16) as usize;
+    let static_len = kernel.program.static_len();
+    if flat == static_len {
+        return Some(InstTemplate::exit());
+    }
+    if flat > static_len {
+        return None;
+    }
+    let mut before = 0usize;
+    for b in &kernel.program.blocks {
+        if flat < before + b.insts.len() {
+            return Some(b.insts[flat - before]);
+        }
+        before += b.insts.len();
+    }
+    None
+}
+
+impl DecodedInst {
+    /// Snapshot as `(trip, code_off)` only: the template is reconstructed
+    /// from the kernel program at restore, so instruction encodings never
+    /// enter the snapshot format (and cannot skew across versions).
+    pub(crate) fn snap(&self, w: &mut SnapWriter) {
+        w.u32(self.trip);
+        w.u64(self.code_off);
+    }
+
+    pub(crate) fn restore(
+        r: &mut SnapReader,
+        kernel: &KernelDesc,
+    ) -> Result<Self, SnapshotError> {
+        let trip = r.u32()?;
+        let code_off = r.u64()?;
+        let tpl = template_at(kernel, code_off)
+            .ok_or_else(|| r.corrupt(format!("code offset {code_off:#x} outside program")))?;
+        Ok(DecodedInst { tpl, trip, code_off })
+    }
+}
+
+impl WarpState {
+    pub(crate) fn snap(&self, w: &mut SnapWriter) {
+        w.bool(self.active);
+        w.u8(self.cta_slot);
+        w.u32(self.cta_id);
+        w.u16(self.warp_in_cta);
+        w.u32(self.lanes);
+        w.u16(self.block);
+        w.u16(self.inst);
+        w.u32(self.trip);
+        w.u32(self.trips_this_block);
+        w.bool(self.fetch_done);
+        w.bool(self.finished);
+        w.len(self.ibuffer.len());
+        for d in &self.ibuffer {
+            d.snap(w);
+        }
+        for word in self.pending_writes.to_words() {
+            w.u64(word);
+        }
+        w.bool(self.at_barrier);
+        w.bool(self.ifetch_pending);
+    }
+
+    /// `kernel` is required only when the saved slot held buffered
+    /// instructions (i.e. a kernel was mid-flight at snapshot time).
+    pub(crate) fn restore(
+        r: &mut SnapReader,
+        kernel: Option<&KernelDesc>,
+    ) -> Result<Self, SnapshotError> {
+        let mut s = WarpState::empty();
+        s.active = r.bool()?;
+        s.cta_slot = r.u8()?;
+        s.cta_id = r.u32()?;
+        s.warp_in_cta = r.u16()?;
+        s.lanes = r.u32()?;
+        s.block = r.u16()?;
+        s.inst = r.u16()?;
+        s.trip = r.u32()?;
+        s.trips_this_block = r.u32()?;
+        s.fetch_done = r.bool()?;
+        s.finished = r.bool()?;
+        let n = r.len()?;
+        if n > IBUFFER_CAP {
+            return Err(r.corrupt(format!("ibuffer holds {n} entries (cap {IBUFFER_CAP})")));
+        }
+        for _ in 0..n {
+            let kd = kernel
+                .ok_or_else(|| r.corrupt("buffered instructions but no kernel in flight"))?;
+            s.ibuffer.push_back(DecodedInst::restore(r, kd)?);
+        }
+        let mut words = [0u64; 4];
+        for word in &mut words {
+            *word = r.u64()?;
+        }
+        s.pending_writes = RegBitset::from_words(words);
+        s.at_barrier = r.bool()?;
+        s.ifetch_pending = r.bool()?;
+        Ok(s)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -80,6 +80,7 @@ pub mod costmodel;
 pub mod phase;
 pub mod pool;
 pub mod session;
+pub mod snapshot;
 
 use std::marker::PhantomData;
 use std::sync::Arc;
@@ -1111,6 +1112,163 @@ impl GpuSim {
         self.sms[i].stats.cycles += 1;
     }
 
+    // -----------------------------------------------------------------
+    // Snapshot save/restore (crash-safety layer)
+    // -----------------------------------------------------------------
+
+    /// Serialize every piece of dynamic engine state into the writer.
+    /// Called only at sequential points (a paused session between
+    /// steps), where no parallel-phase scratch exists. Transient host
+    /// instrumentation (profiler, telemetry, cost model, trace buffers)
+    /// is deliberately excluded — it restarts fresh on restore and never
+    /// feeds simulated state.
+    pub(crate) fn snap_state(&self, w: &mut snapshot::SnapWriter) {
+        w.section("gpu");
+        w.u64(self.gpu_cycle);
+        w.len(self.active.len());
+        for &i in &self.active {
+            w.u32(i);
+        }
+        w.u64_seq(&self.parked_at);
+        w.len(self.work_buf.len());
+        for &v in &self.work_buf {
+            w.u32(v);
+        }
+        w.len(self.last_kernel_unique_lines);
+        w.u32(self.next_cta);
+        w.u32(self.total_ctas);
+        w.len(self.last_issue_sm);
+        w.u64(self.kernel_start_cycle);
+        w.len(self.cta_order.len());
+        for &c in &self.cta_order {
+            w.u32(c);
+        }
+        self.seqpoint_lines.snap(w);
+        self.shared_stats.snap(w);
+        w.len(self.functional_results.len());
+        for fr in &self.functional_results {
+            w.str(&fr.kernel_name);
+            w.u32(fr.sem.m);
+            w.u32(fr.sem.n);
+            w.u32(fr.sem.k);
+            w.u32(fr.sem.tile_m);
+            w.u32(fr.sem.tile_n);
+            w.len(fr.c.len());
+            for &v in &fr.c {
+                w.u32(v.to_bits());
+            }
+        }
+        w.section("sms");
+        w.len(self.sms.len());
+        for sm in &self.sms {
+            sm.snap(w);
+        }
+        w.section("mem");
+        w.len(self.partitions.len());
+        for p in &self.partitions {
+            p.snap(w);
+        }
+        w.section("icnt");
+        self.icnt.snap(w);
+    }
+
+    /// Inverse of [`Self::snap_state`]: overwrite this (freshly
+    /// constructed, identically configured) engine's dynamic state from
+    /// the reader. `kernel` is the kernel in flight at snapshot time
+    /// (`None` between kernels) — SMs rebind to it directly, never via
+    /// `begin_kernel`, which would flush caches and reset schedulers.
+    pub(crate) fn restore_state(
+        &mut self,
+        r: &mut snapshot::SnapReader,
+        kernel: Option<&KernelDesc>,
+    ) -> Result<(), snapshot::SnapshotError> {
+        r.section("gpu")?;
+        self.gpu_cycle = r.u64()?;
+        let na = r.len()?;
+        if na > self.sms.len() {
+            return Err(r.corrupt(format!("worklist of {na} exceeds {} SMs", self.sms.len())));
+        }
+        self.active.clear();
+        for _ in 0..na {
+            self.active.push(r.u32()?);
+        }
+        let parked = r.u64_seq()?;
+        if parked.len() != self.parked_at.len() {
+            return Err(r.corrupt(format!(
+                "parked_at has {} entries, engine has {} SMs",
+                parked.len(),
+                self.parked_at.len()
+            )));
+        }
+        self.parked_at = parked;
+        let nw = r.len()?;
+        if nw != self.work_buf.len() {
+            return Err(r.corrupt(format!(
+                "work_buf has {nw} entries, engine has {} SMs",
+                self.work_buf.len()
+            )));
+        }
+        for v in &mut self.work_buf {
+            *v = r.u32()?;
+        }
+        self.last_kernel_unique_lines = r.len()?;
+        self.next_cta = r.u32()?;
+        self.total_ctas = r.u32()?;
+        self.last_issue_sm = r.len()?;
+        self.kernel_start_cycle = r.u64()?;
+        let nc = r.len()?;
+        self.cta_order.clear();
+        for _ in 0..nc {
+            self.cta_order.push(r.u32()?);
+        }
+        self.seqpoint_lines = AddrSet::restore(r)?;
+        self.shared_stats.restore_into(r)?;
+        let nf = r.len()?;
+        self.functional_results.clear();
+        for _ in 0..nf {
+            let kernel_name = r.str()?;
+            let sem = GemmSemantics {
+                m: r.u32()?,
+                n: r.u32()?,
+                k: r.u32()?,
+                tile_m: r.u32()?,
+                tile_n: r.u32()?,
+            };
+            let ncv = r.len()?;
+            let mut c = Vec::with_capacity(ncv);
+            for _ in 0..ncv {
+                c.push(f32::from_bits(r.u32()?));
+            }
+            self.functional_results.push(FunctionalResult { kernel_name, sem, c });
+        }
+        r.section("sms")?;
+        let ns = r.len()?;
+        if ns != self.sms.len() {
+            return Err(r.corrupt(format!(
+                "snapshot has {ns} SMs, engine has {}",
+                self.sms.len()
+            )));
+        }
+        let arc = kernel.map(|kd| Arc::new(kd.clone()));
+        for sm in &mut self.sms {
+            sm.restore(r, arc.clone())?;
+        }
+        r.section("mem")?;
+        let np = r.len()?;
+        if np != self.partitions.len() {
+            return Err(r.corrupt(format!(
+                "snapshot has {np} partitions, engine has {}",
+                self.partitions.len()
+            )));
+        }
+        for p in &mut self.partitions {
+            p.restore(r)?;
+        }
+        r.section("icnt")?;
+        self.icnt.restore(r)?;
+        Ok(())
+    }
+
     /// Diagnostic back-door for the PhaseGuard test suite: deliberately
     /// touch sequential-only state (an icnt injection) from inside a
     /// simulated parallel fan-out. In a debug build with the guard
@@ -1137,6 +1295,7 @@ pub use session::{
     CycleView, Observer, PhaseProfileStreamer, ProgressTicker, SessionFingerprint, SessionStatus,
     SimBuilder, SimError, SimSession, StatsSampler, StopCondition,
 };
+pub use snapshot::{hash_bytes, hash_debug, SnapFlavor, SnapshotError, SNAP_MAGIC, SNAP_VERSION};
 
 #[cfg(test)]
 mod tests {

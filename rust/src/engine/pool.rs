@@ -83,7 +83,9 @@
 //! monomorphized trampoline (`call_one`), not a lifetime-laundering
 //! `transmute` of a fat `dyn` pointer.
 
+use std::any::Any;
 use std::cell::UnsafeCell;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::Instant;
@@ -175,6 +177,19 @@ struct Shared {
     busy_ns: Box<[AtomicU64]>,
     /// Cumulative per-worker barrier-wait ns.
     wait_ns: Box<[AtomicU64]>,
+    /// Panic containment: every worker's region share runs under
+    /// `catch_unwind`, so a panicking job **cannot kill a worker thread**
+    /// — the worker stores the first payload here, still bumps `done`
+    /// (the barrier completes, no deadlock), and keeps serving regions.
+    /// The caller re-raises the payload after the join, so
+    /// `parallel_for` panics exactly like the serial loop would — and
+    /// the pool remains fully usable afterwards (the campaign
+    /// scheduler's per-job fault isolation depends on this). Only the
+    /// first payload of a region is kept; later ones are dropped.
+    /// Ordering: stores happen strictly before that worker's `done`
+    /// bump, so by the time the join loop exits every payload is
+    /// visible (the mutex provides its own synchronization anyway).
+    panic: Mutex<Option<Box<dyn Any + Send>>>,
 }
 
 // SAFETY: `job` is the only non-Sync field; the epoch protocol above
@@ -199,6 +214,19 @@ impl Shared {
             let _g = self.park.lock().unwrap();
             self.cv.notify_all();
         }
+    }
+
+    /// Record a caught panic payload (first one per region wins).
+    fn store_panic(&self, payload: Box<dyn Any + Send>) {
+        let mut slot = self.panic.lock().unwrap();
+        if slot.is_none() {
+            *slot = Some(payload);
+        }
+    }
+
+    /// Drain the region's panic payload, if any worker panicked.
+    fn take_panic(&self) -> Option<Box<dyn Any + Send>> {
+        self.panic.lock().unwrap().take()
     }
 }
 
@@ -238,6 +266,7 @@ impl ThreadPool {
             instrument,
             busy_ns: (0..threads).map(|_| AtomicU64::new(0)).collect(),
             wait_ns: (0..threads).map(|_| AtomicU64::new(0)).collect(),
+            panic: Mutex::new(None),
         });
         let mut workers = Vec::new();
         for wid in 1..threads {
@@ -319,11 +348,22 @@ impl ThreadPool {
         self.shared.epoch.fetch_add(1, Ordering::SeqCst);
         self.shared.wake_sleepers();
 
-        // participate as worker 0
+        // Participate as worker 0. The caller's share runs under the
+        // same panic containment as the workers': a panicking iteration
+        // must not skip the `done` bump below, or the join would wait
+        // forever for the spawned workers' view of a barrier the caller
+        // abandoned. AssertUnwindSafe is sound here because on re-raise
+        // the region's partially-mutated per-index data is never
+        // observed by this caller (it propagates the panic).
         let t_busy = self.shared.instrument.then(Instant::now);
-        run_region(&self.shared, 0, &f, n, schedule, self.threads);
+        let r0 = catch_unwind(AssertUnwindSafe(|| {
+            run_region(&self.shared, 0, &f, n, schedule, self.threads);
+        }));
         if let Some(t) = t_busy {
             self.shared.busy_ns[0].fetch_add(t.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        }
+        if let Err(payload) = r0 {
+            self.shared.store_panic(payload);
         }
         self.shared.done.fetch_add(1, Ordering::AcqRel);
 
@@ -345,6 +385,13 @@ impl ThreadPool {
         }
         if let Some(t) = t_wait {
             self.shared.wait_ns[0].fetch_add(t.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        }
+        // Every worker has passed the barrier; if any share panicked,
+        // re-raise the (first) payload now that the pool is quiescent.
+        // The pool itself stays fully usable — workers survived their
+        // own catch_unwind and are back in `wait_for_epoch`.
+        if let Some(payload) = self.shared.take_panic() {
+            resume_unwind(payload);
         }
     }
 }
@@ -424,9 +471,19 @@ fn worker_loop(sh: Arc<Shared>, wid: usize) {
             // `parallel_for`).
             let f = move |i: usize| unsafe { call(data, i) };
             let t_busy = sh.instrument.then(Instant::now);
-            run_region(&sh, wid, &f, n, schedule, threads);
+            // Panic containment (see `Shared::panic`): a panicking job
+            // must not unwind out of the loop — that would kill this
+            // worker before its `done` bump and deadlock the join, and
+            // leave every later region one worker short. Catch, stash
+            // the payload for the caller to re-raise, keep serving.
+            let r = catch_unwind(AssertUnwindSafe(|| {
+                run_region(&sh, wid, &f, n, schedule, threads);
+            }));
             if let Some(t) = t_busy {
                 sh.busy_ns[wid].fetch_add(t.elapsed().as_nanos() as u64, Ordering::Relaxed);
+            }
+            if let Err(payload) = r {
+                sh.store_panic(payload);
             }
         }
         sh.done.fetch_add(1, Ordering::AcqRel);
@@ -647,6 +704,54 @@ mod tests {
         plain.parallel_for(64, Schedule::Static { chunk: 0 }, |_| {});
         assert!(!plain.is_instrumented());
         assert!(plain.busy_wait_ns().iter().all(|&(b, w)| b == 0 && w == 0));
+    }
+
+    /// Fault isolation: a panicking job reaches the caller as a panic
+    /// (never a hang), and the pool — barrier, workers, schedules — is
+    /// fully usable afterwards. This is what lets the campaign scheduler
+    /// quarantine a crashing job and keep the sweep going on one pool.
+    #[test]
+    fn worker_panic_propagates_and_pool_survives() {
+        let pool = ThreadPool::new(4);
+        for round in 0..3 {
+            let r = catch_unwind(AssertUnwindSafe(|| {
+                pool.parallel_for(64, Schedule::Dynamic { chunk: 1 }, |i| {
+                    if i == 13 {
+                        panic!("injected fault, round {round}");
+                    }
+                });
+            }));
+            let payload = r.expect_err("worker panic must reach the caller");
+            let msg = payload.downcast_ref::<String>().expect("payload preserved");
+            assert!(msg.contains("injected fault"), "{msg}");
+            // the pool must still complete full regions on both schedules
+            let sum = AtomicU32::new(0);
+            pool.parallel_for(16, Schedule::Static { chunk: 0 }, |i| {
+                sum.fetch_add(i as u32, Ordering::Relaxed);
+            });
+            assert_eq!(sum.load(Ordering::Relaxed), (0..16).sum::<u32>());
+        }
+    }
+
+    /// Same containment when the *caller's own* share panics (index 0
+    /// belongs to worker 0 under the contiguous static split): the
+    /// spawned workers must not be left waiting at an abandoned barrier.
+    #[test]
+    fn caller_share_panic_does_not_wedge_workers() {
+        let pool = ThreadPool::new(2);
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            pool.parallel_for(8, Schedule::Static { chunk: 0 }, |i| {
+                if i == 0 {
+                    panic!("caller-side fault");
+                }
+            });
+        }));
+        assert!(r.is_err());
+        let sum = AtomicU32::new(0);
+        pool.parallel_for(8, Schedule::Dynamic { chunk: 1 }, |i| {
+            sum.fetch_add(i as u32, Ordering::Relaxed);
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), (0..8).sum::<u32>());
     }
 
     #[test]

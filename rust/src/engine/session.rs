@@ -36,6 +36,7 @@
 
 use std::cell::RefCell;
 use std::fmt;
+use std::path::{Path, PathBuf};
 use std::rc::Rc;
 use std::time::Instant;
 
@@ -50,7 +51,30 @@ use crate::trace::workloads::{self, Scale};
 use crate::trace::{ClusterWorkloadSpec, KernelDesc, WorkloadSpec};
 use crate::util::{mix2, mix64};
 
+use super::snapshot::{
+    hash_debug, SnapFlavor, SnapReader, SnapWriter, SnapshotError,
+};
 use super::GpuSim;
+
+/// Identity hash of the modelled GPU (every `GpuConfig` field).
+pub(crate) fn gpu_config_hash(gpu: &GpuConfig) -> u64 {
+    hash_debug(gpu)
+}
+
+/// Identity hash of the determinism-relevant [`SimConfig`] subset.
+/// Host-tunable knobs that provably cannot change results — thread
+/// count, schedule, telemetry, profiling, worklist/fast-forward switches
+/// — are deliberately excluded, so a snapshot taken at `--threads 1`
+/// restores fine at `--threads 8` (the paper's determinism guarantee is
+/// what makes that sound; `tests/snapshot.rs` exercises it).
+pub(crate) fn sim_config_hash(sim: &SimConfig) -> u64 {
+    hash_debug(&(sim.stats_strategy, sim.functional, sim.seed))
+}
+
+/// Identity hash of a workload (every kernel, region, and program).
+pub(crate) fn workload_hash<T: fmt::Debug>(wl: &T) -> u64 {
+    hash_debug(wl)
+}
 
 // ---------------------------------------------------------------------------
 // Errors
@@ -79,6 +103,15 @@ pub enum SimError {
     SessionNotFinished,
     /// A kernel exceeded the per-kernel cycle guard (deadlock detector).
     CycleLimitExceeded { kernel: String, limit: u64 },
+    /// Snapshot save/restore failed (corrupt file, version skew, config
+    /// mismatch, I/O — see [`SnapshotError`]).
+    Snapshot(SnapshotError),
+}
+
+impl From<SnapshotError> for SimError {
+    fn from(e: SnapshotError) -> Self {
+        SimError::Snapshot(e)
+    }
 }
 
 impl fmt::Display for SimError {
@@ -117,6 +150,7 @@ impl fmt::Display for SimError {
             SimError::CycleLimitExceeded { kernel, limit } => {
                 write!(f, "kernel {kernel:?} exceeded {limit} cycles (deadlock?)")
             }
+            SimError::Snapshot(e) => write!(f, "{e}"),
         }
     }
 }
@@ -441,6 +475,7 @@ pub struct SimBuilder {
     cluster_workload: Option<ClusterWorkloadSpec>,
     observers: Vec<Box<dyn Observer>>,
     trace_writer: Option<TraceWriter>,
+    resume_from: Option<PathBuf>,
 }
 
 /// Resolve the modelled GPU from the builder's by-value / by-preset pair
@@ -607,6 +642,21 @@ impl SimBuilder {
         self
     }
 
+    /// Resume from a snapshot file written by
+    /// [`SimSession::save_snapshot`] (or
+    /// [`crate::cluster::ClusterSession::save_snapshot`] for
+    /// `build_cluster`). The builder must be configured with the *same*
+    /// GPU model, determinism-relevant simulator settings, and workload
+    /// the snapshot was taken under — `build()` validates their identity
+    /// hashes and refuses a mismatch with a typed
+    /// [`SnapshotError::ConfigMismatch`]. Thread count, schedule,
+    /// telemetry and profiling may differ freely: the restored run is
+    /// bit-identical regardless (the paper's determinism claim).
+    pub fn resume_from(mut self, path: impl Into<PathBuf>) -> Self {
+        self.resume_from = Some(path.into());
+        self
+    }
+
     /// Enable the telemetry metrics registry
     /// ([`crate::config::TelemetryConfig::metrics`]): counter/histogram
     /// accumulators updated at sequential points, snapshot-able mid-run
@@ -667,7 +717,15 @@ impl SimBuilder {
             }
             (None, None, None) => return Err(SimError::NoWorkload),
         };
-        ClusterSession::build(gpu, self.sim, cluster, wl, self.observers, self.trace_writer)
+        ClusterSession::build(
+            gpu,
+            self.sim,
+            cluster,
+            wl,
+            self.observers,
+            self.trace_writer,
+            self.resume_from,
+        )
     }
 
     /// Validate everything and construct the session. Never panics.
@@ -691,7 +749,7 @@ impl SimBuilder {
                 message: format!("workload {:?} has no kernels", workload.name),
             });
         }
-        let sim = GpuSim::try_new(gpu, self.sim)?;
+        let mut sim = GpuSim::try_new(gpu, self.sim)?;
         let cycle_observers = self.observers.iter().any(|o| o.wants_cycles());
         let mut trace = self.trace_writer;
         if let Some(w) = &mut trace {
@@ -701,21 +759,99 @@ impl SimBuilder {
                 w.thread_name(PID_WALL, lane as u32 + 1, &format!("worker {lane}"));
             }
         }
+        let (kernel_idx, in_kernel, completed, completed_warp_insts) =
+            match &self.resume_from {
+                Some(path) => restore_session_state(&mut sim, &workload, path)?,
+                None => (0, false, Vec::new(), 0),
+            };
         Ok(SimSession {
             sim,
             workload,
             observers: self.observers,
-            kernel_idx: 0,
-            in_kernel: false,
-            completed: Vec::new(),
+            kernel_idx,
+            in_kernel,
+            completed,
             wall_s: 0.0,
             finished: None,
             last_snap: StepSnapshot::default(),
             cycle_observers,
-            completed_warp_insts: 0,
+            completed_warp_insts,
             trace,
         })
     }
+}
+
+/// Restore a single-GPU snapshot into a freshly built engine. Validates
+/// flavor and config/workload identity hashes, then overwrites the
+/// engine's dynamic state. Returns the session-level resume state
+/// `(kernel_idx, in_kernel, completed, completed_warp_insts)`.
+fn restore_session_state(
+    sim: &mut GpuSim,
+    workload: &WorkloadSpec,
+    path: &Path,
+) -> Result<(usize, bool, Vec<KernelStats>, u64), SimError> {
+    let mut r = SnapReader::open(path)?;
+    if r.flavor() != SnapFlavor::SingleGpu {
+        return Err(SnapshotError::FlavorMismatch {
+            found: r.flavor().name(),
+            expected: SnapFlavor::SingleGpu.name(),
+        }
+        .into());
+    }
+    r.section("meta")?;
+    let snap_gpu = r.u64()?;
+    let snap_sim = r.u64()?;
+    let snap_wl = r.u64()?;
+    let _gpu_name = r.str()?;
+    let _wl_name = r.str()?;
+    let here = gpu_config_hash(&sim.gpu);
+    if snap_gpu != here {
+        return Err(SnapshotError::ConfigMismatch {
+            what: "GPU config",
+            expected: snap_gpu,
+            found: here,
+        }
+        .into());
+    }
+    let here = sim_config_hash(&sim.sim);
+    if snap_sim != here {
+        return Err(SnapshotError::ConfigMismatch {
+            what: "sim config",
+            expected: snap_sim,
+            found: here,
+        }
+        .into());
+    }
+    let here = workload_hash(workload);
+    if snap_wl != here {
+        return Err(SnapshotError::ConfigMismatch {
+            what: "workload",
+            expected: snap_wl,
+            found: here,
+        }
+        .into());
+    }
+    r.section("session")?;
+    let kernel_idx = r.len()?;
+    let in_kernel = r.bool()?;
+    let nk = r.len()?;
+    let mut completed = Vec::with_capacity(nk);
+    for _ in 0..nk {
+        completed.push(KernelStats::restore(&mut r)?);
+    }
+    let completed_warp_insts = r.u64()?;
+    if kernel_idx >= workload.kernels.len() {
+        return Err(r
+            .corrupt(format!(
+                "kernel index {kernel_idx} out of range for a {}-kernel workload",
+                workload.kernels.len()
+            ))
+            .into());
+    }
+    let kernel = if in_kernel { Some(&workload.kernels[kernel_idx]) } else { None };
+    sim.restore_state(&mut r, kernel)?;
+    r.finish()?;
+    Ok((kernel_idx, in_kernel, completed, completed_warp_insts))
 }
 
 // ---------------------------------------------------------------------------
@@ -1039,6 +1175,44 @@ impl SimSession {
             mem: self.sim.fingerprint_mem(),
             fabric: 0,
         }
+    }
+
+    /// Serialize the full simulation state to a crash-safe snapshot file
+    /// (atomic tmp + rename + fsync). Callable at any pause point —
+    /// including mid-kernel — and the restored run (via
+    /// [`SimBuilder::resume_from`]) is bit-identical: same
+    /// [`SessionFingerprint`] trail, same final statistics, at any thread
+    /// count or schedule.
+    ///
+    /// Host-side instrumentation (profiler, telemetry, trace buffers,
+    /// wall-clock) is deliberately *not* captured; it restarts fresh on
+    /// resume and never feeds back into simulated state.
+    ///
+    /// Errors with [`SimError::SessionFinished`] once the session has
+    /// finished (there is nothing left to resume), or a
+    /// [`SimError::Snapshot`] on I/O failure.
+    pub fn save_snapshot(&self, path: impl AsRef<Path>) -> Result<(), SimError> {
+        if self.finished.is_some() {
+            return Err(SimError::SessionFinished);
+        }
+        let mut w = SnapWriter::new(SnapFlavor::SingleGpu);
+        w.section("meta");
+        w.u64(gpu_config_hash(&self.sim.gpu));
+        w.u64(sim_config_hash(&self.sim.sim));
+        w.u64(workload_hash(&self.workload));
+        w.str(&self.sim.gpu.name);
+        w.str(&self.workload.name);
+        w.section("session");
+        w.len(self.kernel_idx);
+        w.bool(self.in_kernel);
+        w.len(self.completed.len());
+        for k in &self.completed {
+            k.snap(&mut w);
+        }
+        w.u64(self.completed_warp_insts);
+        self.sim.snap_state(&mut w);
+        w.write_to(path.as_ref())?;
+        Ok(())
     }
 
     /// Snapshot the telemetry metrics registry (`None` unless the

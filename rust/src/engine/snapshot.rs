@@ -1,0 +1,551 @@
+//! Versioned, self-describing binary snapshots of full simulator state.
+//!
+//! A snapshot captures everything the engine needs to continue a paused
+//! simulation bit-identically: warp/SM microarchitectural state, cache
+//! arrays and MSHRs, DRAM bank timing, every in-flight icnt/fabric
+//! packet, statistics, and cycle counters. Snapshots are taken only at
+//! the engine's **sequential points** (between `SimSession` steps), so
+//! no parallel-phase scratch state ever needs to be serialized — the
+//! same sync-point discipline MGSim uses for distributed checkpoints.
+//!
+//! ## Format
+//!
+//! ```text
+//! magic "PARSIMSN" (8) | version u32 | flavor u8 | sections… | fold-checksum u64
+//! ```
+//!
+//! Everything is little-endian. Each section starts with a marker byte
+//! and its ASCII name, so a reader that desynchronizes fails loudly with
+//! the section it expected instead of silently misparsing. The trailing
+//! checksum is a SplitMix64 fold over every preceding byte; any
+//! truncation or bit-flip is detected before a single field is decoded.
+//!
+//! ## Versioning policy
+//!
+//! `SNAP_VERSION` bumps on **any** layout change; there is no in-place
+//! migration — a version-skewed file yields
+//! [`SnapshotError::VersionMismatch`] and the caller re-runs from the
+//! start (simulations are deterministic, so nothing is lost but time).
+//! Snapshots do not embed the full `GpuConfig`/workload; they carry
+//! deterministic hashes of both and restore refuses to proceed onto a
+//! mismatched configuration ([`SnapshotError::ConfigMismatch`]).
+//! Host-tunable knobs that provably cannot change results (thread
+//! count, schedule, telemetry, profiling) are excluded from the hash,
+//! so a snapshot taken at `--threads 1` restores fine at `--threads 8`.
+
+use std::fmt;
+use std::fs;
+use std::io::Write as _;
+use std::path::Path;
+
+use crate::util::mix2;
+
+/// File magic: identifies a parsim snapshot regardless of version.
+pub const SNAP_MAGIC: [u8; 8] = *b"PARSIMSN";
+
+/// Current snapshot layout version. Bump on any layout change.
+pub const SNAP_VERSION: u32 = 1;
+
+/// Marker byte preceding every section name (desync tripwire).
+const SECTION_MARK: u8 = 0xA5;
+
+/// What kind of simulation a snapshot holds.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SnapFlavor {
+    /// One `GpuSim` driven by a `SimSession`.
+    SingleGpu,
+    /// A `ClusterSim` (multiple GPUs + fabric) driven by a `ClusterSession`.
+    Cluster,
+}
+
+impl SnapFlavor {
+    fn to_u8(self) -> u8 {
+        match self {
+            SnapFlavor::SingleGpu => 1,
+            SnapFlavor::Cluster => 2,
+        }
+    }
+
+    fn from_u8(v: u8) -> Option<Self> {
+        match v {
+            1 => Some(SnapFlavor::SingleGpu),
+            2 => Some(SnapFlavor::Cluster),
+            _ => None,
+        }
+    }
+
+    /// Human name used in error messages.
+    pub fn name(self) -> &'static str {
+        match self {
+            SnapFlavor::SingleGpu => "single-gpu",
+            SnapFlavor::Cluster => "cluster",
+        }
+    }
+}
+
+/// Typed failure modes for snapshot save/restore. Every corrupt,
+/// truncated, or mismatched file maps to one of these — restore never
+/// panics and never yields a silently-wrong simulation.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SnapshotError {
+    /// Filesystem failure (message embeds the path).
+    Io(String),
+    /// The file does not start with [`SNAP_MAGIC`].
+    BadMagic,
+    /// Layout version differs from [`SNAP_VERSION`].
+    VersionMismatch { found: u32, supported: u32 },
+    /// Snapshot holds a different simulation kind than the caller asked
+    /// to restore (e.g. cluster snapshot into a single-GPU builder).
+    FlavorMismatch { found: &'static str, expected: &'static str },
+    /// The builder's GPU config / sim config / workload hash does not
+    /// match what the snapshot was taken under.
+    ConfigMismatch { what: &'static str, expected: u64, found: u64 },
+    /// The fold checksum over the file body does not match the trailer.
+    ChecksumMismatch { expected: u64, found: u64 },
+    /// The file ended mid-field (names the section being decoded).
+    Truncated { section: &'static str },
+    /// Structurally invalid content (wrong section marker, impossible
+    /// lengths, out-of-range enum tags, …).
+    Corrupt { section: &'static str, detail: String },
+}
+
+impl fmt::Display for SnapshotError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SnapshotError::Io(msg) => write!(f, "snapshot I/O: {msg}"),
+            SnapshotError::BadMagic => {
+                write!(f, "not a parsim snapshot (bad magic)")
+            }
+            SnapshotError::VersionMismatch { found, supported } => write!(
+                f,
+                "snapshot version {found} unsupported (this build reads version {supported}); \
+                 re-run from the start"
+            ),
+            SnapshotError::FlavorMismatch { found, expected } => write!(
+                f,
+                "snapshot holds a {found} simulation but a {expected} restore was requested"
+            ),
+            SnapshotError::ConfigMismatch { what, expected, found } => write!(
+                f,
+                "snapshot {what} hash {expected:016x} does not match the configured \
+                 {what} hash {found:016x}; restore onto the same {what} it was taken under"
+            ),
+            SnapshotError::ChecksumMismatch { expected, found } => write!(
+                f,
+                "snapshot checksum mismatch (file {expected:016x}, computed {found:016x}): \
+                 file is corrupt"
+            ),
+            SnapshotError::Truncated { section } => {
+                write!(f, "snapshot truncated while reading section {section:?}")
+            }
+            SnapshotError::Corrupt { section, detail } => {
+                write!(f, "snapshot corrupt in section {section:?}: {detail}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for SnapshotError {}
+
+/// Deterministic SplitMix64 fold over a byte string; used for the file
+/// checksum and for config/workload identity hashes.
+pub fn hash_bytes(bytes: &[u8]) -> u64 {
+    let mut h = 0x5eed_c0de_5eed_c0deu64;
+    for chunk in bytes.chunks(8) {
+        let mut word = [0u8; 8];
+        word[..chunk.len()].copy_from_slice(chunk);
+        h = mix2(h, u64::from_le_bytes(word));
+    }
+    mix2(h, bytes.len() as u64)
+}
+
+/// Identity hash of any `Debug` value — the snapshot's config/workload
+/// binding. `Debug` output covers every field of the config structs, so
+/// any parameter change (cache geometry, DRAM timing, grid size, …)
+/// changes the hash and restore refuses to proceed.
+pub fn hash_debug<T: fmt::Debug>(value: &T) -> u64 {
+    hash_bytes(format!("{value:?}").as_bytes())
+}
+
+// ---------------------------------------------------------------------------
+// Writer
+// ---------------------------------------------------------------------------
+
+/// Append-only binary snapshot writer.
+pub struct SnapWriter {
+    buf: Vec<u8>,
+}
+
+impl SnapWriter {
+    /// Start a snapshot of the given flavor (writes the header).
+    pub fn new(flavor: SnapFlavor) -> Self {
+        let mut w = SnapWriter { buf: Vec::with_capacity(64 << 10) };
+        w.buf.extend_from_slice(&SNAP_MAGIC);
+        w.buf.extend_from_slice(&SNAP_VERSION.to_le_bytes());
+        w.buf.push(flavor.to_u8());
+        w
+    }
+
+    /// Begin a named section (marker + name, checked on read).
+    pub fn section(&mut self, name: &str) {
+        self.buf.push(SECTION_MARK);
+        self.str(name);
+    }
+
+    pub fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    pub fn bool(&mut self, v: bool) {
+        self.buf.push(v as u8);
+    }
+
+    pub fn u16(&mut self, v: u16) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// `usize` is written as u64 (platform-independent files).
+    pub fn len(&mut self, v: usize) {
+        self.u64(v as u64);
+    }
+
+    pub fn f64(&mut self, v: f64) {
+        self.u64(v.to_bits());
+    }
+
+    pub fn str(&mut self, s: &str) {
+        self.u32(s.len() as u32);
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+
+    /// Length-prefixed u64 sequence.
+    pub fn u64_seq(&mut self, vs: &[u64]) {
+        self.len(vs.len());
+        for &v in vs {
+            self.u64(v);
+        }
+    }
+
+    /// Finish: append the fold checksum and return the file bytes.
+    pub fn finish(mut self) -> Vec<u8> {
+        let sum = hash_bytes(&self.buf);
+        self.buf.extend_from_slice(&sum.to_le_bytes());
+        self.buf
+    }
+
+    /// Finish and write atomically + durably: temp file in the target
+    /// directory, `fsync`, rename over the destination, then best-effort
+    /// directory `fsync` so the rename itself survives power loss.
+    pub fn write_to(self, path: &Path) -> Result<(), SnapshotError> {
+        let bytes = self.finish();
+        write_atomic(path, &bytes)
+    }
+}
+
+/// Atomic durable file write (tmp + fsync + rename + dir fsync). Shared
+/// by snapshots and the campaign store/journal.
+pub fn write_atomic(path: &Path, bytes: &[u8]) -> Result<(), SnapshotError> {
+    let dir = path.parent().filter(|p| !p.as_os_str().is_empty());
+    if let Some(d) = dir {
+        fs::create_dir_all(d)
+            .map_err(|e| SnapshotError::Io(format!("create {}: {e}", d.display())))?;
+    }
+    let tmp = path.with_extension("tmp");
+    {
+        let mut f = fs::File::create(&tmp)
+            .map_err(|e| SnapshotError::Io(format!("create {}: {e}", tmp.display())))?;
+        f.write_all(bytes)
+            .map_err(|e| SnapshotError::Io(format!("write {}: {e}", tmp.display())))?;
+        f.sync_all()
+            .map_err(|e| SnapshotError::Io(format!("fsync {}: {e}", tmp.display())))?;
+    }
+    fs::rename(&tmp, path).map_err(|e| {
+        SnapshotError::Io(format!("rename {} -> {}: {e}", tmp.display(), path.display()))
+    })?;
+    // Durability of the rename itself: fsync the containing directory.
+    // Best-effort — some filesystems refuse directory handles.
+    if let Some(d) = dir {
+        if let Ok(dh) = fs::File::open(d) {
+            let _ = dh.sync_all();
+        }
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Reader
+// ---------------------------------------------------------------------------
+
+/// Cursor over a verified snapshot body. Construction validates magic,
+/// version, and checksum; field reads then only need truncation checks.
+pub struct SnapReader {
+    data: Vec<u8>,
+    pos: usize,
+    end: usize,
+    flavor: SnapFlavor,
+    /// Most recent `section()` name — error context for short reads.
+    cur_section: &'static str,
+}
+
+impl SnapReader {
+    /// Load and verify a snapshot file.
+    pub fn open(path: &Path) -> Result<Self, SnapshotError> {
+        let data = fs::read(path)
+            .map_err(|e| SnapshotError::Io(format!("read {}: {e}", path.display())))?;
+        Self::from_bytes(data)
+    }
+
+    /// Verify header + trailing checksum and position the cursor at the
+    /// first section.
+    pub fn from_bytes(data: Vec<u8>) -> Result<Self, SnapshotError> {
+        // magic(8) + version(4) + flavor(1) + checksum(8)
+        if data.len() < 21 {
+            return Err(SnapshotError::Truncated { section: "header" });
+        }
+        if data[..8] != SNAP_MAGIC {
+            return Err(SnapshotError::BadMagic);
+        }
+        let version = u32::from_le_bytes(data[8..12].try_into().unwrap());
+        if version != SNAP_VERSION {
+            return Err(SnapshotError::VersionMismatch { found: version, supported: SNAP_VERSION });
+        }
+        let body_end = data.len() - 8;
+        let stored = u64::from_le_bytes(data[body_end..].try_into().unwrap());
+        let computed = hash_bytes(&data[..body_end]);
+        if stored != computed {
+            return Err(SnapshotError::ChecksumMismatch { expected: stored, found: computed });
+        }
+        let flavor = SnapFlavor::from_u8(data[12]).ok_or(SnapshotError::Corrupt {
+            section: "header",
+            detail: format!("unknown flavor tag {}", data[12]),
+        })?;
+        Ok(SnapReader { data, pos: 13, end: body_end, flavor, cur_section: "header" })
+    }
+
+    pub fn flavor(&self) -> SnapFlavor {
+        self.flavor
+    }
+
+    /// Expect the named section next; updates error context.
+    pub fn section(&mut self, name: &'static str) -> Result<(), SnapshotError> {
+        self.cur_section = name;
+        let mark = self.u8()?;
+        if mark != SECTION_MARK {
+            return Err(SnapshotError::Corrupt {
+                section: name,
+                detail: format!("expected section marker, found byte {mark:#04x}"),
+            });
+        }
+        let found = self.str()?;
+        if found != name {
+            return Err(SnapshotError::Corrupt {
+                section: name,
+                detail: format!("found section {found:?} instead"),
+            });
+        }
+        Ok(())
+    }
+
+    fn take(&mut self, n: usize) -> Result<&[u8], SnapshotError> {
+        if self.end - self.pos < n {
+            return Err(SnapshotError::Truncated { section: self.cur_section });
+        }
+        let s = &self.data[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn u8(&mut self) -> Result<u8, SnapshotError> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn bool(&mut self) -> Result<bool, SnapshotError> {
+        match self.u8()? {
+            0 => Ok(false),
+            1 => Ok(true),
+            v => Err(SnapshotError::Corrupt {
+                section: self.cur_section,
+                detail: format!("bool field holds {v}"),
+            }),
+        }
+    }
+
+    pub fn u16(&mut self) -> Result<u16, SnapshotError> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    pub fn u32(&mut self) -> Result<u32, SnapshotError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn u64(&mut self) -> Result<u64, SnapshotError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    /// Length field: bounds-checked against the bytes actually left so a
+    /// corrupt length can never trigger a huge allocation.
+    pub fn len(&mut self) -> Result<usize, SnapshotError> {
+        let v = self.u64()?;
+        if v > (self.end - self.pos) as u64 {
+            return Err(SnapshotError::Corrupt {
+                section: self.cur_section,
+                detail: format!("length {v} exceeds remaining {} bytes", self.end - self.pos),
+            });
+        }
+        Ok(v as usize)
+    }
+
+    pub fn f64(&mut self) -> Result<f64, SnapshotError> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    pub fn str(&mut self) -> Result<String, SnapshotError> {
+        let n = self.u32()? as usize;
+        if n > self.end - self.pos {
+            return Err(SnapshotError::Truncated { section: self.cur_section });
+        }
+        let bytes = self.take(n)?;
+        String::from_utf8(bytes.to_vec()).map_err(|_| SnapshotError::Corrupt {
+            section: self.cur_section,
+            detail: "non-UTF-8 string".into(),
+        })
+    }
+
+    /// Length-prefixed u64 sequence.
+    pub fn u64_seq(&mut self) -> Result<Vec<u64>, SnapshotError> {
+        let n = self.len()?;
+        let mut out = Vec::with_capacity(n.min((self.end - self.pos) / 8 + 1));
+        for _ in 0..n {
+            out.push(self.u64()?);
+        }
+        Ok(out)
+    }
+
+    /// Structural-corruption error in the current section.
+    pub fn corrupt(&self, detail: impl Into<String>) -> SnapshotError {
+        SnapshotError::Corrupt { section: self.cur_section, detail: detail.into() }
+    }
+
+    /// All body bytes consumed?
+    pub fn finish(&self) -> Result<(), SnapshotError> {
+        if self.pos != self.end {
+            return Err(SnapshotError::Corrupt {
+                section: self.cur_section,
+                detail: format!("{} trailing bytes after final section", self.end - self.pos),
+            });
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Vec<u8> {
+        let mut w = SnapWriter::new(SnapFlavor::SingleGpu);
+        w.section("meta");
+        w.u64(42);
+        w.str("hello");
+        w.bool(true);
+        w.f64(2.5);
+        w.u64_seq(&[1, 2, 3]);
+        w.finish()
+    }
+
+    #[test]
+    fn round_trip() {
+        let mut r = SnapReader::from_bytes(sample()).unwrap();
+        assert_eq!(r.flavor(), SnapFlavor::SingleGpu);
+        r.section("meta").unwrap();
+        assert_eq!(r.u64().unwrap(), 42);
+        assert_eq!(r.str().unwrap(), "hello");
+        assert!(r.bool().unwrap());
+        assert_eq!(r.f64().unwrap(), 2.5);
+        assert_eq!(r.u64_seq().unwrap(), vec![1, 2, 3]);
+        r.finish().unwrap();
+    }
+
+    #[test]
+    fn bad_magic_and_version() {
+        let mut b = sample();
+        b[0] ^= 0xFF;
+        assert!(matches!(SnapReader::from_bytes(b), Err(SnapshotError::BadMagic)));
+
+        let mut w = SnapWriter::new(SnapFlavor::SingleGpu);
+        w.section("x");
+        let mut b = w.finish();
+        b[8] = 0xEE; // bump version field, then re-seal the checksum
+        let end = b.len() - 8;
+        let sum = hash_bytes(&b[..end]);
+        b[end..].copy_from_slice(&sum.to_le_bytes());
+        assert!(matches!(
+            SnapReader::from_bytes(b),
+            Err(SnapshotError::VersionMismatch { found: 0xEE, .. })
+        ));
+    }
+
+    #[test]
+    fn corruption_and_truncation_detected() {
+        let good = sample();
+        // flip one body bit → checksum mismatch
+        let mut bad = good.clone();
+        bad[20] ^= 0x10;
+        assert!(matches!(
+            SnapReader::from_bytes(bad),
+            Err(SnapshotError::ChecksumMismatch { .. })
+        ));
+        // cut the tail → checksum (or header) failure, never a panic
+        for cut in [good.len() - 1, good.len() / 2, 5] {
+            let t = good[..cut].to_vec();
+            assert!(SnapReader::from_bytes(t).is_err());
+        }
+    }
+
+    #[test]
+    fn wrong_section_name_is_corrupt() {
+        let mut r = SnapReader::from_bytes(sample()).unwrap();
+        let err = r.section("not_meta").unwrap_err();
+        assert!(matches!(err, SnapshotError::Corrupt { section: "not_meta", .. }));
+    }
+
+    #[test]
+    fn oversized_length_rejected_without_allocation() {
+        let mut w = SnapWriter::new(SnapFlavor::Cluster);
+        w.section("s");
+        w.u64(u64::MAX); // absurd length prefix
+        let b = w.finish();
+        let mut r = SnapReader::from_bytes(b).unwrap();
+        r.section("s").unwrap();
+        assert!(r.len().is_err());
+    }
+
+    #[test]
+    fn hash_debug_tracks_value_changes() {
+        assert_eq!(hash_debug(&(1u32, "a")), hash_debug(&(1u32, "a")));
+        assert_ne!(hash_debug(&(1u32, "a")), hash_debug(&(2u32, "a")));
+        assert_ne!(hash_bytes(b"abc"), hash_bytes(b"abcd"));
+    }
+
+    #[test]
+    fn atomic_write_round_trips() {
+        let dir = std::env::temp_dir().join(format!("parsim_snap_test_{}", std::process::id()));
+        let path = dir.join("t.snap");
+        let mut w = SnapWriter::new(SnapFlavor::SingleGpu);
+        w.section("meta");
+        w.u64(7);
+        w.write_to(&path).unwrap();
+        let mut r = SnapReader::open(&path).unwrap();
+        r.section("meta").unwrap();
+        assert_eq!(r.u64().unwrap(), 7);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -231,6 +231,101 @@ impl Icnt {
         self.free_slots.clear();
         self.in_flight = 0;
     }
+
+    // --- snapshot codecs (crash-safety layer) ---
+
+    /// In-flight packets are written per destination (heap pop order on
+    /// restore depends only on each packet's `(ready_cycle, seq)` key,
+    /// so heap/slab layout need not be preserved — the slab and free
+    /// list are rebuilt fresh by re-injecting into an empty crossbar).
+    /// Ejection buffers are FIFO and keep their exact order.
+    pub(crate) fn snap(&self, w: &mut crate::engine::snapshot::SnapWriter) {
+        w.len(self.num_nodes);
+        for dst in 0..self.num_nodes {
+            let mut pkts: Vec<&Packet> = self.per_dst[dst]
+                .iter()
+                .map(|&Due(_, _, slot)| self.slab[slot].as_ref().expect("slab slot occupied"))
+                .collect();
+            // canonical bytes: heap iteration order is arbitrary
+            pkts.sort_by_key(|p| (p.ready_cycle, p.seq));
+            w.len(pkts.len());
+            for p in pkts {
+                p.snap(w);
+            }
+            w.len(self.eject[dst].len());
+            for p in &self.eject[dst] {
+                p.snap(w);
+            }
+        }
+        w.u64(self.seq);
+        w.u64(self.delivered);
+    }
+
+    pub(crate) fn restore(
+        &mut self,
+        r: &mut crate::engine::snapshot::SnapReader,
+    ) -> Result<(), crate::engine::snapshot::SnapshotError> {
+        let nn = r.len()?;
+        if nn != self.num_nodes {
+            return Err(r.corrupt(format!(
+                "crossbar has {} nodes, snapshot has {nn}",
+                self.num_nodes
+            )));
+        }
+        self.flush();
+        for dst in 0..self.num_nodes {
+            let np = r.len()?;
+            for _ in 0..np {
+                let pkt = Packet::restore(r)?;
+                if pkt.dst as usize != dst {
+                    return Err(r.corrupt(format!(
+                        "packet for node {} filed under node {dst}",
+                        pkt.dst
+                    )));
+                }
+                let slot = self.slab.len();
+                self.slab.push(Some(pkt));
+                self.per_dst[dst].push(Due(pkt.ready_cycle, pkt.seq, slot));
+                self.in_flight += 1;
+            }
+            let ne = r.len()?;
+            for _ in 0..ne {
+                self.eject[dst].push_back(Packet::restore(r)?);
+                self.in_flight += 1;
+            }
+        }
+        self.seq = r.u64()?;
+        self.delivered = r.u64()?;
+        Ok(())
+    }
+}
+
+// --- snapshot codecs (crash-safety layer) ---
+
+impl Packet {
+    pub(crate) fn snap(&self, w: &mut crate::engine::snapshot::SnapWriter) {
+        self.req.snap(w);
+        w.bool(self.is_reply);
+        w.u32(self.src);
+        w.u32(self.dst);
+        w.u32(self.size_bytes);
+        w.u64(self.ready_cycle);
+        w.u64(self.seq);
+    }
+
+    pub(crate) fn restore(
+        r: &mut crate::engine::snapshot::SnapReader,
+    ) -> Result<Self, crate::engine::snapshot::SnapshotError> {
+        Ok(Packet {
+            req: MemRequest::restore(r)?,
+            is_reply: r.bool()?,
+            src: r.u32()?,
+            dst: r.u32()?,
+            size_bytes: r.u32()?,
+            ready_cycle: r.u64()?,
+            seq: r.u64()?,
+        })
+    }
 }
 
 #[cfg(test)]

@@ -64,7 +64,11 @@
 //!   under one global core budget), and a persistent content-hash-keyed
 //!   JSONL/CSV result store — re-running a campaign skips
 //!   already-simulated jobs, and reruns write byte-identical result
-//!   files (the paper's determinism at campaign granularity).
+//!   files (the paper's determinism at campaign granularity). A
+//!   write-ahead job journal, per-job mid-run checkpoints, and
+//!   panic-isolated job execution with retry + quarantine make
+//!   campaigns crash-safe: `parsim campaign --resume` recovers a killed
+//!   sweep to the byte-identical store.
 //!
 //! ## Two-level parallelism
 //!
@@ -148,6 +152,39 @@
 //!     stats.comm_cycles,
 //!     stats.fabric.bytes_delivered
 //! );
+//! # Ok(()) }
+//! ```
+//!
+//! ## Crash safety quickstart
+//!
+//! Any session (single-GPU or cluster) can be snapshotted mid-kernel to
+//! one versioned, checksummed file and resumed later — in a new
+//! process, under a different thread count or schedule — walking the
+//! exact same fingerprint trail as a run that never paused
+//! ([`engine::snapshot`], `tests/snapshot.rs`). Campaigns get the same
+//! treatment end-to-end: a write-ahead job journal plus atomic store
+//! writes make `parsim campaign --resume` converge to a byte-identical
+//! store after a `kill -9`, with panicking or wedged jobs retried and
+//! then quarantined instead of aborting the sweep.
+//!
+//! ```no_run
+//! use parsim::{Scale, SimBuilder, StopCondition};
+//!
+//! # fn main() -> Result<(), parsim::SimError> {
+//! let mut session = SimBuilder::new()
+//!     .workload_named("hotspot", Scale::Ci)
+//!     .threads(8)
+//!     .build()?;
+//! session.run(StopCondition::CycleBudget(10_000))?;
+//! session.save_snapshot("run.snap")?;       // atomic write + checksum
+//! drop(session);                            // …crash, reboot, next day…
+//!
+//! let mut resumed = SimBuilder::new()
+//!     .workload_named("hotspot", Scale::Ci)
+//!     .threads(1)                           // thread count may differ
+//!     .resume_from("run.snap")
+//!     .build()?;                            // typed SnapshotError on damage
+//! resumed.run_to_completion()?;             // bit-identical to uninterrupted
 //! # Ok(()) }
 //! ```
 //!

@@ -16,7 +16,9 @@ use std::process::ExitCode;
 
 use parsim::cli::Args;
 use parsim::config::{presets, FunctionalMode, GpuConfig, Schedule, SimConfig, StatsStrategy};
-use parsim::engine::{PhaseProfileStreamer, ProgressTicker, SimBuilder, StatsSampler};
+use parsim::engine::{
+    PhaseProfileStreamer, ProgressTicker, SessionStatus, SimBuilder, StatsSampler, StopCondition,
+};
 use parsim::harness;
 use parsim::stats::diff::diff_runs;
 use parsim::trace::workloads::{self, Scale};
@@ -36,11 +38,15 @@ const VALUE_OPTS: &[&str] = &[
     "json", "diff", "diff-threshold",
     // telemetry (run/cluster)
     "metrics-out", "trace-out", "trace-sample-every",
+    // crash safety: run/cluster snapshots + campaign resumption
+    "snapshot-out", "snapshot-every", "resume-from", "retries", "checkpoint-every",
     // diverge probe: per-side overrides + self-test perturbation
     "threads-a", "threads-b", "schedule-a", "schedule-b", "perturb-at",
 ];
 const FLAG_OPTS: &[&str] = &[
     "list", "show", "describe", "profile", "functional", "quiet", "help", "force",
+    // campaign crash recovery: replay the write-ahead journal
+    "resume",
     // engine ablation switches (run/cluster/bench; results are
     // bit-identical with or without — these only change wall-clock)
     "no-worklist", "no-fast-forward",
@@ -133,7 +139,15 @@ fn print_help() {
          \x20               --schedules static:0,dynamic:1 --stats-list per-sm --scale ci\n\
          \x20               --name sweep --out campaign_out --workers N --core-budget N --force\n\
          \x20               (defaults: nn,hotspot,mst × tiny × 1,4 × static:0,dynamic:1 = 12 jobs;\n\
-         \x20               rerunning reports cache hits and simulates only the delta)"
+         \x20               rerunning reports cache hits and simulates only the delta)\n\n\
+         crash safety:   run/cluster: --snapshot-out FILE --snapshot-every N saves a full\n\
+         \x20               engine snapshot every N cycles; --resume-from FILE restores one\n\
+         \x20               (the resumed run is bit-identical to an uninterrupted run)\n\
+         \x20               campaign: --resume replays the write-ahead journal after a crash\n\
+         \x20               (finished jobs recovered, in-flight jobs restart from checkpoints),\n\
+         \x20               --checkpoint-every N (per-job snapshot cadence, cycles),\n\
+         \x20               --retries N (retry budget; exhausted jobs are quarantined and\n\
+         \x20               reported, the sweep continues)"
     );
 }
 
@@ -198,6 +212,19 @@ fn build_simconfig(args: &Args) -> Result<SimConfig, String> {
     })
 }
 
+/// Parse the snapshot CLI surface shared by `run` and `cluster`:
+/// `--snapshot-out FILE --snapshot-every N` (periodic crash-recovery
+/// snapshot) — the two go together, half a pair is a usage error.
+fn parse_snapshot_opts(args: &Args) -> Result<Option<(std::path::PathBuf, u64)>, String> {
+    let out = args.get("snapshot-out").map(std::path::PathBuf::from);
+    let every = args.get_u64("snapshot-every", 0).map_err(|e| e.to_string())?;
+    match (out, every) {
+        (Some(path), n) if n > 0 => Ok(Some((path, n))),
+        (None, 0) => Ok(None),
+        _ => Err("--snapshot-out FILE and --snapshot-every N go together".into()),
+    }
+}
+
 /// Apply the telemetry CLI surface (`--metrics-out`, `--trace-out`,
 /// `--trace-sample-every`) shared by `run` and `cluster`. Returns the
 /// builder plus the metrics output path (written after the run).
@@ -245,7 +272,12 @@ fn cmd_run(args: &Args) -> Result<(), String> {
     let progress_every = args.get_u64("progress-every", 0).map_err(|e| e.to_string())?;
     let export_dir = args.get("export-dir").map(std::path::PathBuf::from);
 
+    let snapshot = parse_snapshot_opts(args)?;
+
     let mut builder = SimBuilder::new().gpu(gpu).sim(sim).workload_named(name, scale);
+    if let Some(path) = args.get("resume-from") {
+        builder = builder.resume_from(path);
+    }
     let mut sample_buf = None;
     if sample_every > 0 {
         if export_dir.is_some() {
@@ -278,7 +310,20 @@ fn cmd_run(args: &Args) -> Result<(), String> {
             sim.stats_strategy.name(),
         );
     }
-    let run_result = session.run_to_completion();
+    let run_result = match &snapshot {
+        Some((path, every)) => loop {
+            match session.run(StopCondition::CycleBudget(*every)) {
+                Ok(SessionStatus::Finished) => break Ok(()),
+                Ok(SessionStatus::Running) => {
+                    if let Err(e) = session.save_snapshot(path) {
+                        break Err(e);
+                    }
+                }
+                Err(e) => break Err(e),
+            }
+        },
+        None => session.run_to_completion(),
+    };
     // flush collected samples even when the run fails (e.g. the cycle
     // guard tripped) — a partial time series is still worth keeping; a
     // flush failure must never mask the simulation's own error
@@ -372,12 +417,16 @@ fn cmd_cluster(args: &Args) -> Result<(), String> {
             pb.parse().map_err(|_| format!("bad --packet-bytes {pb:?}"))?;
     }
     let progress_every = args.get_u64("progress-every", 0).map_err(|e| e.to_string())?;
+    let snapshot = parse_snapshot_opts(args)?;
 
     let mut builder = SimBuilder::new()
         .gpu(gpu)
         .sim(sim)
         .workload_named(name, scale)
         .cluster(cluster_cfg);
+    if let Some(path) = args.get("resume-from") {
+        builder = builder.resume_from(path);
+    }
     if progress_every > 0 {
         builder = builder.observer(ProgressTicker::new(progress_every));
     }
@@ -396,7 +445,17 @@ fn cmd_cluster(args: &Args) -> Result<(), String> {
             wl.total_comm_bytes(),
         );
     }
-    session.run_to_completion().map_err(|e| e.to_string())?;
+    match &snapshot {
+        Some((path, every)) => loop {
+            match session.run(StopCondition::CycleBudget(*every)).map_err(|e| e.to_string())? {
+                SessionStatus::Finished => break,
+                SessionStatus::Running => {
+                    session.save_snapshot(path).map_err(|e| e.to_string())?;
+                }
+            }
+        },
+        None => session.run_to_completion().map_err(|e| e.to_string())?,
+    }
     let stats = session.stats().expect("session finished");
 
     println!("workload            {}", stats.workload);
@@ -785,6 +844,9 @@ fn cmd_campaign(args: &Args) -> Result<(), String> {
             .map_err(|e| e.to_string())?,
         force: args.flag("force"),
         quiet: args.flag("quiet"),
+        resume: args.flag("resume"),
+        retries: args.get_u64("retries", 0).map_err(|e| e.to_string())? as u32,
+        checkpoint_every: args.get_u64("checkpoint-every", 0).map_err(|e| e.to_string())?,
     };
     eprintln!(
         "campaign {name:?}: {} job(s) ({} workload(s) × {} gpu preset(s) × {} gpu count(s) \
@@ -800,6 +862,11 @@ fn cmd_campaign(args: &Args) -> Result<(), String> {
     );
     let report = campaign::run_campaign(&spec, &out, &cfg)?;
     println!("{}", report.summary());
+    // the sweep completed around the quarantined jobs and the store was
+    // flushed — but an incomplete result set must not exit 0
+    if !report.quarantined.is_empty() {
+        return Err(format!("{} job(s) quarantined", report.quarantined.len()));
+    }
     Ok(())
 }
 

@@ -304,6 +304,99 @@ impl Cache {
     }
 }
 
+// --- snapshot codecs (crash-safety layer) ---
+
+use crate::engine::snapshot::{SnapReader, SnapWriter, SnapshotError};
+
+impl Cache {
+    /// Everything that is not config-derived: the line array in index
+    /// order (tags, states, dirty bits, LRU ticks), MSHRs in allocation
+    /// order (waiter order matters — fills wake waiters in merge order),
+    /// both drain queues in order, and the LRU tick counter.
+    pub(crate) fn snap(&self, w: &mut SnapWriter) {
+        w.len(self.lines.len());
+        for l in &self.lines {
+            w.u64(l.tag);
+            w.u8(match l.state {
+                LineState::Invalid => 0,
+                LineState::Reserved => 1,
+                LineState::Valid => 2,
+            });
+            w.bool(l.dirty);
+            w.u64(l.last_use);
+        }
+        w.len(self.mshrs.len());
+        for e in &self.mshrs {
+            w.u64(e.line_addr);
+            w.len(e.waiters.len());
+            for &(sm_id, warp) in &e.waiters {
+                w.u32(sm_id);
+                w.u16(warp.warp_slot);
+                w.u16(warp.load_slot);
+            }
+            w.len(e.merged);
+        }
+        w.len(self.miss_queue.len());
+        for q in &self.miss_queue {
+            q.snap(w);
+        }
+        w.len(self.writeback_queue.len());
+        for &a in &self.writeback_queue {
+            w.u64(a);
+        }
+        w.u64(self.use_counter);
+    }
+
+    pub(crate) fn restore(&mut self, r: &mut SnapReader) -> Result<(), SnapshotError> {
+        let n = r.len()?;
+        if n != self.lines.len() {
+            return Err(r.corrupt(format!(
+                "cache has {} lines, snapshot has {n}",
+                self.lines.len()
+            )));
+        }
+        for l in &mut self.lines {
+            l.tag = r.u64()?;
+            l.state = match r.u8()? {
+                0 => LineState::Invalid,
+                1 => LineState::Reserved,
+                2 => LineState::Valid,
+                t => return Err(r.corrupt(format!("cache line state tag {t}"))),
+            };
+            l.dirty = r.bool()?;
+            l.last_use = r.u64()?;
+        }
+        let nm = r.len()?;
+        if nm > self.cfg.mshr_entries {
+            return Err(r.corrupt(format!(
+                "{nm} MSHRs exceeds configured {}",
+                self.cfg.mshr_entries
+            )));
+        }
+        self.mshrs.clear();
+        for _ in 0..nm {
+            let line_addr = r.u64()?;
+            let nw = r.len()?;
+            let mut waiters = Vec::with_capacity(nw);
+            for _ in 0..nw {
+                let sm_id = r.u32()?;
+                let warp = WarpRef { warp_slot: r.u16()?, load_slot: r.u16()? };
+                waiters.push((sm_id, warp));
+            }
+            let merged = r.len()?;
+            self.mshrs.push(MshrEntry { line_addr, waiters, merged });
+        }
+        let nq = r.len()?;
+        self.miss_queue.clear();
+        for _ in 0..nq {
+            self.miss_queue.push_back(MemRequest::restore(r)?);
+        }
+        self.writeback_queue = r.u64_seq()?.into_iter().collect();
+        self.use_counter = r.u64()?;
+        Ok(())
+    }
+}
+
 /// Convenience constructor for tests.
 pub fn test_request(line_addr: u64, is_write: bool) -> MemRequest {
     MemRequest {

@@ -230,6 +230,94 @@ impl Dram {
         mix64(mix2(h, x))
     }
 
+    // --- snapshot codecs (crash-safety layer) ---
+
+    /// Dynamic state: banks (index order), FR-FCFS queue, in-flight
+    /// window (Vec order — `swap_remove` order is part of the state),
+    /// completion queue, the internal clock, and the fractional
+    /// clock-domain accumulator (bit-exact via `to_bits`).
+    pub(crate) fn snap(&self, w: &mut crate::engine::snapshot::SnapWriter) {
+        w.len(self.banks.len());
+        for b in &self.banks {
+            match b.open_row {
+                Some(row) => {
+                    w.u8(1);
+                    w.u64(row);
+                }
+                None => w.u8(0),
+            }
+            w.u64(b.busy_until);
+        }
+        w.len(self.queue.len());
+        for q in &self.queue {
+            q.r.req.snap(w);
+            w.len(q.r.subpart);
+            w.u16(q.bank);
+            w.u64(q.row);
+        }
+        w.len(self.in_flight.len());
+        for &(due, r) in &self.in_flight {
+            w.u64(due);
+            r.req.snap(w);
+            w.len(r.subpart);
+        }
+        w.len(self.done.len());
+        for r in &self.done {
+            r.req.snap(w);
+            w.len(r.subpart);
+        }
+        w.u64(self.dram_cycle);
+        w.f64(self.clock_acc);
+    }
+
+    pub(crate) fn restore(
+        &mut self,
+        r: &mut crate::engine::snapshot::SnapReader,
+    ) -> Result<(), crate::engine::snapshot::SnapshotError> {
+        let nb = r.len()?;
+        if nb != self.banks.len() {
+            return Err(r.corrupt(format!(
+                "dram has {} banks, snapshot has {nb}",
+                self.banks.len()
+            )));
+        }
+        for b in &mut self.banks {
+            b.open_row = match r.u8()? {
+                0 => None,
+                1 => Some(r.u64()?),
+                t => return Err(r.corrupt(format!("open_row option tag {t}"))),
+            };
+            b.busy_until = r.u64()?;
+        }
+        let nq = r.len()?;
+        self.queue.clear();
+        for _ in 0..nq {
+            let req = MemRequest::restore(r)?;
+            let subpart = r.len()?;
+            let bank = r.u16()?;
+            let row = r.u64()?;
+            self.queue.push_back(QueuedReq { r: DramReq { req, subpart }, bank, row });
+        }
+        let ni = r.len()?;
+        self.in_flight.clear();
+        for _ in 0..ni {
+            let due = r.u64()?;
+            let req = MemRequest::restore(r)?;
+            let subpart = r.len()?;
+            self.in_flight.push((due, DramReq { req, subpart }));
+        }
+        let nd = r.len()?;
+        self.done.clear();
+        for _ in 0..nd {
+            let req = MemRequest::restore(r)?;
+            let subpart = r.len()?;
+            self.done.push_back(DramReq { req, subpart });
+        }
+        self.dram_cycle = r.u64()?;
+        self.clock_acc = r.f64()?;
+        Ok(())
+    }
+
     /// Between-kernel reset (keeps the clock phase, drops state).
     pub fn flush(&mut self) {
         self.queue.clear();

@@ -67,6 +67,29 @@ impl MemRequest {
     }
 }
 
+// --- snapshot codecs (crash-safety layer) ---
+
+impl MemRequest {
+    pub(crate) fn snap(&self, w: &mut crate::engine::snapshot::SnapWriter) {
+        w.u64(self.line_addr);
+        w.bool(self.is_write);
+        w.u32(self.sm_id);
+        w.u16(self.warp.warp_slot);
+        w.u16(self.warp.load_slot);
+    }
+
+    pub(crate) fn restore(
+        r: &mut crate::engine::snapshot::SnapReader,
+    ) -> Result<Self, crate::engine::snapshot::SnapshotError> {
+        Ok(MemRequest {
+            line_addr: r.u64()?,
+            is_write: r.bool()?,
+            sm_id: r.u32()?,
+            warp: WarpRef { warp_slot: r.u16()?, load_slot: r.u16()? },
+        })
+    }
+}
+
 /// Map a line address to its memory sub-partition (L2 slice).
 ///
 /// Accel-sim hashes line addresses across partitions to avoid camping;

@@ -286,6 +286,75 @@ impl MemPartition {
     }
 }
 
+// --- snapshot codecs (crash-safety layer) ---
+
+use crate::engine::snapshot::{SnapReader, SnapWriter, SnapshotError};
+
+impl SubPartition {
+    fn snap(&self, w: &mut SnapWriter) {
+        self.l2.snap(w);
+        w.len(self.input.len());
+        for q in &self.input {
+            q.snap(w);
+        }
+        w.len(self.reply.len());
+        for &(ready, q) in &self.reply {
+            w.u64(ready);
+            q.snap(w);
+        }
+        self.stats.snap(w);
+    }
+
+    fn restore(&mut self, r: &mut SnapReader) -> Result<(), SnapshotError> {
+        self.l2.restore(r)?;
+        let ni = r.len()?;
+        if ni > self.input_cap {
+            return Err(r.corrupt(format!("{ni} queued inputs exceeds cap {}", self.input_cap)));
+        }
+        self.input.clear();
+        for _ in 0..ni {
+            self.input.push_back(MemRequest::restore(r)?);
+        }
+        let nr = r.len()?;
+        self.reply.clear();
+        for _ in 0..nr {
+            let ready = r.u64()?;
+            self.reply.push_back((ready, MemRequest::restore(r)?));
+        }
+        self.stats = MemStats::restore(r)?;
+        Ok(())
+    }
+}
+
+impl MemPartition {
+    /// Slices in index order, then the DRAM channel and its counters.
+    /// `id`/geometry are config-derived and validated by slice count.
+    pub(crate) fn snap(&self, w: &mut SnapWriter) {
+        w.len(self.subs.len());
+        for s in &self.subs {
+            s.snap(w);
+        }
+        self.dram.snap(w);
+        self.dram_stats.snap(w);
+    }
+
+    pub(crate) fn restore(&mut self, r: &mut SnapReader) -> Result<(), SnapshotError> {
+        let ns = r.len()?;
+        if ns != self.subs.len() {
+            return Err(r.corrupt(format!(
+                "partition has {} slices, snapshot has {ns}",
+                self.subs.len()
+            )));
+        }
+        for s in &mut self.subs {
+            s.restore(r)?;
+        }
+        self.dram.restore(r)?;
+        self.dram_stats = MemStats::restore(r)?;
+        Ok(())
+    }
+}
+
 /// Helper for the engine: make a reply packet from a memory reply.
 pub fn reply_packet(req: MemRequest, src_node: usize, now: u64, latency: u32) -> Packet {
     Packet {

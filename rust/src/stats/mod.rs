@@ -234,6 +234,107 @@ impl MemStats {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Snapshot codecs (crash-safety layer)
+// ---------------------------------------------------------------------------
+
+use crate::engine::snapshot::{SnapReader, SnapWriter, SnapshotError};
+
+impl SmStats {
+    /// Serialize every counter (macro order) + the non-counter stats.
+    pub(crate) fn snap(&self, w: &mut SnapWriter) {
+        macro_rules! put {
+            ($f:ident, $doc:literal) => {
+                w.u64(self.$f);
+            };
+        }
+        for_each_sm_counter!(put);
+        self.unique_lines.snap(w);
+        w.u64_seq(&self.addr_buffer);
+    }
+
+    /// Inverse of [`SmStats::snap`] — same macro, same field order.
+    pub(crate) fn restore(r: &mut SnapReader) -> Result<Self, SnapshotError> {
+        let mut s = SmStats::default();
+        macro_rules! get {
+            ($f:ident, $doc:literal) => {
+                s.$f = r.u64()?;
+            };
+        }
+        for_each_sm_counter!(get);
+        s.unique_lines = AddrSet::restore(r)?;
+        s.addr_buffer = r.u64_seq()?;
+        Ok(s)
+    }
+}
+
+impl MemStats {
+    pub(crate) fn snap(&self, w: &mut SnapWriter) {
+        self.visit_counters(|_, v| w.u64(v));
+    }
+
+    pub(crate) fn restore(r: &mut SnapReader) -> Result<Self, SnapshotError> {
+        Ok(MemStats {
+            l2_accesses: r.u64()?,
+            l2_hits: r.u64()?,
+            l2_misses: r.u64()?,
+            l2_mshr_merges: r.u64()?,
+            l2_writebacks: r.u64()?,
+            l2_reservation_fails: r.u64()?,
+            dram_reads: r.u64()?,
+            dram_writes: r.u64()?,
+            dram_row_hits: r.u64()?,
+            dram_row_misses: r.u64()?,
+            dram_bank_busy_cycles: r.u64()?,
+            dram_queue_full_stalls: r.u64()?,
+        })
+    }
+}
+
+impl KernelStats {
+    pub(crate) fn snap(&self, w: &mut SnapWriter) {
+        w.str(&self.name);
+        w.len(self.kernel_id);
+        w.u64(self.cycles);
+        w.u64(self.grid_ctas);
+        self.sm.snap(w);
+        w.len(self.per_sm.len());
+        for s in &self.per_sm {
+            s.snap(w);
+        }
+        self.mem.snap(w);
+        w.u64(self.unique_lines_global);
+        w.u64(self.unique_lines_fp);
+    }
+
+    pub(crate) fn restore(r: &mut SnapReader) -> Result<Self, SnapshotError> {
+        let name = r.str()?;
+        let kernel_id = r.len()?;
+        let cycles = r.u64()?;
+        let grid_ctas = r.u64()?;
+        let sm = SmStats::restore(r)?;
+        let n = r.len()?;
+        let mut per_sm = Vec::with_capacity(n);
+        for _ in 0..n {
+            per_sm.push(SmStats::restore(r)?);
+        }
+        let mem = MemStats::restore(r)?;
+        let unique_lines_global = r.u64()?;
+        let unique_lines_fp = r.u64()?;
+        Ok(KernelStats {
+            name,
+            kernel_id,
+            cycles,
+            grid_ctas,
+            sm,
+            per_sm,
+            mem,
+            unique_lines_global,
+            unique_lines_fp,
+        })
+    }
+}
+
 /// u64 hasher based on the SplitMix64 finalizer: deterministic across
 /// runs/platforms (unlike `RandomState`) and ~4× cheaper than SipHash for
 /// the 8-byte keys the hot path inserts.
@@ -320,6 +421,27 @@ impl AddrSet {
     pub fn clear(&mut self) {
         self.set.clear();
     }
+
+    /// Serialize contents in **sorted** order so snapshot bytes are a
+    /// canonical function of the set's contents (the in-memory iteration
+    /// order is layout-dependent and must never reach the file).
+    pub(crate) fn snap(&self, w: &mut SnapWriter) {
+        let mut v: Vec<u64> = self.set.iter().copied().collect();
+        v.sort_unstable();
+        w.u64_seq(&v);
+    }
+
+    /// Rebuild by re-insertion (iteration order is unobservable, so the
+    /// rebuilt set is semantically identical to the saved one).
+    pub(crate) fn restore(r: &mut SnapReader) -> Result<Self, SnapshotError> {
+        let v = r.u64_seq()?;
+        let mut s = AddrSet::default();
+        s.set.reserve(v.len());
+        for a in v {
+            s.set.insert(a);
+        }
+        Ok(s)
+    }
 }
 
 /// §3 `SharedLocked` strategy: the global, mutex-guarded structure that
@@ -366,6 +488,24 @@ impl SharedLockedStats {
     pub fn reset(&self) {
         let mut g = self.inner.lock().unwrap();
         *g = SharedLockedInner::default();
+    }
+
+    /// Snapshot-serialize the guarded contents (sequential point: no SM
+    /// is running, so the lock is uncontended).
+    pub(crate) fn snap(&self, w: &mut SnapWriter) {
+        let g = self.inner.lock().unwrap();
+        w.u64(g.warp_insts_issued);
+        w.u64(g.l1d_accesses);
+        g.unique_lines.snap(w);
+    }
+
+    /// Overwrite the guarded contents from a snapshot.
+    pub(crate) fn restore_into(&self, r: &mut SnapReader) -> Result<(), SnapshotError> {
+        let mut g = self.inner.lock().unwrap();
+        g.warp_insts_issued = r.u64()?;
+        g.l1d_accesses = r.u64()?;
+        g.unique_lines = AddrSet::restore(r)?;
+        Ok(())
     }
 }
 

@@ -80,6 +80,18 @@ impl RegBitset {
         }
         s
     }
+
+    /// Raw word representation (snapshot serialization).
+    #[inline(always)]
+    pub fn to_words(&self) -> [u64; 4] {
+        self.words
+    }
+
+    /// Rebuild from the raw word representation.
+    #[inline(always)]
+    pub fn from_words(words: [u64; 4]) -> Self {
+        Self { words }
+    }
 }
 
 #[cfg(test)]

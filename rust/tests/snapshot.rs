@@ -1,0 +1,296 @@
+//! Snapshot round-trip acceptance tests — crash-safe simulation as a
+//! test suite.
+//!
+//! The contract under test: a session restored from a mid-kernel
+//! snapshot is **bit-identical** to one that never paused — the same
+//! [`SessionFingerprint`] at every subsequent cycle and the same final
+//! statistics fingerprint — across thread counts, both OpenMP-style
+//! schedules, and single-GPU as well as multi-GPU cluster runs
+//! (including a snapshot taken while a communication phase is actively
+//! draining the fabric). Damaged files never produce silently-wrong
+//! simulations: every corruption mode yields a typed
+//! [`SnapshotError`].
+
+use std::path::PathBuf;
+
+use parsim::config::{ClusterConfig, GpuConfig, Schedule};
+use parsim::engine::{
+    hash_bytes, SessionStatus, SimBuilder, SimError, SnapshotError, SNAP_VERSION,
+};
+use parsim::stats::diff::diff_runs;
+use parsim::trace::workloads::Scale;
+use parsim::StopCondition;
+
+fn tmp(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("parsim_snapshot_{tag}_{}.snap", std::process::id()))
+}
+
+fn builder(threads: usize, schedule: Schedule) -> SimBuilder {
+    SimBuilder::new()
+        .gpu(GpuConfig::tiny())
+        .workload_named("nn", Scale::Ci)
+        .threads(threads)
+        .schedule(schedule)
+}
+
+fn cluster_builder(threads: usize) -> SimBuilder {
+    SimBuilder::new()
+        .gpu(GpuConfig::tiny())
+        .workload_named("tp_gemm", Scale::Ci)
+        .threads(threads)
+        .schedule(Schedule::Dynamic { chunk: 1 })
+        .cluster(ClusterConfig::p2p(2))
+}
+
+/// The tentpole guarantee: pause mid-kernel, snapshot, "crash" (drop the
+/// session), resume in a fresh process image — and the resumed run walks
+/// the exact same fingerprint trail, cycle for cycle, as a run that was
+/// never interrupted. Swept over threads {1, 4, 8} × both schedules.
+#[test]
+fn mid_kernel_snapshot_restore_is_bit_identical() {
+    for threads in [1usize, 4, 8] {
+        for schedule in [Schedule::Static { chunk: 0 }, Schedule::Dynamic { chunk: 1 }] {
+            let path = tmp(&format!("roundtrip_{threads}_{schedule:?}").replace(' ', ""));
+
+            // Pause mid-workload and snapshot; dropping the session is
+            // the simulated crash.
+            let mut first = builder(threads, schedule).build().expect("build");
+            let status = first.run(StopCondition::CycleBudget(150)).expect("run");
+            assert_eq!(status, SessionStatus::Running, "150 cycles must land mid-workload");
+            let cut = first.checkpoint();
+            first.save_snapshot(&path).expect("save snapshot");
+            drop(first);
+
+            // Uninterrupted reference, stepped to the cut cycle.
+            let mut reference = builder(threads, schedule).build().expect("build");
+            while reference.checkpoint().cycle < cut.cycle {
+                reference.run(StopCondition::CycleBudget(1)).expect("run");
+            }
+            assert_eq!(reference.checkpoint(), cut, "t={threads} {schedule:?}: cut state");
+
+            // Restore, then walk both sessions one cycle at a time: the
+            // whole trail must match, not just the final statistics.
+            let mut resumed =
+                builder(threads, schedule).resume_from(&path).build().expect("resume");
+            assert_eq!(resumed.checkpoint(), cut, "t={threads} {schedule:?}: restored state");
+            loop {
+                let a = reference.run(StopCondition::CycleBudget(1)).expect("run");
+                let b = resumed.run(StopCondition::CycleBudget(1)).expect("run");
+                assert_eq!(a, b, "t={threads} {schedule:?}: status diverged");
+                assert_eq!(
+                    reference.checkpoint(),
+                    resumed.checkpoint(),
+                    "t={threads} {schedule:?}: trail diverged at cycle {}",
+                    reference.checkpoint().cycle
+                );
+                if a == SessionStatus::Finished {
+                    break;
+                }
+            }
+            let want = reference.into_stats().expect("stats");
+            let got = resumed.into_stats().expect("stats");
+            assert_eq!(want.fingerprint(), got.fingerprint(), "t={threads} {schedule:?}");
+            let d = diff_runs(&want, &got);
+            assert!(d.identical(), "t={threads} {schedule:?} diverged:\n{}", d.report());
+            std::fs::remove_file(&path).ok();
+        }
+    }
+}
+
+/// Snapshots exclude the host-side execution strategy: a file written by
+/// a 1-thread static-schedule run resumes under 8 threads with a dynamic
+/// schedule and still reproduces the original run bit for bit.
+#[test]
+fn snapshot_resumes_across_thread_count_and_schedule() {
+    let path = tmp("xthread");
+    let mut one = builder(1, Schedule::Static { chunk: 0 }).build().expect("build");
+    let status = one.run(StopCondition::CycleBudget(200)).expect("run");
+    assert_eq!(status, SessionStatus::Running, "200 cycles must land mid-workload");
+    let cut = one.checkpoint();
+    one.save_snapshot(&path).expect("save snapshot");
+    one.run_to_completion().expect("finish");
+    let want = one.into_stats().expect("stats");
+
+    let mut eight =
+        builder(8, Schedule::Dynamic { chunk: 1 }).resume_from(&path).build().expect("resume");
+    assert_eq!(eight.checkpoint(), cut, "restored mid-run state");
+    eight.run_to_completion().expect("finish");
+    let got = eight.into_stats().expect("stats");
+    assert_eq!(want.fingerprint(), got.fingerprint(), "fingerprint across thread counts");
+    let d = diff_runs(&want, &got);
+    assert!(d.identical(), "1t/static vs 8t/dynamic resume diverged:\n{}", d.report());
+    std::fs::remove_file(&path).ok();
+}
+
+/// Cluster round trip at the hardest snapshot point: inside a
+/// communication phase, with packets still in flight on the fabric. The
+/// resumed run (under a different thread count) must deliver the same
+/// traffic, byte for byte, and land on the same cluster fingerprint.
+#[test]
+fn cluster_snapshot_mid_comm_phase_restores_in_flight_traffic() {
+    let mut reference = cluster_builder(1).build_cluster().expect("build");
+    reference.run_to_completion().expect("run");
+    let want = reference.into_stats().expect("stats");
+    assert!(want.comm_cycles > 0, "tp_gemm on 2 GPUs must exercise the fabric");
+
+    // Step one cluster cycle at a time until a communication phase has
+    // started draining, then snapshot right there.
+    let path = tmp("cluster_midcomm");
+    let mut first = cluster_builder(2).build_cluster().expect("build");
+    loop {
+        let status = first.run(StopCondition::CycleBudget(1)).expect("run");
+        assert_ne!(status, SessionStatus::Finished, "must hit a comm phase before finishing");
+        if first.comm_cycles() > 0 {
+            break;
+        }
+    }
+    let cut = first.checkpoint();
+    first.save_snapshot(&path).expect("save mid-comm snapshot");
+    drop(first);
+
+    let mut resumed = cluster_builder(4).resume_from(&path).build_cluster().expect("resume");
+    assert_eq!(resumed.checkpoint(), cut, "mid-comm restore reproduces the paused state");
+    resumed.run_to_completion().expect("finish");
+    let got = resumed.into_stats().expect("stats");
+    assert_eq!(want.fingerprint(), got.fingerprint(), "cluster fingerprint");
+    assert_eq!(want.cluster_cycles, got.cluster_cycles);
+    assert_eq!(want.comm_cycles, got.comm_cycles);
+    assert_eq!(want.fabric.packets_delivered, got.fabric.packets_delivered);
+    assert_eq!(want.fabric.bytes_delivered, got.fabric.bytes_delivered);
+    assert_eq!(want.fabric.traffic_fp, got.fabric.traffic_fp);
+    std::fs::remove_file(&path).ok();
+}
+
+/// Every way a snapshot file can be damaged or misused maps to a typed
+/// [`SnapshotError`] — never a panic, never a silently-wrong simulation.
+#[test]
+fn damaged_snapshot_files_yield_typed_errors() {
+    let path = tmp("damage_src");
+    let mut s = builder(1, Schedule::Static { chunk: 0 }).build().expect("build");
+    assert_eq!(
+        s.run(StopCondition::CycleBudget(100)).expect("run"),
+        SessionStatus::Running,
+        "100 cycles must land mid-workload"
+    );
+    s.save_snapshot(&path).expect("save snapshot");
+    let good = std::fs::read(&path).expect("read snapshot back");
+    std::fs::remove_file(&path).ok();
+
+    let resume_err = |tag: &str, bytes: &[u8]| -> SimError {
+        let p = tmp(tag);
+        std::fs::write(&p, bytes).expect("write doctored snapshot");
+        let e = builder(1, Schedule::Static { chunk: 0 })
+            .resume_from(&p)
+            .build()
+            .expect_err("doctored snapshot must be rejected");
+        std::fs::remove_file(&p).ok();
+        e
+    };
+    // Re-stamp the trailing checksum so a doctored header/body is what
+    // gets detected, not the checksum guarding it.
+    let restamp = |mut bytes: Vec<u8>| -> Vec<u8> {
+        let body = bytes.len() - 8;
+        let sum = hash_bytes(&bytes[..body]).to_le_bytes();
+        bytes[body..].copy_from_slice(&sum);
+        bytes
+    };
+
+    // A single flipped bit anywhere in the body → checksum mismatch.
+    let mut flipped = good.clone();
+    let mid = flipped.len() / 2;
+    flipped[mid] ^= 0x40;
+    let e = resume_err("flip", &flipped);
+    assert!(
+        matches!(e, SimError::Snapshot(SnapshotError::ChecksumMismatch { .. })),
+        "flipped bit: got {e:?}"
+    );
+
+    // Truncated below the minimum header.
+    let e = resume_err("trunc_header", &good[..12]);
+    assert!(
+        matches!(e, SimError::Snapshot(SnapshotError::Truncated { .. })),
+        "header truncation: got {e:?}"
+    );
+
+    // Truncated mid-body with the checksum re-stamped: the cut itself is
+    // what must be caught, as truncation or structural corruption.
+    let cut = restamp(good[..good.len() - 64].to_vec());
+    let e = resume_err("trunc_body", &cut);
+    assert!(
+        matches!(
+            e,
+            SimError::Snapshot(SnapshotError::Truncated { .. } | SnapshotError::Corrupt { .. })
+        ),
+        "body truncation: got {e:?}"
+    );
+
+    // Version skew → both versions reported.
+    let mut skewed = good.clone();
+    skewed[8..12].copy_from_slice(&(SNAP_VERSION + 1).to_le_bytes());
+    match resume_err("version", &restamp(skewed)) {
+        SimError::Snapshot(SnapshotError::VersionMismatch { found, supported }) => {
+            assert_eq!(found, SNAP_VERSION + 1);
+            assert_eq!(supported, SNAP_VERSION);
+        }
+        other => panic!("version skew: got {other:?}"),
+    }
+
+    // Garbage magic → not a snapshot at all.
+    let mut nomagic = good.clone();
+    nomagic[0] ^= 0xFF;
+    let e = resume_err("magic", &restamp(nomagic));
+    assert!(matches!(e, SimError::Snapshot(SnapshotError::BadMagic)), "bad magic: got {e:?}");
+
+    // A cluster snapshot refuses to restore into a single-GPU session…
+    let cpath = tmp("flavor_src");
+    let mut c = cluster_builder(1).build_cluster().expect("build");
+    assert_eq!(
+        c.run(StopCondition::CycleBudget(20)).expect("run"),
+        SessionStatus::Running,
+        "20 cluster cycles must land mid-workload"
+    );
+    c.save_snapshot(&cpath).expect("save cluster snapshot");
+    let e = builder(1, Schedule::Static { chunk: 0 })
+        .resume_from(&cpath)
+        .build()
+        .expect_err("cluster snapshot into single-GPU builder");
+    assert!(
+        matches!(e, SimError::Snapshot(SnapshotError::FlavorMismatch { .. })),
+        "flavor: got {e:?}"
+    );
+    std::fs::remove_file(&cpath).ok();
+    // …and vice versa.
+    let p = tmp("flavor_rev");
+    std::fs::write(&p, &good).expect("write snapshot");
+    let e = cluster_builder(1)
+        .resume_from(&p)
+        .build_cluster()
+        .expect_err("single-GPU snapshot into cluster builder");
+    assert!(
+        matches!(e, SimError::Snapshot(SnapshotError::FlavorMismatch { .. })),
+        "flavor (reverse): got {e:?}"
+    );
+
+    // Same flavor, different workload → config mismatch, not a wrong run.
+    let e = SimBuilder::new()
+        .gpu(GpuConfig::tiny())
+        .workload_named("lud", Scale::Ci)
+        .threads(1)
+        .schedule(Schedule::Static { chunk: 0 })
+        .resume_from(&p)
+        .build()
+        .expect_err("snapshot of a different workload");
+    assert!(
+        matches!(e, SimError::Snapshot(SnapshotError::ConfigMismatch { .. })),
+        "config: got {e:?}"
+    );
+    std::fs::remove_file(&p).ok();
+
+    // Finished sessions have nothing to resume: refused, nothing written.
+    let mut done = builder(1, Schedule::Static { chunk: 0 }).build().expect("build");
+    done.run_to_completion().expect("run");
+    let p = tmp("finished");
+    let e = done.save_snapshot(&p).expect_err("finished sessions cannot be snapshotted");
+    assert!(matches!(e, SimError::SessionFinished), "finished: got {e:?}");
+    assert!(!p.exists(), "refused snapshot must not leave a file behind");
+}
