@@ -29,12 +29,15 @@
 use std::fmt::Write as _;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::Instant;
 
 use crate::config::Schedule;
 use crate::engine::pool::ThreadPool;
 use crate::engine::{DisjointSlice, SessionStatus, SimBuilder, StopCondition};
+use crate::telemetry::attrib::AttributionLedger;
+use crate::telemetry::trace::{TraceEvent, TraceWriter, PID_WALL};
 use crate::trace::workloads;
 
 use super::journal::{self, Journal};
@@ -111,6 +114,10 @@ pub struct CampaignConfig {
     /// When > 0, each running job saves a crash-recovery snapshot every
     /// this many GPU cycles under `<campaign dir>/checkpoints/`.
     pub checkpoint_every: u64,
+    /// Optional Chrome-trace output for the campaign itself: one
+    /// wall-clock span per job plus a `journal_flush` span per durable
+    /// journal append (observability only — never affects results).
+    pub trace_out: Option<std::path::PathBuf>,
 }
 
 impl Default for CampaignConfig {
@@ -124,6 +131,7 @@ impl Default for CampaignConfig {
             resume: false,
             retries: 0,
             checkpoint_every: 0,
+            trace_out: None,
         }
     }
 }
@@ -229,7 +237,7 @@ fn run_job(
     hash: u64,
     effective_threads: usize,
     rec: &JobRecovery<'_>,
-) -> Result<JobRecord, String> {
+) -> Result<(JobRecord, Option<AttributionLedger>), String> {
     // fault-injection hook (crash-safety tests + CI smoke job): any job
     // whose key contains the marker panics instead of simulating,
     // exercising the retry → quarantine path through the public API
@@ -240,11 +248,17 @@ fn run_job(
     }
     let gpu = spec.build_gpu()?;
     let resume = rec.resume && rec.path.exists();
+    // per-job wall-time attribution for the campaign's metrics.jsonl:
+    // the ledger is a pure observer (bit-identical results, pinned by
+    // tests/attrib.rs) and telemetry is excluded from the job content
+    // hash, so enabling it never invalidates cached results
+    let mut sim_cfg = spec.to_sim_config(effective_threads);
+    sim_cfg.telemetry.attrib = true;
     if let Some(cluster) = spec.build_cluster_config()? {
         let make = |resume: bool| {
             let mut b = SimBuilder::new()
                 .gpu(gpu.clone())
-                .sim(spec.to_sim_config(effective_threads))
+                .sim(sim_cfg.clone())
                 .workload_named(spec.workload.as_str(), spec.scale)
                 .cluster(cluster.clone());
             if resume {
@@ -279,15 +293,16 @@ fn run_job(
         } else {
             session.run_to_completion().map_err(|e| e.to_string())?;
         }
+        let ledger = session.attribution();
         let stats = session.into_stats().map_err(|e| e.to_string())?;
-        return Ok(JobRecord::from_cluster_stats(spec, hash, &stats));
+        return Ok((JobRecord::from_cluster_stats(spec, hash, &stats), ledger));
     }
     let wl = workloads::build(&spec.workload, spec.scale)
         .ok_or_else(|| format!("unknown workload {:?}", spec.workload))?;
     let make = |resume: bool| {
         let mut b = SimBuilder::new()
             .gpu(gpu.clone())
-            .sim(spec.to_sim_config(effective_threads))
+            .sim(sim_cfg.clone())
             .workload(wl.clone());
         if resume {
             b = b.resume_from(rec.path);
@@ -318,8 +333,9 @@ fn run_job(
     } else {
         session.run_to_completion().map_err(|e| e.to_string())?;
     }
+    let ledger = session.attribution();
     let stats = session.into_stats().map_err(|e| e.to_string())?;
-    Ok(JobRecord::from_stats(spec, hash, &stats))
+    Ok((JobRecord::from_stats(spec, hash, &stats), ledger))
 }
 
 /// Best-effort text of a caught panic payload.
@@ -347,7 +363,7 @@ fn run_job_isolated(
     effective_threads: usize,
     rec: &JobRecovery<'_>,
     retries: u32,
-) -> Result<JobRecord, String> {
+) -> Result<(JobRecord, Option<AttributionLedger>), String> {
     let mut last = String::new();
     for attempt in 0..=retries {
         // the inner thread pool re-raises worker panics on this thread
@@ -375,7 +391,7 @@ fn run_job_isolated(
 
 /// Outcome of one dispatched job (index-ordered slot in the sweep).
 enum JobOutcome {
-    Done(JobRecord),
+    Done(JobRecord, Option<AttributionLedger>),
     Quarantined { key: String, reason: String },
 }
 
@@ -411,9 +427,13 @@ pub fn run_campaign(
     // crash recovery: seed the store with every job the journal proves
     // finished before partitioning, so those jobs count as cache hits
     let mut recovered = 0usize;
+    let mut replay_events = 0usize;
+    let mut journal_dropped = 0usize;
     if cfg.resume {
         let replay =
             journal::load(&dir).map_err(|e| format!("load journal {}: {e}", dir.display()))?;
+        replay_events = replay.events.len();
+        journal_dropped = replay.dropped;
         if replay.dropped > 0 {
             eprintln!(
                 "warning: journal: {} torn line(s) dropped (expected after a crash)",
@@ -454,12 +474,46 @@ pub fn run_campaign(
     let journal = Mutex::new(
         Journal::open_append(&dir).map_err(|e| format!("open journal {}: {e}", dir.display()))?,
     );
+
+    // optional wall-clock trace of the campaign itself: one span per
+    // dispatched job plus one per durable journal append, on the same
+    // wall lane (PID_WALL) the engine's Chrome-trace writer uses
+    let tracer = match &cfg.trace_out {
+        Some(p) => {
+            let mut w =
+                TraceWriter::create(p).map_err(|e| format!("create {}: {e}", p.display()))?;
+            w.thread_name(PID_WALL, 0, "campaign");
+            Some(Mutex::new(w))
+        }
+        None => None,
+    };
+    let trace_t0 = Instant::now();
+    let flushes = AtomicU64::new(0);
+    let flush_ns = AtomicU64::new(0);
+
     // poison-tolerant lock: appends run outside the job's panic
     // boundary, so a poisoned mutex only means a previous *append*
     // panicked — the file handle itself is still sound
     let with_journal = |f: &dyn Fn(&mut Journal) -> std::io::Result<()>| {
         let mut j = journal.lock().unwrap_or_else(|p| p.into_inner());
+        let ts = Instant::now();
         journal_warn(f(&mut j));
+        let dur = ts.elapsed();
+        drop(j);
+        // SeqCst: cold path (one durable append per job event), and it
+        // keeps the counters off detlint's Relaxed-ordering audit list
+        flushes.fetch_add(1, Ordering::SeqCst);
+        flush_ns.fetch_add(dur.as_nanos() as u64, Ordering::SeqCst);
+        if let Some(m) = &tracer {
+            let ev = TraceEvent::wall_span(
+                "journal_flush",
+                "journal",
+                0,
+                ts.duration_since(trace_t0).as_micros() as u64,
+                dur.as_micros() as u64,
+            );
+            m.lock().unwrap_or_else(|p| p.into_inner()).event(&ev);
+        }
     };
     let ckpt_dir = dir.join("checkpoints");
 
@@ -475,8 +529,20 @@ pub fn run_campaign(
             every: cfg.checkpoint_every,
             resume: cfg.resume,
         };
-        match run_job_isolated(job, hash, effective, &recovery, cfg.retries) {
-            Ok(rec) => {
+        let tj = Instant::now();
+        let outcome = run_job_isolated(job, hash, effective, &recovery, cfg.retries);
+        if let Some(m) = &tracer {
+            let ev = TraceEvent::wall_span(
+                key.as_str(),
+                "job",
+                0,
+                tj.duration_since(trace_t0).as_micros() as u64,
+                tj.elapsed().as_micros() as u64,
+            );
+            m.lock().unwrap_or_else(|p| p.into_inner()).event(&ev);
+        }
+        match outcome {
+            Ok((rec, ledger)) => {
                 // job is durably journaled below; its checkpoint is now
                 // dead weight
                 let _ = std::fs::remove_file(&ckpt_path);
@@ -487,7 +553,7 @@ pub fn run_campaign(
                         rec.key, rec.total_gpu_cycles, rec.fingerprint
                     );
                 }
-                JobOutcome::Done(rec)
+                JobOutcome::Done(rec, ledger)
             }
             Err(reason) => {
                 with_journal(&|j| j.log_quarantined(&key, &reason));
@@ -500,11 +566,16 @@ pub fn run_campaign(
 
     let mut simulated = 0usize;
     let mut quarantined: Vec<(String, String)> = Vec::new();
+    let mut ledgers: Vec<(String, AttributionLedger)> = Vec::new();
     for out in outcomes {
         match out {
-            JobOutcome::Done(rec) => {
+            JobOutcome::Done(rec, ledger) => {
                 simulated += 1;
+                let key = rec.key.clone();
                 store.insert(rec);
+                if let Some(l) = ledger {
+                    ledgers.push((key, l));
+                }
             }
             JobOutcome::Quarantined { key, reason } => quarantined.push((key, reason)),
         }
@@ -525,9 +596,34 @@ pub fn run_campaign(
         reg.counter("campaign.quarantined", quarantined.len() as u64);
         reg.gauge("campaign.workers", workers as u64);
         reg.gauge("campaign.threads_per_job", threads_per_job as u64);
+        reg.counter("campaign.journal.replay_events", replay_events as u64);
+        reg.counter("campaign.journal.dropped_lines", journal_dropped as u64);
+        reg.counter("campaign.journal.flushes", flushes.load(Ordering::SeqCst));
+        reg.counter("campaign.journal.flush_ns", flush_ns.load(Ordering::SeqCst));
+        let mut snap_saves = 0u64;
+        let mut snap_bytes = 0u64;
+        for (key, l) in &ledgers {
+            snap_saves += l.snapshot_saves;
+            snap_bytes += l.snapshot_bytes;
+            l.fill_metrics(&mut reg, &format!("job.{key}."));
+        }
+        reg.counter("campaign.snapshot.saves", snap_saves);
+        reg.counter("campaign.snapshot.bytes_written", snap_bytes);
         let body = crate::stats::export::metrics_jsonl(0, &reg);
         if let Err(e) = std::fs::write(dir.join("metrics.jsonl"), body) {
             eprintln!("warning: write {}: {e}", dir.join("metrics.jsonl").display());
+        }
+    }
+
+    if let Some(m) = tracer {
+        let mut w = m.into_inner().unwrap_or_else(|p| p.into_inner());
+        match w.finish() {
+            Ok(()) => {
+                if !cfg.quiet {
+                    eprintln!("[campaign] wall trace: {} events", w.events_written());
+                }
+            }
+            Err(e) => eprintln!("warning: finish campaign trace: {e}"),
         }
     }
 

@@ -80,12 +80,13 @@ use crate::config::{ClusterConfig, GpuConfig, Schedule, SimConfig, TelemetryConf
 use crate::core::Sm;
 use crate::engine::pool::ThreadPool;
 use crate::engine::session::{gpu_config_hash, sim_config_hash, workload_hash};
-use crate::engine::snapshot::{SnapFlavor, SnapReader, SnapWriter, SnapshotError};
+use crate::engine::snapshot::{write_atomic, SnapFlavor, SnapReader, SnapWriter, SnapshotError};
 use crate::engine::{
     CycleView, DisjointSlice, GpuSim, Observer, SessionFingerprint, SessionStatus, SimError,
     StopCondition,
 };
 use crate::stats::{GpuStats, KernelStats};
+use crate::telemetry::attrib::{AttribAcc, AttributionLedger};
 use crate::telemetry::metrics::MetricsRegistry;
 use crate::telemetry::trace::{TraceEvent, TraceWriter, PID_SIM, PID_WALL};
 use crate::trace::ClusterWorkloadSpec;
@@ -235,6 +236,9 @@ struct ClusterSim {
     /// `cluster_cycle` at which the active communication phase began.
     comm_start: u64,
     trace: Option<Box<ClusterTrace>>,
+    /// Wall-time attribution accumulator (the cluster driver owns the
+    /// clock; member GPUs never run their own `cycle()` loop).
+    attrib: Option<Box<AttribAcc>>,
     /// Debug-only phase tracker for the cluster's own sequential state
     /// (fabric queues); member GPUs carry their own guards, entered
     /// around the shared `(gpu, sm)` fan-out. Inert in release builds.
@@ -307,11 +311,17 @@ impl ClusterSim {
         // run their own `cycle()` loop, so their trace buffers would
         // only waste memory (their metric accumulators stay useful)
         per_gpu_sim.telemetry.trace = false;
+        // same story for the attribution ledger and the counter series:
+        // the cluster driver is the only place the clock (and the cycle
+        // loop) lives, so per-GPU accumulators would never be fed
+        per_gpu_sim.telemetry.attrib = false;
+        per_gpu_sim.telemetry.series_window = 0;
         let gpus = (0..n)
             .map(|_| GpuSim::try_new(gpu.clone(), per_gpu_sim.clone()))
             .collect::<Result<Vec<_>, _>>()?;
+        let instrument = sim.telemetry.trace || sim.telemetry.attrib;
         let pool = if sim.threads > 1 {
-            Some(ThreadPool::new_instrumented(sim.threads, sim.telemetry.trace))
+            Some(ThreadPool::new_instrumented(sim.threads, instrument))
         } else {
             None
         };
@@ -333,6 +343,7 @@ impl ClusterSim {
                 events: Vec::new(),
             })
         });
+        let attrib = sim.telemetry.attrib.then(|| Box::new(AttribAcc::new()));
         Ok(ClusterSim {
             cluster,
             gpus,
@@ -359,6 +370,7 @@ impl ClusterSim {
             ff_cycles_skipped: 0,
             comm_start: 0,
             trace,
+            attrib,
             guard,
             wl,
         })
@@ -377,8 +389,9 @@ impl ClusterSim {
     }
 
     /// One lock-step compute cycle of kernel `k`.
-    // detlint: allow(nondet-source, fn): wall-clock trace lane — clock
-    // reads feed only the trace buffer, never simulated state
+    // detlint: allow(nondet-source, fn): wall-clock trace lane and
+    // attribution ledger — clock reads feed only the trace buffer and
+    // the attribution accumulator, never simulated state
     fn step_compute(&mut self, k: usize) -> Result<StepOutcome, SimError> {
         let n = self.gpus.len();
         let mut started_kernel = None;
@@ -396,6 +409,9 @@ impl ClusterSim {
             Some(t) => self.cluster_cycle % t.sample_every == 0,
             None => false,
         };
+        // the attribution ledger needs the fan-out timed every cycle;
+        // the trace lane keeps its sampling cadence
+        let measured = sampled || self.attrib.is_some();
         let t_seq = sampled.then(Instant::now);
         // level 2: per-GPU sequential stages, fixed GPU-index order
         for g in 0..n {
@@ -403,12 +419,19 @@ impl ClusterSim {
                 self.gpus[g].cycle_sequential_pre();
             }
         }
-        let bw_before = if sampled { self.pool.as_ref().map(|p| p.busy_wait_ns()) } else { None };
-        let t_par = sampled.then(Instant::now);
+        let bw_before = if measured { self.pool.as_ref().map(|p| p.busy_wait_ns()) } else { None };
+        let t_par = measured.then(Instant::now);
         // level 3: one fan-out over all active (gpu, sm) pairs
         self.parallel_sm_phase();
-        let t_tail = sampled.then(Instant::now);
-        let bw_after = if sampled { self.pool.as_ref().map(|p| p.busy_wait_ns()) } else { None };
+        let t_tail = measured.then(Instant::now);
+        let bw_after = if measured { self.pool.as_ref().map(|p| p.busy_wait_ns()) } else { None };
+        if let (Some(acc), Some(t_par), Some(t_tail)) = (&mut self.attrib, t_par, t_tail) {
+            let section_ns = t_tail.duration_since(t_par).as_nanos() as u64;
+            match (bw_before.as_deref(), bw_after.as_deref()) {
+                (Some(before), Some(after)) => acc.record_pool(section_ns, before, after),
+                _ => acc.record_serial(section_ns),
+            }
+        }
         for g in 0..n {
             if !self.gpu_done[g] {
                 self.gpus[g].cycle_finish();
@@ -520,6 +543,9 @@ impl ClusterSim {
     fn note_ff_jump(&mut self, delta: u64) {
         self.ff_jumps += 1;
         self.ff_cycles_skipped += delta;
+        if let Some(a) = &mut self.attrib {
+            a.note_ff(delta);
+        }
         let from = self.cluster_cycle;
         let lane = self.gpus.len() as u32; // the cluster/fabric lane
         if let Some(t) = &mut self.trace {
@@ -616,6 +642,9 @@ impl ClusterSim {
     /// transfer, drain ejections in fixed GPU order.
     fn step_comm(&mut self, k: usize) -> Result<StepOutcome, SimError> {
         let n = self.gpus.len();
+        // detlint: allow(nondet-source): wall-clock attribution — the
+        // comm-phase timer feeds only the ledger, never simulated state
+        let t0 = self.attrib.as_ref().map(|_| Instant::now());
         let now = self.cluster_cycle;
         let rate = self.cluster.fabric.inject_rate as usize;
         for src in 0..n {
@@ -666,6 +695,12 @@ impl ClusterSim {
         } else {
             SessionStatus::Running
         };
+        if let (Some(acc), Some(t0)) = (&mut self.attrib, t0) {
+            // detlint: allow(nondet-source): wall-clock attribution —
+            // feeds only the ledger, never simulated state
+            let dur = Instant::now().duration_since(t0);
+            acc.record_comm(dur.as_nanos() as u64);
+        }
         Ok(StepOutcome {
             status,
             started_kernel: None,
@@ -928,6 +963,10 @@ pub struct ClusterSession {
     wall_s: f64,
     /// Chrome-trace output (cluster events drained after every step).
     trace: Option<TraceWriter>,
+    /// Snapshot-save accounting (attribution ledger's snapshot-I/O term).
+    snap_saves: u64,
+    snap_bytes: u64,
+    snap_ns: u64,
 }
 
 impl ClusterSession {
@@ -945,7 +984,14 @@ impl ClusterSession {
         let threads = sim.threads;
         let mut sim = ClusterSim::new(gpu, sim, cluster, wl)?;
         if let Some(path) = &resume_from {
+            // detlint: allow(nondet-source): wall-clock restore span —
+            // feeds only the trace timeline, never simulated state
+            let t0 = Instant::now();
             restore_cluster_state(&mut sim, path)?;
+            if let Some(w) = &mut trace {
+                let dur_us = t0.elapsed().as_micros() as u64;
+                w.event(&TraceEvent::wall_span("snapshot_restore", "snapshot", 0, 0, dur_us));
+            }
         }
         let cycle_observers = observers.iter().any(|o| o.wants_cycles());
         sim.capture_views = cycle_observers;
@@ -962,7 +1008,17 @@ impl ClusterSession {
                 }
             }
         }
-        Ok(ClusterSession { sim, observers, cycle_observers, finished: None, wall_s: 0.0, trace })
+        Ok(ClusterSession {
+            sim,
+            observers,
+            cycle_observers,
+            finished: None,
+            wall_s: 0.0,
+            trace,
+            snap_saves: 0,
+            snap_bytes: 0,
+            snap_ns: 0,
+        })
     }
 
     /// Drain the driver's buffered trace events into the writer (no-op
@@ -1179,10 +1235,13 @@ impl ClusterSession {
     /// run (via [`SimBuilder::resume_from`](crate::engine::SimBuilder::resume_from)
     /// + `build_cluster()`) is bit-identical at any thread count or
     /// schedule. Errors with [`SimError::SessionFinished`] once finished.
-    pub fn save_snapshot(&self, path: impl AsRef<Path>) -> Result<(), SimError> {
+    pub fn save_snapshot(&mut self, path: impl AsRef<Path>) -> Result<(), SimError> {
         if self.finished.is_some() || self.sim.phase == Phase::Done {
             return Err(SimError::SessionFinished);
         }
+        // detlint: allow(nondet-source): wall-clock snapshot span — feeds
+        // only the ledger and the trace timeline, never simulated state
+        let t0 = Instant::now();
         let mut w = SnapWriter::new(SnapFlavor::Cluster);
         w.section("meta");
         w.u64(gpu_config_hash(&self.sim.gpus[0].gpu));
@@ -1192,8 +1251,42 @@ impl ClusterSession {
         w.str(&self.sim.gpus[0].gpu.name);
         w.str(&self.sim.wl.name);
         self.sim.snap_state(&mut w);
-        w.write_to(path.as_ref())?;
+        let bytes = w.finish();
+        write_atomic(path.as_ref(), &bytes).map_err(SimError::from)?;
+        let dur = t0.elapsed();
+        self.snap_saves += 1;
+        self.snap_bytes += bytes.len() as u64;
+        self.snap_ns += dur.as_nanos() as u64;
+        if let Some(wtr) = &mut self.trace {
+            let ts = match &self.sim.trace {
+                Some(t) => t0.duration_since(t.t0).as_micros() as u64,
+                None => 0,
+            };
+            let ev =
+                TraceEvent::wall_span("snapshot_save", "snapshot", 0, ts, dur.as_micros() as u64)
+                    .arg("bytes", bytes.len() as u64)
+                    .arg("cycle", self.sim.cluster_cycle);
+            wtr.event(&ev);
+        }
         Ok(())
+    }
+
+    /// The wall-time attribution ledger of the run so far (`None` unless
+    /// built with [`SimBuilder::attrib`](crate::engine::SimBuilder::attrib)):
+    /// the cluster driver's decomposition — parallel `(gpu, sm)` fan-out
+    /// terms plus the sequential communication-phase term — annotated
+    /// with this session's snapshot-save accounting.
+    pub fn attribution(&self) -> Option<AttributionLedger> {
+        let acc = self.sim.attrib.as_deref()?;
+        let threads = match &self.sim.pool {
+            Some(p) => p.busy_wait_ns().len(),
+            None => 1,
+        };
+        let mut ledger = acc.ledger(threads, self.wall_s);
+        ledger.snapshot_s = self.snap_ns as f64 / 1e9;
+        ledger.snapshot_saves = self.snap_saves;
+        ledger.snapshot_bytes = self.snap_bytes;
+        Some(ledger)
     }
 
     /// Snapshot the telemetry metrics registry (`None` unless built with
@@ -1211,6 +1304,16 @@ impl ClusterSession {
         reg.counter("cluster.comm_cycles", self.sim.comm_cycles);
         reg.counter("cluster.ff_jumps", self.sim.ff_jumps);
         reg.counter("cluster.ff_cycles_skipped", self.sim.ff_cycles_skipped);
+        if let Some(a) = self.sim.attrib.as_deref() {
+            reg.counter("attrib.parallel_section_ns", a.parallel_section_ns());
+            reg.counter("attrib.parallel_busy_ns", a.busy_total_ns());
+            reg.counter("attrib.max_busy_ns", a.max_busy_ns());
+            reg.counter("attrib.barrier_wait_ns", a.wait_total_ns());
+            reg.counter("attrib.comm_ns", a.comm_ns());
+            reg.counter("attrib.cycles", a.cycles());
+        }
+        reg.counter("snapshot.saves", self.snap_saves);
+        reg.counter("snapshot.bytes_written", self.snap_bytes);
         let fs = self.sim.fabric.stats();
         reg.counter("fabric.packets_delivered", fs.packets_delivered);
         reg.counter("fabric.bytes_delivered", fs.bytes_delivered);

@@ -562,11 +562,27 @@ pub struct TelemetryConfig {
     /// Sample the wall-clock lane (sequential vs parallel phase spans,
     /// per-worker busy/wait slices) every N cycles. Must be ≥ 1.
     pub trace_sample_every: u64,
+    /// Accumulate the wall-time attribution ledger
+    /// ([`crate::telemetry::AttributionLedger`]): per-cycle
+    /// parallel-section timing plus pool busy/wait deltas, folded into
+    /// the sequential / parallel / barrier / imbalance decomposition the
+    /// scaling report is built from.
+    pub attrib: bool,
+    /// Window length (in simulated cycles) for the deterministic counter
+    /// time-series sampler ([`crate::telemetry::SeriesSampler`]).
+    /// 0 = sampler off.
+    pub series_window: u64,
 }
 
 impl Default for TelemetryConfig {
     fn default() -> Self {
-        TelemetryConfig { metrics: false, trace: false, trace_sample_every: 64 }
+        TelemetryConfig {
+            metrics: false,
+            trace: false,
+            trace_sample_every: 64,
+            attrib: false,
+            series_window: 0,
+        }
     }
 }
 

@@ -92,7 +92,9 @@ use crate::icnt::{Icnt, Packet};
 use crate::mem::{subpartition_of, MemPartition};
 use crate::profiler::{Phase, PhaseProfiler};
 use crate::stats::{AddrSet, GpuStats, KernelStats, MemStats, SharedLockedStats, SmStats};
+use crate::telemetry::attrib::AttribAcc;
 use crate::telemetry::metrics::{Histogram, MetricsRegistry};
+use crate::telemetry::series::SeriesSampler;
 use crate::telemetry::trace::TraceEvent;
 use crate::trace::{functional, GemmSemantics, KernelDesc, WorkloadSpec};
 
@@ -223,6 +225,10 @@ pub struct GpuSim {
     metrics: Option<Box<EngineMetrics>>,
     /// Chrome-trace event buffer (`None` ⇒ tracing off).
     trace: Option<Box<TraceBuf>>,
+    /// Wall-time attribution accumulator (`None` ⇒ attribution off).
+    attrib: Option<Box<AttribAcc>>,
+    /// Deterministic counter time-series sampler (`None` ⇒ off).
+    series: Option<Box<SeriesSampler>>,
     /// Debug-only phase tracker: sequential-only mutators assert through
     /// this that they never run inside the parallel SM fan-out. Inert in
     /// release builds (see [`phase::PhaseGuard`]).
@@ -272,7 +278,8 @@ impl GpuSim {
         let mut icnt = Icnt::new(gpu.icnt.clone(), gpu.icnt_nodes());
         icnt.set_phase_guard(guard.clone());
         let pool = if sim.threads > 1 {
-            Some(ThreadPool::new_instrumented(sim.threads, sim.telemetry.trace))
+            let instrument = sim.telemetry.trace || sim.telemetry.attrib;
+            Some(ThreadPool::new_instrumented(sim.threads, instrument))
         } else {
             None
         };
@@ -295,6 +302,9 @@ impl GpuSim {
                 events: Vec::new(),
             })
         });
+        let attrib = sim.telemetry.attrib.then(|| Box::new(AttribAcc::new()));
+        let series = (sim.telemetry.series_window > 0)
+            .then(|| Box::new(SeriesSampler::new(sim.telemetry.series_window)));
         Ok(GpuSim {
             gpu,
             sim,
@@ -320,6 +330,8 @@ impl GpuSim {
             functional_results: Vec::new(),
             metrics,
             trace,
+            attrib,
+            series,
             guard,
         })
     }
@@ -366,6 +378,8 @@ impl GpuSim {
         };
         if sampled {
             self.cycle_traced();
+        } else if self.attrib.is_some() {
+            self.cycle_attributed();
         } else {
             self.cycle_sequential_pre();
             self.cycle_sm_parallel();
@@ -373,6 +387,9 @@ impl GpuSim {
         }
         if let Some(m) = &mut self.metrics {
             m.icnt_in_flight.record(self.icnt.in_flight() as u64);
+        }
+        if self.series.is_some() {
+            self.series_on_cycle();
         }
         if self.ff_runtime {
             // a drained kernel yields no target (everything idle ⇒ no
@@ -388,7 +405,90 @@ impl GpuSim {
                 if let Some(tb) = &mut self.trace {
                     tb.events.push(TraceEvent::sim_span("fast_forward", "ff", 0, from, skipped));
                 }
+                if let Some(a) = &mut self.attrib {
+                    a.note_ff(skipped);
+                }
+                let ff_close = match &mut self.series {
+                    Some(sr) => sr.on_ff_skip(skipped),
+                    None => false,
+                };
+                if ff_close {
+                    self.series_close_windows();
+                }
             }
+        }
+    }
+
+    /// Feed the time-series sampler one executed cycle's signals, all
+    /// read at this sequential point (bit-identical across thread
+    /// counts), and close any completed window against the cumulative
+    /// memory counters. Pure observer — nothing here touches model
+    /// state.
+    fn series_on_cycle(&mut self) {
+        let active_sms = self.sms.iter().filter(|s| !s.is_idle()).count() as u64;
+        let worklist = self.active.len() as u64;
+        let in_flight = self.icnt.in_flight() as u64;
+        let close = match &mut self.series {
+            Some(sr) => sr.on_cycle(active_sms, worklist, in_flight),
+            None => false,
+        };
+        if close {
+            self.series_close_windows();
+        }
+    }
+
+    fn series_close_windows(&mut self) {
+        let (l2, dram) = self.mem_traffic_totals();
+        if let Some(sr) = &mut self.series {
+            sr.close_windows(l2, dram, 0);
+        }
+    }
+
+    /// Cumulative L2 accesses and DRAM reads + writes, aggregated over
+    /// every partition (the series sampler's delta base).
+    fn mem_traffic_totals(&self) -> (u64, u64) {
+        let mut agg = MemStats::default();
+        for p in &self.partitions {
+            for s in p.collect_stats() {
+                agg.merge(&s);
+            }
+        }
+        (agg.l2_accesses, agg.dram_reads + agg.dram_writes)
+    }
+
+    /// [`Self::cycle`]'s three parts with just enough wall-clock
+    /// measurement around the parallel fan-out to feed the attribution
+    /// ledger: two clock reads plus the pool's cumulative busy/wait
+    /// counters across the section. Strictly read-only with respect to
+    /// model state (the attributed-vs-bare matrix in `tests/attrib.rs`
+    /// pins bit-identity).
+    // detlint: allow(nondet-source, fn): wall-clock attribution — clock
+    // reads feed only the attribution accumulator, never simulated state
+    fn cycle_attributed(&mut self) {
+        self.cycle_sequential_pre();
+        let bw_before = self.pool.as_ref().map(|p| p.busy_wait_ns());
+        let t_par = Instant::now();
+        self.cycle_sm_parallel();
+        let t_end = Instant::now();
+        let bw_after = self.pool.as_ref().map(|p| p.busy_wait_ns());
+        self.record_attrib(t_par, t_end, bw_before.as_deref(), bw_after.as_deref());
+        self.cycle_finish();
+    }
+
+    /// Fold one measured parallel section into the attribution
+    /// accumulator (shared by the attributed and traced cycle paths).
+    fn record_attrib(
+        &mut self,
+        t_par: Instant,
+        t_end: Instant,
+        before: Option<&[(u64, u64)]>,
+        after: Option<&[(u64, u64)]>,
+    ) {
+        let Some(acc) = &mut self.attrib else { return };
+        let section_ns = t_end.duration_since(t_par).as_nanos() as u64;
+        match (before, after) {
+            (Some(b), Some(a)) => acc.record_pool(section_ns, b, a),
+            _ => acc.record_serial(section_ns),
         }
     }
 
@@ -416,6 +516,9 @@ impl GpuSim {
         let bw_after = self.pool.as_ref().map(|p| p.busy_wait_ns());
         self.cycle_finish();
         let t_end = Instant::now();
+        if self.attrib.is_some() {
+            self.record_attrib(t_par, t_tail, bw_before.as_deref(), bw_after.as_deref());
+        }
         let Some(tb) = &mut self.trace else { return };
         let span = |name, a: Instant, b: Instant| {
             TraceEvent::wall_span(name, "phase", 0, us_since(t0, a), us_since(a, b))
@@ -1070,6 +1173,17 @@ impl GpuSim {
             reg.gauge("costmodel.cycles", cm.cycles());
             reg.gauge("costmodel.total_work", cm.total_work());
         }
+        if let Some(a) = &self.attrib {
+            reg.counter("attrib.parallel_section_ns", a.parallel_section_ns());
+            reg.counter("attrib.parallel_busy_ns", a.busy_total_ns());
+            reg.counter("attrib.max_busy_ns", a.max_busy_ns());
+            reg.counter("attrib.barrier_wait_ns", a.wait_total_ns());
+            reg.counter("attrib.cycles", a.cycles());
+        }
+        if let Some(sr) = &self.series {
+            reg.gauge("series.windows", sr.len() as u64);
+            reg.counter("series.dropped_windows", sr.dropped());
+        }
     }
 
     /// Snapshot the metrics registry, or `None` when
@@ -1091,6 +1205,41 @@ impl GpuSim {
             Some(tb) => std::mem::take(&mut tb.events),
             None => Vec::new(),
         }
+    }
+
+    /// Wall-clock origin of the trace's `PID_WALL` lane (`None` when
+    /// tracing is off). Sessions use it to timestamp their own wall
+    /// spans (snapshot saves) on the same time base as engine spans.
+    pub(crate) fn trace_epoch(&self) -> Option<Instant> {
+        self.trace.as_ref().map(|tb| tb.t0)
+    }
+
+    /// The raw attribution accumulator, or `None` when
+    /// [`crate::config::TelemetryConfig::attrib`] is off. Sessions turn
+    /// this into an [`crate::telemetry::AttributionLedger`] once the
+    /// run's wall time is known.
+    pub fn attrib_acc(&self) -> Option<&AttribAcc> {
+        self.attrib.as_deref()
+    }
+
+    /// The counter time-series sampler (windows closed so far), or
+    /// `None` when [`crate::config::TelemetryConfig::series_window`]
+    /// is 0.
+    pub fn series(&self) -> Option<&SeriesSampler> {
+        self.series.as_deref()
+    }
+
+    /// Flush the sampler's trailing partial window against the current
+    /// cumulative memory counters and return it. Call once at end of
+    /// run, before exporting.
+    pub fn finish_series(&mut self) -> Option<&SeriesSampler> {
+        if self.series.is_some() {
+            let (l2, dram) = self.mem_traffic_totals();
+            if let Some(sr) = &mut self.series {
+                sr.finish(l2, dram, 0);
+            }
+        }
+        self.series.as_deref()
     }
 
     /// Number of worker-thread lanes the wall-clock trace can emit

@@ -45,6 +45,7 @@ use crate::config::{
     presets, ClusterConfig, FunctionalMode, GpuConfig, Schedule, SimConfig, StatsStrategy,
 };
 use crate::stats::{GpuStats, KernelStats};
+use crate::telemetry::attrib::AttributionLedger;
 use crate::telemetry::metrics::MetricsRegistry;
 use crate::telemetry::trace::{TraceEvent, TraceWriter, PID_SIM, PID_WALL};
 use crate::trace::workloads::{self, Scale};
@@ -52,7 +53,7 @@ use crate::trace::{ClusterWorkloadSpec, KernelDesc, WorkloadSpec};
 use crate::util::{mix2, mix64};
 
 use super::snapshot::{
-    hash_debug, SnapFlavor, SnapReader, SnapWriter, SnapshotError,
+    hash_debug, write_atomic, SnapFlavor, SnapReader, SnapWriter, SnapshotError,
 };
 use super::GpuSim;
 
@@ -686,6 +687,26 @@ impl SimBuilder {
         self
     }
 
+    /// Accumulate the wall-time attribution ledger
+    /// ([`crate::config::TelemetryConfig::attrib`]): per-cycle
+    /// parallel-section timing + pool busy/wait deltas, available after
+    /// the run via [`SimSession::attribution`]. Never perturbs results
+    /// (`tests/attrib.rs`).
+    pub fn attrib(mut self, on: bool) -> Self {
+        self.sim.telemetry.attrib = on;
+        self
+    }
+
+    /// Counter time-series window in simulated cycles
+    /// ([`crate::config::TelemetryConfig::series_window`]; 0 = off).
+    /// Export after the run via [`SimSession::series_jsonl`] /
+    /// [`SimSession::series_csv`] — byte-deterministic across thread
+    /// counts.
+    pub fn series_window(mut self, window: u64) -> Self {
+        self.sim.telemetry.series_window = window;
+        self
+    }
+
     /// Validate everything and construct a multi-GPU session. Workload
     /// resolution: an explicit [`Self::cluster_workload`] wins; a
     /// single-GPU workload set by value is replicated across GPUs (data
@@ -761,7 +782,23 @@ impl SimBuilder {
         }
         let (kernel_idx, in_kernel, completed, completed_warp_insts) =
             match &self.resume_from {
-                Some(path) => restore_session_state(&mut sim, &workload, path)?,
+                Some(path) => {
+                    // detlint: allow(nondet-source): wall-clock restore
+                    // span only — feeds the trace, never simulated state
+                    let t0 = Instant::now();
+                    let restored = restore_session_state(&mut sim, &workload, path)?;
+                    if let Some(w) = &mut trace {
+                        let dur_us = t0.elapsed().as_micros() as u64;
+                        w.event(&TraceEvent::wall_span(
+                            "snapshot_restore",
+                            "snapshot",
+                            0,
+                            0,
+                            dur_us,
+                        ));
+                    }
+                    restored
+                }
                 None => (0, false, Vec::new(), 0),
             };
         Ok(SimSession {
@@ -777,6 +814,9 @@ impl SimBuilder {
             cycle_observers,
             completed_warp_insts,
             trace,
+            snap_saves: 0,
+            snap_bytes: 0,
+            snap_ns: 0,
         })
     }
 }
@@ -915,6 +955,11 @@ pub struct SimSession {
     /// Chrome-trace output (engine events drained after every step;
     /// JSON finished at [`Self::finalize`]).
     trace: Option<TraceWriter>,
+    /// Snapshot-save accounting (attribution ledger's snapshot-I/O
+    /// term): saves taken, serialized bytes, wall nanoseconds.
+    snap_saves: u64,
+    snap_bytes: u64,
+    snap_ns: u64,
 }
 
 impl SimSession {
@@ -1191,10 +1236,13 @@ impl SimSession {
     /// Errors with [`SimError::SessionFinished`] once the session has
     /// finished (there is nothing left to resume), or a
     /// [`SimError::Snapshot`] on I/O failure.
-    pub fn save_snapshot(&self, path: impl AsRef<Path>) -> Result<(), SimError> {
+    pub fn save_snapshot(&mut self, path: impl AsRef<Path>) -> Result<(), SimError> {
         if self.finished.is_some() {
             return Err(SimError::SessionFinished);
         }
+        // detlint: allow(nondet-source): wall-clock snapshot-overhead
+        // accounting only — feeds the ledger/trace, never simulated state
+        let t0 = Instant::now();
         let mut w = SnapWriter::new(SnapFlavor::SingleGpu);
         w.section("meta");
         w.u64(gpu_config_hash(&self.sim.gpu));
@@ -1211,15 +1259,63 @@ impl SimSession {
         }
         w.u64(self.completed_warp_insts);
         self.sim.snap_state(&mut w);
-        w.write_to(path.as_ref())?;
+        let bytes = w.finish();
+        write_atomic(path.as_ref(), &bytes).map_err(SimError::from)?;
+        let dur = t0.elapsed();
+        self.snap_saves += 1;
+        self.snap_bytes += bytes.len() as u64;
+        self.snap_ns += dur.as_nanos() as u64;
+        if let Some(w) = &mut self.trace {
+            let ts = self
+                .sim
+                .trace_epoch()
+                .map(|e| t0.duration_since(e).as_micros() as u64)
+                .unwrap_or(0);
+            w.event(
+                &TraceEvent::wall_span("snapshot_save", "snapshot", 0, ts, dur.as_micros() as u64)
+                    .arg("bytes", bytes.len() as u64)
+                    .arg("cycle", self.sim.gpu_cycle()),
+            );
+        }
         Ok(())
+    }
+
+    /// The run's wall-time attribution ledger (`None` unless the session
+    /// was built with [`SimBuilder::attrib`]). Meaningful after a
+    /// completed run, when [`AttributionLedger::wall_s`] covers the
+    /// whole workload; the components and their reconciliation are
+    /// documented on [`crate::telemetry::attrib`].
+    pub fn attribution(&self) -> Option<AttributionLedger> {
+        let acc = self.sim.attrib_acc()?;
+        let mut l = acc.ledger(self.sim.sim.threads, self.wall_s);
+        l.snapshot_s = self.snap_ns as f64 / 1e9;
+        l.snapshot_saves = self.snap_saves;
+        l.snapshot_bytes = self.snap_bytes;
+        Some(l)
+    }
+
+    /// Flush and export the counter time-series as JSONL (`None` unless
+    /// built with [`SimBuilder::series_window`]). Byte-deterministic
+    /// across thread counts and schedules.
+    pub fn series_jsonl(&mut self) -> Option<String> {
+        self.sim.finish_series().map(|s| s.to_jsonl())
+    }
+
+    /// Flush and export the counter time-series as CSV (`None` unless
+    /// built with [`SimBuilder::series_window`]).
+    pub fn series_csv(&mut self) -> Option<String> {
+        self.sim.finish_series().map(|s| s.to_csv())
     }
 
     /// Snapshot the telemetry metrics registry (`None` unless the
     /// session was built with [`SimBuilder::metrics`]). Read-only and
-    /// callable at any pause point.
+    /// callable at any pause point. Includes the session's crash-safety
+    /// counters (`snapshot.saves` / `snapshot.bytes_written`).
     pub fn metrics_snapshot(&self) -> Option<MetricsRegistry> {
-        self.sim.metrics_snapshot()
+        let mut reg = self.sim.metrics_snapshot()?;
+        reg.counter("snapshot.saves", self.snap_saves);
+        reg.counter("snapshot.bytes_written", self.snap_bytes);
+        Some(reg)
     }
 
     /// Trace events written so far (0 when tracing is off).

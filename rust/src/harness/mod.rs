@@ -22,6 +22,7 @@ use crate::config::{presets::Testbed, GpuConfig, Schedule, StatsStrategy};
 use crate::engine::costmodel::CostModel;
 use crate::engine::{SimBuilder, SimError};
 use crate::stats::GpuStats;
+use crate::telemetry::attrib::{amdahl_bound, AttributionLedger};
 use crate::trace::workloads::{self, Scale};
 use crate::util::{geomean, pearson};
 
@@ -729,6 +730,238 @@ pub fn bench_diff(old: &str, new: &str, threshold_pct: f64) -> Result<String, St
         report.push_str("\nno regressions\n");
         Ok(report)
     }
+}
+
+// ---------------------------------------------------------------------------
+// Speedup attribution profiler — thread-ladder scaling (BENCH_scaling.json)
+// ---------------------------------------------------------------------------
+
+/// One rung of the thread-ladder scaling profile: the measured speedup
+/// over the ladder's first rung, the Amdahl bound implied by the
+/// baseline rung's *measured* sequential fraction, and the full
+/// wall-time [`AttributionLedger`] naming the dominant bottleneck.
+/// Every rung carries the fingerprint cross-check against the baseline.
+#[derive(Debug, Clone)]
+pub struct ScalingRow {
+    pub workload: String,
+    pub gpu: String,
+    pub scale: Scale,
+    pub schedule: Schedule,
+    /// GPUs in the cluster profile (0 = single-GPU engine).
+    pub cluster_gpus: usize,
+    /// Simulated cycles (single-GPU: GPU cycles; cluster: lock-step
+    /// cluster cycles) — identical on every rung by construction.
+    pub cycles: u64,
+    pub fingerprint: u64,
+    /// Fingerprint matches the baseline rung's — the golden gate.
+    pub identical: bool,
+    pub ledger: AttributionLedger,
+    /// Baseline wall / this rung's wall.
+    pub speedup: f64,
+    /// Amdahl ceiling at this rung's thread count, parameterized by the
+    /// sequential fraction measured at the baseline rung.
+    pub amdahl: f64,
+    /// Per-GPU fabric bytes `(sent, recv)` — cluster profiles only.
+    pub fabric_bytes: Vec<(u64, u64)>,
+}
+
+impl ScalingRow {
+    /// Measured speedup as a fraction of the Amdahl ceiling.
+    pub fn amdahl_efficiency_pct(&self) -> f64 {
+        if self.amdahl <= 0.0 {
+            0.0
+        } else {
+            self.speedup / self.amdahl * 100.0
+        }
+    }
+}
+
+/// One attributed run at `threads`: stats + ledger (+ fabric bytes when
+/// `cluster_gpus > 0`).
+fn profile_run(
+    workload: &str,
+    scale: Scale,
+    gpu: &GpuConfig,
+    threads: usize,
+    schedule: Schedule,
+    cluster_gpus: usize,
+) -> Result<(u64, u64, f64, AttributionLedger, Vec<(u64, u64)>), SimError> {
+    let builder = SimBuilder::new()
+        .gpu(gpu.clone())
+        .workload_named(workload, scale)
+        .threads(threads)
+        .schedule(schedule)
+        .attrib(true);
+    if cluster_gpus > 0 {
+        use crate::config::ClusterConfig;
+        let mut session = builder.cluster(ClusterConfig::p2p(cluster_gpus)).build_cluster()?;
+        session.run_to_completion()?;
+        let ledger = session.attribution().expect("attrib enabled");
+        let stats = session.into_stats()?;
+        let fabric: Vec<(u64, u64)> =
+            stats.sent_bytes.iter().zip(&stats.recv_bytes).map(|(&s, &r)| (s, r)).collect();
+        Ok((stats.cluster_cycles, stats.fingerprint(), stats.sim_wallclock_s, ledger, fabric))
+    } else {
+        let mut session = builder.build()?;
+        session.run_to_completion()?;
+        let ledger = session.attribution().expect("attrib enabled");
+        let stats = session.into_stats()?;
+        Ok((stats.total_cycles(), stats.fingerprint(), stats.sim_wallclock_s, ledger, Vec::new()))
+    }
+}
+
+/// Run the thread ladder for one workload (`parsim profile`): one
+/// attributed run per rung, serially (no co-running jobs, so the
+/// wall-clocks are honest). The first rung is the baseline: speedups are
+/// measured against its wall time, the Amdahl bound is parameterized by
+/// its measured sequential fraction, and every later rung's fingerprint
+/// is checked against it. `cluster_gpus > 0` profiles the multi-GPU
+/// engine (comm-phase and per-GPU fabric attribution included).
+pub fn profile_ladder(
+    workload: &str,
+    scale: Scale,
+    gpu: &GpuConfig,
+    threads_list: &[usize],
+    schedule: Schedule,
+    cluster_gpus: usize,
+    progress: bool,
+) -> Result<Vec<ScalingRow>, SimError> {
+    assert!(!threads_list.is_empty(), "profile ladder needs at least one rung");
+    let mut rows: Vec<ScalingRow> = Vec::with_capacity(threads_list.len());
+    let mut base: Option<(u64, f64, f64)> = None; // (fingerprint, wall, f_seq)
+    for &threads in threads_list {
+        let (cycles, fingerprint, wall_s, ledger, fabric_bytes) =
+            profile_run(workload, scale, gpu, threads, schedule, cluster_gpus)?;
+        let (base_fp, base_wall, f_seq) =
+            *base.get_or_insert((fingerprint, wall_s, ledger.sequential_fraction()));
+        let identical = fingerprint == base_fp;
+        let speedup = if wall_s > 0.0 { base_wall / wall_s } else { 0.0 };
+        let row = ScalingRow {
+            workload: workload.to_string(),
+            gpu: gpu.name.clone(),
+            scale,
+            schedule,
+            cluster_gpus,
+            cycles,
+            fingerprint,
+            identical,
+            speedup,
+            amdahl: amdahl_bound(f_seq, threads),
+            ledger,
+            fabric_bytes,
+        };
+        if progress {
+            eprintln!(
+                "[profile] {workload} @{threads}t: {:.3}s wall, {:.2}x of {:.2}x amdahl, \
+                 bottleneck {} ({})",
+                row.ledger.wall_s,
+                row.speedup,
+                row.amdahl,
+                row.ledger.dominant_bottleneck(),
+                if identical { "fingerprints match" } else { "FINGERPRINT MISMATCH" }
+            );
+        }
+        rows.push(row);
+    }
+    Ok(rows)
+}
+
+/// `BENCH_scaling.json`: one flat JSON object per ladder rung (the
+/// repo's JSONL idiom, like `BENCH_hotpath.json`).
+pub fn scaling_json(rows: &[ScalingRow]) -> String {
+    use crate::stats::export::{jsonl_f64, jsonl_str, jsonl_u64};
+    let mut out = String::new();
+    for r in rows {
+        out.push('{');
+        jsonl_str(&mut out, "bench", "scaling", true);
+        jsonl_str(&mut out, "workload", &r.workload, false);
+        jsonl_str(&mut out, "gpu", &r.gpu, false);
+        jsonl_str(&mut out, "scale", r.scale.name(), false);
+        jsonl_str(&mut out, "schedule", r.schedule.name(), false);
+        jsonl_u64(&mut out, "cluster_gpus", r.cluster_gpus as u64, false);
+        jsonl_u64(&mut out, "cycles", r.cycles, false);
+        r.ledger.jsonl_fields(&mut out, false);
+        jsonl_f64(&mut out, "speedup", r.speedup, false);
+        jsonl_f64(&mut out, "amdahl_bound", r.amdahl, false);
+        jsonl_f64(&mut out, "amdahl_efficiency_pct", r.amdahl_efficiency_pct(), false);
+        jsonl_str(&mut out, "fingerprint", &format!("{:016x}", r.fingerprint), false);
+        jsonl_str(&mut out, "identical", if r.identical { "yes" } else { "NO" }, false);
+        out.push_str("}\n");
+    }
+    out
+}
+
+/// Human-readable scaling report (`parsim profile`): the ladder table,
+/// one full attribution breakdown per rung, and — for cluster profiles —
+/// the per-GPU fabric traffic of the comm phases.
+pub fn scaling_report(rows: &[ScalingRow]) -> String {
+    let Some(first) = rows.first() else {
+        return String::from("no profile rows\n");
+    };
+    let f_seq = first.ledger.sequential_fraction();
+    let mut s = format!(
+        "Speedup attribution — {} (scale={}) on {}, {} schedule{}\n\
+         sequential fraction f = {:.3} measured at the {}-thread baseline;\n\
+         Amdahl bound per rung uses that f; every rung is fingerprint-checked\n\n\
+         {:>3} {:>9} {:>8} {:>8} {:>6} {:>6} {:>7} {:>8} {:>6}  {:<16} {:>5}\n",
+        first.workload,
+        first.scale.name(),
+        first.gpu,
+        first.schedule.name(),
+        if first.cluster_gpus > 0 {
+            format!(", {} GPUs", first.cluster_gpus)
+        } else {
+            String::new()
+        },
+        f_seq,
+        first.ledger.threads,
+        "t",
+        "wall s",
+        "speedup",
+        "amdahl",
+        "eff%",
+        "seq%",
+        "imbal%",
+        "barrier%",
+        "comm%",
+        "bottleneck",
+        "ident"
+    );
+    for r in rows {
+        let l = &r.ledger;
+        let pct = |x: f64| if l.wall_s > 0.0 { x / l.wall_s * 100.0 } else { 0.0 };
+        s.push_str(&format!(
+            "{:>3} {:>9.3} {:>7.2}x {:>7.2}x {:>5.0}% {:>5.1}% {:>6.1}% {:>7.1}% {:>5.1}%  \
+             {:<16} {:>5}\n",
+            l.threads,
+            l.wall_s,
+            r.speedup,
+            r.amdahl,
+            r.amdahl_efficiency_pct(),
+            pct(l.sequential_s()),
+            pct(l.imbalance_s),
+            pct(l.barrier_wait_s),
+            pct(l.comm_s),
+            l.dominant_bottleneck(),
+            if r.identical { "yes" } else { "NO" }
+        ));
+    }
+    s.push('\n');
+    for r in rows {
+        s.push_str(&r.ledger.report());
+        if !r.fabric_bytes.is_empty() {
+            s.push_str("  fabric traffic per GPU (comm phases):\n");
+            for (g, &(sent, recv)) in r.fabric_bytes.iter().enumerate() {
+                s.push_str(&format!("    gpu{g}: sent {sent} B, recv {recv} B\n"));
+            }
+        }
+        s.push('\n');
+    }
+    if rows.iter().any(|r| !r.identical) {
+        s.push_str("FINGERPRINT MISMATCH — a rung changed simulated results; do not trust\n\
+                    the speedups above until determinism is restored.\n");
+    }
+    s
 }
 
 // ---------------------------------------------------------------------------

@@ -190,9 +190,10 @@
 //!
 //! ## Observability
 //!
-//! The [`telemetry`] subsystem adds three strictly read-only surfaces,
+//! The [`telemetry`] subsystem adds five strictly read-only surfaces,
 //! all guaranteed not to perturb results (a fully-instrumented run is
-//! bit-identical to a bare one — `tests/telemetry.rs` pins it):
+//! bit-identical to a bare one — `tests/telemetry.rs` and
+//! `tests/attrib.rs` pin it):
 //!
 //! * **Metrics** — `.metrics(true)` on the builder enables a typed
 //!   registry (fast-forward jumps, worklist occupancy and icnt depth
@@ -203,12 +204,31 @@
 //!   streams a perfetto-loadable timeline with a *simulated-time* lane
 //!   (kernels, comm phases, fast-forward jumps; 1 cycle = 1 µs) and a
 //!   sampled *wall-clock* lane (sequential vs parallel-fan-out spans,
-//!   per-worker busy / barrier-wait slices). `parsim run --trace-out
-//!   trace.json`, then load the file at `ui.perfetto.dev`.
+//!   per-worker busy / barrier-wait slices, snapshot saves/restores).
+//!   `parsim run --trace-out trace.json`, then load the file at
+//!   `ui.perfetto.dev`.
 //! * **Divergence probe** — [`telemetry::diverge_probe`] / `parsim
 //!   diverge` runs two configurations in lock-step and bisects to the
 //!   first divergent cycle and the component (SM / icnt / mem / fabric)
 //!   whose [`engine::SessionFingerprint`] sub-fingerprint differs.
+//! * **Speedup attribution** — `.attrib(true)` times every cycle's
+//!   parallel section against the pool's per-worker busy/wait clocks
+//!   and decomposes wall time into sequential phase, parallel busy,
+//!   load imbalance (max−mean worker busy), barrier wait, cluster comm,
+//!   and snapshot I/O — components that reconcile to measured wall
+//!   within 1% ([`telemetry::attrib::AttributionLedger`]). The
+//!   [`harness::profile_ladder`] driver behind `parsim profile
+//!   --threads 1,2,4,8` runs the ladder, fingerprint-checks every rung
+//!   against the 1-thread baseline, and compares measured speedup to
+//!   the Amdahl bound of the *measured* sequential fraction
+//!   ([`telemetry::attrib::amdahl_bound`]), writing
+//!   `BENCH_scaling.json`.
+//! * **Counter time-series** — `.series_window(n)` samples per-SM
+//!   activity, worklist occupancy, icnt depth, L2/DRAM traffic, and
+//!   fabric bytes into `n`-cycle windows over *simulated* time
+//!   ([`telemetry::series::SeriesSampler`]); the JSONL/CSV export is
+//!   byte-identical at every thread count and schedule (`parsim run
+//!   --series-window 1000 --series-out series.csv`).
 //!
 //! ```no_run
 //! use parsim::telemetry::TraceWriter;
@@ -219,11 +239,17 @@
 //!     .workload_named("myocyte", Scale::Ci)
 //!     .threads(8)
 //!     .metrics(true)
+//!     .attrib(true)                          // wall-time attribution ledger
+//!     .series_window(500)                    // counter time-series, 500-cycle windows
 //!     .trace_writer(TraceWriter::create(std::path::Path::new("trace.json"))?)
 //!     .build()?;
 //! session.run_to_completion()?;
 //! let reg = session.metrics_snapshot().expect("metrics enabled");
 //! println!("{}", parsim::stats::export::metrics_jsonl(session.gpu_cycle(), &reg));
+//! let ledger = session.attribution().expect("attrib enabled");
+//! println!("{}", ledger.report());           // per-component decomposition + bottleneck
+//! let series = session.series_jsonl().expect("series enabled");
+//! std::fs::write("series.jsonl", series)?;   // byte-identical at any thread count
 //! # Ok(()) }
 //! ```
 

@@ -38,6 +38,8 @@ const VALUE_OPTS: &[&str] = &[
     "json", "diff", "diff-threshold",
     // telemetry (run/cluster)
     "metrics-out", "trace-out", "trace-sample-every",
+    // deterministic counter time-series (run; simulated-cycle windows)
+    "series-window", "series-out",
     // crash safety: run/cluster snapshots + campaign resumption
     "snapshot-out", "snapshot-every", "resume-from", "retries", "checkpoint-every",
     // diverge probe: per-side overrides + self-test perturbation
@@ -53,6 +55,8 @@ const FLAG_OPTS: &[&str] = &[
     // disarm the debug-only PhaseGuard race detector (release builds
     // never check regardless; results are identical either way)
     "no-phase-guard",
+    // `parsim profile --cluster`: ladder the multi-GPU engine instead
+    "cluster",
 ];
 
 fn main() -> ExitCode {
@@ -81,6 +85,7 @@ fn main() -> ExitCode {
         "validate" => cmd_validate(&args),
         "campaign" => cmd_campaign(&args),
         "bench" => cmd_bench(&args),
+        "profile" => cmd_profile(&args),
         _ => {
             eprintln!("error: unknown command {cmd:?} (try --help)");
             return ExitCode::from(2);
@@ -116,7 +121,14 @@ fn print_help() {
          \x20 bench         hot-path throughput: optimized vs reference engine,\n\
          \x20               fingerprint-checked; writes BENCH_hotpath.json (--json PATH);\n\
          \x20               --diff BASELINE [CURRENT] gates against a committed baseline\n\
-         \x20               (fails on >--diff-threshold % regressions, default 5%)\n\n\
+         \x20               (fails on >--diff-threshold % regressions, default 5%)\n\
+         \x20 profile       speedup attribution: run a thread ladder (--threads 1,2,4,8),\n\
+         \x20               decompose each rung's wall time (sequential / parallel busy /\n\
+         \x20               imbalance / barrier / comm / snapshot I/O), compare measured\n\
+         \x20               speedup to the Amdahl bound of the measured sequential\n\
+         \x20               fraction, fingerprint-check every rung; writes\n\
+         \x20               BENCH_scaling.json (--json PATH); --cluster [--gpus N]\n\
+         \x20               profiles the multi-GPU engine (comm/fabric attribution)\n\n\
          common options: --workload NAME --scale ci|small|paper --threads N\n\
          \x20               --schedule static|static1|dynamic --stats per-sm|shared-locked|seq-point\n\
          \x20               --gpu rtx3080ti|tiny|rtx3090|a100-like --profile --functional\n\n\
@@ -128,7 +140,11 @@ fn print_help() {
          \x20               --trace-out FILE    Chrome/perfetto trace: simulated-time lane\n\
          \x20               (kernels, comm, fast-forward) + sampled wall-clock lane\n\
          \x20               (phases, per-worker busy/barrier-wait)\n\
-         \x20               --trace-sample-every N  wall-lane sampling cadence (default 64)\n\n\
+         \x20               --trace-sample-every N  wall-lane sampling cadence (default 64)\n\
+         \x20               --series-window N --series-out FILE  deterministic counter\n\
+         \x20               time-series over simulated cycles (run only): active SMs,\n\
+         \x20               worklist occupancy, icnt depth, L2/DRAM traffic per window,\n\
+         \x20               byte-identical at every thread count (.csv or .jsonl)\n\n\
          cluster options: --workload tp_gemm|halo_stencil|graph_part|<any Table-2 name>\n\
          \x20               --gpus N (GPU count) --topology p2p|switch\n\
          \x20               --link-latency CYC --packet-bytes B --threads N (shared (gpu,sm) pool)\n\n\
@@ -147,7 +163,9 @@ fn print_help() {
          \x20               (finished jobs recovered, in-flight jobs restart from checkpoints),\n\
          \x20               --checkpoint-every N (per-job snapshot cadence, cycles),\n\
          \x20               --retries N (retry budget; exhausted jobs are quarantined and\n\
-         \x20               reported, the sweep continues)"
+         \x20               reported, the sweep continues)\n\
+         \x20               --trace-out FILE (wall-clock Chrome trace of the campaign:\n\
+         \x20               one span per job + one per durable journal flush)"
     );
 }
 
@@ -294,7 +312,15 @@ fn cmd_run(args: &Args) -> Result<(), String> {
     if profile {
         builder = builder.observer(PhaseProfileStreamer::new());
     }
-    let (builder, metrics_out) = apply_telemetry_opts(args, builder)?;
+    let (mut builder, metrics_out) = apply_telemetry_opts(args, builder)?;
+    let series_window = args.get_u64("series-window", 0).map_err(|e| e.to_string())?;
+    let series_out = args.get("series-out").map(std::path::PathBuf::from);
+    if series_out.is_some() && series_window == 0 {
+        return Err("--series-out requires --series-window N".into());
+    }
+    if series_window > 0 {
+        builder = builder.series_window(series_window);
+    }
     let mut session = builder.build().map_err(|e| e.to_string())?;
     {
         let wl = session.workload();
@@ -388,6 +414,17 @@ fn cmd_run(args: &Args) -> Result<(), String> {
     if let Some(path) = &metrics_out {
         write_metrics_out(path, session.gpu_cycle(), session.metrics_snapshot())?;
     }
+    if let Some(path) = &series_out {
+        let body = if path.extension().is_some_and(|e| e == "csv") {
+            session.series_csv()
+        } else {
+            session.series_jsonl()
+        }
+        .ok_or("series sampler unavailable")?;
+        std::fs::write(path, body).map_err(|e| format!("write {}: {e}", path.display()))?;
+        let windows = session.sim().series().map(|s| s.len()).unwrap_or(0);
+        println!("wrote {} ({windows} window(s))", path.display());
+    }
     if let Some(path) = args.get("trace-out") {
         println!("wrote {path} ({} trace event(s))", session.trace_events_written());
     }
@@ -418,6 +455,11 @@ fn cmd_cluster(args: &Args) -> Result<(), String> {
     }
     let progress_every = args.get_u64("progress-every", 0).map_err(|e| e.to_string())?;
     let snapshot = parse_snapshot_opts(args)?;
+    if args.get("series-window").is_some() || args.get("series-out").is_some() {
+        return Err("--series-window/--series-out apply to `parsim run` \
+                    (the single-GPU engine's cycle loop) only"
+            .into());
+    }
 
     let mut builder = SimBuilder::new()
         .gpu(gpu)
@@ -847,6 +889,7 @@ fn cmd_campaign(args: &Args) -> Result<(), String> {
         resume: args.flag("resume"),
         retries: args.get_u64("retries", 0).map_err(|e| e.to_string())? as u32,
         checkpoint_every: args.get_u64("checkpoint-every", 0).map_err(|e| e.to_string())?,
+        trace_out: args.get("trace-out").map(std::path::PathBuf::from),
     };
     eprintln!(
         "campaign {name:?}: {} job(s) ({} workload(s) × {} gpu preset(s) × {} gpu count(s) \
@@ -931,6 +974,58 @@ fn cmd_bench(args: &Args) -> Result<(), String> {
     println!("wrote {}", path.display());
     if rows.iter().any(|r| !r.identical) {
         return Err("hot-path fingerprint mismatch — an optimization changed results".into());
+    }
+    Ok(())
+}
+
+/// `parsim profile`: the speedup attribution profiler. Runs the thread
+/// ladder (`--threads 1,2,4,8`), fingerprint-checks every rung against
+/// the baseline, decomposes each rung's wall time into the attribution
+/// ledger, compares measured speedup to the Amdahl bound of the measured
+/// sequential fraction, and writes `BENCH_scaling.json` (`--json PATH`).
+/// `--cluster [--gpus N]` ladders the multi-GPU engine instead, adding
+/// comm-phase and per-GPU fabric attribution. Exits non-zero if any rung
+/// changes simulated results.
+fn cmd_profile(args: &Args) -> Result<(), String> {
+    let name = match args.get("workload") {
+        Some(n) => n.to_string(),
+        None => args.positional.get(1).cloned().unwrap_or_else(|| "myocyte".into()),
+    };
+    let scale = match args.get("scale") {
+        None => Scale::Ci,
+        Some(s) => Scale::parse(s).ok_or_else(|| format!("bad --scale {s:?}"))?,
+    };
+    let gpu = parse_gpu(args)?;
+    let threads: Vec<usize> = args
+        .get_usize_list("threads")
+        .map_err(|e| e.to_string())?
+        .unwrap_or_else(|| vec![1, 4]);
+    if threads.is_empty() {
+        return Err("profile: --threads list is empty".into());
+    }
+    let schedule = parse_schedule(args)?;
+    let cluster_gpus = if args.flag("cluster") {
+        args.get_usize("gpus", 2).map_err(|e| e.to_string())?
+    } else {
+        0
+    };
+    let rows = harness::profile_ladder(
+        &name,
+        scale,
+        &gpu,
+        &threads,
+        schedule,
+        cluster_gpus,
+        !args.flag("quiet"),
+    )
+    .map_err(|e| e.to_string())?;
+    println!("{}", harness::scaling_report(&rows));
+    let path = std::path::PathBuf::from(args.get("json").unwrap_or("BENCH_scaling.json"));
+    std::fs::write(&path, harness::scaling_json(&rows))
+        .map_err(|e| format!("write {}: {e}", path.display()))?;
+    println!("wrote {}", path.display());
+    if rows.iter().any(|r| !r.identical) {
+        return Err("profile fingerprint mismatch — a rung changed simulated results".into());
     }
     Ok(())
 }

@@ -1,0 +1,419 @@
+//! Wall-time attribution: decompose a run's measured wall time into the
+//! Amdahl terms the paper's speedup curve is made of.
+//!
+//! # The attribution model
+//!
+//! The engine (gated on
+//! [`crate::config::TelemetryConfig::attrib`]) reads a wall clock
+//! around every parallel SM fan-out and snapshots the pool's per-worker
+//! cumulative busy/wait nanosecond counters across it. From those raw
+//! sums, plus the session's measured wall time and snapshot-I/O
+//! accounting, the ledger derives five exclusive components:
+//!
+//! * **parallel busy** — the *mean* per-worker busy time inside the
+//!   parallel sections: the part that shrinks as 1/p with perfect
+//!   scaling.
+//! * **load imbalance** — per-cycle `max − mean` worker busy time,
+//!   summed over cycles: workers idling at the join because another
+//!   worker's chunk ran long.
+//! * **barrier wait** — `section − max busy` per cycle: fork/join
+//!   overhead itself (wake-up latency, the caller's dispatch
+//!   bookkeeping), the part no schedule can remove.
+//! * **snapshot I/O** — wall time spent in `save_snapshot` (serialize +
+//!   atomic write), measured at the session layer.
+//! * **comm phase** — the cluster engine's sequential communication
+//!   phase (single-GPU runs: 0).
+//! * **sequential phase** — everything else, *derived by complement*:
+//!   `wall − parallel section − snapshot − comm`. This is why the sum
+//!   closes structurally: the parallel section decomposes exactly
+//!   (`mean + (max − mean) + (section − max) = section`), and the
+//!   sequential term absorbs every wall microsecond not inside a timed
+//!   section, so components always sum back to the measured wall time
+//!   up to clock-granularity clamping.
+//!
+//! Fast-forward is reported (jumps, skipped cycles, an estimated wall
+//! saving) but deliberately kept *outside* the reconciliation: skipped
+//! cycles cost no wall time, so they are an avoided cost, not a
+//! component of the measured total.
+//!
+//! Everything here is a pure observer: the accumulator is fed from
+//! clock reads that never touch simulated state, so an attributed run
+//! is bit-identical to a bare one (`tests/attrib.rs`).
+
+use crate::stats::export::{jsonl_f64, jsonl_str, jsonl_u64};
+use crate::telemetry::metrics::MetricsRegistry;
+
+const NS: f64 = 1e9;
+
+/// Raw per-cycle accumulator the engine feeds (see
+/// `GpuSim::cycle_attributed` / `ClusterSim::step_compute`). Holds only
+/// nanosecond sums — the derived decomposition lives in
+/// [`AttributionLedger`], built by the owning session once the run's
+/// wall time is known.
+#[derive(Debug, Default, Clone)]
+pub struct AttribAcc {
+    parallel_section_ns: u64,
+    /// Sum over cycles and workers of per-cycle busy deltas.
+    busy_total_ns: u64,
+    /// Sum over cycles of the per-cycle *maximum* worker busy delta.
+    max_busy_ns: u64,
+    /// Sum over cycles and workers of per-cycle barrier-wait deltas
+    /// (the pool's own instrumentation; diagnostic only).
+    wait_total_ns: u64,
+    /// Cluster communication-phase wall time (single-GPU: 0).
+    comm_ns: u64,
+    /// Cycles with an attributed parallel section.
+    cycles: u64,
+    ff_jumps: u64,
+    ff_cycles_skipped: u64,
+}
+
+impl AttribAcc {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one fan-out on an instrumented pool: the wall-clock
+    /// section length plus the pool's cumulative `(busy, wait)` counters
+    /// read immediately before and after it.
+    pub fn record_pool(&mut self, section_ns: u64, before: &[(u64, u64)], after: &[(u64, u64)]) {
+        self.parallel_section_ns += section_ns;
+        let mut max = 0u64;
+        for (&(b0, w0), &(b1, w1)) in before.iter().zip(after.iter()) {
+            let busy = b1.saturating_sub(b0);
+            self.busy_total_ns += busy;
+            self.wait_total_ns += w1.saturating_sub(w0);
+            max = max.max(busy);
+        }
+        self.max_busy_ns += max;
+        self.cycles += 1;
+    }
+
+    /// Record one fan-out run serially (threads = 1, no pool): the whole
+    /// section is one worker's busy time, with no imbalance or barrier.
+    pub fn record_serial(&mut self, section_ns: u64) {
+        self.parallel_section_ns += section_ns;
+        self.busy_total_ns += section_ns;
+        self.max_busy_ns += section_ns;
+        self.cycles += 1;
+    }
+
+    /// Add cluster communication-phase wall time.
+    pub fn record_comm(&mut self, comm_ns: u64) {
+        self.comm_ns += comm_ns;
+    }
+
+    /// Record one idle fast-forward jump of `skipped` cycles.
+    pub fn note_ff(&mut self, skipped: u64) {
+        self.ff_jumps += 1;
+        self.ff_cycles_skipped += skipped;
+    }
+
+    pub fn parallel_section_ns(&self) -> u64 {
+        self.parallel_section_ns
+    }
+
+    pub fn busy_total_ns(&self) -> u64 {
+        self.busy_total_ns
+    }
+
+    pub fn max_busy_ns(&self) -> u64 {
+        self.max_busy_ns
+    }
+
+    pub fn wait_total_ns(&self) -> u64 {
+        self.wait_total_ns
+    }
+
+    pub fn comm_ns(&self) -> u64 {
+        self.comm_ns
+    }
+
+    pub fn cycles(&self) -> u64 {
+        self.cycles
+    }
+
+    /// Derive the wall-time decomposition for a finished run. `threads`
+    /// is the worker count the busy sums are averaged over; `wall_s` is
+    /// the session's measured end-to-end wall time.
+    pub fn ledger(&self, threads: usize, wall_s: f64) -> AttributionLedger {
+        let w = threads.max(1) as f64;
+        let section_s = self.parallel_section_ns as f64 / NS;
+        let busy_mean_s = self.busy_total_ns as f64 / NS / w;
+        let max_busy_s = self.max_busy_ns as f64 / NS;
+        AttributionLedger {
+            threads: threads.max(1),
+            wall_s,
+            parallel_section_s: section_s,
+            parallel_busy_s: busy_mean_s,
+            imbalance_s: (max_busy_s - busy_mean_s).max(0.0),
+            barrier_wait_s: (section_s - max_busy_s).max(0.0),
+            comm_s: self.comm_ns as f64 / NS,
+            snapshot_s: 0.0,
+            snapshot_saves: 0,
+            snapshot_bytes: 0,
+            ff_jumps: self.ff_jumps,
+            ff_cycles_skipped: self.ff_cycles_skipped,
+            cycles: self.cycles,
+        }
+    }
+}
+
+/// The per-run wall-time decomposition (module docs describe each term
+/// and why the sum closes). Built by the session via
+/// [`AttribAcc::ledger`], then annotated with snapshot and fast-forward
+/// accounting; consumed by the `parsim profile` scaling report and the
+/// campaign's per-job summaries.
+#[derive(Debug, Clone)]
+pub struct AttributionLedger {
+    pub threads: usize,
+    /// Measured end-to-end wall time (the quantity being decomposed).
+    pub wall_s: f64,
+    /// Total wall time inside parallel SM fan-outs (= busy + imbalance
+    /// + barrier up to clock granularity).
+    pub parallel_section_s: f64,
+    /// Mean per-worker busy time inside the fan-outs.
+    pub parallel_busy_s: f64,
+    /// Per-cycle max − mean worker busy, summed.
+    pub imbalance_s: f64,
+    /// Per-cycle section − max worker busy, summed (fork/join cost).
+    pub barrier_wait_s: f64,
+    /// Cluster communication-phase wall time (single-GPU: 0).
+    pub comm_s: f64,
+    /// Wall time spent saving snapshots (serialize + atomic write).
+    pub snapshot_s: f64,
+    pub snapshot_saves: u64,
+    pub snapshot_bytes: u64,
+    pub ff_jumps: u64,
+    pub ff_cycles_skipped: u64,
+    /// Cycles with an attributed parallel section (excludes
+    /// fast-forwarded cycles, which execute no fan-out).
+    pub cycles: u64,
+}
+
+/// Amdahl speedup bound for a measured sequential fraction `f` at `p`
+/// threads: `1 / (f + (1 − f) / p)`.
+pub fn amdahl_bound(sequential_fraction: f64, threads: usize) -> f64 {
+    let f = sequential_fraction.clamp(0.0, 1.0);
+    let p = threads.max(1) as f64;
+    1.0 / (f + (1.0 - f) / p)
+}
+
+impl AttributionLedger {
+    /// The complement term: wall time outside every timed section.
+    pub fn sequential_s(&self) -> f64 {
+        (self.wall_s - self.parallel_section_s - self.comm_s - self.snapshot_s).max(0.0)
+    }
+
+    /// Serial fraction of the run (everything outside the parallel
+    /// sections). Measured at the 1-thread rung this is the `f` that
+    /// parameterizes [`amdahl_bound`].
+    pub fn sequential_fraction(&self) -> f64 {
+        if self.wall_s <= 0.0 {
+            return 1.0;
+        }
+        (1.0 - self.parallel_section_s / self.wall_s).clamp(0.0, 1.0)
+    }
+
+    /// The exclusive components, in report order. Their sum reconciles
+    /// against [`Self::wall_s`] (module docs explain why it closes).
+    pub fn components(&self) -> [(&'static str, f64); 6] {
+        [
+            ("sequential_phase", self.sequential_s()),
+            ("parallel_busy", self.parallel_busy_s),
+            ("load_imbalance", self.imbalance_s),
+            ("barrier_wait", self.barrier_wait_s),
+            ("comm_phase", self.comm_s),
+            ("snapshot_io", self.snapshot_s),
+        ]
+    }
+
+    pub fn components_sum(&self) -> f64 {
+        self.components().iter().map(|(_, s)| s).sum()
+    }
+
+    /// |components − wall| as a percentage of wall time. Structurally 0
+    /// up to clock-granularity clamping; `tests/attrib.rs` pins ≤ 1%.
+    pub fn reconcile_error_pct(&self) -> f64 {
+        if self.wall_s <= 0.0 {
+            return 0.0;
+        }
+        (self.components_sum() - self.wall_s).abs() / self.wall_s * 100.0
+    }
+
+    /// The largest *overhead* component (useful parallel work excluded):
+    /// the term to attack next when the speedup curve flattens.
+    pub fn dominant_bottleneck(&self) -> &'static str {
+        let mut best = ("sequential_phase", self.sequential_s());
+        for (name, s) in [
+            ("load_imbalance", self.imbalance_s),
+            ("barrier_wait", self.barrier_wait_s),
+            ("comm_phase", self.comm_s),
+            ("snapshot_io", self.snapshot_s),
+        ] {
+            if s > best.1 {
+                best = (name, s);
+            }
+        }
+        best.0
+    }
+
+    /// Rough wall saving from the idle fast-forward: skipped cycles
+    /// priced at the measured per-executed-cycle cost. Informational
+    /// only — avoided cost, not a component of the measured wall time.
+    pub fn ff_saved_s_est(&self) -> f64 {
+        let executed = self.cycles;
+        if executed == 0 || self.wall_s <= 0.0 {
+            return 0.0;
+        }
+        self.ff_cycles_skipped as f64 * (self.wall_s / executed as f64)
+    }
+
+    /// Append the ledger's fields to a flat-JSON line under construction
+    /// (`first` = no field written yet; returns the updated flag).
+    pub fn jsonl_fields(&self, out: &mut String, first: bool) -> bool {
+        jsonl_u64(out, "threads", self.threads as u64, first);
+        jsonl_f64(out, "wall_s", self.wall_s, false);
+        jsonl_f64(out, "sequential_s", self.sequential_s(), false);
+        jsonl_f64(out, "parallel_busy_s", self.parallel_busy_s, false);
+        jsonl_f64(out, "load_imbalance_s", self.imbalance_s, false);
+        jsonl_f64(out, "barrier_wait_s", self.barrier_wait_s, false);
+        jsonl_f64(out, "comm_s", self.comm_s, false);
+        jsonl_f64(out, "snapshot_s", self.snapshot_s, false);
+        jsonl_f64(out, "reconcile_error_pct", self.reconcile_error_pct(), false);
+        jsonl_str(out, "dominant_bottleneck", self.dominant_bottleneck(), false);
+        jsonl_u64(out, "ff_jumps", self.ff_jumps, false);
+        jsonl_u64(out, "ff_cycles_skipped", self.ff_cycles_skipped, false);
+        jsonl_u64(out, "snapshot_saves", self.snapshot_saves, false);
+        jsonl_u64(out, "snapshot_bytes", self.snapshot_bytes, false);
+        false
+    }
+
+    /// Export the ledger as nanosecond counters under `{prefix}attrib.*`
+    /// (the campaign's per-job summaries in `metrics.jsonl`).
+    pub fn fill_metrics(&self, reg: &mut MetricsRegistry, prefix: &str) {
+        let ns = |s: f64| (s * NS).round().max(0.0) as u64;
+        reg.counter(format!("{prefix}attrib.wall_ns"), ns(self.wall_s));
+        reg.counter(format!("{prefix}attrib.sequential_ns"), ns(self.sequential_s()));
+        reg.counter(format!("{prefix}attrib.parallel_busy_ns"), ns(self.parallel_busy_s));
+        reg.counter(format!("{prefix}attrib.load_imbalance_ns"), ns(self.imbalance_s));
+        reg.counter(format!("{prefix}attrib.barrier_wait_ns"), ns(self.barrier_wait_s));
+        reg.counter(format!("{prefix}attrib.comm_ns"), ns(self.comm_s));
+        reg.counter(format!("{prefix}attrib.snapshot_ns"), ns(self.snapshot_s));
+        reg.counter(format!("{prefix}attrib.snapshot_saves"), self.snapshot_saves);
+        reg.counter(format!("{prefix}attrib.snapshot_bytes"), self.snapshot_bytes);
+        reg.counter(format!("{prefix}attrib.ff_jumps"), self.ff_jumps);
+        reg.counter(format!("{prefix}attrib.ff_cycles_skipped"), self.ff_cycles_skipped);
+    }
+
+    /// Human-readable decomposition (one rung of the scaling report).
+    pub fn report(&self) -> String {
+        let mut out = String::new();
+        let pct = |s: f64| if self.wall_s > 0.0 { s / self.wall_s * 100.0 } else { 0.0 };
+        out.push_str(&format!(
+            "wall-time attribution ({} thread{}, {} attributed cycles)\n",
+            self.threads,
+            if self.threads == 1 { "" } else { "s" },
+            self.cycles
+        ));
+        for (name, s) in self.components() {
+            if s == 0.0 && (name == "comm_phase" || name == "snapshot_io") {
+                continue;
+            }
+            out.push_str(&format!("  {name:<17} {s:>9.4} s  ({:>5.1}%)\n", pct(s)));
+        }
+        out.push_str(&format!(
+            "  {:<17} {:>9.4} s  vs wall {:.4} s  (error {:.2}%)\n",
+            "components sum",
+            self.components_sum(),
+            self.wall_s,
+            self.reconcile_error_pct()
+        ));
+        if self.ff_jumps > 0 {
+            out.push_str(&format!(
+                "  fast-forward: {} jumps skipped {} cycles (est. saved {:.4} s)\n",
+                self.ff_jumps,
+                self.ff_cycles_skipped,
+                self.ff_saved_s_est()
+            ));
+        }
+        if self.snapshot_saves > 0 {
+            out.push_str(&format!(
+                "  snapshots: {} saves, {} bytes\n",
+                self.snapshot_saves, self.snapshot_bytes
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn serial_sections_have_no_imbalance_or_barrier() {
+        let mut acc = AttribAcc::new();
+        acc.record_serial(1_000_000);
+        acc.record_serial(2_000_000);
+        let l = acc.ledger(1, 0.01);
+        assert_eq!(l.cycles, 2);
+        assert!((l.parallel_section_s - 0.003).abs() < 1e-12);
+        assert!((l.parallel_busy_s - 0.003).abs() < 1e-12);
+        assert_eq!(l.imbalance_s, 0.0);
+        assert_eq!(l.barrier_wait_s, 0.0);
+    }
+
+    #[test]
+    fn pool_sections_decompose_exactly() {
+        let mut acc = AttribAcc::new();
+        // section 10ms; workers busy 8ms and 4ms → mean 6ms, max 8ms
+        acc.record_pool(10_000_000, &[(0, 0), (0, 0)], &[(8_000_000, 0), (4_000_000, 100)]);
+        let l = acc.ledger(2, 0.02);
+        assert!((l.parallel_busy_s - 0.006).abs() < 1e-12);
+        assert!((l.imbalance_s - 0.002).abs() < 1e-12);
+        assert!((l.barrier_wait_s - 0.002).abs() < 1e-12);
+        // mean + imbalance + barrier == section
+        let inside = l.parallel_busy_s + l.imbalance_s + l.barrier_wait_s;
+        assert!((inside - l.parallel_section_s).abs() < 1e-12);
+    }
+
+    #[test]
+    fn components_reconcile_to_wall_time() {
+        let mut acc = AttribAcc::new();
+        acc.record_pool(10_000_000, &[(0, 0), (0, 0)], &[(9_000_000, 0), (5_000_000, 0)]);
+        acc.record_comm(1_000_000);
+        let mut l = acc.ledger(2, 0.05);
+        l.snapshot_s = 0.002;
+        assert!(l.reconcile_error_pct() < 1e-9, "err = {}", l.reconcile_error_pct());
+        assert!((l.components_sum() - 0.05).abs() < 1e-12);
+    }
+
+    #[test]
+    fn amdahl_bound_matches_closed_form() {
+        assert!((amdahl_bound(0.0, 8) - 8.0).abs() < 1e-12);
+        assert!((amdahl_bound(1.0, 8) - 1.0).abs() < 1e-12);
+        assert!((amdahl_bound(0.5, 2) - 4.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn dominant_bottleneck_picks_largest_overhead() {
+        let mut acc = AttribAcc::new();
+        acc.record_pool(10_000_000, &[(0, 0), (0, 0)], &[(2_000_000, 0), (2_000_000, 0)]);
+        // barrier = 10ms − 2ms = 8ms dominates a tiny sequential rest
+        let l = acc.ledger(2, 0.0105);
+        assert_eq!(l.dominant_bottleneck(), "barrier_wait");
+    }
+
+    #[test]
+    fn jsonl_fields_form_a_flat_line() {
+        let acc = AttribAcc::new();
+        let l = acc.ledger(4, 0.1);
+        let mut out = String::from("{");
+        l.jsonl_fields(&mut out, true);
+        out.push('}');
+        let fields = crate::stats::export::parse_flat_json(&out).expect("flat JSON");
+        assert!(fields.iter().any(|(k, _)| k == "dominant_bottleneck"));
+        assert!(fields.iter().any(|(k, _)| k == "wall_s"));
+    }
+}

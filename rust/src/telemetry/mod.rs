@@ -1,7 +1,8 @@
-//! Observability for the simulator, in three coordinated pieces — none
-//! of which may perturb simulation state (pinned by `tests/telemetry.rs`:
-//! with everything enabled, fingerprints are bit-identical to a
-//! telemetry-off run at every thread count and schedule).
+//! Observability for the simulator, in five coordinated pieces — none
+//! of which may perturb simulation state (pinned by `tests/telemetry.rs`
+//! and `tests/attrib.rs`: with everything enabled, fingerprints are
+//! bit-identical to a telemetry-off run at every thread count and
+//! schedule).
 //!
 //! * [`metrics`] — a unified registry of typed counters/gauges/histograms
 //!   filled by every subsystem (engine fast-forward jumps, worklist
@@ -19,15 +20,30 @@
 //!   geometrically-refined cadence, and bisect to the first divergent
 //!   cycle and the component (SM / icnt / mem / fabric) whose
 //!   sub-fingerprint differs. Exposed as `parsim diverge`.
+//! * [`attrib`] — the wall-time attribution ledger: per-run
+//!   decomposition into sequential phase, parallel compute, barrier
+//!   wait, load imbalance, comm phase, and snapshot I/O, reconciling
+//!   against measured wall time. Feeds the `parsim profile`
+//!   thread-ladder scaling report (measured speedup vs. the Amdahl
+//!   bound of the measured sequential fraction).
+//! * [`series`] — a deterministic counter time-series: windowed
+//!   ring-buffer sampling of per-cycle engine signals (active SMs,
+//!   worklist occupancy, icnt depth, DRAM/L2 traffic) over *simulated*
+//!   cycles, byte-deterministic across thread counts, exported as
+//!   JSONL/CSV via `parsim run … --series-window/--series-out`.
 //!
 //! Everything is wired through [`crate::config::TelemetryConfig`] on
 //! [`crate::SimConfig`] and the [`crate::SimBuilder`] setters; with the
 //! default (all off) configuration the hot loop pays one `Option` check.
 
+pub mod attrib;
 pub mod diverge;
 pub mod metrics;
+pub mod series;
 pub mod trace;
 
+pub use attrib::{amdahl_bound, AttribAcc, AttributionLedger};
 pub use diverge::{diverge_probe, DivergeOutcome, DivergeReport};
 pub use metrics::{Histogram, MetricValue, MetricsRegistry};
+pub use series::{SeriesSampler, SeriesWindow};
 pub use trace::{TraceEvent, TraceWriter, PID_SIM, PID_WALL};

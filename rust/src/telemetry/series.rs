@@ -1,0 +1,312 @@
+//! Deterministic counter time-series: a windowed ring-buffer sampler
+//! over *simulated* cycles.
+//!
+//! Every input is an integer read at a sequential point of the cycle
+//! loop (post-worklist-rebuild state is bit-identical across thread
+//! counts and schedules), and every window field is a plain `u64` sum
+//! or cumulative-counter delta — no floats, no wall clocks — so the
+//! exported JSONL/CSV is **byte-deterministic** across thread counts
+//! and, like all telemetry, leaves the simulation bit-identical to an
+//! unsampled run (`tests/attrib.rs`).
+//!
+//! Per-cycle signals (active SMs, worklist occupancy, icnt in-flight
+//! depth) accumulate as per-window sums; monotone counters (L2
+//! accesses, DRAM reads + writes, fabric bytes) are recorded as deltas
+//! when a window closes. Fast-forwarded cycles fold in as zero-activity
+//! cycles — the skipped window boundary math is identical whether the
+//! engine stepped or jumped. The buffer is bounded: past `cap` windows
+//! the oldest are dropped (and counted), so multi-million-cycle runs
+//! sample with constant memory.
+
+use std::collections::VecDeque;
+
+use crate::stats::export::{jsonl_str, jsonl_u64};
+
+/// One closed sampling window: `cycles` simulated cycles starting at
+/// `start_cycle`, with per-cycle sums and per-window counter deltas.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SeriesWindow {
+    pub start_cycle: u64,
+    pub cycles: u64,
+    /// Sum over the window's cycles of the non-idle SM count.
+    pub active_sm_sum: u64,
+    /// Sum over the window's cycles of the active-worklist length.
+    pub worklist_sum: u64,
+    /// Sum over the window's cycles of the interconnect in-flight depth.
+    pub icnt_in_flight_sum: u64,
+    /// L2 accesses issued within the window (cumulative-counter delta).
+    pub l2_accesses: u64,
+    /// DRAM reads + writes within the window.
+    pub dram_accesses: u64,
+    /// Fabric bytes moved within the window (cluster runs; 0 otherwise).
+    pub fabric_bytes: u64,
+}
+
+/// The sampler (module docs). Drive with [`SeriesSampler::on_cycle`] /
+/// [`SeriesSampler::on_ff_skip`]; whenever either returns `true`, call
+/// [`SeriesSampler::close_windows`] with the current cumulative
+/// counters. [`SeriesSampler::finish`] flushes the trailing partial
+/// window.
+#[derive(Debug, Clone)]
+pub struct SeriesSampler {
+    window: u64,
+    cap: usize,
+    windows: VecDeque<SeriesWindow>,
+    dropped: u64,
+    cur_start: u64,
+    cur_cycles: u64,
+    active_sm_sum: u64,
+    worklist_sum: u64,
+    icnt_sum: u64,
+    prev_l2: u64,
+    prev_dram: u64,
+    prev_fabric: u64,
+}
+
+impl SeriesSampler {
+    /// Default ring capacity (closed windows retained).
+    pub const DEFAULT_CAP: usize = 4096;
+
+    /// `window` = simulated cycles per sample (must be ≥ 1).
+    pub fn new(window: u64) -> Self {
+        Self::with_capacity(window, Self::DEFAULT_CAP)
+    }
+
+    pub fn with_capacity(window: u64, cap: usize) -> Self {
+        SeriesSampler {
+            window: window.max(1),
+            cap: cap.max(1),
+            windows: VecDeque::new(),
+            dropped: 0,
+            cur_start: 0,
+            cur_cycles: 0,
+            active_sm_sum: 0,
+            worklist_sum: 0,
+            icnt_sum: 0,
+            prev_l2: 0,
+            prev_dram: 0,
+            prev_fabric: 0,
+        }
+    }
+
+    /// Accumulate one executed cycle's signals. Returns `true` when at
+    /// least one window is complete ([`Self::close_windows`] is due).
+    pub fn on_cycle(&mut self, active_sms: u64, worklist: u64, icnt_in_flight: u64) -> bool {
+        self.active_sm_sum += active_sms;
+        self.worklist_sum += worklist;
+        self.icnt_sum += icnt_in_flight;
+        self.cur_cycles += 1;
+        self.cur_cycles >= self.window
+    }
+
+    /// Fold `skipped` fast-forwarded cycles in as zero-activity cycles.
+    /// Returns `true` when at least one window is complete.
+    pub fn on_ff_skip(&mut self, skipped: u64) -> bool {
+        self.cur_cycles += skipped;
+        self.cur_cycles >= self.window
+    }
+
+    /// Close every complete window against the current cumulative
+    /// counters. The first window closed takes the counter deltas since
+    /// the previous close; windows wholly inside a fast-forward jump
+    /// come out as all-zero (idle by proof).
+    pub fn close_windows(&mut self, l2_cum: u64, dram_cum: u64, fabric_cum: u64) {
+        while self.cur_cycles >= self.window {
+            let w = SeriesWindow {
+                start_cycle: self.cur_start,
+                cycles: self.window,
+                active_sm_sum: std::mem::take(&mut self.active_sm_sum),
+                worklist_sum: std::mem::take(&mut self.worklist_sum),
+                icnt_in_flight_sum: std::mem::take(&mut self.icnt_sum),
+                l2_accesses: l2_cum.saturating_sub(self.prev_l2),
+                dram_accesses: dram_cum.saturating_sub(self.prev_dram),
+                fabric_bytes: fabric_cum.saturating_sub(self.prev_fabric),
+            };
+            self.prev_l2 = l2_cum;
+            self.prev_dram = dram_cum;
+            self.prev_fabric = fabric_cum;
+            self.push(w);
+            self.cur_start += self.window;
+            self.cur_cycles -= self.window;
+        }
+    }
+
+    /// Flush the trailing partial window (no-op when empty).
+    pub fn finish(&mut self, l2_cum: u64, dram_cum: u64, fabric_cum: u64) {
+        self.close_windows(l2_cum, dram_cum, fabric_cum);
+        if self.cur_cycles == 0 {
+            return;
+        }
+        let w = SeriesWindow {
+            start_cycle: self.cur_start,
+            cycles: self.cur_cycles,
+            active_sm_sum: std::mem::take(&mut self.active_sm_sum),
+            worklist_sum: std::mem::take(&mut self.worklist_sum),
+            icnt_in_flight_sum: std::mem::take(&mut self.icnt_sum),
+            l2_accesses: l2_cum.saturating_sub(self.prev_l2),
+            dram_accesses: dram_cum.saturating_sub(self.prev_dram),
+            fabric_bytes: fabric_cum.saturating_sub(self.prev_fabric),
+        };
+        self.prev_l2 = l2_cum;
+        self.prev_dram = dram_cum;
+        self.prev_fabric = fabric_cum;
+        self.cur_start += self.cur_cycles;
+        self.cur_cycles = 0;
+        self.push(w);
+    }
+
+    fn push(&mut self, w: SeriesWindow) {
+        if self.windows.len() == self.cap {
+            self.windows.pop_front();
+            self.dropped += 1;
+        }
+        self.windows.push_back(w);
+    }
+
+    pub fn window_len(&self) -> u64 {
+        self.window
+    }
+
+    pub fn windows(&self) -> impl Iterator<Item = &SeriesWindow> {
+        self.windows.iter()
+    }
+
+    pub fn len(&self) -> usize {
+        self.windows.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.windows.is_empty()
+    }
+
+    /// Windows evicted by the ring's capacity bound.
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    /// JSONL export: a `meta` record (window length, count, evictions)
+    /// followed by one flat record per retained window.
+    pub fn to_jsonl(&self) -> String {
+        let mut out = String::new();
+        out.push('{');
+        jsonl_str(&mut out, "series", "meta", true);
+        jsonl_u64(&mut out, "window", self.window, false);
+        jsonl_u64(&mut out, "windows", self.windows.len() as u64, false);
+        jsonl_u64(&mut out, "dropped", self.dropped, false);
+        out.push_str("}\n");
+        for w in &self.windows {
+            out.push('{');
+            jsonl_str(&mut out, "series", "window", true);
+            jsonl_u64(&mut out, "start_cycle", w.start_cycle, false);
+            jsonl_u64(&mut out, "cycles", w.cycles, false);
+            jsonl_u64(&mut out, "active_sm_sum", w.active_sm_sum, false);
+            jsonl_u64(&mut out, "worklist_sum", w.worklist_sum, false);
+            jsonl_u64(&mut out, "icnt_in_flight_sum", w.icnt_in_flight_sum, false);
+            jsonl_u64(&mut out, "l2_accesses", w.l2_accesses, false);
+            jsonl_u64(&mut out, "dram_accesses", w.dram_accesses, false);
+            jsonl_u64(&mut out, "fabric_bytes", w.fabric_bytes, false);
+            out.push_str("}\n");
+        }
+        out
+    }
+
+    /// CSV export (header + one row per retained window) — the heatmap
+    /// feed.
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from(
+            "start_cycle,cycles,active_sm_sum,worklist_sum,icnt_in_flight_sum,\
+             l2_accesses,dram_accesses,fabric_bytes\n",
+        );
+        for w in &self.windows {
+            out.push_str(&format!(
+                "{},{},{},{},{},{},{},{}\n",
+                w.start_cycle,
+                w.cycles,
+                w.active_sm_sum,
+                w.worklist_sum,
+                w.icnt_in_flight_sum,
+                w.l2_accesses,
+                w.dram_accesses,
+                w.fabric_bytes
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn windows_close_on_boundary_with_counter_deltas() {
+        let mut s = SeriesSampler::new(2);
+        assert!(!s.on_cycle(3, 2, 5));
+        assert!(s.on_cycle(1, 1, 0));
+        s.close_windows(10, 4, 0);
+        assert!(!s.on_cycle(2, 2, 2));
+        assert!(s.on_cycle(2, 2, 2));
+        s.close_windows(25, 6, 0);
+        let w: Vec<_> = s.windows().cloned().collect();
+        assert_eq!(w.len(), 2);
+        assert_eq!(w[0].start_cycle, 0);
+        assert_eq!(w[0].active_sm_sum, 4);
+        assert_eq!(w[0].l2_accesses, 10);
+        assert_eq!(w[1].start_cycle, 2);
+        assert_eq!(w[1].l2_accesses, 15);
+        assert_eq!(w[1].dram_accesses, 2);
+    }
+
+    #[test]
+    fn ff_skip_folds_zero_activity_windows() {
+        let mut s = SeriesSampler::new(4);
+        s.on_cycle(2, 2, 1);
+        assert!(s.on_ff_skip(11)); // 12 cycles pending → 3 whole windows
+        s.close_windows(7, 3, 0);
+        let w: Vec<_> = s.windows().cloned().collect();
+        assert_eq!(w.len(), 3);
+        // all real activity (and counter deltas) land in the first window
+        assert_eq!(w[0].active_sm_sum, 2);
+        assert_eq!(w[0].l2_accesses, 7);
+        assert_eq!(w[1].start_cycle, 4);
+        assert_eq!(w[1].cycles, 4);
+        assert_eq!(w[1].active_sm_sum, 0);
+        assert_eq!(w[1].l2_accesses, 0);
+        assert_eq!(w[2].start_cycle, 8);
+        // next real cycle continues at the right offset
+        s.on_cycle(1, 1, 1);
+        s.finish(8, 3, 0);
+        assert_eq!(s.windows().last().unwrap().start_cycle, 12);
+        assert_eq!(s.windows().last().unwrap().cycles, 1);
+        assert_eq!(s.windows().last().unwrap().l2_accesses, 1);
+    }
+
+    #[test]
+    fn ring_drops_oldest_past_capacity() {
+        let mut s = SeriesSampler::with_capacity(1, 2);
+        for i in 0..5u64 {
+            s.on_cycle(i, 0, 0);
+            s.close_windows(0, 0, 0);
+        }
+        assert_eq!(s.len(), 2);
+        assert_eq!(s.dropped(), 3);
+        assert_eq!(s.windows().next().unwrap().start_cycle, 3);
+    }
+
+    #[test]
+    fn exports_are_flat_and_stable() {
+        let mut s = SeriesSampler::new(2);
+        s.on_cycle(1, 1, 1);
+        s.on_cycle(1, 1, 1);
+        s.close_windows(4, 2, 8);
+        let jsonl = s.to_jsonl();
+        for line in jsonl.lines() {
+            crate::stats::export::parse_flat_json(line).expect("flat JSON");
+        }
+        assert_eq!(jsonl, s.to_jsonl(), "export must be deterministic");
+        let csv = s.to_csv();
+        assert!(csv.starts_with("start_cycle,"));
+        assert_eq!(csv.lines().count(), 2);
+        assert!(csv.contains("0,2,2,2,2,4,2,8"));
+    }
+}

@@ -90,7 +90,9 @@ fn push_escaped(out: &mut String, s: &str) {
 /// lanes so perfetto shows "simulated time" / "wall clock" instead of
 /// bare pids.
 pub struct TraceWriter {
-    out: Box<dyn Write>,
+    // `Send` so a writer behind a `Mutex` can serve a worker pool (the
+    // campaign scheduler's wall trace is fed from job workers)
+    out: Box<dyn Write + Send>,
     buf: String,
     events: u64,
     finished: bool,
@@ -118,7 +120,7 @@ impl TraceWriter {
     }
 
     /// Stream to an arbitrary sink (used by tests to capture in memory).
-    pub fn to_writer(out: Box<dyn Write>) -> Self {
+    pub fn to_writer(out: Box<dyn Write + Send>) -> Self {
         let mut w = TraceWriter { out, buf: String::with_capacity(Self::FLUSH_BYTES + 1024), events: 0, finished: false };
         w.buf.push('[');
         w.meta_name("process_name", PID_SIM, 0, "simulated time (1 cycle = 1us)");
@@ -227,14 +229,14 @@ impl Drop for TraceWriter {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::cell::RefCell;
-    use std::rc::Rc;
+    use std::sync::{Arc, Mutex};
 
-    /// `Write` adapter capturing output in a shared buffer.
-    struct SharedSink(Rc<RefCell<Vec<u8>>>);
+    /// `Write` adapter capturing output in a shared buffer (`Send`, to
+    /// match the writer's sink bound).
+    struct SharedSink(Arc<Mutex<Vec<u8>>>);
     impl Write for SharedSink {
         fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
-            self.0.borrow_mut().extend_from_slice(buf);
+            self.0.lock().unwrap().extend_from_slice(buf);
             Ok(buf.len())
         }
         fn flush(&mut self) -> io::Result<()> {
@@ -242,9 +244,9 @@ mod tests {
         }
     }
 
-    fn capture() -> (TraceWriter, Rc<RefCell<Vec<u8>>>) {
-        let buf = Rc::new(RefCell::new(Vec::new()));
-        let w = TraceWriter::to_writer(Box::new(SharedSink(Rc::clone(&buf))));
+    fn capture() -> (TraceWriter, Arc<Mutex<Vec<u8>>>) {
+        let buf = Arc::new(Mutex::new(Vec::new()));
+        let w = TraceWriter::to_writer(Box::new(SharedSink(Arc::clone(&buf))));
         (w, buf)
     }
 
@@ -255,7 +257,7 @@ mod tests {
         w.event(&TraceEvent::sim_span("kernel_0", "kernel", 0, 100, 50).arg("ctas", 4));
         w.event(&TraceEvent::wall_span("barrier_wait", "pool", 3, 10, 7));
         w.finish().unwrap();
-        let s = String::from_utf8(buf.borrow().clone()).unwrap();
+        let s = String::from_utf8(buf.lock().unwrap().clone()).unwrap();
         assert!(s.starts_with('['), "opens a JSON array: {s}");
         assert!(s.trim_end().ends_with(']'), "closes the JSON array: {s}");
         assert!(s.contains("\"ph\":\"M\""), "metadata events present");
@@ -276,7 +278,7 @@ mod tests {
         let (mut w, buf) = capture();
         w.event(&TraceEvent::sim_span("k\"er\\nel\n", "kernel", 0, 0, 1));
         w.finish().unwrap();
-        let s = String::from_utf8(buf.borrow().clone()).unwrap();
+        let s = String::from_utf8(buf.lock().unwrap().clone()).unwrap();
         assert!(s.contains("k\\\"er\\\\nel\\n"), "escaped: {s}");
     }
 
@@ -288,13 +290,13 @@ mod tests {
         }
         // long before finish(), most bytes must already be in the sink
         assert!(
-            buf.borrow().len() > 100_000,
+            buf.lock().unwrap().len() > 100_000,
             "writer accumulated instead of streaming ({} bytes flushed)",
-            buf.borrow().len()
+            buf.lock().unwrap().len()
         );
         assert!(w.buf.len() <= TraceWriter::FLUSH_BYTES + 1024, "in-memory buffer unbounded");
         w.finish().unwrap();
-        let s = String::from_utf8(buf.borrow().clone()).unwrap();
+        let s = String::from_utf8(buf.lock().unwrap().clone()).unwrap();
         assert!(s.trim_end().ends_with(']'));
     }
 
@@ -305,7 +307,7 @@ mod tests {
         w.finish().unwrap();
         w.finish().unwrap();
         drop(w);
-        let s = String::from_utf8(buf.borrow().clone()).unwrap();
+        let s = String::from_utf8(buf.lock().unwrap().clone()).unwrap();
         assert_eq!(s.matches(']').count(), 1, "array closed exactly once: {s}");
     }
 }

@@ -1,0 +1,188 @@
+//! The attribution profiler must be a pure observer: a run with the
+//! wall-time ledger and the counter time-series enabled is
+//! **bit-identical** to a bare run — same statistics, same fingerprints
+//! — across thread counts, schedules, and engines (single-GPU and
+//! cluster). On top of that, the ledger's components must reconcile
+//! against measured wall time, the time-series export must be
+//! byte-deterministic, and the thread-ladder harness must
+//! fingerprint-check every rung.
+
+use parsim::config::{ClusterConfig, GpuConfig, Schedule};
+use parsim::harness::{profile_ladder, scaling_json, scaling_report};
+use parsim::stats::diff::diff_runs;
+use parsim::stats::export::parse_flat_json;
+use parsim::trace::workloads::Scale;
+use parsim::SimBuilder;
+
+fn builder(name: &str, threads: usize, schedule: Schedule) -> SimBuilder {
+    SimBuilder::new()
+        .gpu(GpuConfig::tiny())
+        .workload_named(name, Scale::Ci)
+        .threads(threads)
+        .schedule(schedule)
+}
+
+fn run_bare(name: &str, threads: usize, schedule: Schedule) -> parsim::GpuStats {
+    let mut s = builder(name, threads, schedule).build().expect("valid config");
+    s.run_to_completion().expect("run");
+    s.into_stats().expect("finished")
+}
+
+/// Run with the ledger and a dense time-series window enabled, sanity-
+/// check the ledger is populated, and return the stats.
+fn run_attributed(name: &str, threads: usize, schedule: Schedule) -> parsim::GpuStats {
+    let mut s = builder(name, threads, schedule)
+        .attrib(true)
+        .series_window(16)
+        .build()
+        .expect("valid config");
+    s.run_to_completion().expect("run");
+    let l = s.attribution().expect("attrib enabled");
+    assert!(l.wall_s > 0.0 && l.cycles > 0, "{name} @{threads}t: empty ledger");
+    s.into_stats().expect("finished")
+}
+
+/// The acceptance gate: attribution + time-series on vs off,
+/// bit-identical statistics across threads {1, 4, 8} × both schedules.
+#[test]
+fn attributed_runs_are_bit_identical_across_threads_and_schedules() {
+    for name in ["nn", "hotspot", "myocyte"] {
+        for threads in [1usize, 4, 8] {
+            for schedule in [Schedule::Static { chunk: 1 }, Schedule::Dynamic { chunk: 1 }] {
+                let bare = run_bare(name, threads, schedule);
+                let inst = run_attributed(name, threads, schedule);
+                let d = diff_runs(&bare, &inst);
+                assert!(
+                    d.identical(),
+                    "{name} @{threads}t {}: attribution perturbed results:\n{}",
+                    schedule.name(),
+                    d.report()
+                );
+                assert_eq!(bare.fingerprint(), inst.fingerprint(), "{name} fingerprint");
+            }
+        }
+    }
+}
+
+/// Same gate on the cluster engine: a 2-GPU tp_gemm run with the ledger
+/// enabled matches the bare run bit-for-bit, and the cluster ledger
+/// (fan-out + comm-phase terms) reconciles against wall time.
+#[test]
+fn attributed_cluster_run_is_bit_identical() {
+    let run = |attrib: bool| {
+        let mut b = SimBuilder::new()
+            .gpu(GpuConfig::tiny())
+            .workload_named("tp_gemm", Scale::Ci)
+            .threads(4)
+            .cluster(ClusterConfig::p2p(2));
+        if attrib {
+            b = b.attrib(true);
+        }
+        let mut s = b.build_cluster().expect("valid cluster config");
+        s.run_to_completion().expect("run");
+        if attrib {
+            let l = s.attribution().expect("attrib enabled");
+            assert!(l.cycles > 0, "cluster ledger saw no cycles");
+            assert!(
+                l.reconcile_error_pct() <= 1.0,
+                "cluster ledger reconcile error {:.3}%",
+                l.reconcile_error_pct()
+            );
+        } else {
+            assert!(s.attribution().is_none(), "ledger must be off by default");
+        }
+        s.stats().expect("finished").fingerprint()
+    };
+    assert_eq!(run(false), run(true), "attribution perturbed the cluster fingerprint");
+}
+
+/// The reconciliation contract: sequential + parallel busy + imbalance
+/// + barrier wait + comm + snapshot I/O sums back to measured wall time
+/// within 1%, at both ends of the thread ladder.
+#[test]
+fn ledger_components_reconcile_within_one_percent() {
+    for threads in [1usize, 8] {
+        let mut s = builder("myocyte", threads, Schedule::Dynamic { chunk: 1 })
+            .attrib(true)
+            .build()
+            .expect("valid config");
+        s.run_to_completion().expect("run");
+        let l = s.attribution().expect("attrib enabled");
+        assert!(
+            l.reconcile_error_pct() <= 1.0,
+            "@{threads}t: components sum {:.6}s vs wall {:.6}s ({:.3}% error)",
+            l.components_sum(),
+            l.wall_s,
+            l.reconcile_error_pct()
+        );
+        let f = l.sequential_fraction();
+        assert!((0.0..=1.0).contains(&f), "sequential fraction {f} out of range");
+        assert!(!l.dominant_bottleneck().is_empty());
+        assert_eq!(l.threads, threads);
+    }
+}
+
+/// The counter time-series is a function of simulated cycles only:
+/// byte-identical JSONL and CSV exports at every thread count and
+/// schedule, and every JSONL line is flat parseable JSON.
+#[test]
+fn series_export_is_byte_identical_across_threads_and_schedules() {
+    let series = |threads: usize, schedule: Schedule| {
+        let mut s =
+            builder("hotspot", threads, schedule).series_window(8).build().expect("valid config");
+        s.run_to_completion().expect("run");
+        let jsonl = s.series_jsonl().expect("series enabled");
+        let csv = s.series_csv().expect("series enabled");
+        (jsonl, csv)
+    };
+    let base = series(1, Schedule::Static { chunk: 1 });
+    assert!(base.0.lines().count() > 1, "series export too short:\n{}", base.0);
+    for line in base.0.lines() {
+        parse_flat_json(line).expect("series line is flat JSON");
+    }
+    let ladder = [
+        (4usize, Schedule::Static { chunk: 1 }),
+        (8, Schedule::Dynamic { chunk: 1 }),
+        (1, Schedule::Dynamic { chunk: 1 }),
+    ];
+    for (threads, schedule) in ladder {
+        let other = series(threads, schedule);
+        assert_eq!(base.0, other.0, "JSONL series diverged @{threads}t {}", schedule.name());
+        assert_eq!(base.1, other.1, "CSV series diverged @{threads}t {}", schedule.name());
+    }
+}
+
+/// End-to-end ladder smoke: every rung fingerprint-identical and
+/// reconciled, the JSON export is flat parseable JSONL with the ledger
+/// fields inlined, and the human report names the Amdahl bound.
+#[test]
+fn profile_ladder_checks_fingerprints_and_exports_scaling_json() {
+    let rows = profile_ladder(
+        "myocyte",
+        Scale::Ci,
+        &GpuConfig::tiny(),
+        &[1, 2],
+        Schedule::Static { chunk: 0 },
+        0,
+        false,
+    )
+    .expect("ladder runs");
+    assert_eq!(rows.len(), 2);
+    for r in &rows {
+        assert!(r.identical, "rung {}t fingerprint diverged", r.ledger.threads);
+        assert_eq!(r.cycles, rows[0].cycles, "simulated cycles must not depend on threads");
+        assert!(r.ledger.reconcile_error_pct() <= 1.0, "rung {}t reconcile", r.ledger.threads);
+        assert!(r.amdahl >= 1.0, "Amdahl bound below 1x");
+        assert!(r.speedup > 0.0);
+    }
+    let json = scaling_json(&rows);
+    assert_eq!(json.lines().count(), 2, "one JSONL record per rung");
+    for line in json.lines() {
+        let fields = parse_flat_json(line).expect("scaling line is flat JSON");
+        for key in ["workload", "threads", "wall_s", "reconcile_error_pct", "fingerprint"] {
+            assert!(fields.iter().any(|(k, _)| k == key), "missing {key:?} in {line}");
+        }
+    }
+    let report = scaling_report(&rows);
+    assert!(report.contains("Amdahl") && report.contains("myocyte"), "report:\n{report}");
+}
