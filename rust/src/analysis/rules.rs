@@ -110,7 +110,7 @@ pub const SM_LOCAL_MODULES: &[&str] = &["core", "mem", "stats", "trace", "util"]
 /// reads each carry a written waiver.
 const NONDET_EXEMPT: &[&str] = &[
     "bin/", "profiler", "harness", "telemetry", "campaign", "cli", "analysis", "runtime",
-    "main.rs", "engine/pool.rs",
+    "main.rs", "engine/pool.rs", "faults",
 ];
 
 /// Inline directives parsed from comments.

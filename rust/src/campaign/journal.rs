@@ -135,9 +135,39 @@ impl Journal {
     }
 
     /// Durably append one payload: checksum-framed line + `sync_data`.
+    ///
+    /// Fault injection (`journal` site, see [`crate::faults`]): a
+    /// `short` fault writes half the frame and fails — leaving exactly
+    /// the torn tail a mid-append crash produces, which [`load`] must
+    /// drop — and a `corrupt` fault flips one seeded bit so the line
+    /// lands on disk but fails its CRC on replay.
     fn append(&mut self, json: &str) -> io::Result<()> {
         let mut line = frame(json);
         line.push('\n');
+        if crate::faults::enabled() {
+            match crate::faults::on_write(
+                crate::faults::FaultSite::Journal,
+                &self.path,
+                line.len(),
+            ) {
+                Some(crate::faults::WriteFault::Error(e)) => return Err(e),
+                Some(crate::faults::WriteFault::Short { wrote, error }) => {
+                    self.file.write_all(&line.as_bytes()[..wrote])?;
+                    let _ = self.file.sync_data();
+                    return Err(error);
+                }
+                Some(crate::faults::WriteFault::CorruptBit { bit }) => {
+                    let mut bytes = line.into_bytes();
+                    // Keep the trailing newline intact so only this
+                    // line's CRC breaks, not the next line's framing.
+                    let i = ((bit / 8) as usize).min(bytes.len().saturating_sub(2));
+                    bytes[i] ^= 1 << (bit % 8);
+                    self.file.write_all(&bytes)?;
+                    return self.file.sync_data();
+                }
+                None => {}
+            }
+        }
         self.file.write_all(line.as_bytes())?;
         self.file.sync_data()
     }

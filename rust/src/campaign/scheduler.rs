@@ -25,20 +25,42 @@
 //!   and reported in the summary — one bad job never aborts the sweep.
 //!   Wedged jobs are cancelled by the engine's per-kernel cycle
 //!   watchdog (`max_cycles`) and take the same quarantine path.
+//!
+//! And on top of *that*, **resilience hardening** (proven continuously
+//! by the fault-injection subsystem, [`crate::faults`], and the `parsim
+//! chaos` harness):
+//!
+//! * per-job **deadlines**: a wall-clock watchdog (`--job-timeout`,
+//!   checked between cycle-budget slices so a wedged simulation cannot
+//!   hold a worker forever) plus a deterministic cycle-budget fallback
+//!   (`--job-cycle-budget`) whose verdict is bit-reproducible;
+//! * **exponential backoff with deterministic seeded jitter** between
+//!   retry attempts (`--retry-backoff-ms`): attempt `k` sleeps
+//!   `base·2^k + jitter(job, k)` ms, so a sweep's retries neither
+//!   hammer a struggling disk nor stampede in lockstep;
+//! * **graceful degradation**: ENOSPC or persistent store-write
+//!   failure flips the store into in-memory overflow mode — the sweep
+//!   keeps running (every record is already durable in the journal),
+//!   `campaign.degraded.*` metrics surface the cause, and the flush is
+//!   retried on recovery. Checkpoint-save failures likewise degrade
+//!   (warn + counter) instead of failing the job: a checkpoint is a
+//!   recovery optimization, never correctness.
 
 use std::fmt::Write as _;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::path::Path;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::config::Schedule;
 use crate::engine::pool::ThreadPool;
+use crate::engine::snapshot::SnapshotError;
 use crate::engine::{DisjointSlice, SessionStatus, SimBuilder, StopCondition};
 use crate::telemetry::attrib::AttributionLedger;
 use crate::telemetry::trace::{TraceEvent, TraceWriter, PID_WALL};
 use crate::trace::workloads;
+use crate::util::prng::SplitMix64;
 
 use super::journal::{self, Journal};
 use super::spec::{CampaignSpec, JobSpec};
@@ -118,6 +140,23 @@ pub struct CampaignConfig {
     /// wall-clock span per job plus a `journal_flush` span per durable
     /// journal append (observability only — never affects results).
     pub trace_out: Option<std::path::PathBuf>,
+    /// Per-attempt wall-clock deadline in milliseconds (0 = off). A job
+    /// still running when it expires fails with a typed deadline reason
+    /// and takes the normal retry → quarantine path. Checked between
+    /// cycle-budget slices, so it fires even when the simulation itself
+    /// is wedged mid-kernel. Wall-clock: host-dependent, never affects
+    /// stored results (a timed-out job contributes no record).
+    pub job_timeout_ms: u64,
+    /// Per-attempt **deterministic** deadline in GPU cycles (0 = off):
+    /// the bit-reproducible fallback to the wall-clock watchdog — the
+    /// same job always times out at the same slice boundary.
+    pub job_cycle_budget: u64,
+    /// Base for exponential retry backoff in milliseconds (0 = off,
+    /// the default — tests stay fast). Attempt `k` sleeps
+    /// `base·2^k + jitter` where the jitter is drawn from a SplitMix64
+    /// stream seeded by (job hash, attempt): deterministic per job,
+    /// decorrelated across jobs.
+    pub backoff_base_ms: u64,
 }
 
 impl Default for CampaignConfig {
@@ -132,6 +171,9 @@ impl Default for CampaignConfig {
             retries: 0,
             checkpoint_every: 0,
             trace_out: None,
+            job_timeout_ms: 0,
+            job_cycle_budget: 0,
+            backoff_base_ms: 0,
         }
     }
 }
@@ -159,6 +201,10 @@ pub struct CampaignReport {
     /// this run. The sweep completes around them; exit status is the
     /// caller's call.
     pub quarantined: Vec<(String, String)>,
+    /// True when the final store flush failed even after retries: the
+    /// results live in memory + journal only (`files` is empty), and a
+    /// later `--resume` recovers them without re-simulation.
+    pub degraded: bool,
 }
 
 impl CampaignReport {
@@ -203,6 +249,13 @@ impl CampaignReport {
                 let _ = write!(out, "\n  {key}: {reason}");
             }
         }
+        if self.degraded {
+            let _ = write!(
+                out,
+                "\nstore DEGRADED: flush failed, results held in journal only — \
+                 re-run with --resume once the disk recovers"
+            );
+        }
         out
     }
 }
@@ -215,6 +268,91 @@ struct JobRecovery<'a> {
     every: u64,
     /// Resume from `path` when it exists.
     resume: bool,
+}
+
+/// Shared resilience counters for one campaign run, exported as
+/// `campaign.{timeouts,backoff_ms,checkpoint.save_failures}` metrics.
+/// SeqCst: all cold paths, and it keeps them off detlint's
+/// Relaxed-ordering audit list.
+#[derive(Default)]
+struct ResilienceCounters {
+    /// Job attempts cancelled by a deadline (wall or cycle budget).
+    timeouts: AtomicU64,
+    /// Total milliseconds slept in retry backoff.
+    backoff_ms: AtomicU64,
+    /// Periodic checkpoint saves that failed (degraded, job continued).
+    checkpoint_failures: AtomicU64,
+}
+
+/// Cycle-budget slice used by the deadline watchdog when no checkpoint
+/// interval is configured: small enough that a deadline is noticed
+/// promptly, large enough that the slicing overhead is noise.
+const WATCHDOG_CHUNK_CYCLES: u64 = 512;
+/// Upper bound on any single retry-backoff sleep.
+const MAX_BACKOFF_MS: u64 = 10_000;
+
+/// Per-job deadline + backoff policy shared by every attempt.
+struct JobLimits<'a> {
+    /// Wall-clock deadline per attempt in ms (0 = off).
+    wall_ms: u64,
+    /// Deterministic per-attempt cycle budget (0 = off).
+    cycle_budget: u64,
+    /// Base for exponential retry backoff in ms (0 = off).
+    backoff_base_ms: u64,
+    counters: &'a ResilienceCounters,
+}
+
+impl JobLimits<'_> {
+    /// Does any deadline require the chunked (sliced) run loop?
+    fn active(&self) -> bool {
+        self.wall_ms > 0 || self.cycle_budget > 0
+    }
+
+    /// Deadline check at a slice boundary. The cycle budget is checked
+    /// first so that when both deadlines are configured the verdict of
+    /// a deterministic overrun never depends on host speed.
+    fn check(&self, started: Instant, cycle: u64) -> Result<(), String> {
+        if self.cycle_budget > 0 && cycle >= self.cycle_budget {
+            self.counters.timeouts.fetch_add(1, Ordering::SeqCst);
+            return Err(format!(
+                "job deadline: cycle budget exceeded ({cycle} >= {} cycles)",
+                self.cycle_budget
+            ));
+        }
+        if self.wall_ms > 0 {
+            let ms = started.elapsed().as_millis() as u64;
+            if ms >= self.wall_ms {
+                self.counters.timeouts.fetch_add(1, Ordering::SeqCst);
+                return Err(format!(
+                    "job deadline: wall clock exceeded ({ms}ms >= {}ms) at cycle {cycle}",
+                    self.wall_ms
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    /// Degrade a failed periodic checkpoint save: warn + count, never
+    /// fail the job — a checkpoint is a recovery optimization, and the
+    /// job's result is produced and journaled regardless.
+    fn note_checkpoint_failure(&self, path: &Path, e: &dyn std::fmt::Display) {
+        self.counters.checkpoint_failures.fetch_add(1, Ordering::SeqCst);
+        eprintln!("warning: checkpoint save {}: {e}; continuing without", path.display());
+    }
+}
+
+/// Deterministic exponential backoff with seeded jitter: attempt `k`
+/// sleeps `base·2^k + jitter` ms where the jitter comes from a
+/// SplitMix64 stream seeded by (job hash, attempt) — reproducible for
+/// a given job, decorrelated across the sweep so retries don't
+/// stampede in lockstep.
+fn backoff_delay_ms(base: u64, attempt: u32, job_hash: u64) -> u64 {
+    let exp = base.saturating_mul(1u64 << attempt.min(10));
+    let jitter = SplitMix64::new(
+        job_hash ^ u64::from(attempt + 1).wrapping_mul(0x9e37_79b9_7f4a_7c15),
+    )
+    .next_below(base.max(1));
+    exp.saturating_add(jitter).min(MAX_BACKOFF_MS)
 }
 
 /// Simulate one job at the given effective thread count (on the session
@@ -237,15 +375,12 @@ fn run_job(
     hash: u64,
     effective_threads: usize,
     rec: &JobRecovery<'_>,
+    limits: &JobLimits<'_>,
 ) -> Result<(JobRecord, Option<AttributionLedger>), String> {
-    // fault-injection hook (crash-safety tests + CI smoke job): any job
-    // whose key contains the marker panics instead of simulating,
-    // exercising the retry → quarantine path through the public API
-    if let Ok(marker) = std::env::var("PARSIM_FAULT_INJECT") {
-        if !marker.is_empty() && spec.key().contains(&marker) {
-            panic!("fault injection: job {}", spec.key());
-        }
-    }
+    // Fault injection is no longer an ad-hoc env hook here: it goes
+    // through the typed `crate::faults` plan API (armed by the CLI /
+    // chaos harness), whose cycle/pool/I-O hooks fire inside the
+    // session run below at exact, replayable trigger points.
     let gpu = spec.build_gpu()?;
     let resume = rec.resume && rec.path.exists();
     // per-job wall-time attribution for the campaign's metrics.jsonl:
@@ -278,15 +413,22 @@ fn run_job(
             }
             Err(e) => return Err(e),
         };
-        if rec.every > 0 {
+        if rec.every > 0 || limits.active() {
+            let started = Instant::now();
+            let chunk = if rec.every > 0 { rec.every } else { WATCHDOG_CHUNK_CYCLES };
             loop {
                 match session
-                    .run(StopCondition::CycleBudget(rec.every))
+                    .run(StopCondition::CycleBudget(chunk))
                     .map_err(|e| e.to_string())?
                 {
                     SessionStatus::Finished => break,
                     SessionStatus::Running => {
-                        session.save_snapshot(rec.path).map_err(|e| e.to_string())?;
+                        limits.check(started, session.cluster_cycle())?;
+                        if rec.every > 0 {
+                            if let Err(e) = session.save_snapshot(rec.path) {
+                                limits.note_checkpoint_failure(rec.path, &e);
+                            }
+                        }
                     }
                 }
             }
@@ -321,12 +463,19 @@ fn run_job(
         }
         Err(e) => return Err(e),
     };
-    if rec.every > 0 {
+    if rec.every > 0 || limits.active() {
+        let started = Instant::now();
+        let chunk = if rec.every > 0 { rec.every } else { WATCHDOG_CHUNK_CYCLES };
         loop {
-            match session.run(StopCondition::CycleBudget(rec.every)).map_err(|e| e.to_string())? {
+            match session.run(StopCondition::CycleBudget(chunk)).map_err(|e| e.to_string())? {
                 SessionStatus::Finished => break,
                 SessionStatus::Running => {
-                    session.save_snapshot(rec.path).map_err(|e| e.to_string())?;
+                    limits.check(started, session.gpu_cycle())?;
+                    if rec.every > 0 {
+                        if let Err(e) = session.save_snapshot(rec.path) {
+                            limits.note_checkpoint_failure(rec.path, &e);
+                        }
+                    }
                 }
             }
         }
@@ -356,12 +505,15 @@ fn panic_message(payload: &(dyn std::any::Any + Send)) -> &str {
 ///
 /// Each retry starts clean: the job's checkpoint is deleted between
 /// attempts, since a deterministic failure would otherwise just replay
-/// from the checkpoint into the same failure.
+/// from the checkpoint into the same failure. Between attempts the
+/// worker sleeps an exponential backoff with deterministic seeded
+/// jitter ([`backoff_delay_ms`]) when one is configured.
 fn run_job_isolated(
     spec: &JobSpec,
     hash: u64,
     effective_threads: usize,
     rec: &JobRecovery<'_>,
+    limits: &JobLimits<'_>,
     retries: u32,
 ) -> Result<(JobRecord, Option<AttributionLedger>), String> {
     let mut last = String::new();
@@ -369,8 +521,9 @@ fn run_job_isolated(
         // the inner thread pool re-raises worker panics on this thread
         // after its join barrier completes, so one boundary here sees
         // both caller-share and worker panics — and the pool stays usable
-        let out =
-            catch_unwind(AssertUnwindSafe(|| run_job(spec, hash, effective_threads, rec)));
+        let out = catch_unwind(AssertUnwindSafe(|| {
+            run_job(spec, hash, effective_threads, rec, limits)
+        }));
         match out {
             Ok(Ok(record)) => return Ok(record),
             Ok(Err(e)) => last = e,
@@ -384,6 +537,11 @@ fn run_job_isolated(
                 retries + 1,
                 spec.key()
             );
+            if limits.backoff_base_ms > 0 {
+                let delay = backoff_delay_ms(limits.backoff_base_ms, attempt, hash);
+                limits.counters.backoff_ms.fetch_add(delay, Ordering::SeqCst);
+                std::thread::sleep(Duration::from_millis(delay));
+            }
         }
     }
     Err(last)
@@ -402,6 +560,77 @@ fn journal_warn(res: std::io::Result<()>) {
     if let Err(e) = res {
         eprintln!("warning: journal append: {e}");
     }
+}
+
+/// What the degraded-mode store flush observed.
+struct FlushOutcome {
+    /// Files the store wrote on the attempt that finally succeeded
+    /// (empty when every attempt failed).
+    files: Vec<String>,
+    /// Failed flush attempts (0 on the happy path).
+    failures: u64,
+    /// Failures classified as out-of-disk (ENOSPC).
+    enospc: u64,
+    /// Failures classified as short writes.
+    short_writes: u64,
+    /// 1 when a retry succeeded after at least one failure.
+    recovered: u64,
+    /// Error from the last attempt when the flush never succeeded.
+    last_error: Option<String>,
+}
+
+/// Flush the store with graceful degradation: a failed flush (ENOSPC,
+/// short write, any I/O error) does NOT abort the campaign. Results are
+/// already durable in the write-ahead journal and live in memory, so we
+/// retry a few times with a short pause (disk pressure is often
+/// transient), and if the disk never recovers we return a degraded
+/// outcome — the sweep's report stays intact and a later `--resume`
+/// rebuilds the store files from the journal.
+fn flush_store_degraded(store: &ResultStore, dir: &Path) -> FlushOutcome {
+    const FLUSH_ATTEMPTS: u32 = 3;
+    let mut out = FlushOutcome {
+        files: Vec::new(),
+        failures: 0,
+        enospc: 0,
+        short_writes: 0,
+        recovered: 0,
+        last_error: None,
+    };
+    for attempt in 0..FLUSH_ATTEMPTS {
+        match store.flush() {
+            Ok(files) => {
+                out.files = files;
+                out.last_error = None;
+                if out.failures > 0 {
+                    out.recovered = 1;
+                    eprintln!(
+                        "[campaign] store flush recovered on attempt {}",
+                        attempt + 1
+                    );
+                }
+                return out;
+            }
+            Err(e) => {
+                out.failures += 1;
+                match &e {
+                    SnapshotError::NoSpace { .. } => out.enospc += 1,
+                    SnapshotError::ShortWrite { .. } => out.short_writes += 1,
+                    _ => {}
+                }
+                out.last_error = Some(e.to_string());
+                eprintln!(
+                    "warning: store flush {} (attempt {}/{FLUSH_ATTEMPTS}): {e}; \
+                     results held in memory + journal",
+                    dir.display(),
+                    attempt + 1
+                );
+                if attempt + 1 < FLUSH_ATTEMPTS {
+                    std::thread::sleep(Duration::from_millis(40 << attempt));
+                }
+            }
+        }
+    }
+    out
 }
 
 /// Execute a campaign: open the store under `out_root/<campaign name>`,
@@ -517,11 +746,22 @@ pub fn run_campaign(
     };
     let ckpt_dir = dir.join("checkpoints");
 
+    let counters = ResilienceCounters::default();
+    let limits = JobLimits {
+        wall_ms: cfg.job_timeout_ms,
+        cycle_budget: cfg.job_cycle_budget,
+        backoff_base_ms: cfg.backoff_base_ms,
+        counters: &counters,
+    };
+
     let t0 = Instant::now();
     let outcomes = run_ordered(todo.len(), workers, |i| {
         let (_, job, hash) = todo[i];
         let effective = job.threads.min(threads_per_job);
         let key = job.key();
+        // scope any armed fault plan's job filter to this job for the
+        // whole dispatch — journal appends included
+        let _fault_scope = crate::faults::job_scope(&key);
         with_journal(&|j| j.log_start(&key, hash));
         let ckpt_path = ckpt_dir.join(format!("{hash:016x}.snap"));
         let recovery = JobRecovery {
@@ -530,7 +770,7 @@ pub fn run_campaign(
             resume: cfg.resume,
         };
         let tj = Instant::now();
-        let outcome = run_job_isolated(job, hash, effective, &recovery, cfg.retries);
+        let outcome = run_job_isolated(job, hash, effective, &recovery, &limits, cfg.retries);
         if let Some(m) = &tracer {
             let ev = TraceEvent::wall_span(
                 key.as_str(),
@@ -580,7 +820,16 @@ pub fn run_campaign(
             JobOutcome::Quarantined { key, reason } => quarantined.push((key, reason)),
         }
     }
-    let files = store.flush().map_err(|e| format!("flush store {}: {e}", dir.display()))?;
+    let flush = flush_store_degraded(&store, &dir);
+    let degraded = flush.last_error.is_some();
+    if degraded {
+        eprintln!(
+            "warning: store degraded: {}; results survive in the journal — \
+             re-run with --resume once the disk recovers",
+            flush.last_error.as_deref().unwrap_or("flush failed")
+        );
+    }
+    let files = flush.files;
 
     // campaign-level telemetry: a metrics.jsonl snapshot next to the
     // store (same registry + JSONL surface as `parsim run
@@ -609,6 +858,28 @@ pub fn run_campaign(
         }
         reg.counter("campaign.snapshot.saves", snap_saves);
         reg.counter("campaign.snapshot.bytes_written", snap_bytes);
+        // resilience counters: always exported so dashboards see an
+        // explicit zero rather than a missing series
+        reg.counter("campaign.timeouts", counters.timeouts.load(Ordering::SeqCst));
+        reg.counter("campaign.backoff_ms", counters.backoff_ms.load(Ordering::SeqCst));
+        reg.counter(
+            "campaign.checkpoint.save_failures",
+            counters.checkpoint_failures.load(Ordering::SeqCst),
+        );
+        reg.counter("campaign.degraded_flushes", flush.failures);
+        if flush.failures > 0 {
+            reg.counter("campaign.degraded.enospc", flush.enospc);
+            reg.counter("campaign.degraded.short_writes", flush.short_writes);
+            reg.counter("campaign.degraded.recovered", flush.recovered);
+        }
+        // fold the fault-injection ledger in when a plan is armed; an
+        // armed-but-empty plan contributes nothing, keeping the
+        // zero-fault metrics surface byte-identical to an unarmed run
+        if let Some(frep) = crate::faults::report() {
+            if !frep.entries.is_empty() {
+                frep.fill_metrics(&mut reg);
+            }
+        }
         let body = crate::stats::export::metrics_jsonl(0, &reg);
         if let Err(e) = std::fs::write(dir.join("metrics.jsonl"), body) {
             eprintln!("warning: write {}: {e}", dir.join("metrics.jsonl").display());
@@ -639,6 +910,7 @@ pub fn run_campaign(
         out_dir: dir,
         recovered,
         quarantined,
+        degraded,
     })
 }
 

@@ -19,9 +19,9 @@
 
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
-use std::io;
 use std::path::{Path, PathBuf};
 
+use crate::engine::snapshot::SnapshotError;
 use crate::stats::export::{jsonl_str, jsonl_u64, parse_flat_json, JsonScalar};
 use crate::stats::GpuStats;
 
@@ -386,13 +386,52 @@ impl ResultStore {
     /// leaves either the old file or the new one, never a torn hybrid,
     /// and an acknowledged flush survives power loss. Returns the file
     /// names written.
-    pub fn flush(&self) -> io::Result<Vec<String>> {
+    ///
+    /// Failures are **typed** ([`SnapshotError`]): ENOSPC and short
+    /// writes are classified with the file and operation named, so the
+    /// campaign's graceful-degradation logic can tell "disk full, keep
+    /// the sweep running on the journal" from a scheduler bug. Fault
+    /// injection consults the `store` site (see [`crate::faults`])
+    /// before each file write.
+    pub fn flush(&self) -> Result<Vec<String>, SnapshotError> {
         let mut written = Vec::new();
         for (name, content) in
             [(RESULTS_JSONL, self.render_jsonl()), (RESULTS_CSV, self.render_csv())]
         {
-            crate::engine::snapshot::write_atomic(&self.dir.join(name), content.as_bytes())
-                .map_err(|e| io::Error::new(io::ErrorKind::Other, e.to_string()))?;
+            let path = self.dir.join(name);
+            let mut bytes = content.into_bytes();
+            if crate::faults::enabled() {
+                match crate::faults::on_write(crate::faults::FaultSite::Store, &path, bytes.len())
+                {
+                    Some(crate::faults::WriteFault::Error(e)) => {
+                        return Err(SnapshotError::classify(
+                            "store flush",
+                            &path,
+                            bytes.len() as u64,
+                            &e,
+                        ));
+                    }
+                    Some(crate::faults::WriteFault::Short { wrote, .. }) => {
+                        // A torn temp file, like a crash mid-flush; the
+                        // previous results file stays intact (atomic
+                        // rename never happened).
+                        let _ = std::fs::write(path.with_extension("tmp"), &bytes[..wrote]);
+                        return Err(SnapshotError::ShortWrite {
+                            op: "store flush",
+                            path: path.display().to_string(),
+                            wrote: wrote as u64,
+                            expected: bytes.len() as u64,
+                        });
+                    }
+                    Some(crate::faults::WriteFault::CorruptBit { bit }) => {
+                        // Lands "successfully" but corrupt: the next
+                        // `open` quarantines the damaged line.
+                        bytes[(bit / 8) as usize] ^= 1 << (bit % 8);
+                    }
+                    None => {}
+                }
+            }
+            crate::engine::snapshot::write_atomic(&path, &bytes)?;
             written.push(name.to_string());
         }
         Ok(written)

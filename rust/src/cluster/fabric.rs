@@ -195,6 +195,13 @@ impl Fabric {
         self.guard.assert_sequential("Fabric::eject");
         let p = self.eject[dst].pop_front();
         if let Some(pkt) = p {
+            // Fault-injection trigger (`fabric` site): panics on the
+            // N-th delivered packet. Runs in the cluster's sequential
+            // phase, so the ordinal is deterministic; one atomic load
+            // when disarmed.
+            if crate::faults::enabled() {
+                crate::faults::on_fabric_event();
+            }
             self.in_flight -= 1;
             self.stats.packets_delivered += 1;
             self.stats.bytes_delivered += pkt.size_bytes as u64;

@@ -556,6 +556,12 @@ impl GpuSim {
     pub(crate) fn cycle_sequential_pre(&mut self) {
         let now = self.gpu_cycle;
         let n_sms = self.sms.len();
+        // Fault-injection trigger point (sequential, so an injected
+        // panic or stall lands at a deterministic cycle): one atomic
+        // load per cycle when disarmed, nothing else.
+        if crate::faults::enabled() {
+            crate::faults::on_cycle(now);
+        }
         self.profiler.begin_cycle();
 
         // ---- doIcntToSm: deliver arrived replies to SM in-ports ----

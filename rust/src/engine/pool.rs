@@ -477,6 +477,13 @@ fn worker_loop(sh: Arc<Shared>, wid: usize) {
             // leave every later region one worker short. Catch, stash
             // the payload for the caller to re-raise, keep serving.
             let r = catch_unwind(AssertUnwindSafe(|| {
+                // Fault injection (`pool` site): a worker-panic armed at
+                // the sequential point fires here, inside the region, so
+                // the containment machinery above is exercised end to
+                // end. Lock-free; one atomic load when disarmed.
+                if crate::faults::take_worker_panic() {
+                    panic!("injected fault: worker panic inside parallel region");
+                }
                 run_region(&sh, wid, &f, n, schedule, threads);
             }));
             if let Some(t) = t_busy {

@@ -107,6 +107,30 @@ pub enum SnapshotError {
     /// Structurally invalid content (wrong section marker, impossible
     /// lengths, out-of-range enum tags, …).
     Corrupt { section: &'static str, detail: String },
+    /// The filesystem is out of space (errno 28). Classified out of the
+    /// generic `Io` bucket so the campaign's degradation logic can keep
+    /// the sweep running instead of failing it.
+    NoSpace { op: &'static str, path: String },
+    /// A write landed fewer bytes than requested (torn output). `wrote`
+    /// is 0 when the exact count is unknown.
+    ShortWrite { op: &'static str, path: String, wrote: u64, expected: u64 },
+}
+
+impl SnapshotError {
+    /// Classify an `io::Error` from `op` on `path` into the typed
+    /// variant naming the actual cause: ENOSPC (errno 28) and short
+    /// writes get their own variants — the campaign's quarantine
+    /// reasons and degradation metrics depend on seeing them —
+    /// everything else stays a generic `Io` with the path embedded.
+    pub fn classify(op: &'static str, path: &Path, expected: u64, e: &std::io::Error) -> Self {
+        if e.raw_os_error() == Some(28) {
+            SnapshotError::NoSpace { op, path: path.display().to_string() }
+        } else if e.kind() == std::io::ErrorKind::WriteZero {
+            SnapshotError::ShortWrite { op, path: path.display().to_string(), wrote: 0, expected }
+        } else {
+            SnapshotError::Io(format!("{op} {}: {e}", path.display()))
+        }
+    }
 }
 
 impl fmt::Display for SnapshotError {
@@ -140,6 +164,12 @@ impl fmt::Display for SnapshotError {
             }
             SnapshotError::Corrupt { section, detail } => {
                 write!(f, "snapshot corrupt in section {section:?}: {detail}")
+            }
+            SnapshotError::NoSpace { op, path } => {
+                write!(f, "no space left on device (ENOSPC, errno 28) during {op} of {path}")
+            }
+            SnapshotError::ShortWrite { op, path, wrote, expected } => {
+                write!(f, "short write during {op} of {path}: {wrote} of {expected} byte(s)")
             }
         }
     }
@@ -251,8 +281,43 @@ impl SnapWriter {
 }
 
 /// Atomic durable file write (tmp + fsync + rename + dir fsync). Shared
-/// by snapshots and the campaign store/journal.
+/// by snapshots and the campaign store/journal. Write failures are
+/// classified ([`SnapshotError::classify`]): ENOSPC and short writes
+/// surface as their own variants, not a generic `Io`.
+///
+/// Fault injection: `.snap` writes consult the `snapshot` fault site
+/// (one atomic load when disarmed — see [`crate::faults`]); a `corrupt`
+/// fault flips one seeded bit in the buffer before it lands, producing
+/// a checksum-failing file the restore path must reject. The store's
+/// own writes are hooked at the `store` site in `campaign/store.rs`,
+/// so the two sites never double-fire on one write.
 pub fn write_atomic(path: &Path, bytes: &[u8]) -> Result<(), SnapshotError> {
+    let mut corrupted: Option<Vec<u8>> = None;
+    if crate::faults::enabled() && path.extension().is_some_and(|e| e == "snap") {
+        match crate::faults::on_write(crate::faults::FaultSite::Snapshot, path, bytes.len()) {
+            Some(crate::faults::WriteFault::Error(e)) => {
+                return Err(SnapshotError::classify("snapshot write", path, bytes.len() as u64, &e));
+            }
+            Some(crate::faults::WriteFault::Short { wrote, .. }) => {
+                // Leave a torn temp file behind, like a crash mid-write
+                // would, then report the typed failure.
+                let _ = fs::write(path.with_extension("tmp"), &bytes[..wrote]);
+                return Err(SnapshotError::ShortWrite {
+                    op: "snapshot write",
+                    path: path.display().to_string(),
+                    wrote: wrote as u64,
+                    expected: bytes.len() as u64,
+                });
+            }
+            Some(crate::faults::WriteFault::CorruptBit { bit }) => {
+                let mut flipped = bytes.to_vec();
+                flipped[(bit / 8) as usize] ^= 1 << (bit % 8);
+                corrupted = Some(flipped);
+            }
+            None => {}
+        }
+    }
+    let bytes = corrupted.as_deref().unwrap_or(bytes);
     let dir = path.parent().filter(|p| !p.as_os_str().is_empty());
     if let Some(d) = dir {
         fs::create_dir_all(d)
@@ -263,9 +328,9 @@ pub fn write_atomic(path: &Path, bytes: &[u8]) -> Result<(), SnapshotError> {
         let mut f = fs::File::create(&tmp)
             .map_err(|e| SnapshotError::Io(format!("create {}: {e}", tmp.display())))?;
         f.write_all(bytes)
-            .map_err(|e| SnapshotError::Io(format!("write {}: {e}", tmp.display())))?;
+            .map_err(|e| SnapshotError::classify("write", &tmp, bytes.len() as u64, &e))?;
         f.sync_all()
-            .map_err(|e| SnapshotError::Io(format!("fsync {}: {e}", tmp.display())))?;
+            .map_err(|e| SnapshotError::classify("fsync", &tmp, bytes.len() as u64, &e))?;
     }
     fs::rename(&tmp, path).map_err(|e| {
         SnapshotError::Io(format!("rename {} -> {}: {e}", tmp.display(), path.display()))

@@ -1,0 +1,523 @@
+//! The `parsim chaos` harness: sweep a fault-plan matrix (site ×
+//! schedule × seed), run kill/recover cycles, and assert that every
+//! campaign **converges to a byte-identical store** with every injected
+//! fault accounted for.
+//!
+//! Each case runs a small campaign against a fault-free baseline of the
+//! same spec:
+//!
+//! | case              | site     | what it proves                                   |
+//! |-------------------|----------|--------------------------------------------------|
+//! | `cycle-panic`     | cycle    | mid-simulation panic → retry converges           |
+//! | `cycle-stall`     | cycle    | wedged job → wall-clock deadline → retry         |
+//! | `pool-panic`      | pool     | worker panic inside a parallel region contained  |
+//! | `snapshot-io`     | snapshot | checkpoint save failure degrades, job completes  |
+//! | `ckpt-corrupt`    | snapshot | corrupt checkpoint on resume → from-scratch      |
+//! | `store-enospc`    | store    | ENOSPC flush → degraded retry recovers           |
+//! | `journal-short`   | journal  | torn journal tail tolerated on resume            |
+//! | `journal-corrupt` | journal  | CRC-failing journal line dropped on resume       |
+//! | `fabric-panic`    | fabric   | packet-delivery panic on the cluster engine      |
+//! | `sigkill-resume`  | —        | real SIGKILL mid-campaign, `--resume` converges  |
+//!
+//! The journal cases additionally delete the flushed result files
+//! before a `--resume` pass, so recovery genuinely replays the damaged
+//! journal rather than cache-hitting the store. Every case's plan
+//! string lands in `<out>/plans.txt`; paste one into `parsim campaign
+//! --fault-plan '<plan>'` to replay a CI failure locally.
+
+use std::fmt::Write as _;
+use std::path::{Path, PathBuf};
+
+use crate::campaign::{
+    default_matrix, run_campaign, schedule_token, CampaignConfig, CampaignSpec, RESULTS_CSV,
+    RESULTS_JSONL,
+};
+use crate::config::{Schedule, StatsStrategy};
+use crate::trace::workloads::Scale;
+use crate::util::prng::SplitMix64;
+
+use super::{Fault, FaultKind, FaultPlan, FaultSite};
+
+/// What `run_chaos` sweeps.
+#[derive(Debug, Clone)]
+pub struct ChaosConfig {
+    /// Output root: per-case campaign dirs, `chaos_report.txt`,
+    /// `plans.txt`.
+    pub out: PathBuf,
+    /// Plan seeds; each jitters every case's trigger points. The sweep
+    /// runs `sites × schedules × seeds`.
+    pub seeds: Vec<u64>,
+    /// Restrict to these sites (empty = all). The SIGKILL case is
+    /// site-less and runs whenever `kill_exe` is set.
+    pub sites: Vec<FaultSite>,
+    /// Path to a `parsim` binary for the SIGKILL case (`None` skips it —
+    /// e.g. under `cargo test`, where re-spawning the test harness
+    /// would be wrong).
+    pub kill_exe: Option<PathBuf>,
+    /// Suppress per-case progress lines.
+    pub quiet: bool,
+}
+
+impl ChaosConfig {
+    /// Defaults: one seed, all sites, no SIGKILL case.
+    pub fn new(out: impl Into<PathBuf>) -> ChaosConfig {
+        ChaosConfig {
+            out: out.into(),
+            seeds: vec![0xC0FFEE],
+            sites: Vec::new(),
+            kill_exe: None,
+            quiet: true,
+        }
+    }
+}
+
+/// One executed chaos case.
+#[derive(Debug, Clone)]
+pub struct ChaosCase {
+    pub name: String,
+    /// The fault plan string (replay with `--fault-plan`).
+    pub plan: String,
+    pub passed: bool,
+    /// Convergence summary on success, failure reason otherwise.
+    pub detail: String,
+}
+
+/// Outcome of a chaos sweep.
+#[derive(Debug, Clone, Default)]
+pub struct ChaosReport {
+    pub cases: Vec<ChaosCase>,
+}
+
+impl ChaosReport {
+    /// True when every case converged with full fault accounting.
+    pub fn all_passed(&self) -> bool {
+        self.cases.iter().all(|c| c.passed)
+    }
+
+    /// Human-readable sweep summary, one line per case.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for c in &self.cases {
+            let _ = writeln!(
+                out,
+                "[{}] {}: {}\n    plan: {}",
+                if c.passed { "ok" } else { "FAIL" },
+                c.name,
+                c.detail,
+                c.plan
+            );
+        }
+        let failed = self.cases.iter().filter(|c| !c.passed).count();
+        let _ = writeln!(out, "chaos: {}/{} case(s) passed", self.cases.len() - failed, self.cases.len());
+        out
+    }
+}
+
+/// Everything one case needs; executed by [`execute_case`].
+struct CaseDef<'a> {
+    name: String,
+    plan: FaultPlan,
+    spec: &'a CampaignSpec,
+    baseline: &'a [u8],
+    ccfg: CampaignConfig,
+    /// Delete the flushed result files, then re-run with `resume: true`
+    /// — recovery must come from the (damaged) journal.
+    resume_after_delete: bool,
+    /// Pre-stage a corrupt checkpoint for the first job; the resumed
+    /// run must fall back to from-scratch and delete it.
+    stage_corrupt_checkpoint: bool,
+    /// `(metric, minimum)` asserted against the final `metrics.jsonl`.
+    require_metric: Option<(&'static str, u64)>,
+}
+
+/// The two-job single-GPU campaign every non-cluster case runs.
+/// `threads = 2` keeps the SM-phase pool engaged (the `pool` site lives
+/// in its worker loop).
+fn small_spec(schedule: Schedule) -> CampaignSpec {
+    CampaignSpec::matrix(
+        "chaos",
+        &["hotspot", "nn"],
+        Scale::Ci,
+        &["tiny"],
+        &[2],
+        &[schedule],
+        &[StatsStrategy::PerSm],
+        0xC0FFEE,
+    )
+}
+
+/// The one-job 2-GPU campaign the fabric case runs (tp_gemm on p2p is
+/// pinned by tests/campaign.rs to carry fabric traffic).
+fn cluster_spec(schedule: Schedule) -> CampaignSpec {
+    CampaignSpec::cluster_matrix(
+        "chaos",
+        &["tp_gemm"],
+        Scale::Ci,
+        &["tiny"],
+        &[2],
+        "p2p",
+        &[2],
+        &[schedule],
+        &[StatsStrategy::PerSm],
+        0xC0FFEE,
+    )
+}
+
+/// Concatenated store bytes (`results.jsonl` + `results.csv`) — the
+/// byte-identity oracle every case is judged against.
+fn store_bytes(dir: &Path) -> Result<Vec<u8>, String> {
+    let mut out = Vec::new();
+    for name in [RESULTS_JSONL, RESULTS_CSV] {
+        let path = dir.join(name);
+        let bytes =
+            std::fs::read(&path).map_err(|e| format!("read {}: {e}", path.display()))?;
+        out.extend_from_slice(&bytes);
+        out.push(0);
+    }
+    Ok(out)
+}
+
+/// Read one counter out of a campaign's `metrics.jsonl` (plain string
+/// scan — the export format is pinned by `stats::export`).
+fn metric_value(dir: &Path, name: &str) -> Option<u64> {
+    let text = std::fs::read_to_string(dir.join("metrics.jsonl")).ok()?;
+    let needle = format!("\"metric\":\"{name}\"");
+    for line in text.lines() {
+        if line.contains(&needle) {
+            let rest = line.split("\"value\":").nth(1)?;
+            let digits: String = rest.chars().take_while(|c| c.is_ascii_digit()).collect();
+            return digits.parse().ok();
+        }
+    }
+    None
+}
+
+/// Run a fault-free campaign of `spec` and return its store bytes.
+fn baseline_bytes(
+    spec: &CampaignSpec,
+    root: &Path,
+    ccfg: &CampaignConfig,
+) -> Result<Vec<u8>, String> {
+    let _ = std::fs::remove_dir_all(root);
+    let report = run_campaign(spec, root, ccfg)?;
+    if !report.quarantined.is_empty() {
+        return Err(format!(
+            "fault-free baseline quarantined {} job(s): {}",
+            report.quarantined.len(),
+            report.quarantined[0].1
+        ));
+    }
+    store_bytes(&report.out_dir)
+}
+
+fn single_fault(site: FaultSite, kind: FaultKind, at: u64, ms: u64, seed: u64) -> FaultPlan {
+    FaultPlan {
+        seed,
+        faults: vec![Fault { site, kind, at, count: 1, ms, job: String::new() }],
+    }
+}
+
+/// Execute one case: clean dir, optional staging, arm, run, optional
+/// damaged-journal resume pass, byte-compare, account every fault.
+fn execute_case(out_root: &Path, def: &CaseDef<'_>) -> ChaosCase {
+    let root = out_root.join(&def.name);
+    let _ = std::fs::remove_dir_all(&root);
+    let plan = def.plan.to_string();
+    let result = (|| -> Result<String, String> {
+        let mut staged_ckpt: Option<PathBuf> = None;
+        if def.stage_corrupt_checkpoint {
+            let job = &def.spec.jobs()[0];
+            let hash = job.content_hash()?;
+            let dir = root.join(&def.spec.name).join("checkpoints");
+            std::fs::create_dir_all(&dir).map_err(|e| format!("mkdir {}: {e}", dir.display()))?;
+            let path = dir.join(format!("{hash:016x}.snap"));
+            std::fs::write(&path, b"chaos: deliberately corrupt checkpoint")
+                .map_err(|e| format!("stage {}: {e}", path.display()))?;
+            staged_ckpt = Some(path);
+        }
+        let guard = super::arm(&def.plan);
+        let report = run_campaign(def.spec, &root, &def.ccfg)?;
+        if !report.quarantined.is_empty() {
+            return Err(format!(
+                "{} job(s) quarantined: {}",
+                report.quarantined.len(),
+                report.quarantined[0].1
+            ));
+        }
+        if report.degraded {
+            return Err("store left degraded (flush never recovered)".into());
+        }
+        let dir = root.join(&def.spec.name);
+        if def.resume_after_delete {
+            // emulate the post-crash state: flushed results gone, only
+            // the (fault-damaged) journal survives
+            let _ = std::fs::remove_file(dir.join(RESULTS_JSONL));
+            let _ = std::fs::remove_file(dir.join(RESULTS_CSV));
+            let rcfg = CampaignConfig { resume: true, ..def.ccfg.clone() };
+            let r2 = run_campaign(def.spec, &root, &rcfg)?;
+            if !r2.quarantined.is_empty() {
+                return Err(format!("resume pass quarantined {} job(s)", r2.quarantined.len()));
+            }
+        }
+        let got = store_bytes(&dir)?;
+        if got != def.baseline {
+            return Err("recovered store differs from the fault-free baseline".into());
+        }
+        if let Some(ckpt) = staged_ckpt {
+            if ckpt.exists() {
+                return Err(format!("stale corrupt checkpoint survived: {}", ckpt.display()));
+            }
+        }
+        let frep = guard.report();
+        if !frep.all_fired() {
+            return Err(format!("silent drop — scheduled fault never fired:\n{}", frep.render()));
+        }
+        if let Some((metric, min)) = def.require_metric {
+            match metric_value(&dir, metric) {
+                Some(v) if v >= min => {}
+                got => return Err(format!("metric {metric} = {got:?}, want >= {min}")),
+            }
+        }
+        Ok(format!("store byte-identical, {} firing(s) accounted", frep.total_fired()))
+    })();
+    match result {
+        Ok(detail) => ChaosCase { name: def.name.clone(), plan, passed: true, detail },
+        Err(detail) => ChaosCase { name: def.name.clone(), plan, passed: false, detail },
+    }
+}
+
+/// The real-kill case: spawn `parsim campaign` as a subprocess, SIGKILL
+/// it mid-sweep, then `--resume` in-process and byte-compare against a
+/// fault-free baseline of the same matrix.
+fn sigkill_case(exe: &Path, out_root: &Path) -> ChaosCase {
+    let name = "sigkill-resume".to_string();
+    let result = (|| -> Result<String, String> {
+        let spec = default_matrix("chaos-kill");
+        let ccfg = CampaignConfig { workers: 2, quiet: true, ..CampaignConfig::default() };
+        let base_root = out_root.join("sigkill-baseline");
+        let baseline = baseline_bytes(&spec, &base_root, &ccfg)?;
+
+        let run_root = out_root.join("sigkill-run");
+        let _ = std::fs::remove_dir_all(&run_root);
+        let mut child = std::process::Command::new(exe)
+            .arg("campaign")
+            .args(["--name", "chaos-kill", "--workers", "2", "--checkpoint-every", "200"])
+            .arg("--quiet")
+            .arg("--out")
+            .arg(&run_root)
+            .env_remove("PARSIM_FAULT_PLAN")
+            .stdout(std::process::Stdio::null())
+            .stderr(std::process::Stdio::null())
+            .spawn()
+            .map_err(|e| format!("spawn {}: {e}", exe.display()))?;
+        std::thread::sleep(std::time::Duration::from_millis(400));
+        // SIGKILL: no cleanup, no atexit — exactly the crash the journal
+        // and checkpoints exist for. (If the sweep already finished, the
+        // resume below is a pure cache-hit pass; still a valid check.)
+        let _ = child.kill();
+        let _ = child.wait();
+
+        let rcfg = CampaignConfig { resume: true, ..ccfg };
+        let report = run_campaign(&spec, &run_root, &rcfg)?;
+        if !report.quarantined.is_empty() {
+            return Err(format!("resume quarantined {} job(s)", report.quarantined.len()));
+        }
+        let got = store_bytes(&report.out_dir)?;
+        if got != baseline {
+            return Err("resumed store differs from the fault-free baseline".into());
+        }
+        Ok(format!(
+            "killed mid-sweep, resume recovered {} + simulated {} job(s), store byte-identical",
+            report.recovered + report.cache_hits,
+            report.simulated
+        ))
+    })();
+    match result {
+        Ok(detail) => ChaosCase { name, plan: "(SIGKILL, no fault plan)".into(), passed: true, detail },
+        Err(detail) => ChaosCase { name, plan: "(SIGKILL, no fault plan)".into(), passed: false, detail },
+    }
+}
+
+/// Run the chaos sweep: `sites × {static, dynamic} × seeds`, plus the
+/// SIGKILL case when a binary is provided. Writes `chaos_report.txt`
+/// and `plans.txt` under `cfg.out`. Never aborts on a failing case —
+/// the report carries every verdict.
+pub fn run_chaos(cfg: &ChaosConfig) -> Result<ChaosReport, String> {
+    std::fs::create_dir_all(&cfg.out)
+        .map_err(|e| format!("mkdir {}: {e}", cfg.out.display()))?;
+    let base_ccfg = CampaignConfig { workers: 1, quiet: true, ..CampaignConfig::default() };
+    let retry_ccfg = CampaignConfig { retries: 2, ..base_ccfg.clone() };
+    let want = |site: FaultSite| cfg.sites.is_empty() || cfg.sites.contains(&site);
+
+    let mut report = ChaosReport::default();
+    for (sched_idx, sched) in
+        [Schedule::Static { chunk: 0 }, Schedule::Dynamic { chunk: 1 }].into_iter().enumerate()
+    {
+        let tok = schedule_token(sched).replace(':', "");
+        let spec = small_spec(sched);
+        let base = baseline_bytes(&spec, &cfg.out.join(format!("baseline-{tok}")), &base_ccfg)?;
+        let cspec = cluster_spec(sched);
+        let cbase = if want(FaultSite::Fabric) {
+            baseline_bytes(&cspec, &cfg.out.join(format!("baseline-cluster-{tok}")), &base_ccfg)?
+        } else {
+            Vec::new()
+        };
+
+        for &seed in &cfg.seeds {
+            let mut rng = SplitMix64::new(seed.wrapping_add(sched_idx as u64));
+            let cycle_at = 1 + rng.next_below(24);
+            let stall_at = 1 + rng.next_below(24);
+            let pool_at = 1 + rng.next_below(24);
+            let journal_at = 1 + rng.next_below(3);
+            let store_at = 1 + rng.next_below(2);
+            let fabric_at = 1 + rng.next_below(8);
+            let case_name = |tag: &str| format!("{tag}-{tok}-seed{seed:x}");
+
+            let mut defs: Vec<CaseDef<'_>> = Vec::new();
+            if want(FaultSite::Cycle) {
+                defs.push(CaseDef {
+                    name: case_name("cycle-panic"),
+                    plan: single_fault(FaultSite::Cycle, FaultKind::Panic, cycle_at, 0, seed),
+                    spec: &spec,
+                    baseline: &base,
+                    ccfg: retry_ccfg.clone(),
+                    resume_after_delete: false,
+                    stage_corrupt_checkpoint: false,
+                    require_metric: None,
+                });
+                defs.push(CaseDef {
+                    name: case_name("cycle-stall"),
+                    plan: single_fault(FaultSite::Cycle, FaultKind::Stall, stall_at, 2500, seed),
+                    spec: &spec,
+                    baseline: &base,
+                    ccfg: CampaignConfig {
+                        job_timeout_ms: 1500,
+                        checkpoint_every: 100,
+                        ..retry_ccfg.clone()
+                    },
+                    resume_after_delete: false,
+                    stage_corrupt_checkpoint: false,
+                    require_metric: Some(("campaign.timeouts", 1)),
+                });
+            }
+            if want(FaultSite::Pool) {
+                defs.push(CaseDef {
+                    name: case_name("pool-panic"),
+                    plan: single_fault(FaultSite::Pool, FaultKind::Panic, pool_at, 0, seed),
+                    spec: &spec,
+                    baseline: &base,
+                    ccfg: retry_ccfg.clone(),
+                    resume_after_delete: false,
+                    stage_corrupt_checkpoint: false,
+                    require_metric: None,
+                });
+            }
+            if want(FaultSite::Snapshot) {
+                defs.push(CaseDef {
+                    name: case_name("snapshot-io"),
+                    plan: single_fault(FaultSite::Snapshot, FaultKind::Io, 1, 0, seed),
+                    spec: &spec,
+                    baseline: &base,
+                    ccfg: CampaignConfig { checkpoint_every: 32, ..retry_ccfg.clone() },
+                    resume_after_delete: false,
+                    stage_corrupt_checkpoint: false,
+                    require_metric: Some(("campaign.checkpoint.save_failures", 1)),
+                });
+                defs.push(CaseDef {
+                    name: case_name("ckpt-corrupt"),
+                    plan: FaultPlan::empty(seed),
+                    spec: &spec,
+                    baseline: &base,
+                    ccfg: CampaignConfig { resume: true, ..retry_ccfg.clone() },
+                    resume_after_delete: false,
+                    stage_corrupt_checkpoint: true,
+                    require_metric: None,
+                });
+            }
+            if want(FaultSite::Store) {
+                defs.push(CaseDef {
+                    name: case_name("store-enospc"),
+                    plan: single_fault(FaultSite::Store, FaultKind::Enospc, store_at, 0, seed),
+                    spec: &spec,
+                    baseline: &base,
+                    ccfg: base_ccfg.clone(),
+                    resume_after_delete: false,
+                    stage_corrupt_checkpoint: false,
+                    require_metric: Some(("campaign.degraded.enospc", 1)),
+                });
+            }
+            if want(FaultSite::Journal) {
+                defs.push(CaseDef {
+                    name: case_name("journal-short"),
+                    plan: single_fault(FaultSite::Journal, FaultKind::Short, journal_at, 0, seed),
+                    spec: &spec,
+                    baseline: &base,
+                    ccfg: base_ccfg.clone(),
+                    resume_after_delete: true,
+                    stage_corrupt_checkpoint: false,
+                    require_metric: None,
+                });
+                defs.push(CaseDef {
+                    name: case_name("journal-corrupt"),
+                    plan: single_fault(FaultSite::Journal, FaultKind::Corrupt, journal_at, 0, seed),
+                    spec: &spec,
+                    baseline: &base,
+                    ccfg: base_ccfg.clone(),
+                    resume_after_delete: true,
+                    stage_corrupt_checkpoint: false,
+                    require_metric: None,
+                });
+            }
+            if want(FaultSite::Fabric) {
+                defs.push(CaseDef {
+                    name: case_name("fabric-panic"),
+                    plan: single_fault(FaultSite::Fabric, FaultKind::Panic, fabric_at, 0, seed),
+                    spec: &cspec,
+                    baseline: &cbase,
+                    ccfg: retry_ccfg.clone(),
+                    resume_after_delete: false,
+                    stage_corrupt_checkpoint: false,
+                    require_metric: None,
+                });
+            }
+
+            for def in &defs {
+                let case = execute_case(&cfg.out, def);
+                if !cfg.quiet {
+                    eprintln!(
+                        "[chaos] {} {}: {}",
+                        if case.passed { "ok" } else { "FAIL" },
+                        case.name,
+                        case.detail
+                    );
+                }
+                report.cases.push(case);
+            }
+        }
+    }
+
+    if let Some(exe) = &cfg.kill_exe {
+        let case = sigkill_case(exe, &cfg.out);
+        if !cfg.quiet {
+            eprintln!(
+                "[chaos] {} {}: {}",
+                if case.passed { "ok" } else { "FAIL" },
+                case.name,
+                case.detail
+            );
+        }
+        report.cases.push(case);
+    }
+
+    let mut plans = String::new();
+    for c in &report.cases {
+        let _ = writeln!(plans, "{}\t{}", c.name, c.plan);
+    }
+    let report_path = cfg.out.join("chaos_report.txt");
+    std::fs::write(&report_path, report.render())
+        .map_err(|e| format!("write {}: {e}", report_path.display()))?;
+    let plans_path = cfg.out.join("plans.txt");
+    std::fs::write(&plans_path, plans)
+        .map_err(|e| format!("write {}: {e}", plans_path.display()))?;
+    Ok(report)
+}

@@ -1,0 +1,878 @@
+//! Deterministic, seeded **fault injection** for crash-safety testing.
+//!
+//! PR 8 made campaigns crash-safe (snapshots, a write-ahead journal,
+//! retry/quarantine); this module makes those recovery paths *provable*
+//! by injecting typed faults at exact, replayable trigger points. A
+//! [`FaultPlan`] is a small list of [`Fault`]s, each naming a site, a
+//! kind, and a trigger; the whole plan serializes to a one-line string
+//! (see [`FaultPlan::parse`]) so any failure observed in CI can be
+//! replayed locally from its plan string alone.
+//!
+//! # Design
+//!
+//! - **Zero cost when disabled.** Every hook begins with
+//!   [`enabled()`] — a single atomic load of a static flag that is only
+//!   set while a non-empty plan is armed. A zero-fault plan never arms,
+//!   so an armed-but-empty run takes the exact same instruction path as
+//!   a build without the subsystem: bit-identical output is guaranteed
+//!   by construction, and pinned by `tests/faults.rs`.
+//! - **Deterministic.** Triggers are exact (a GPU cycle, or the N-th
+//!   matching write); randomized choices (seeded plan generation, the
+//!   corrupted bit index) come from [`SplitMix64`], never from ambient
+//!   entropy. Replaying a plan string reproduces the same faults.
+//! - **No silent drops.** Every fault carries fired/seen counters; the
+//!   [`FaultReport`] accounts for each one, and the chaos harness
+//!   treats an un-fired fault as a failure.
+//! - **Hot-path safe.** The only hook reachable from a parallel region
+//!   ([`take_worker_panic`]) is lock-free (SeqCst atomics, no mutex),
+//!   so it cannot introduce a phase-safety violation; all other hooks
+//!   run in sequential phases or on the I/O path.
+//!
+//! # Sites and kinds
+//!
+//! | site       | where the hook lives                   | kinds                        |
+//! |------------|----------------------------------------|------------------------------|
+//! | `cycle`    | engine sequential point (per cycle)    | `panic`, `stall`             |
+//! | `pool`     | thread-pool worker loop                | `panic`                      |
+//! | `snapshot` | `engine/snapshot.rs::write_atomic`     | `io`, `short`, `enospc`, `corrupt` |
+//! | `store`    | `campaign/store.rs::flush`             | `io`, `short`, `enospc`, `corrupt` |
+//! | `journal`  | `campaign/journal.rs::append`          | `io`, `short`, `enospc`, `corrupt` |
+//! | `fabric`   | `cluster/fabric.rs::eject` (per packet)| `panic`                      |
+//!
+//! A `short` fault on the journal leaves a **torn tail** on disk (half
+//! a frame, no newline) — exactly what a mid-append crash produces —
+//! which `campaign/journal.rs::load` must tolerate. A `corrupt` fault
+//! flips one seeded bit in the buffer before it is written, producing
+//! a checksum-failing snapshot or a CRC-failing journal line.
+//!
+//! # Trigger semantics
+//!
+//! `at` is a **GPU cycle** for `cycle`/`pool` faults (fires on the
+//! first cycle `>= at`, robust to deterministic idle-cycle jumps) and a
+//! **1-based occurrence ordinal** for I/O and fabric faults (the N-th
+//! matching event since arming). `count` bounds total firings (default
+//! 1: the fault is transient and a retry succeeds; `count` larger than
+//! the retry budget models a deterministic, persistent failure). `job`
+//! is a substring filter on the current job key (set by the campaign
+//! scheduler via [`job_scope`]); empty matches any context.
+//!
+//! # Quickstart
+//!
+//! ```no_run
+//! use parsim::faults::{self, FaultPlan};
+//!
+//! // Panic the nn job at cycle 100, once; retry must recover it.
+//! let plan = FaultPlan::parse("v1;seed=c0ffee;fault:site=cycle,kind=panic,at=100,job=wl=nn ").unwrap();
+//! let guard = faults::arm(&plan);
+//! // ... run a campaign; the scheduler retries the panicked job ...
+//! let report = guard.report();
+//! assert!(report.all_fired(), "injected fault never triggered:\n{}", report.render());
+//! ```
+
+use std::fmt;
+use std::io;
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Mutex, MutexGuard};
+
+use crate::util::prng::SplitMix64;
+
+pub mod chaos;
+
+// ---------------------------------------------------------------------------
+// Plan model
+// ---------------------------------------------------------------------------
+
+/// Where a fault is injected. See the module docs for the site table.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultSite {
+    /// Engine sequential point, once per GPU cycle.
+    Cycle,
+    /// Thread-pool worker loop (panics inside a parallel region).
+    Pool,
+    /// Atomic snapshot/checkpoint writes (`write_atomic` on `.snap`).
+    Snapshot,
+    /// Result-store flushes (`results.jsonl` / `results.csv`).
+    Store,
+    /// Write-ahead journal appends.
+    Journal,
+    /// Inter-GPU fabric packet delivery.
+    Fabric,
+}
+
+impl FaultSite {
+    /// Every site, in canonical order (the chaos harness sweeps these).
+    pub const ALL: [FaultSite; 6] = [
+        FaultSite::Cycle,
+        FaultSite::Pool,
+        FaultSite::Snapshot,
+        FaultSite::Store,
+        FaultSite::Journal,
+        FaultSite::Fabric,
+    ];
+
+    /// Canonical lowercase name used in plan strings and metrics.
+    pub fn name(self) -> &'static str {
+        match self {
+            FaultSite::Cycle => "cycle",
+            FaultSite::Pool => "pool",
+            FaultSite::Snapshot => "snapshot",
+            FaultSite::Store => "store",
+            FaultSite::Journal => "journal",
+            FaultSite::Fabric => "fabric",
+        }
+    }
+
+    /// Parse a canonical site name.
+    pub fn parse(s: &str) -> Option<FaultSite> {
+        FaultSite::ALL.into_iter().find(|site| site.name() == s)
+    }
+}
+
+impl fmt::Display for FaultSite {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// What happens when a fault fires.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// `panic!` at the trigger point (contained by the retry path).
+    Panic,
+    /// Return an injected generic I/O error before writing anything.
+    Io,
+    /// Write only half the buffer, then fail — leaves a torn tail.
+    Short,
+    /// Return an injected `ENOSPC` (errno 28) before writing anything.
+    Enospc,
+    /// Flip one seeded bit in the buffer, then write "successfully".
+    Corrupt,
+    /// Sleep `ms` milliseconds once at the trigger cycle (wedged job).
+    Stall,
+}
+
+impl FaultKind {
+    /// Canonical lowercase name used in plan strings.
+    pub fn name(self) -> &'static str {
+        match self {
+            FaultKind::Panic => "panic",
+            FaultKind::Io => "io",
+            FaultKind::Short => "short",
+            FaultKind::Enospc => "enospc",
+            FaultKind::Corrupt => "corrupt",
+            FaultKind::Stall => "stall",
+        }
+    }
+
+    /// Parse a canonical kind name.
+    pub fn parse(s: &str) -> Option<FaultKind> {
+        [
+            FaultKind::Panic,
+            FaultKind::Io,
+            FaultKind::Short,
+            FaultKind::Enospc,
+            FaultKind::Corrupt,
+            FaultKind::Stall,
+        ]
+        .into_iter()
+        .find(|kind| kind.name() == s)
+    }
+
+    /// Is this kind meaningful at `site`? (Checked at parse time so a
+    /// plan that could never fire is rejected up front.)
+    pub fn valid_at(self, site: FaultSite) -> bool {
+        match site {
+            FaultSite::Cycle => matches!(self, FaultKind::Panic | FaultKind::Stall),
+            FaultSite::Pool | FaultSite::Fabric => matches!(self, FaultKind::Panic),
+            FaultSite::Snapshot | FaultSite::Store | FaultSite::Journal => matches!(
+                self,
+                FaultKind::Io | FaultKind::Short | FaultKind::Enospc | FaultKind::Corrupt
+            ),
+        }
+    }
+}
+
+impl fmt::Display for FaultKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// One scheduled fault: site + kind + trigger.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Fault {
+    /// Injection site.
+    pub site: FaultSite,
+    /// Failure mode.
+    pub kind: FaultKind,
+    /// Trigger point: GPU cycle for `cycle`/`pool`, 1-based occurrence
+    /// ordinal for I/O and fabric sites.
+    pub at: u64,
+    /// Maximum firings before the fault disarms (default 1).
+    pub count: u32,
+    /// Stall duration in milliseconds (`kind == Stall` only).
+    pub ms: u64,
+    /// Substring filter on the current job key; empty matches any
+    /// context (including the store flush on the main thread). Must
+    /// not contain `,` or `;` (the plan-string separators).
+    pub job: String,
+}
+
+impl fmt::Display for Fault {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "site={},kind={},at={}", self.site, self.kind, self.at)?;
+        if self.count != 1 {
+            write!(f, ",count={}", self.count)?;
+        }
+        if self.kind == FaultKind::Stall {
+            write!(f, ",ms={}", self.ms)?;
+        }
+        if !self.job.is_empty() {
+            write!(f, ",job={}", self.job)?;
+        }
+        Ok(())
+    }
+}
+
+/// A serializable schedule of faults. `Display` and [`FaultPlan::parse`]
+/// round-trip, so the plan string printed by CI is enough to replay a
+/// failure locally.
+///
+/// Grammar (one line, `;`-separated segments):
+///
+/// ```text
+/// v1;seed=<hex>;fault:site=<site>,kind=<kind>,at=<n>[,count=<n>][,ms=<n>][,job=<substr>]
+/// ```
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FaultPlan {
+    /// Seed for derived randomness (e.g. which bit a `corrupt` fault
+    /// flips). Also the seed [`FaultPlan::seeded`] was generated from.
+    pub seed: u64,
+    /// Scheduled faults, fired independently of each other.
+    pub faults: Vec<Fault>,
+}
+
+impl FaultPlan {
+    /// An empty plan: arming it never sets the enabled flag, so the run
+    /// is bit-identical to one without the subsystem.
+    pub fn empty(seed: u64) -> FaultPlan {
+        FaultPlan { seed, faults: Vec::new() }
+    }
+
+    /// True when the plan schedules no faults.
+    pub fn is_empty(&self) -> bool {
+        self.faults.is_empty()
+    }
+
+    /// Generate a single-fault plan from `seed` alone: site, kind, and
+    /// trigger are all drawn from [`SplitMix64`], so the same seed
+    /// always yields the same plan.
+    pub fn seeded(seed: u64) -> FaultPlan {
+        let mut rng = SplitMix64::new(seed);
+        let site = FaultSite::ALL[rng.next_below(FaultSite::ALL.len() as u64) as usize];
+        let kinds: &[FaultKind] = match site {
+            FaultSite::Cycle => &[FaultKind::Panic, FaultKind::Stall],
+            FaultSite::Pool | FaultSite::Fabric => &[FaultKind::Panic],
+            _ => &[FaultKind::Io, FaultKind::Short, FaultKind::Enospc, FaultKind::Corrupt],
+        };
+        let kind = kinds[rng.next_below(kinds.len() as u64) as usize];
+        let at = match site {
+            FaultSite::Cycle | FaultSite::Pool => 1 + rng.next_below(512),
+            _ => 1 + rng.next_below(3),
+        };
+        let ms = if kind == FaultKind::Stall { 100 + rng.next_below(400) } else { 0 };
+        FaultPlan {
+            seed,
+            faults: vec![Fault { site, kind, at, count: 1, ms, job: String::new() }],
+        }
+    }
+
+    /// Parse a plan string (the inverse of `Display`). Rejects unknown
+    /// versions, sites, kinds, and kind/site combinations that could
+    /// never fire.
+    pub fn parse(s: &str) -> Result<FaultPlan, String> {
+        // Trim line endings only: a trailing space can be meaningful
+        // inside a `job=` substring filter.
+        let mut segments = s.trim_matches(|c| c == '\n' || c == '\r').split(';');
+        match segments.next() {
+            Some("v1") => {}
+            other => return Err(format!("fault plan must start with 'v1', got {other:?}")),
+        }
+        let mut plan = FaultPlan::empty(0);
+        for seg in segments {
+            if seg.is_empty() {
+                continue;
+            }
+            if let Some(hex) = seg.strip_prefix("seed=") {
+                plan.seed = u64::from_str_radix(hex.trim_start_matches("0x"), 16)
+                    .map_err(|e| format!("bad seed {hex:?}: {e}"))?;
+                continue;
+            }
+            let body = seg
+                .strip_prefix("fault:")
+                .ok_or_else(|| format!("unknown plan segment {seg:?}"))?;
+            let mut fault = Fault {
+                site: FaultSite::Cycle,
+                kind: FaultKind::Panic,
+                at: 1,
+                count: 1,
+                ms: 0,
+                job: String::new(),
+            };
+            let (mut got_site, mut got_kind) = (false, false);
+            for field in body.split(',') {
+                let (key, value) = field
+                    .split_once('=')
+                    .ok_or_else(|| format!("bad fault field {field:?} (want key=value)"))?;
+                match key {
+                    "site" => {
+                        fault.site = FaultSite::parse(value)
+                            .ok_or_else(|| format!("unknown fault site {value:?}"))?;
+                        got_site = true;
+                    }
+                    "kind" => {
+                        fault.kind = FaultKind::parse(value)
+                            .ok_or_else(|| format!("unknown fault kind {value:?}"))?;
+                        got_kind = true;
+                    }
+                    "at" => {
+                        fault.at =
+                            value.parse().map_err(|e| format!("bad at={value:?}: {e}"))?;
+                    }
+                    "count" => {
+                        fault.count =
+                            value.parse().map_err(|e| format!("bad count={value:?}: {e}"))?;
+                    }
+                    "ms" => {
+                        fault.ms =
+                            value.parse().map_err(|e| format!("bad ms={value:?}: {e}"))?;
+                    }
+                    "job" => {
+                        fault.job = value.to_string();
+                    }
+                    other => return Err(format!("unknown fault field {other:?}")),
+                }
+            }
+            if !got_site || !got_kind {
+                return Err(format!("fault {body:?} must name both site= and kind="));
+            }
+            if !fault.kind.valid_at(fault.site) {
+                return Err(format!(
+                    "kind={} is not meaningful at site={} (would never fire)",
+                    fault.kind, fault.site
+                ));
+            }
+            plan.faults.push(fault);
+        }
+        Ok(plan)
+    }
+}
+
+impl fmt::Display for FaultPlan {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "v1;seed={:x}", self.seed)?;
+        for fault in &self.faults {
+            write!(f, ";fault:{fault}")?;
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Armed state
+// ---------------------------------------------------------------------------
+
+/// Fast-path flag: true only while a **non-empty** plan is armed. Every
+/// injection hook checks this first, so disarmed runs pay one atomic
+/// load per hook and touch nothing else.
+static ARMED: AtomicBool = AtomicBool::new(false);
+/// One-shot trigger for a `pool` fault: set at the sequential point,
+/// consumed (lock-free) by the first pool worker to observe it.
+static PARALLEL_PANIC: AtomicBool = AtomicBool::new(false);
+/// Serializes armed sections across tests sharing one process.
+static ARM_LOCK: Mutex<()> = Mutex::new(());
+/// Live fire-accounting for the armed plan.
+static STATE: Mutex<Option<FaultState>> = Mutex::new(None);
+
+thread_local! {
+    /// The job key faults are scoped to on this thread (set by the
+    /// campaign scheduler around each job attempt).
+    static JOB_KEY: std::cell::RefCell<String> = std::cell::RefCell::new(String::new());
+}
+
+struct Shot {
+    fault: Fault,
+    /// Matching events observed (I/O + fabric ordinal counting).
+    seen: u64,
+    /// Times this fault actually fired.
+    fired: u32,
+}
+
+struct FaultState {
+    seed: u64,
+    shots: Vec<Shot>,
+    log: Vec<String>,
+}
+
+impl FaultState {
+    fn new(plan: &FaultPlan) -> FaultState {
+        FaultState {
+            seed: plan.seed,
+            shots: plan
+                .faults
+                .iter()
+                .map(|fault| Shot { fault: fault.clone(), seen: 0, fired: 0 })
+                .collect(),
+            log: Vec::new(),
+        }
+    }
+}
+
+fn state_lock() -> MutexGuard<'static, Option<FaultState>> {
+    STATE.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+/// True while a non-empty [`FaultPlan`] is armed. Inlined into every
+/// hook as the zero-cost-when-disabled gate.
+#[inline]
+pub fn enabled() -> bool {
+    ARMED.load(Ordering::Acquire)
+}
+
+/// Holds the plan armed until dropped; also serializes armed sections
+/// (tests in one binary run in parallel — only one plan can be live).
+/// Dropping disarms and discards the fire log, so call
+/// [`ArmGuard::report`] first if you need the accounting.
+pub struct ArmGuard {
+    _lock: MutexGuard<'static, ()>,
+}
+
+impl ArmGuard {
+    /// Snapshot the fire accounting for the armed plan.
+    pub fn report(&self) -> FaultReport {
+        report().unwrap_or_else(|| FaultReport { entries: Vec::new(), log: Vec::new() })
+    }
+}
+
+impl Drop for ArmGuard {
+    fn drop(&mut self) {
+        ARMED.store(false, Ordering::SeqCst);
+        PARALLEL_PANIC.store(false, Ordering::SeqCst);
+        *state_lock() = None;
+    }
+}
+
+/// Arm `plan` process-wide and return a guard that disarms on drop.
+/// An empty plan installs accounting but never sets the enabled flag,
+/// keeping the hot path untouched.
+pub fn arm(plan: &FaultPlan) -> ArmGuard {
+    let lock = ARM_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    PARALLEL_PANIC.store(false, Ordering::SeqCst);
+    *state_lock() = Some(FaultState::new(plan));
+    ARMED.store(!plan.is_empty(), Ordering::SeqCst);
+    ArmGuard { _lock: lock }
+}
+
+/// Scope guard binding the current thread to a job key so job-filtered
+/// faults match. The campaign scheduler wraps each job attempt in one.
+pub struct JobScope {
+    prev: String,
+}
+
+/// Bind the current thread to `key` until the returned guard drops.
+pub fn job_scope(key: &str) -> JobScope {
+    let prev = JOB_KEY.with(|k| std::mem::replace(&mut *k.borrow_mut(), key.to_string()));
+    JobScope { prev }
+}
+
+impl Drop for JobScope {
+    fn drop(&mut self) {
+        let prev = std::mem::take(&mut self.prev);
+        JOB_KEY.with(|k| *k.borrow_mut() = prev);
+    }
+}
+
+fn current_job() -> String {
+    JOB_KEY.with(|k| k.borrow().clone())
+}
+
+fn job_matches(filter: &str, job: &str) -> bool {
+    filter.is_empty() || job.contains(filter)
+}
+
+// ---------------------------------------------------------------------------
+// Injection hooks
+// ---------------------------------------------------------------------------
+
+/// What an I/O-site hook should do instead of a clean write.
+pub enum WriteFault {
+    /// Fail before writing anything.
+    Error(io::Error),
+    /// Write only the first `wrote` bytes (leaving a torn tail on
+    /// disk), then fail with `error`.
+    Short { wrote: usize, error: io::Error },
+    /// Flip bit `bit` of the buffer, then write normally.
+    CorruptBit { bit: u64 },
+}
+
+/// Consulted by the store/journal/snapshot write paths before each
+/// write of `len` bytes to `path`. Returns the injected behaviour for
+/// the first matching fault, if any.
+#[inline]
+pub fn on_write(site: FaultSite, path: &Path, len: usize) -> Option<WriteFault> {
+    if !enabled() {
+        return None;
+    }
+    let job = current_job();
+    let mut st = state_lock();
+    let st = st.as_mut()?;
+    let seed = st.seed;
+    for i in 0..st.shots.len() {
+        let fault = &st.shots[i].fault;
+        if fault.site != site || !job_matches(&fault.job, &job) {
+            continue;
+        }
+        st.shots[i].seen += 1;
+        let shot = &st.shots[i];
+        if shot.seen < shot.fault.at || shot.fired >= shot.fault.count {
+            continue;
+        }
+        st.shots[i].fired += 1;
+        let kind = st.shots[i].fault.kind;
+        st.log.push(format!(
+            "fired site={site} kind={kind} path={} len={len} job='{job}'",
+            path.display()
+        ));
+        let out = match kind {
+            FaultKind::Io => WriteFault::Error(io::Error::new(
+                io::ErrorKind::Other,
+                format!("injected I/O error ({site} write to {})", path.display()),
+            )),
+            FaultKind::Enospc => WriteFault::Error(io::Error::from_raw_os_error(28)),
+            FaultKind::Short => {
+                let wrote = len / 2;
+                WriteFault::Short {
+                    wrote,
+                    error: io::Error::new(
+                        io::ErrorKind::WriteZero,
+                        format!(
+                            "injected short write: wrote {wrote} of {len} bytes to {}",
+                            path.display()
+                        ),
+                    ),
+                }
+            }
+            FaultKind::Corrupt => {
+                if len == 0 {
+                    continue;
+                }
+                let mut rng = SplitMix64::new(seed ^ shot_mix(i as u64, st.shots[i].seen));
+                WriteFault::CorruptBit { bit: rng.next_below(len as u64 * 8) }
+            }
+            // Panic/Stall never validate at I/O sites.
+            FaultKind::Panic | FaultKind::Stall => continue,
+        };
+        return Some(out);
+    }
+    None
+}
+
+fn shot_mix(index: u64, seen: u64) -> u64 {
+    index.wrapping_mul(0x9e37_79b9_7f4a_7c15).wrapping_add(seen)
+}
+
+/// Engine sequential-point hook, called once per GPU cycle. Fires
+/// `cycle`-site faults (panic / stall) and arms `pool`-site faults for
+/// the next parallel region. May panic (by design); the campaign retry
+/// path contains it.
+#[inline]
+pub fn on_cycle(cycle: u64) {
+    if !enabled() {
+        return;
+    }
+    enum Action {
+        Panic(String),
+        Stall(u64),
+        ArmPool,
+    }
+    let job = current_job();
+    let mut actions = Vec::new();
+    {
+        let mut st = state_lock();
+        let Some(st) = st.as_mut() else { return };
+        for i in 0..st.shots.len() {
+            let fault = &st.shots[i].fault;
+            let cycle_site = matches!(fault.site, FaultSite::Cycle | FaultSite::Pool);
+            if !cycle_site
+                || !job_matches(&fault.job, &job)
+                || cycle < fault.at
+                || st.shots[i].fired >= fault.count
+            {
+                continue;
+            }
+            st.shots[i].fired += 1;
+            let fault = &st.shots[i].fault;
+            st.log.push(format!(
+                "fired site={} kind={} cycle={cycle} job='{job}'",
+                fault.site, fault.kind
+            ));
+            match (fault.site, fault.kind) {
+                (FaultSite::Pool, _) => actions.push(Action::ArmPool),
+                (_, FaultKind::Stall) => actions.push(Action::Stall(fault.ms)),
+                _ => actions.push(Action::Panic(format!(
+                    "injected fault: panic at cycle {cycle} (job '{job}')"
+                ))),
+            }
+        }
+    }
+    for action in actions {
+        match action {
+            Action::ArmPool => PARALLEL_PANIC.store(true, Ordering::SeqCst),
+            Action::Stall(ms) => std::thread::sleep(std::time::Duration::from_millis(ms)),
+            Action::Panic(msg) => panic!("{msg}"),
+        }
+    }
+}
+
+/// Pool-worker hook: lock-free, one atomic load when disarmed. Returns
+/// true exactly once after a `pool` fault was armed by [`on_cycle`];
+/// the caller (the worker loop) panics, exercising the pool's panic
+/// containment end to end.
+#[inline]
+pub fn take_worker_panic() -> bool {
+    enabled() && PARALLEL_PANIC.swap(false, Ordering::SeqCst)
+}
+
+/// Fabric hook, called per delivered packet (cluster sequential phase).
+/// Panics on the N-th matching delivery.
+#[inline]
+pub fn on_fabric_event() {
+    if !enabled() {
+        return;
+    }
+    let job = current_job();
+    let mut fire: Option<String> = None;
+    {
+        let mut st = state_lock();
+        let Some(st) = st.as_mut() else { return };
+        for i in 0..st.shots.len() {
+            let fault = &st.shots[i].fault;
+            if fault.site != FaultSite::Fabric || !job_matches(&fault.job, &job) {
+                continue;
+            }
+            st.shots[i].seen += 1;
+            let shot = &st.shots[i];
+            if shot.seen < shot.fault.at || shot.fired >= shot.fault.count {
+                continue;
+            }
+            st.shots[i].fired += 1;
+            st.log.push(format!("fired site=fabric kind=panic packet={} job='{job}'", shot.seen));
+            fire = Some(format!(
+                "injected fault: fabric panic at packet {} (job '{job}')",
+                shot.seen
+            ));
+            break;
+        }
+    }
+    if let Some(msg) = fire {
+        panic!("{msg}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Accounting
+// ---------------------------------------------------------------------------
+
+/// Per-fault accounting line in a [`FaultReport`].
+#[derive(Debug, Clone)]
+pub struct FaultReportEntry {
+    /// The scheduled fault.
+    pub fault: Fault,
+    /// Times it fired.
+    pub fired: u32,
+    /// Matching events observed (ordinal-counted sites only).
+    pub seen: u64,
+}
+
+/// Fire accounting for an armed plan: every scheduled fault appears,
+/// fired or not — the "no silent drops" contract.
+#[derive(Debug, Clone)]
+pub struct FaultReport {
+    /// One entry per scheduled fault, in plan order.
+    pub entries: Vec<FaultReportEntry>,
+    /// Chronological firing log (site, kind, trigger detail, job).
+    pub log: Vec<String>,
+}
+
+impl FaultReport {
+    /// True when every scheduled fault fired at least once.
+    pub fn all_fired(&self) -> bool {
+        self.entries.iter().all(|e| e.fired > 0)
+    }
+
+    /// Total firings across the plan.
+    pub fn total_fired(&self) -> u64 {
+        self.entries.iter().map(|e| u64::from(e.fired)).sum()
+    }
+
+    /// Human-readable accounting, one line per fault plus the log.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for e in &self.entries {
+            out.push_str(&format!(
+                "fault {} -> fired {}/{} (seen {})\n",
+                e.fault, e.fired, e.fault.count, e.seen
+            ));
+        }
+        for line in &self.log {
+            out.push_str("  ");
+            out.push_str(line);
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Export `faults.injected.*` counters into a metrics registry.
+    pub fn fill_metrics(&self, reg: &mut crate::telemetry::metrics::MetricsRegistry) {
+        reg.counter("faults.planned", self.entries.len() as u64);
+        reg.counter("faults.injected.total", self.total_fired());
+        for site in FaultSite::ALL {
+            let fired: u64 = self
+                .entries
+                .iter()
+                .filter(|e| e.fault.site == site)
+                .map(|e| u64::from(e.fired))
+                .sum();
+            if fired > 0 {
+                reg.counter(&format!("faults.injected.{site}"), fired);
+            }
+        }
+    }
+}
+
+/// Snapshot the fire accounting for the currently armed plan, if any.
+pub fn report() -> Option<FaultReport> {
+    let st = state_lock();
+    let st = st.as_ref()?;
+    Some(FaultReport {
+        entries: st
+            .shots
+            .iter()
+            .map(|s| FaultReportEntry { fault: s.fault.clone(), fired: s.fired, seen: s.seen })
+            .collect(),
+        log: st.log.clone(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan_string_round_trips() {
+        let text = "v1;seed=c0ffee;fault:site=journal,kind=short,at=2;\
+                    fault:site=cycle,kind=panic,at=120,count=3,job=wl=nn ";
+        let plan = FaultPlan::parse(text).unwrap();
+        assert_eq!(plan.seed, 0xC0FFEE);
+        assert_eq!(plan.faults.len(), 2);
+        assert_eq!(plan.faults[1].job, "wl=nn ");
+        let rendered = plan.to_string();
+        assert_eq!(FaultPlan::parse(&rendered).unwrap(), plan);
+    }
+
+    #[test]
+    fn parse_rejects_nonsense() {
+        assert!(FaultPlan::parse("v2;seed=1").is_err());
+        assert!(FaultPlan::parse("v1;fault:site=nowhere,kind=panic,at=1").is_err());
+        assert!(FaultPlan::parse("v1;fault:site=journal,kind=panic,at=1").is_err());
+        assert!(FaultPlan::parse("v1;fault:kind=panic,at=1").is_err());
+    }
+
+    #[test]
+    fn seeded_plans_are_deterministic() {
+        let a = FaultPlan::seeded(42);
+        let b = FaultPlan::seeded(42);
+        assert_eq!(a, b);
+        assert_eq!(a.faults.len(), 1);
+        assert!(a.faults[0].kind.valid_at(a.faults[0].site));
+        assert_eq!(FaultPlan::parse(&a.to_string()).unwrap(), a);
+    }
+
+    #[test]
+    fn zero_fault_plan_never_arms() {
+        let guard = arm(&FaultPlan::empty(7));
+        assert!(!enabled());
+        assert!(on_write(FaultSite::Store, Path::new("x"), 10).is_none());
+        let report = guard.report();
+        assert!(report.entries.is_empty());
+        assert!(report.all_fired());
+    }
+
+    #[test]
+    fn write_fault_fires_on_ordinal_and_respects_count() {
+        let plan = FaultPlan::parse("v1;seed=1;fault:site=journal,kind=io,at=2").unwrap();
+        let guard = arm(&plan);
+        assert!(enabled());
+        let path = Path::new("journal.jsonl");
+        assert!(on_write(FaultSite::Journal, path, 8).is_none());
+        assert!(matches!(on_write(FaultSite::Journal, path, 8), Some(WriteFault::Error(_))));
+        // count=1: the third append is clean again.
+        assert!(on_write(FaultSite::Journal, path, 8).is_none());
+        // Wrong site never matches.
+        assert!(on_write(FaultSite::Store, path, 8).is_none());
+        let report = guard.report();
+        assert!(report.all_fired());
+        assert_eq!(report.total_fired(), 1);
+        assert_eq!(report.entries[0].seen, 3);
+    }
+
+    #[test]
+    fn job_filter_scopes_faults() {
+        let plan =
+            FaultPlan::parse("v1;seed=1;fault:site=snapshot,kind=enospc,at=1,job=wl=nn ").unwrap();
+        let guard = arm(&plan);
+        let path = Path::new("a.snap");
+        // Outside any job scope: no match.
+        assert!(on_write(FaultSite::Snapshot, path, 16).is_none());
+        {
+            let _scope = job_scope("wl=hotspot scale=ci");
+            assert!(on_write(FaultSite::Snapshot, path, 16).is_none());
+        }
+        {
+            let _scope = job_scope("wl=nn scale=ci");
+            match on_write(FaultSite::Snapshot, path, 16) {
+                Some(WriteFault::Error(e)) => assert_eq!(e.raw_os_error(), Some(28)),
+                other => panic!("expected injected ENOSPC, got {:?}", other.is_some()),
+            }
+        }
+        assert!(guard.report().all_fired());
+    }
+
+    #[test]
+    fn pool_fault_arms_and_is_taken_once() {
+        let plan = FaultPlan::parse("v1;seed=1;fault:site=pool,kind=panic,at=5").unwrap();
+        let guard = arm(&plan);
+        on_cycle(3);
+        assert!(!take_worker_panic());
+        on_cycle(5);
+        assert!(take_worker_panic());
+        assert!(!take_worker_panic());
+        // count=1: later cycles do not re-arm.
+        on_cycle(6);
+        assert!(!take_worker_panic());
+        assert!(guard.report().all_fired());
+    }
+
+    #[test]
+    fn corrupt_fault_picks_a_seeded_bit_in_range() {
+        let plan = FaultPlan::parse("v1;seed=9;fault:site=snapshot,kind=corrupt,at=1").unwrap();
+        let guard = arm(&plan);
+        match on_write(FaultSite::Snapshot, Path::new("a.snap"), 4) {
+            Some(WriteFault::CorruptBit { bit }) => assert!(bit < 32),
+            other => panic!("expected corrupt-bit fault, got {:?}", other.is_some()),
+        }
+        drop(guard);
+        assert!(!enabled());
+    }
+}

@@ -42,6 +42,8 @@ const VALUE_OPTS: &[&str] = &[
     "series-window", "series-out",
     // crash safety: run/cluster snapshots + campaign resumption
     "snapshot-out", "snapshot-every", "resume-from", "retries", "checkpoint-every",
+    // fault injection + campaign resilience (campaign/chaos)
+    "fault-plan", "job-timeout", "job-cycle-budget", "retry-backoff-ms", "seeds", "sites",
     // diverge probe: per-side overrides + self-test perturbation
     "threads-a", "threads-b", "schedule-a", "schedule-b", "perturb-at",
 ];
@@ -57,6 +59,8 @@ const FLAG_OPTS: &[&str] = &[
     "no-phase-guard",
     // `parsim profile --cluster`: ladder the multi-GPU engine instead
     "cluster",
+    // `parsim chaos`: skip the SIGKILL subprocess case
+    "no-kill",
 ];
 
 fn main() -> ExitCode {
@@ -84,6 +88,7 @@ fn main() -> ExitCode {
         "diverge" => cmd_diverge(&args),
         "validate" => cmd_validate(&args),
         "campaign" => cmd_campaign(&args),
+        "chaos" => cmd_chaos(&args),
         "bench" => cmd_bench(&args),
         "profile" => cmd_profile(&args),
         _ => {
@@ -118,6 +123,10 @@ fn print_help() {
          \x20               --perturb-at N self-test, --max-cycles budget)\n\
          \x20 validate      cross-check GEMM workloads against XLA artifacts\n\
          \x20 campaign      run a job matrix concurrently with a cached result store\n\
+         \x20 chaos         fault-injection sweep: inject panics, I/O errors, ENOSPC,\n\
+         \x20               corruption, stalls and a real SIGKILL across campaign runs;\n\
+         \x20               every case must converge to a byte-identical store\n\
+         \x20               (--out chaos_out --seeds a,b --sites cycle,store --no-kill)\n\
          \x20 bench         hot-path throughput: optimized vs reference engine,\n\
          \x20               fingerprint-checked; writes BENCH_hotpath.json (--json PATH);\n\
          \x20               --diff BASELINE [CURRENT] gates against a committed baseline\n\
@@ -165,7 +174,15 @@ fn print_help() {
          \x20               --retries N (retry budget; exhausted jobs are quarantined and\n\
          \x20               reported, the sweep continues)\n\
          \x20               --trace-out FILE (wall-clock Chrome trace of the campaign:\n\
-         \x20               one span per job + one per durable journal flush)"
+         \x20               one span per job + one per durable journal flush)\n\n\
+         resilience:     campaign: --job-timeout SECS (wall-clock deadline per attempt),\n\
+         \x20               --job-cycle-budget N (deterministic per-attempt deadline),\n\
+         \x20               --retry-backoff-ms BASE (exponential backoff with seeded\n\
+         \x20               jitter between retries); ENOSPC / failed store flushes degrade\n\
+         \x20               to journal-only mode instead of aborting the sweep\n\
+         \x20               --fault-plan 'v1;seed=..;fault:site=..,kind=..,at=..' (or the\n\
+         \x20               PARSIM_FAULT_PLAN env var) arms deterministic fault injection;\n\
+         \x20               replay any CI chaos failure from its printed plan string"
     );
 }
 
@@ -890,6 +907,31 @@ fn cmd_campaign(args: &Args) -> Result<(), String> {
         retries: args.get_u64("retries", 0).map_err(|e| e.to_string())? as u32,
         checkpoint_every: args.get_u64("checkpoint-every", 0).map_err(|e| e.to_string())?,
         trace_out: args.get("trace-out").map(std::path::PathBuf::from),
+        // --job-timeout is seconds on the CLI (a human-scale knob);
+        // the config field is milliseconds
+        job_timeout_ms: args
+            .get_u64("job-timeout", 0)
+            .map_err(|e| e.to_string())?
+            .saturating_mul(1000),
+        job_cycle_budget: args.get_u64("job-cycle-budget", 0).map_err(|e| e.to_string())?,
+        backoff_base_ms: args.get_u64("retry-backoff-ms", 0).map_err(|e| e.to_string())?,
+    };
+
+    // Fault injection: exactly one mechanism — a typed, replayable
+    // FaultPlan, from --fault-plan or the PARSIM_FAULT_PLAN env var
+    // (the CI chaos jobs use the env var so the plan also reaches
+    // subprocess campaigns).
+    let plan_text = args
+        .get("fault-plan")
+        .map(str::to_string)
+        .or_else(|| std::env::var("PARSIM_FAULT_PLAN").ok());
+    let fault_guard = match &plan_text {
+        Some(text) => {
+            let plan = parsim::faults::FaultPlan::parse(text)?;
+            eprintln!("fault plan armed: {plan}");
+            Some(parsim::faults::arm(&plan))
+        }
+        None => None,
     };
     eprintln!(
         "campaign {name:?}: {} job(s) ({} workload(s) × {} gpu preset(s) × {} gpu count(s) \
@@ -905,10 +947,61 @@ fn cmd_campaign(args: &Args) -> Result<(), String> {
     );
     let report = campaign::run_campaign(&spec, &out, &cfg)?;
     println!("{}", report.summary());
+    if let Some(guard) = &fault_guard {
+        let frep = guard.report();
+        if !frep.entries.is_empty() {
+            eprintln!("fault accounting:\n{}", frep.render());
+            if !frep.all_fired() {
+                return Err("fault plan had scheduled fault(s) that never fired".into());
+            }
+        }
+    }
     // the sweep completed around the quarantined jobs and the store was
     // flushed — but an incomplete result set must not exit 0
     if !report.quarantined.is_empty() {
         return Err(format!("{} job(s) quarantined", report.quarantined.len()));
+    }
+    Ok(())
+}
+
+/// `parsim chaos`: sweep the fault-injection matrix (site × schedule ×
+/// seed, plus a real SIGKILL/--resume cycle) and fail unless every case
+/// converges to a byte-identical store with every fault accounted for.
+fn cmd_chaos(args: &Args) -> Result<(), String> {
+    use parsim::faults::chaos::{run_chaos, ChaosConfig};
+    use parsim::faults::FaultSite;
+
+    let mut cfg = ChaosConfig::new(args.get("out").unwrap_or("chaos_out"));
+    cfg.quiet = args.flag("quiet");
+    if let Some(list) = args.get_list("seeds") {
+        cfg.seeds = list
+            .iter()
+            .map(|s| {
+                let t = s.trim_start_matches("0x");
+                u64::from_str_radix(t, 16).or_else(|_| s.parse())
+                    .map_err(|_| format!("bad --seeds entry {s:?}"))
+            })
+            .collect::<Result<_, _>>()?;
+    }
+    if let Some(list) = args.get_list("sites") {
+        cfg.sites = list
+            .iter()
+            .map(|s| {
+                FaultSite::parse(s).ok_or_else(|| format!("unknown --sites entry {s:?}"))
+            })
+            .collect::<Result<_, _>>()?;
+    }
+    // The SIGKILL case re-invokes this very binary as `parsim campaign`;
+    // --no-kill skips it (e.g. on hosts where spawning is restricted)
+    if !args.flag("no-kill") {
+        cfg.kill_exe = std::env::current_exe().ok();
+    }
+
+    let report = run_chaos(&cfg)?;
+    println!("{}", report.render());
+    println!("report: {}", cfg.out.join("chaos_report.txt").display());
+    if !report.all_passed() {
+        return Err("chaos sweep had failing case(s) — see the report for plan strings".into());
     }
     Ok(())
 }

@@ -339,12 +339,19 @@ fn mid_job_checkpoint_resume_matches_scratch_run() {
 
 /// Fault isolation: a deliberately panicking job is retried, then
 /// quarantined and reported — the rest of the sweep completes and
-/// flushes normally instead of aborting.
+/// flushes normally instead of aborting. Injection goes through the
+/// typed `faults::FaultPlan` API (the old `PARSIM_FAULT_INJECT` env
+/// hook is retired); `count` exceeding the retry budget models a
+/// deterministic, persistent failure.
 #[test]
 fn panicking_job_is_retried_then_quarantined_without_aborting_sweep() {
-    // the marker only matches this test's pathfinder job, so the hook is
-    // inert for every other (possibly concurrent) test in this process
-    std::env::set_var("PARSIM_FAULT_INJECT", "wl=pathfinder ");
+    // the job filter only matches this test's pathfinder job, so the
+    // plan is inert for every other job in the sweep
+    let plan = parsim::faults::FaultPlan::parse(
+        "v1;seed=1;fault:site=cycle,kind=panic,at=0,count=9,job=wl=pathfinder ",
+    )
+    .expect("valid plan");
+    let guard = parsim::faults::arm(&plan);
     let spec = CampaignSpec::new(
         "quarantine",
         vec![
@@ -355,20 +362,83 @@ fn panicking_job_is_retried_then_quarantined_without_aborting_sweep() {
     let out = tmp_dir("quarantine");
     let qcfg = CampaignConfig { retries: 1, ..cfg(2) };
     let r = run_campaign(&spec, &out, &qcfg);
-    std::env::remove_var("PARSIM_FAULT_INJECT");
     let r = r.expect("the sweep must survive a panicking job");
 
     assert_eq!(r.simulated, 1, "the healthy job completed");
     assert_eq!(r.quarantined.len(), 1, "the faulty job quarantined");
     let (key, reason) = &r.quarantined[0];
     assert!(key.contains("wl=pathfinder"), "{key}");
-    assert!(reason.contains("fault injection"), "panic payload surfaced: {reason}");
+    assert!(reason.contains("injected fault"), "panic payload surfaced: {reason}");
     assert!(r.summary().contains("quarantined 1 job(s):"), "{}", r.summary());
+    // both attempts fired and were accounted — no silent drops
+    let frep = guard.report();
+    assert!(frep.all_fired());
+    assert_eq!(frep.total_fired(), 2, "one firing per attempt:\n{}", frep.render());
     // the healthy record was flushed; the quarantined job left no record
     let store = parsim::campaign::ResultStore::open(&out.join("quarantine")).expect("store opens");
     assert_eq!(store.len(), 1);
     assert!(store.records().all(|rec| rec.workload == "nn"));
 
+    std::fs::remove_dir_all(&out).ok();
+}
+
+/// Retry checkpoint hygiene, part 1: a quarantined job must not leave a
+/// checkpoint behind — a deterministic failure would otherwise replay
+/// from the checkpoint straight back into the same failure forever.
+#[test]
+fn quarantined_job_leaves_no_checkpoint_between_attempts() {
+    let j = job("pathfinder", 1, Schedule::Static { chunk: 0 });
+    let hash = j.content_hash().expect("hashable job");
+    let plan = parsim::faults::FaultPlan::parse(
+        "v1;seed=1;fault:site=cycle,kind=panic,at=8,count=9,job=wl=pathfinder ",
+    )
+    .expect("valid plan");
+    let _guard = parsim::faults::arm(&plan);
+    let spec = CampaignSpec::new("hygiene", vec![j]);
+    let out = tmp_dir("hygiene");
+    // checkpoint-every 4 < fault cycle 8: every attempt saves at least
+    // one checkpoint before it panics
+    let qcfg = CampaignConfig { retries: 2, checkpoint_every: 4, ..cfg(1) };
+    let r = run_campaign(&spec, &out, &qcfg).expect("sweep survives");
+    assert_eq!(r.quarantined.len(), 1);
+    let ckpt = out.join("hygiene").join("checkpoints").join(format!("{hash:016x}.snap"));
+    assert!(
+        !ckpt.exists(),
+        "retry hygiene: checkpoint must be deleted between attempts and after quarantine"
+    );
+    std::fs::remove_dir_all(&out).ok();
+}
+
+/// Retry checkpoint hygiene, part 2: a *corrupt* checkpoint present at
+/// resume falls back to a from-scratch run (and converges) instead of
+/// wedging or quarantining the job.
+#[test]
+fn corrupt_checkpoint_on_resume_falls_back_to_scratch() {
+    let j = job("nn", 2, Schedule::Dynamic { chunk: 1 });
+    let spec = CampaignSpec::new("ckptbad", vec![j.clone()]);
+
+    let base = tmp_dir("ckptbad_base");
+    let rb = run_campaign(&spec, &base, &cfg(1)).expect("scratch run");
+    let want = read(&rb.out_dir, RESULTS_JSONL);
+
+    let out = tmp_dir("ckptbad");
+    let dir = out.join("ckptbad");
+    let hash = j.content_hash().expect("hashable job");
+    let ckpt = dir.join("checkpoints").join(format!("{hash:016x}.snap"));
+    std::fs::create_dir_all(ckpt.parent().unwrap()).unwrap();
+    std::fs::write(&ckpt, b"garbage: not a parsim snapshot").unwrap();
+    let mut journal = Journal::open_append(&dir).expect("journal opens");
+    journal.log_start(&j.key(), hash).expect("start journaled");
+    drop(journal);
+
+    let resumed = CampaignConfig { resume: true, retries: 1, ..cfg(1) };
+    let r = run_campaign(&spec, &out, &resumed).expect("resumed run");
+    assert_eq!(r.simulated, 1, "job restarted from scratch");
+    assert!(r.quarantined.is_empty(), "a corrupt checkpoint must not quarantine the job");
+    assert_eq!(read(&r.out_dir, RESULTS_JSONL), want, "fallback run is bit-identical");
+    assert!(!ckpt.exists(), "corrupt checkpoint discarded");
+
+    std::fs::remove_dir_all(&base).ok();
     std::fs::remove_dir_all(&out).ok();
 }
 

@@ -1,0 +1,369 @@
+//! Fault-injection subsystem integration tests: every recovery path the
+//! `parsim chaos` harness sweeps, pinned at test granularity.
+//!
+//! * a **zero-fault** armed plan is bit-identical to an unarmed run —
+//!   the "compiled out of the hot path" guarantee, by construction;
+//! * transient cycle/pool panics retry to a byte-identical store;
+//! * a short journal write leaves a real torn tail that `--resume`
+//!   tolerates (recovery from the damaged journal alone);
+//! * ENOSPC on the store flush degrades gracefully — transient failures
+//!   recover in-process, persistent ones flip the campaign into
+//!   journal-only mode and a later resume converges;
+//! * a stalled job trips the wall-clock watchdog and the retry
+//!   converges; the cycle-budget deadline quarantines deterministically;
+//! * retry backoff is applied (and surfaced via `campaign.backoff_ms`).
+//!
+//! Tests in this binary share the process-global fault state, so each
+//! one holds `TEST_LOCK` for its whole body (baseline + armed phases) —
+//! `faults::arm` alone only serializes the armed sections.
+
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use parsim::campaign::{
+    run_campaign, CampaignConfig, CampaignSpec, JobSpec, RESULTS_CSV, RESULTS_JSONL,
+    TOPOLOGY_SINGLE,
+};
+use parsim::config::{Schedule, StatsStrategy};
+use parsim::faults::{self, FaultPlan};
+use parsim::trace::workloads::Scale;
+
+static TEST_LOCK: Mutex<()> = Mutex::new(());
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("parsim_faults_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+fn job(wl: &str, threads: usize, schedule: Schedule) -> JobSpec {
+    JobSpec {
+        workload: wl.to_string(),
+        scale: Scale::Ci,
+        gpu: "tiny".to_string(),
+        threads,
+        schedule,
+        stats_strategy: StatsStrategy::PerSm,
+        seed: 0xC0FFEE,
+        max_cycles: 0,
+        num_gpus: 1,
+        topology: TOPOLOGY_SINGLE.to_string(),
+    }
+}
+
+fn two_job_spec(name: &str) -> CampaignSpec {
+    CampaignSpec::new(
+        name,
+        vec![
+            job("hotspot", 2, Schedule::Dynamic { chunk: 1 }),
+            job("nn", 2, Schedule::Static { chunk: 0 }),
+        ],
+    )
+}
+
+fn cfg(workers: usize) -> CampaignConfig {
+    CampaignConfig { workers, core_budget: 4, ..CampaignConfig::default() }
+}
+
+/// `results.jsonl` + `results.csv`, concatenated — the byte oracle.
+fn store_bytes(dir: &Path) -> Vec<u8> {
+    let mut out = Vec::new();
+    for name in [RESULTS_JSONL, RESULTS_CSV] {
+        let p = dir.join(name);
+        out.extend_from_slice(
+            &std::fs::read(&p).unwrap_or_else(|e| panic!("read {}: {e}", p.display())),
+        );
+        out.push(0);
+    }
+    out
+}
+
+/// Scan a campaign's `metrics.jsonl` for one counter value.
+fn metric_value(dir: &Path, name: &str) -> Option<u64> {
+    let text = std::fs::read_to_string(dir.join("metrics.jsonl")).ok()?;
+    let needle = format!("\"metric\":\"{name}\"");
+    for line in text.lines() {
+        if line.contains(&needle) {
+            let rest = line.split("\"value\":").nth(1)?;
+            let digits: String = rest.chars().take_while(|c| c.is_ascii_digit()).collect();
+            return digits.parse().ok();
+        }
+    }
+    None
+}
+
+/// The acceptance-criteria pin: a run with a **zero-fault plan armed**
+/// produces a byte-identical store to a plain run — arming never sets
+/// the enabled flag, so the instruction path is the unarmed one.
+#[test]
+fn zero_fault_armed_run_is_bit_identical_to_unarmed() {
+    let _t = TEST_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    let spec = two_job_spec("zerofault");
+
+    let bare_out = tmp_dir("zero_bare");
+    let r1 = run_campaign(&spec, &bare_out, &cfg(1)).expect("bare run");
+    let want = store_bytes(&r1.out_dir);
+
+    let armed_out = tmp_dir("zero_armed");
+    let guard = faults::arm(&FaultPlan::empty(0xDEAD_BEEF));
+    assert!(!faults::enabled(), "a zero-fault plan must never arm the hot path");
+    let r2 = run_campaign(&spec, &armed_out, &cfg(1)).expect("armed run");
+    assert_eq!(store_bytes(&r2.out_dir), want, "zero-fault run must be bit-identical");
+    assert!(guard.report().entries.is_empty());
+    // and the metrics surface carries no faults.* series either
+    let metrics = std::fs::read_to_string(r2.out_dir.join("metrics.jsonl")).expect("metrics");
+    assert!(!metrics.contains("faults."), "zero-fault run must not emit fault metrics");
+    drop(guard);
+
+    std::fs::remove_dir_all(&bare_out).ok();
+    std::fs::remove_dir_all(&armed_out).ok();
+}
+
+/// A transient mid-simulation panic (count=1) is retried and the sweep
+/// converges to the fault-free bytes, with the firing fully accounted.
+#[test]
+fn transient_cycle_panic_retries_to_byte_identical_store() {
+    let _t = TEST_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    let spec = two_job_spec("cyclepanic");
+
+    let base_out = tmp_dir("cycle_base");
+    let rb = run_campaign(&spec, &base_out, &cfg(1)).expect("baseline");
+    let want = store_bytes(&rb.out_dir);
+
+    let out = tmp_dir("cycle_fault");
+    let plan = FaultPlan::parse("v1;seed=2;fault:site=cycle,kind=panic,at=10").expect("plan");
+    let guard = faults::arm(&plan);
+    let qcfg = CampaignConfig { retries: 2, ..cfg(1) };
+    let r = run_campaign(&spec, &out, &qcfg).expect("faulted sweep");
+    assert!(r.quarantined.is_empty(), "transient fault must not quarantine: {:?}", r.quarantined);
+    assert_eq!(store_bytes(&r.out_dir), want, "retry must converge byte-identically");
+    let frep = guard.report();
+    assert!(frep.all_fired(), "no silent drops:\n{}", frep.render());
+    assert_eq!(frep.total_fired(), 1);
+    // injected-fault counters reach the campaign metrics surface
+    assert_eq!(metric_value(&r.out_dir, "faults.injected.total"), Some(1));
+    assert_eq!(metric_value(&r.out_dir, "faults.injected.cycle"), Some(1));
+    drop(guard);
+
+    std::fs::remove_dir_all(&base_out).ok();
+    std::fs::remove_dir_all(&out).ok();
+}
+
+/// A worker panic inside a parallel region (the pool's own containment
+/// path) is contained, retried, and converges.
+#[test]
+fn pool_worker_panic_is_contained_and_retried() {
+    let _t = TEST_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    let spec = two_job_spec("poolpanic");
+
+    let base_out = tmp_dir("pool_base");
+    let rb = run_campaign(&spec, &base_out, &cfg(1)).expect("baseline");
+    let want = store_bytes(&rb.out_dir);
+
+    let out = tmp_dir("pool_fault");
+    let plan = FaultPlan::parse("v1;seed=3;fault:site=pool,kind=panic,at=5").expect("plan");
+    let guard = faults::arm(&plan);
+    let qcfg = CampaignConfig { retries: 2, ..cfg(1) };
+    let r = run_campaign(&spec, &out, &qcfg).expect("faulted sweep");
+    assert!(r.quarantined.is_empty(), "{:?}", r.quarantined);
+    assert_eq!(store_bytes(&r.out_dir), want);
+    assert!(guard.report().all_fired());
+    drop(guard);
+
+    std::fs::remove_dir_all(&base_out).ok();
+    std::fs::remove_dir_all(&out).ok();
+}
+
+/// A short journal write leaves a *real* torn tail on disk; deleting the
+/// flushed results and resuming recovers from the damaged journal alone
+/// and converges byte-identically.
+#[test]
+fn journal_short_write_is_tolerated_on_resume() {
+    let _t = TEST_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    let spec = two_job_spec("jshort");
+
+    let base_out = tmp_dir("jshort_base");
+    let rb = run_campaign(&spec, &base_out, &cfg(1)).expect("baseline");
+    let want = store_bytes(&rb.out_dir);
+
+    let out = tmp_dir("jshort_fault");
+    let plan = FaultPlan::parse("v1;seed=4;fault:site=journal,kind=short,at=2").expect("plan");
+    let guard = faults::arm(&plan);
+    let r = run_campaign(&spec, &out, &cfg(1)).expect("faulted sweep (append failures warn)");
+    assert!(r.quarantined.is_empty());
+    assert!(guard.report().all_fired());
+    drop(guard);
+
+    // emulate the post-crash state: flushed results gone, torn journal
+    // is all that survives
+    let dir = out.join("jshort");
+    std::fs::remove_file(dir.join(RESULTS_JSONL)).unwrap();
+    std::fs::remove_file(dir.join(RESULTS_CSV)).unwrap();
+    let rcfg = CampaignConfig { resume: true, ..cfg(1) };
+    let r2 = run_campaign(&spec, &out, &rcfg).expect("resume over torn journal");
+    assert!(r2.quarantined.is_empty());
+    assert_eq!(store_bytes(&r2.out_dir), want, "torn-tail recovery converges");
+
+    std::fs::remove_dir_all(&base_out).ok();
+    std::fs::remove_dir_all(&out).ok();
+}
+
+/// ENOSPC on the store flush: a transient one recovers in-process (the
+/// flush retries), a persistent one degrades to journal-only mode —
+/// the sweep still completes and a later resume converges.
+#[test]
+fn store_enospc_degrades_gracefully_and_recovers() {
+    let _t = TEST_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    let spec = two_job_spec("enospc");
+
+    let base_out = tmp_dir("enospc_base");
+    let rb = run_campaign(&spec, &base_out, &cfg(1)).expect("baseline");
+    let want = store_bytes(&rb.out_dir);
+
+    // transient: one injected ENOSPC, the in-process flush retry recovers
+    let out1 = tmp_dir("enospc_transient");
+    let plan = FaultPlan::parse("v1;seed=5;fault:site=store,kind=enospc,at=1").expect("plan");
+    let guard = faults::arm(&plan);
+    let r = run_campaign(&spec, &out1, &cfg(1)).expect("sweep survives ENOSPC");
+    assert!(!r.degraded, "transient ENOSPC must recover in-process");
+    assert_eq!(store_bytes(&r.out_dir), want);
+    assert!(guard.report().all_fired());
+    assert_eq!(metric_value(&r.out_dir, "campaign.degraded_flushes"), Some(1));
+    assert_eq!(metric_value(&r.out_dir, "campaign.degraded.enospc"), Some(1));
+    assert_eq!(metric_value(&r.out_dir, "campaign.degraded.recovered"), Some(1));
+    drop(guard);
+
+    // persistent: every flush attempt fails → journal-only mode; the
+    // report says so and exit is still a completed sweep
+    let out2 = tmp_dir("enospc_persistent");
+    let plan =
+        FaultPlan::parse("v1;seed=6;fault:site=store,kind=enospc,at=1,count=99").expect("plan");
+    let guard = faults::arm(&plan);
+    let r = run_campaign(&spec, &out2, &cfg(1)).expect("sweep completes degraded");
+    assert!(r.degraded, "persistent ENOSPC must flip the store into degraded mode");
+    assert!(r.summary().contains("store DEGRADED"), "{}", r.summary());
+    assert!(r.quarantined.is_empty(), "degradation must not quarantine jobs");
+    assert!(guard.report().all_fired());
+    drop(guard);
+
+    // the disk "recovers" (plan disarmed): resume rebuilds the store
+    // from the journal without re-simulation
+    let rcfg = CampaignConfig { resume: true, ..cfg(1) };
+    let r2 = run_campaign(&spec, &out2, &rcfg).expect("resume after recovery");
+    assert_eq!(r2.recovered, 2, "journal recovers every finished job");
+    assert_eq!(r2.simulated, 0);
+    assert_eq!(store_bytes(&r2.out_dir), want, "post-recovery store byte-identical");
+
+    std::fs::remove_dir_all(&base_out).ok();
+    std::fs::remove_dir_all(&out1).ok();
+    std::fs::remove_dir_all(&out2).ok();
+}
+
+/// A stalled (wedged) job trips the wall-clock watchdog, the retry runs
+/// clean, and the sweep converges; the timeout is surfaced as a metric.
+#[test]
+fn stalled_job_trips_wall_deadline_and_retry_converges() {
+    let _t = TEST_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    let spec = two_job_spec("stall");
+
+    let base_out = tmp_dir("stall_base");
+    let rb = run_campaign(&spec, &base_out, &cfg(1)).expect("baseline");
+    let want = store_bytes(&rb.out_dir);
+
+    let out = tmp_dir("stall_fault");
+    let plan =
+        FaultPlan::parse("v1;seed=7;fault:site=cycle,kind=stall,at=10,ms=2000").expect("plan");
+    let guard = faults::arm(&plan);
+    let qcfg = CampaignConfig {
+        retries: 2,
+        job_timeout_ms: 1000,
+        checkpoint_every: 100,
+        ..cfg(1)
+    };
+    let r = run_campaign(&spec, &out, &qcfg).expect("sweep survives the stall");
+    assert!(r.quarantined.is_empty(), "retry after timeout must converge: {:?}", r.quarantined);
+    assert_eq!(store_bytes(&r.out_dir), want);
+    assert!(guard.report().all_fired());
+    let timeouts = metric_value(&r.out_dir, "campaign.timeouts").unwrap_or(0);
+    assert!(timeouts >= 1, "the watchdog must have fired (campaign.timeouts = {timeouts})");
+    drop(guard);
+
+    std::fs::remove_dir_all(&base_out).ok();
+    std::fs::remove_dir_all(&out).ok();
+}
+
+/// The deterministic cycle-budget deadline: a job over budget is
+/// quarantined with the same verdict on every attempt — no faults, no
+/// wall clock involved.
+#[test]
+fn cycle_budget_deadline_quarantines_deterministically() {
+    let _t = TEST_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    // hold the arm lock with an inert plan so concurrently scheduled
+    // armed tests cannot fault this sweep
+    let _guard = faults::arm(&FaultPlan::empty(0));
+    let spec = CampaignSpec::new("cyclebudget", vec![job("nn", 1, Schedule::Static { chunk: 0 })]);
+    let out = tmp_dir("cyclebudget");
+    let qcfg = CampaignConfig {
+        retries: 1,
+        job_cycle_budget: 32,
+        checkpoint_every: 16,
+        ..cfg(1)
+    };
+    let r = run_campaign(&spec, &out, &qcfg).expect("sweep completes around the deadline");
+    assert_eq!(r.quarantined.len(), 1, "over-budget job must quarantine");
+    let (_, reason) = &r.quarantined[0];
+    assert!(reason.contains("cycle budget exceeded"), "typed deadline reason: {reason}");
+    assert!(metric_value(&out.join("cyclebudget"), "campaign.timeouts").unwrap_or(0) >= 2);
+    std::fs::remove_dir_all(&out).ok();
+}
+
+/// Exponential backoff with seeded jitter runs between retry attempts
+/// and is surfaced via `campaign.backoff_ms`.
+#[test]
+fn retry_backoff_is_applied_and_counted() {
+    let _t = TEST_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    let spec = CampaignSpec::new("backoff", vec![job("nn", 1, Schedule::Static { chunk: 0 })]);
+
+    let base_out = tmp_dir("backoff_base");
+    let rb = run_campaign(&spec, &base_out, &cfg(1)).expect("baseline");
+    let want = store_bytes(&rb.out_dir);
+
+    let out = tmp_dir("backoff_fault");
+    let plan = FaultPlan::parse("v1;seed=8;fault:site=cycle,kind=panic,at=1").expect("plan");
+    let guard = faults::arm(&plan);
+    let qcfg = CampaignConfig { retries: 1, backoff_base_ms: 30, ..cfg(1) };
+    let t0 = std::time::Instant::now();
+    let r = run_campaign(&spec, &out, &qcfg).expect("sweep converges");
+    assert!(r.quarantined.is_empty());
+    assert_eq!(store_bytes(&r.out_dir), want);
+    assert!(guard.report().all_fired());
+    let slept = metric_value(&r.out_dir, "campaign.backoff_ms").unwrap_or(0);
+    assert!(slept >= 30, "backoff must sleep at least the base ({slept}ms recorded)");
+    assert!(t0.elapsed().as_millis() as u64 >= slept, "recorded backoff actually elapsed");
+    drop(guard);
+
+    std::fs::remove_dir_all(&base_out).ok();
+    std::fs::remove_dir_all(&out).ok();
+}
+
+/// The chaos harness itself (library entry point, no SIGKILL case):
+/// a one-seed, two-site sweep passes end to end and writes its report
+/// and plan artifacts.
+#[test]
+fn chaos_harness_smoke_two_sites() {
+    let _t = TEST_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    use parsim::faults::chaos::{run_chaos, ChaosConfig};
+    use parsim::faults::FaultSite;
+
+    let out = tmp_dir("chaos_smoke");
+    let mut ccfg = ChaosConfig::new(&out);
+    ccfg.seeds = vec![0xC0FFEE];
+    ccfg.sites = vec![FaultSite::Cycle, FaultSite::Store];
+    let report = run_chaos(&ccfg).expect("chaos sweep runs");
+    assert!(report.all_passed(), "chaos cases failed:\n{}", report.render());
+    // cycle-panic + cycle-stall + store-enospc, × both schedules
+    assert_eq!(report.cases.len(), 6, "{}", report.render());
+    assert!(out.join("chaos_report.txt").exists());
+    assert!(out.join("plans.txt").exists());
+    std::fs::remove_dir_all(&out).ok();
+}

@@ -216,3 +216,24 @@ fn diverge_probe_pins_cycle_and_component_end_to_end() {
         other => panic!("perturbed run must diverge: {other:?}"),
     }
 }
+
+/// The fault-injection hooks are pure observers too: with a plan
+/// **armed** (so the hot-path checks actually execute every cycle) but
+/// whose job filter matches nothing, a fully-instrumented run stays
+/// bit-identical to a bare, unarmed one.
+#[test]
+fn armed_fault_plan_with_no_matching_trigger_is_bit_identical() {
+    let bare = run_bare("nn", 4, Schedule::Dynamic { chunk: 1 });
+    let plan = parsim::faults::FaultPlan::parse(
+        "v1;seed=9;fault:site=cycle,kind=panic,at=0,job=wl=no-such-workload",
+    )
+    .expect("plan parses");
+    let guard = parsim::faults::arm(&plan);
+    assert!(parsim::faults::enabled(), "a non-empty plan arms the hot path");
+    let inst = run_instrumented("nn", 4, Schedule::Dynamic { chunk: 1 }, "armed_plan");
+    let d = diff_runs(&bare, &inst);
+    assert!(d.identical(), "armed fault hooks perturbed results:\n{}", d.report());
+    assert_eq!(bare.fingerprint(), inst.fingerprint());
+    assert_eq!(guard.report().total_fired(), 0, "filter must not match");
+    drop(guard);
+}
